@@ -1,0 +1,62 @@
+//! Shared helpers for the paper-reproduction benches.
+//!
+//! Every bench is a `harness = false` main that prints the same rows or
+//! series its paper table/figure reports and appends a JSON record to
+//! `target/bench-results.jsonl` (see `util::bench::record_jsonl`).
+
+use anyhow::Result;
+use std::path::Path;
+use ta_moe::config::topology_for;
+use ta_moe::coordinator::{device_flops, Strategy, Trainer, TrainerOptions};
+use ta_moe::data::{Batcher, SyntheticCorpus};
+use ta_moe::metrics::RunLog;
+
+/// Env-tunable step budget so `cargo bench` stays tractable on 1 CPU but a
+/// longer run can be requested (`TA_MOE_STEPS=400 cargo bench ...`).
+pub fn env_steps(default: usize) -> usize {
+    std::env::var("TA_MOE_STEPS").ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Train one arm: artifact × strategy × cluster, identical data per seed.
+/// Returns the run log (loss curve on the simulated clock).
+pub fn train_arm(
+    artifact: &str,
+    cluster: &str,
+    strategy: Strategy,
+    steps: usize,
+    seed: u64,
+    eval_every: usize,
+) -> Result<(RunLog, ta_moe::util::Mat)> {
+    let dir = format!("artifacts/{artifact}");
+    let manifest = ta_moe::runtime::Manifest::load(Path::new(&dir))?;
+    let topo = topology_for(cluster, manifest.config.p);
+    let cluster_char = cluster.chars().next().unwrap_or('C');
+    let mut trainer = Trainer::new(
+        Path::new(&dir),
+        topo,
+        strategy,
+        TrainerOptions { lr: 1e-3, seed: seed as i32, flops_per_dev: device_flops(cluster_char) },
+    )?;
+    let cfg = trainer.manifest().config.clone();
+
+    let mut corpus = SyntheticCorpus::new(seed);
+    let stream = corpus.tokens(cfg.p * cfg.batch * (cfg.seq + 1) * 128);
+    let mut batcher = Batcher::new(stream, cfg.p, cfg.batch, cfg.seq);
+    let mut vcorpus = SyntheticCorpus::new(seed + 999);
+    let vstream = vcorpus.tokens(cfg.p * cfg.batch * (cfg.seq + 1) * 8);
+    let (vtok, vtgt) = Batcher::new(vstream, cfg.p, cfg.batch, cfg.seq).next_batch();
+
+    let mut last_counts = None;
+    for step in 0..steps {
+        let (tok, tgt) = batcher.next_batch();
+        trainer.train_step(&tok, &tgt)?;
+        if eval_every > 0 && (step + 1) % eval_every == 0 {
+            trainer.eval(&vtok, &vtgt)?;
+        }
+        last_counts = trainer.last_counts().cloned();
+    }
+    Ok((
+        trainer.log().clone(),
+        last_counts.expect("at least one step"),
+    ))
+}

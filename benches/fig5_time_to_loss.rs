@@ -1,0 +1,92 @@
+//! Figure 5 reproduction: validation loss w.r.t. *time* vs FasterMoE's
+//! Hir gate. The paper's claim: the compulsory ratio converges worse, so
+//! TA-MoE reaches fixed loss values 1.25x / 1.47x / 1.54x sooner.
+//!
+//! Both arms train the same shape on identical data; the time axis is the
+//! simulated cluster clock driven by each arm's *measured* dispatch.
+//!
+//! ```bash
+//! cargo bench --bench fig5_time_to_loss
+//! TA_MOE_STEPS=400 cargo bench --bench fig5_time_to_loss
+//! ```
+
+mod common;
+
+use std::collections::BTreeMap;
+use ta_moe::coordinator::Strategy;
+use ta_moe::dispatch::Norm;
+use ta_moe::util::bench::{record_jsonl, Table};
+use ta_moe::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let steps = common::env_steps(150);
+    let eval_every = 5;
+    println!("Figure 5: loss vs simulated time, TA-MoE vs FasterMoE-Hir ({steps} steps)\n");
+
+    let (ta_log, _) = common::train_arm(
+        "small8_switch",
+        "C",
+        Strategy::TaMoe { norm: Norm::L1 },
+        steps,
+        42,
+        eval_every,
+    )?;
+    let (hir_log, _) = common::train_arm(
+        "small8_hir",
+        "C",
+        Strategy::FasterMoeHir { remote_frac: 0.25 },
+        steps,
+        42,
+        eval_every,
+    )?;
+
+    ta_log.write_csv(std::path::Path::new("target/bench-curves/fig5_tamoe.csv"))?;
+    hir_log.write_csv(std::path::Path::new("target/bench-curves/fig5_hir.csv"))?;
+
+    // loss targets: evenly spaced between the common start and the better
+    // arm's final loss (the paper picks 3.1/2.9/2.8 for its scale).
+    let final_ta = ta_log.evals.last().map(|e| e.1).unwrap_or(f64::NAN);
+    let final_hir = hir_log.evals.last().map(|e| e.1).unwrap_or(f64::NAN);
+    let first = ta_log.evals.first().map(|e| e.1).unwrap_or(f64::NAN);
+    let best = final_ta.min(final_hir);
+    let targets: Vec<f64> = (1..=3)
+        .map(|i| first - (first - best) * (0.5 + 0.15 * i as f64))
+        .collect();
+
+    let mut t = Table::new(&["target ce", "TA-MoE time", "FasterMoE time", "time ratio"]);
+    let mut payload = BTreeMap::new();
+    for (i, &tg) in targets.iter().enumerate() {
+        let ta = ta_log.sim_time_to_loss(tg);
+        let hir = hir_log.sim_time_to_loss(tg);
+        let row = match (ta, hir) {
+            (Some(a), Some(h)) => {
+                payload.insert(format!("speedup_{i}"), Json::Num(h / a));
+                [format!("{tg:.3}"), format!("{a:.3}s"), format!("{h:.3}s"),
+                 format!("{:.2}x", h / a)]
+            }
+            (Some(a), None) => [format!("{tg:.3}"), format!("{a:.3}s"),
+                                "not reached".into(), "inf".into()],
+            (None, _) => [format!("{tg:.3}"), "not reached".into(), "-".into(), "-".into()],
+        };
+        t.row(&row);
+    }
+    t.print();
+    println!(
+        "\nfinal valid ce: TA-MoE {final_ta:.4}, FasterMoE-Hir {final_hir:.4} \
+         (paper: Hir converges worse; time-to-loss speedups 1.25x/1.47x/1.54x)"
+    );
+    // What is reproducible at this step budget is the *mechanism*: the
+    // compulsory ratio hurts convergence (final CE ordering). The paper's
+    // full time-axis win additionally needs the TA-MoE gate to have
+    // converged onto c-hat (a 10^5-step horizon); at ~150 steps the
+    // dispatch has barely shifted, so we assert the convergence ordering
+    // and report the time table for the record (EXPERIMENTS.md §Fig5).
+    assert!(
+        final_ta < final_hir,
+        "compulsory-ratio gate should converge worse: TA {final_ta} vs Hir {final_hir}"
+    );
+    payload.insert("final_ta_ce".into(), Json::Num(final_ta));
+    payload.insert("final_hir_ce".into(), Json::Num(final_hir));
+    record_jsonl("fig5_time_to_loss", &Json::Obj(payload));
+    Ok(())
+}

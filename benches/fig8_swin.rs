@@ -1,0 +1,85 @@
+//! Figure 8 (appendix) reproduction: TA-MoE speedup over FastMoE on a
+//! Swin-Transformer-shaped MoE, cluster A at 16 and 32 GPUs
+//! (paper: 1.18x and 1.20x).
+//!
+//! ```bash
+//! cargo bench --bench fig8_swin
+//! ```
+
+use std::collections::BTreeMap;
+use ta_moe::coordinator::{converged_counts, device_flops, throughput, ModelShape, Strategy};
+use ta_moe::dispatch::Norm;
+use ta_moe::runtime::ModelCfg;
+use ta_moe::topology::presets;
+use ta_moe::util::bench::{record_jsonl, Table};
+use ta_moe::util::json::Json;
+
+fn swin_cfg(p: usize) -> ModelCfg {
+    let tokens = 2 * 49 * 32; // 2 images × 32 windows × 49 patches
+    ModelCfg {
+        p,
+        e_per_dev: 1,
+        layers: 12,
+        d: 384,
+        f: 1536,
+        heads: 12,
+        vocab: 1000,
+        batch: 2,
+        seq: tokens / 2,
+        k: 2, // GShard gate (Table 5)
+        cap_factor: 1.2,
+        gate: "gshard".into(),
+        dispatch: "local".into(),
+        n_experts: p,
+        capacity: tokens * 2,
+        tokens_per_dev: tokens,
+        moe_layer_ids: (0..6).map(|i| 2 * i + 1).collect(),
+    }
+}
+
+fn swin_shape(tokens: usize) -> ModelShape {
+    ModelShape {
+        layers: 12,
+        d: 384,
+        f: 1536,
+        vocab: 1000,
+        seq: 49,
+        tokens_per_dev: tokens,
+        k: 2,
+        n_moe_layers: 6,
+        elem_bytes: 2,
+    }
+}
+
+fn main() {
+    println!("Figure 8: Swin-MoE speedup over FastMoE on cluster A\n");
+    let mut t = Table::new(&["GPUs", "topology", "FastMoE tok/s", "TA-MoE tok/s", "speedup"]);
+    let mut payload = BTreeMap::new();
+    let mut speeds = Vec::new();
+    for (gpus, nodes) in [(16usize, 2usize), (32, 4)] {
+        let topo = presets::cluster_a(nodes);
+        let cfg = swin_cfg(gpus);
+        let shape = swin_shape(cfg.tokens_per_dev);
+        let flops = device_flops('A');
+        let even = converged_counts(&Strategy::FastMoeEven, &topo, &cfg);
+        let ta = converged_counts(&Strategy::TaMoe { norm: Norm::L1 }, &topo, &cfg);
+        let thr_even = throughput(&shape, &topo, &even, 1, flops, false);
+        let thr_ta = throughput(&shape, &topo, &ta, 1, flops, false);
+        let s = thr_ta / thr_even;
+        speeds.push(s);
+        payload.insert(format!("speedup_{gpus}"), Json::Num(s));
+        t.row(&[
+            gpus.to_string(),
+            if nodes == 2 { "symmetric" } else { "asymmetric" }.into(),
+            format!("{thr_even:.0}"),
+            format!("{thr_ta:.0}"),
+            format!("{s:.2}x"),
+        ]);
+    }
+    t.print();
+    println!("\npaper: 1.18x @16 GPUs, 1.20x @32 GPUs");
+    for s in &speeds {
+        assert!(*s > 1.0, "TA-MoE should win on the vision workload too: {s}");
+    }
+    record_jsonl("fig8_swin", &Json::Obj(payload));
+}

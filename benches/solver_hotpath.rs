@@ -1,0 +1,85 @@
+//! L3 hot-path micro-benchmarks (the §Perf baseline): the dispatch solver,
+//! penalty construction, the contention cost engine, and the coordinator's
+//! per-step host work. These are the pure-rust pieces that run every step
+//! or every topology change; the targets and before/after history live in
+//! EXPERIMENTS.md §Perf.
+//!
+//! ```bash
+//! cargo bench --bench solver_hotpath
+//! ```
+
+use std::collections::BTreeMap;
+use ta_moe::comm::CostEngine;
+use ta_moe::coordinator::{converged_counts, device_flops, step_cost, ModelShape, Strategy};
+use ta_moe::dispatch::{
+    penalty_weights, proportional_caps, target_pattern, DispatchProblem, Norm,
+};
+use ta_moe::topology::presets;
+use ta_moe::util::bench::{record_jsonl, time_it, Table};
+use ta_moe::util::json::Json;
+
+fn main() {
+    let topo64 = presets::cluster_c(8); // 64 devices
+    let prob = DispatchProblem { k: 1, s: 6144, e_per_dev: 1, elem_bytes: 4096 };
+    let tp = target_pattern(&topo64, &prob);
+    let bytes = tp.bytes_matrix();
+    let shape = ModelShape::gpt_medium(false, 6, 1024);
+    let cfg = ta_moe::runtime::ModelCfg {
+        p: 64,
+        e_per_dev: 1,
+        layers: 12,
+        d: 1024,
+        f: 4096,
+        heads: 16,
+        vocab: 50_000,
+        batch: 6,
+        seq: 1024,
+        k: 1,
+        cap_factor: 1.0,
+        gate: "switch".into(),
+        dispatch: "local".into(),
+        n_experts: 64,
+        capacity: 12_288,
+        tokens_per_dev: 6144,
+        moe_layer_ids: (0..6).map(|i| 2 * i + 1).collect(),
+    };
+    let counts = converged_counts(&Strategy::TaMoe { norm: Norm::L1 }, &topo64, &cfg);
+
+    let mut t = Table::new(&["hot path (P=64)", "mean", "min", "samples"]);
+    let mut payload = BTreeMap::new();
+    let mut bench = |name: &str, f: &mut dyn FnMut()| {
+        let s = time_it(f, 3, 20);
+        t.row(&[
+            name.into(),
+            format!("{:.1}us", s.mean_us()),
+            format!("{:.1}us", s.min_s * 1e6),
+            s.iters.to_string(),
+        ]);
+        payload.insert(name.to_string(), Json::Num(s.mean_us()));
+    };
+
+    bench("topology build (cluster_c x8)", &mut || {
+        std::hint::black_box(presets::cluster_c(8));
+    });
+    bench("target_pattern (Eq.7 + repair)", &mut || {
+        std::hint::black_box(target_pattern(&topo64, &prob));
+    });
+    bench("penalty_weights (Eq.8)", &mut || {
+        std::hint::black_box(penalty_weights(&tp.c, Norm::L1));
+    });
+    bench("proportional_caps", &mut || {
+        std::hint::black_box(proportional_caps(&tp.c, 12_288));
+    });
+    bench("contention exchange_time", &mut || {
+        std::hint::black_box(CostEngine::contention(&topo64).exchange_time(&bytes));
+    });
+    bench("step_cost (per-step sim)", &mut || {
+        std::hint::black_box(step_cost(&shape, &topo64, &counts, 1, device_flops('C'), false));
+    });
+    t.print();
+    println!(
+        "\nper-step paths (step_cost, exchange_time) must stay far below the\n\
+         XLA step wall time (~ms); per-topology paths (solver) below 10ms."
+    );
+    record_jsonl("solver_hotpath", &Json::Obj(payload));
+}

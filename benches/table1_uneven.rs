@@ -1,0 +1,69 @@
+//! Table 1 reproduction: even vs uneven dispatch on the [[0,1],[0̂,1̂]]
+//! topology, 128 MB per rank (paper §3.3, the motivation experiment).
+//!
+//! Paper rows (µs):  even  144 / 758 / 5609 / 5618 | All 14019
+//!                 uneven  144 / 1492 / 2835 / 2861 | All 10765
+//!
+//! ```bash
+//! cargo bench --bench table1_uneven
+//! ```
+
+use std::collections::BTreeMap;
+use ta_moe::comm::profile_exchange;
+use ta_moe::topology::presets;
+use ta_moe::util::bench::{record_jsonl, Table};
+use ta_moe::util::json::Json;
+use ta_moe::util::Mat;
+
+fn main() {
+    let topo = presets::table1();
+    let bytes = 128.0 * 1024.0 * 1024.0;
+    let even = Mat::filled(4, 4, 0.25);
+    let peer = [1usize, 0, 3, 2];
+    let uneven = Mat::from_fn(4, 4, |i, j| {
+        if i == j {
+            0.25
+        } else if j == peer[i] {
+            0.5
+        } else {
+            0.125
+        }
+    });
+
+    println!("Table 1: communication on [[0,1],[0',1']], 128 MB per rank\n");
+    let mut t = Table::new(&[
+        "pattern", "ratio", "0<->0", "0<->1", "0<->0'", "0<->1'", "All (us)",
+    ]);
+    let mut totals = Vec::new();
+    for (name, ratio_str, ratios) in [
+        ("even", "1/4,1/4,1/4,1/4", &even),
+        ("uneven", "1/4,1/2,1/8,1/8", &uneven),
+    ] {
+        let p = profile_exchange(&topo, bytes, ratios);
+        let us: Vec<f64> = p.rank0_times.iter().map(|s| s * 1e6).collect();
+        t.row(&[
+            name.into(),
+            ratio_str.into(),
+            format!("{:.0}", us[0]),
+            format!("{:.0}", us[1]),
+            format!("{:.0}", us[2]),
+            format!("{:.0}", us[3]),
+            format!("{:.0}", p.rank0_total * 1e6),
+        ]);
+        totals.push((name, p.rank0_total));
+    }
+    t.print();
+    let speedup = totals[0].1 / totals[1].1;
+    println!(
+        "\nuneven/even improvement: {:.2}x (paper: {:.2}x)",
+        speedup,
+        14019.0 / 10765.0
+    );
+    assert!(speedup > 1.15, "uneven must beat even — got {speedup}");
+
+    let mut m = BTreeMap::new();
+    m.insert("even_total_us".into(), Json::Num(totals[0].1 * 1e6));
+    m.insert("uneven_total_us".into(), Json::Num(totals[1].1 * 1e6));
+    m.insert("speedup".into(), Json::Num(speedup));
+    record_jsonl("table1_uneven", &Json::Obj(m));
+}

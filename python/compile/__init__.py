@@ -1,0 +1,6 @@
+"""Build-time compile package: L1 Pallas kernels, L2 JAX model, AOT lowering.
+
+Nothing in here runs at serving/training time — ``make artifacts`` invokes
+``compile.aot`` once, and the rust coordinator consumes the emitted HLO text
++ manifest from ``artifacts/``.
+"""

@@ -1,0 +1,175 @@
+"""AOT lowering: JAX model → HLO **text** + manifest, per model config.
+
+Interchange format is HLO text, not a serialized ``HloModuleProto``: jax
+≥ 0.5 emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+For each config three programs are emitted under ``artifacts/<name>/``:
+
+  * ``init.hlo.txt`` — ``seed:i32 → params`` (random init, fully in-graph so
+    rust never needs numpy).
+  * ``step.hlo.txt`` — one whole-cluster Adam training step (flat ABI, see
+    :mod:`compile.model`).
+  * ``eval.hlo.txt`` — validation loss + dispatch statistics.
+
+plus ``manifest.json`` describing every input/output (name, shape, dtype)
+in positional order — the ABI contract the rust ``runtime`` module loads.
+
+Run as ``python -m compile.aot`` from the ``python/`` directory (this is
+what ``make artifacts`` does). Python never runs again after this.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .configs import CONFIGS, DEFAULT_ARTIFACTS
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _desc(name, shape, dtype="f32"):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_config(cfg, out_dir: str, verbose: bool = True) -> dict:
+    """Lower init/step/eval for one config; write HLO text + manifest."""
+    os.makedirs(out_dir, exist_ok=True)
+    specs = model.param_specs(cfg)
+    n = len(specs)
+    p_, b_, t_, n_e = cfg.p, cfg.batch, cfg.seq, cfg.n_experts
+
+    param_descs = [_desc(name, shape) for name, shape in specs]
+    data_descs = [
+        _desc("t", ()), _desc("lr", ()),
+        _desc("tokens", (p_, b_, t_), "i32"),
+        _desc("targets", (p_, b_, t_), "i32"),
+        _desc("penalty", (p_, n_e)),
+        _desc("caps", (p_, n_e)),
+        _desc("local_mask", (p_, n_e)),
+        _desc("hir_remote_frac", ()),
+    ]
+    out_descs = (
+        param_descs
+        + [dict(d, name="m." + d["name"]) for d in param_descs]
+        + [dict(d, name="v." + d["name"]) for d in param_descs]
+        + [_desc("t", ()), _desc("loss", ()), _desc("ce", ()), _desc("aux", ()),
+           _desc("counts", (p_, n_e)), _desc("dropped", ())]
+    )
+
+    def shape_structs(descs):
+        return [
+            _spec(tuple(d["shape"]), jnp.int32 if d["dtype"] == "i32" else jnp.float32)
+            for d in descs
+        ]
+
+    timings = {}
+
+    # init: seed -> params
+    t0 = time.time()
+    init_lowered = jax.jit(lambda s: tuple(model.init_params(cfg, s))).lower(
+        _spec((), jnp.int32)
+    )
+    init_text = to_hlo_text(init_lowered)
+    with open(os.path.join(out_dir, "init.hlo.txt"), "w") as fh:
+        fh.write(init_text)
+    timings["init"] = time.time() - t0
+
+    # step: params, m, v, data -> params, m, v, metrics
+    t0 = time.time()
+    step_in = shape_structs(param_descs * 3 + data_descs)
+    step_lowered = jax.jit(lambda *f: model.train_step(cfg, n, *f)).lower(*step_in)
+    step_text = to_hlo_text(step_lowered)
+    with open(os.path.join(out_dir, "step.hlo.txt"), "w") as fh:
+        fh.write(step_text)
+    timings["step"] = time.time() - t0
+
+    # eval: params, tokens, targets, penalty, caps, local_mask, frac -> metrics
+    t0 = time.time()
+    eval_descs = param_descs + data_descs[2:]
+    eval_lowered = jax.jit(lambda *f: model.eval_step(cfg, n, *f)).lower(
+        *shape_structs(eval_descs)
+    )
+    eval_text = to_hlo_text(eval_lowered)
+    with open(os.path.join(out_dir, "eval.hlo.txt"), "w") as fh:
+        fh.write(eval_text)
+    timings["eval"] = time.time() - t0
+
+    manifest = {
+        "name": cfg.name,
+        "config": {
+            **dataclasses.asdict(cfg),
+            "n_experts": cfg.n_experts,
+            "capacity": cfg.capacity,
+            "tokens_per_dev": cfg.tokens_per_dev,
+            "moe_layer_ids": cfg.moe_layer_ids(),
+        },
+        "n_param_tensors": n,
+        "params": param_descs,
+        "init": {
+            "file": "init.hlo.txt",
+            "inputs": [_desc("seed", (), "i32")],
+            "outputs": param_descs,
+        },
+        "step": {
+            "file": "step.hlo.txt",
+            "inputs": param_descs
+            + [dict(d, name="m." + d["name"]) for d in param_descs]
+            + [dict(d, name="v." + d["name"]) for d in param_descs]
+            + data_descs,
+            "outputs": out_descs,
+        },
+        "eval": {
+            "file": "eval.hlo.txt",
+            "inputs": eval_descs,
+            "outputs": [_desc("loss", ()), _desc("ce", ()), _desc("aux", ()),
+                        _desc("counts", (p_, n_e)), _desc("dropped", ())],
+        },
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=1)
+
+    if verbose:
+        sizes = {k: os.path.getsize(os.path.join(out_dir, f"{k}.hlo.txt"))
+                 for k in ("init", "step", "eval")}
+        print(f"[aot] {cfg.name}: "
+              + ", ".join(f"{k} {sizes[k]//1024}KiB in {timings[k]:.1f}s"
+                          for k in sizes))
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts",
+                    help="artifact root (default ../artifacts)")
+    ap.add_argument("--configs", nargs="*", default=DEFAULT_ARTIFACTS,
+                    help=f"config names (known: {sorted(CONFIGS)})")
+    args = ap.parse_args()
+    for name in args.configs:
+        cfg = CONFIGS[name]
+        lower_config(cfg, os.path.join(args.out_dir, name))
+
+
+if __name__ == "__main__":
+    main()

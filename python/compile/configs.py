@@ -1,0 +1,102 @@
+"""Model configurations shared by the AOT pipeline, tests, and the manifest.
+
+Each named config becomes one artifact directory under ``artifacts/<name>/``
+containing ``init.hlo.txt``, ``step.hlo.txt``, ``eval.hlo.txt`` and
+``manifest.json``. The rust coordinator selects a config by name.
+
+Scale note (DESIGN.md §2): the paper trains GPT-Medium (d=1024, 12 layers)
+on 8–64 GPUs. This testbed is one CPU core, so the *trained* configs here
+are scaled down (d=64–128, 2–4 layers) while keeping every structural knob
+the paper varies: expert count, gate type (Switch top-1 / GShard top-2 /
+FasterMoE-Hir), capacity policy (DeepSpeed local / FastMoE global), and
+capacity factor. The paper-scale shapes appear in the rust cost model
+(``comm``/``coordinator``), not in the trained artifacts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+CAP_ROUND = 8  # expert-buffer capacity is rounded up to a multiple of this
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static shape/structure of one AOT-compiled MoE transformer."""
+
+    name: str
+    p: int              # simulated devices (= expert-parallel world size)
+    e_per_dev: int      # experts per device (paper: 1)
+    layers: int         # transformer blocks
+    d: int              # hidden size
+    f: int              # expert/FFN intermediate size
+    heads: int          # attention heads
+    vocab: int          # byte-level vocab (256)
+    batch: int          # sequences per device
+    seq: int            # tokens per sequence
+    k: int              # gate top-k (1 = Switch, 2 = GShard)
+    cap_factor: float   # expert capacity factor
+    gate: str           # "switch" | "gshard" | "hir"
+    dispatch: str       # "local" (DeepSpeed-style) | "global" (FastMoE-style)
+    moe_every: int = 2  # MoE FFN every n-th layer (others dense)
+
+    @property
+    def n_experts(self) -> int:
+        return self.p * self.e_per_dev
+
+    @property
+    def tokens_per_dev(self) -> int:
+        """S in the paper: tokens each device contributes per step."""
+        return self.batch * self.seq
+
+    @property
+    def capacity(self) -> int:
+        """Static per-expert buffer size C (global, across all senders)."""
+        raw = self.cap_factor * self.k * self.tokens_per_dev * self.p / self.n_experts
+        c = int(-(-raw // 1))  # ceil
+        return ((c + CAP_ROUND - 1) // CAP_ROUND) * CAP_ROUND
+
+    def moe_layer_ids(self):
+        """Indices of blocks whose FFN is a MoE layer.
+
+        Counted from the top so the last block is always MoE (the gate
+        closest to the loss adapts fastest — matches common practice)."""
+        return [
+            l for l in range(self.layers)
+            if (self.layers - 1 - l) % self.moe_every == 0
+        ]
+
+
+def _mk(name, **kw) -> ModelConfig:
+    return ModelConfig(name=name, **kw)
+
+
+CONFIGS: Dict[str, ModelConfig] = {
+    c.name: c
+    for c in [
+        # Fast config for unit/integration tests (python + rust).
+        _mk("tiny4", p=4, e_per_dev=1, layers=2, d=32, f=64, heads=2,
+            vocab=256, batch=2, seq=16, k=1, cap_factor=1.5,
+            gate="switch", dispatch="global", moe_every=1),
+        # Switch top-1 / FastMoE-style global capacity — fig3/6b/7 runs.
+        _mk("small8_switch", p=8, e_per_dev=1, layers=4, d=128, f=256,
+            heads=4, vocab=256, batch=2, seq=32, k=1, cap_factor=1.25,
+            gate="switch", dispatch="global", moe_every=2),
+        # GShard top-2 / DeepSpeed-style local capacity.
+        _mk("small8_gshard", p=8, e_per_dev=1, layers=4, d=128, f=256,
+            heads=4, vocab=256, batch=2, seq=32, k=2, cap_factor=2.0,
+            gate="gshard", dispatch="local", moe_every=2),
+        # FasterMoE Hir compulsory-ratio gate — fig5 comparison.
+        _mk("small8_hir", p=8, e_per_dev=1, layers=4, d=128, f=256,
+            heads=4, vocab=256, batch=2, seq=32, k=1, cap_factor=1.25,
+            gate="hir", dispatch="global", moe_every=2),
+        # Wider world for dispatch-distribution experiments (fig6b/fig7).
+        _mk("wide16_switch", p=16, e_per_dev=1, layers=2, d=64, f=128,
+            heads=2, vocab=256, batch=2, seq=32, k=1, cap_factor=1.25,
+            gate="switch", dispatch="global", moe_every=1),
+    ]
+}
+
+DEFAULT_ARTIFACTS = ["tiny4", "small8_switch", "small8_gshard", "small8_hir",
+                     "wide16_switch"]

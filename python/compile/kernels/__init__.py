@@ -1,0 +1,10 @@
+"""L1: Pallas kernels for the paper's compute hot spots.
+
+``moe_ffn.expert_ffn`` — grouped per-expert 2-layer MLP (fwd + bwd kernels,
+wrapped in custom_vjp). ``gating.gate_probs`` — gate projection + softmax.
+``ref`` — pure-jnp oracles pinned by the pytest/hypothesis suite.
+"""
+
+from . import gating, moe_ffn, ref  # noqa: F401
+from .gating import gate_probs  # noqa: F401
+from .moe_ffn import expert_ffn  # noqa: F401

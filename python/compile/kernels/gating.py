@@ -1,0 +1,108 @@
+"""Gate projection + stable softmax as a Pallas kernel.
+
+The gate is the second kernelised hot spot: every token computes ``softmax(x
+@ wg)`` over all N experts each MoE layer. The kernel tiles the flat token
+axis (the model flattens ``[P, S]`` into one axis before calling, so no vmap
+over Pallas is needed) and keeps the full ``[d, N]`` gate panel resident —
+N is at most a few hundred, so the panel is tiny next to the token tile.
+
+As with :mod:`moe_ffn`, ``pallas_call`` has no AD, so the public entry is a
+``jax.custom_vjp``. The backward is the closed-form softmax VJP
+(``dlogits = p ⊙ (g − ⟨g, p⟩)``) expressed as a Pallas kernel for the
+token-tiled part; the tiny ``gwg = xᵀ @ dlogits`` reduction stays in jnp
+(it is one [d, N] GEMM over the whole batch — XLA fuses it fine, and a
+Pallas accumulate over token tiles buys nothing at this size; see DESIGN.md
+§Perf).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TOK_TILE = 128
+
+
+def _pick_tile(s: int) -> int:
+    for t in (TOK_TILE, 64, 32, 16, 8, 4, 2, 1):
+        if s % t == 0:
+            return t
+    return 1
+
+
+def _fwd_kernel(x_ref, wg_ref, p_ref):
+    logits = jnp.dot(x_ref[...], wg_ref[...], preferred_element_type=jnp.float32)
+    z = logits - jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(z)
+    p_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def _fwd(x, wg):
+    s, d = x.shape
+    n = wg.shape[-1]
+    sb = _pick_tile(s)
+    return pl.pallas_call(
+        _fwd_kernel,
+        grid=(s // sb,),
+        in_specs=[
+            pl.BlockSpec((sb, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((sb, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, n), x.dtype),
+        interpret=True,
+    )(x, wg)
+
+
+def _bwd_kernel(p_ref, g_ref, wg_ref, dlogits_ref, gx_ref):
+    p = p_ref[...]
+    g = g_ref[...]
+    dlogits = p * (g - jnp.sum(g * p, axis=-1, keepdims=True))
+    dlogits_ref[...] = dlogits
+    gx_ref[...] = jnp.dot(dlogits, wg_ref[...].T, preferred_element_type=jnp.float32)
+
+
+def _vjp_fwd(x, wg):
+    p = _fwd(x, wg)
+    return p, (x, wg, p)
+
+
+def _vjp_bwd(res, g):
+    x, wg, p = res
+    s, d = x.shape
+    n = wg.shape[-1]
+    sb = _pick_tile(s)
+    dlogits, gx = pl.pallas_call(
+        _bwd_kernel,
+        grid=(s // sb,),
+        in_specs=[
+            pl.BlockSpec((sb, n), lambda i: (i, 0)),
+            pl.BlockSpec((sb, n), lambda i: (i, 0)),
+            pl.BlockSpec((d, n), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((sb, n), lambda i: (i, 0)),
+            pl.BlockSpec((sb, d), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s, n), x.dtype),
+            jax.ShapeDtypeStruct((s, d), x.dtype),
+        ],
+        interpret=True,
+    )(p, g, wg)
+    gwg = x.T @ dlogits
+    return gx, gwg
+
+
+@jax.custom_vjp
+def gate_probs(x, wg):
+    """``softmax(x @ wg)`` for a flat token batch.
+
+    Shapes: x [S, d], wg [d, N] → probs [S, N]. Numerically identical to
+    :func:`kernels.ref.gate_probs_ref` (same max-subtraction stabilisation).
+    """
+    return _fwd(x, wg)
+
+
+gate_probs.defvjp(_vjp_fwd, _vjp_bwd)

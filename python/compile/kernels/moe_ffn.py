@@ -1,0 +1,186 @@
+"""Grouped expert FFN as a Pallas kernel — the MoE compute hot spot.
+
+The paper's expert computation is a per-expert 2-layer MLP over the tokens
+each expert received from the global exchange (GPU implementations run one
+cuBLAS GEMM per expert or a grouped GEMM). TPU adaptation (DESIGN.md
+§Hardware-Adaptation): we express the HBM↔VMEM staging with a BlockSpec
+grid over ``(expert, capacity-tile)``; each grid step stages a
+``[Cb, d]`` token tile plus that expert's ``[d, f]``/``[f, d]`` weight
+panels through VMEM-shaped blocks and feeds MXU-shaped ``jnp.dot`` calls.
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls, so the kernel lowers to plain HLO; the *structure* (block
+shapes, VMEM footprint, MXU tile occupancy) is what carries to real TPU and
+is what the §Perf estimate in EXPERIMENTS.md is computed from.
+
+``pallas_call`` has no automatic differentiation (even in interpret mode),
+so the public entry point :func:`expert_ffn` is a ``jax.custom_vjp`` whose
+forward *and* backward passes are Pallas kernels. The backward recomputes
+the hidden activation instead of saving it (rematerialisation — halves the
+residual footprint, the standard MoE trade since expert buffers dominate
+memory).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Preferred tokens-per-grid-step tile: 128 matches the MXU systolic
+# dimension. The capacity axis is only guaranteed to be a multiple of
+# configs.CAP_ROUND (8), so `_pick_tile` falls back to the largest tile
+# that divides it — on real TPU one would instead round capacity up to a
+# full 128 so every grid step fills the MXU (EXPERIMENTS.md §Perf).
+CAP_TILE = 128
+
+
+def _pick_tile(c: int) -> int:
+    """Largest tile that divides the capacity axis, capped at CAP_TILE."""
+    for t in (CAP_TILE, 64, 32, 16, 8, 4, 2, 1):
+        if c % t == 0:
+            return t
+    return 1
+
+
+# ---------------------------------------------------------------------------
+# Forward kernel
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    """One (expert, token-tile) grid step of y = relu(x@w1+b1)@w2+b2."""
+    x = x_ref[0]  # [Cb, d]
+    h = jnp.dot(x, w1_ref[0], preferred_element_type=jnp.float32) + b1_ref[0]
+    a = jnp.maximum(h, 0.0)
+    o_ref[0] = jnp.dot(a, w2_ref[0], preferred_element_type=jnp.float32) + b2_ref[0]
+
+
+def _fwd(x, w1, b1, w2, b2):
+    e, c, d = x.shape
+    f = w1.shape[-1]
+    cb = _pick_tile(c)
+    grid = (e, c // cb)
+    return pl.pallas_call(
+        _fwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, cb, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, d, f), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, f), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, f, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, cb, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, c, d), x.dtype),
+        interpret=True,
+    )(x, w1, b1, w2, b2)
+
+
+# ---------------------------------------------------------------------------
+# Backward kernels
+# ---------------------------------------------------------------------------
+
+
+def _bwd_dx_kernel(x_ref, w1_ref, b1_ref, w2_ref, g_ref, gx_ref):
+    """dL/dx for one (expert, token-tile): gx = (g@w2ᵀ · relu'(h)) @ w1ᵀ."""
+    x = x_ref[0]
+    h = jnp.dot(x, w1_ref[0], preferred_element_type=jnp.float32) + b1_ref[0]
+    ga = jnp.dot(g_ref[0], w2_ref[0].T, preferred_element_type=jnp.float32)
+    gh = ga * (h > 0.0).astype(ga.dtype)
+    gx_ref[0] = jnp.dot(gh, w1_ref[0].T, preferred_element_type=jnp.float32)
+
+
+def _bwd_dw_kernel(x_ref, w1_ref, b1_ref, w2_ref, g_ref,
+                   gw1_ref, gb1_ref, gw2_ref, gb2_ref):
+    """Per-expert weight grads over the full capacity axis.
+
+    The weight-gradient reduction runs over all C tokens of one expert, so
+    the grid is 1-D over experts and the whole ``[C, d]`` buffer is staged
+    per step (on a real TPU this block would be split with an accumulating
+    out_spec; for the capacities used here it fits VMEM — see DESIGN.md
+    §Perf).
+    """
+    x = x_ref[0]  # [C, d]
+    g = g_ref[0]  # [C, d]
+    h = jnp.dot(x, w1_ref[0], preferred_element_type=jnp.float32) + b1_ref[0]
+    a = jnp.maximum(h, 0.0)
+    ga = jnp.dot(g, w2_ref[0].T, preferred_element_type=jnp.float32)
+    gh = ga * (h > 0.0).astype(ga.dtype)
+    gw1_ref[0] = jnp.dot(x.T, gh, preferred_element_type=jnp.float32)
+    gb1_ref[0] = jnp.sum(gh, axis=0)
+    gw2_ref[0] = jnp.dot(a.T, g, preferred_element_type=jnp.float32)
+    gb2_ref[0] = jnp.sum(g, axis=0)
+
+
+def _bwd(res, g):
+    x, w1, b1, w2 = res
+    e, c, d = x.shape
+    f = w1.shape[-1]
+    cb = _pick_tile(c)
+
+    gx = pl.pallas_call(
+        _bwd_dx_kernel,
+        grid=(e, c // cb),
+        in_specs=[
+            pl.BlockSpec((1, cb, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, d, f), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, f), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, f, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, cb, d), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, cb, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, c, d), x.dtype),
+        interpret=True,
+    )(x, w1, b1, w2, g)
+
+    gw1, gb1, gw2, gb2 = pl.pallas_call(
+        _bwd_dw_kernel,
+        grid=(e,),
+        in_specs=[
+            pl.BlockSpec((1, c, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, d, f), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, f), lambda i: (i, 0)),
+            pl.BlockSpec((1, f, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, c, d), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, d, f), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, f), lambda i: (i, 0)),
+            pl.BlockSpec((1, f, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((e, d, f), x.dtype),
+            jax.ShapeDtypeStruct((e, f), x.dtype),
+            jax.ShapeDtypeStruct((e, f, d), x.dtype),
+            jax.ShapeDtypeStruct((e, d), x.dtype),
+        ],
+        interpret=True,
+    )(x, w1, b1, w2, g)
+
+    return gx, gw1, gb1, gw2, gb2
+
+
+# ---------------------------------------------------------------------------
+# Public entry point
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def expert_ffn(x, w1, b1, w2, b2):
+    """Grouped expert FFN: ``y[e] = relu(x[e] @ w1[e] + b1[e]) @ w2[e] + b2[e]``.
+
+    Shapes: x [E, C, d], w1 [E, d, f], b1 [E, f], w2 [E, f, d], b2 [E, d]
+    → y [E, C, d]. Matches :func:`kernels.ref.expert_ffn_ref` bit-for-bit in
+    fp32 (same contraction order).
+    """
+    return _fwd(x, w1, b1, w2, b2)
+
+
+def _vjp_fwd(x, w1, b1, w2, b2):
+    return _fwd(x, w1, b1, w2, b2), (x, w1, b1, w2)
+
+
+expert_ffn.defvjp(_vjp_fwd, _bwd)

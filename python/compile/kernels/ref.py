@@ -1,0 +1,80 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain ``jax.numpy`` ops only. The pytest suite (and the
+hypothesis sweeps) assert ``assert_allclose(kernel(...), ref(...))`` over a
+grid of shapes and dtypes, which is the correctness contract for the AOT
+artifacts: the lowered HLO contains the *kernel* path, and the oracle pins
+its numerics.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Grouped expert FFN (the MoE expert computation hot spot)
+# ---------------------------------------------------------------------------
+
+
+def expert_ffn_ref(x, w1, b1, w2, b2):
+    """Grouped 2-layer ReLU MLP applied per expert.
+
+    Args:
+      x:  [E, C, d]  capacity-padded token buffers, one per expert.
+      w1: [E, d, f]  first-layer weights.
+      b1: [E, f]     first-layer biases.
+      w2: [E, f, d]  second-layer weights.
+      b2: [E, d]     second-layer biases.
+
+    Returns:
+      y: [E, C, d]
+    """
+    h = jnp.einsum("ecd,edf->ecf", x, w1) + b1[:, None, :]
+    a = jnp.maximum(h, 0.0)
+    return jnp.einsum("ecf,efd->ecd", a, w2) + b2[:, None, :]
+
+
+def expert_ffn_vjp_ref(x, w1, b1, w2, b2, g):
+    """Reference VJP of :func:`expert_ffn_ref` (via jax.vjp)."""
+    _, vjp = jax.vjp(expert_ffn_ref, x, w1, b1, w2, b2)
+    return vjp(g)
+
+
+# ---------------------------------------------------------------------------
+# Gate probabilities (projection + stable softmax)
+# ---------------------------------------------------------------------------
+
+
+def gate_probs_ref(x, wg):
+    """Gate probabilities for a flat batch of tokens.
+
+    Args:
+      x:  [S, d]  token activations.
+      wg: [d, N]  gate projection.
+
+    Returns:
+      probs: [S, N] softmax(x @ wg), numerically stabilised.
+    """
+    logits = x @ wg
+    z = logits - jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(z)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def gate_probs_vjp_ref(x, wg, g):
+    """Reference VJP of :func:`gate_probs_ref` (via jax.vjp)."""
+    _, vjp = jax.vjp(gate_probs_ref, x, wg)
+    return vjp(g)
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch/combine reference (used by model tests, not a kernel)
+# ---------------------------------------------------------------------------
+
+
+def topk_mask_ref(probs, k):
+    """Top-k selection mask [S, N] (ones at each token's k largest probs)."""
+    _, idx = jax.lax.top_k(probs, k)
+    return jnp.sum(jax.nn.one_hot(idx, probs.shape[-1], dtype=probs.dtype), axis=-2)

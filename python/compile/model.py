@@ -1,0 +1,435 @@
+"""L2: the MoE transformer (fwd/bwd) — the paper's model, in JAX.
+
+One AOT-compiled program computes the **whole P-device training step**
+(DESIGN.md §2): data batches carry a leading per-device axis, expert
+parameters carry the global expert axis, and the all-to-all of expert
+parallelism is a differentiable scatter/gather inside the program. The gate
+statistics the paper's coordinator needs (raw dispatch counts ``c_ie``)
+are program outputs; the topology-derived quantities it controls (penalty
+matrix ``p_ie`` of Eq. 8, capacity matrix ``C_ie``, the intra-node mask and
+the FasterMoE-Hir remote fraction) are program *inputs*. That split keeps
+every topology decision in the rust coordinator and every FLOP in XLA.
+
+Gate modes (paper §5):
+  * ``switch`` — top-1 gating [Fedus et al.].
+  * ``gshard`` — top-2 gating with normalised combine weights [Lepikhin et al.].
+  * ``hir``    — FasterMoE's compulsory-ratio gate: at most ``frac·S`` tokens
+                 per device may follow a remote preference; the rest are
+                 forced to their best intra-node expert.
+
+Dispatch (capacity) modes (paper §3.1):
+  * ``local``  — DeepSpeed-MoE style: sender i may occupy at most
+                 ``caps[i,e]`` slots of expert e; senders write disjoint
+                 slices (offsets = exclusive cumsum of caps over senders).
+  * ``global`` — FastMoE style: one global per-expert capacity, filled in
+                 sender order after a size exchange (offsets = exclusive
+                 cumsum of actual counts).
+
+TA-MoE needs **no mode of its own**: on FastMoE it only replaces the aux
+loss (penalty input), on DeepSpeed-MoE it additionally sets
+``caps[i,e] ∝ ĉ_ie`` (paper §4.3) — both are runtime inputs here.
+
+The auxiliary loss implemented is the unified
+``l = Σ_ie penalty[i,e] · m_ie · (c_ie / S)`` (mean over devices and MoE
+layers): with ``penalty = N`` it is exactly the load-balance loss of Eq. 1,
+with ``penalty = N·P·p_ie`` it is the topology loss of Eq. 8.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import expert_ffn, gate_probs
+
+# ---------------------------------------------------------------------------
+# Parameter specification
+# ---------------------------------------------------------------------------
+
+
+def param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Flat, ordered (name, shape) list — the ABI between python and rust."""
+    d, f, n, t, v = cfg.d, cfg.f, cfg.n_experts, cfg.seq, cfg.vocab
+    specs: List[Tuple[str, Tuple[int, ...]]] = [
+        ("embed", (v, d)),
+        ("pos", (t, d)),
+    ]
+    moe_layers = set(cfg.moe_layer_ids())
+    for l in range(cfg.layers):
+        pre = f"l{l}."
+        specs += [
+            (pre + "ln1_s", (d,)), (pre + "ln1_b", (d,)),
+            (pre + "wq", (d, d)), (pre + "wk", (d, d)),
+            (pre + "wv", (d, d)), (pre + "wo", (d, d)),
+            (pre + "ln2_s", (d,)), (pre + "ln2_b", (d,)),
+        ]
+        if l in moe_layers:
+            specs += [
+                (pre + "wg", (d, n)),
+                (pre + "moe_w1", (n, d, f)), (pre + "moe_b1", (n, f)),
+                (pre + "moe_w2", (n, f, d)), (pre + "moe_b2", (n, d)),
+            ]
+        else:
+            specs += [
+                (pre + "ffn_w1", (1, d, f)), (pre + "ffn_b1", (1, f)),
+                (pre + "ffn_w2", (1, f, d)), (pre + "ffn_b2", (1, d)),
+            ]
+    specs += [("lnf_s", (d,)), ("lnf_b", (d,))]
+    return specs
+
+
+def init_params(cfg: ModelConfig, seed) -> List[jax.Array]:
+    """Initialise the flat parameter list from an int32 seed scalar.
+
+    Scaled-normal init for matmuls (1/sqrt(fan_in)), ones/zeros for
+    layernorms and biases. Deterministic in ``seed``.
+    """
+    base = jax.random.PRNGKey(seed)
+    out = []
+    for i, (name, shape) in enumerate(param_specs(cfg)):
+        key = jax.random.fold_in(base, i)
+        leaf = name.split(".")[-1]
+        if leaf.endswith("_s"):  # layernorm scales
+            out.append(jnp.ones(shape, jnp.float32))
+        elif leaf.endswith("_b") and len(shape) <= 2 and "w" not in leaf:
+            out.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            out.append(
+                jax.random.normal(key, shape, jnp.float32) / jnp.sqrt(float(fan_in))
+            )
+    return out
+
+
+def _as_dict(cfg: ModelConfig, flat: Sequence[jax.Array]):
+    return {name: arr for (name, _), arr in zip(param_specs(cfg), flat)}
+
+
+# ---------------------------------------------------------------------------
+# Transformer pieces
+# ---------------------------------------------------------------------------
+
+
+def _layernorm(x, s, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * s + b
+
+
+def _attention(x, wq, wk, wv, wo, heads):
+    """Causal multi-head self-attention. x: [B, T, d]."""
+    b, t, d = x.shape
+    hd = d // heads
+    q = (x @ wq).reshape(b, t, heads, hd).transpose(0, 2, 1, 3)
+    k = (x @ wk).reshape(b, t, heads, hd).transpose(0, 2, 1, 3)
+    v = (x @ wv).reshape(b, t, heads, hd).transpose(0, 2, 1, 3)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+    mask = jnp.tril(jnp.ones((t, t), jnp.float32))
+    scores = jnp.where(mask[None, None] > 0, scores, -1e30)
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    w = jnp.exp(scores)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    o = jnp.einsum("bhqk,bhkd->bhqd", w, v)
+    o = o.transpose(0, 2, 1, 3).reshape(b, t, d)
+    return o @ wo
+
+
+# ---------------------------------------------------------------------------
+# Gating
+# ---------------------------------------------------------------------------
+
+
+def _topk(probs, k):
+    """Iterative-argmax top-k.
+
+    `lax.top_k` lowers to the `topk(..., largest=true)` HLO op, which the
+    xla_extension 0.5.1 text parser predates; iterative argmax lowers to
+    plain variadic reduces that round-trip fine. k is 1 or 2 here, so the
+    unrolled loop costs nothing.
+    """
+    p = probs
+    vals, idxs = [], []
+    for _ in range(k):
+        idx = jnp.argmax(p, axis=-1)
+        oh = jax.nn.one_hot(idx, p.shape[-1], dtype=p.dtype)
+        vals.append(jnp.sum(p * oh, axis=-1))
+        idxs.append(idx)
+        p = p - oh * 2.0  # mask the taken entry (probs ≤ 1 < 2)
+    return jnp.stack(vals, axis=-1), jnp.stack(idxs, axis=-1).astype(jnp.int32)
+
+
+def _select_experts(cfg: ModelConfig, probs, local_mask, hir_remote_frac):
+    """Choose k experts + combine weights per token.
+
+    Args:
+      probs: [P, S, N] gate probabilities.
+      local_mask: [P, N] 1.0 where expert e lives on device i's node.
+      hir_remote_frac: scalar — max fraction of tokens a device may send to
+        a remote-node expert (only used by the ``hir`` gate).
+
+    Returns:
+      idx: [P, S, k] int32 expert choices, weights: [P, S, k] f32 combine
+      weights (selection is stop-gradient; weights carry the gate gradient).
+    """
+    p_, s_, n_ = probs.shape
+    if cfg.gate == "switch":
+        vals, idx = _topk(probs, 1)
+        return idx, vals
+    if cfg.gate == "gshard":
+        vals, idx = _topk(probs, 2)
+        w = vals / jnp.maximum(jnp.sum(vals, axis=-1, keepdims=True), 1e-9)
+        return idx, w
+    if cfg.gate == "hir":
+        # FasterMoE Hir: cap the number of remote-preferring tokens per
+        # device at floor(frac * S); the rest are forced to the best local
+        # expert. Token ranking is by remote preference strength.
+        #
+        # NOTE: written without batched take_along_axis — the HLO-text
+        # converter (xla_extension 0.5.1 era) rejects gathers with
+        # operand_batching_dims, so selections go through one-hot sums and
+        # the rank-among-remote test is an O(S²) pairwise comparison
+        # (S ≤ a few hundred here, so this is cheap and fully fusible).
+        neg = jnp.float32(-1e30)
+        local_p = jnp.where(local_mask[:, None, :] > 0, probs, neg)
+        remote_p = jnp.where(local_mask[:, None, :] > 0, neg, probs)
+        best_local = jnp.argmax(local_p, axis=-1)            # [P, S]
+        best_any = jnp.argmax(probs, axis=-1)                # [P, S]
+        remote_score = jnp.max(remote_p, axis=-1)            # [P, S]
+        best_any_1h = jax.nn.one_hot(best_any, n_, dtype=jnp.float32)
+        prefers_remote = (
+            jnp.sum(best_any_1h * local_mask[:, None, :], axis=-1) < 0.5
+        )                                                    # [P, S]
+        budget = jnp.floor(hir_remote_frac * s_).astype(jnp.int32)
+        # rank among remote-preferring tokens = #(strictly stronger) +
+        # #(equal with smaller token id) — a stable descending rank.
+        score_m = jnp.where(prefers_remote, remote_score, neg)   # [P, S]
+        stronger = score_m[:, None, :] > score_m[:, :, None]     # [P, S, S]
+        tie = (score_m[:, None, :] == score_m[:, :, None]) & (
+            jnp.arange(s_)[None, None, :] < jnp.arange(s_)[None, :, None]
+        )
+        rank = jnp.sum((stronger | tie).astype(jnp.int32), axis=-1)  # [P, S]
+        keep_remote = prefers_remote & (rank < budget)
+        chosen = jnp.where(keep_remote, best_any, best_local)  # [P, S]
+        chosen_1h = jax.nn.one_hot(chosen, n_, dtype=jnp.float32)
+        w = jnp.sum(chosen_1h * probs, axis=-1, keepdims=True)
+        return chosen[..., None], w
+    raise ValueError(f"unknown gate {cfg.gate!r}")
+
+
+# ---------------------------------------------------------------------------
+# MoE layer
+# ---------------------------------------------------------------------------
+
+
+def _moe_layer(cfg: ModelConfig, x, wg, w1, b1, w2, b2,
+               penalty, caps, local_mask, hir_remote_frac):
+    """One expert-parallel MoE FFN over all devices.
+
+    Args:
+      x: [P, S, d] post-LN activations (S = tokens per device).
+      penalty/caps/local_mask: [P, N] runtime inputs (see module docstring).
+
+    Returns:
+      y: [P, S, d], aux: scalar topology/load loss, counts: [P, N] raw
+      (pre-capacity) dispatch counts, dropped: scalar dropped-token fraction.
+    """
+    p_, s_, d_ = x.shape
+    n_ = cfg.n_experts
+    c_ = cfg.capacity
+    k_ = 1 if cfg.gate in ("switch", "hir") else 2
+
+    probs = gate_probs(x.reshape(p_ * s_, d_), wg).reshape(p_, s_, n_)
+    idx, weights = _select_experts(cfg, probs, local_mask, hir_remote_frac)
+
+    # --- Eq. 1 / Eq. 8 statistics ------------------------------------------
+    sel = jax.nn.one_hot(idx, n_, dtype=jnp.float32)          # [P, S, k, N]
+    counts = jnp.sum(sel, axis=(1, 2))                        # [P, N] raw c_ie
+    m = jnp.mean(probs, axis=1)                               # [P, N] mean prob
+    frac = counts / float(s_)
+    aux = jnp.mean(jnp.sum(penalty * m * frac, axis=-1))      # mean over P
+
+    # --- slot ordering: all 1st choices (by token) then all 2nd choices ----
+    sel_slots = sel.transpose(0, 2, 1, 3).reshape(p_, k_ * s_, n_)
+    idx_slots = idx.transpose(0, 2, 1).reshape(p_, k_ * s_)
+    w_slots = weights.transpose(0, 2, 1).reshape(p_, k_ * s_)
+
+    rank = jnp.cumsum(sel_slots, axis=1) - sel_slots          # [P, kS, N]
+    rank = jnp.sum(rank * sel_slots, axis=-1)                 # [P, kS] rank within (i,e)
+
+    caps_i = jnp.floor(caps)                                  # [P, N]
+    if cfg.dispatch == "local":
+        # DeepSpeed-style: disjoint sender slices of size caps[i,e].
+        offsets = jnp.cumsum(caps_i, axis=0) - caps_i         # excl. cumsum over P
+        cap_of_slot = jnp.sum(caps_i[:, None, :] * sel_slots, axis=-1)
+        keep = rank < cap_of_slot
+    else:
+        # FastMoE-style: global per-expert capacity, filled in sender order
+        # (models the size-exchange all-to-all).
+        gcap = jnp.minimum(jnp.sum(caps_i, axis=0), float(c_))  # [N]
+        cnt = jnp.sum(sel_slots, axis=1)                         # [P, N]
+        offsets = jnp.cumsum(cnt, axis=0) - cnt
+        gcap_of_slot = jnp.sum(gcap[None, None, :] * sel_slots, axis=-1)
+        off_plus_rank = rank + jnp.sum(offsets[:, None, :] * sel_slots, axis=-1)
+        keep = off_plus_rank < gcap_of_slot
+
+    off_of_slot = jnp.sum(offsets[:, None, :] * sel_slots, axis=-1)
+    gpos = rank + off_of_slot                                  # [P, kS]
+    keep = keep & (gpos < float(c_))
+    dropped = 1.0 - jnp.sum(keep.astype(jnp.float32)) / float(p_ * k_ * s_)
+
+    sentinel = n_ * c_
+    dest = jnp.where(keep, idx_slots * c_ + gpos.astype(jnp.int32), sentinel)
+    dest = dest.reshape(p_ * k_ * s_).astype(jnp.int32)
+
+    # --- dispatch: differentiable scatter into expert buffers --------------
+    x_slots = jnp.broadcast_to(
+        x[:, None, :, :], (p_, k_, s_, d_)
+    ).reshape(p_ * k_ * s_, d_)
+    buf = jnp.zeros((n_ * c_ + 1, d_), x.dtype).at[dest].add(x_slots)
+    expert_in = buf[: n_ * c_].reshape(n_, c_, d_)
+
+    # --- expert compute: the Pallas hot spot -------------------------------
+    expert_out = expert_ffn(expert_in, w1, b1, w2, b2)
+
+    # --- combine: gather back + weighted sum over k slots ------------------
+    out_ext = jnp.concatenate(
+        [expert_out.reshape(n_ * c_, d_), jnp.zeros((1, d_), x.dtype)], axis=0
+    )
+    y_slots = out_ext[dest] * w_slots.reshape(p_ * k_ * s_)[:, None]
+    y = jnp.sum(y_slots.reshape(p_, k_, s_, d_), axis=1)
+
+    return y, aux, counts, dropped
+
+
+# ---------------------------------------------------------------------------
+# Full forward
+# ---------------------------------------------------------------------------
+
+
+def forward(cfg: ModelConfig, flat_params, tokens, targets,
+            penalty, caps, local_mask, hir_remote_frac):
+    """Whole-cluster forward: CE + aux loss + dispatch statistics.
+
+    tokens/targets: int32 [P, B, T]. Returns (loss, (ce, aux, counts,
+    dropped)) with counts the mean raw c_ie over MoE layers, [P, N] f32.
+    """
+    ps = _as_dict(cfg, flat_params)
+    p_, b_, t_ = tokens.shape
+    d_ = cfg.d
+    s_ = b_ * t_
+
+    x = ps["embed"][tokens.reshape(-1)].reshape(p_ * b_, t_, d_)
+    x = x + ps["pos"][None, :, :]
+
+    aux_total = jnp.float32(0.0)
+    counts_total = jnp.zeros((p_, cfg.n_experts), jnp.float32)
+    dropped_total = jnp.float32(0.0)
+    moe_layers = set(cfg.moe_layer_ids())
+
+    for l in range(cfg.layers):
+        pre = f"l{l}."
+        h = _layernorm(x, ps[pre + "ln1_s"], ps[pre + "ln1_b"])
+        x = x + _attention(h, ps[pre + "wq"], ps[pre + "wk"],
+                           ps[pre + "wv"], ps[pre + "wo"], cfg.heads)
+        h = _layernorm(x, ps[pre + "ln2_s"], ps[pre + "ln2_b"])
+        if l in moe_layers:
+            h_dev = h.reshape(p_, s_, d_)
+            y, aux, counts, dropped = _moe_layer(
+                cfg, h_dev, ps[pre + "wg"],
+                ps[pre + "moe_w1"], ps[pre + "moe_b1"],
+                ps[pre + "moe_w2"], ps[pre + "moe_b2"],
+                penalty, caps, local_mask, hir_remote_frac,
+            )
+            x = x + y.reshape(p_ * b_, t_, d_)
+            aux_total = aux_total + aux
+            counts_total = counts_total + counts
+            dropped_total = dropped_total + dropped
+        else:
+            # Dense FFN = the same Pallas kernel with a single expert group.
+            y = expert_ffn(
+                h.reshape(1, p_ * s_, d_),
+                ps[pre + "ffn_w1"], ps[pre + "ffn_b1"],
+                ps[pre + "ffn_w2"], ps[pre + "ffn_b2"],
+            )
+            x = x + y.reshape(p_ * b_, t_, d_)
+
+    x = _layernorm(x, ps["lnf_s"], ps["lnf_b"])
+    logits = x @ ps["embed"].T                                # tied head
+    logits = logits - jax.lax.stop_gradient(
+        jnp.max(logits, axis=-1, keepdims=True)
+    )
+    logz = jnp.log(jnp.sum(jnp.exp(logits), axis=-1))
+    tgt = targets.reshape(p_ * b_, t_)
+    picked = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(logz - picked)
+
+    n_moe = max(len(moe_layers), 1)
+    aux_mean = aux_total / n_moe
+    counts_mean = counts_total / n_moe
+    dropped_mean = dropped_total / n_moe
+
+    # Keep every runtime input alive in the lowered program: the HLO-text
+    # converter drops unused parameters (e.g. local_mask under the switch
+    # gate), which would silently shift the positional ABI the rust side
+    # indexes by. 0·x is not foldable for floats pre-compile, so these
+    # survive to HLO text and cost nothing after XLA's own optimiser runs.
+    keepalive = 0.0 * (jnp.sum(local_mask) + hir_remote_frac)
+
+    loss = ce + aux_mean + keepalive
+    return loss, (ce, aux_mean, counts_mean, dropped_mean)
+
+
+# ---------------------------------------------------------------------------
+# Train / eval steps (flat ABI for AOT)
+# ---------------------------------------------------------------------------
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+def train_step(cfg: ModelConfig, n_params: int, *flat):
+    """Flat-ABI Adam train step.
+
+    Input order:  params×n, m×n, v×n, t, lr, tokens, targets, penalty, caps,
+                  local_mask, hir_remote_frac.
+    Output order: params×n, m×n, v×n, t+1, loss, ce, aux, counts, dropped.
+    """
+    params = list(flat[:n_params])
+    m = list(flat[n_params: 2 * n_params])
+    v = list(flat[2 * n_params: 3 * n_params])
+    (t, lr, tokens, targets, penalty, caps, local_mask, hir_frac) = flat[3 * n_params:]
+
+    def loss_fn(ps):
+        return forward(cfg, ps, tokens, targets, penalty, caps,
+                       local_mask, hir_frac)
+
+    (loss, (ce, aux, counts, dropped)), grads = jax.value_and_grad(
+        loss_fn, has_aux=True
+    )(params)
+
+    t1 = t + 1.0
+    bc1 = 1.0 - ADAM_B1 ** t1
+    bc2 = 1.0 - ADAM_B2 ** t1
+    new_p, new_m, new_v = [], [], []
+    for pi, mi, vi, gi in zip(params, m, v, grads):
+        mi = ADAM_B1 * mi + (1 - ADAM_B1) * gi
+        vi = ADAM_B2 * vi + (1 - ADAM_B2) * jnp.square(gi)
+        upd = (mi / bc1) / (jnp.sqrt(vi / bc2) + ADAM_EPS)
+        new_p.append(pi - lr * upd)
+        new_m.append(mi)
+        new_v.append(vi)
+
+    return tuple(new_p + new_m + new_v + [t1, loss, ce, aux, counts, dropped])
+
+
+def eval_step(cfg: ModelConfig, n_params: int, *flat):
+    """Flat-ABI eval: params×n, tokens, targets, penalty, caps, local_mask,
+    hir_remote_frac → (loss, ce, aux, counts, dropped)."""
+    params = list(flat[:n_params])
+    tokens, targets, penalty, caps, local_mask, hir_frac = flat[n_params:]
+    loss, (ce, aux, counts, dropped) = forward(
+        cfg, params, tokens, targets, penalty, caps, local_mask, hir_frac
+    )
+    return loss, ce, aux, counts, dropped

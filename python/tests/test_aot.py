@@ -1,0 +1,68 @@
+"""AOT pipeline: manifest/ABI consistency and HLO-text well-formedness.
+
+The rust integration tests (rust/tests/) cover actually loading + executing
+the artifacts through PJRT; here we pin the manifest contract they rely on.
+"""
+
+import json
+import os
+
+import pytest
+
+from compile import model
+from compile.configs import CONFIGS, DEFAULT_ARTIFACTS
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+built = [n for n in DEFAULT_ARTIFACTS
+         if os.path.exists(os.path.join(ART, n, "manifest.json"))]
+
+
+@pytest.mark.skipif(not built, reason="run `make artifacts` first")
+@pytest.mark.parametrize("name", built)
+class TestManifest:
+    def _load(self, name):
+        with open(os.path.join(ART, name, "manifest.json")) as fh:
+            return json.load(fh)
+
+    def test_files_exist_and_are_hlo_text(self, name):
+        man = self._load(name)
+        for prog in ("init", "step", "eval"):
+            path = os.path.join(ART, name, man[prog]["file"])
+            assert os.path.exists(path)
+            head = open(path).read(200)
+            assert head.startswith("HloModule"), head[:50]
+
+    def test_param_specs_match_model(self, name):
+        man = self._load(name)
+        cfg = CONFIGS[name]
+        specs = model.param_specs(cfg)
+        assert man["n_param_tensors"] == len(specs)
+        for desc, (pname, shape) in zip(man["params"], specs):
+            assert desc["name"] == pname
+            assert tuple(desc["shape"]) == tuple(shape)
+
+    def test_step_abi_counts(self, name):
+        man = self._load(name)
+        n = man["n_param_tensors"]
+        assert len(man["step"]["inputs"]) == 3 * n + 8
+        assert len(man["step"]["outputs"]) == 3 * n + 6
+        assert len(man["init"]["inputs"]) == 1
+        assert len(man["init"]["outputs"]) == n
+        assert len(man["eval"]["outputs"]) == 5
+
+    def test_config_consistency(self, name):
+        man = self._load(name)
+        cfg = CONFIGS[name]
+        c = man["config"]
+        assert c["p"] == cfg.p
+        assert c["n_experts"] == cfg.n_experts
+        assert c["capacity"] == cfg.capacity
+        assert c["gate"] == cfg.gate
+        assert c["dispatch"] == cfg.dispatch
+
+    def test_counts_output_shape(self, name):
+        man = self._load(name)
+        cfg = CONFIGS[name]
+        counts = [o for o in man["step"]["outputs"] if o["name"] == "counts"]
+        assert counts and tuple(counts[0]["shape"]) == (cfg.p, cfg.n_experts)

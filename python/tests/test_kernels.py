@@ -1,0 +1,173 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+The hypothesis sweeps are the contract for the AOT artifacts — they cover
+the shape/dtype space the model can feed the kernels (including the
+non-tile-aligned capacities produced by odd capacity factors).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import expert_ffn, gate_probs, ref
+from compile.kernels.moe_ffn import _pick_tile
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, shape, scale=1.0):
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+def _ffn_inputs(seed, e, c, d, f):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    return (
+        _rand(ks[0], (e, c, d)),
+        _rand(ks[1], (e, d, f), 0.2),
+        _rand(ks[2], (e, f), 0.1),
+        _rand(ks[3], (e, f, d), 0.2),
+        _rand(ks[4], (e, d), 0.1),
+    )
+
+
+class TestExpertFfnForward:
+    @pytest.mark.parametrize("e,c,d,f", [
+        (1, 4, 8, 16),     # degenerate single expert (dense-FFN reuse path)
+        (2, 8, 16, 32),
+        (4, 48, 32, 64),   # capacity not a power of two (tile fallback 16)
+        (8, 128, 16, 32),  # full CAP_TILE
+        (3, 7, 5, 9),      # fully unaligned shapes
+    ])
+    def test_matches_ref(self, e, c, d, f):
+        args = _ffn_inputs(0, e, c, d, f)
+        np.testing.assert_allclose(
+            expert_ffn(*args), ref.expert_ffn_ref(*args), rtol=1e-5, atol=1e-5
+        )
+
+    def test_zero_input_rows_stay_zero_biasless(self):
+        # Capacity padding relies on relu(0 @ w1 + 0) @ w2 + 0 == 0 when
+        # biases are zero; with nonzero biases padded rows produce the bias
+        # response, which the combine discards via the sentinel row.
+        e, c, d, f = 2, 8, 4, 8
+        x, w1, _, w2, _ = _ffn_inputs(1, e, c, d, f)
+        zb1, zb2 = jnp.zeros((e, f)), jnp.zeros((e, d))
+        y = expert_ffn(x.at[:, 2:].set(0.0), w1, zb1, w2, zb2)
+        np.testing.assert_allclose(y[:, 2:], 0.0, atol=1e-7)
+
+    def test_experts_independent(self):
+        # Perturbing expert 0's buffer must not change expert 1's output.
+        args = _ffn_inputs(2, 2, 8, 4, 8)
+        y0 = expert_ffn(*args)
+        x2 = args[0].at[0].add(1.0)
+        y1 = expert_ffn(x2, *args[1:])
+        np.testing.assert_allclose(y0[1], y1[1], atol=0)
+        assert not np.allclose(y0[0], y1[0])
+
+
+class TestExpertFfnBackward:
+    @pytest.mark.parametrize("e,c,d,f", [(2, 8, 16, 32), (3, 48, 8, 16), (1, 5, 4, 6)])
+    def test_grads_match_ref(self, e, c, d, f):
+        args = _ffn_inputs(3, e, c, d, f)
+        g = _rand(jax.random.PRNGKey(99), (e, c, d))
+        got = jax.grad(lambda *a: jnp.sum(expert_ffn(*a) * g), argnums=(0, 1, 2, 3, 4))(*args)
+        want = ref.expert_ffn_vjp_ref(*args, g)
+        for gi, wi in zip(got, want):
+            np.testing.assert_allclose(gi, wi, rtol=1e-4, atol=1e-5)
+
+    def test_grad_through_jit(self):
+        args = _ffn_inputs(4, 2, 16, 8, 16)
+        f_ = jax.jit(jax.grad(lambda *a: jnp.sum(expert_ffn(*a) ** 2), argnums=0))
+        r_ = jax.grad(lambda *a: jnp.sum(ref.expert_ffn_ref(*a) ** 2), argnums=0)
+        np.testing.assert_allclose(f_(*args), r_(*args), rtol=1e-4, atol=1e-5)
+
+
+class TestGateProbs:
+    @pytest.mark.parametrize("s,d,n", [(4, 8, 2), (128, 16, 8), (100, 32, 64), (1, 4, 3)])
+    def test_matches_ref(self, s, d, n):
+        ks = jax.random.split(jax.random.PRNGKey(5), 2)
+        x, wg = _rand(ks[0], (s, d)), _rand(ks[1], (d, n), 0.5)
+        np.testing.assert_allclose(
+            gate_probs(x, wg), ref.gate_probs_ref(x, wg), rtol=1e-5, atol=1e-6
+        )
+
+    def test_rows_sum_to_one(self):
+        ks = jax.random.split(jax.random.PRNGKey(6), 2)
+        p = gate_probs(_rand(ks[0], (64, 16)), _rand(ks[1], (16, 8)))
+        np.testing.assert_allclose(jnp.sum(p, -1), 1.0, rtol=1e-6)
+        assert (np.array(p) >= 0).all()
+
+    def test_large_logits_stable(self):
+        # Stability under huge logits (the max-subtraction path).
+        x = jnp.full((8, 4), 50.0)
+        wg = jnp.eye(4) * 10.0
+        p = gate_probs(x, wg)
+        assert np.isfinite(np.array(p)).all()
+
+    def test_grads_match_ref(self):
+        ks = jax.random.split(jax.random.PRNGKey(7), 3)
+        x, wg = _rand(ks[0], (32, 8)), _rand(ks[1], (8, 4), 0.5)
+        g = _rand(ks[2], (32, 4))
+        got = jax.grad(lambda a, b: jnp.sum(gate_probs(a, b) * g), argnums=(0, 1))(x, wg)
+        want = ref.gate_probs_vjp_ref(x, wg, g)
+        for gi, wi in zip(got, want):
+            np.testing.assert_allclose(gi, wi, rtol=1e-4, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps: the kernel/ref contract over the reachable shape space
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    e=st.integers(1, 6),
+    c=st.integers(1, 96),
+    d=st.integers(1, 48),
+    f=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_ffn_forward(e, c, d, f, seed):
+    args = _ffn_inputs(seed, e, c, d, f)
+    np.testing.assert_allclose(
+        expert_ffn(*args), ref.expert_ffn_ref(*args), rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    e=st.integers(1, 4),
+    c=st.integers(1, 32),
+    d=st.integers(1, 16),
+    f=st.integers(1, 24),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_ffn_backward(e, c, d, f, seed):
+    args = _ffn_inputs(seed, e, c, d, f)
+    g = _rand(jax.random.PRNGKey(seed ^ 0x5EED), (e, c, d))
+    got = jax.grad(lambda *a: jnp.sum(expert_ffn(*a) * g), argnums=(0, 1, 2, 3, 4))(*args)
+    want = ref.expert_ffn_vjp_ref(*args, g)
+    for gi, wi in zip(got, want):
+        np.testing.assert_allclose(gi, wi, rtol=1e-3, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    s=st.integers(1, 200),
+    d=st.integers(1, 40),
+    n=st.integers(2, 80),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_gate(s, d, n, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    x, wg = _rand(ks[0], (s, d)), _rand(ks[1], (d, n), 0.5)
+    p = gate_probs(x, wg)
+    np.testing.assert_allclose(p, ref.gate_probs_ref(x, wg), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(jnp.sum(p, -1), 1.0, rtol=1e-5)
+
+
+@given(c=st.integers(1, 1024))
+def test_pick_tile_divides(c):
+    t = _pick_tile(c)
+    assert c % t == 0 and 1 <= t <= 128

@@ -1,0 +1,67 @@
+//! Ring allreduce pricing for the dense (data-parallel) gradient sync.
+//!
+//! The coordinator's step-time model needs the cost of synchronising the
+//! replicated (non-expert) parameters every step. We price the standard
+//! ring allreduce: 2·(P−1) steps, each moving `bytes/P` between ring
+//! neighbours; the slowest traversed pair bottlenecks every step (the ring
+//! is laid out over device ids, so on a multi-node topology the node
+//! boundary links dominate — as they do for NCCL rings in practice).
+
+use crate::topology::Topology;
+
+/// Time for a ring allreduce of `bytes` across all P devices.
+pub fn ring_allreduce_time(topo: &Topology, bytes: f64) -> f64 {
+    let p = topo.p();
+    if p <= 1 || bytes <= 0.0 {
+        return 0.0;
+    }
+    // ring neighbours: i → (i+1) % p; bottleneck over the ring
+    let mut alpha_max: f64 = 0.0;
+    let mut beta_max: f64 = 0.0;
+    for i in 0..p {
+        let j = (i + 1) % p;
+        alpha_max = alpha_max.max(topo.alpha(i, j));
+        beta_max = beta_max.max(topo.beta(i, j));
+    }
+    let steps = 2.0 * (p as f64 - 1.0);
+    let chunk = bytes / p as f64;
+    steps * (alpha_max + beta_max * chunk)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{presets, Link, Topology};
+
+    #[test]
+    fn single_device_is_free() {
+        let t = Topology::homogeneous(1, Link::new(0.0, 1e-9), presets::local_copy());
+        assert_eq!(ring_allreduce_time(&t, 1e9), 0.0);
+    }
+
+    #[test]
+    fn bandwidth_term_matches_formula() {
+        let t = Topology::homogeneous(4, Link::new(0.0, 1e-9), presets::local_copy());
+        let got = ring_allreduce_time(&t, 4e6);
+        let want = 2.0 * 3.0 * (1e-9 * 1e6);
+        assert!((got - want).abs() / want < 1e-9);
+    }
+
+    #[test]
+    fn multinode_bottlenecked_by_uplink() {
+        let single = presets::cluster_b(1);
+        let multi = presets::cluster_b(2);
+        // per-device chunk shrinks with P, but the slow inter-node hop
+        // dominates: same bytes must be slower on the multi-node ring
+        let b = 64e6;
+        assert!(ring_allreduce_time(&multi, b) > ring_allreduce_time(&single, b));
+    }
+
+    #[test]
+    fn scales_linearly_in_bytes_when_alpha_zero() {
+        let t = Topology::homogeneous(8, Link::new(0.0, 1e-9), presets::local_copy());
+        let t1 = ring_allreduce_time(&t, 1e6);
+        let t2 = ring_allreduce_time(&t, 2e6);
+        assert!((t2 / t1 - 2.0).abs() < 1e-9);
+    }
+}

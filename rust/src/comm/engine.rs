@@ -1,0 +1,206 @@
+//! The core cost engine: price a P×P byte matrix under an exchange model.
+
+use crate::topology::Topology;
+use crate::util::Mat;
+use std::collections::HashMap;
+
+/// How concurrent peer-to-peer deliveries interact (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExchangeModel {
+    SlowestPair,
+    PerSenderSerial,
+    Contention,
+}
+
+/// Prices exchanges on one topology. Cheap to construct; borrow-only.
+pub struct CostEngine<'a> {
+    topo: &'a Topology,
+    model: ExchangeModel,
+}
+
+impl<'a> CostEngine<'a> {
+    pub fn new(topo: &'a Topology, model: ExchangeModel) -> Self {
+        CostEngine { topo, model }
+    }
+
+    pub fn slowest_pair(topo: &'a Topology) -> Self {
+        Self::new(topo, ExchangeModel::SlowestPair)
+    }
+
+    pub fn per_sender(topo: &'a Topology) -> Self {
+        Self::new(topo, ExchangeModel::PerSenderSerial)
+    }
+
+    pub fn contention(topo: &'a Topology) -> Self {
+        Self::new(topo, ExchangeModel::Contention)
+    }
+
+    pub fn model(&self) -> ExchangeModel {
+        self.model
+    }
+
+    /// Isolated pair delivery time: `α_ij + β_ij · bytes` (no contention).
+    pub fn pair_time(&self, i: usize, j: usize, bytes: f64) -> f64 {
+        self.topo.alpha(i, j) + self.topo.beta(i, j) * bytes
+    }
+
+    /// Per-pair delivery times for a full exchange under the engine's
+    /// model. Zero-byte pairs cost 0 (no message sent).
+    pub fn pair_times(&self, bytes: &Mat) -> Mat {
+        let p = self.topo.p();
+        assert_eq!((bytes.rows(), bytes.cols()), (p, p), "byte matrix shape");
+        match self.model {
+            ExchangeModel::SlowestPair | ExchangeModel::PerSenderSerial => {
+                Mat::from_fn(p, p, |i, j| {
+                    let b = bytes.get(i, j);
+                    if b <= 0.0 {
+                        0.0
+                    } else {
+                        self.pair_time(i, j, b)
+                    }
+                })
+            }
+            ExchangeModel::Contention => self.contention_pair_times(bytes),
+        }
+    }
+
+    /// Completion time of the whole exchange under the engine's model.
+    pub fn exchange_time(&self, bytes: &Mat) -> f64 {
+        let times = self.pair_times(bytes);
+        match self.model {
+            ExchangeModel::SlowestPair | ExchangeModel::Contention => times.max().max(0.0),
+            ExchangeModel::PerSenderSerial => (0..times.rows())
+                .map(|i| times.row(i).iter().sum::<f64>())
+                .fold(0.0, f64::max),
+        }
+    }
+
+    /// Contention pricing: each flow crosses its link path with β inflated
+    /// by the number of concurrent flows using that (link, direction).
+    fn contention_pair_times(&self, bytes: &Mat) -> Mat {
+        let p = self.topo.p();
+        // flows per directed link
+        let mut load: HashMap<(usize, bool), usize> = HashMap::new();
+        for i in 0..p {
+            for j in 0..p {
+                if i == j || bytes.get(i, j) <= 0.0 {
+                    continue;
+                }
+                for dl in self.topo.path(i, j) {
+                    *load.entry((dl.edge, dl.up)).or_insert(0) += 1;
+                }
+            }
+        }
+        let links = self.topo.links();
+        Mat::from_fn(p, p, |i, j| {
+            let b = bytes.get(i, j);
+            if b <= 0.0 {
+                return 0.0;
+            }
+            if i == j {
+                return self.pair_time(i, i, b);
+            }
+            let mut alpha = 0.0;
+            let mut slow: f64 = 0.0;
+            for dl in self.topo.path(i, j) {
+                let flows = if self.topo.link_contended(dl.edge) {
+                    load[&(dl.edge, dl.up)] as f64
+                } else {
+                    1.0 // non-blocking point-to-point fabric
+                };
+                alpha += links[dl.edge].alpha;
+                slow = slow.max(links[dl.edge].beta * flows);
+            }
+            alpha + slow * b
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{presets, Link, Topology, TreeSpec};
+
+    fn tree22() -> Topology {
+        Topology::tree(
+            &TreeSpec::parse("[2,2]").unwrap(),
+            &[Link::from_gbps_us(45.0, 2.0), Link::from_gbps_us(23.0, 10.0)],
+            presets::local_copy(),
+        )
+    }
+
+    #[test]
+    fn slowest_pair_is_max_alpha_beta() {
+        let t = tree22();
+        let eng = CostEngine::slowest_pair(&t);
+        let bytes = Mat::filled(4, 4, 1e6);
+        let want = t.alpha(0, 2) + t.beta(0, 2) * 1e6;
+        assert!((eng.exchange_time(&bytes) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_bytes_cost_nothing() {
+        let t = tree22();
+        for eng in [
+            CostEngine::slowest_pair(&t),
+            CostEngine::per_sender(&t),
+            CostEngine::contention(&t),
+        ] {
+            assert_eq!(eng.exchange_time(&Mat::zeros(4, 4)), 0.0);
+        }
+    }
+
+    #[test]
+    fn per_sender_serialises_row() {
+        let t = tree22();
+        let eng = CostEngine::per_sender(&t);
+        let bytes = Mat::filled(4, 4, 1e6);
+        let row: f64 = (0..4).map(|j| eng.pair_time(0, j, 1e6)).sum();
+        assert!((eng.exchange_time(&bytes) - row).abs() / row < 1e-9);
+    }
+
+    #[test]
+    fn contention_inflates_shared_uplinks() {
+        let t = tree22();
+        let eng = CostEngine::contention(&t);
+        let full = Mat::filled(4, 4, 1e6);
+        let times = eng.pair_times(&full);
+        // cross-node flow shares the uplink with 3 other upward flows
+        let isolated = eng.pair_time(0, 2, 1e6) - t.alpha(0, 2);
+        let contended = times.get(0, 2) - t.alpha(0, 2);
+        let ratio = contended / isolated;
+        assert!((ratio - 4.0).abs() < 0.3, "ratio {ratio}");
+        // intra-node flow unaffected by the uplink congestion
+        let intra_iso = eng.pair_time(0, 1, 1e6);
+        assert!((times.get(0, 1) - intra_iso).abs() / intra_iso < 1e-6);
+    }
+
+    #[test]
+    fn removing_flows_reduces_contention() {
+        let t = tree22();
+        let eng = CostEngine::contention(&t);
+        let full = Mat::filled(4, 4, 1e6);
+        // only one cross-node flow: 0→2
+        let mut sparse = Mat::zeros(4, 4);
+        sparse.set(0, 2, 1e6);
+        let t_full = eng.pair_times(&full).get(0, 2);
+        let t_sparse = eng.pair_times(&sparse).get(0, 2);
+        assert!(t_sparse < t_full * 0.5);
+    }
+
+    #[test]
+    fn local_traffic_never_contends() {
+        let t = tree22();
+        let eng = CostEngine::contention(&t);
+        let full = Mat::filled(4, 4, 1e6);
+        let want = eng.pair_time(0, 0, 1e6);
+        assert!((eng.pair_times(&full).get(0, 0) - want).abs() < 1e-15);
+    }
+
+    #[test]
+    #[should_panic(expected = "byte matrix shape")]
+    fn shape_mismatch_panics() {
+        let t = tree22();
+        CostEngine::slowest_pair(&t).pair_times(&Mat::zeros(3, 3));
+    }
+}

@@ -1,0 +1,93 @@
+//! Table-1 style exchange profiling harness.
+//!
+//! Reproduces the paper's §3.3 motivation experiment: dispatch a fixed
+//! volume per rank under a given ratio matrix and report the per-pair
+//! delivery times of rank 0 plus two totals (slowest-pair completion and
+//! the per-sender serial total that corresponds to the paper's "All"
+//! column).
+
+use super::engine::CostEngine;
+use crate::topology::Topology;
+use crate::util::Mat;
+
+/// Result of profiling one dispatch pattern.
+#[derive(Clone, Debug)]
+pub struct ExchangeProfile {
+    /// Delivery time (s) of rank 0 to every destination, under contention.
+    pub rank0_times: Vec<f64>,
+    /// Ratio row of rank 0 that produced them.
+    pub rank0_ratios: Vec<f64>,
+    /// Completion time under the contention model (slowest flow).
+    pub completion: f64,
+    /// Sum of rank 0's delivery times — the serialised "All" column.
+    pub rank0_total: f64,
+}
+
+/// Profile an exchange where every rank sends `bytes_per_rank`, split
+/// according to `ratios` (P×P, rows must sum to 1).
+pub fn profile_exchange(topo: &Topology, bytes_per_rank: f64, ratios: &Mat) -> ExchangeProfile {
+    let p = topo.p();
+    assert_eq!((ratios.rows(), ratios.cols()), (p, p));
+    for i in 0..p {
+        let s = ratios.row_sum(i);
+        assert!((s - 1.0).abs() < 1e-6, "ratio row {i} sums to {s}");
+    }
+    let bytes = ratios.scale(bytes_per_rank);
+    let eng = CostEngine::contention(topo);
+    let times = eng.pair_times(&bytes);
+    let rank0_times: Vec<f64> = (0..p).map(|j| times.get(0, j)).collect();
+    ExchangeProfile {
+        rank0_total: rank0_times.iter().sum(),
+        rank0_times,
+        rank0_ratios: ratios.row(0).to_vec(),
+        completion: eng.exchange_time(&bytes),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::presets;
+
+    fn even(p: usize) -> Mat {
+        Mat::filled(p, p, 1.0 / p as f64)
+    }
+
+    #[test]
+    fn even_profile_on_table1_matches_paper_scale() {
+        // Paper Table 1 (even): 144 µs local, 758 µs intra, ~5.6 ms inter.
+        let topo = presets::table1();
+        let prof = profile_exchange(&topo, 128.0 * 1024.0 * 1024.0, &even(4));
+        let us: Vec<f64> = prof.rank0_times.iter().map(|t| t * 1e6).collect();
+        assert!((us[0] - 144.0).abs() < 40.0, "local {us:?}");
+        assert!((us[1] - 758.0).abs() < 200.0, "intra {us:?}");
+        assert!(us[2] > 4000.0 && us[2] < 7500.0, "inter {us:?}");
+    }
+
+    #[test]
+    fn uneven_improves_total() {
+        let topo = presets::table1();
+        let peer = [1usize, 0, 3, 2];
+        let uneven = Mat::from_fn(4, 4, |i, j| {
+            if i == j {
+                0.25
+            } else if j == peer[i] {
+                0.5
+            } else {
+                0.125
+            }
+        });
+        let b = 128.0 * 1024.0 * 1024.0;
+        let pe = profile_exchange(&topo, b, &even(4));
+        let pu = profile_exchange(&topo, b, &uneven);
+        assert!(pu.rank0_total < pe.rank0_total * 0.85);
+        assert!(pu.completion < pe.completion);
+    }
+
+    #[test]
+    #[should_panic(expected = "ratio row")]
+    fn rejects_nonstochastic_ratios() {
+        let topo = presets::table1();
+        profile_exchange(&topo, 1e6, &Mat::filled(4, 4, 0.3));
+    }
+}

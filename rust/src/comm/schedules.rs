@@ -1,0 +1,176 @@
+//! Round-based all-to-all schedules.
+//!
+//! The contention engine prices a fully-concurrent exchange; real
+//! collectives serialise the P×P deliveries into *rounds* so each device
+//! has one send and one receive in flight (NCCL's pairwise-exchange
+//! behaviour). Two classic schedules:
+//!
+//! * [`xor_schedule`] — for power-of-two P, round r pairs `i ↔ i ^ r`
+//!   (a perfect 1-factorisation of K_P);
+//! * [`rotation_schedule`] — for any P, round r sends `i → (i + r) % P`
+//!   (each device has exactly one send + one receive per round).
+//!
+//! [`scheduled_a2a_time`] prices an exchange as the sum of per-round
+//! completion times under the contention engine — rounds are separated by
+//! a synchronisation, so the slowest delivery of each round gates it.
+//! This sits between the optimistic slowest-pair bound (Eq. 2) and the
+//! fully-serial model, and is the default ablation comparator in
+//! `benches/ablation_design.rs`.
+
+use super::engine::CostEngine;
+use crate::topology::Topology;
+use crate::util::Mat;
+
+/// One round: disjoint (src, dst) pairs.
+pub type Round = Vec<(usize, usize)>;
+
+/// XOR pairwise-exchange schedule (P must be a power of two).
+/// Round r ∈ 1..P pairs i with i^r; self-traffic is round 0.
+pub fn xor_schedule(p: usize) -> Vec<Round> {
+    assert!(p.is_power_of_two(), "xor schedule needs power-of-two P");
+    let mut rounds = vec![vec![]; p];
+    for r in 0..p {
+        for i in 0..p {
+            rounds[r].push((i, i ^ r));
+        }
+    }
+    rounds
+}
+
+/// Rotation schedule: round r sends i → (i + r) mod P. Works for any P.
+pub fn rotation_schedule(p: usize) -> Vec<Round> {
+    (0..p)
+        .map(|r| (0..p).map(|i| (i, (i + r) % p)).collect())
+        .collect()
+}
+
+/// Validate that a schedule covers every (src, dst) pair exactly once and
+/// each round is a partial permutation (≤1 send and ≤1 receive per device).
+pub fn validate_schedule(p: usize, rounds: &[Round]) -> Result<(), String> {
+    let mut seen = vec![false; p * p];
+    for (r, round) in rounds.iter().enumerate() {
+        let mut sends = vec![false; p];
+        let mut recvs = vec![false; p];
+        for &(i, j) in round {
+            if i >= p || j >= p {
+                return Err(format!("round {r}: out-of-range pair ({i},{j})"));
+            }
+            if std::mem::replace(&mut seen[i * p + j], true) {
+                return Err(format!("pair ({i},{j}) scheduled twice"));
+            }
+            if std::mem::replace(&mut sends[i], true) {
+                return Err(format!("round {r}: device {i} sends twice"));
+            }
+            if std::mem::replace(&mut recvs[j], true) {
+                return Err(format!("round {r}: device {j} receives twice"));
+            }
+        }
+    }
+    if seen.iter().filter(|&&s| s).count() != p * p {
+        return Err("schedule does not cover all pairs".into());
+    }
+    Ok(())
+}
+
+/// Price an exchange under a round-based schedule: rounds run back to
+/// back, each gated by its slowest delivery (contention priced per round,
+/// so only that round's flows share links).
+pub fn scheduled_a2a_time(topo: &Topology, bytes: &Mat, rounds: &[Round]) -> f64 {
+    let p = topo.p();
+    assert_eq!((bytes.rows(), bytes.cols()), (p, p));
+    let eng = CostEngine::contention(topo);
+    let mut total = 0.0;
+    for round in rounds {
+        let mut round_bytes = Mat::zeros(p, p);
+        for &(i, j) in round {
+            round_bytes.set(i, j, bytes.get(i, j));
+        }
+        total += eng.exchange_time(&round_bytes);
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::presets;
+
+    #[test]
+    fn xor_schedule_is_valid() {
+        for p in [2usize, 4, 8, 16] {
+            let s = xor_schedule(p);
+            validate_schedule(p, &s).unwrap();
+            assert_eq!(s.len(), p);
+        }
+    }
+
+    #[test]
+    fn rotation_schedule_is_valid_any_p() {
+        for p in [2usize, 3, 5, 8, 12] {
+            let s = rotation_schedule(p);
+            validate_schedule(p, &s).unwrap();
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "power-of-two")]
+    fn xor_rejects_odd_p() {
+        xor_schedule(6);
+    }
+
+    #[test]
+    fn validate_catches_double_send() {
+        let bad = vec![vec![(0usize, 1usize), (0, 2)]];
+        assert!(validate_schedule(3, &bad).unwrap_err().contains("sends twice"));
+    }
+
+    #[test]
+    fn scheduled_between_bound_and_serial() {
+        let topo = presets::table1();
+        let bytes = Mat::filled(4, 4, 8e6);
+        let lb = CostEngine::slowest_pair(&topo).exchange_time(&bytes);
+        let serial = CostEngine::per_sender(&topo).exchange_time(&bytes);
+        let sched = scheduled_a2a_time(&topo, &bytes, &xor_schedule(4));
+        assert!(sched >= lb, "{sched} < lower bound {lb}");
+        assert!(sched <= serial * 4.0, "{sched} > serial envelope");
+    }
+
+    #[test]
+    fn schedule_reduces_contention_vs_concurrent() {
+        // With only one cross-node flow per round, the uplink is never
+        // shared, so per-delivery time matches the isolated pair time.
+        let topo = presets::table1();
+        let bytes = Mat::filled(4, 4, 32e6);
+        let conc = CostEngine::contention(&topo).pair_times(&bytes).get(0, 2);
+        let round: Round = vec![(0, 2), (1, 3)]; // wait: shares the uplink
+        let single: Round = vec![(0, 2)];
+        let eng = CostEngine::contention(&topo);
+        let mut rb = Mat::zeros(4, 4);
+        for &(i, j) in &single {
+            rb.set(i, j, bytes.get(i, j));
+        }
+        let t_single = eng.exchange_time(&rb);
+        let mut rb2 = Mat::zeros(4, 4);
+        for &(i, j) in &round {
+            rb2.set(i, j, bytes.get(i, j));
+        }
+        let t_pair = eng.exchange_time(&rb2);
+        assert!(t_single < conc, "isolated round must beat concurrent");
+        assert!(t_single <= t_pair);
+    }
+
+    #[test]
+    fn xor_groups_intra_node_rounds_first() {
+        // On [2,2], xor round 1 is entirely intra-node (i ^ 1 flips the
+        // low bit), round 2/3 cross nodes — the locality property that
+        // makes xor the natural hierarchical-friendly schedule.
+        let topo = presets::table1();
+        let s = xor_schedule(4);
+        for &(i, j) in &s[1] {
+            assert!(topo.same_node(i, j));
+        }
+        for &(i, j) in &s[2] {
+            assert!(!topo.same_node(i, j));
+        }
+    }
+}

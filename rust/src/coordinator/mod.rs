@@ -1,0 +1,17 @@
+//! Layer-3 coordinator: the paper's systems contribution in rust.
+//!
+//! * [`strategy`] — the MoE systems under comparison (DeepSpeed-MoE,
+//!   FastMoE, FasterMoE-Hir, TA-MoE) expressed as runtime inputs to the
+//!   one compiled model, plus their converged dispatch patterns for the
+//!   analytic sweeps.
+//! * [`cost`] — the simulated cluster clock: FLOP model + α-β all-to-all +
+//!   allreduce, priced on measured `c_ie`.
+//! * [`trainer`] — the step loop over the AOT-compiled cluster program.
+
+pub mod cost;
+pub mod strategy;
+pub mod trainer;
+
+pub use cost::{device_flops, step_cost, throughput, ModelShape, StepCost};
+pub use strategy::{converged_counts, Strategy, StrategyInputs};
+pub use trainer::{Trainer, TrainerOptions};

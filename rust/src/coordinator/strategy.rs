@@ -1,0 +1,319 @@
+//! Dispatch strategies: the systems the paper compares (§5 Methodology).
+//!
+//! A strategy decides the four runtime inputs of the compiled model —
+//! penalty matrix (which aux loss), capacity matrix, intra-node mask, and
+//! the Hir remote fraction — plus which all-to-all schedule its timing
+//! model uses. TA-MoE composes with either host system exactly as §4.3
+//! describes: on FastMoE it swaps the loss, on DeepSpeed-MoE it also makes
+//! the local capacities proportional to `ĉ`.
+
+use crate::dispatch::{
+    baseline_penalty_matrix, even_caps, proportional_caps, target_pattern,
+    topo_penalty_matrix, DispatchProblem, Norm, TargetPattern,
+};
+use crate::runtime::ModelCfg;
+use crate::topology::Topology;
+use crate::util::Mat;
+
+/// Which MoE system drives the gate/capacity inputs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Strategy {
+    /// DeepSpeed-MoE: even local capacities `C/P`, load-balance loss,
+    /// hierarchical all-to-all.
+    DeepSpeedEven,
+    /// FastMoE: global per-expert capacity with size exchange, load-balance
+    /// loss, direct all-to-all.
+    FastMoeEven,
+    /// FasterMoE's Hir gate: compulsory intra-node ratio (1 − remote_frac).
+    FasterMoeHir { remote_frac: f64 },
+    /// TA-MoE (this paper): topology-aware loss, and on local-capacity
+    /// hosts, `C_ie ∝ ĉ_ie`.
+    TaMoe { norm: Norm },
+}
+
+impl Strategy {
+    pub fn name(&self) -> String {
+        match self {
+            Strategy::DeepSpeedEven => "deepspeed".into(),
+            Strategy::FastMoeEven => "fastmoe".into(),
+            Strategy::FasterMoeHir { remote_frac } => format!("fastermoe-hir{remote_frac}"),
+            Strategy::TaMoe { norm: Norm::L1 } => "ta-moe".into(),
+            Strategy::TaMoe { norm: Norm::Softmax { temp } } => format!("ta-moe-sm{temp}"),
+        }
+    }
+
+    /// Parse a CLI/config name: `deepspeed|fastmoe|fastermoe[:frac]|ta-moe[:softmax[:temp]]`.
+    pub fn parse(s: &str) -> Result<Strategy, String> {
+        let parts: Vec<&str> = s.split(':').collect();
+        match parts[0] {
+            "deepspeed" | "deepspeed-moe" => Ok(Strategy::DeepSpeedEven),
+            "fastmoe" => Ok(Strategy::FastMoeEven),
+            "fastermoe" | "fastermoe-hir" | "hir" => {
+                let frac = parts
+                    .get(1)
+                    .map(|p| p.parse::<f64>().map_err(|e| e.to_string()))
+                    .transpose()?
+                    .unwrap_or(0.25);
+                Ok(Strategy::FasterMoeHir { remote_frac: frac })
+            }
+            "ta-moe" | "tamoe" => {
+                if parts.get(1) == Some(&"softmax") {
+                    let temp = parts
+                        .get(2)
+                        .map(|p| p.parse::<f64>().map_err(|e| e.to_string()))
+                        .transpose()?
+                        .unwrap_or(2.0);
+                    Ok(Strategy::TaMoe { norm: Norm::Softmax { temp } })
+                } else {
+                    Ok(Strategy::TaMoe { norm: Norm::L1 })
+                }
+            }
+            other => Err(format!(
+                "unknown strategy {other:?} (deepspeed|fastmoe|fastermoe[:frac]|ta-moe)"
+            )),
+        }
+    }
+
+    /// Does this strategy use the topology-aware loss?
+    pub fn is_topology_aware(&self) -> bool {
+        matches!(self, Strategy::TaMoe { .. })
+    }
+
+    /// Does its timing model use the hierarchical all-to-all?
+    pub fn hierarchical_a2a(&self) -> bool {
+        matches!(self, Strategy::DeepSpeedEven)
+    }
+
+    /// The Eq. 7 target pattern this strategy steers toward (TA-MoE only).
+    pub fn target(&self, topo: &Topology, cfg: &ModelCfg) -> Option<TargetPattern> {
+        if !self.is_topology_aware() {
+            return None;
+        }
+        let prob = DispatchProblem {
+            k: cfg.k,
+            s: cfg.tokens_per_dev,
+            e_per_dev: cfg.e_per_dev,
+            elem_bytes: cfg.token_bytes(),
+        };
+        Some(target_pattern(topo, &prob))
+    }
+
+    /// Build the model's runtime inputs for this strategy on a topology.
+    pub fn runtime_inputs(&self, topo: &Topology, cfg: &ModelCfg) -> StrategyInputs {
+        assert_eq!(topo.p(), cfg.p, "topology/model world-size mismatch");
+        let p = cfg.p;
+        let n = cfg.n_experts;
+        let local_mask = topo.local_mask(n, cfg.e_per_dev);
+        match self {
+            Strategy::DeepSpeedEven | Strategy::FastMoeEven => StrategyInputs {
+                penalty: baseline_penalty_matrix(p, n),
+                caps: even_caps(p, n, cfg.capacity),
+                local_mask,
+                hir_remote_frac: 1.0, // unused by switch/gshard gates
+                target: None,
+            },
+            Strategy::FasterMoeHir { remote_frac } => StrategyInputs {
+                penalty: baseline_penalty_matrix(p, n),
+                caps: even_caps(p, n, cfg.capacity),
+                local_mask,
+                hir_remote_frac: *remote_frac as f32,
+                target: None,
+            },
+            Strategy::TaMoe { norm } => {
+                let tp = self.target(topo, cfg).expect("ta-moe target");
+                let caps = if cfg.dispatch == "local" {
+                    // §4.3: local capacities proportional to ĉ
+                    proportional_caps(&tp.c, cfg.capacity)
+                } else {
+                    // FastMoE host: capacity untouched, only the loss changes
+                    even_caps(p, n, cfg.capacity)
+                };
+                StrategyInputs {
+                    penalty: topo_penalty_matrix(&tp.c, *norm),
+                    caps,
+                    local_mask,
+                    hir_remote_frac: 1.0,
+                    target: Some(tp),
+                }
+            }
+        }
+    }
+}
+
+/// The four runtime input matrices/scalars + the target (if any).
+#[derive(Clone, Debug)]
+pub struct StrategyInputs {
+    pub penalty: Mat,
+    pub caps: Mat,
+    pub local_mask: Mat,
+    pub hir_remote_frac: f32,
+    pub target: Option<TargetPattern>,
+}
+
+/// The dispatch pattern a strategy converges to, used by the analytic
+/// throughput model (fig4/fig6a/fig8) — validated against real training
+/// in the fig3/fig7 runs:
+///
+/// * even strategies: the load-balance loss drives `c → k·S/N` uniform;
+/// * TA-MoE: the topology loss drives `c → ĉ`;
+/// * Hir: top-1 preference is ~uniform, but at most `remote_frac·S` tokens
+///   leave the node; the remainder is folded back onto intra-node experts.
+pub fn converged_counts(strategy: &Strategy, topo: &Topology, cfg: &ModelCfg) -> Mat {
+    let p = cfg.p;
+    let n = cfg.n_experts;
+    let ks = (cfg.k * cfg.tokens_per_dev) as f64;
+    match strategy {
+        Strategy::DeepSpeedEven | Strategy::FastMoeEven => Mat::filled(p, n, ks / n as f64),
+        Strategy::TaMoe { .. } => strategy.target(topo, cfg).expect("target").c,
+        Strategy::FasterMoeHir { remote_frac } => {
+            let mut m = Mat::zeros(p, n);
+            for i in 0..p {
+                let local: Vec<usize> = (0..n)
+                    .filter(|&e| topo.same_node(i, e / cfg.e_per_dev))
+                    .collect();
+                let remote: Vec<usize> = (0..n)
+                    .filter(|&e| !topo.same_node(i, e / cfg.e_per_dev))
+                    .collect();
+                if remote.is_empty() {
+                    for &e in &local {
+                        m.set(i, e, ks / local.len() as f64);
+                    }
+                    continue;
+                }
+                // uniform preference sends |remote|/n of the tokens out,
+                // clipped at the compulsory budget
+                let want_remote = ks * remote.len() as f64 / n as f64;
+                let remote_total = want_remote.min(ks * remote_frac);
+                let local_total = ks - remote_total;
+                for &e in &remote {
+                    m.set(i, e, remote_total / remote.len() as f64);
+                }
+                for &e in &local {
+                    m.set(i, e, local_total / local.len() as f64);
+                }
+            }
+            m
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::presets;
+
+    fn cfg(p: usize, dispatch: &str) -> ModelCfg {
+        ModelCfg {
+            p,
+            e_per_dev: 1,
+            layers: 4,
+            d: 128,
+            f: 256,
+            heads: 4,
+            vocab: 256,
+            batch: 2,
+            seq: 32,
+            k: 1,
+            cap_factor: 1.25,
+            gate: "switch".into(),
+            dispatch: dispatch.into(),
+            n_experts: p,
+            capacity: 80,
+            tokens_per_dev: 64,
+            moe_layer_ids: vec![1, 3],
+        }
+    }
+
+    #[test]
+    fn parse_round_trips() {
+        assert_eq!(Strategy::parse("deepspeed").unwrap(), Strategy::DeepSpeedEven);
+        assert_eq!(Strategy::parse("fastmoe").unwrap(), Strategy::FastMoeEven);
+        assert_eq!(
+            Strategy::parse("fastermoe:0.3").unwrap(),
+            Strategy::FasterMoeHir { remote_frac: 0.3 }
+        );
+        assert_eq!(
+            Strategy::parse("ta-moe").unwrap(),
+            Strategy::TaMoe { norm: Norm::L1 }
+        );
+        assert!(matches!(
+            Strategy::parse("ta-moe:softmax:3").unwrap(),
+            Strategy::TaMoe { norm: Norm::Softmax { .. } }
+        ));
+        assert!(Strategy::parse("whatever").is_err());
+    }
+
+    #[test]
+    fn baseline_inputs_are_even() {
+        let topo = presets::cluster_b(2);
+        let c = cfg(16, "global");
+        let si = Strategy::FastMoeEven.runtime_inputs(&topo, &c);
+        assert_eq!(si.penalty.get(0, 0), 16.0);
+        assert!((si.caps.get(0, 0) - 5.0).abs() < 1e-9); // 80/16
+        assert!(si.target.is_none());
+    }
+
+    #[test]
+    fn tamoe_local_caps_are_proportional() {
+        let topo = presets::cluster_b(2);
+        let c = cfg(16, "local");
+        let si = Strategy::TaMoe { norm: Norm::L1 }.runtime_inputs(&topo, &c);
+        let tp = si.target.as_ref().unwrap();
+        // same-node expert gets more capacity than cross-node
+        assert!(si.caps.get(0, 1) > si.caps.get(0, 8));
+        // caps sum to capacity per expert
+        for e in 0..16 {
+            assert_eq!(si.caps.col_sum(e) as usize, c.capacity);
+        }
+        // penalty is anti-monotone in the target
+        assert!(tp.c.get(0, 1) > tp.c.get(0, 8));
+        assert!(si.penalty.get(0, 1) < si.penalty.get(0, 8));
+    }
+
+    #[test]
+    fn converged_counts_conserve_tokens() {
+        let topo = presets::cluster_c(2);
+        let c = cfg(16, "global");
+        for s in [
+            Strategy::DeepSpeedEven,
+            Strategy::FastMoeEven,
+            Strategy::FasterMoeHir { remote_frac: 0.2 },
+            Strategy::TaMoe { norm: Norm::L1 },
+        ] {
+            let m = converged_counts(&s, &topo, &c);
+            for i in 0..16 {
+                assert!(
+                    (m.row_sum(i) - 64.0).abs() < 1e-6,
+                    "{} row {i}: {}",
+                    s.name(),
+                    m.row_sum(i)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn hir_counts_respect_budget() {
+        let topo = presets::cluster_b(2);
+        let c = cfg(16, "global");
+        let frac = 0.25;
+        let m = converged_counts(&Strategy::FasterMoeHir { remote_frac: frac }, &topo, &c);
+        for i in 0..16 {
+            let remote: f64 = (0..16)
+                .filter(|&e| !topo.same_node(i, e))
+                .map(|e| m.get(i, e))
+                .sum();
+            assert!(remote <= 64.0 * frac + 1e-9);
+        }
+    }
+
+    #[test]
+    fn hir_single_node_goes_fully_local() {
+        let topo = presets::cluster_b(1);
+        let c = cfg(8, "global");
+        let m = converged_counts(&Strategy::FasterMoeHir { remote_frac: 0.2 }, &topo, &c);
+        for i in 0..8 {
+            assert!((m.row_sum(i) - 64.0).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,240 @@
+//! The training orchestrator: drives the compiled cluster-step program.
+//!
+//! One [`Trainer`] owns the PJRT runtime, the artifact (init/step/eval
+//! executables + manifest), the topology, and a [`Strategy`]. Per step it
+//! feeds the model state + batch + the strategy's runtime matrices into
+//! the compiled step, reads back the new state and the gate statistics
+//! `c_ie`, and charges the step to the simulated cluster clock via
+//! [`super::cost::step_cost`] using the *measured* dispatch counts — the
+//! simulated time axis therefore reflects what the gate actually learned,
+//! not what the strategy hoped for.
+
+use super::cost::{step_cost, ModelShape};
+use super::strategy::{Strategy, StrategyInputs};
+use crate::metrics::{RunLog, StepRecord};
+use crate::runtime::{Artifact, HostTensor, Runtime};
+use crate::topology::Topology;
+use crate::util::Mat;
+use anyhow::{Context, Result};
+use std::path::Path;
+use std::time::Instant;
+
+/// Options for constructing a [`Trainer`].
+#[derive(Clone, Debug)]
+pub struct TrainerOptions {
+    pub lr: f32,
+    pub seed: i32,
+    /// Effective device FLOP/s for the simulated clock.
+    pub flops_per_dev: f64,
+}
+
+impl Default for TrainerOptions {
+    fn default() -> Self {
+        TrainerOptions { lr: 1e-3, seed: 0, flops_per_dev: 45e12 }
+    }
+}
+
+/// Orchestrates training of one compiled artifact under one strategy.
+pub struct Trainer {
+    #[allow(dead_code)]
+    runtime: Runtime,
+    artifact: Artifact,
+    topo: Topology,
+    strategy: Strategy,
+    inputs: StrategyInputs,
+    input_lits: Vec<xla::Literal>, // penalty, caps, local_mask, hir_frac
+    /// params ++ m ++ v as literals (kept as XLA literals between steps).
+    state: Vec<xla::Literal>,
+    t: f32,
+    lr: f32,
+    shape: ModelShape,
+    flops_per_dev: f64,
+    log: RunLog,
+    last_counts: Option<Mat>,
+}
+
+impl Trainer {
+    /// Load an artifact directory and initialise model state from `seed`.
+    pub fn new(
+        artifact_dir: &Path,
+        topo: Topology,
+        strategy: Strategy,
+        opts: TrainerOptions,
+    ) -> Result<Trainer> {
+        let runtime = Runtime::cpu()?;
+        let artifact = runtime.load_artifact(artifact_dir)?;
+        let cfg = &artifact.manifest.config;
+        anyhow::ensure!(
+            topo.p() == cfg.p,
+            "topology has {} devices, artifact {} wants {}",
+            topo.p(),
+            artifact.manifest.name,
+            cfg.p
+        );
+
+        let inputs = strategy.runtime_inputs(&topo, cfg);
+        let input_lits = vec![
+            HostTensor::from_mat(&inputs.penalty).to_literal()?,
+            HostTensor::from_mat(&inputs.caps).to_literal()?,
+            HostTensor::from_mat(&inputs.local_mask).to_literal()?,
+            HostTensor::scalar_f32(inputs.hir_remote_frac).to_literal()?,
+        ];
+
+        // init: seed → params; optimizer state starts at zero.
+        let seed_lit = HostTensor::scalar_i32(opts.seed).to_literal()?;
+        let params = artifact
+            .init
+            .run(&[seed_lit])
+            .context("running init program")?;
+        let mut state = params;
+        for desc in artifact.manifest.params.iter().chain(&artifact.manifest.params) {
+            state.push(HostTensor::f32(vec![0.0; desc.numel()], &desc.shape).to_literal()?);
+        }
+
+        let shape = ModelShape::from_cfg(cfg);
+        let tokens_per_step = cfg.p * cfg.tokens_per_dev;
+        let label = format!("{}/{}", artifact.manifest.name, strategy.name());
+        Ok(Trainer {
+            runtime,
+            artifact,
+            topo,
+            strategy,
+            inputs,
+            input_lits,
+            state,
+            t: 0.0,
+            lr: opts.lr,
+            shape,
+            flops_per_dev: opts.flops_per_dev,
+            log: RunLog::new(&label, tokens_per_step),
+            last_counts: None,
+        })
+    }
+
+    pub fn manifest(&self) -> &crate::runtime::Manifest {
+        &self.artifact.manifest
+    }
+
+    pub fn strategy(&self) -> &Strategy {
+        &self.strategy
+    }
+
+    pub fn strategy_inputs(&self) -> &StrategyInputs {
+        &self.inputs
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    pub fn log(&self) -> &RunLog {
+        &self.log
+    }
+
+    pub fn log_mut(&mut self) -> &mut RunLog {
+        &mut self.log
+    }
+
+    /// Mean per-MoE-layer dispatch counts of the most recent step.
+    pub fn last_counts(&self) -> Option<&Mat> {
+        self.last_counts.as_ref()
+    }
+
+    fn batch_literals(&self, tokens: &[i32], targets: &[i32]) -> Result<(xla::Literal, xla::Literal)> {
+        let cfg = &self.artifact.manifest.config;
+        let shape = [cfg.p, cfg.batch, cfg.seq];
+        Ok((
+            HostTensor::i32(tokens.to_vec(), &shape).to_literal()?,
+            HostTensor::i32(targets.to_vec(), &shape).to_literal()?,
+        ))
+    }
+
+    /// Run one training step; returns the step's record (also logged).
+    pub fn train_step(&mut self, tokens: &[i32], targets: &[i32]) -> Result<StepRecord> {
+        let n = self.artifact.manifest.n_param_tensors;
+        let (tok_lit, tgt_lit) = self.batch_literals(tokens, targets)?;
+        let t_lit = HostTensor::scalar_f32(self.t).to_literal()?;
+        let lr_lit = HostTensor::scalar_f32(self.lr).to_literal()?;
+
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(3 * n + 8);
+        args.extend(self.state.iter());
+        args.push(&t_lit);
+        args.push(&lr_lit);
+        args.push(&tok_lit);
+        args.push(&tgt_lit);
+        for lit in &self.input_lits {
+            args.push(lit);
+        }
+
+        let wall0 = Instant::now();
+        let mut outs = self.artifact.step.run(&args)?;
+        let wall_s = wall0.elapsed().as_secs_f64();
+
+        // split outputs: 3n state, then t, loss, ce, aux, counts, dropped
+        let tail = outs.split_off(3 * n);
+        self.state = outs;
+        let cfg = &self.artifact.manifest.config;
+        let scalars: Vec<f64> = [0usize, 1, 2, 3, 5]
+            .iter()
+            .map(|&i| {
+                HostTensor::from_literal(&tail[i], &[], crate::runtime::DType::F32)
+                    .map(|t| t.item())
+            })
+            .collect::<Result<_>>()?;
+        let counts = HostTensor::from_literal(
+            &tail[4],
+            &[cfg.p, cfg.n_experts],
+            crate::runtime::DType::F32,
+        )?
+        .to_mat()?;
+        self.t = scalars[0] as f32;
+
+        let cost = step_cost(
+            &self.shape,
+            &self.topo,
+            &counts,
+            cfg.e_per_dev,
+            self.flops_per_dev,
+            self.strategy.hierarchical_a2a(),
+        );
+        let record = StepRecord {
+            step: self.log.records.len(),
+            loss: scalars[1],
+            ce: scalars[2],
+            aux: scalars[3],
+            dropped: scalars[4],
+            sim_comm_s: cost.a2a_s + cost.allreduce_s,
+            sim_compute_s: cost.compute_s,
+            wall_s,
+        };
+        self.last_counts = Some(counts);
+        self.log.push(record.clone());
+        Ok(record)
+    }
+
+    /// Validation pass on a held-out batch; logs (step, loss) and returns
+    /// (ce_loss, counts).
+    pub fn eval(&mut self, tokens: &[i32], targets: &[i32]) -> Result<(f64, Mat)> {
+        let n = self.artifact.manifest.n_param_tensors;
+        let (tok_lit, tgt_lit) = self.batch_literals(tokens, targets)?;
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(n + 6);
+        args.extend(self.state.iter().take(n));
+        args.push(&tok_lit);
+        args.push(&tgt_lit);
+        for lit in &self.input_lits {
+            args.push(lit);
+        }
+        let outs = self.artifact.eval.run(&args)?;
+        let cfg = &self.artifact.manifest.config;
+        let ce = HostTensor::from_literal(&outs[1], &[], crate::runtime::DType::F32)?.item();
+        let counts = HostTensor::from_literal(
+            &outs[3],
+            &[cfg.p, cfg.n_experts],
+            crate::runtime::DType::F32,
+        )?
+        .to_mat()?;
+        let step = self.log.records.len().saturating_sub(1);
+        self.log.push_eval(step, ce);
+        Ok((ce, counts))
+    }
+}

@@ -1,0 +1,248 @@
+//! Data pipeline: tokenizer, corpora, shard-aware batching.
+//!
+//! The paper trains on openwebtext2; this image has no internet, so the
+//! pipeline offers (DESIGN.md §2 substitution table):
+//!
+//! * [`SyntheticCorpus`] — a deterministic Zipf-distributed word stream
+//!   with Markov bigram structure. It has real learnable statistics (so
+//!   loss curves fall and baselines can be compared on identical data)
+//!   while being generable at any size from a seed.
+//! * [`builtin_text`] — a small embedded natural-language corpus used by
+//!   the quickstart and tests.
+//!
+//! Tokenization is byte-level (`vocab = 256`, matching the compiled
+//! models' embedding table), so any UTF-8 text works without a trained
+//! tokenizer artifact. [`Batcher`] cuts the token stream into the
+//! `[P, B, T]` device-sharded batches the compiled step consumes, with
+//! next-byte targets.
+
+use crate::util::rng::Rng;
+
+/// Byte-level tokenizer: text ↔ i32 token ids in [0, 256).
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub const VOCAB: usize = 256;
+
+    pub fn encode(text: &str) -> Vec<i32> {
+        text.as_bytes().iter().map(|&b| b as i32).collect()
+    }
+
+    pub fn decode(tokens: &[i32]) -> String {
+        let bytes: Vec<u8> = tokens
+            .iter()
+            .map(|&t| u8::try_from(t.clamp(0, 255)).unwrap())
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+/// A deterministic synthetic corpus: Zipf-weighted vocabulary with bigram
+/// (Markov) transitions, emitted as space-separated "words" over a small
+/// alphabet. Statistics are stable in the seed, so two training runs on
+/// the same seed see byte-identical data.
+pub struct SyntheticCorpus {
+    words: Vec<String>,
+    /// transition weights between word ids (row-stochastic up to scale)
+    trans: Vec<Vec<f64>>,
+    rng: Rng,
+    cur: usize,
+    pending: Vec<i32>,
+}
+
+impl SyntheticCorpus {
+    pub fn new(seed: u64) -> SyntheticCorpus {
+        let mut rng = Rng::seed_from_u64(seed);
+        let n_words = 64;
+        // word shapes: 2–7 lowercase letters
+        let mut words = Vec::with_capacity(n_words);
+        for _ in 0..n_words {
+            let len = rng.range(2, 8);
+            let w: String = (0..len)
+                .map(|_| (b'a' + rng.below(26) as u8) as char)
+                .collect();
+            words.push(w);
+        }
+        // Zipf base weights modulated by a random bigram affinity
+        let trans: Vec<Vec<f64>> = (0..n_words)
+            .map(|_| {
+                (0..n_words)
+                    .map(|j| (1.0 / (j + 1) as f64) * (0.25 + rng.f64()))
+                    .collect()
+            })
+            .collect();
+        SyntheticCorpus { words, trans, rng, cur: 0, pending: Vec::new() }
+    }
+
+    /// Next `n` byte-level tokens.
+    pub fn tokens(&mut self, n: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(n);
+        while out.len() < n {
+            if self.pending.is_empty() {
+                let next = self.rng.weighted(&self.trans[self.cur]);
+                self.cur = next;
+                let mut chunk = ByteTokenizer::encode(&self.words[next]);
+                chunk.push(b' ' as i32);
+                // occasional sentence structure
+                if self.rng.below(12) == 0 {
+                    chunk.pop();
+                    chunk.extend(ByteTokenizer::encode(". "));
+                }
+                self.pending = chunk;
+                self.pending.reverse(); // pop from the back
+            }
+            out.push(self.pending.pop().unwrap());
+        }
+        out
+    }
+}
+
+/// A small embedded natural-language corpus (public-domain-style prose
+/// written for this repo) for quickstarts and tests.
+pub fn builtin_text() -> &'static str {
+    concat!(
+        "the network carries what the gate decides and the gate learns what ",
+        "the network rewards. every expert waits at the end of a wire, and ",
+        "every wire has a width. when the tokens crowd the narrow links the ",
+        "whole machine slows to the pace of its weakest switch. so the loss ",
+        "bends the routes toward the near and the wide, and the far experts ",
+        "still see enough of the world to stay sharp. balance is not the ",
+        "same as sameness: a fair schedule sends more where the road is ",
+        "fast and less where the road is thin, and the model never notices ",
+        "the difference because the difference was never about meaning. ",
+        "topology is destiny for a packet. the scheduler reads the shape of ",
+        "the cluster the way a river reads the valley, and the training run ",
+        "flows downhill through the switches, filling the buffers it was ",
+        "promised, dropping almost nothing, converging all the same. "
+    )
+}
+
+/// Cuts a token stream into `[P, B, T]` sharded batches with next-byte
+/// targets. Deterministic; wraps around the stream.
+pub struct Batcher {
+    stream: Vec<i32>,
+    pos: usize,
+    p: usize,
+    b: usize,
+    t: usize,
+}
+
+impl Batcher {
+    pub fn new(stream: Vec<i32>, p: usize, b: usize, t: usize) -> Batcher {
+        assert!(stream.len() > p * b * (t + 1), "stream too short for one batch");
+        Batcher { stream, pos: 0, p, b, t }
+    }
+
+    pub fn from_text(text: &str, p: usize, b: usize, t: usize) -> Batcher {
+        // tile short texts so at least a few batches exist
+        let mut toks = ByteTokenizer::encode(text);
+        let need = p * b * (t + 1) * 8;
+        while toks.len() < need {
+            let again = toks.clone();
+            toks.extend(again);
+        }
+        Batcher::new(toks, p, b, t)
+    }
+
+    /// Tokens each device contributes per batch (S in the paper).
+    pub fn tokens_per_dev(&self) -> usize {
+        self.b * self.t
+    }
+
+    /// Next `(tokens, targets)`, both `[P, B, T]` row-major i32.
+    pub fn next_batch(&mut self) -> (Vec<i32>, Vec<i32>) {
+        let total = self.p * self.b;
+        let mut tokens = Vec::with_capacity(total * self.t);
+        let mut targets = Vec::with_capacity(total * self.t);
+        for _ in 0..total {
+            if self.pos + self.t + 1 >= self.stream.len() {
+                self.pos = 0;
+            }
+            let seq = &self.stream[self.pos..self.pos + self.t + 1];
+            tokens.extend_from_slice(&seq[..self.t]);
+            targets.extend_from_slice(&seq[1..]);
+            self.pos += self.t;
+        }
+        (tokens, targets)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokenizer_round_trips_ascii() {
+        let s = "hello, MoE! 123";
+        assert_eq!(ByteTokenizer::decode(&ByteTokenizer::encode(s)), s);
+    }
+
+    #[test]
+    fn tokens_in_vocab_range() {
+        let mut c = SyntheticCorpus::new(0);
+        for t in c.tokens(5_000) {
+            assert!((0..256).contains(&t));
+        }
+    }
+
+    #[test]
+    fn synthetic_corpus_deterministic() {
+        let mut a = SyntheticCorpus::new(9);
+        let mut b = SyntheticCorpus::new(9);
+        assert_eq!(a.tokens(1000), b.tokens(1000));
+        let mut c = SyntheticCorpus::new(10);
+        assert_ne!(a.tokens(1000), c.tokens(1000));
+    }
+
+    #[test]
+    fn synthetic_corpus_has_skewed_unigrams() {
+        // Zipf weights ⇒ some words far more frequent than others.
+        let mut c = SyntheticCorpus::new(1);
+        let toks = c.tokens(30_000);
+        let text = ByteTokenizer::decode(&toks);
+        let mut counts = std::collections::HashMap::new();
+        for w in text.split_whitespace() {
+            *counts.entry(w.trim_end_matches('.')).or_insert(0usize) += 1;
+        }
+        let max = *counts.values().max().unwrap();
+        let min = *counts.values().min().unwrap();
+        assert!(max > min * 5, "max {max} min {min}");
+    }
+
+    #[test]
+    fn batcher_targets_are_shifted_tokens() {
+        let stream: Vec<i32> = (0..1000).map(|i| i % 256).collect();
+        let mut b = Batcher::new(stream, 2, 1, 8);
+        let (tok, tgt) = b.next_batch();
+        assert_eq!(tok.len(), 2 * 8);
+        assert_eq!(tgt.len(), 2 * 8);
+        // within each sequence the target is the next token
+        for s in 0..2 {
+            for i in 0..7 {
+                assert_eq!(tgt[s * 8 + i], tok[s * 8 + i + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn batcher_wraps_around() {
+        let stream: Vec<i32> = (0..200).map(|i| i % 256).collect();
+        let mut b = Batcher::new(stream, 2, 2, 8);
+        for _ in 0..100 {
+            let (tok, _) = b.next_batch();
+            assert_eq!(tok.len(), 2 * 2 * 8);
+        }
+    }
+
+    #[test]
+    fn from_text_tiles_short_text() {
+        let b = Batcher::from_text("tiny", 4, 2, 16);
+        assert!(b.stream.len() >= 4 * 2 * 17 * 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "stream too short")]
+    fn too_short_stream_panics() {
+        Batcher::new(vec![1, 2, 3], 2, 2, 8);
+    }
+}

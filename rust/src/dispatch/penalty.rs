@@ -1,0 +1,195 @@
+//! Eq. 8: penalty weights and the runtime matrices fed to the model.
+//!
+//! The topology loss of §4.3 is
+//! `l_topo^i = N·P·Σ_e p_ie · m_ie · c_ie/S` with `p_i = Norm(1/ĉ_i)`.
+//! The compiled model (python/compile/model.py) evaluates the *unified*
+//! loss `Σ_e penalty_ie · m_ie · c_ie/S`, so this module produces the
+//! penalty matrix for each strategy:
+//!
+//! * baseline (Eq. 1 load-balance): `penalty_ie = N` — the GShard/Switch
+//!   auxiliary loss;
+//! * TA-MoE (Eq. 8): `penalty_ie = N·P·p_ie`.
+//!
+//! It also produces the capacity matrices `C_ie`: even `C/P` slices
+//! (DeepSpeed-MoE) or proportional to `ĉ_ie` (TA-MoE on DeepSpeed-MoE,
+//! §4.3 "one can modify the local capacity sizes to be consistent with the
+//! proposed dispatch pattern").
+
+use crate::util::Mat;
+
+/// Normalisation for `p_i = Norm(1/ĉ_i)` (Eq. 8). The paper uses plain
+/// normalisation and notes softmax-like variants "that enlarge the penalty
+/// of the low-bandwidth transfer are also preferable".
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Norm {
+    /// p_ie = (1/ĉ_ie) / Σ_e (1/ĉ_ie)
+    L1,
+    /// p_ie = softmax(temp · z_ie) with z the L1-normalised 1/ĉ row —
+    /// sharper penalties on the slowest links.
+    Softmax { temp: f64 },
+}
+
+/// Per-row penalty weights `p_i = Norm(1/ĉ_i)`, rows summing to 1.
+pub fn penalty_weights(target: &Mat, norm: Norm) -> Mat {
+    let (p, n) = (target.rows(), target.cols());
+    let mut w = Mat::zeros(p, n);
+    for i in 0..p {
+        let inv: Vec<f64> = target.row(i).iter().map(|&c| 1.0 / c.max(1e-12)).collect();
+        let s: f64 = inv.iter().sum();
+        let z: Vec<f64> = inv.iter().map(|v| v / s).collect();
+        match norm {
+            Norm::L1 => {
+                for (e, v) in z.iter().enumerate() {
+                    w.set(i, e, *v);
+                }
+            }
+            Norm::Softmax { temp } => {
+                let mx = z.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                let ex: Vec<f64> = z.iter().map(|v| ((v - mx) * temp * n as f64).exp()).collect();
+                let es: f64 = ex.iter().sum();
+                for (e, v) in ex.iter().enumerate() {
+                    w.set(i, e, v / es);
+                }
+            }
+        }
+    }
+    w
+}
+
+/// TA-MoE penalty matrix: `N·P·p_ie` (Eq. 8's magnitude-preserving scale).
+pub fn topo_penalty_matrix(target: &Mat, norm: Norm) -> Mat {
+    let (p, n) = (target.rows(), target.cols());
+    penalty_weights(target, norm).scale(n as f64 * p as f64)
+}
+
+/// Baseline load-balance penalty (Eq. 1): a constant `N`.
+pub fn baseline_penalty_matrix(p: usize, n: usize) -> Mat {
+    Mat::filled(p, n, n as f64)
+}
+
+/// DeepSpeed-MoE even local capacities: `C_ie = C/P`.
+pub fn even_caps(p: usize, n: usize, capacity: usize) -> Mat {
+    Mat::filled(p, n, capacity as f64 / p as f64)
+}
+
+/// TA-MoE local capacities proportional to the target pattern, scaled so
+/// every expert's total capacity is exactly `capacity` slots (floored to
+/// integers, remainder given to the largest shares).
+pub fn proportional_caps(target: &Mat, capacity: usize) -> Mat {
+    let (p, n) = (target.rows(), target.cols());
+    let mut caps = Mat::zeros(p, n);
+    for e in 0..n {
+        let col_sum = target.col_sum(e).max(1e-12);
+        // largest-remainder rounding of capacity · ĉ_ie / Σ_i ĉ_ie
+        let shares: Vec<f64> = (0..p)
+            .map(|i| capacity as f64 * target.get(i, e) / col_sum)
+            .collect();
+        let mut floors: Vec<usize> = shares.iter().map(|&s| s.floor() as usize).collect();
+        let mut used: usize = floors.iter().sum();
+        let mut order: Vec<usize> = (0..p).collect();
+        order.sort_by(|&a, &b| {
+            (shares[b] - shares[b].floor())
+                .partial_cmp(&(shares[a] - shares[a].floor()))
+                .unwrap()
+        });
+        let mut oi = 0;
+        while used < capacity {
+            floors[order[oi % p]] += 1;
+            used += 1;
+            oi += 1;
+        }
+        for i in 0..p {
+            caps.set(i, e, floors[i] as f64);
+        }
+    }
+    caps
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn skewed_target() -> Mat {
+        // device 0 should send a lot to expert 0 (fast) and little to 3
+        Mat::from_vec(
+            2,
+            4,
+            vec![
+                8.0, 4.0, 2.0, 2.0, //
+                2.0, 2.0, 4.0, 8.0,
+            ],
+        )
+    }
+
+    #[test]
+    fn weights_are_normalised_and_inverse_ordered() {
+        let w = penalty_weights(&skewed_target(), Norm::L1);
+        for i in 0..2 {
+            let s: f64 = w.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-12);
+        }
+        // larger target ⇒ smaller penalty
+        assert!(w.get(0, 0) < w.get(0, 3));
+        assert!(w.get(1, 3) < w.get(1, 0));
+    }
+
+    #[test]
+    fn softmax_sharpens_the_penalty() {
+        let t = skewed_target();
+        let l1 = penalty_weights(&t, Norm::L1);
+        let sm = penalty_weights(&t, Norm::Softmax { temp: 4.0 });
+        // softmax puts relatively more mass on the most-penalised expert
+        let ratio_l1 = l1.get(0, 3) / l1.get(0, 0);
+        let ratio_sm = sm.get(0, 3) / sm.get(0, 0);
+        assert!(ratio_sm > ratio_l1);
+        let s: f64 = sm.row(0).iter().sum();
+        assert!((s - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn topo_matrix_scale_matches_paper() {
+        // uniform target ⇒ p_ie = 1/N ⇒ penalty = N·P/N = P everywhere
+        let t = Mat::filled(4, 8, 5.0);
+        let m = topo_penalty_matrix(&t, Norm::L1);
+        for v in m.data() {
+            assert!((v - 4.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn baseline_matrix_is_constant_n() {
+        let m = baseline_penalty_matrix(4, 8);
+        assert_eq!(m.get(3, 7), 8.0);
+    }
+
+    #[test]
+    fn even_caps_sum_to_capacity() {
+        let caps = even_caps(4, 8, 64);
+        for e in 0..8 {
+            assert!((caps.col_sum(e) - 64.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn proportional_caps_integral_and_exact() {
+        let t = skewed_target();
+        let caps = proportional_caps(&t, 33);
+        for e in 0..4 {
+            assert_eq!(caps.col_sum(e) as usize, 33);
+        }
+        for v in caps.data() {
+            assert_eq!(v.fract(), 0.0);
+            assert!(*v >= 0.0);
+        }
+        // proportionality: device 0 gets most of expert 0
+        assert!(caps.get(0, 0) > caps.get(1, 0));
+        assert!(caps.get(1, 3) > caps.get(0, 3));
+    }
+
+    #[test]
+    fn proportional_caps_handle_zero_columns() {
+        let t = Mat::from_vec(2, 2, vec![1.0, 0.0, 1.0, 0.0]);
+        let caps = proportional_caps(&t, 10);
+        assert_eq!(caps.col_sum(1) as usize, 10); // still allocates capacity
+    }
+}

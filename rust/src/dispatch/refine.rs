@@ -1,0 +1,157 @@
+//! Constraint repair + local-optimality verification for dispatch patterns.
+//!
+//! [`sinkhorn_repair`] alternately rescales rows and columns of a positive
+//! pattern until the Eq. 3 / Eq. 4 marginals hold — the classic iterative
+//! proportional fitting procedure, which converges for strictly positive
+//! matrices and preserves the *ratios* the closed form encodes.
+//!
+//! [`is_locally_optimal`] is the verifier used by the test-suite (and the
+//! ablation bench) to confirm Eq. 7 actually minimises the Eq. 6 min-max
+//! objective: it samples random feasible 2×2 perturbations (move δ tokens
+//! between two experts on one sender, compensate on another sender so both
+//! marginals stay fixed) and checks none reduces the slowest-pair exchange
+//! time.
+
+use super::target::DispatchProblem;
+use crate::comm::CostEngine;
+use crate::topology::Topology;
+use crate::util::{rng::Rng, Mat};
+
+/// Iterative proportional fitting toward the given row/column sums.
+///
+/// Zero entries stay zero; the input must have at least one positive entry
+/// in every row and column with a positive target.
+pub fn sinkhorn_repair(
+    c: &Mat,
+    row_targets: &[f64],
+    col_targets: &[f64],
+    max_iters: usize,
+    tol: f64,
+) -> Mat {
+    assert_eq!(c.rows(), row_targets.len());
+    assert_eq!(c.cols(), col_targets.len());
+    let mut m = c.clone();
+    for _ in 0..max_iters {
+        let mut worst: f64 = 0.0;
+        for r in 0..m.rows() {
+            let s = m.row_sum(r);
+            if s > 0.0 && row_targets[r] > 0.0 {
+                let f = row_targets[r] / s;
+                worst = worst.max((f - 1.0).abs());
+                for x in m.row_mut(r) {
+                    *x *= f;
+                }
+            }
+        }
+        for cidx in 0..m.cols() {
+            let s = m.col_sum(cidx);
+            if s > 0.0 && col_targets[cidx] > 0.0 {
+                let f = col_targets[cidx] / s;
+                worst = worst.max((f - 1.0).abs());
+                for r in 0..m.rows() {
+                    m.set(r, cidx, m.get(r, cidx) * f);
+                }
+            }
+        }
+        if worst < tol {
+            break;
+        }
+    }
+    m
+}
+
+/// Randomised local-optimality check of a pattern w.r.t. the Eq. 6
+/// objective under the slowest-pair model.
+///
+/// Samples `trials` feasible perturbations of relative size `rel_delta`;
+/// returns false iff some perturbation improves the objective by more than
+/// `tol` (absolute seconds).
+pub fn is_locally_optimal(
+    topo: &Topology,
+    c: &Mat,
+    prob: &DispatchProblem,
+    trials: usize,
+    rel_delta: f64,
+    tol: f64,
+) -> bool {
+    let engine = CostEngine::slowest_pair(topo);
+    let eb = prob.elem_bytes as f64;
+    let e = prob.e_per_dev;
+    // aggregate expert columns onto their host devices for pricing
+    let to_bytes = |c: &Mat| {
+        Mat::from_fn(c.rows(), c.rows(), |i, j| {
+            (0..e).map(|le| c.get(i, j * e + le)).sum::<f64>() * eb
+        })
+    };
+    let base = engine.exchange_time(&to_bytes(c));
+    let p = c.rows();
+    let n = c.cols();
+    let mut rng = Rng::seed_from_u64(0xD15_BA7C4);
+    let scale = c.sum() / (p * n) as f64 * rel_delta;
+
+    for _ in 0..trials {
+        // pick two senders and two experts; move δ along a 2×2 cycle so
+        // both row and column sums are unchanged
+        let i0 = rng.below(p);
+        let i1 = rng.below(p);
+        let e0 = rng.below(n);
+        let e1 = rng.below(n);
+        if i0 == i1 || e0 == e1 {
+            continue;
+        }
+        let delta = scale.min(c.get(i0, e0)).min(c.get(i1, e1));
+        if delta <= 0.0 {
+            continue;
+        }
+        let mut m = c.clone();
+        m.add_assign(i0, e0, -delta);
+        m.add_assign(i0, e1, delta);
+        m.add_assign(i1, e1, -delta);
+        m.add_assign(i1, e0, delta);
+        let t = engine.exchange_time(&to_bytes(&m));
+        if t < base - tol {
+            return false;
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sinkhorn_hits_marginals() {
+        let c = Mat::from_vec(2, 2, vec![3.0, 1.0, 1.0, 3.0]);
+        let out = sinkhorn_repair(&c, &[10.0, 10.0], &[10.0, 10.0], 100, 1e-12);
+        for r in 0..2 {
+            assert!((out.row_sum(r) - 10.0).abs() < 1e-9);
+            assert!((out.col_sum(r) - 10.0).abs() < 1e-9);
+        }
+        // ratios preserved: diagonal still dominates
+        assert!(out.get(0, 0) > out.get(0, 1));
+    }
+
+    #[test]
+    fn sinkhorn_identity_when_already_feasible() {
+        let c = Mat::filled(3, 3, 2.0);
+        let out = sinkhorn_repair(&c, &[6.0; 3], &[6.0; 3], 50, 1e-12);
+        assert!(out.linf_dist(&c) < 1e-12);
+    }
+
+    #[test]
+    fn sinkhorn_preserves_zeros() {
+        let c = Mat::from_vec(2, 2, vec![0.0, 4.0, 4.0, 4.0]);
+        let out = sinkhorn_repair(&c, &[4.0, 8.0], &[4.0, 8.0], 200, 1e-12);
+        assert_eq!(out.get(0, 0), 0.0);
+        assert!((out.row_sum(0) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn uneven_marginals_supported() {
+        let c = Mat::filled(2, 3, 1.0);
+        let out = sinkhorn_repair(&c, &[9.0, 3.0], &[4.0, 4.0, 4.0], 200, 1e-12);
+        assert!((out.row_sum(0) - 9.0).abs() < 1e-8);
+        assert!((out.col_sum(2) - 4.0).abs() < 1e-8);
+    }
+}

@@ -1,0 +1,261 @@
+//! Eq. 7: the closed-form target dispatch pattern.
+//!
+//! On the Eq. 5-smoothed topology the min-max problem of Eq. 6 admits the
+//! closed form
+//!
+//! ```text
+//! ĉ_ie = k·S / (E · Σ_j 1/β̂_ij) · 1/β̂_{i, ⌊e/E⌋}
+//! ```
+//!
+//! — dispatch volume proportional to link bandwidth ("higher bandwidth
+//! links should bear more loads"). The per-sender conservation constraint
+//! (Eq. 3) holds by construction; the per-expert balance constraint (Eq. 4)
+//! holds exactly on symmetric topologies and is restored by a Sinkhorn
+//! repair pass otherwise (asymmetric trees are additionally *merged*,
+//! §4.2: all levels ≥ 2 collapse into one inter-node class, the paper's
+//! `[[2,2],[2]] → [[2,2,2]]` transformation, realised here on the smoothed
+//! level parameters instead of by rebuilding the graph).
+
+use super::refine::sinkhorn_repair;
+use crate::topology::{smooth_levels, Topology, TopologyKind};
+use crate::util::Mat;
+
+/// Shape of one dispatch decision (per MoE layer, per step).
+#[derive(Clone, Copy, Debug)]
+pub struct DispatchProblem {
+    /// Gate top-k.
+    pub k: usize,
+    /// Tokens per device per step (S in the paper).
+    pub s: usize,
+    /// Experts per device (E in the paper).
+    pub e_per_dev: usize,
+    /// Bytes per dispatched token (d · b in the paper: hidden × elem size).
+    pub elem_bytes: usize,
+}
+
+impl DispatchProblem {
+    /// Total tokens sent by one device (k·S).
+    pub fn sent_per_dev(&self) -> f64 {
+        (self.k * self.s) as f64
+    }
+
+    /// Balanced tokens received per expert (k·S/E, Eq. 4).
+    pub fn recv_per_expert(&self) -> f64 {
+        (self.k * self.s) as f64 / self.e_per_dev as f64
+    }
+}
+
+/// The solved target pattern ĉ (tokens, P×N) plus the β̂ used to derive it.
+#[derive(Clone, Debug)]
+pub struct TargetPattern {
+    /// ĉ_ie in tokens, P rows × N experts.
+    pub c: Mat,
+    /// The smoothed (and possibly merged) per-pair β̂ the solution used.
+    pub beta_hat: Mat,
+    pub problem: DispatchProblem,
+}
+
+impl TargetPattern {
+    /// Panic unless Eq. 3 (row sums = k·S) and Eq. 4 (col sums = k·S/E)
+    /// hold within `tol` (relative).
+    pub fn assert_feasible(&self, tol: f64) {
+        let p = self.c.rows();
+        let n = self.c.cols();
+        let want_row = self.problem.sent_per_dev();
+        let want_col = want_row * p as f64 / n as f64;
+        for i in 0..p {
+            let r = self.c.row_sum(i);
+            assert!(
+                (r - want_row).abs() <= tol * want_row,
+                "row {i} sum {r} != {want_row}"
+            );
+        }
+        for e in 0..n {
+            let c = self.c.col_sum(e);
+            assert!(
+                (c - want_col).abs() <= tol * want_col,
+                "col {e} sum {c} != {want_col}"
+            );
+        }
+        assert!(self.c.min() >= 0.0, "negative dispatch volume");
+    }
+
+    /// Per-pair byte matrix (P×P): bytes device i sends to device j.
+    pub fn bytes_matrix(&self) -> Mat {
+        let p = self.c.rows();
+        let e = self.problem.e_per_dev;
+        Mat::from_fn(p, p, |i, j| {
+            let mut tokens = 0.0;
+            for le in 0..e {
+                tokens += self.c.get(i, j * e + le);
+            }
+            tokens * self.problem.elem_bytes as f64
+        })
+    }
+}
+
+/// Smoothed per-pair β̂ with the asymmetric→symmetric merge applied.
+pub(crate) fn beta_hat(topo: &Topology) -> Mat {
+    let params = smooth_levels(topo);
+    let symmetric = match topo.kind() {
+        TopologyKind::Tree { symmetric, .. } => *symmetric,
+        _ => true,
+    };
+    let (alpha, beta) = if symmetric {
+        (params.alpha.clone(), params.beta.clone())
+    } else {
+        // Merge: collapse every level ≥ 2 into a single inter-node class
+        // (count-weighted mean) — the matrix-level equivalent of merging
+        // the spec into one symmetric layer of leaf groups.
+        let mut a2 = 0.0;
+        let mut b2 = 0.0;
+        let mut cnt = 0usize;
+        for l in 2..params.beta.len() {
+            a2 += params.alpha[l] * params.count[l] as f64;
+            b2 += params.beta[l] * params.count[l] as f64;
+            cnt += params.count[l];
+        }
+        let mut alpha = params.alpha.clone();
+        let mut beta = params.beta.clone();
+        if cnt > 0 {
+            for l in 2..beta.len() {
+                alpha[l] = a2 / cnt as f64;
+                beta[l] = b2 / cnt as f64;
+            }
+        }
+        (alpha, beta)
+    };
+    let _ = alpha; // α is dropped by the closed form ("omit the small latency term")
+    let p = topo.p();
+    Mat::from_fn(p, p, |i, j| beta[topo.level(i, j)])
+}
+
+/// Solve Eq. 6 for the target pattern ĉ (Eq. 7) on a topology.
+pub fn target_pattern(topo: &Topology, prob: &DispatchProblem) -> TargetPattern {
+    let p = topo.p();
+    let e = prob.e_per_dev;
+    let n = p * e;
+    let bh = beta_hat(topo);
+
+    let ks = prob.sent_per_dev();
+    let mut c = Mat::zeros(p, n);
+    for i in 0..p {
+        let denom: f64 = (0..p).map(|j| 1.0 / bh.get(i, j)).sum();
+        for ei in 0..n {
+            let host = ei / e;
+            c.set(i, ei, ks / (e as f64 * denom) * (1.0 / bh.get(i, host)));
+        }
+    }
+
+    // Eq. 4 repair (exact on symmetric topologies, a no-op there).
+    let row_t = vec![ks; p];
+    let col_t = vec![ks * p as f64 / n as f64; n];
+    let c = sinkhorn_repair(&c, &row_t, &col_t, 200, 1e-10);
+
+    TargetPattern { c, beta_hat: bh, problem: *prob }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{presets, Link, Topology, TreeSpec};
+
+    fn prob() -> DispatchProblem {
+        DispatchProblem { k: 1, s: 1000, e_per_dev: 1, elem_bytes: 512 }
+    }
+
+    fn tree22() -> Topology {
+        Topology::tree(
+            &TreeSpec::parse("[2,2]").unwrap(),
+            &[Link::from_gbps_us(45.0, 2.0), Link::from_gbps_us(12.5, 10.0)],
+            presets::local_copy(),
+        )
+    }
+
+    #[test]
+    fn homogeneous_target_is_even() {
+        let topo = Topology::homogeneous(
+            4,
+            Link::from_gbps_us(100.0, 1.0),
+            Link::from_gbps_us(100.0, 0.0), // same local speed → fully even
+        );
+        let tp = target_pattern(&topo, &prob());
+        for i in 0..4 {
+            for e in 0..4 {
+                assert!((tp.c.get(i, e) - 250.0).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn volumes_scale_with_bandwidth() {
+        // Eq. 7: ĉ linear in 1/β̂ — local > intra-node > inter-node.
+        let tp = target_pattern(&tree22(), &prob());
+        let local = tp.c.get(0, 0);
+        let intra = tp.c.get(0, 1);
+        let inter = tp.c.get(0, 2);
+        assert!(local > intra && intra > inter, "{local} {intra} {inter}");
+        let b = &tp.beta_hat;
+        // ratio check: ĉ_01/ĉ_02 == β̂_02/β̂_01
+        let want = b.get(0, 2) / b.get(0, 1);
+        let got = intra / inter;
+        assert!((got - want).abs() / want < 1e-6);
+    }
+
+    #[test]
+    fn constraints_hold_on_symmetric() {
+        let tp = target_pattern(&tree22(), &prob());
+        tp.assert_feasible(1e-9);
+    }
+
+    #[test]
+    fn constraints_hold_after_merge_on_asymmetric() {
+        let topo = Topology::tree(
+            &TreeSpec::parse("[[2,2],[2]]").unwrap(),
+            &[Link::from_gbps_us(45.0, 2.0), Link::from_gbps_us(12.5, 10.0)],
+            presets::local_copy(),
+        );
+        let tp = target_pattern(&topo, &prob());
+        tp.assert_feasible(1e-6);
+        // merged: all inter-node pairs share one β̂ class → no expert
+        // starves (the paper's "expert isolation" guard).
+        let min_cross = (0..6)
+            .flat_map(|i| (0..6).map(move |e| (i, e)))
+            .filter(|&(i, e)| !topo.same_node(i, e))
+            .map(|(i, e)| tp.c.get(i, e))
+            .fold(f64::INFINITY, f64::min);
+        assert!(min_cross > 0.0);
+        let cross: Vec<f64> = (0..6)
+            .flat_map(|i| (0..6).map(move |e| (i, e)))
+            .filter(|&(i, e)| !topo.same_node(i, e))
+            .map(|(i, e)| tp.c.get(i, e))
+            .collect();
+        let max_cross = cross.iter().cloned().fold(0.0, f64::max);
+        assert!(max_cross / min_cross < 1.5, "isolation: {min_cross}..{max_cross}");
+    }
+
+    #[test]
+    fn e_per_dev_splits_within_host() {
+        let p = DispatchProblem { k: 1, s: 1000, e_per_dev: 2, elem_bytes: 512 };
+        let tp = target_pattern(&tree22(), &p);
+        assert_eq!(tp.c.cols(), 8);
+        // experts co-hosted on one device receive identical volumes
+        for i in 0..4 {
+            for host in 0..4 {
+                let a = tp.c.get(i, host * 2);
+                let b = tp.c.get(i, host * 2 + 1);
+                assert!((a - b).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn bytes_matrix_aggregates_experts() {
+        let p = DispatchProblem { k: 1, s: 1000, e_per_dev: 2, elem_bytes: 100 };
+        let tp = target_pattern(&tree22(), &p);
+        let bm = tp.bytes_matrix();
+        assert_eq!(bm.rows(), 4);
+        let want = (tp.c.get(0, 2) + tp.c.get(0, 3)) * 100.0;
+        assert!((bm.get(0, 1) - want).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,45 @@
+//! # TA-MoE: Topology-Aware Large Scale Mixture-of-Expert Training
+//!
+//! Rust + JAX + Pallas reproduction of *TA-MoE* (Chen et al., NeurIPS 2022).
+//!
+//! The crate is the **Layer-3 coordinator** of the three-layer architecture
+//! (see `DESIGN.md`):
+//!
+//! * [`topology`] — network topology descriptions (homogeneous, ring,
+//!   symmetric/asymmetric trees), per-pair α-β link matrices, the level
+//!   decomposition `G_t^i` and the Eq. 5 hierarchical smoothing.
+//! * [`dispatch`] — the paper's §4.2 optimisation: the closed-form target
+//!   dispatch pattern `ĉ_ie` (Eq. 7), an iterative min-max refiner used to
+//!   verify it, and the Eq. 8 penalty weights `p_i = Norm(1/ĉ_i)`.
+//! * [`comm`] — the α-β communication cost engine: slowest-pair (the
+//!   paper's lower bound, Eq. 2), per-sender-serial and link-contention
+//!   exchange models, hierarchical all-to-all, ring allreduce, and the
+//!   Table-1 profiling harness.
+//! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas artifacts
+//!   (HLO text + manifest ABI emitted by `python/compile/aot.py`).
+//! * [`coordinator`] — the training orchestrator: dispatch strategies
+//!   (even/DeepSpeed, FastMoE, FasterMoE-Hir, TA-MoE), the step loop over
+//!   the compiled cluster-step program, simulated-time accounting and
+//!   metrics.
+//! * [`data`] — byte-level tokenizer, bundled tiny corpus and a synthetic
+//!   Zipf corpus generator, shard-aware batching.
+//! * [`config`] — TOML experiment configs and the cluster A/B/C presets
+//!   from the paper's Table 2.
+//! * [`metrics`] — throughput/latency accumulators and CSV/JSON emitters
+//!   used by the benches that regenerate every paper table and figure.
+//!
+//! Python never runs after `make artifacts`: the binary loads HLO text via
+//! the `xla` crate's PJRT CPU client and drives everything from rust.
+
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod dispatch;
+pub mod metrics;
+pub mod runtime;
+pub mod topology;
+pub mod util;
+
+pub use config::ExperimentConfig;
+pub use topology::Topology;

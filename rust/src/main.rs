@@ -1,0 +1,349 @@
+//! `ta-moe` — the launcher CLI.
+//!
+//! Subcommands:
+//!
+//! * `train`        — train a compiled artifact under a strategy on a
+//!                    simulated cluster, logging loss + simulated time.
+//! * `solve`        — print the Eq. 7 target dispatch pattern and Eq. 8
+//!                    penalty weights for a cluster.
+//! * `profile-topo` — show a topology's α/β matrices, levels, and the
+//!                    Eq. 5 smoothed per-level parameters.
+//! * `bench-comm`   — the Table-1 even-vs-uneven exchange micro-benchmark.
+//! * `info`         — list compiled artifacts and their shapes.
+//!
+//! Flags are `--key value`; `ta-moe <cmd> --help` lists them. (CLI parsing
+//! is hand-rolled — this image has no clap; see DESIGN.md
+//! §build-constraints.)
+
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use ta_moe::comm::profile_exchange;
+use ta_moe::config::{topology_for, ExperimentConfig};
+use ta_moe::coordinator::{device_flops, Trainer, TrainerOptions};
+use ta_moe::data::{Batcher, SyntheticCorpus};
+use ta_moe::dispatch::{penalty_weights, target_pattern, DispatchProblem, Norm};
+use ta_moe::topology::smooth_levels;
+use ta_moe::util::bench::Table;
+use ta_moe::util::Mat;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let (cmd, flags) = parse_args(args)?;
+    match cmd.as_deref() {
+        Some("train") => cmd_train(&flags),
+        Some("solve") => cmd_solve(&flags),
+        Some("profile-topo") => cmd_profile_topo(&flags),
+        Some("bench-comm") => cmd_bench_comm(&flags),
+        Some("info") => cmd_info(&flags),
+        Some("help") | None => {
+            print_help();
+            Ok(())
+        }
+        Some(other) => {
+            print_help();
+            anyhow::bail!("unknown subcommand {other:?}")
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "ta-moe — Topology-Aware MoE training (NeurIPS 2022 reproduction)\n\n\
+         USAGE: ta-moe <subcommand> [--key value ...]\n\n\
+         SUBCOMMANDS\n\
+           train         --artifact small8_switch --cluster C --strategy ta-moe\n\
+                         --steps 100 --lr 1e-3 --seed 0 --config file.toml\n\
+           solve         --cluster C --nodes 2 [--tokens 1024] [--k 1]\n\
+           profile-topo  --cluster table1 [--nodes 2] [--noise 0.2]\n\
+           bench-comm    [--mb 128]\n\
+           info          [--artifacts-dir artifacts]\n\n\
+         STRATEGIES: deepspeed | fastmoe | fastermoe[:remote_frac] | ta-moe[:softmax[:temp]]\n\
+         CLUSTERS:   A | B | C | table1 (presets from the paper's Table 2)"
+    );
+}
+
+type Flags = BTreeMap<String, String>;
+
+fn parse_args(args: &[String]) -> Result<(Option<String>, Flags)> {
+    let mut cmd = None;
+    let mut flags = Flags::new();
+    let mut it = args.iter().peekable();
+    while let Some(a) = it.next() {
+        if let Some(key) = a.strip_prefix("--") {
+            if key == "help" {
+                flags.insert("help".into(), "1".into());
+                continue;
+            }
+            let val = it
+                .next()
+                .with_context(|| format!("flag --{key} needs a value"))?;
+            flags.insert(key.to_string(), val.clone());
+        } else if cmd.is_none() {
+            cmd = Some(a.clone());
+        } else {
+            anyhow::bail!("unexpected positional argument {a:?}");
+        }
+    }
+    Ok((cmd, flags))
+}
+
+fn flag<'a>(flags: &'a Flags, key: &str, default: &'a str) -> &'a str {
+    flags.get(key).map(|s| s.as_str()).unwrap_or(default)
+}
+
+fn flag_parse<T: std::str::FromStr>(flags: &Flags, key: &str, default: T) -> Result<T>
+where
+    T::Err: std::fmt::Display,
+{
+    match flags.get(key) {
+        None => Ok(default),
+        Some(s) => s
+            .parse::<T>()
+            .map_err(|e| anyhow::anyhow!("--{key} {s:?}: {e}")),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// train
+// ---------------------------------------------------------------------------
+
+fn cmd_train(flags: &Flags) -> Result<()> {
+    let mut cfg = match flags.get("config") {
+        Some(path) => ExperimentConfig::from_toml_file(Path::new(path))?,
+        None => ExperimentConfig::default(),
+    };
+    if let Some(a) = flags.get("artifact") {
+        cfg.artifact = a.clone();
+    }
+    if let Some(c) = flags.get("cluster") {
+        cfg.cluster = c.clone();
+    }
+    if let Some(s) = flags.get("strategy") {
+        cfg.strategy = s.clone();
+    }
+    cfg.steps = flag_parse(flags, "steps", cfg.steps)?;
+    cfg.lr = flag_parse(flags, "lr", cfg.lr)?;
+    cfg.seed = flag_parse(flags, "seed", cfg.seed)?;
+
+    let topo = cfg.topology()?;
+    let strategy = cfg.parsed_strategy()?;
+    println!(
+        "train: artifact={} cluster={} (P={}, {} nodes) strategy={} steps={}",
+        cfg.artifact,
+        cfg.cluster,
+        topo.p(),
+        topo.n_nodes(),
+        strategy.name(),
+        cfg.steps
+    );
+
+    let cluster_char = cfg.cluster.chars().next().unwrap_or('C');
+    let mut trainer = Trainer::new(
+        &cfg.artifacts_dir.join(&cfg.artifact),
+        topo,
+        strategy,
+        TrainerOptions {
+            lr: cfg.lr as f32,
+            seed: cfg.seed as i32,
+            flops_per_dev: device_flops(cluster_char),
+        },
+    )?;
+
+    let m = trainer.manifest().config.clone();
+    let mut corpus = SyntheticCorpus::new(cfg.seed);
+    let stream = corpus.tokens(m.p * m.batch * (m.seq + 1) * 64);
+    let mut batcher = Batcher::new(stream, m.p, m.batch, m.seq);
+    let mut eval_corpus = SyntheticCorpus::new(cfg.seed + 7777);
+    let eval_stream = eval_corpus.tokens(m.p * m.batch * (m.seq + 1) * 8);
+    let mut eval_batcher = Batcher::new(eval_stream, m.p, m.batch, m.seq);
+    let (etok, etgt) = eval_batcher.next_batch();
+
+    for step in 0..cfg.steps {
+        let (tok, tgt) = batcher.next_batch();
+        let rec = trainer.train_step(&tok, &tgt)?;
+        if step % cfg.log_every == 0 || step + 1 == cfg.steps {
+            println!(
+                "step {:>5}  loss {:.4}  ce {:.4}  aux {:.4}  drop {:.3}  sim {:.2}ms (comm {:.2}ms)  wall {:.0}ms",
+                step,
+                rec.loss,
+                rec.ce,
+                rec.aux,
+                rec.dropped,
+                rec.sim_total_s() * 1e3,
+                rec.sim_comm_s * 1e3,
+                rec.wall_s * 1e3
+            );
+        }
+        if cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0 {
+            let (vl, _) = trainer.eval(&etok, &etgt)?;
+            println!("  eval @ {:>5}: valid ce {:.4}  ppl {:.2}", step, vl, vl.exp());
+        }
+    }
+
+    let out = cfg.out_dir.join(format!(
+        "{}_{}_{}.csv",
+        cfg.artifact,
+        cfg.cluster,
+        trainer.strategy().name()
+    ));
+    trainer.log().write_csv(&out)?;
+    println!(
+        "done: sim throughput {:.0} tokens/s; log → {}",
+        trainer.log().sim_throughput(),
+        out.display()
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// solve
+// ---------------------------------------------------------------------------
+
+fn cmd_solve(flags: &Flags) -> Result<()> {
+    let cluster = flag(flags, "cluster", "C");
+    let nodes = flag_parse(flags, "nodes", 2usize)?;
+    let tokens = flag_parse(flags, "tokens", 1024usize)?;
+    let k = flag_parse(flags, "k", 1usize)?;
+    let topo = if nodes == 0 {
+        topology_for(cluster, 8)
+    } else {
+        ta_moe::topology::presets::by_name(cluster, nodes)
+            .with_context(|| format!("unknown cluster {cluster:?}"))?
+    };
+    let prob = DispatchProblem { k, s: tokens, e_per_dev: 1, elem_bytes: 4096 };
+    let tp = target_pattern(&topo, &prob);
+    let pen = penalty_weights(&tp.c, Norm::L1);
+
+    println!(
+        "cluster {} × {} nodes: P={}, levels={}",
+        cluster,
+        topo.n_nodes(),
+        topo.p(),
+        topo.n_levels()
+    );
+    println!("\ntarget dispatch ĉ_0e (tokens from rank 0, Eq. 7):");
+    print_row(tp.c.row(0));
+    println!("penalty weights p_0e (Eq. 8):");
+    print_row(pen.row(0));
+    Ok(())
+}
+
+fn print_row(row: &[f64]) {
+    let cells: Vec<String> = row.iter().map(|v| format!("{v:.2}")).collect();
+    println!("  [{}]", cells.join(", "));
+}
+
+// ---------------------------------------------------------------------------
+// profile-topo
+// ---------------------------------------------------------------------------
+
+fn cmd_profile_topo(flags: &Flags) -> Result<()> {
+    let cluster = flag(flags, "cluster", "table1");
+    let nodes = flag_parse(flags, "nodes", 2usize)?;
+    let noise = flag_parse(flags, "noise", 0.0f64)?;
+    let topo = ta_moe::topology::presets::by_name(cluster, nodes)
+        .with_context(|| format!("unknown cluster {cluster:?}"))?;
+    let topo = if noise > 0.0 { topo.with_noise(noise, 42) } else { topo };
+
+    println!("cluster {cluster}: P={}, nodes={}", topo.p(), topo.n_nodes());
+    let lp = smooth_levels(&topo);
+    let mut t = Table::new(&["level", "pairs", "alpha (us)", "bw (GB/s)"]);
+    for l in 0..lp.beta.len() {
+        if lp.count[l] == 0 {
+            continue;
+        }
+        t.row(&[
+            l.to_string(),
+            lp.count[l].to_string(),
+            format!("{:.1}", lp.alpha[l] * 1e6),
+            format!("{:.1}", 1.0 / lp.beta[l] / 1e9),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// bench-comm (Table 1)
+// ---------------------------------------------------------------------------
+
+fn cmd_bench_comm(flags: &Flags) -> Result<()> {
+    let mb = flag_parse(flags, "mb", 128.0f64)?;
+    let topo = ta_moe::topology::presets::table1();
+    let bytes = mb * 1024.0 * 1024.0;
+    let even = Mat::filled(4, 4, 0.25);
+    let peer = [1usize, 0, 3, 2];
+    let uneven = Mat::from_fn(4, 4, |i, j| {
+        if i == j {
+            0.25
+        } else if j == peer[i] {
+            0.5
+        } else {
+            0.125
+        }
+    });
+
+    let mut t = Table::new(&["pattern", "0<->0", "0<->1", "0<->0'", "0<->1'", "All (us)"]);
+    for (name, ratios) in [("even", &even), ("uneven", &uneven)] {
+        let p = profile_exchange(&topo, bytes, ratios);
+        let us: Vec<String> = p
+            .rank0_times
+            .iter()
+            .map(|s| format!("{:.0}", s * 1e6))
+            .collect();
+        t.row(&[
+            name.to_string(),
+            us[0].clone(),
+            us[1].clone(),
+            us[2].clone(),
+            us[3].clone(),
+            format!("{:.0}", p.rank0_total * 1e6),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// info
+// ---------------------------------------------------------------------------
+
+fn cmd_info(flags: &Flags) -> Result<()> {
+    let dir = PathBuf::from(flag(flags, "artifacts-dir", "artifacts"));
+    let mut t = Table::new(&["artifact", "P", "N", "layers", "d", "gate", "dispatch", "params"]);
+    let mut entries: Vec<_> = std::fs::read_dir(&dir)
+        .with_context(|| format!("listing {dir:?} — run `make artifacts`?"))?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.join("manifest.json").exists())
+        .collect();
+    entries.sort();
+    for path in entries {
+        let m = ta_moe::runtime::Manifest::load(&path)?;
+        t.row(&[
+            m.name.clone(),
+            m.config.p.to_string(),
+            m.config.n_experts.to_string(),
+            m.config.layers.to_string(),
+            m.config.d.to_string(),
+            m.config.gate.clone(),
+            m.config.dispatch.clone(),
+            format!("{:.2}M", m.n_params() as f64 / 1e6),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,202 @@
+//! Metrics: per-step records, run logs, CSV/JSON emission.
+//!
+//! Every training/benchmark run accumulates [`StepRecord`]s; [`RunLog`]
+//! derives the aggregates the paper reports (throughput in tokens/s on the
+//! simulated cluster clock, loss-vs-step and loss-vs-time curves) and
+//! writes CSV files the benches print / EXPERIMENTS.md references.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+/// One training step's observables.
+#[derive(Clone, Debug, Default)]
+pub struct StepRecord {
+    pub step: usize,
+    pub loss: f64,
+    pub ce: f64,
+    pub aux: f64,
+    pub dropped: f64,
+    /// Simulated communication time for the step (α-β model).
+    pub sim_comm_s: f64,
+    /// Simulated compute time for the step (FLOPs / device_flops).
+    pub sim_compute_s: f64,
+    /// Host wall-clock spent executing the XLA step (not simulated).
+    pub wall_s: f64,
+}
+
+impl StepRecord {
+    pub fn sim_total_s(&self) -> f64 {
+        self.sim_comm_s + self.sim_compute_s
+    }
+}
+
+/// A labelled sequence of step records (+ optional eval points).
+#[derive(Clone, Debug, Default)]
+pub struct RunLog {
+    pub label: String,
+    pub records: Vec<StepRecord>,
+    /// (step, validation loss) points.
+    pub evals: Vec<(usize, f64)>,
+    /// Tokens processed per step across the whole cluster.
+    pub tokens_per_step: usize,
+}
+
+impl RunLog {
+    pub fn new(label: &str, tokens_per_step: usize) -> RunLog {
+        RunLog { label: label.to_string(), tokens_per_step, ..Default::default() }
+    }
+
+    pub fn push(&mut self, r: StepRecord) {
+        self.records.push(r);
+    }
+
+    pub fn push_eval(&mut self, step: usize, loss: f64) {
+        self.evals.push((step, loss));
+    }
+
+    /// Simulated cluster time elapsed up to (and including) each step.
+    pub fn sim_time_axis(&self) -> Vec<f64> {
+        let mut t = 0.0;
+        self.records
+            .iter()
+            .map(|r| {
+                t += r.sim_total_s();
+                t
+            })
+            .collect()
+    }
+
+    /// Mean simulated throughput (tokens/s) over the run.
+    pub fn sim_throughput(&self) -> f64 {
+        let total: f64 = self.records.iter().map(|r| r.sim_total_s()).sum();
+        if total <= 0.0 {
+            return 0.0;
+        }
+        self.tokens_per_step as f64 * self.records.len() as f64 / total
+    }
+
+    /// Simulated time to first reach a validation loss ≤ `target`.
+    /// Linear scan over eval points against the sim clock.
+    pub fn sim_time_to_loss(&self, target: f64) -> Option<f64> {
+        let axis = self.sim_time_axis();
+        for &(step, loss) in &self.evals {
+            if loss <= target {
+                let idx = step.min(axis.len().saturating_sub(1));
+                return Some(if axis.is_empty() { 0.0 } else { axis[idx] });
+            }
+        }
+        None
+    }
+
+    /// Mean of the last `n` training losses (converged-loss estimate).
+    pub fn tail_loss(&self, n: usize) -> f64 {
+        let k = self.records.len().min(n).max(1);
+        let s: f64 = self.records[self.records.len() - k..]
+            .iter()
+            .map(|r| r.ce)
+            .sum();
+        s / k as f64
+    }
+
+    /// Write `step,loss,ce,aux,dropped,sim_comm_s,sim_compute_s,sim_t` CSV.
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "step,loss,ce,aux,dropped,sim_comm_s,sim_compute_s,sim_t")?;
+        let axis = self.sim_time_axis();
+        for (r, t) in self.records.iter().zip(axis) {
+            writeln!(
+                f,
+                "{},{:.6},{:.6},{:.6},{:.4},{:.6e},{:.6e},{:.6e}",
+                r.step, r.loss, r.ce, r.aux, r.dropped, r.sim_comm_s, r.sim_compute_s, t
+            )?;
+        }
+        Ok(())
+    }
+
+    /// JSON summary used by benches.
+    pub fn summary_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("label".into(), Json::Str(self.label.clone()));
+        m.insert("steps".into(), Json::Num(self.records.len() as f64));
+        m.insert("throughput_tok_s".into(), Json::Num(self.sim_throughput()));
+        m.insert("tail_ce".into(), Json::Num(self.tail_loss(20)));
+        let comm: f64 = self.records.iter().map(|r| r.sim_comm_s).sum();
+        let comp: f64 = self.records.iter().map(|r| r.sim_compute_s).sum();
+        m.insert("sim_comm_s".into(), Json::Num(comm));
+        m.insert("sim_compute_s".into(), Json::Num(comp));
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: usize, ce: f64, comm: f64, comp: f64) -> StepRecord {
+        StepRecord {
+            step,
+            loss: ce,
+            ce,
+            sim_comm_s: comm,
+            sim_compute_s: comp,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn throughput_uses_sim_clock() {
+        let mut log = RunLog::new("x", 1000);
+        log.push(rec(0, 5.0, 0.5, 0.5));
+        log.push(rec(1, 4.0, 0.5, 0.5));
+        assert!((log.sim_throughput() - 1000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn time_axis_accumulates() {
+        let mut log = RunLog::new("x", 10);
+        log.push(rec(0, 5.0, 1.0, 0.0));
+        log.push(rec(1, 4.0, 2.0, 0.0));
+        assert_eq!(log.sim_time_axis(), vec![1.0, 3.0]);
+    }
+
+    #[test]
+    fn time_to_loss_finds_first_crossing() {
+        let mut log = RunLog::new("x", 10);
+        for i in 0..10 {
+            log.push(rec(i, 5.0 - i as f64 * 0.5, 1.0, 0.0));
+        }
+        log.push_eval(2, 4.2);
+        log.push_eval(5, 3.0);
+        log.push_eval(8, 2.0);
+        let t = log.sim_time_to_loss(3.0).unwrap();
+        assert_eq!(t, 6.0); // after step 5 → 6 seconds of sim time
+        assert!(log.sim_time_to_loss(0.1).is_none());
+    }
+
+    #[test]
+    fn tail_loss_averages_last_n() {
+        let mut log = RunLog::new("x", 10);
+        for i in 0..10 {
+            log.push(rec(i, i as f64, 0.0, 1.0));
+        }
+        assert!((log.tail_loss(2) - 8.5).abs() < 1e-12);
+        assert!((log.tail_loss(100) - 4.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_round_trip_smoke() {
+        let mut log = RunLog::new("x", 10);
+        log.push(rec(0, 1.0, 0.1, 0.2));
+        let path = std::env::temp_dir().join("ta_moe_test_metrics.csv");
+        log.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("step,loss"));
+        assert_eq!(text.lines().count(), 2);
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,301 @@
+//! Artifact manifest parsing — the python↔rust ABI contract.
+
+use crate::util::json::Json;
+use crate::util::Mat;
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+use super::tensor::DType;
+
+/// One tensor in a program signature.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorDesc {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorDesc {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorDesc> {
+        let name = j.req("name").map_err(anyhow::Error::msg)?
+            .as_str().context("desc name")?.to_string();
+        let shape = j.req("shape").map_err(anyhow::Error::msg)?
+            .as_arr().context("desc shape")?
+            .iter()
+            .map(|v| v.as_usize().context("shape dim"))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = match j.req("dtype").map_err(anyhow::Error::msg)?.as_str() {
+            Some("f32") => DType::F32,
+            Some("i32") => DType::I32,
+            other => return Err(anyhow!("unsupported dtype {other:?}")),
+        };
+        Ok(TensorDesc { name, shape, dtype })
+    }
+}
+
+/// Signature + file of one compiled program.
+#[derive(Clone, Debug)]
+pub struct ProgramDesc {
+    pub file: String,
+    pub inputs: Vec<TensorDesc>,
+    pub outputs: Vec<TensorDesc>,
+}
+
+impl ProgramDesc {
+    fn from_json(j: &Json) -> Result<ProgramDesc> {
+        let descs = |key: &str| -> Result<Vec<TensorDesc>> {
+            j.req(key)
+                .map_err(anyhow::Error::msg)?
+                .as_arr()
+                .context("desc array")?
+                .iter()
+                .map(TensorDesc::from_json)
+                .collect()
+        };
+        Ok(ProgramDesc {
+            file: j.req("file").map_err(anyhow::Error::msg)?
+                .as_str().context("file")?.to_string(),
+            inputs: descs("inputs")?,
+            outputs: descs("outputs")?,
+        })
+    }
+
+    /// Index of a named input, if present.
+    pub fn input_index(&self, name: &str) -> Option<usize> {
+        self.inputs.iter().position(|d| d.name == name)
+    }
+
+    pub fn output_index(&self, name: &str) -> Option<usize> {
+        self.outputs.iter().position(|d| d.name == name)
+    }
+}
+
+/// The model-structure block of the manifest (mirrors python configs.py).
+#[derive(Clone, Debug)]
+pub struct ModelCfg {
+    pub p: usize,
+    pub e_per_dev: usize,
+    pub layers: usize,
+    pub d: usize,
+    pub f: usize,
+    pub heads: usize,
+    pub vocab: usize,
+    pub batch: usize,
+    pub seq: usize,
+    pub k: usize,
+    pub cap_factor: f64,
+    pub gate: String,
+    pub dispatch: String,
+    pub n_experts: usize,
+    pub capacity: usize,
+    pub tokens_per_dev: usize,
+    pub moe_layer_ids: Vec<usize>,
+}
+
+impl ModelCfg {
+    fn from_json(j: &Json) -> Result<ModelCfg> {
+        let us = |k: &str| -> Result<usize> {
+            j.req(k).map_err(anyhow::Error::msg)?.as_usize().context(k.to_string())
+        };
+        Ok(ModelCfg {
+            p: us("p")?,
+            e_per_dev: us("e_per_dev")?,
+            layers: us("layers")?,
+            d: us("d")?,
+            f: us("f")?,
+            heads: us("heads")?,
+            vocab: us("vocab")?,
+            batch: us("batch")?,
+            seq: us("seq")?,
+            k: us("k")?,
+            cap_factor: j.req("cap_factor").map_err(anyhow::Error::msg)?
+                .as_f64().context("cap_factor")?,
+            gate: j.req("gate").map_err(anyhow::Error::msg)?
+                .as_str().context("gate")?.to_string(),
+            dispatch: j.req("dispatch").map_err(anyhow::Error::msg)?
+                .as_str().context("dispatch")?.to_string(),
+            n_experts: us("n_experts")?,
+            capacity: us("capacity")?,
+            tokens_per_dev: us("tokens_per_dev")?,
+            moe_layer_ids: j.req("moe_layer_ids").map_err(anyhow::Error::msg)?
+                .as_arr().context("moe_layer_ids")?
+                .iter().map(|v| v.as_usize().context("layer id"))
+                .collect::<Result<Vec<_>>>()?,
+        })
+    }
+
+    /// Number of MoE layers in the model.
+    pub fn n_moe_layers(&self) -> usize {
+        self.moe_layer_ids.len()
+    }
+
+    /// Bytes of one dispatched token (f32 activations).
+    pub fn token_bytes(&self) -> usize {
+        self.d * 4
+    }
+
+    /// Convert a per-(device, expert) token-count matrix into a per-pair
+    /// byte matrix for the comm engine (experts map to hosts by `e/E`).
+    pub fn counts_to_bytes(&self, counts: &Mat) -> Mat {
+        assert_eq!((counts.rows(), counts.cols()), (self.p, self.n_experts));
+        Mat::from_fn(self.p, self.p, |i, j| {
+            let mut tokens = 0.0;
+            for le in 0..self.e_per_dev {
+                tokens += counts.get(i, j * self.e_per_dev + le);
+            }
+            tokens * self.token_bytes() as f64
+        })
+    }
+}
+
+/// Parsed `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub name: String,
+    pub config: ModelCfg,
+    pub n_param_tensors: usize,
+    pub params: Vec<TensorDesc>,
+    pub init: ProgramDesc,
+    pub step: ProgramDesc,
+    pub eval: ProgramDesc,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts`?"))?;
+        Self::parse(&text).with_context(|| format!("parsing {path:?}"))
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(anyhow::Error::msg)?;
+        let params = j
+            .req("params").map_err(anyhow::Error::msg)?
+            .as_arr().context("params")?
+            .iter()
+            .map(TensorDesc::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let m = Manifest {
+            name: j.req("name").map_err(anyhow::Error::msg)?
+                .as_str().context("name")?.to_string(),
+            config: ModelCfg::from_json(j.req("config").map_err(anyhow::Error::msg)?)?,
+            n_param_tensors: j.req("n_param_tensors").map_err(anyhow::Error::msg)?
+                .as_usize().context("n_param_tensors")?,
+            params,
+            init: ProgramDesc::from_json(j.req("init").map_err(anyhow::Error::msg)?)?,
+            step: ProgramDesc::from_json(j.req("step").map_err(anyhow::Error::msg)?)?,
+            eval: ProgramDesc::from_json(j.req("eval").map_err(anyhow::Error::msg)?)?,
+        };
+        // ABI sanity: the invariants the coordinator relies on.
+        anyhow::ensure!(m.n_param_tensors == m.params.len(), "param count mismatch");
+        anyhow::ensure!(
+            m.step.inputs.len() == 3 * m.n_param_tensors + 8,
+            "unexpected step input count"
+        );
+        anyhow::ensure!(
+            m.step.outputs.len() == 3 * m.n_param_tensors + 6,
+            "unexpected step output count"
+        );
+        anyhow::ensure!(m.eval.outputs.len() == 5, "unexpected eval output count");
+        Ok(m)
+    }
+
+    /// Total parameter scalars (model size).
+    pub fn n_params(&self) -> usize {
+        self.params.iter().map(|d| d.numel()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"{
+      "name": "t", "n_param_tensors": 1,
+      "config": {"p":2,"e_per_dev":1,"layers":1,"d":4,"f":8,"heads":1,
+                 "vocab":16,"batch":1,"seq":4,"k":1,"cap_factor":1.5,
+                 "gate":"switch","dispatch":"global","moe_every":1,
+                 "n_experts":2,"capacity":8,"tokens_per_dev":4,
+                 "moe_layer_ids":[0],"name":"t"},
+      "params": [{"name":"w","shape":[4,4],"dtype":"f32"}],
+      "init": {"file":"init.hlo.txt",
+               "inputs":[{"name":"seed","shape":[],"dtype":"i32"}],
+               "outputs":[{"name":"w","shape":[4,4],"dtype":"f32"}]},
+      "step": {"file":"step.hlo.txt",
+               "inputs":[
+                 {"name":"w","shape":[4,4],"dtype":"f32"},
+                 {"name":"m.w","shape":[4,4],"dtype":"f32"},
+                 {"name":"v.w","shape":[4,4],"dtype":"f32"},
+                 {"name":"t","shape":[],"dtype":"f32"},
+                 {"name":"lr","shape":[],"dtype":"f32"},
+                 {"name":"tokens","shape":[2,1,4],"dtype":"i32"},
+                 {"name":"targets","shape":[2,1,4],"dtype":"i32"},
+                 {"name":"penalty","shape":[2,2],"dtype":"f32"},
+                 {"name":"caps","shape":[2,2],"dtype":"f32"},
+                 {"name":"local_mask","shape":[2,2],"dtype":"f32"},
+                 {"name":"hir_remote_frac","shape":[],"dtype":"f32"}],
+               "outputs":[
+                 {"name":"w","shape":[4,4],"dtype":"f32"},
+                 {"name":"m.w","shape":[4,4],"dtype":"f32"},
+                 {"name":"v.w","shape":[4,4],"dtype":"f32"},
+                 {"name":"t","shape":[],"dtype":"f32"},
+                 {"name":"loss","shape":[],"dtype":"f32"},
+                 {"name":"ce","shape":[],"dtype":"f32"},
+                 {"name":"aux","shape":[],"dtype":"f32"},
+                 {"name":"counts","shape":[2,2],"dtype":"f32"},
+                 {"name":"dropped","shape":[],"dtype":"f32"}]},
+      "eval": {"file":"eval.hlo.txt","inputs":[],
+               "outputs":[
+                 {"name":"loss","shape":[],"dtype":"f32"},
+                 {"name":"ce","shape":[],"dtype":"f32"},
+                 {"name":"aux","shape":[],"dtype":"f32"},
+                 {"name":"counts","shape":[2,2],"dtype":"f32"},
+                 {"name":"dropped","shape":[],"dtype":"f32"}]}
+    }"#;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let m = Manifest::parse(MINI).unwrap();
+        assert_eq!(m.name, "t");
+        assert_eq!(m.config.p, 2);
+        assert_eq!(m.config.capacity, 8);
+        assert_eq!(m.n_params(), 16);
+        assert_eq!(m.step.input_index("lr"), Some(4));
+        assert_eq!(m.step.output_index("counts"), Some(7));
+    }
+
+    #[test]
+    fn rejects_inconsistent_step_abi() {
+        let bad = MINI.replace(
+            r#"{"name":"hir_remote_frac","shape":[],"dtype":"f32"}"#,
+            r#"{"name":"hir_remote_frac","shape":[],"dtype":"f32"},
+               {"name":"extra","shape":[],"dtype":"f32"}"#,
+        );
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn counts_to_bytes_maps_experts_to_hosts() {
+        let m = Manifest::parse(MINI).unwrap();
+        let counts = Mat::from_vec(2, 2, vec![3.0, 1.0, 2.0, 2.0]);
+        let b = m.config.counts_to_bytes(&counts);
+        assert_eq!(b.get(0, 0), 3.0 * 16.0); // d=4 × 4 bytes
+        assert_eq!(b.get(0, 1), 1.0 * 16.0);
+    }
+
+    #[test]
+    fn loads_real_artifact_if_present() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny4");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert_eq!(m.name, "tiny4");
+            assert_eq!(m.config.p, 4);
+            assert!(m.n_params() > 1000);
+        }
+    }
+}

@@ -1,0 +1,163 @@
+//! Host-side dense tensors and Literal conversion.
+
+use anyhow::{Context, Result};
+
+/// Element types used by the model ABI.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+/// A dense host tensor (row-major).
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl HostTensor {
+    pub fn scalar_f32(v: f32) -> HostTensor {
+        HostTensor::F32(vec![v], vec![])
+    }
+
+    pub fn scalar_i32(v: i32) -> HostTensor {
+        HostTensor::I32(vec![v], vec![])
+    }
+
+    pub fn f32(data: Vec<f32>, shape: &[usize]) -> HostTensor {
+        assert_eq!(data.len(), shape.iter().product::<usize>(), "shape/data mismatch");
+        HostTensor::F32(data, shape.to_vec())
+    }
+
+    pub fn i32(data: Vec<i32>, shape: &[usize]) -> HostTensor {
+        assert_eq!(data.len(), shape.iter().product::<usize>(), "shape/data mismatch");
+        HostTensor::I32(data, shape.to_vec())
+    }
+
+    /// From a crate matrix (f64 → f32).
+    pub fn from_mat(m: &crate::util::Mat) -> HostTensor {
+        HostTensor::F32(
+            m.data().iter().map(|&v| v as f32).collect(),
+            vec![m.rows(), m.cols()],
+        )
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(_, s) | HostTensor::I32(_, s) => s,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            HostTensor::F32(..) => DType::F32,
+            HostTensor::I32(..) => DType::I32,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            HostTensor::F32(d, _) => Some(d),
+            _ => None,
+        }
+    }
+
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match self {
+            HostTensor::I32(d, _) => Some(d),
+            _ => None,
+        }
+    }
+
+    /// First element as f64 (for scalar outputs like loss).
+    pub fn item(&self) -> f64 {
+        match self {
+            HostTensor::F32(d, _) => d[0] as f64,
+            HostTensor::I32(d, _) => d[0] as f64,
+        }
+    }
+
+    /// Convert to an `xla::Literal` with this tensor's shape.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32(d, _) => xla::Literal::vec1(d),
+            HostTensor::I32(d, _) => xla::Literal::vec1(d),
+        };
+        lit.reshape(&dims).context("reshaping literal")
+    }
+
+    /// Read a literal back into a host tensor of known shape/dtype.
+    pub fn from_literal(lit: &xla::Literal, shape: &[usize], dtype: DType) -> Result<HostTensor> {
+        match dtype {
+            DType::F32 => {
+                let v = lit.to_vec::<f32>().context("literal→f32 vec")?;
+                anyhow::ensure!(
+                    v.len() == shape.iter().product::<usize>(),
+                    "literal has {} elements, shape {:?}",
+                    v.len(),
+                    shape
+                );
+                Ok(HostTensor::F32(v, shape.to_vec()))
+            }
+            DType::I32 => {
+                let v = lit.to_vec::<i32>().context("literal→i32 vec")?;
+                anyhow::ensure!(v.len() == shape.iter().product::<usize>(), "shape mismatch");
+                Ok(HostTensor::I32(v, shape.to_vec()))
+            }
+        }
+    }
+
+    /// View a `[rows, cols]` f32 tensor as a crate matrix.
+    pub fn to_mat(&self) -> Result<crate::util::Mat> {
+        let s = self.shape();
+        anyhow::ensure!(s.len() == 2, "to_mat needs rank-2, got {s:?}");
+        let d = self.as_f32().context("to_mat needs f32")?;
+        Ok(crate::util::Mat::from_vec(
+            s[0],
+            s[1],
+            d.iter().map(|&v| v as f64).collect(),
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_round_trip_f32() {
+        let t = HostTensor::f32(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit, &[2, 3], DType::F32).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn literal_round_trip_i32_scalar() {
+        let t = HostTensor::scalar_i32(42);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit, &[], DType::I32).unwrap();
+        assert_eq!(back.item(), 42.0);
+    }
+
+    #[test]
+    fn mat_round_trip() {
+        let m = crate::util::Mat::from_fn(3, 2, |r, c| (r * 2 + c) as f64);
+        let t = HostTensor::from_mat(&m);
+        assert_eq!(t.shape(), &[3, 2]);
+        let back = t.to_mat().unwrap();
+        assert!(back.linf_dist(&m) < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn shape_mismatch_panics() {
+        HostTensor::f32(vec![1.0; 5], &[2, 3]);
+    }
+}

@@ -1,0 +1,357 @@
+//! Network topology substrate (paper §3.2).
+//!
+//! Models the four topology families the paper studies — homogeneous
+//! (NVSwitch-like), ring (NVLink ring), symmetric tree, and asymmetric tree
+//! — as an explicit graph of physical links, from which we derive:
+//!
+//! * per-pair end-to-end `α_ij` / `β_ij` matrices (latency seconds /
+//!   inverse bandwidth seconds-per-byte): α sums over hops, β is the
+//!   slowest traversed link ("the most limited bandwidth in the hops
+//!   dominates the final bandwidth", §3.2);
+//! * the level decomposition `G_t^i` (devices grouped by how far up the
+//!   tree their path to `i` goes) used by the Eq. 5 smoothing;
+//! * explicit per-pair link paths, so the [`crate::comm`] engine can model
+//!   *contention* — multiple flows sharing a switch uplink — which is what
+//!   actually produces the Table-1 slowdowns on inter-node links;
+//! * node (server) membership, from which the coordinator builds the
+//!   intra-node expert mask used by the FasterMoE-Hir gate.
+
+mod ring;
+mod smoothing;
+mod tree;
+
+pub mod presets;
+
+pub use smoothing::{smooth_levels, LevelParams};
+pub use tree::TreeSpec;
+
+use crate::util::{rng::Rng, Mat};
+
+/// One physical link: fixed latency `alpha` (s) + inverse bandwidth `beta`
+/// (s/byte). The α-β model of §4.1.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Link {
+    pub alpha: f64,
+    pub beta: f64,
+}
+
+impl Link {
+    pub fn new(alpha: f64, beta: f64) -> Self {
+        Link { alpha, beta }
+    }
+
+    /// Convenience: a link described by bandwidth in GB/s and latency in µs.
+    pub fn from_gbps_us(gb_per_s: f64, alpha_us: f64) -> Self {
+        Link { alpha: alpha_us * 1e-6, beta: 1.0 / (gb_per_s * 1e9) }
+    }
+
+    /// Time to move `bytes` over this link alone.
+    pub fn time(&self, bytes: f64) -> f64 {
+        self.alpha + self.beta * bytes
+    }
+}
+
+/// A directed traversal of a physical link (`up` = toward the root).
+/// Contention is counted per `(edge, direction)` — links are full duplex.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct DirLink {
+    pub edge: usize,
+    pub up: bool,
+}
+
+/// Which family a topology was built from (kept for reporting/serialization).
+#[derive(Clone, Debug, PartialEq)]
+pub enum TopologyKind {
+    Homogeneous,
+    Ring,
+    Tree { spec: TreeSpec, symmetric: bool },
+}
+
+/// A fully-elaborated topology: `P` devices + the link graph between them.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub(crate) p: usize,
+    pub(crate) kind: TopologyKind,
+    /// Per-pair end-to-end latency (s); `alpha[i][i]` is the local-copy cost.
+    pub(crate) alpha: Mat,
+    /// Per-pair end-to-end inverse bandwidth (s/byte).
+    pub(crate) beta: Mat,
+    /// Level of the pair for Eq.5 grouping: 0 = same device, 1 = same leaf
+    /// switch/adjacent, t = path peaks t-1 levels above the leaf switches.
+    pub(crate) level: Vec<usize>,
+    /// Leaf switch (server/node) id per device.
+    pub(crate) node_of: Vec<usize>,
+    /// Physical links; index = edge id.
+    pub(crate) links: Vec<Link>,
+    /// Whether a link is a shared medium (switch uplink / ring segment)
+    /// that concurrent flows contend on. Device-to-leaf-switch links
+    /// (NVLink/NVSwitch lanes) are non-blocking point-to-point fabric and
+    /// do not contend.
+    pub(crate) link_contended: Vec<bool>,
+    /// Per-pair directed link path (empty for i == j).
+    pub(crate) paths: Vec<Vec<DirLink>>,
+}
+
+impl Topology {
+    // ------------------------------------------------------------------
+    // Constructors
+    // ------------------------------------------------------------------
+
+    /// Homogeneous all-to-all fabric (e.g. one NVSwitch): every pair gets a
+    /// dedicated link with identical parameters.
+    pub fn homogeneous(p: usize, link: Link, local: Link) -> Topology {
+        assert!(p >= 1);
+        let mut links = Vec::new();
+        let mut paths = vec![Vec::new(); p * p];
+        let mut edge_of = vec![usize::MAX; p * p];
+        for i in 0..p {
+            for j in (i + 1)..p {
+                let id = links.len();
+                links.push(link);
+                edge_of[i * p + j] = id;
+                edge_of[j * p + i] = id;
+            }
+        }
+        let mut alpha = Mat::zeros(p, p);
+        let mut beta = Mat::zeros(p, p);
+        let mut level = vec![0usize; p * p];
+        for i in 0..p {
+            for j in 0..p {
+                if i == j {
+                    alpha.set(i, j, local.alpha);
+                    beta.set(i, j, local.beta);
+                } else {
+                    let e = edge_of[i * p + j];
+                    paths[i * p + j] = vec![DirLink { edge: e, up: i < j }];
+                    alpha.set(i, j, link.alpha);
+                    beta.set(i, j, link.beta);
+                    level[i * p + j] = 1;
+                }
+            }
+        }
+        let n_links = links.len();
+        Topology {
+            p,
+            kind: TopologyKind::Homogeneous,
+            alpha,
+            beta,
+            level,
+            node_of: vec![0; p],
+            links,
+            link_contended: vec![true; n_links],
+            paths,
+        }
+    }
+
+    /// Ring of `links.len()` devices; `links[i]` connects device `i` to
+    /// `(i+1) % p`. Non-adjacent pairs hop through intermediate devices:
+    /// the slowest traversed link dominates β, latencies accumulate (§3.2).
+    pub fn ring(links_ring: Vec<Link>, local: Link) -> Topology {
+        ring::build(links_ring, local)
+    }
+
+    /// Hierarchical tree from a nested-list spec (paper notation:
+    /// `[[2,2],[2]]`). `level_links[0]` is the device↔leaf-switch link,
+    /// `level_links[h]` the switch uplink at height `h`; the last entry is
+    /// reused for deeper levels.
+    pub fn tree(spec: &TreeSpec, level_links: &[Link], local: Link) -> Topology {
+        tree::build(spec, level_links, local)
+    }
+
+    // ------------------------------------------------------------------
+    // Accessors
+    // ------------------------------------------------------------------
+
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    pub fn kind(&self) -> &TopologyKind {
+        &self.kind
+    }
+
+    pub fn alpha(&self, i: usize, j: usize) -> f64 {
+        self.alpha.get(i, j)
+    }
+
+    pub fn beta(&self, i: usize, j: usize) -> f64 {
+        self.beta.get(i, j)
+    }
+
+    pub fn alpha_mat(&self) -> &Mat {
+        &self.alpha
+    }
+
+    pub fn beta_mat(&self) -> &Mat {
+        &self.beta
+    }
+
+    /// Pair level for Eq. 5 grouping (0 ⇔ i == j).
+    pub fn level(&self, i: usize, j: usize) -> usize {
+        self.level[i * self.p + j]
+    }
+
+    /// Number of distinct non-zero levels (`n` in the paper's n-layer tree).
+    pub fn n_levels(&self) -> usize {
+        self.level.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Server/node id of a device (devices under the same leaf switch).
+    pub fn node_of(&self, dev: usize) -> usize {
+        self.node_of[dev]
+    }
+
+    pub fn same_node(&self, i: usize, j: usize) -> bool {
+        self.node_of[i] == self.node_of[j]
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.node_of.iter().copied().max().unwrap_or(0) + 1
+    }
+
+    /// Devices grouped by node, in device order.
+    pub fn nodes(&self) -> Vec<Vec<usize>> {
+        let mut groups = vec![Vec::new(); self.n_nodes()];
+        for d in 0..self.p {
+            groups[self.node_of[d]].push(d);
+        }
+        groups
+    }
+
+    /// `[P, N]` mask: 1.0 where expert `e` (hosted on device `e / e_per_dev`)
+    /// is on the same node as device `i`. Feeds the Hir gate input.
+    pub fn local_mask(&self, n_experts: usize, e_per_dev: usize) -> Mat {
+        Mat::from_fn(self.p, n_experts, |i, e| {
+            let host = e / e_per_dev;
+            if self.same_node(i, host) {
+                1.0
+            } else {
+                0.0
+            }
+        })
+    }
+
+    /// Directed link path of a pair (empty for i == j: local copy).
+    pub fn path(&self, i: usize, j: usize) -> &[DirLink] {
+        &self.paths[i * self.p + j]
+    }
+
+    pub fn links(&self) -> &[Link] {
+        &self.links
+    }
+
+    /// Does this link contend (shared medium) under concurrent flows?
+    pub fn link_contended(&self, edge: usize) -> bool {
+        self.link_contended[edge]
+    }
+
+    /// The paper's `G_t^i`: devices whose pair level with `i` equals `t`.
+    pub fn group(&self, i: usize, t: usize) -> Vec<usize> {
+        (0..self.p).filter(|&j| self.level(i, j) == t).collect()
+    }
+
+    /// Perturb all per-pair α/β with relative log-normal-ish noise — the
+    /// "profiling noise" that Eq. 5 smoothing is designed to remove. The
+    /// link graph is left untouched (contention still uses true links).
+    pub fn with_noise(&self, rel_sigma: f64, seed: u64) -> Topology {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut t = self.clone();
+        let p = self.p;
+        for i in 0..p {
+            for j in 0..p {
+                let fa: f64 = 1.0 + rel_sigma * (rng.f64() * 2.0 - 1.0);
+                let fb: f64 = 1.0 + rel_sigma * (rng.f64() * 2.0 - 1.0);
+                t.alpha.set(i, j, self.alpha.get(i, j) * fa.max(0.05));
+                t.beta.set(i, j, self.beta.get(i, j) * fb.max(0.05));
+            }
+        }
+        t
+    }
+
+    /// Replace the per-pair α/β with their Eq. 5 level-smoothed versions.
+    pub fn smoothed(&self) -> Topology {
+        let params = smoothing::smooth_levels(self);
+        let mut t = self.clone();
+        for i in 0..self.p {
+            for j in 0..self.p {
+                let l = self.level(i, j);
+                t.alpha.set(i, j, params.alpha[l]);
+                t.beta.set(i, j, params.beta[l]);
+            }
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn l(beta: f64) -> Link {
+        Link::new(1e-6, beta)
+    }
+
+    #[test]
+    fn homogeneous_is_uniform() {
+        let t = Topology::homogeneous(4, l(1e-9), Link::new(0.0, 1e-11));
+        assert_eq!(t.p(), 4);
+        for i in 0..4 {
+            for j in 0..4 {
+                if i == j {
+                    assert_eq!(t.beta(i, j), 1e-11);
+                    assert_eq!(t.level(i, j), 0);
+                } else {
+                    assert_eq!(t.beta(i, j), 1e-9);
+                    assert_eq!(t.level(i, j), 1);
+                    assert_eq!(t.path(i, j).len(), 1);
+                }
+            }
+        }
+        assert_eq!(t.n_levels(), 1);
+        assert_eq!(t.n_nodes(), 1);
+    }
+
+    #[test]
+    fn homogeneous_pairs_have_distinct_links() {
+        let t = Topology::homogeneous(3, l(1e-9), Link::new(0.0, 1e-11));
+        // 3 unordered pairs → 3 physical links, no sharing (no contention).
+        assert_eq!(t.links().len(), 3);
+        assert_ne!(t.path(0, 1)[0].edge, t.path(0, 2)[0].edge);
+    }
+
+    #[test]
+    fn local_mask_marks_same_node() {
+        let spec = TreeSpec::parse("[[2],[2]]").unwrap();
+        let t = Topology::tree(&spec, &[l(1e-10), l(1e-8)], Link::new(0.0, 1e-11));
+        let m = t.local_mask(4, 1);
+        assert_eq!(m.get(0, 0), 1.0);
+        assert_eq!(m.get(0, 1), 1.0);
+        assert_eq!(m.get(0, 2), 0.0);
+        assert_eq!(m.get(3, 3), 1.0);
+        assert_eq!(m.get(3, 0), 0.0);
+    }
+
+    #[test]
+    fn groups_partition_devices() {
+        let spec = TreeSpec::parse("[[2],[2]]").unwrap();
+        let t = Topology::tree(&spec, &[l(1e-10), l(1e-8)], Link::new(0.0, 1e-11));
+        for i in 0..4 {
+            let mut all: Vec<usize> = Vec::new();
+            for t_ in 0..=t.n_levels() {
+                all.extend(t.group(i, t_));
+            }
+            all.sort();
+            assert_eq!(all, vec![0, 1, 2, 3]);
+        }
+    }
+
+    #[test]
+    fn noise_preserves_links_and_is_deterministic() {
+        let t = Topology::homogeneous(4, l(1e-9), Link::new(0.0, 1e-11));
+        let n1 = t.with_noise(0.2, 42);
+        let n2 = t.with_noise(0.2, 42);
+        assert_eq!(n1.beta_mat(), n2.beta_mat());
+        assert_eq!(n1.links(), t.links());
+        assert!(n1.beta_mat().linf_dist(t.beta_mat()) > 0.0);
+    }
+}

@@ -1,0 +1,187 @@
+//! Topology presets for the paper's testbeds (Table 2) and the Table 1
+//! motivation experiment.
+//!
+//! Bandwidth/latency numbers come from public hardware specs and are tuned
+//! so the Table-1 micro-benchmark reproduces the paper's measurements under
+//! the contention exchange model (see `benches/table1_uneven.rs`):
+//!
+//! * local copy      ≈ 222 GB/s (the paper's 0↔0 at 128/4 MB in 144 µs)
+//! * NVLink pair     ≈ 45 GB/s  (0↔1: 32 MB in 758 µs)
+//! * NVSwitch (A100) ≈ 235 GB/s per pair
+//! * node uplink     ≈ 23 GB/s on the Table-1 cluster (0↔0̂: 32 MB in
+//!   5609 µs with 4 flows sharing each uplink), 25 GB/s on cluster A
+//!   (100 Gb/s RoCE / 4 GPUs × 2 NICs), 12.5 GB/s on clusters B/C
+//!   (100 Gb/s / 8 GPUs).
+//!
+//! The paper's clusters: A = 8×A100/node, NVSwitch, asymmetric multi-switch;
+//! B = 8×V100/node, NVLink, all nodes on one switch (symmetric); C =
+//! 8×V100/node, many switches (asymmetric, the contention-heavy testbed).
+
+use super::{Link, Topology, TreeSpec};
+
+/// Local (same-device) copy: no network, just HBM bandwidth.
+pub fn local_copy() -> Link {
+    Link::new(2e-6, 1.0 / 222e9)
+}
+
+/// The [[0,1],[0̂,1̂]] topology of Table 1.
+pub fn table1() -> Topology {
+    let spec = TreeSpec::parse("[2,2]").unwrap();
+    Topology::tree(
+        &spec,
+        &[
+            Link::from_gbps_us(45.0, 2.0),  // NVLink device link
+            Link::from_gbps_us(23.0, 10.0), // node uplink
+        ],
+        local_copy(),
+    )
+}
+
+/// Cluster A: 8 × A100 per node, NVSwitch intra-node, asymmetric
+/// inter-node switching. `n_nodes` ∈ 1..=8 (paper runs 8–64 experts).
+pub fn cluster_a(n_nodes: usize) -> Topology {
+    cluster(
+        n_nodes,
+        8,
+        Link::from_gbps_us(235.0, 2.0), // NVSwitch
+        Link::from_gbps_us(25.0, 10.0), // 100 Gb/s RoCE per 4 GPUs (2 NICs)
+        Link::from_gbps_us(20.0, 15.0), // second-level switch
+        /*symmetric=*/ false,
+    )
+}
+
+/// Cluster B: 8 × V100 per node, NVLink intra-node, **all nodes on the
+/// same switch** (symmetric 2-level tree).
+pub fn cluster_b(n_nodes: usize) -> Topology {
+    cluster(
+        n_nodes,
+        8,
+        Link::from_gbps_us(45.0, 2.0),  // NVLink
+        Link::from_gbps_us(12.5, 15.0), // 100 Gb/s RoCE / 8 GPUs
+        Link::from_gbps_us(12.5, 15.0),
+        /*symmetric=*/ true,
+    )
+}
+
+/// Cluster C: like B but across many switches with a slower spine —
+/// the paper's contention-heavy testbed where TA-MoE gains most.
+pub fn cluster_c(n_nodes: usize) -> Topology {
+    cluster(
+        n_nodes,
+        8,
+        Link::from_gbps_us(45.0, 2.0),
+        Link::from_gbps_us(12.5, 15.0),
+        Link::from_gbps_us(8.0, 25.0), // congested spine
+        /*symmetric=*/ false,
+    )
+}
+
+/// Look up a preset by name ("A"/"B"/"C" or "table1").
+pub fn by_name(name: &str, n_nodes: usize) -> Option<Topology> {
+    match name.to_ascii_uppercase().as_str() {
+        "A" => Some(cluster_a(n_nodes)),
+        "B" => Some(cluster_b(n_nodes)),
+        "C" => Some(cluster_c(n_nodes)),
+        "TABLE1" => Some(table1()),
+        _ => None,
+    }
+}
+
+fn cluster(
+    n_nodes: usize,
+    gpus: usize,
+    dev: Link,
+    uplink: Link,
+    spine: Link,
+    symmetric: bool,
+) -> Topology {
+    assert!(n_nodes >= 1);
+    let spec = if n_nodes == 1 {
+        TreeSpec::Devices(gpus)
+    } else if symmetric || n_nodes == 2 {
+        // all leaf switches under one spine switch
+        TreeSpec::Switch((0..n_nodes).map(|_| TreeSpec::Devices(gpus)).collect())
+    } else {
+        // asymmetric: first half of the nodes share a pod switch, the rest
+        // hang off the spine directly — e.g. 4 nodes → [[8,8],[8],[8]]
+        // (the Figure 2(d) shape at cluster scale).
+        let pod = n_nodes / 2;
+        let mut children = vec![TreeSpec::Switch(
+            (0..pod).map(|_| TreeSpec::Devices(gpus)).collect(),
+        )];
+        for _ in pod..n_nodes {
+            children.push(TreeSpec::Switch(vec![TreeSpec::Devices(gpus)]));
+        }
+        TreeSpec::Switch(children)
+    };
+    Topology::tree(&spec, &[dev, uplink, spine], local_copy())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_matches_paper_link_speeds() {
+        let t = table1();
+        assert_eq!(t.p(), 4);
+        // intra-pair raw time for 32 MB ≈ 713 µs + α (paper: 758 µs —
+        // the difference is send/recv overhead, absorbed into α here).
+        let bytes = 32.0 * 1024.0 * 1024.0 * 4.0 / 4.0; // placeholder math kept simple
+        let _ = bytes;
+        let t01 = t.alpha(0, 1) + t.beta(0, 1) * 32e6;
+        assert!(t01 > 6e-4 && t01 < 8e-4, "{t01}");
+        // local copy ≈ 144 µs for 32 MB
+        let t00 = t.alpha(0, 0) + t.beta(0, 0) * 32e6;
+        assert!(t00 > 1.2e-4 && t00 < 1.7e-4, "{t00}");
+    }
+
+    #[test]
+    fn cluster_b_is_symmetric_tree() {
+        let t = cluster_b(4);
+        assert_eq!(t.p(), 32);
+        assert_eq!(t.n_nodes(), 4);
+        match t.kind() {
+            super::super::TopologyKind::Tree { symmetric, .. } => assert!(symmetric),
+            k => panic!("unexpected kind {k:?}"),
+        }
+        assert_eq!(t.n_levels(), 2);
+    }
+
+    #[test]
+    fn cluster_c_is_asymmetric_with_spine_level() {
+        let t = cluster_c(4);
+        assert_eq!(t.p(), 32);
+        assert_eq!(t.n_nodes(), 4);
+        match t.kind() {
+            super::super::TopologyKind::Tree { symmetric, .. } => assert!(!symmetric),
+            k => panic!("unexpected kind {k:?}"),
+        }
+        // cross-pod traffic is slower than intra-pod inter-node traffic
+        assert!(t.beta(0, 31) > t.beta(0, 15));
+    }
+
+    #[test]
+    fn single_node_has_no_uplink_level() {
+        for t in [cluster_a(1), cluster_b(1), cluster_c(1)] {
+            assert_eq!(t.p(), 8);
+            assert_eq!(t.n_levels(), 1);
+            assert_eq!(t.n_nodes(), 1);
+        }
+    }
+
+    #[test]
+    fn by_name_resolves() {
+        assert_eq!(by_name("a", 2).unwrap().p(), 16);
+        assert_eq!(by_name("B", 2).unwrap().p(), 16);
+        assert_eq!(by_name("table1", 0).unwrap().p(), 4);
+        assert!(by_name("nope", 1).is_none());
+    }
+
+    #[test]
+    fn inter_node_slower_than_intra() {
+        for t in [cluster_a(2), cluster_b(2), cluster_c(2)] {
+            assert!(t.beta(0, 8) > t.beta(0, 1) * 1.5);
+        }
+    }
+}

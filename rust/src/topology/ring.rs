@@ -1,0 +1,144 @@
+//! Ring topologies (paper §3.2, Figure 2(b): NVLink rings).
+//!
+//! Devices sit on a cycle; `links[i]` joins device `i` and `(i+1) % p`.
+//! Adjacent-link bandwidths may differ (different NVLink lane counts).
+//! Non-adjacent traffic hops through intermediate devices, so the slowest
+//! traversed link bottlenecks β while latencies accumulate — exactly the
+//! "communication of nonadjacent devices has to hop through intermediate
+//! devices and the slowest link may become the bottleneck" behaviour the
+//! paper describes. The pair level used by Eq. 5 smoothing is the hop
+//! distance (the ring's "hierarchical characteristic", §4.2).
+
+use super::{DirLink, Link, Topology, TopologyKind};
+use crate::util::Mat;
+
+pub(super) fn build(links_ring: Vec<Link>, local: Link) -> Topology {
+    let p = links_ring.len();
+    assert!(p >= 2, "a ring needs at least 2 devices");
+
+    let mut alpha = Mat::zeros(p, p);
+    let mut beta = Mat::zeros(p, p);
+    let mut level = vec![0usize; p * p];
+    let mut paths = vec![Vec::new(); p * p];
+
+    for i in 0..p {
+        for j in 0..p {
+            if i == j {
+                alpha.set(i, j, local.alpha);
+                beta.set(i, j, local.beta);
+                continue;
+            }
+            // choose the cheaper arc: fewer hops, tie-break on β sum
+            let cw = arc(i, j, p, true);
+            let ccw = arc(i, j, p, false);
+            let cost = |path: &Vec<usize>| {
+                let bsum: f64 = path.iter().map(|&e| links_ring[e].beta).sum();
+                (path.len(), (bsum * 1e15) as u64)
+            };
+            let path_edges = if cost(&cw) <= cost(&ccw) { cw } else { ccw };
+            let a_sum: f64 = path_edges.iter().map(|&e| links_ring[e].alpha).sum();
+            let b_max: f64 = path_edges
+                .iter()
+                .map(|&e| links_ring[e].beta)
+                .fold(0.0, f64::max);
+            alpha.set(i, j, a_sum);
+            beta.set(i, j, b_max);
+            level[i * p + j] = path_edges.len();
+            // direction flag: `up` = clockwise traversal of the edge
+            let clockwise = path_edges
+                .first()
+                .map(|&e| e == i) // clockwise first edge is link i
+                .unwrap_or(true);
+            paths[i * p + j] = path_edges
+                .into_iter()
+                .map(|e| DirLink { edge: e, up: clockwise })
+                .collect();
+        }
+    }
+
+    Topology {
+        p,
+        kind: TopologyKind::Ring,
+        alpha,
+        beta,
+        level,
+        node_of: vec![0; p], // a ring is an intra-node fabric
+        link_contended: vec![true; links_ring.len()],
+        links: links_ring,
+        paths,
+    }
+}
+
+/// Edge ids along the arc from i to j. Clockwise: i → i+1 → … → j uses
+/// edges i, i+1, …, j-1 (mod p); counter-clockwise uses i-1, …, j (mod p).
+fn arc(i: usize, j: usize, p: usize, clockwise: bool) -> Vec<usize> {
+    let mut edges = Vec::new();
+    let mut cur = i;
+    while cur != j {
+        if clockwise {
+            edges.push(cur);
+            cur = (cur + 1) % p;
+        } else {
+            cur = (cur + p - 1) % p;
+            edges.push(cur);
+        }
+    }
+    edges
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn uniform_ring(p: usize, beta: f64) -> Topology {
+        Topology::ring(vec![Link::new(1e-6, beta); p], Link::new(0.0, 1e-12))
+    }
+
+    #[test]
+    fn adjacent_single_hop() {
+        let t = uniform_ring(4, 1e-10);
+        assert_eq!(t.level(0, 1), 1);
+        assert_eq!(t.level(1, 0), 1);
+        assert_eq!(t.path(0, 1).len(), 1);
+        assert_eq!(t.beta(0, 1), 1e-10);
+    }
+
+    #[test]
+    fn opposite_takes_half_ring() {
+        let t = uniform_ring(4, 1e-10);
+        assert_eq!(t.level(0, 2), 2);
+        assert_eq!(t.path(0, 2).len(), 2);
+        // α accumulates over 2 hops
+        assert!((t.alpha(0, 2) - 2e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slowest_link_dominates_beta() {
+        // Link 1 (between devices 1 and 2) is 10× slower.
+        let mut links = vec![Link::new(1e-6, 1e-10); 4];
+        links[1] = Link::new(1e-6, 1e-9);
+        let t = Topology::ring(links, Link::new(0.0, 1e-12));
+        // 0→2 clockwise crosses edges 0,1 → bottleneck 1e-9; ccw crosses
+        // 3,2 → 1e-10 with same hop count, so the cheaper arc is chosen.
+        assert_eq!(t.beta(0, 2), 1e-10);
+        // 1→2 must use edge 1 (single hop) → sees the slow link.
+        assert_eq!(t.beta(1, 2), 1e-9);
+    }
+
+    #[test]
+    fn ring_is_single_node() {
+        let t = uniform_ring(6, 1e-10);
+        assert_eq!(t.n_nodes(), 1);
+        assert_eq!(t.n_levels(), 3); // hop distances 1, 2, 3
+    }
+
+    #[test]
+    fn levels_symmetric_in_hops() {
+        let t = uniform_ring(6, 1e-10);
+        for i in 0..6 {
+            for j in 0..6 {
+                assert_eq!(t.level(i, j), t.level(j, i));
+            }
+        }
+    }
+}

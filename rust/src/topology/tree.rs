@@ -1,0 +1,429 @@
+//! Hierarchical tree topologies (paper §3.2, Figure 2 c/d).
+//!
+//! The paper writes trees as nested lists: `[2,2]` is a 2-layer symmetric
+//! tree (a root switch with 2 leaf switches of 2 devices each);
+//! `[[2,2],[2]]` is the 3-layer asymmetric example of Figure 2(d).
+//! [`TreeSpec`] parses exactly that notation.
+//!
+//! The builder elaborates a spec into the explicit link graph:
+//! every device hangs off its leaf switch via a device link
+//! (`level_links[0]`, e.g. NVLink/NVSwitch), every non-root switch hangs
+//! off its parent via an uplink whose parameters come from the child's
+//! height (`level_links[h]`, e.g. the RoCE NIC at h = 1). End-to-end α is
+//! the sum over traversed links, end-to-end β the max (slowest hop
+//! dominates, §3.2).
+
+use super::{DirLink, Link, Topology, TopologyKind};
+use crate::util::Mat;
+
+/// Nested-list tree specification in the paper's notation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TreeSpec {
+    /// A leaf switch with `n` devices directly attached (`2` in the paper's
+    /// notation).
+    Devices(usize),
+    /// An internal switch with child sub-trees (`[...]`).
+    Switch(Vec<TreeSpec>),
+}
+
+impl TreeSpec {
+    /// Parse the paper's nested-list notation, e.g. `"[[2,2],[2]]"`.
+    pub fn parse(s: &str) -> Result<TreeSpec, String> {
+        let mut chars = s.chars().filter(|c| !c.is_whitespace()).peekable();
+        let spec = Self::parse_node(&mut chars)?;
+        if chars.next().is_some() {
+            return Err(format!("trailing characters in tree spec {s:?}"));
+        }
+        Ok(spec)
+    }
+
+    fn parse_node(
+        it: &mut std::iter::Peekable<impl Iterator<Item = char>>,
+    ) -> Result<TreeSpec, String> {
+        match it.peek() {
+            Some('[') => {
+                it.next();
+                let mut children = Vec::new();
+                loop {
+                    match it.peek() {
+                        Some(']') => {
+                            it.next();
+                            break;
+                        }
+                        Some(',') => {
+                            it.next();
+                        }
+                        Some(_) => children.push(Self::parse_node(it)?),
+                        None => return Err("unterminated '['".into()),
+                    }
+                }
+                if children.is_empty() {
+                    return Err("empty switch '[]'".into());
+                }
+                // A list of plain integers like `[2,2]` means "switch whose
+                // children are leaf switches with that many devices".
+                Ok(TreeSpec::Switch(children))
+            }
+            Some(c) if c.is_ascii_digit() => {
+                let mut n = 0usize;
+                while let Some(c) = it.peek() {
+                    if let Some(d) = c.to_digit(10) {
+                        n = n * 10 + d as usize;
+                        it.next();
+                    } else {
+                        break;
+                    }
+                }
+                if n == 0 {
+                    return Err("zero-device leaf".into());
+                }
+                Ok(TreeSpec::Devices(n))
+            }
+            other => Err(format!("unexpected {other:?} in tree spec")),
+        }
+    }
+
+    /// Symmetric n-layer tree from per-level child counts, paper's
+    /// `[L_0, L_1, ...]` with `L_last` devices per leaf switch. E.g.
+    /// `symmetric(&[2, 2])` == `parse("[2,2]")`.
+    pub fn symmetric(levels: &[usize]) -> TreeSpec {
+        assert!(!levels.is_empty());
+        if levels.len() == 1 {
+            TreeSpec::Devices(levels[0])
+        } else {
+            TreeSpec::Switch(
+                (0..levels[0])
+                    .map(|_| TreeSpec::symmetric(&levels[1..]))
+                    .collect(),
+            )
+        }
+    }
+
+    /// Total devices under this (sub-)tree.
+    pub fn n_devices(&self) -> usize {
+        match self {
+            TreeSpec::Devices(n) => *n,
+            TreeSpec::Switch(cs) => cs.iter().map(|c| c.n_devices()).sum(),
+        }
+    }
+
+    /// Height: a leaf switch has height 1.
+    pub fn height(&self) -> usize {
+        match self {
+            TreeSpec::Devices(_) => 1,
+            TreeSpec::Switch(cs) => 1 + cs.iter().map(|c| c.height()).max().unwrap(),
+        }
+    }
+
+    /// Is the tree symmetric (all siblings identical at every level)?
+    pub fn is_symmetric(&self) -> bool {
+        match self {
+            TreeSpec::Devices(_) => true,
+            TreeSpec::Switch(cs) => {
+                cs.iter().all(|c| c == &cs[0]) && cs[0].is_symmetric()
+            }
+        }
+    }
+
+    /// Device-group sizes of the leaf switches, left to right.
+    pub fn leaf_groups(&self) -> Vec<usize> {
+        match self {
+            TreeSpec::Devices(n) => vec![*n],
+            TreeSpec::Switch(cs) => cs.iter().flat_map(|c| c.leaf_groups()).collect(),
+        }
+    }
+
+    /// The paper's §4.2 asymmetric→symmetric transformation: "merge the
+    /// separate nodes into the close symmetric sub-trees". All leaf device
+    /// groups are re-attached directly under a single root, e.g.
+    /// `[[2,2],[2]] → [[2,2,2]]` (Figure 2(d) example).
+    pub fn merge_to_symmetric(&self) -> TreeSpec {
+        if self.is_symmetric() {
+            return self.clone();
+        }
+        TreeSpec::Switch(self.leaf_groups().into_iter().map(TreeSpec::Devices).collect())
+    }
+}
+
+impl std::fmt::Display for TreeSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TreeSpec::Devices(n) => write!(f, "{n}"),
+            TreeSpec::Switch(cs) => {
+                write!(f, "[")?;
+                for (i, c) in cs.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ",")?;
+                    }
+                    write!(f, "{c}")?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+/// Elaborated switch graph used during construction.
+struct Builder {
+    /// parent switch of each switch (root: usize::MAX)
+    parent: Vec<usize>,
+    /// height of each switch (leaf switch = 1)
+    height: Vec<usize>,
+    /// uplink edge id of each switch (to its parent; root: usize::MAX)
+    uplink: Vec<usize>,
+    /// leaf switch of each device
+    dev_switch: Vec<usize>,
+    /// device link edge id of each device
+    dev_edge: Vec<usize>,
+    links: Vec<Link>,
+    /// device links are non-blocking point-to-point (false); switch
+    /// uplinks are shared media (true)
+    contended: Vec<bool>,
+}
+
+impl Builder {
+    fn link_at(&self, level_links: &[Link], h: usize) -> Link {
+        *level_links
+            .get(h.min(level_links.len() - 1))
+            .expect("level_links non-empty")
+    }
+
+    fn add(&mut self, spec: &TreeSpec, level_links: &[Link]) -> usize {
+        match spec {
+            TreeSpec::Devices(n) => {
+                let sw = self.parent.len();
+                self.parent.push(usize::MAX);
+                self.height.push(1);
+                self.uplink.push(usize::MAX);
+                for _ in 0..*n {
+                    let e = self.links.len();
+                    self.links.push(self.link_at(level_links, 0));
+                    self.contended.push(false);
+                    self.dev_switch.push(sw);
+                    self.dev_edge.push(e);
+                }
+                sw
+            }
+            TreeSpec::Switch(cs) => {
+                let children: Vec<usize> =
+                    cs.iter().map(|c| self.add(c, level_links)).collect();
+                let sw = self.parent.len();
+                let h = 1 + children.iter().map(|&c| self.height[c]).max().unwrap();
+                self.parent.push(usize::MAX);
+                self.height.push(h);
+                self.uplink.push(usize::MAX);
+                for &c in &children {
+                    let e = self.links.len();
+                    self.links.push(self.link_at(level_links, self.height[c]));
+                    self.contended.push(true);
+                    self.parent[c] = sw;
+                    self.uplink[c] = e;
+                }
+                sw
+            }
+        }
+    }
+
+    /// Chain of switches from a device's leaf switch up to the root.
+    fn chain(&self, dev: usize) -> Vec<usize> {
+        let mut v = vec![self.dev_switch[dev]];
+        while self.parent[*v.last().unwrap()] != usize::MAX {
+            v.push(self.parent[*v.last().unwrap()]);
+        }
+        v
+    }
+}
+
+pub(super) fn build(spec: &TreeSpec, level_links: &[Link], local: Link) -> Topology {
+    assert!(!level_links.is_empty(), "need at least the device link level");
+    let mut b = Builder {
+        parent: Vec::new(),
+        height: Vec::new(),
+        uplink: Vec::new(),
+        dev_switch: Vec::new(),
+        dev_edge: Vec::new(),
+        links: Vec::new(),
+        contended: Vec::new(),
+    };
+    b.add(spec, level_links);
+    let p = b.dev_switch.len();
+    assert!(p >= 1, "tree has no devices");
+
+    let mut alpha = Mat::zeros(p, p);
+    let mut beta = Mat::zeros(p, p);
+    let mut level = vec![0usize; p * p];
+    let mut paths = vec![Vec::new(); p * p];
+
+    // node ids: compact leaf-switch ids in first-seen order
+    let mut node_ids = std::collections::HashMap::new();
+    let node_of: Vec<usize> = (0..p)
+        .map(|d| {
+            let sw = b.dev_switch[d];
+            let next = node_ids.len();
+            *node_ids.entry(sw).or_insert(next)
+        })
+        .collect();
+
+    for i in 0..p {
+        let ci = b.chain(i);
+        for j in 0..p {
+            if i == j {
+                alpha.set(i, j, local.alpha);
+                beta.set(i, j, local.beta);
+                continue;
+            }
+            let cj = b.chain(j);
+            // lowest common ancestor: first switch of ci present in cj
+            let (mut ai, mut aj) = (0usize, 0usize);
+            'outer: for (xi, sw) in ci.iter().enumerate() {
+                for (xj, sw2) in cj.iter().enumerate() {
+                    if sw == sw2 {
+                        ai = xi;
+                        aj = xj;
+                        break 'outer;
+                    }
+                }
+            }
+            // path: device link up, uplinks up to (not incl.) LCA, then down
+            let mut path = vec![DirLink { edge: b.dev_edge[i], up: true }];
+            for &sw in &ci[..ai] {
+                path.push(DirLink { edge: b.uplink[sw], up: true });
+            }
+            for &sw in cj[..aj].iter().rev() {
+                path.push(DirLink { edge: b.uplink[sw], up: false });
+            }
+            path.push(DirLink { edge: b.dev_edge[j], up: false });
+
+            let a_sum: f64 = path.iter().map(|dl| b.links[dl.edge].alpha).sum();
+            let b_max: f64 = path
+                .iter()
+                .map(|dl| b.links[dl.edge].beta)
+                .fold(0.0, f64::max);
+            alpha.set(i, j, a_sum);
+            beta.set(i, j, b_max);
+            // pair level: 1 = same leaf switch; +1 per level the path climbs
+            level[i * p + j] = 1 + ai.max(aj);
+            paths[i * p + j] = path;
+        }
+    }
+
+    Topology {
+        p,
+        kind: TopologyKind::Tree { spec: spec.clone(), symmetric: spec.is_symmetric() },
+        alpha,
+        beta,
+        level,
+        node_of,
+        links: b.links,
+        link_contended: b.contended,
+        paths,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn links() -> Vec<Link> {
+        vec![
+            Link::new(1e-6, 1e-11),  // device link: 100 GB/s
+            Link::new(5e-6, 1e-10),  // switch uplink: 10 GB/s
+            Link::new(1e-5, 1e-9),   // higher level: 1 GB/s
+        ]
+    }
+
+    #[test]
+    fn parse_round_trips() {
+        for s in ["[2,2]", "[[2,2],[2]]", "[8,8,8]", "[[4],[4],[4],[4]]"] {
+            let spec = TreeSpec::parse(s).unwrap();
+            assert_eq!(spec.to_string(), s);
+        }
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(TreeSpec::parse("[]").is_err());
+        assert!(TreeSpec::parse("[2,").is_err());
+        assert!(TreeSpec::parse("2]").is_err());
+        assert!(TreeSpec::parse("[0]").is_err());
+        assert!(TreeSpec::parse("abc").is_err());
+    }
+
+    #[test]
+    fn symmetric_builder_matches_notation() {
+        assert_eq!(TreeSpec::symmetric(&[2, 2]), TreeSpec::parse("[2,2]").unwrap());
+        assert!(TreeSpec::parse("[2,2]").unwrap().is_symmetric());
+        assert!(!TreeSpec::parse("[[2,2],[2]]").unwrap().is_symmetric());
+    }
+
+    #[test]
+    fn figure2d_merges_to_figure2c_shape() {
+        // The paper's example: [[2,2],[2]] merges into [[2,2,2]] ≡ [3·2].
+        let spec = TreeSpec::parse("[[2,2],[2]]").unwrap();
+        let merged = spec.merge_to_symmetric();
+        assert_eq!(merged, TreeSpec::parse("[2,2,2]").unwrap());
+        assert!(merged.is_symmetric());
+        assert_eq!(merged.n_devices(), spec.n_devices());
+    }
+
+    #[test]
+    fn two_level_tree_betas() {
+        // [2,2]: intra-node pairs see the device link, inter-node pairs the
+        // slow uplink.
+        let spec = TreeSpec::parse("[2,2]").unwrap();
+        let t = Topology::tree(&spec, &links(), Link::new(0.0, 1e-12));
+        assert_eq!(t.p(), 4);
+        assert_eq!(t.beta(0, 1), 1e-11);
+        assert_eq!(t.beta(0, 2), 1e-10);
+        assert_eq!(t.beta(2, 3), 1e-11);
+        assert_eq!(t.level(0, 1), 1);
+        assert_eq!(t.level(0, 2), 2);
+        assert_eq!(t.node_of(0), t.node_of(1));
+        assert_ne!(t.node_of(0), t.node_of(2));
+    }
+
+    #[test]
+    fn alpha_accumulates_over_hops() {
+        let spec = TreeSpec::parse("[2,2]").unwrap();
+        let t = Topology::tree(&spec, &links(), Link::new(0.0, 1e-12));
+        // intra-node: two device links
+        assert!((t.alpha(0, 1) - 2e-6).abs() < 1e-12);
+        // inter-node: two device links + two uplinks
+        assert!((t.alpha(0, 2) - (2e-6 + 2.0 * 5e-6)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paths_share_uplink_edges() {
+        // Both 0→2 and 1→3 cross the same two uplink edges in [2,2] — the
+        // contention the comm engine models.
+        let spec = TreeSpec::parse("[2,2]").unwrap();
+        let t = Topology::tree(&spec, &links(), Link::new(0.0, 1e-12));
+        let p02: Vec<usize> = t.path(0, 2).iter().map(|d| d.edge).collect();
+        let p13: Vec<usize> = t.path(1, 3).iter().map(|d| d.edge).collect();
+        let shared: Vec<_> = p02.iter().filter(|e| p13.contains(e)).collect();
+        assert_eq!(shared.len(), 2);
+    }
+
+    #[test]
+    fn asymmetric_tree_levels() {
+        // [[2,2],[2]]: devices 0..3 under the deep branch, 4..5 shallow.
+        let spec = TreeSpec::parse("[[2,2],[2]]").unwrap();
+        let t = Topology::tree(&spec, &links(), Link::new(0.0, 1e-12));
+        assert_eq!(t.p(), 6);
+        assert_eq!(t.level(0, 1), 1); // same leaf
+        assert_eq!(t.level(0, 2), 2); // across the [2,2] sub-root
+        assert_eq!(t.level(0, 4), 3); // across the global root
+        assert_eq!(t.level(4, 5), 1);
+        assert_eq!(t.n_levels(), 3);
+        assert_eq!(t.n_nodes(), 3);
+    }
+
+    #[test]
+    fn device_count_matches_spec() {
+        for s in ["[2,2]", "[[2,2],[2]]", "[4,2]", "[2,2,2]"] {
+            let spec = TreeSpec::parse(s).unwrap();
+            let t = Topology::tree(&spec, &links(), Link::new(0.0, 1e-12));
+            assert_eq!(t.p(), spec.n_devices());
+        }
+    }
+}

@@ -1,0 +1,149 @@
+//! Criterion-less micro-bench harness + paper-style table printer.
+//!
+//! The `[[bench]]` targets are `harness = false` plain binaries; this
+//! module gives them timing (warmup + N samples, mean/σ/min) and aligned
+//! table output so each bench prints the same rows/series its paper table
+//! or figure reports. Results are also dumped as JSON lines so
+//! EXPERIMENTS.md numbers are regenerable by `cargo bench`.
+
+use std::time::Instant;
+
+/// Timing stats for one benchmarked closure.
+#[derive(Clone, Copy, Debug)]
+pub struct Sample {
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub iters: usize,
+}
+
+impl Sample {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_s * 1e6
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_s * 1e3
+    }
+}
+
+/// Time `f`, auto-scaling the iteration count toward `target_s` total.
+pub fn time_it(mut f: impl FnMut(), warmup: usize, samples: usize) -> Sample {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(samples.max(1));
+    for _ in 0..samples.max(1) {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let n = times.len() as f64;
+    let mean = times.iter().sum::<f64>() / n;
+    let var = times.iter().map(|t| (t - mean).powi(2)).sum::<f64>() / n;
+    Sample {
+        mean_s: mean,
+        std_s: var.sqrt(),
+        min_s: times.iter().cloned().fold(f64::INFINITY, f64::min),
+        iters: times.len(),
+    }
+}
+
+/// Fixed-width table printer for bench output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:>w$}  ", c, w = widths[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!(
+            "{}",
+            widths.iter().map(|w| "-".repeat(*w + 2)).collect::<String>().trim_end()
+        );
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+/// Format seconds with an adaptive unit.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+/// Append a JSON line to `target/bench-results.jsonl` for reproducibility.
+pub fn record_jsonl(bench: &str, payload: &crate::util::json::Json) {
+    use std::io::Write;
+    let dir = std::path::Path::new("target");
+    let _ = std::fs::create_dir_all(dir);
+    if let Ok(mut f) = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(dir.join("bench-results.jsonl"))
+    {
+        let _ = writeln!(f, "{{\"bench\":\"{bench}\",\"data\":{}}}", payload.to_string_compact());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_measures_something() {
+        let s = time_it(
+            || {
+                std::hint::black_box((0..1000).sum::<u64>());
+            },
+            2,
+            5,
+        );
+        assert!(s.mean_s >= 0.0);
+        assert!(s.min_s <= s.mean_s + 1e-12);
+        assert_eq!(s.iters, 5);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2.5).ends_with('s'));
+        assert!(fmt_time(2.5e-3).ends_with("ms"));
+        assert!(fmt_time(2.5e-6).ends_with("us"));
+    }
+
+    #[test]
+    #[should_panic(expected = "column count")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into()]);
+    }
+}

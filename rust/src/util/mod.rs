@@ -1,0 +1,194 @@
+//! Small self-contained substrates shared across the crate.
+//!
+//! This image has no crates.io access beyond the vendored xla set, so the
+//! utilities that would normally be dependencies live here (DESIGN.md
+//! §build-constraints): [`json`] (manifest/metrics I/O), [`rng`]
+//! (deterministic xoshiro256**), [`toml`] (experiment config files),
+//! [`bench`] (the criterion-less bench harness), and [`prop`] (randomised
+//! property-test helpers standing in for proptest).
+//!
+//! This module itself holds the dense `Mat` type: the coordinator works
+//! with `P×N` / `P×P` f64 matrices of at most a few thousand entries, so a
+//! flat `Vec<f64>` with row-major indexing beats a linear-algebra crate.
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod toml;
+
+/// Row-major dense f64 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn filled(rows: usize, cols: usize, v: f64) -> Self {
+        Mat { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// Build from a function of (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f64) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    #[inline]
+    pub fn add_assign(&mut self, r: usize, c: usize, v: f64) {
+        self.data[r * self.cols + c] += v;
+    }
+
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f64] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    pub fn row_sum(&self, r: usize) -> f64 {
+        self.row(r).iter().sum()
+    }
+
+    pub fn col_sum(&self, c: usize) -> f64 {
+        (0..self.rows).map(|r| self.get(r, c)).sum()
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.data.iter().sum()
+    }
+
+    pub fn max(&self) -> f64 {
+        self.data.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn min(&self) -> f64 {
+        self.data.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn map(&self, f: impl Fn(f64) -> f64) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&v| f(v)).collect(),
+        }
+    }
+
+    pub fn scale(&self, s: f64) -> Mat {
+        self.map(|v| v * s)
+    }
+
+    /// Max |a - b| over entries.
+    pub fn linf_dist(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+/// `a ≈ b` within absolute tolerance.
+pub fn approx_eq(a: f64, b: f64, tol: f64) -> bool {
+    (a - b).abs() <= tol
+}
+
+/// Ceiling division for usize.
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    a.div_ceil(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mat_indexing_round_trips() {
+        let mut m = Mat::zeros(3, 4);
+        m.set(2, 3, 7.5);
+        m.set(0, 0, -1.0);
+        assert_eq!(m.get(2, 3), 7.5);
+        assert_eq!(m.get(0, 0), -1.0);
+        assert_eq!(m.get(1, 1), 0.0);
+    }
+
+    #[test]
+    fn mat_from_fn_and_sums() {
+        let m = Mat::from_fn(2, 3, |r, c| (r * 3 + c) as f64);
+        assert_eq!(m.row_sum(0), 0.0 + 1.0 + 2.0);
+        assert_eq!(m.col_sum(2), 2.0 + 5.0);
+        assert_eq!(m.sum(), 15.0);
+        assert_eq!(m.max(), 5.0);
+        assert_eq!(m.min(), 0.0);
+    }
+
+    #[test]
+    fn mat_rows_are_contiguous() {
+        let m = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(m.row(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn linf_dist_zero_for_identical() {
+        let m = Mat::filled(2, 2, 3.0);
+        assert_eq!(m.linf_dist(&m), 0.0);
+        let n = m.map(|v| v + 0.5);
+        assert!(approx_eq(m.linf_dist(&n), 0.5, 1e-12));
+    }
+
+    #[test]
+    fn ceil_div_edges() {
+        assert_eq!(ceil_div(0, 3), 0);
+        assert_eq!(ceil_div(1, 3), 1);
+        assert_eq!(ceil_div(3, 3), 1);
+        assert_eq!(ceil_div(4, 3), 2);
+    }
+}

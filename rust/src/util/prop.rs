@@ -1,0 +1,72 @@
+//! Randomised property-test helpers (proptest stand-in).
+//!
+//! `check(cases, seed, gen, prop)` runs `prop` on `cases` generated inputs
+//! and panics with the reproducing case index + seed on the first failure.
+//! No shrinking — generators here produce small cases by construction, and
+//! the failing (seed, index) pair pins the exact input for a debugger.
+
+use super::rng::Rng;
+
+/// Run a property over generated cases. Panics on the first violation with
+/// enough information to reproduce it deterministically.
+pub fn check<T: std::fmt::Debug>(
+    cases: usize,
+    seed: u64,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let mut rng = Rng::seed_from_u64(seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed at case {case} (seed {seed}): {msg}\ninput: {input:#?}"
+            );
+        }
+    }
+}
+
+/// A random stochastic matrix row (non-negative, sums to `total`).
+pub fn random_row(rng: &mut Rng, n: usize, total: f64) -> Vec<f64> {
+    let mut v: Vec<f64> = (0..n).map(|_| rng.f64() + 1e-3).collect();
+    let s: f64 = v.iter().sum();
+    for x in &mut v {
+        *x *= total / s;
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        check(
+            50,
+            1,
+            |rng| rng.below(100),
+            |&x| if x < 100 { Ok(()) } else { Err("out of range".into()) },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports_case() {
+        check(
+            50,
+            2,
+            |rng| rng.below(10),
+            |&x| if x < 5 { Ok(()) } else { Err(format!("{x} >= 5")) },
+        );
+    }
+
+    #[test]
+    fn random_row_is_normalised() {
+        let mut rng = Rng::seed_from_u64(3);
+        let row = random_row(&mut rng, 7, 42.0);
+        assert_eq!(row.len(), 7);
+        assert!((row.iter().sum::<f64>() - 42.0).abs() < 1e-9);
+        assert!(row.iter().all(|&x| x > 0.0));
+    }
+}

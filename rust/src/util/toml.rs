@@ -1,0 +1,267 @@
+//! Minimal TOML-subset parser for experiment config files.
+//!
+//! Supports what `configs/*.toml` use: `[section]` / `[a.b]` tables,
+//! `key = value` with string, integer, float, boolean and flat-array
+//! values, `#` comments, and blank lines. Keys are exposed as dotted paths
+//! (`"model.hidden"`). Unsupported TOML (multi-line strings, inline tables,
+//! datetimes, arrays of tables) is rejected with a line-numbered error —
+//! better a loud failure than a silently misread experiment config.
+
+use std::collections::BTreeMap;
+
+/// A TOML scalar or flat array.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|i| usize::try_from(i).ok())
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed config: dotted-path → value.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TomlDoc {
+    map: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc, String> {
+        let mut map = BTreeMap::new();
+        let mut prefix = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| err(lineno, "unterminated table header"))?
+                    .trim();
+                if name.is_empty() || name.starts_with('[') {
+                    return Err(err(lineno, "unsupported table header"));
+                }
+                prefix = format!("{name}.");
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| err(lineno, "expected key = value"))?;
+            let key = format!("{prefix}{}", k.trim());
+            let value = parse_value(v.trim()).map_err(|e| err(lineno, &e))?;
+            if map.insert(key.clone(), value).is_some() {
+                return Err(err(lineno, &format!("duplicate key {key:?}")));
+            }
+        }
+        Ok(TomlDoc { map })
+    }
+
+    pub fn get(&self, dotted: &str) -> Option<&TomlValue> {
+        self.map.get(dotted)
+    }
+
+    /// Typed getters with defaults — the config-system workhorses.
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(|v| v.as_str()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.as_usize()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(|s| s.as_str())
+    }
+}
+
+fn err(lineno: usize, msg: &str) -> String {
+    format!("line {}: {msg}", lineno + 1)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| format!("unterminated string {s:?}"))?;
+        if inner.contains('"') {
+            return Err(format!("embedded quote in {s:?}"));
+        }
+        return Ok(TomlValue::Str(inner.replace("\\n", "\n").replace("\\t", "\t")));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| format!("unterminated array {s:?}"))?;
+        let mut v = Vec::new();
+        for part in split_top_level(inner) {
+            let p = part.trim();
+            if !p.is_empty() {
+                v.push(parse_value(p)?);
+            }
+        }
+        return Ok(TomlValue::Arr(v));
+    }
+    let clean = s.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value {s:?}"))
+}
+
+/// Split on commas that are not inside quotes (arrays are flat, so no
+/// nested-bracket tracking is needed beyond rejecting them upstream).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_typical_config() {
+        let doc = TomlDoc::parse(
+            r#"
+# experiment
+name = "fig4"          # inline comment
+steps = 1_200
+lr = 3e-4
+verbose = true
+
+[cluster]
+preset = "C"
+nodes = 4
+
+[model]
+experts = [8, 16, 32]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.str_or("name", ""), "fig4");
+        assert_eq!(doc.usize_or("steps", 0), 1200);
+        assert!((doc.f64_or("lr", 0.0) - 3e-4).abs() < 1e-12);
+        assert!(doc.bool_or("verbose", false));
+        assert_eq!(doc.str_or("cluster.preset", ""), "C");
+        assert_eq!(doc.usize_or("cluster.nodes", 0), 4);
+        let arr = doc.get("model.experts").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[2].as_i64(), Some(32));
+    }
+
+    #[test]
+    fn defaults_apply_for_missing_keys() {
+        let doc = TomlDoc::parse("a = 1").unwrap();
+        assert_eq!(doc.usize_or("missing", 7), 7);
+        assert_eq!(doc.str_or("missing", "x"), "x");
+    }
+
+    #[test]
+    fn int_vs_float_distinction() {
+        let doc = TomlDoc::parse("i = 3\nf = 3.5").unwrap();
+        assert_eq!(doc.get("i").unwrap().as_i64(), Some(3));
+        assert_eq!(doc.get("i").unwrap().as_f64(), Some(3.0));
+        assert_eq!(doc.get("f").unwrap().as_i64(), None);
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        for bad in ["[unclosed", "just a line", "k = ", "k = \"open", "a = 1\na = 2"] {
+            assert!(TomlDoc::parse(bad).is_err(), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn strings_may_contain_hash_and_commas() {
+        let doc = TomlDoc::parse(r#"s = "a#b,c""#).unwrap();
+        assert_eq!(doc.str_or("s", ""), "a#b,c");
+        let doc = TomlDoc::parse(r#"a = ["x,y", "z"]"#).unwrap();
+        assert_eq!(doc.get("a").unwrap().as_arr().unwrap().len(), 2);
+    }
+}

@@ -1,0 +1,329 @@
+//! Randomised property tests on coordinator invariants (proptest stand-in
+//! — see `util::prop`): routing conservation, capacity feasibility,
+//! penalty normalisation, cost-model monotonicity, and solver optimality
+//! across randomly generated topologies and problem shapes.
+
+use ta_moe::comm::CostEngine;
+use ta_moe::coordinator::{converged_counts, step_cost, ModelShape, Strategy};
+use ta_moe::dispatch::{
+    is_locally_optimal, penalty_weights, proportional_caps, sinkhorn_repair,
+    target_pattern, DispatchProblem, Norm,
+};
+use ta_moe::runtime::ModelCfg;
+use ta_moe::topology::{presets, Link, Topology, TreeSpec};
+use ta_moe::util::prop::check;
+use ta_moe::util::rng::Rng;
+use ta_moe::util::Mat;
+
+/// Random 2-level (sometimes asymmetric 3-level) tree topology.
+fn random_topology(rng: &mut Rng) -> Topology {
+    let n_nodes = rng.range(2, 5);
+    let per_node = rng.range(2, 5);
+    let asym = rng.below(3) == 0 && n_nodes >= 3;
+    let spec = if asym {
+        let mut children = vec![TreeSpec::Switch(
+            (0..n_nodes / 2).map(|_| TreeSpec::Devices(per_node)).collect(),
+        )];
+        for _ in n_nodes / 2..n_nodes {
+            children.push(TreeSpec::Switch(vec![TreeSpec::Devices(per_node)]));
+        }
+        TreeSpec::Switch(children)
+    } else {
+        TreeSpec::Switch((0..n_nodes).map(|_| TreeSpec::Devices(per_node)).collect())
+    };
+    let dev = Link::from_gbps_us(rng.range_f64(20.0, 300.0), rng.range_f64(1.0, 5.0));
+    let up = Link::from_gbps_us(rng.range_f64(4.0, 25.0), rng.range_f64(5.0, 30.0));
+    let spine = Link::from_gbps_us(rng.range_f64(2.0, 20.0), rng.range_f64(10.0, 40.0));
+    Topology::tree(&spec, &[dev, up, spine], presets::local_copy())
+}
+
+fn random_problem(rng: &mut Rng) -> DispatchProblem {
+    DispatchProblem {
+        k: rng.range(1, 3),
+        s: rng.range(64, 4096),
+        e_per_dev: rng.range(1, 3),
+        elem_bytes: 4 << rng.below(10),
+    }
+}
+
+fn cfg_for(topo: &Topology, prob: &DispatchProblem) -> ModelCfg {
+    let p = topo.p();
+    ModelCfg {
+        p,
+        e_per_dev: prob.e_per_dev,
+        layers: 4,
+        d: 64,
+        f: 128,
+        heads: 2,
+        vocab: 256,
+        batch: 1,
+        seq: prob.s,
+        k: prob.k,
+        cap_factor: 1.25,
+        gate: "switch".into(),
+        dispatch: "local".into(),
+        n_experts: p * prob.e_per_dev,
+        capacity: 2 * prob.k * prob.s,
+        tokens_per_dev: prob.s,
+        moe_layer_ids: vec![1, 3],
+    }
+}
+
+#[test]
+fn prop_target_pattern_feasible_on_random_topologies() {
+    check(
+        40,
+        0xA11CE,
+        |rng| (random_topology(rng), random_problem(rng)),
+        |(topo, prob)| {
+            let tp = target_pattern(topo, prob);
+            let want_row = prob.sent_per_dev();
+            let want_col = want_row * topo.p() as f64 / tp.c.cols() as f64;
+            for i in 0..tp.c.rows() {
+                let r = tp.c.row_sum(i);
+                if (r - want_row).abs() > 1e-5 * want_row {
+                    return Err(format!("row {i}: {r} != {want_row}"));
+                }
+            }
+            for e in 0..tp.c.cols() {
+                let c = tp.c.col_sum(e);
+                if (c - want_col).abs() > 1e-4 * want_col {
+                    return Err(format!("col {e}: {c} != {want_col}"));
+                }
+            }
+            if tp.c.min() < 0.0 {
+                return Err("negative volume".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_target_never_slower_than_even_on_lower_bound() {
+    check(
+        30,
+        0xBEEF,
+        |rng| (random_topology(rng), random_problem(rng)),
+        |(topo, prob)| {
+            let tp = target_pattern(topo, prob);
+            let eng = CostEngine::slowest_pair(topo);
+            let even = Mat::filled(
+                topo.p(),
+                tp.c.cols(),
+                prob.sent_per_dev() / tp.c.cols() as f64,
+            );
+            let to_bytes = |c: &Mat| {
+                Mat::from_fn(topo.p(), topo.p(), |i, j| {
+                    (0..prob.e_per_dev)
+                        .map(|le| c.get(i, j * prob.e_per_dev + le))
+                        .sum::<f64>()
+                        * prob.elem_bytes as f64
+                })
+            };
+            let t_even = eng.exchange_time(&to_bytes(&even));
+            let t_target = eng.exchange_time(&to_bytes(&tp.c));
+            // β̂ smoothing can cost a whisker vs raw-β even dispatch, so
+            // allow 5%; anything more means the solver regressed.
+            if t_target > t_even * 1.05 {
+                return Err(format!("target {t_target} worse than even {t_even}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_target_locally_optimal_on_symmetric_trees() {
+    check(
+        10,
+        0xCAFE,
+        |rng| {
+            let n_nodes = rng.range(2, 4);
+            let per_node = rng.range(2, 4);
+            let spec = TreeSpec::symmetric(&[n_nodes, per_node]);
+            let dev = Link::from_gbps_us(rng.range_f64(40.0, 250.0), 2.0);
+            let up = Link::from_gbps_us(rng.range_f64(5.0, 25.0), 10.0);
+            let topo = Topology::tree(&spec, &[dev, up], presets::local_copy());
+            let prob = random_problem(rng);
+            (topo, prob)
+        },
+        |(topo, prob)| {
+            let tp = target_pattern(topo, prob);
+            if is_locally_optimal(topo, &tp.c, prob, 200, 0.02, 1e-9) {
+                Ok(())
+            } else {
+                Err("a feasible perturbation improved the min-max objective".into())
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_converged_counts_conserve_for_all_strategies() {
+    check(
+        30,
+        0xD00D,
+        |rng| {
+            let topo = random_topology(rng);
+            let prob = random_problem(rng);
+            let strat = match rng.below(4) {
+                0 => Strategy::DeepSpeedEven,
+                1 => Strategy::FastMoeEven,
+                2 => Strategy::FasterMoeHir { remote_frac: rng.range_f64(0.0, 1.0) },
+                _ => Strategy::TaMoe { norm: Norm::L1 },
+            };
+            (topo, prob, strat)
+        },
+        |(topo, prob, strat)| {
+            let cfg = cfg_for(topo, prob);
+            let m = converged_counts(strat, topo, &cfg);
+            let want = (prob.k * prob.s) as f64;
+            for i in 0..topo.p() {
+                let r = m.row_sum(i);
+                if (r - want).abs() > 1e-5 * want {
+                    return Err(format!("{}: row {i} {r} != {want}", strat.name()));
+                }
+            }
+            if m.min() < -1e-12 {
+                return Err("negative counts".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_proportional_caps_exact_and_integral() {
+    check(
+        50,
+        0xFACE,
+        |rng| {
+            let p = rng.range(2, 9);
+            let n = rng.range(2, 9);
+            let cap = rng.range(1, 500);
+            let m = Mat::from_fn(p, n, |_, _| rng.range_f64(0.01, 10.0));
+            (m, cap)
+        },
+        |(m, cap)| {
+            let caps = proportional_caps(m, *cap);
+            for e in 0..m.cols() {
+                let s = caps.col_sum(e);
+                if s as usize != *cap {
+                    return Err(format!("col {e} sums to {s}, want {cap}"));
+                }
+            }
+            for v in caps.data() {
+                if v.fract() != 0.0 || *v < 0.0 {
+                    return Err(format!("non-integral cap {v}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_penalty_rows_normalised_and_anti_monotone() {
+    check(
+        50,
+        0x5EED,
+        |rng| {
+            let p = rng.range(2, 8);
+            let n = rng.range(2, 8);
+            Mat::from_fn(p, n, |_, _| rng.range_f64(0.1, 50.0))
+        },
+        |m| {
+            for norm in [Norm::L1, Norm::Softmax { temp: 2.0 }] {
+                let w = penalty_weights(m, norm);
+                for i in 0..m.rows() {
+                    let s: f64 = w.row(i).iter().sum();
+                    if (s - 1.0).abs() > 1e-9 {
+                        return Err(format!("row {i} sums to {s}"));
+                    }
+                    // anti-monotone: the argmax target gets the min penalty
+                    let (amax, _) = m
+                        .row(i)
+                        .iter()
+                        .enumerate()
+                        .fold((0, f64::MIN), |a, (j, &v)| if v > a.1 { (j, v) } else { a });
+                    let (amin_w, _) = w
+                        .row(i)
+                        .iter()
+                        .enumerate()
+                        .fold((0, f64::MAX), |a, (j, &v)| if v < a.1 { (j, v) } else { a });
+                    if m.row(i)[amin_w] < m.row(i)[amax] - 1e-9 {
+                        return Err(format!(
+                            "row {i}: smallest penalty not on the largest target"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sinkhorn_reaches_marginals() {
+    check(
+        50,
+        0xFEED,
+        |rng| {
+            let p = rng.range(2, 7);
+            let n = rng.range(2, 7);
+            let m = Mat::from_fn(p, n, |_, _| rng.range_f64(0.05, 5.0));
+            let total = rng.range_f64(10.0, 1000.0);
+            (m, total)
+        },
+        |(m, total)| {
+            let rows = vec![total / m.rows() as f64 * 1.0; m.rows()];
+            let cols = vec![total / m.cols() as f64; m.cols()];
+            let out = sinkhorn_repair(m, &rows, &cols, 500, 1e-12);
+            for i in 0..m.rows() {
+                if (out.row_sum(i) - rows[i]).abs() > 1e-6 * rows[i] {
+                    return Err(format!("row {i}"));
+                }
+            }
+            for e in 0..m.cols() {
+                if (out.col_sum(e) - cols[e]).abs() > 1e-6 * cols[e] {
+                    return Err(format!("col {e}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_step_cost_monotone_in_remote_traffic() {
+    // moving tokens from a local expert to a remote one can never make the
+    // simulated exchange cheaper
+    check(
+        30,
+        0xAB1E,
+        |rng| {
+            let topo = random_topology(rng);
+            let prob = DispatchProblem { k: 1, s: 1024, e_per_dev: 1, elem_bytes: 4096 };
+            let frac = rng.range_f64(0.0, 0.4);
+            (topo, prob, frac)
+        },
+        |(topo, prob, frac)| {
+            let cfg = cfg_for(topo, prob);
+            let shape = ModelShape::gpt_medium(false, 1, 1024);
+            let base = converged_counts(&Strategy::TaMoe { norm: Norm::L1 }, topo, &cfg);
+            // shift `frac` of rank 0's local volume to the farthest rank
+            let mut shifted = base.clone();
+            let far = topo.p() - 1;
+            let moved = shifted.get(0, 0) * frac;
+            shifted.add_assign(0, 0, -moved);
+            shifted.add_assign(0, far, moved);
+            let c0 = step_cost(&shape, topo, &base, 1, 45e12, false);
+            let c1 = step_cost(&shape, topo, &shifted, 1, 45e12, false);
+            if c1.a2a_s + 1e-12 < c0.a2a_s {
+                return Err(format!("remote shift got cheaper: {} < {}", c1.a2a_s, c0.a2a_s));
+            }
+            Ok(())
+        },
+    );
+}
