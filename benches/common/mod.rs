@@ -3,12 +3,14 @@
 //! Every bench is a `harness = false` main that prints the same rows or
 //! series its paper table/figure reports and appends a JSON record to
 //! `target/bench-results.jsonl` (see `util::bench::record_jsonl`).
+//!
+//! Training arms go through the `Session` builder with backend `auto`:
+//! compiled artifacts under `--features backend-xla` when present, the
+//! pure-rust simulator otherwise — so `cargo bench` works on a fresh
+//! clone with no XLA.
 
 use anyhow::Result;
-use std::path::Path;
-use ta_moe::config::topology_for;
-use ta_moe::coordinator::{device_flops, Strategy, Trainer, TrainerOptions};
-use ta_moe::data::{Batcher, SyntheticCorpus};
+use ta_moe::coordinator::{device_flops, DispatchPolicy, SessionBuilder};
 use ta_moe::metrics::RunLog;
 
 /// Env-tunable step budget so `cargo bench` stays tractable on 1 CPU but a
@@ -17,46 +19,29 @@ pub fn env_steps(default: usize) -> usize {
     std::env::var("TA_MOE_STEPS").ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
-/// Train one arm: artifact × strategy × cluster, identical data per seed.
-/// Returns the run log (loss curve on the simulated clock).
+/// Train one arm: artifact × policy × cluster, identical data per seed.
+/// Returns the run log (loss curve on the simulated clock) and the final
+/// dispatch counts.
 pub fn train_arm(
     artifact: &str,
     cluster: &str,
-    strategy: Strategy,
+    policy: Box<dyn DispatchPolicy>,
     steps: usize,
     seed: u64,
     eval_every: usize,
 ) -> Result<(RunLog, ta_moe::util::Mat)> {
-    let dir = format!("artifacts/{artifact}");
-    let manifest = ta_moe::runtime::Manifest::load(Path::new(&dir))?;
-    let topo = topology_for(cluster, manifest.config.p);
     let cluster_char = cluster.chars().next().unwrap_or('C');
-    let mut trainer = Trainer::new(
-        Path::new(&dir),
-        topo,
-        strategy,
-        TrainerOptions { lr: 1e-3, seed: seed as i32, flops_per_dev: device_flops(cluster_char) },
-    )?;
-    let cfg = trainer.manifest().config.clone();
-
-    let mut corpus = SyntheticCorpus::new(seed);
-    let stream = corpus.tokens(cfg.p * cfg.batch * (cfg.seq + 1) * 128);
-    let mut batcher = Batcher::new(stream, cfg.p, cfg.batch, cfg.seq);
-    let mut vcorpus = SyntheticCorpus::new(seed + 999);
-    let vstream = vcorpus.tokens(cfg.p * cfg.batch * (cfg.seq + 1) * 8);
-    let (vtok, vtgt) = Batcher::new(vstream, cfg.p, cfg.batch, cfg.seq).next_batch();
-
-    let mut last_counts = None;
-    for step in 0..steps {
-        let (tok, tgt) = batcher.next_batch();
-        trainer.train_step(&tok, &tgt)?;
-        if eval_every > 0 && (step + 1) % eval_every == 0 {
-            trainer.eval(&vtok, &vtgt)?;
-        }
-        last_counts = trainer.last_counts().cloned();
-    }
-    Ok((
-        trainer.log().clone(),
-        last_counts.expect("at least one step"),
-    ))
+    let mut session = SessionBuilder::new()
+        .artifact("artifacts", artifact)
+        .cluster(cluster)
+        .policy(policy)
+        .lr(1e-3)
+        .seed(seed as i32)
+        .flops_per_dev(device_flops(cluster_char))
+        .data_synthetic(seed)
+        .eval_every(eval_every)
+        .build()?;
+    session.run(steps)?;
+    let counts = session.last_counts().cloned().expect("at least one step");
+    Ok((session.log().clone(), counts))
 }

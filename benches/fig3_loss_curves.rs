@@ -16,7 +16,7 @@ mod common;
 
 use std::collections::BTreeMap;
 use std::path::Path;
-use ta_moe::coordinator::Strategy;
+use ta_moe::coordinator::{FastMoeEven, TaMoe};
 use ta_moe::dispatch::Norm;
 use ta_moe::util::bench::{record_jsonl, Table};
 use ta_moe::util::json::Json;
@@ -33,11 +33,11 @@ fn main() -> anyhow::Result<()> {
     let mut worst: f64 = 0.0;
     for artifact in ["tiny4", "small8_switch", "wide16_switch"] {
         let (base_log, _) =
-            common::train_arm(artifact, "C", Strategy::FastMoeEven, steps, 42, eval_every)?;
+            common::train_arm(artifact, "C", Box::new(FastMoeEven), steps, 42, eval_every)?;
         let (ta_log, _) = common::train_arm(
             artifact,
             "C",
-            Strategy::TaMoe { norm: Norm::L1 },
+            Box::new(TaMoe { norm: Norm::L1 }),
             steps,
             42,
             eval_every,

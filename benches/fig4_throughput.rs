@@ -10,7 +10,8 @@
 
 use std::collections::BTreeMap;
 use ta_moe::coordinator::{
-    converged_counts, device_flops, throughput, ModelShape, Strategy,
+    converged_counts, device_flops, throughput, DeepSpeedEven, FastMoeEven, ModelShape,
+    TaMoe,
 };
 use ta_moe::dispatch::Norm;
 use ta_moe::runtime::ModelCfg;
@@ -62,9 +63,9 @@ fn main() {
                 let shape = ModelShape::gpt_medium(gshard, cfg.batch, cfg.seq);
                 let flops = device_flops(cluster);
 
-                let ds = converged_counts(&Strategy::DeepSpeedEven, &topo, &cfg);
-                let fm = converged_counts(&Strategy::FastMoeEven, &topo, &cfg);
-                let ta = converged_counts(&Strategy::TaMoe { norm: Norm::L1 }, &topo, &cfg);
+                let ds = converged_counts(&DeepSpeedEven, &topo, &cfg);
+                let fm = converged_counts(&FastMoeEven, &topo, &cfg);
+                let ta = converged_counts(&TaMoe { norm: Norm::L1 }, &topo, &cfg);
                 // DeepSpeed uses the hierarchical a2a; FastMoE/TA-MoE direct.
                 let thr_ds = throughput(&shape, &topo, &ds, 1, flops, true);
                 let thr_fm = throughput(&shape, &topo, &fm, 1, flops, false);

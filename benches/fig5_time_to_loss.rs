@@ -13,7 +13,7 @@
 mod common;
 
 use std::collections::BTreeMap;
-use ta_moe::coordinator::Strategy;
+use ta_moe::coordinator::{FasterMoeHir, TaMoe};
 use ta_moe::dispatch::Norm;
 use ta_moe::util::bench::{record_jsonl, Table};
 use ta_moe::util::json::Json;
@@ -26,7 +26,7 @@ fn main() -> anyhow::Result<()> {
     let (ta_log, _) = common::train_arm(
         "small8_switch",
         "C",
-        Strategy::TaMoe { norm: Norm::L1 },
+        Box::new(TaMoe { norm: Norm::L1 }),
         steps,
         42,
         eval_every,
@@ -34,7 +34,7 @@ fn main() -> anyhow::Result<()> {
     let (hir_log, _) = common::train_arm(
         "small8_hir",
         "C",
-        Strategy::FasterMoeHir { remote_frac: 0.25 },
+        Box::new(FasterMoeHir { remote_frac: 0.25 }),
         steps,
         42,
         eval_every,

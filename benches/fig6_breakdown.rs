@@ -16,7 +16,7 @@ mod common;
 
 use std::collections::BTreeMap;
 use ta_moe::coordinator::{
-    converged_counts, device_flops, step_cost, ModelShape, Strategy,
+    converged_counts, device_flops, step_cost, FastMoeEven, ModelShape, TaMoe,
 };
 use ta_moe::dispatch::Norm;
 use ta_moe::runtime::ModelCfg;
@@ -59,8 +59,8 @@ fn main() -> anyhow::Result<()> {
         let topo = presets::cluster_c(p / 8);
         let cfg = cfg_for(p);
         let flops = device_flops('C');
-        let even = converged_counts(&Strategy::FastMoeEven, &topo, &cfg);
-        let ta = converged_counts(&Strategy::TaMoe { norm: Norm::L1 }, &topo, &cfg);
+        let even = converged_counts(&FastMoeEven, &topo, &cfg);
+        let ta = converged_counts(&TaMoe { norm: Norm::L1 }, &topo, &cfg);
         let c_even = step_cost(&shape, &topo, &even, 1, flops, false);
         let c_ta = step_cost(&shape, &topo, &ta, 1, flops, false);
         let comm_even = c_even.a2a_s + c_even.allreduce_s;
@@ -95,7 +95,7 @@ fn main() -> anyhow::Result<()> {
     let (_, counts) = common::train_arm(
         "wide16_switch",
         "C",
-        Strategy::TaMoe { norm: Norm::L1 },
+        Box::new(TaMoe { norm: Norm::L1 }),
         steps,
         42,
         0,

@@ -15,7 +15,7 @@ mod common;
 
 use std::collections::BTreeMap;
 use ta_moe::config::topology_for;
-use ta_moe::coordinator::Strategy;
+use ta_moe::coordinator::{DispatchPolicy, FastMoeEven, TaMoe};
 use ta_moe::dispatch::Norm;
 use ta_moe::util::bench::{record_jsonl, Table};
 use ta_moe::util::json::Json;
@@ -47,11 +47,12 @@ fn main() -> anyhow::Result<()> {
             _ => 8,
         };
         let topo = topology_for("C", p);
-        for (arm, strategy) in [
-            ("fastmoe", Strategy::FastMoeEven),
-            ("ta-moe", Strategy::TaMoe { norm: Norm::L1 }),
-        ] {
-            let (_, counts) = common::train_arm(artifact, "C", strategy, steps, 42, 0)?;
+        let arms: [(&str, Box<dyn DispatchPolicy>); 2] = [
+            ("fastmoe", Box::new(FastMoeEven)),
+            ("ta-moe", Box::new(TaMoe { norm: Norm::L1 })),
+        ];
+        for (arm, policy) in arms {
+            let (_, counts) = common::train_arm(artifact, "C", policy, steps, 42, 0)?;
             let frac = on_node_frac(&counts, &topo, 0);
             let row: Vec<String> = counts
                 .row(0)

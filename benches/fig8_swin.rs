@@ -7,7 +7,9 @@
 //! ```
 
 use std::collections::BTreeMap;
-use ta_moe::coordinator::{converged_counts, device_flops, throughput, ModelShape, Strategy};
+use ta_moe::coordinator::{
+    converged_counts, device_flops, throughput, FastMoeEven, ModelShape, TaMoe,
+};
 use ta_moe::dispatch::Norm;
 use ta_moe::runtime::ModelCfg;
 use ta_moe::topology::presets;
@@ -61,8 +63,8 @@ fn main() {
         let cfg = swin_cfg(gpus);
         let shape = swin_shape(cfg.tokens_per_dev);
         let flops = device_flops('A');
-        let even = converged_counts(&Strategy::FastMoeEven, &topo, &cfg);
-        let ta = converged_counts(&Strategy::TaMoe { norm: Norm::L1 }, &topo, &cfg);
+        let even = converged_counts(&FastMoeEven, &topo, &cfg);
+        let ta = converged_counts(&TaMoe { norm: Norm::L1 }, &topo, &cfg);
         let thr_even = throughput(&shape, &topo, &even, 1, flops, false);
         let thr_ta = throughput(&shape, &topo, &ta, 1, flops, false);
         let s = thr_ta / thr_even;

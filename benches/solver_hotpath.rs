@@ -10,7 +10,7 @@
 
 use std::collections::BTreeMap;
 use ta_moe::comm::CostEngine;
-use ta_moe::coordinator::{converged_counts, device_flops, step_cost, ModelShape, Strategy};
+use ta_moe::coordinator::{converged_counts, device_flops, step_cost, ModelShape, TaMoe};
 use ta_moe::dispatch::{
     penalty_weights, proportional_caps, target_pattern, DispatchProblem, Norm,
 };
@@ -43,7 +43,7 @@ fn main() {
         tokens_per_dev: 6144,
         moe_layer_ids: (0..6).map(|i| 2 * i + 1).collect(),
     };
-    let counts = converged_counts(&Strategy::TaMoe { norm: Norm::L1 }, &topo64, &cfg);
+    let counts = converged_counts(&TaMoe { norm: Norm::L1 }, &topo64, &cfg);
 
     let mut t = Table::new(&["hot path (P=64)", "mean", "min", "samples"]);
     let mut payload = BTreeMap::new();

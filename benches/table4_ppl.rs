@@ -11,7 +11,7 @@
 mod common;
 
 use std::collections::BTreeMap;
-use ta_moe::coordinator::Strategy;
+use ta_moe::coordinator::{FastMoeEven, TaMoe};
 use ta_moe::dispatch::Norm;
 use ta_moe::util::bench::{record_jsonl, Table};
 use ta_moe::util::json::Json;
@@ -24,11 +24,11 @@ fn main() -> anyhow::Result<()> {
     let mut payload = BTreeMap::new();
     for (artifact, experts) in [("tiny4", 4usize), ("small8_switch", 8), ("wide16_switch", 16)] {
         let (base, _) =
-            common::train_arm(artifact, "C", Strategy::FastMoeEven, steps, 42, steps)?;
+            common::train_arm(artifact, "C", Box::new(FastMoeEven), steps, 42, steps)?;
         let (ta, _) = common::train_arm(
             artifact,
             "C",
-            Strategy::TaMoe { norm: Norm::L1 },
+            Box::new(TaMoe { norm: Norm::L1 }),
             steps,
             42,
             steps,

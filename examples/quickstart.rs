@@ -1,21 +1,28 @@
 //! Quickstart: solve a topology, inspect the TA-MoE inputs, train a few
-//! steps of the tiny compiled model.
+//! steps — all on the pure-rust [`SimBackend`], so this runs on a fresh
+//! clone with no artifacts and no XLA:
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
 //! ```
+//!
+//! With compiled artifacts (`make artifacts`) and `--features backend-xla`
+//! the same `Session` drives the real compiled model instead — swap the
+//! `.backend(...)` line for `.artifact("artifacts", "tiny4")`.
 
 use anyhow::Result;
 use ta_moe::config::topology_for;
-use ta_moe::coordinator::{device_flops, Strategy, Trainer, TrainerOptions};
-use ta_moe::data::{builtin_text, Batcher};
+use ta_moe::coordinator::{device_flops, SessionBuilder, TaMoe};
+use ta_moe::data::builtin_text;
 use ta_moe::dispatch::Norm;
-use std::path::Path;
+use ta_moe::runtime::{ModelCfg, SimBackend};
 
 fn main() -> Result<()> {
-    // 1. A topology: cluster C shrunk to the tiny artifact's 4 devices
-    //    (2 nodes × 2 GPUs with a slow inter-node switch).
-    let topo = topology_for("C", 4);
+    // 1. A model shape and a topology: the tiny 4-device config on
+    //    cluster C shrunk to 2 nodes × 2 GPUs with a slow inter-node
+    //    switch.
+    let cfg = ModelCfg::preset("tiny4").expect("builtin preset");
+    let topo = topology_for("C", cfg.p);
     println!(
         "topology: P={} devices on {} nodes, {} levels",
         topo.p(),
@@ -23,16 +30,20 @@ fn main() -> Result<()> {
         topo.n_levels()
     );
 
-    // 2. The TA-MoE strategy computes the Eq. 7 target pattern and the
-    //    Eq. 8 penalty matrix from that topology.
-    let strategy = Strategy::TaMoe { norm: Norm::L1 };
-    let mut trainer = Trainer::new(
-        Path::new("artifacts/tiny4"),
-        topo,
-        strategy,
-        TrainerOptions { lr: 2e-3, seed: 0, flops_per_dev: device_flops('C') },
-    )?;
-    let inputs = trainer.strategy_inputs();
+    // 2. Compose backend + topology + policy into a session. The TA-MoE
+    //    policy computes the Eq. 7 target pattern and the Eq. 8 penalty
+    //    matrix from the topology.
+    let mut session = SessionBuilder::new()
+        .backend(Box::new(SimBackend::new(cfg)))
+        .topology(topo)
+        .policy(Box::new(TaMoe { norm: Norm::L1 }))
+        .lr(2e-3)
+        .seed(0)
+        .flops_per_dev(device_flops('C'))
+        .data_text(builtin_text())
+        .build()?;
+
+    let inputs = session.policy_inputs();
     let target = inputs.target.as_ref().expect("ta-moe target");
     println!("\ntarget dispatch from rank 0 (tokens/step, Eq. 7):");
     println!(
@@ -42,16 +53,13 @@ fn main() -> Result<()> {
     println!("penalty row 0 (Eq. 8 coefficients fed to the loss):");
     println!(
         "  {:?}",
-        inputs.penalty.row(0).iter().map(|v| (*v * 100.0).round() / 100.0).collect::<Vec<_>>()
+        inputs.gate.penalty.row(0).iter().map(|v| (*v * 100.0).round() / 100.0).collect::<Vec<_>>()
     );
 
     // 3. Train a few steps on the builtin corpus.
-    let cfg = trainer.manifest().config.clone();
-    let mut batcher = Batcher::from_text(builtin_text(), cfg.p, cfg.batch, cfg.seq);
-    println!("\ntraining {} params for 20 steps:", trainer.manifest().n_params());
+    println!("\ntraining on the {} backend for 20 steps:", session.backend_name());
     for step in 0..20 {
-        let (tok, tgt) = batcher.next_batch();
-        let rec = trainer.train_step(&tok, &tgt)?;
+        let rec = session.step()?;
         if step % 5 == 0 || step == 19 {
             println!(
                 "  step {:>2}: loss {:.4} (ce {:.4}, aux {:.4}), {:.1}% dropped, sim step {:.2} ms",
@@ -66,11 +74,11 @@ fn main() -> Result<()> {
     }
     println!(
         "\nsimulated throughput: {:.0} tokens/s on the cluster clock",
-        trainer.log().sim_throughput()
+        session.log().sim_throughput()
     );
 
     // 4. Where did the gate actually send tokens?
-    if let Some(counts) = trainer.last_counts() {
+    if let Some(counts) = session.last_counts() {
         println!("\nmeasured dispatch from rank 0 after 20 steps (c_0e):");
         println!(
             "  {:?}",

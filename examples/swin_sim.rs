@@ -9,13 +9,10 @@
 //! ```
 
 use anyhow::Result;
-use std::path::Path;
-use ta_moe::config::topology_for;
 use ta_moe::coordinator::{
-    converged_counts, device_flops, throughput, ModelShape, Strategy, Trainer,
-    TrainerOptions,
+    converged_counts, device_flops, throughput, FastMoeEven, ModelShape, SessionBuilder,
+    TaMoe,
 };
-use ta_moe::data::Batcher;
 use ta_moe::dispatch::Norm;
 use ta_moe::topology::presets;
 use ta_moe::util::bench::Table;
@@ -46,8 +43,8 @@ fn main() -> Result<()> {
         let p = topo.p();
         let shape = swin_shape(2 * 49 * 32); // 32 windows × 2 images per device
         let cfg = fake_cfg(p, shape.tokens_per_dev, 2);
-        let even = converged_counts(&Strategy::FastMoeEven, &topo, &cfg);
-        let ta = converged_counts(&Strategy::TaMoe { norm: Norm::L1 }, &topo, &cfg);
+        let even = converged_counts(&FastMoeEven, &topo, &cfg);
+        let ta = converged_counts(&TaMoe { norm: Norm::L1 }, &topo, &cfg);
         let t_even = throughput(&shape, &topo, &even, 1, device_flops('A'), false);
         let t_ta = throughput(&shape, &topo, &ta, 1, device_flops('A'), false);
         t.row(&[
@@ -66,36 +63,34 @@ fn main() -> Result<()> {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(40);
-    println!("\n== wide16 artifact on a synthetic patch stream ({steps} steps) ==");
-    let dir = Path::new("artifacts/wide16_switch");
-    let manifest = ta_moe::runtime::Manifest::load(dir)?;
-    let topo = topology_for("A", manifest.config.p);
-    let mut trainer = Trainer::new(
-        dir,
-        topo,
-        Strategy::TaMoe { norm: Norm::L1 },
-        TrainerOptions { lr: 1.5e-3, seed: 7, flops_per_dev: device_flops('A') },
-    )?;
-    let cfg = trainer.manifest().config.clone();
-
-    // "patches": smooth byte field with spatial structure, row-major scan
+    println!("\n== wide16 model on a synthetic patch stream ({steps} steps) ==");
+    // "patches": smooth byte field with spatial structure, row-major scan;
+    // 64 batches at the wide16 shape.
+    let wide16 = ta_moe::runtime::ModelCfg::preset("wide16_switch").expect("builtin preset");
     let mut rng = Rng::seed_from_u64(11);
     let mut stream = Vec::new();
     let mut v = 128i32;
-    while stream.len() < cfg.p * cfg.batch * (cfg.seq + 1) * 64 {
+    while stream.len() < wide16.p * wide16.batch * (wide16.seq + 1) * 64 {
         v = (v + rng.range(0, 9) as i32 - 4).clamp(0, 255);
         stream.push(v);
     }
-    let mut batcher = Batcher::new(stream, cfg.p, cfg.batch, cfg.seq);
+    let mut session = SessionBuilder::new()
+        .artifact("artifacts", "wide16_switch")
+        .cluster("A")
+        .policy(Box::new(TaMoe { norm: Norm::L1 }))
+        .lr(1.5e-3)
+        .seed(7)
+        .flops_per_dev(device_flops('A'))
+        .data_stream(stream)
+        .build()?;
     for step in 0..steps {
-        let (tok, tgt) = batcher.next_batch();
-        let rec = trainer.train_step(&tok, &tgt)?;
+        let rec = session.step()?;
         if step % 10 == 0 || step + 1 == steps {
             println!("  step {:>3}: loss {:.4} drop {:.2}%", step, rec.loss, rec.dropped * 100.0);
         }
     }
-    if let Some(counts) = trainer.last_counts() {
-        let topo = trainer.topology();
+    if let Some(counts) = session.last_counts() {
+        let topo = session.topology();
         let row = counts.row(0);
         let local: f64 = row
             .iter()

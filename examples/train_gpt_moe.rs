@@ -1,13 +1,18 @@
 //! End-to-end validation driver (DESIGN.md §deliverables): train the MoE
 //! transformer under TA-MoE *and* the FastMoE baseline on identical data,
-//! log both loss curves, and report the dispatch patterns — proving all
-//! three layers (Pallas kernels → JAX step program → rust coordinator)
-//! compose on a real workload.
+//! log both loss curves, and report the dispatch patterns.
+//!
+//! The backend resolves automatically: with `--features backend-xla` and
+//! compiled artifacts this proves all three layers (Pallas kernels → JAX
+//! step program → rust coordinator) compose on a real workload; on the
+//! default feature set the simulator stands in and the same driver runs
+//! anywhere.
 //!
 //! ```bash
 //! cargo run --release --example train_gpt_moe            # default 150 steps
 //! TA_MOE_STEPS=400 cargo run --release --example train_gpt_moe
 //! TA_MOE_ARTIFACT=small8_gshard cargo run --release --example train_gpt_moe
+//! TA_MOE_BACKEND=sim cargo run --release --example train_gpt_moe
 //! ```
 //!
 //! Outputs: `target/runs/e2e_<artifact>_<strategy>.csv` per arm and a
@@ -15,10 +20,8 @@
 
 use anyhow::Result;
 use std::path::Path;
-use ta_moe::config::topology_for;
-use ta_moe::coordinator::{device_flops, Strategy, Trainer, TrainerOptions};
-use ta_moe::data::{Batcher, SyntheticCorpus};
-use ta_moe::dispatch::Norm;
+use ta_moe::coordinator::{device_flops, parse_policy, SessionBuilder};
+use ta_moe::runtime::BackendKind;
 use ta_moe::util::bench::Table;
 
 fn env_usize(key: &str, default: usize) -> usize {
@@ -29,39 +32,33 @@ fn main() -> Result<()> {
     let steps = env_usize("TA_MOE_STEPS", 150);
     let artifact =
         std::env::var("TA_MOE_ARTIFACT").unwrap_or_else(|_| "small8_switch".into());
+    let backend: BackendKind = std::env::var("TA_MOE_BACKEND")
+        .unwrap_or_else(|_| "auto".into())
+        .parse()
+        .map_err(anyhow::Error::msg)?;
     let eval_every = 10;
     let seed = 42u64;
 
-    let arms = [
-        ("fastmoe", Strategy::FastMoeEven),
-        ("ta-moe", Strategy::TaMoe { norm: Norm::L1 }),
-    ];
+    let arms = ["fastmoe", "ta-moe"];
 
     let mut summaries = Vec::new();
-    for (name, strategy) in arms {
+    for name in arms {
         println!("=== arm: {name} ({artifact}, cluster C, {steps} steps) ===");
-        let dir = format!("artifacts/{artifact}");
-        let manifest = ta_moe::runtime::Manifest::load(Path::new(&dir))?;
-        let topo = topology_for("C", manifest.config.p);
-        let mut trainer = Trainer::new(
-            Path::new(&dir),
-            topo,
-            strategy,
-            TrainerOptions { lr: 1e-3, seed: seed as i32, flops_per_dev: device_flops('C') },
-        )?;
-        let cfg = trainer.manifest().config.clone();
-
-        // identical data across arms: same seed → byte-identical stream
-        let mut corpus = SyntheticCorpus::new(seed);
-        let stream = corpus.tokens(cfg.p * cfg.batch * (cfg.seq + 1) * 128);
-        let mut batcher = Batcher::new(stream, cfg.p, cfg.batch, cfg.seq);
-        let mut vcorpus = SyntheticCorpus::new(seed + 999);
-        let vstream = vcorpus.tokens(cfg.p * cfg.batch * (cfg.seq + 1) * 8);
-        let (vtok, vtgt) = Batcher::new(vstream, cfg.p, cfg.batch, cfg.seq).next_batch();
+        let mut session = SessionBuilder::new()
+            .artifact("artifacts", artifact.clone())
+            .backend_kind(backend)
+            .cluster("C")
+            .policy(parse_policy(name).map_err(anyhow::Error::msg)?)
+            .lr(1e-3)
+            .seed(seed as i32)
+            .flops_per_dev(device_flops('C'))
+            // identical data across arms: same seed → byte-identical stream
+            .data_synthetic(seed)
+            .build()?;
+        let cfg = session.model_cfg().clone();
 
         for step in 0..steps {
-            let (tok, tgt) = batcher.next_batch();
-            let rec = trainer.train_step(&tok, &tgt)?;
+            let rec = session.step()?;
             if step % 25 == 0 || step + 1 == steps {
                 println!(
                     "  step {:>4}: loss {:.4} ce {:.4} drop {:.2}%  sim {:.2} ms",
@@ -73,15 +70,15 @@ fn main() -> Result<()> {
                 );
             }
             if (step + 1) % eval_every == 0 {
-                trainer.eval(&vtok, &vtgt)?;
+                session.eval_held_out()?;
             }
         }
-        let (vloss, counts) = trainer.eval(&vtok, &vtgt)?;
+        let (vloss, counts) = session.eval_held_out()?;
         let csv = format!("target/runs/e2e_{artifact}_{name}.csv");
-        trainer.log().write_csv(Path::new(&csv))?;
+        session.log().write_csv(Path::new(&csv))?;
 
         // dispatch locality: fraction of rank-0 tokens staying on-node
-        let topo = trainer.topology();
+        let topo = session.topology();
         let local_frac: f64 = {
             let row = counts.row(0);
             let local: f64 = row
@@ -101,7 +98,7 @@ fn main() -> Result<()> {
         summaries.push((
             name,
             vloss,
-            trainer.log().sim_throughput(),
+            session.log().sim_throughput(),
             local_frac,
         ));
     }

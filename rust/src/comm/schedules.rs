@@ -93,7 +93,81 @@ pub fn scheduled_a2a_time(topo: &Topology, bytes: &Mat, rounds: &[Round]) -> f64
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::topology::presets;
+    use crate::topology::{presets, Link, Topology, TreeSpec};
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    /// Random symmetric 2-level tree with arbitrary (non-power-of-two
+    /// included) node/device counts.
+    fn random_tree(rng: &mut Rng) -> Topology {
+        let spec = TreeSpec::symmetric(&[rng.range(2, 5), rng.range(2, 5)]);
+        let dev = Link::from_gbps_us(rng.range_f64(20.0, 300.0), rng.range_f64(1.0, 5.0));
+        let up = Link::from_gbps_us(rng.range_f64(4.0, 25.0), rng.range_f64(5.0, 30.0));
+        Topology::tree(&spec, &[dev, up], presets::local_copy())
+    }
+
+    #[test]
+    fn prop_rotation_schedule_valid_for_any_p() {
+        // non-power-of-two world sizes included (the xor schedule's gap)
+        check(
+            40,
+            0x5C4ED,
+            |rng| rng.range(1, 34),
+            |&p| {
+                let s = rotation_schedule(p);
+                if s.len() != p {
+                    return Err(format!("{} rounds for P={p}", s.len()));
+                }
+                validate_schedule(p, &s).map_err(|e| format!("P={p}: {e}"))
+            },
+        );
+    }
+
+    #[test]
+    fn prop_xor_schedule_valid_for_powers_of_two() {
+        check(
+            20,
+            0xA0B1,
+            |rng| 1usize << rng.below(6),
+            |&p| {
+                let s = xor_schedule(p);
+                validate_schedule(p, &s).map_err(|e| format!("P={p}: {e}"))
+            },
+        );
+    }
+
+    #[test]
+    fn prop_scheduled_time_dominates_slowest_pair_bound() {
+        // Eq. 2 is a lower bound on any round-based execution: every pair
+        // is delivered in some round, rounds serialise, and contention
+        // only slows a delivery relative to its isolated α-β time.
+        check(
+            25,
+            0xB0074,
+            |rng| {
+                let topo = random_tree(rng);
+                let p = topo.p();
+                let bytes = crate::util::Mat::from_fn(p, p, |_, _| rng.range_f64(0.0, 64e6));
+                (topo, bytes)
+            },
+            |(topo, bytes)| {
+                let p = topo.p();
+                let lb = CostEngine::slowest_pair(topo).exchange_time(bytes);
+                let mut schedules = vec![rotation_schedule(p)];
+                if p.is_power_of_two() {
+                    schedules.push(xor_schedule(p));
+                }
+                for rounds in &schedules {
+                    validate_schedule(p, rounds)?;
+                    let t = scheduled_a2a_time(topo, bytes, rounds);
+                    if t < lb * (1.0 - 1e-9) {
+                        return Err(format!("scheduled {t} below lower bound {lb} (P={p})"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
 
     #[test]
     fn xor_schedule_is_valid() {

@@ -5,7 +5,8 @@
 //! works with no file at all; `--config configs/fig3.toml` reproduces a
 //! specific experiment. See `configs/*.toml` for the checked-in presets.
 
-use crate::coordinator::Strategy;
+use crate::coordinator::{parse_policy, DispatchPolicy};
+use crate::runtime::BackendKind;
 use crate::topology::{presets, Topology};
 use crate::util::toml::TomlDoc;
 use anyhow::{Context, Result};
@@ -22,8 +23,10 @@ pub struct ExperimentConfig {
     pub cluster: String,
     /// Nodes in the cluster (devices = nodes × 8 for A/B/C presets).
     pub nodes: usize,
-    /// Strategy spec (see [`Strategy::parse`]).
+    /// Dispatch-policy spec (see [`parse_policy`]).
     pub strategy: String,
+    /// Execution backend: "sim" | "xla" | "auto".
+    pub backend: String,
     pub steps: usize,
     pub lr: f64,
     pub seed: u64,
@@ -43,6 +46,7 @@ impl Default for ExperimentConfig {
             cluster: "C".into(),
             nodes: 0, // 0 = derive from the artifact's world size
             strategy: "ta-moe".into(),
+            backend: "auto".into(),
             steps: 100,
             lr: 1e-3,
             seed: 0,
@@ -71,6 +75,7 @@ impl ExperimentConfig {
             cluster: doc.str_or("cluster.preset", &d.cluster).to_string(),
             nodes: doc.usize_or("cluster.nodes", d.nodes),
             strategy: doc.str_or("train.strategy", &d.strategy).to_string(),
+            backend: doc.str_or("train.backend", &d.backend).to_string(),
             steps: doc.usize_or("train.steps", d.steps),
             lr: doc.f64_or("train.lr", d.lr),
             seed: doc.usize_or("train.seed", d.seed as usize) as u64,
@@ -81,10 +86,11 @@ impl ExperimentConfig {
         })
     }
 
-    /// World size of the named artifact (reads its manifest).
+    /// World size of the named artifact: from its manifest when compiled,
+    /// else from the built-in preset of the same name (the same resolution
+    /// [`crate::runtime::open_backend`] uses).
     pub fn artifact_world(&self) -> Result<usize> {
-        let m = crate::runtime::Manifest::load(&self.artifacts_dir.join(&self.artifact))?;
-        Ok(m.config.p)
+        Ok(crate::runtime::resolve_model_cfg(&self.artifacts_dir, &self.artifact)?.p)
     }
 
     /// Build the topology for this config, sized to the artifact's world.
@@ -93,8 +99,14 @@ impl ExperimentConfig {
         Ok(topology_for(&self.cluster, p))
     }
 
-    pub fn parsed_strategy(&self) -> Result<Strategy> {
-        Strategy::parse(&self.strategy).map_err(anyhow::Error::msg)
+    /// Resolve the policy spec through the registry.
+    pub fn parsed_policy(&self) -> Result<Box<dyn DispatchPolicy>> {
+        parse_policy(&self.strategy).map_err(anyhow::Error::msg)
+    }
+
+    /// Resolve the backend selector.
+    pub fn parsed_backend(&self) -> Result<BackendKind> {
+        self.backend.parse().map_err(anyhow::Error::msg)
     }
 }
 
@@ -220,6 +232,27 @@ lr = 0.01
     fn bad_strategy_rejected() {
         let mut c = ExperimentConfig::default();
         c.strategy = "bogus".into();
-        assert!(c.parsed_strategy().is_err());
+        assert!(c.parsed_policy().is_err());
+    }
+
+    #[test]
+    fn backend_defaults_to_auto_and_parses() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.parsed_backend().unwrap(), crate::runtime::BackendKind::Auto);
+        let c = ExperimentConfig::from_toml("[train]\nbackend = \"sim\"\n").unwrap();
+        assert_eq!(c.parsed_backend().unwrap(), crate::runtime::BackendKind::Sim);
+        let mut c = ExperimentConfig::default();
+        c.backend = "gpu".into();
+        assert!(c.parsed_backend().is_err());
+    }
+
+    #[test]
+    fn artifact_world_falls_back_to_preset() {
+        let mut c = ExperimentConfig::default();
+        c.artifacts_dir = "definitely/missing".into();
+        c.artifact = "wide16_switch".into();
+        assert_eq!(c.artifact_world().unwrap(), 16);
+        c.artifact = "unknown_model".into();
+        assert!(c.artifact_world().is_err());
     }
 }

@@ -6,7 +6,7 @@
 //! effective per-device rate, communication from the [`crate::comm`]
 //! engine priced on the *actual* per-step dispatch counts `c_ie` (either
 //! measured from a real training run or taken from
-//! [`super::strategy::converged_counts`] for paper-scale sweeps).
+//! [`super::policy::converged_counts`] for paper-scale sweeps).
 //!
 //! Per training step we charge:
 //! * forward + backward compute: 3× the forward FLOPs (standard estimate);
@@ -191,7 +191,7 @@ pub fn throughput(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::strategy::{converged_counts, Strategy};
+    use crate::coordinator::policy::{converged_counts, FastMoeEven, TaMoe};
     use crate::dispatch::Norm;
     use crate::topology::presets;
 
@@ -223,8 +223,8 @@ mod tests {
         let topo = presets::cluster_c(2);
         let cfg = cfg16();
         let shape = ModelShape::gpt_medium(false, 6, 1024);
-        let even = converged_counts(&Strategy::FastMoeEven, &topo, &cfg);
-        let ta = converged_counts(&Strategy::TaMoe { norm: Norm::L1 }, &topo, &cfg);
+        let even = converged_counts(&FastMoeEven, &topo, &cfg);
+        let ta = converged_counts(&TaMoe { norm: Norm::L1 }, &topo, &cfg);
         let t_even = throughput(&shape, &topo, &even, 1, device_flops('C'), false);
         let t_ta = throughput(&shape, &topo, &ta, 1, device_flops('C'), false);
         let speedup = t_ta / t_even;
@@ -237,7 +237,7 @@ mod tests {
         let topo = presets::cluster_a(1);
         let cfg = ModelCfg { p: 8, n_experts: 8, ..cfg16() };
         let shape = ModelShape::gpt_medium(false, 6, 1024);
-        let even = converged_counts(&Strategy::FastMoeEven, &topo, &cfg);
+        let even = converged_counts(&FastMoeEven, &topo, &cfg);
         let c = step_cost(&shape, &topo, &even, 1, device_flops('A'), false);
         assert!(c.compute_s > c.a2a_s, "{c:?}");
     }
@@ -262,7 +262,7 @@ mod tests {
         let topo = presets::cluster_c(2);
         let cfg = cfg16();
         let shape = ModelShape::gpt_medium(false, 6, 1024);
-        let even = converged_counts(&Strategy::FastMoeEven, &topo, &cfg);
+        let even = converged_counts(&FastMoeEven, &topo, &cfg);
         let dir = step_cost(&shape, &topo, &even, 1, device_flops('C'), false);
         let hier = step_cost(&shape, &topo, &even, 1, device_flops('C'), true);
         assert_eq!(dir.compute_s, hier.compute_s);
@@ -276,7 +276,7 @@ mod tests {
         let cfg = cfg16();
         let s1 = ModelShape::gpt_medium(false, 6, 1024);
         let s2 = ModelShape { k: 2, ..s1 };
-        let even1 = converged_counts(&Strategy::FastMoeEven, &topo, &cfg);
+        let even1 = converged_counts(&FastMoeEven, &topo, &cfg);
         let even2 = even1.scale(2.0); // top-2 doubles dispatched tokens
         let c1 = step_cost(&s1, &topo, &even1, 1, device_flops('C'), false);
         let c2 = step_cost(&s2, &topo, &even2, 1, device_flops('C'), false);

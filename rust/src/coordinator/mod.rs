@@ -1,17 +1,26 @@
-//! Layer-3 coordinator: the paper's systems contribution in rust.
+//! Layer-3 coordinator: the paper's systems contribution in rust, behind
+//! the crate's three public seams (DESIGN.md §api).
 //!
-//! * [`strategy`] — the MoE systems under comparison (DeepSpeed-MoE,
-//!   FastMoE, FasterMoE-Hir, TA-MoE) expressed as runtime inputs to the
-//!   one compiled model, plus their converged dispatch patterns for the
-//!   analytic sweeps.
+//! * [`policy`] — the [`DispatchPolicy`] trait and the four systems under
+//!   comparison (DeepSpeed-MoE, FastMoE, FasterMoE-Hir, TA-MoE) expressed
+//!   as runtime inputs to one model, plus their converged dispatch
+//!   patterns for the analytic sweeps.
+//! * [`registry`] — open name → policy lookup ([`parse_policy`]);
+//!   downstream crates plug in new policies with [`register_policy`].
+//! * [`session`] — [`Session`]/[`SessionBuilder`]: topology + policy +
+//!   backend + data + metrics composed into one training run.
 //! * [`cost`] — the simulated cluster clock: FLOP model + α-β all-to-all +
 //!   allreduce, priced on measured `c_ie`.
-//! * [`trainer`] — the step loop over the AOT-compiled cluster program.
 
 pub mod cost;
-pub mod strategy;
-pub mod trainer;
+pub mod policy;
+pub mod registry;
+pub mod session;
 
 pub use cost::{device_flops, step_cost, throughput, ModelShape, StepCost};
-pub use strategy::{converged_counts, Strategy, StrategyInputs};
-pub use trainer::{Trainer, TrainerOptions};
+pub use policy::{
+    converged_counts, DeepSpeedEven, DispatchPolicy, FastMoeEven, FasterMoeHir,
+    PolicyInputs, TaMoe,
+};
+pub use registry::{list_policies, parse_policy, register_policy, PolicyFactory};
+pub use session::{DataSource, Session, SessionBuilder, SessionOptions};

@@ -1,0 +1,371 @@
+//! The [`DispatchPolicy`] trait: the routing-strategy seam of the public
+//! API, replacing the old closed `Strategy` enum.
+//!
+//! A policy decides the four runtime inputs of the compiled model —
+//! penalty matrix (which aux loss), capacity matrix, intra-node mask, and
+//! the Hir remote fraction — plus which all-to-all schedule its timing
+//! model uses, and the dispatch pattern it converges to (for the analytic
+//! throughput sweeps). The four systems the paper compares (§5
+//! Methodology) ship as structs implementing it; downstream crates add
+//! their own via [`super::registry::register_policy`] without touching
+//! this file.
+//!
+//! TA-MoE composes with either host system exactly as §4.3 describes: on
+//! FastMoE it swaps the loss, on DeepSpeed-MoE it also makes the local
+//! capacities proportional to `ĉ`.
+
+use crate::dispatch::{
+    baseline_penalty_matrix, even_caps, proportional_caps, target_pattern,
+    topo_penalty_matrix, DispatchProblem, Norm, TargetPattern,
+};
+use crate::runtime::{GateInputs, ModelCfg};
+use crate::topology::Topology;
+use crate::util::Mat;
+
+/// A routing strategy: produces the model's gate inputs on a topology and
+/// describes its timing/convergence behaviour. Implementations must be
+/// `Debug` (property tests print failing cases) and thread-safe.
+pub trait DispatchPolicy: std::fmt::Debug + Send + Sync {
+    /// Canonical name. Must round-trip through the registry:
+    /// `parse_policy(self.name())` yields an equivalent policy.
+    fn name(&self) -> String;
+
+    /// Does this policy use the topology-aware loss?
+    fn is_topology_aware(&self) -> bool {
+        false
+    }
+
+    /// Does its timing model use the hierarchical all-to-all?
+    fn hierarchical_a2a(&self) -> bool {
+        false
+    }
+
+    /// The Eq. 7 target pattern this policy steers toward, if any.
+    fn target(&self, topo: &Topology, cfg: &ModelCfg) -> Option<TargetPattern> {
+        let _ = (topo, cfg);
+        None
+    }
+
+    /// Build the model's runtime inputs for this policy on a topology.
+    fn runtime_inputs(&self, topo: &Topology, cfg: &ModelCfg) -> PolicyInputs;
+
+    /// The dispatch pattern the gate converges to under this policy, used
+    /// by the analytic throughput model (fig4/fig6a/fig8) — validated
+    /// against real training in the fig3/fig7 runs.
+    fn converged_counts(&self, topo: &Topology, cfg: &ModelCfg) -> Mat;
+}
+
+/// A policy's runtime inputs: the gate matrices the backend consumes plus
+/// the target pattern (topology-aware policies only).
+#[derive(Clone, Debug)]
+pub struct PolicyInputs {
+    pub gate: GateInputs,
+    pub target: Option<TargetPattern>,
+}
+
+/// Free-function form of [`DispatchPolicy::converged_counts`], kept for
+/// sweep/bench call-site ergonomics.
+pub fn converged_counts(policy: &dyn DispatchPolicy, topo: &Topology, cfg: &ModelCfg) -> Mat {
+    policy.converged_counts(topo, cfg)
+}
+
+/// The Eq. 7 problem instance for a model shape.
+fn dispatch_problem(cfg: &ModelCfg) -> DispatchProblem {
+    DispatchProblem {
+        k: cfg.k,
+        s: cfg.tokens_per_dev,
+        e_per_dev: cfg.e_per_dev,
+        elem_bytes: cfg.token_bytes(),
+    }
+}
+
+/// Gate inputs shared by the even baselines: constant load-balance
+/// penalty, even capacity slices.
+fn even_gate(topo: &Topology, cfg: &ModelCfg, hir_remote_frac: f32) -> GateInputs {
+    assert_eq!(topo.p(), cfg.p, "topology/model world-size mismatch");
+    GateInputs {
+        penalty: baseline_penalty_matrix(cfg.p, cfg.n_experts),
+        caps: even_caps(cfg.p, cfg.n_experts, cfg.capacity),
+        local_mask: topo.local_mask(cfg.n_experts, cfg.e_per_dev),
+        hir_remote_frac,
+    }
+}
+
+/// Uniform converged pattern `c_ie = k·S/N` (the load-balance loss target).
+fn even_counts(cfg: &ModelCfg) -> Mat {
+    let ks = (cfg.k * cfg.tokens_per_dev) as f64;
+    Mat::filled(cfg.p, cfg.n_experts, ks / cfg.n_experts as f64)
+}
+
+// ---------------------------------------------------------------------------
+// The four systems the paper compares
+// ---------------------------------------------------------------------------
+
+/// DeepSpeed-MoE: even local capacities `C/P`, load-balance loss,
+/// hierarchical all-to-all.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub struct DeepSpeedEven;
+
+impl DispatchPolicy for DeepSpeedEven {
+    fn name(&self) -> String {
+        "deepspeed".into()
+    }
+
+    fn hierarchical_a2a(&self) -> bool {
+        true
+    }
+
+    fn runtime_inputs(&self, topo: &Topology, cfg: &ModelCfg) -> PolicyInputs {
+        PolicyInputs { gate: even_gate(topo, cfg, 1.0), target: None }
+    }
+
+    fn converged_counts(&self, _topo: &Topology, cfg: &ModelCfg) -> Mat {
+        even_counts(cfg)
+    }
+}
+
+/// FastMoE: global per-expert capacity with size exchange, load-balance
+/// loss, direct all-to-all.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub struct FastMoeEven;
+
+impl DispatchPolicy for FastMoeEven {
+    fn name(&self) -> String {
+        "fastmoe".into()
+    }
+
+    fn runtime_inputs(&self, topo: &Topology, cfg: &ModelCfg) -> PolicyInputs {
+        PolicyInputs { gate: even_gate(topo, cfg, 1.0), target: None }
+    }
+
+    fn converged_counts(&self, _topo: &Topology, cfg: &ModelCfg) -> Mat {
+        even_counts(cfg)
+    }
+}
+
+/// FasterMoE's Hir gate: compulsory intra-node ratio (1 − remote_frac).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FasterMoeHir {
+    pub remote_frac: f64,
+}
+
+impl Default for FasterMoeHir {
+    fn default() -> Self {
+        FasterMoeHir { remote_frac: 0.25 }
+    }
+}
+
+impl DispatchPolicy for FasterMoeHir {
+    fn name(&self) -> String {
+        format!("fastermoe:{}", self.remote_frac)
+    }
+
+    fn runtime_inputs(&self, topo: &Topology, cfg: &ModelCfg) -> PolicyInputs {
+        PolicyInputs {
+            gate: even_gate(topo, cfg, self.remote_frac as f32),
+            target: None,
+        }
+    }
+
+    /// Top-1 preference is ~uniform, but at most `remote_frac·S` tokens
+    /// leave the node; the remainder is folded back onto intra-node
+    /// experts.
+    fn converged_counts(&self, topo: &Topology, cfg: &ModelCfg) -> Mat {
+        let (p, n) = (cfg.p, cfg.n_experts);
+        let ks = (cfg.k * cfg.tokens_per_dev) as f64;
+        let mut m = Mat::zeros(p, n);
+        for i in 0..p {
+            let local: Vec<usize> =
+                (0..n).filter(|&e| topo.same_node(i, e / cfg.e_per_dev)).collect();
+            let remote: Vec<usize> =
+                (0..n).filter(|&e| !topo.same_node(i, e / cfg.e_per_dev)).collect();
+            if remote.is_empty() {
+                for &e in &local {
+                    m.set(i, e, ks / local.len() as f64);
+                }
+                continue;
+            }
+            // uniform preference sends |remote|/n of the tokens out,
+            // clipped at the compulsory budget
+            let want_remote = ks * remote.len() as f64 / n as f64;
+            let remote_total = want_remote.min(ks * self.remote_frac);
+            let local_total = ks - remote_total;
+            for &e in &remote {
+                m.set(i, e, remote_total / remote.len() as f64);
+            }
+            for &e in &local {
+                m.set(i, e, local_total / local.len() as f64);
+            }
+        }
+        m
+    }
+}
+
+/// TA-MoE (this paper): topology-aware loss, and on local-capacity hosts,
+/// `C_ie ∝ ĉ_ie`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TaMoe {
+    pub norm: Norm,
+}
+
+impl Default for TaMoe {
+    fn default() -> Self {
+        TaMoe { norm: Norm::L1 }
+    }
+}
+
+impl DispatchPolicy for TaMoe {
+    fn name(&self) -> String {
+        match self.norm {
+            Norm::L1 => "ta-moe".into(),
+            Norm::Softmax { temp } => format!("ta-moe:softmax:{temp}"),
+        }
+    }
+
+    fn is_topology_aware(&self) -> bool {
+        true
+    }
+
+    fn target(&self, topo: &Topology, cfg: &ModelCfg) -> Option<TargetPattern> {
+        Some(target_pattern(topo, &dispatch_problem(cfg)))
+    }
+
+    fn runtime_inputs(&self, topo: &Topology, cfg: &ModelCfg) -> PolicyInputs {
+        assert_eq!(topo.p(), cfg.p, "topology/model world-size mismatch");
+        let tp = self.target(topo, cfg).expect("ta-moe target");
+        let caps = if cfg.dispatch == "local" {
+            // §4.3: local capacities proportional to ĉ
+            proportional_caps(&tp.c, cfg.capacity)
+        } else {
+            // FastMoE host: capacity untouched, only the loss changes
+            even_caps(cfg.p, cfg.n_experts, cfg.capacity)
+        };
+        PolicyInputs {
+            gate: GateInputs {
+                penalty: topo_penalty_matrix(&tp.c, self.norm),
+                caps,
+                local_mask: topo.local_mask(cfg.n_experts, cfg.e_per_dev),
+                hir_remote_frac: 1.0,
+            },
+            target: Some(tp),
+        }
+    }
+
+    /// The topology loss drives `c → ĉ`.
+    fn converged_counts(&self, topo: &Topology, cfg: &ModelCfg) -> Mat {
+        self.target(topo, cfg).expect("target").c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::presets;
+
+    fn cfg(p: usize, dispatch: &str) -> ModelCfg {
+        ModelCfg {
+            p,
+            e_per_dev: 1,
+            layers: 4,
+            d: 128,
+            f: 256,
+            heads: 4,
+            vocab: 256,
+            batch: 2,
+            seq: 32,
+            k: 1,
+            cap_factor: 1.25,
+            gate: "switch".into(),
+            dispatch: dispatch.into(),
+            n_experts: p,
+            capacity: 80,
+            tokens_per_dev: 64,
+            moe_layer_ids: vec![1, 3],
+        }
+    }
+
+    #[test]
+    fn baseline_inputs_are_even() {
+        let topo = presets::cluster_b(2);
+        let c = cfg(16, "global");
+        let pi = FastMoeEven.runtime_inputs(&topo, &c);
+        assert_eq!(pi.gate.penalty.get(0, 0), 16.0);
+        assert!((pi.gate.caps.get(0, 0) - 5.0).abs() < 1e-9); // 80/16
+        assert!(pi.target.is_none());
+    }
+
+    #[test]
+    fn tamoe_local_caps_are_proportional() {
+        let topo = presets::cluster_b(2);
+        let c = cfg(16, "local");
+        let pi = TaMoe { norm: Norm::L1 }.runtime_inputs(&topo, &c);
+        let tp = pi.target.as_ref().unwrap();
+        // same-node expert gets more capacity than cross-node
+        assert!(pi.gate.caps.get(0, 1) > pi.gate.caps.get(0, 8));
+        // caps sum to capacity per expert
+        for e in 0..16 {
+            assert_eq!(pi.gate.caps.col_sum(e) as usize, c.capacity);
+        }
+        // penalty is anti-monotone in the target
+        assert!(tp.c.get(0, 1) > tp.c.get(0, 8));
+        assert!(pi.gate.penalty.get(0, 1) < pi.gate.penalty.get(0, 8));
+    }
+
+    #[test]
+    fn converged_counts_conserve_tokens() {
+        let topo = presets::cluster_c(2);
+        let c = cfg(16, "global");
+        let policies: Vec<Box<dyn DispatchPolicy>> = vec![
+            Box::new(DeepSpeedEven),
+            Box::new(FastMoeEven),
+            Box::new(FasterMoeHir { remote_frac: 0.2 }),
+            Box::new(TaMoe { norm: Norm::L1 }),
+        ];
+        for s in &policies {
+            let m = converged_counts(s.as_ref(), &topo, &c);
+            for i in 0..16 {
+                assert!(
+                    (m.row_sum(i) - 64.0).abs() < 1e-6,
+                    "{} row {i}: {}",
+                    s.name(),
+                    m.row_sum(i)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn hir_counts_respect_budget() {
+        let topo = presets::cluster_b(2);
+        let c = cfg(16, "global");
+        let frac = 0.25;
+        let m = FasterMoeHir { remote_frac: frac }.converged_counts(&topo, &c);
+        for i in 0..16 {
+            let remote: f64 = (0..16)
+                .filter(|&e| !topo.same_node(i, e))
+                .map(|e| m.get(i, e))
+                .sum();
+            assert!(remote <= 64.0 * frac + 1e-9);
+        }
+    }
+
+    #[test]
+    fn hir_single_node_goes_fully_local() {
+        let topo = presets::cluster_b(1);
+        let c = cfg(8, "global");
+        let m = FasterMoeHir { remote_frac: 0.2 }.converged_counts(&topo, &c);
+        for i in 0..8 {
+            assert!((m.row_sum(i) - 64.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn only_deepspeed_uses_hierarchical_a2a() {
+        assert!(DeepSpeedEven.hierarchical_a2a());
+        assert!(!FastMoeEven.hierarchical_a2a());
+        assert!(!TaMoe::default().hierarchical_a2a());
+        assert!(!FasterMoeHir::default().hierarchical_a2a());
+        assert!(TaMoe::default().is_topology_aware());
+        assert!(!DeepSpeedEven.is_topology_aware());
+    }
+}

@@ -1,0 +1,256 @@
+//! The dispatch-policy registry: name → policy factory.
+//!
+//! `Strategy::parse` used to be a closed `match`; the registry makes the
+//! name space open. A spec string is `key[:arg[:arg...]]` — the key picks
+//! a factory, the remaining `:`-separated parts are passed to it, and the
+//! factory must consume *all* of them (trailing garbage like
+//! `ta-moe:softmax:2.0:junk` or `fastermoe:notanumber` is an error, not a
+//! silent default). The four paper systems are pre-registered; downstream
+//! code adds its own with [`register_policy`] and can then select it by
+//! name everywhere a builtin works — configs, the CLI, bench arms:
+//!
+//! ```
+//! use ta_moe::coordinator::{register_policy, parse_policy, DispatchPolicy, PolicyInputs};
+//! # use ta_moe::runtime::ModelCfg;
+//! # use ta_moe::topology::Topology;
+//! # use ta_moe::util::Mat;
+//! #[derive(Debug)]
+//! struct Everywhere;
+//! impl DispatchPolicy for Everywhere {
+//!     fn name(&self) -> String { "everywhere".into() }
+//!     fn runtime_inputs(&self, topo: &Topology, cfg: &ModelCfg) -> PolicyInputs {
+//!         ta_moe::coordinator::FastMoeEven.runtime_inputs(topo, cfg)
+//!     }
+//!     fn converged_counts(&self, topo: &Topology, cfg: &ModelCfg) -> Mat {
+//!         ta_moe::coordinator::FastMoeEven.converged_counts(topo, cfg)
+//!     }
+//! }
+//! fn make(args: &[&str]) -> Result<Box<dyn DispatchPolicy>, String> {
+//!     if !args.is_empty() { return Err("everywhere takes no arguments".into()); }
+//!     Ok(Box::new(Everywhere))
+//! }
+//! register_policy(&["everywhere"], "uniform demo policy", make);
+//! assert_eq!(parse_policy("everywhere").unwrap().name(), "everywhere");
+//! ```
+
+use super::policy::{DeepSpeedEven, DispatchPolicy, FastMoeEven, FasterMoeHir, TaMoe};
+use crate::dispatch::Norm;
+use std::sync::{Mutex, OnceLock};
+
+/// Builds a policy from the `:`-separated arguments after the key.
+/// Must reject unconsumed arguments.
+pub type PolicyFactory = fn(args: &[&str]) -> Result<Box<dyn DispatchPolicy>, String>;
+
+struct Entry {
+    names: &'static [&'static str],
+    help: &'static str,
+    factory: PolicyFactory,
+}
+
+fn registry() -> &'static Mutex<Vec<Entry>> {
+    static REGISTRY: OnceLock<Mutex<Vec<Entry>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(builtin_entries()))
+}
+
+/// Register a policy factory under one or more names (the first is
+/// canonical). Later registrations shadow earlier ones with the same name,
+/// so a downstream crate may also *override* a builtin.
+pub fn register_policy(
+    names: &'static [&'static str],
+    help: &'static str,
+    factory: PolicyFactory,
+) {
+    assert!(!names.is_empty(), "policy needs at least one name");
+    registry().lock().unwrap().push(Entry { names, help, factory });
+}
+
+/// Parse a policy spec `key[:arg...]` via the registry.
+pub fn parse_policy(spec: &str) -> Result<Box<dyn DispatchPolicy>, String> {
+    let parts: Vec<&str> = spec.split(':').collect();
+    let key = parts[0];
+    if key.is_empty() {
+        return Err("empty policy name".into());
+    }
+    let factory = {
+        let reg = registry().lock().unwrap();
+        reg.iter()
+            .rev()
+            .find(|e| e.names.iter().any(|n| *n == key))
+            .map(|e| e.factory)
+    };
+    match factory {
+        Some(f) => f(&parts[1..]).map_err(|e| format!("policy {spec:?}: {e}")),
+        None => {
+            let known: Vec<&str> = {
+                let reg = registry().lock().unwrap();
+                reg.iter().map(|e| e.names[0]).collect()
+            };
+            Err(format!("unknown policy {key:?} (known: {})", known.join(", ")))
+        }
+    }
+}
+
+/// All registered policies as `(names-joined-by-|, help)` rows, in
+/// registration order — the `--list-strategies` table.
+pub fn list_policies() -> Vec<(String, String)> {
+    registry()
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|e| (e.names.join("|"), e.help.to_string()))
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// builtin factories
+// ---------------------------------------------------------------------------
+
+fn reject_extra(args: &[&str], name: &str) -> Result<(), String> {
+    if args.is_empty() {
+        Ok(())
+    } else {
+        Err(format!("{name} takes no arguments, got {:?}", args.join(":")))
+    }
+}
+
+fn make_deepspeed(args: &[&str]) -> Result<Box<dyn DispatchPolicy>, String> {
+    reject_extra(args, "deepspeed")?;
+    Ok(Box::new(DeepSpeedEven))
+}
+
+fn make_fastmoe(args: &[&str]) -> Result<Box<dyn DispatchPolicy>, String> {
+    reject_extra(args, "fastmoe")?;
+    Ok(Box::new(FastMoeEven))
+}
+
+fn make_fastermoe(args: &[&str]) -> Result<Box<dyn DispatchPolicy>, String> {
+    let remote_frac = match args {
+        [] => FasterMoeHir::default().remote_frac,
+        [f] => {
+            let v: f64 =
+                f.parse().map_err(|e| format!("remote_frac {f:?}: {e}"))?;
+            if !(0.0..=1.0).contains(&v) {
+                return Err(format!("remote_frac {v} outside [0, 1]"));
+            }
+            v
+        }
+        _ => return Err(format!("at most one remote_frac argument, got {:?}", args.join(":"))),
+    };
+    Ok(Box::new(FasterMoeHir { remote_frac }))
+}
+
+fn make_tamoe(args: &[&str]) -> Result<Box<dyn DispatchPolicy>, String> {
+    let norm = match args {
+        [] => Norm::L1,
+        ["softmax"] => Norm::Softmax { temp: 2.0 },
+        ["softmax", t] => {
+            let temp: f64 = t.parse().map_err(|e| format!("temp {t:?}: {e}"))?;
+            if !temp.is_finite() || temp <= 0.0 {
+                return Err(format!("temp must be positive, got {temp}"));
+            }
+            Norm::Softmax { temp }
+        }
+        ["softmax", _, ..] => {
+            return Err(format!("unexpected trailing arguments {:?}", args[2..].join(":")))
+        }
+        [other, ..] => return Err(format!("unknown variant {other:?} (expected `softmax`)")),
+    };
+    Ok(Box::new(TaMoe { norm }))
+}
+
+fn builtin_entries() -> Vec<Entry> {
+    vec![
+        Entry {
+            names: &["deepspeed", "deepspeed-moe"],
+            help: "DeepSpeed-MoE: even local capacities, load-balance loss, hierarchical a2a",
+            factory: make_deepspeed,
+        },
+        Entry {
+            names: &["fastmoe"],
+            help: "FastMoE: global capacity with size exchange, load-balance loss, direct a2a",
+            factory: make_fastmoe,
+        },
+        Entry {
+            names: &["fastermoe", "fastermoe-hir", "hir"],
+            help: "FasterMoE Hir gate: compulsory intra-node ratio; optional `:remote_frac` (default 0.25)",
+            factory: make_fastermoe,
+        },
+        Entry {
+            names: &["ta-moe", "tamoe"],
+            help: "TA-MoE (this paper): topology-aware loss + proportional caps; optional `:softmax[:temp]`",
+            factory: make_tamoe,
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_specs_parse() {
+        for (spec, want) in [
+            ("deepspeed", "deepspeed"),
+            ("deepspeed-moe", "deepspeed"),
+            ("fastmoe", "fastmoe"),
+            ("fastermoe", "fastermoe:0.25"),
+            ("fastermoe-hir:0.1", "fastermoe:0.1"),
+            ("hir:0.5", "fastermoe:0.5"),
+            ("ta-moe", "ta-moe"),
+            ("tamoe", "ta-moe"),
+            ("ta-moe:softmax", "ta-moe:softmax:2"),
+            ("ta-moe:softmax:3.5", "ta-moe:softmax:3.5"),
+        ] {
+            assert_eq!(parse_policy(spec).unwrap().name(), want, "{spec}");
+        }
+    }
+
+    #[test]
+    fn every_builtin_name_round_trips() {
+        let policies: Vec<Box<dyn DispatchPolicy>> = vec![
+            Box::new(DeepSpeedEven),
+            Box::new(FastMoeEven),
+            Box::new(FasterMoeHir { remote_frac: 0.3 }),
+            Box::new(FasterMoeHir::default()),
+            Box::new(TaMoe { norm: Norm::L1 }),
+            Box::new(TaMoe { norm: Norm::Softmax { temp: 2.0 } }),
+            Box::new(TaMoe { norm: Norm::Softmax { temp: 0.75 } }),
+        ];
+        for p in &policies {
+            let name = p.name();
+            let parsed = parse_policy(&name).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(parsed.name(), name, "parse(name()) must round-trip");
+            assert_eq!(parsed.is_topology_aware(), p.is_topology_aware());
+            assert_eq!(parsed.hierarchical_a2a(), p.hierarchical_a2a());
+        }
+    }
+
+    #[test]
+    fn trailing_garbage_is_rejected() {
+        for bad in [
+            "ta-moe:softmax:2.0:junk",
+            "ta-moe:blah",
+            "fastermoe:notanumber",
+            "fastermoe:0.2:x",
+            "fastermoe:1.5",
+            "fastermoe:-0.1",
+            "deepspeed:junk",
+            "fastmoe:0.5",
+            "ta-moe:softmax:-1",
+            "ta-moe:softmax:nan",
+            "",
+            "whatever",
+        ] {
+            assert!(parse_policy(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn listing_names_the_builtins() {
+        let rows = list_policies();
+        assert!(rows.len() >= 4);
+        let names: Vec<&str> = rows.iter().map(|(n, _)| n.as_str()).collect();
+        assert!(names.iter().any(|n| n.starts_with("ta-moe")), "{names:?}");
+        assert!(names.iter().any(|n| n.starts_with("deepspeed")), "{names:?}");
+    }
+}

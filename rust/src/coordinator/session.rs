@@ -1,0 +1,417 @@
+//! [`Session`]: one training run = topology + policy + backend + data +
+//! metrics, assembled by [`SessionBuilder`].
+//!
+//! The builder is the crate's front door (DESIGN.md §api). Everything is
+//! optional except an execution backend (or an artifact name for
+//! [`crate::runtime::open_backend`] to resolve):
+//!
+//! ```
+//! use ta_moe::coordinator::SessionBuilder;
+//! use ta_moe::runtime::{ModelCfg, SimBackend};
+//!
+//! let mut session = SessionBuilder::new()
+//!     .backend(Box::new(SimBackend::new(ModelCfg::preset("tiny4").unwrap())))
+//!     .cluster("C")
+//!     .policy_named("ta-moe")
+//!     .lr(2e-3)
+//!     .build()
+//!     .unwrap();
+//! let log = session.run(5).unwrap();
+//! assert_eq!(log.records.len(), 5);
+//! ```
+//!
+//! Per step the session feeds the next batch to the backend, reads back
+//! the gate statistics `c_ie`, and charges the step to the simulated
+//! cluster clock via [`super::cost::step_cost`] using the *measured*
+//! dispatch counts — the simulated time axis therefore reflects what the
+//! gate actually learned, not what the policy hoped for.
+
+use super::cost::{step_cost, ModelShape};
+use super::policy::{DispatchPolicy, PolicyInputs, TaMoe};
+use super::registry::parse_policy;
+use crate::config::topology_for;
+use crate::data::{Batcher, SyntheticCorpus};
+use crate::metrics::{RunLog, StepRecord};
+use crate::runtime::{open_backend, Backend, BackendKind, HostTensor};
+use crate::topology::Topology;
+use crate::util::Mat;
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+use std::time::Instant;
+
+/// Scalar knobs of a session.
+#[derive(Clone, Debug)]
+pub struct SessionOptions {
+    pub lr: f32,
+    pub seed: i32,
+    /// Effective device FLOP/s for the simulated clock.
+    pub flops_per_dev: f64,
+    /// Run a held-out eval every n steps inside [`Session::run`] (0 = off).
+    pub eval_every: usize,
+}
+
+impl Default for SessionOptions {
+    fn default() -> Self {
+        SessionOptions { lr: 1e-3, seed: 0, flops_per_dev: 45e12, eval_every: 0 }
+    }
+}
+
+/// Where the session's token stream comes from.
+#[derive(Clone, Debug)]
+pub enum DataSource {
+    /// Deterministic Zipf/Markov corpus (the default; seeded).
+    Synthetic { seed: u64 },
+    /// UTF-8 text, byte-tokenised and tiled.
+    Text(String),
+    /// A pre-tokenised stream.
+    Stream(Vec<i32>),
+}
+
+/// Builder for [`Session`]. Construction errors (unknown policy name,
+/// missing artifact, world-size mismatch) surface in [`build`].
+///
+/// [`build`]: SessionBuilder::build
+#[derive(Default)]
+pub struct SessionBuilder {
+    backend: Option<Box<dyn Backend>>,
+    artifact: Option<(PathBuf, String)>,
+    backend_kind: BackendKind,
+    topo: Option<Topology>,
+    cluster: Option<String>,
+    policy: Option<Box<dyn DispatchPolicy>>,
+    policy_spec: Option<String>,
+    data: Option<DataSource>,
+    opts: SessionOptions,
+}
+
+impl SessionBuilder {
+    pub fn new() -> SessionBuilder {
+        SessionBuilder::default()
+    }
+
+    /// Use an explicit execution backend (overrides [`artifact`]).
+    ///
+    /// [`artifact`]: SessionBuilder::artifact
+    pub fn backend(mut self, backend: Box<dyn Backend>) -> Self {
+        self.backend = Some(backend);
+        self
+    }
+
+    /// Resolve the backend from an artifact name at build time via
+    /// [`open_backend`] (respects [`backend_kind`]).
+    ///
+    /// [`backend_kind`]: SessionBuilder::backend_kind
+    pub fn artifact(mut self, artifacts_dir: impl Into<PathBuf>, name: impl Into<String>) -> Self {
+        self.artifact = Some((artifacts_dir.into(), name.into()));
+        self
+    }
+
+    /// Which engine [`artifact`] resolution opens (default: `Auto`).
+    ///
+    /// [`artifact`]: SessionBuilder::artifact
+    pub fn backend_kind(mut self, kind: BackendKind) -> Self {
+        self.backend_kind = kind;
+        self
+    }
+
+    /// Use an explicit topology (must match the model's world size).
+    pub fn topology(mut self, topo: Topology) -> Self {
+        self.topo = Some(topo);
+        self
+    }
+
+    /// Use a cluster preset ("A" | "B" | "C" | "table1"), scaled to the
+    /// model's world size at build time. Default: "C".
+    pub fn cluster(mut self, preset: impl Into<String>) -> Self {
+        self.cluster = Some(preset.into());
+        self
+    }
+
+    /// Use an explicit dispatch policy (overrides [`policy_named`]).
+    ///
+    /// [`policy_named`]: SessionBuilder::policy_named
+    pub fn policy(mut self, policy: Box<dyn DispatchPolicy>) -> Self {
+        self.policy = Some(policy);
+        self
+    }
+
+    /// Look the policy up in the registry at build time
+    /// (e.g. `"ta-moe:softmax:2"`). Default: `"ta-moe"`.
+    pub fn policy_named(mut self, spec: impl Into<String>) -> Self {
+        self.policy_spec = Some(spec.into());
+        self
+    }
+
+    /// Train on the deterministic synthetic corpus with this seed.
+    pub fn data_synthetic(mut self, seed: u64) -> Self {
+        self.data = Some(DataSource::Synthetic { seed });
+        self
+    }
+
+    /// Train on byte-tokenised text (tiled if short).
+    pub fn data_text(mut self, text: impl Into<String>) -> Self {
+        self.data = Some(DataSource::Text(text.into()));
+        self
+    }
+
+    /// Train on a pre-tokenised stream.
+    pub fn data_stream(mut self, stream: Vec<i32>) -> Self {
+        self.data = Some(DataSource::Stream(stream));
+        self
+    }
+
+    pub fn lr(mut self, lr: f32) -> Self {
+        self.opts.lr = lr;
+        self
+    }
+
+    pub fn seed(mut self, seed: i32) -> Self {
+        self.opts.seed = seed;
+        self
+    }
+
+    pub fn flops_per_dev(mut self, flops: f64) -> Self {
+        self.opts.flops_per_dev = flops;
+        self
+    }
+
+    /// Held-out eval cadence inside [`Session::run`] (0 = off).
+    pub fn eval_every(mut self, every: usize) -> Self {
+        self.opts.eval_every = every;
+        self
+    }
+
+    pub fn options(mut self, opts: SessionOptions) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    /// Assemble the session: resolve backend and policy, check the
+    /// topology against the model's world size, compute the policy's gate
+    /// inputs, initialise the backend, and set up the data pipeline.
+    pub fn build(self) -> Result<Session> {
+        let mut label_model = None;
+        let mut backend = match (self.backend, self.artifact) {
+            (Some(b), _) => b,
+            (None, Some((dir, name))) => {
+                label_model = Some(name.clone());
+                open_backend(self.backend_kind, &dir, &name)
+                    .with_context(|| format!("opening backend for artifact {name:?}"))?
+            }
+            (None, None) => anyhow::bail!(
+                "SessionBuilder needs .backend(...) or .artifact(dir, name)"
+            ),
+        };
+        let cfg = backend.model_cfg().clone();
+
+        let topo = match (self.topo, self.cluster) {
+            (Some(t), _) => t,
+            (None, Some(c)) => topology_for(&c, cfg.p),
+            (None, None) => topology_for("C", cfg.p),
+        };
+        anyhow::ensure!(
+            topo.p() == cfg.p,
+            "topology has {} devices, model wants {}",
+            topo.p(),
+            cfg.p
+        );
+
+        let policy: Box<dyn DispatchPolicy> = match (self.policy, self.policy_spec) {
+            (Some(p), _) => p,
+            (None, Some(spec)) => parse_policy(&spec).map_err(anyhow::Error::msg)?,
+            (None, None) => Box::new(TaMoe::default()),
+        };
+
+        let inputs = policy.runtime_inputs(&topo, &cfg);
+        backend.init(self.opts.seed, &inputs.gate)?;
+
+        // data pipeline: training stream + one held-out eval batch drawn
+        // from the same distribution. Synthetic data gets a disjoint
+        // corpus (different seed); for text/stream sources the first batch
+        // becomes the eval batch and training starts from the second.
+        let min_len = cfg.p * cfg.batch * (cfg.seq + 1);
+        let data = self
+            .data
+            .unwrap_or(DataSource::Synthetic { seed: self.opts.seed as u64 });
+        let (batcher, eval_batch) = match data {
+            DataSource::Synthetic { seed } => {
+                let stream = SyntheticCorpus::new(seed).tokens(min_len * 64);
+                let eval_seed = seed.wrapping_add(7777);
+                let eval_stream = SyntheticCorpus::new(eval_seed).tokens(min_len * 8);
+                let eval = Batcher::new(eval_stream, cfg.p, cfg.batch, cfg.seq).next_batch();
+                (Batcher::new(stream, cfg.p, cfg.batch, cfg.seq), eval)
+            }
+            DataSource::Text(text) => {
+                let mut b = Batcher::from_text(&text, cfg.p, cfg.batch, cfg.seq);
+                let eval = b.next_batch();
+                (b, eval)
+            }
+            DataSource::Stream(stream) => {
+                anyhow::ensure!(
+                    stream.len() > min_len,
+                    "data stream has {} tokens, one batch needs > {min_len}",
+                    stream.len()
+                );
+                let mut b = Batcher::new(stream, cfg.p, cfg.batch, cfg.seq);
+                let eval = b.next_batch();
+                (b, eval)
+            }
+        };
+
+        let label = format!(
+            "{}/{}",
+            label_model.unwrap_or_else(|| backend.name().to_string()),
+            policy.name()
+        );
+        let shape = ModelShape::from_cfg(&cfg);
+        let tokens_per_step = cfg.p * cfg.tokens_per_dev;
+        Ok(Session {
+            backend,
+            topo,
+            policy,
+            inputs,
+            shape,
+            opts: self.opts,
+            batcher,
+            eval_batch,
+            log: RunLog::new(&label, tokens_per_step),
+            last_counts: None,
+        })
+    }
+}
+
+/// A fully-assembled training run over one backend, one topology, and one
+/// dispatch policy. Replaces the old `Trainer`.
+pub struct Session {
+    backend: Box<dyn Backend>,
+    topo: Topology,
+    policy: Box<dyn DispatchPolicy>,
+    inputs: PolicyInputs,
+    shape: ModelShape,
+    opts: SessionOptions,
+    batcher: Batcher,
+    eval_batch: (Vec<i32>, Vec<i32>),
+    log: RunLog,
+    last_counts: Option<Mat>,
+}
+
+impl Session {
+    /// Train `steps` steps on the session's data source, running the
+    /// held-out eval every `eval_every` steps (if configured). Returns the
+    /// accumulated log.
+    pub fn run(&mut self, steps: usize) -> Result<&RunLog> {
+        for i in 0..steps {
+            self.step()?;
+            if self.opts.eval_every > 0 && (i + 1) % self.opts.eval_every == 0 {
+                self.eval_held_out()?;
+            }
+        }
+        Ok(&self.log)
+    }
+
+    /// One training step on the next batch from the session's data source.
+    pub fn step(&mut self) -> Result<StepRecord> {
+        let (tok, tgt) = self.batcher.next_batch();
+        self.train_step(&tok, &tgt)
+    }
+
+    /// One training step on caller-provided `[P, B, T]` token/target ids;
+    /// prices the step on the simulated cluster clock and logs it.
+    pub fn train_step(&mut self, tokens: &[i32], targets: &[i32]) -> Result<StepRecord> {
+        let (tok, tgt) = self.batch_tensors(tokens, targets)?;
+        let wall0 = Instant::now();
+        let out = self.backend.train_step(&tok, &tgt, self.opts.lr)?;
+        let wall_s = wall0.elapsed().as_secs_f64();
+
+        let cfg = self.backend.model_cfg();
+        let cost = step_cost(
+            &self.shape,
+            &self.topo,
+            &out.counts,
+            cfg.e_per_dev,
+            self.opts.flops_per_dev,
+            self.policy.hierarchical_a2a(),
+        );
+        let record = StepRecord {
+            step: self.log.records.len(),
+            loss: out.loss,
+            ce: out.ce,
+            aux: out.aux,
+            dropped: out.dropped,
+            sim_comm_s: cost.a2a_s + cost.allreduce_s,
+            sim_compute_s: cost.compute_s,
+            wall_s,
+        };
+        self.last_counts = Some(out.counts);
+        self.log.push(record.clone());
+        Ok(record)
+    }
+
+    /// Validation pass on a caller-provided batch; logs (step, loss) and
+    /// returns (ce_loss, counts).
+    pub fn eval(&mut self, tokens: &[i32], targets: &[i32]) -> Result<(f64, Mat)> {
+        let (tok, tgt) = self.batch_tensors(tokens, targets)?;
+        let out = self.backend.eval(&tok, &tgt)?;
+        let step = self.log.records.len().saturating_sub(1);
+        self.log.push_eval(step, out.ce);
+        Ok((out.ce, out.counts))
+    }
+
+    /// Validation pass on the session's held-out batch.
+    pub fn eval_held_out(&mut self) -> Result<(f64, Mat)> {
+        let (tok, tgt) = self.eval_batch.clone();
+        self.eval(&tok, &tgt)
+    }
+
+    fn batch_tensors(&self, tokens: &[i32], targets: &[i32]) -> Result<(HostTensor, HostTensor)> {
+        let cfg = self.backend.model_cfg();
+        let shape = [cfg.p, cfg.batch, cfg.seq];
+        let numel: usize = shape.iter().product();
+        anyhow::ensure!(
+            tokens.len() == numel && targets.len() == numel,
+            "batch has {}/{} tokens, model wants {numel}",
+            tokens.len(),
+            targets.len()
+        );
+        Ok((
+            HostTensor::i32(tokens.to_vec(), &shape),
+            HostTensor::i32(targets.to_vec(), &shape),
+        ))
+    }
+
+    // -- accessors ----------------------------------------------------------
+
+    pub fn model_cfg(&self) -> &crate::runtime::ModelCfg {
+        self.backend.model_cfg()
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    pub fn policy(&self) -> &dyn DispatchPolicy {
+        self.policy.as_ref()
+    }
+
+    /// The gate inputs + target the policy produced for this run.
+    pub fn policy_inputs(&self) -> &PolicyInputs {
+        &self.inputs
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    pub fn log(&self) -> &RunLog {
+        &self.log
+    }
+
+    pub fn log_mut(&mut self) -> &mut RunLog {
+        &mut self.log
+    }
+
+    /// Mean per-MoE-layer dispatch counts of the most recent step.
+    pub fn last_counts(&self) -> Option<&Mat> {
+        self.last_counts.as_ref()
+    }
+}

@@ -15,11 +15,16 @@
 //!   paper's lower bound, Eq. 2), per-sender-serial and link-contention
 //!   exchange models, hierarchical all-to-all, ring allreduce, and the
 //!   Table-1 profiling harness.
-//! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas artifacts
-//!   (HLO text + manifest ABI emitted by `python/compile/aot.py`).
-//! * [`coordinator`] — the training orchestrator: dispatch strategies
-//!   (even/DeepSpeed, FastMoE, FasterMoE-Hir, TA-MoE), the step loop over
-//!   the compiled cluster-step program, simulated-time accounting and
+//! * [`runtime`] — execution backends behind the [`runtime::Backend`]
+//!   trait: the pure-rust [`runtime::SimBackend`] (default) and PJRT
+//!   execution of the AOT-compiled JAX/Pallas artifacts (HLO text +
+//!   manifest ABI emitted by `python/compile/aot.py`, cargo feature
+//!   `backend-xla`).
+//! * [`coordinator`] — the training orchestrator: the open
+//!   [`coordinator::DispatchPolicy`] trait with the four paper systems
+//!   (even/DeepSpeed, FastMoE, FasterMoE-Hir, TA-MoE) and a registry for
+//!   third-party policies, composed with a backend + topology + data into
+//!   a [`coordinator::Session`], with simulated-time accounting and
 //!   metrics.
 //! * [`data`] — byte-level tokenizer, bundled tiny corpus and a synthetic
 //!   Zipf corpus generator, shard-aware batching.
@@ -28,8 +33,11 @@
 //! * [`metrics`] — throughput/latency accumulators and CSV/JSON emitters
 //!   used by the benches that regenerate every paper table and figure.
 //!
-//! Python never runs after `make artifacts`: the binary loads HLO text via
-//! the `xla` crate's PJRT CPU client and drives everything from rust.
+//! With `--features backend-xla`, python never runs after `make
+//! artifacts`: the binary loads HLO text via the `xla` crate's PJRT CPU
+//! client and drives everything from rust. On the default feature set the
+//! simulator stands in for the compiled model, so the whole crate —
+//! training loops, benches, tier-1 tests — needs no XLA at all.
 
 pub mod comm;
 pub mod config;
@@ -42,4 +50,6 @@ pub mod topology;
 pub mod util;
 
 pub use config::ExperimentConfig;
+pub use coordinator::{DispatchPolicy, Session, SessionBuilder};
+pub use runtime::{Backend, SimBackend};
 pub use topology::Topology;

@@ -2,14 +2,20 @@
 //!
 //! Subcommands:
 //!
-//! * `train`        — train a compiled artifact under a strategy on a
-//!                    simulated cluster, logging loss + simulated time.
+//! * `train`        — train a model under a dispatch policy on a simulated
+//!                    cluster, logging loss + simulated time. `--backend
+//!                    sim` runs the pure-rust simulator (no artifacts, no
+//!                    XLA); `--backend xla` the compiled artifacts
+//!                    (requires `--features backend-xla`); default `auto`.
 //! * `solve`        — print the Eq. 7 target dispatch pattern and Eq. 8
 //!                    penalty weights for a cluster.
 //! * `profile-topo` — show a topology's α/β matrices, levels, and the
 //!                    Eq. 5 smoothed per-level parameters.
 //! * `bench-comm`   — the Table-1 even-vs-uneven exchange micro-benchmark.
 //! * `info`         — list compiled artifacts and their shapes.
+//!
+//! `--list-strategies` (any position) prints the dispatch-policy registry,
+//! including policies registered by downstream code.
 //!
 //! Flags are `--key value`; `ta-moe <cmd> --help` lists them. (CLI parsing
 //! is hand-rolled — this image has no clap; see DESIGN.md
@@ -21,8 +27,7 @@ use std::path::{Path, PathBuf};
 
 use ta_moe::comm::profile_exchange;
 use ta_moe::config::{topology_for, ExperimentConfig};
-use ta_moe::coordinator::{device_flops, Trainer, TrainerOptions};
-use ta_moe::data::{Batcher, SyntheticCorpus};
+use ta_moe::coordinator::{device_flops, list_policies, SessionBuilder};
 use ta_moe::dispatch::{penalty_weights, target_pattern, DispatchProblem, Norm};
 use ta_moe::topology::smooth_levels;
 use ta_moe::util::bench::Table;
@@ -42,12 +47,16 @@ fn main() {
 
 fn run(args: &[String]) -> Result<()> {
     let (cmd, flags) = parse_args(args)?;
+    if flags.contains_key("list-strategies") {
+        return cmd_list_strategies();
+    }
     match cmd.as_deref() {
         Some("train") => cmd_train(&flags),
         Some("solve") => cmd_solve(&flags),
         Some("profile-topo") => cmd_profile_topo(&flags),
         Some("bench-comm") => cmd_bench_comm(&flags),
         Some("info") => cmd_info(&flags),
+        Some("list-strategies") => cmd_list_strategies(),
         Some("help") | None => {
             print_help();
             Ok(())
@@ -65,17 +74,23 @@ fn print_help() {
          USAGE: ta-moe <subcommand> [--key value ...]\n\n\
          SUBCOMMANDS\n\
            train         --artifact small8_switch --cluster C --strategy ta-moe\n\
-                         --steps 100 --lr 1e-3 --seed 0 --config file.toml\n\
+                         --backend sim|xla|auto --steps 100 --lr 1e-3 --seed 0\n\
+                         --config file.toml\n\
            solve         --cluster C --nodes 2 [--tokens 1024] [--k 1]\n\
            profile-topo  --cluster table1 [--nodes 2] [--noise 0.2]\n\
            bench-comm    [--mb 128]\n\
-           info          [--artifacts-dir artifacts]\n\n\
-         STRATEGIES: deepspeed | fastmoe | fastermoe[:remote_frac] | ta-moe[:softmax[:temp]]\n\
-         CLUSTERS:   A | B | C | table1 (presets from the paper's Table 2)"
+           info          [--artifacts-dir artifacts]\n\
+           list-strategies   (also available as a --list-strategies flag)\n\n\
+         STRATEGIES: see `ta-moe --list-strategies` (registry-extensible)\n\
+         CLUSTERS:   A | B | C | table1 (presets from the paper's Table 2)\n\
+         BACKENDS:   sim (pure rust) | xla (compiled artifacts) | auto"
     );
 }
 
 type Flags = BTreeMap<String, String>;
+
+/// Flags that take no value.
+const BOOL_FLAGS: &[&str] = &["help", "list-strategies"];
 
 fn parse_args(args: &[String]) -> Result<(Option<String>, Flags)> {
     let mut cmd = None;
@@ -83,8 +98,8 @@ fn parse_args(args: &[String]) -> Result<(Option<String>, Flags)> {
     let mut it = args.iter().peekable();
     while let Some(a) = it.next() {
         if let Some(key) = a.strip_prefix("--") {
-            if key == "help" {
-                flags.insert("help".into(), "1".into());
+            if BOOL_FLAGS.iter().any(|f| *f == key) {
+                flags.insert(key.into(), "1".into());
                 continue;
             }
             let val = it
@@ -117,6 +132,23 @@ where
 }
 
 // ---------------------------------------------------------------------------
+// list-strategies
+// ---------------------------------------------------------------------------
+
+fn cmd_list_strategies() -> Result<()> {
+    let mut t = Table::new(&["policy", "description"]);
+    for (names, help) in list_policies() {
+        t.row(&[names, help]);
+    }
+    t.print();
+    println!(
+        "\nspec syntax: name[:arg...]  (e.g. fastermoe:0.3, ta-moe:softmax:2)\n\
+         downstream code adds policies via ta_moe::coordinator::register_policy"
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
 // train
 // ---------------------------------------------------------------------------
 
@@ -134,46 +166,39 @@ fn cmd_train(flags: &Flags) -> Result<()> {
     if let Some(s) = flags.get("strategy") {
         cfg.strategy = s.clone();
     }
+    if let Some(b) = flags.get("backend") {
+        cfg.backend = b.clone();
+    }
     cfg.steps = flag_parse(flags, "steps", cfg.steps)?;
     cfg.lr = flag_parse(flags, "lr", cfg.lr)?;
     cfg.seed = flag_parse(flags, "seed", cfg.seed)?;
 
-    let topo = cfg.topology()?;
-    let strategy = cfg.parsed_strategy()?;
+    let cluster_char = cfg.cluster.chars().next().unwrap_or('C');
+    let mut session = SessionBuilder::new()
+        .artifact(cfg.artifacts_dir.clone(), cfg.artifact.clone())
+        .backend_kind(cfg.parsed_backend()?)
+        .cluster(cfg.cluster.clone())
+        .policy(cfg.parsed_policy()?)
+        .lr(cfg.lr as f32)
+        .seed(cfg.seed as i32)
+        .flops_per_dev(device_flops(cluster_char))
+        .data_synthetic(cfg.seed)
+        .build()?;
+
+    let topo = session.topology();
     println!(
-        "train: artifact={} cluster={} (P={}, {} nodes) strategy={} steps={}",
+        "train: artifact={} backend={} cluster={} (P={}, {} nodes) strategy={} steps={}",
         cfg.artifact,
+        session.backend_name(),
         cfg.cluster,
         topo.p(),
         topo.n_nodes(),
-        strategy.name(),
+        session.policy().name(),
         cfg.steps
     );
 
-    let cluster_char = cfg.cluster.chars().next().unwrap_or('C');
-    let mut trainer = Trainer::new(
-        &cfg.artifacts_dir.join(&cfg.artifact),
-        topo,
-        strategy,
-        TrainerOptions {
-            lr: cfg.lr as f32,
-            seed: cfg.seed as i32,
-            flops_per_dev: device_flops(cluster_char),
-        },
-    )?;
-
-    let m = trainer.manifest().config.clone();
-    let mut corpus = SyntheticCorpus::new(cfg.seed);
-    let stream = corpus.tokens(m.p * m.batch * (m.seq + 1) * 64);
-    let mut batcher = Batcher::new(stream, m.p, m.batch, m.seq);
-    let mut eval_corpus = SyntheticCorpus::new(cfg.seed + 7777);
-    let eval_stream = eval_corpus.tokens(m.p * m.batch * (m.seq + 1) * 8);
-    let mut eval_batcher = Batcher::new(eval_stream, m.p, m.batch, m.seq);
-    let (etok, etgt) = eval_batcher.next_batch();
-
     for step in 0..cfg.steps {
-        let (tok, tgt) = batcher.next_batch();
-        let rec = trainer.train_step(&tok, &tgt)?;
+        let rec = session.step()?;
         if step % cfg.log_every == 0 || step + 1 == cfg.steps {
             println!(
                 "step {:>5}  loss {:.4}  ce {:.4}  aux {:.4}  drop {:.3}  sim {:.2}ms (comm {:.2}ms)  wall {:.0}ms",
@@ -188,7 +213,7 @@ fn cmd_train(flags: &Flags) -> Result<()> {
             );
         }
         if cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0 {
-            let (vl, _) = trainer.eval(&etok, &etgt)?;
+            let (vl, _) = session.eval_held_out()?;
             println!("  eval @ {:>5}: valid ce {:.4}  ppl {:.2}", step, vl, vl.exp());
         }
     }
@@ -197,12 +222,12 @@ fn cmd_train(flags: &Flags) -> Result<()> {
         "{}_{}_{}.csv",
         cfg.artifact,
         cfg.cluster,
-        trainer.strategy().name()
+        session.policy().name().replace(':', "-")
     ));
-    trainer.log().write_csv(&out)?;
+    session.log().write_csv(&out)?;
     println!(
         "done: sim throughput {:.0} tokens/s; log → {}",
-        trainer.log().sim_throughput(),
+        session.log().sim_throughput(),
         out.display()
     );
     Ok(())

@@ -1,0 +1,213 @@
+//! The [`Backend`] trait: the execution-engine seam of the public API.
+//!
+//! A backend owns model + optimiser state and knows how to run one
+//! training/eval step given host-side tensors. Everything above it (the
+//! [`crate::coordinator::Session`], dispatch policies, the simulated
+//! cluster clock) is backend-agnostic: the coordinator hands a backend the
+//! gate's runtime matrices ([`GateInputs`]) once at init, then drives it
+//! with `[P, B, T]` token batches and reads back scalars + the measured
+//! dispatch counts `c_ie` ([`StepOutputs`]).
+//!
+//! Two implementations ship with the crate:
+//!
+//! * [`super::SimBackend`] — pure rust, zero external dependencies. It
+//!   emulates the gate statistics and the loss trajectory, so training
+//!   loops, benches, and CI run on any machine (the default feature set).
+//! * `XlaBackend` (cargo feature `backend-xla`) — PJRT execution of the
+//!   AOT-compiled JAX/Pallas artifacts, the full three-layer path.
+
+use super::manifest::{Manifest, ModelCfg};
+use super::tensor::HostTensor;
+use crate::util::Mat;
+use anyhow::Result;
+use std::path::Path;
+
+/// The gate's runtime inputs, produced by a
+/// [`crate::coordinator::DispatchPolicy`] and fed to the model once per
+/// session: the penalty matrix (which auxiliary loss), the capacity
+/// matrix, the intra-node mask, and the FasterMoE-Hir compulsory remote
+/// fraction (1.0 = unconstrained).
+#[derive(Clone, Debug)]
+pub struct GateInputs {
+    pub penalty: Mat,
+    pub caps: Mat,
+    pub local_mask: Mat,
+    pub hir_remote_frac: f32,
+}
+
+/// Observables of one training step.
+#[derive(Clone, Debug)]
+pub struct StepOutputs {
+    pub loss: f64,
+    pub ce: f64,
+    pub aux: f64,
+    /// Fraction of dispatched tokens dropped at full expert buffers.
+    pub dropped: f64,
+    /// Mean per-MoE-layer dispatch counts `c_ie` in tokens (P×N).
+    pub counts: Mat,
+}
+
+/// Observables of one (pure) evaluation pass.
+#[derive(Clone, Debug)]
+pub struct EvalOutputs {
+    pub ce: f64,
+    pub counts: Mat,
+}
+
+/// An execution engine for one model: owns state, runs init/step/eval over
+/// [`HostTensor`]s. Object-safe so sessions can hold `Box<dyn Backend>`.
+pub trait Backend {
+    /// Short engine name ("sim", "xla") for logs and labels.
+    fn name(&self) -> &'static str;
+
+    /// The model's static shape/structure.
+    fn model_cfg(&self) -> &ModelCfg;
+
+    /// (Re-)initialise model + optimiser state from `seed` under the given
+    /// gate inputs. Must be called before `train_step`/`eval`; calling it
+    /// again restarts training from scratch.
+    fn init(&mut self, seed: i32, gate: &GateInputs) -> Result<()>;
+
+    /// One optimisation step on a `[P, B, T]` i32 token/target batch.
+    fn train_step(
+        &mut self,
+        tokens: &HostTensor,
+        targets: &HostTensor,
+        lr: f32,
+    ) -> Result<StepOutputs>;
+
+    /// A pure validation pass: must not mutate model state, and must be
+    /// deterministic in (state, batch).
+    fn eval(&mut self, tokens: &HostTensor, targets: &HostTensor) -> Result<EvalOutputs>;
+}
+
+/// Which execution engine to open (CLI `--backend`, config `train.backend`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// The pure-rust simulator; never needs artifacts or XLA.
+    Sim,
+    /// PJRT/XLA on compiled artifacts (requires the `backend-xla` feature).
+    Xla,
+    /// XLA when the feature is compiled in *and* the artifact directory
+    /// exists; Sim otherwise.
+    #[default]
+    Auto,
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<BackendKind, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "sim" | "simulate" | "simulator" => Ok(BackendKind::Sim),
+            "xla" | "pjrt" => Ok(BackendKind::Xla),
+            "auto" => Ok(BackendKind::Auto),
+            other => Err(format!("unknown backend {other:?} (sim|xla|auto)")),
+        }
+    }
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            BackendKind::Sim => "sim",
+            BackendKind::Xla => "xla",
+            BackendKind::Auto => "auto",
+        })
+    }
+}
+
+/// Resolve a model shape by artifact name: from
+/// `artifacts_dir/<artifact>/manifest.json` when present (the manifest
+/// parser is pure rust), else from the built-in [`ModelCfg::preset`]
+/// table. The single source of truth for name → shape used by both
+/// [`open_backend`] and `ExperimentConfig`.
+pub fn resolve_model_cfg(artifacts_dir: &Path, artifact: &str) -> Result<ModelCfg> {
+    let dir = artifacts_dir.join(artifact);
+    if dir.join("manifest.json").exists() {
+        return Ok(Manifest::load(&dir)?.config);
+    }
+    ModelCfg::preset(artifact).ok_or_else(|| {
+        anyhow::anyhow!(
+            "no artifact at {dir:?} and no built-in preset named {artifact:?} \
+             (presets: {})",
+            ModelCfg::preset_names().join(", ")
+        )
+    })
+}
+
+/// Open a backend for the named artifact.
+///
+/// * `Sim` — model shape via [`resolve_model_cfg`]. Never touches XLA.
+/// * `Xla` — loads + compiles the artifact's HLO programs; errors unless
+///   the crate was built with `--features backend-xla`.
+/// * `Auto` — `Xla` when available (feature + artifact dir), else `Sim`.
+pub fn open_backend(
+    kind: BackendKind,
+    artifacts_dir: &Path,
+    artifact: &str,
+) -> Result<Box<dyn Backend>> {
+    let dir = artifacts_dir.join(artifact);
+    match kind {
+        BackendKind::Sim => {
+            let cfg = resolve_model_cfg(artifacts_dir, artifact)?;
+            Ok(Box::new(super::SimBackend::new(cfg)))
+        }
+        BackendKind::Xla => {
+            #[cfg(feature = "backend-xla")]
+            {
+                Ok(Box::new(super::XlaBackend::load(&dir)?))
+            }
+            #[cfg(not(feature = "backend-xla"))]
+            {
+                anyhow::bail!(
+                    "backend `xla` requested but this binary was built without it; \
+                     rebuild with `cargo build --features backend-xla` or use `--backend sim`"
+                )
+            }
+        }
+        BackendKind::Auto => {
+            #[cfg(feature = "backend-xla")]
+            {
+                if dir.join("manifest.json").exists() {
+                    return Ok(Box::new(super::XlaBackend::load(&dir)?));
+                }
+            }
+            open_backend(BackendKind::Sim, artifacts_dir, artifact)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_parses() {
+        assert_eq!("sim".parse::<BackendKind>().unwrap(), BackendKind::Sim);
+        assert_eq!("XLA".parse::<BackendKind>().unwrap(), BackendKind::Xla);
+        assert_eq!("auto".parse::<BackendKind>().unwrap(), BackendKind::Auto);
+        assert!("tpu".parse::<BackendKind>().is_err());
+    }
+
+    #[test]
+    fn sim_backend_opens_from_preset_without_artifacts() {
+        let b = open_backend(BackendKind::Sim, Path::new("definitely/missing"), "tiny4").unwrap();
+        assert_eq!(b.name(), "sim");
+        assert_eq!(b.model_cfg().p, 4);
+    }
+
+    #[test]
+    fn unknown_artifact_without_preset_errors() {
+        let err =
+            open_backend(BackendKind::Sim, Path::new("definitely/missing"), "nope").unwrap_err();
+        assert!(err.to_string().contains("preset"), "{err}");
+    }
+
+    #[cfg(not(feature = "backend-xla"))]
+    #[test]
+    fn xla_backend_errors_without_feature() {
+        let err = open_backend(BackendKind::Xla, Path::new("artifacts"), "tiny4").unwrap_err();
+        assert!(err.to_string().contains("backend-xla"), "{err}");
+    }
+}

@@ -97,6 +97,58 @@ pub struct ModelCfg {
 }
 
 impl ModelCfg {
+    /// The names [`ModelCfg::preset`] knows (one per python artifact
+    /// config in `python/compile/configs.py`).
+    pub fn preset_names() -> Vec<&'static str> {
+        vec!["tiny4", "small8_switch", "small8_gshard", "small8_hir", "wide16_switch"]
+    }
+
+    /// A built-in model shape mirroring the python artifact config of the
+    /// same name, so backends that don't execute compiled programs (the
+    /// simulator) run without `make artifacts`. Derived fields (capacity,
+    /// MoE layer ids) follow the same formulas as `configs.py`.
+    pub fn preset(name: &str) -> Option<ModelCfg> {
+        #[allow(clippy::type_complexity)]
+        let (p, layers, d, f, heads, batch, seq, k, cap_factor, gate, dispatch, moe_every): (
+            usize, usize, usize, usize, usize, usize, usize, usize, f64, &str, &str, usize,
+        ) = match name {
+            "tiny4" => (4, 2, 32, 64, 2, 2, 16, 1, 1.5, "switch", "global", 1),
+            "small8_switch" => (8, 4, 128, 256, 4, 2, 32, 1, 1.25, "switch", "global", 2),
+            "small8_gshard" => (8, 4, 128, 256, 4, 2, 32, 2, 2.0, "gshard", "local", 2),
+            "small8_hir" => (8, 4, 128, 256, 4, 2, 32, 1, 1.25, "hir", "global", 2),
+            "wide16_switch" => (16, 2, 64, 128, 2, 2, 32, 1, 1.25, "switch", "global", 1),
+            _ => return None,
+        };
+        let e_per_dev = 1;
+        let n_experts = p * e_per_dev;
+        let tokens_per_dev = batch * seq;
+        // capacity: ceil(cap_factor·k·S·P/N), rounded up to a multiple of 8
+        let raw = (cap_factor * (k * tokens_per_dev * p) as f64 / n_experts as f64).ceil();
+        let capacity = (raw as usize).div_ceil(8) * 8;
+        // MoE layers counted from the top so the last block is always MoE
+        let moe_layer_ids =
+            (0..layers).filter(|&l| (layers - 1 - l) % moe_every == 0).collect();
+        Some(ModelCfg {
+            p,
+            e_per_dev,
+            layers,
+            d,
+            f,
+            heads,
+            vocab: 256,
+            batch,
+            seq,
+            k,
+            cap_factor,
+            gate: gate.into(),
+            dispatch: dispatch.into(),
+            n_experts,
+            capacity,
+            tokens_per_dev,
+            moe_layer_ids,
+        })
+    }
+
     fn from_json(j: &Json) -> Result<ModelCfg> {
         let us = |k: &str| -> Result<usize> {
             j.req(k).map_err(anyhow::Error::msg)?.as_usize().context(k.to_string())
@@ -286,6 +338,25 @@ mod tests {
         let b = m.config.counts_to_bytes(&counts);
         assert_eq!(b.get(0, 0), 3.0 * 16.0); // d=4 × 4 bytes
         assert_eq!(b.get(0, 1), 1.0 * 16.0);
+    }
+
+    #[test]
+    fn presets_mirror_python_configs() {
+        // spot-check the derived fields against configs.py
+        let t = ModelCfg::preset("tiny4").unwrap();
+        assert_eq!((t.p, t.n_experts, t.tokens_per_dev, t.capacity), (4, 4, 32, 48));
+        assert_eq!(t.moe_layer_ids, vec![0, 1]);
+        let s = ModelCfg::preset("small8_switch").unwrap();
+        assert_eq!((s.p, s.tokens_per_dev, s.capacity), (8, 64, 80));
+        assert_eq!(s.moe_layer_ids, vec![1, 3]);
+        let g = ModelCfg::preset("small8_gshard").unwrap();
+        assert_eq!((g.k, g.capacity, g.dispatch.as_str()), (2, 256, "local"));
+        let w = ModelCfg::preset("wide16_switch").unwrap();
+        assert_eq!((w.p, w.capacity), (16, 80));
+        assert!(ModelCfg::preset("nope").is_none());
+        for name in ModelCfg::preset_names() {
+            assert!(ModelCfg::preset(name).is_some(), "{name}");
+        }
     }
 
     #[test]

@@ -1,143 +1,33 @@
-//! PJRT runtime: load + execute the AOT-compiled JAX/Pallas artifacts.
+//! Execution backends behind the [`Backend`] trait.
 //!
-//! `make artifacts` leaves per-config directories under `artifacts/`:
-//! HLO **text** programs (`init`/`step`/`eval`) plus `manifest.json`
-//! describing every input/output tensor in positional order (the ABI
-//! contract with `python/compile/aot.py`). This module:
+//! The runtime layer owns everything about *executing* the model:
 //!
-//! * parses the manifest ([`Manifest`], [`TensorDesc`]);
-//! * compiles the HLO text on the PJRT CPU client
-//!   (`HloModuleProto::from_text_file → XlaComputation → compile`, the
-//!   0.5.1-safe path from /opt/xla-example);
-//! * wraps execution behind [`Program::run`] with tuple decomposition and
-//!   shape checking;
-//! * converts between [`HostTensor`] (rust-side dense arrays) and
-//!   `xla::Literal`.
-//!
-//! Python never runs here — the binary is self-contained once artifacts
-//! exist.
+//! * [`backend`] — the [`Backend`] trait (`init`/`train_step`/`eval` over
+//!   [`HostTensor`]s), the [`GateInputs`] a dispatch policy feeds a model,
+//!   and [`open_backend`] for name-based construction (`sim`/`xla`/`auto`);
+//! * [`SimBackend`] — pure-rust gate-statistics + loss-trajectory
+//!   emulator; the default backend, needs no artifacts and no XLA;
+//! * `XlaBackend` (feature `backend-xla`) — PJRT execution of the
+//!   AOT-compiled JAX/Pallas artifacts (HLO text + manifest ABI emitted by
+//!   `python/compile/aot.py`);
+//! * [`Manifest`] / [`ModelCfg`] — the python↔rust ABI contract, parsed
+//!   with the in-tree JSON reader (works without XLA);
+//! * [`HostTensor`] — rust-side dense arrays, converted to/from
+//!   `xla::Literal` only under the `backend-xla` feature.
 
+mod backend;
 mod manifest;
+mod sim;
 mod tensor;
+#[cfg(feature = "backend-xla")]
+mod xla;
 
+pub use backend::{
+    open_backend, resolve_model_cfg, Backend, BackendKind, EvalOutputs, GateInputs,
+    StepOutputs,
+};
 pub use manifest::{Manifest, ModelCfg, ProgramDesc, TensorDesc};
+pub use sim::SimBackend;
 pub use tensor::{DType, HostTensor};
-
-use anyhow::{Context, Result};
-use std::path::Path;
-
-/// A PJRT client + executable cache root.
-pub struct Runtime {
-    client: xla::PjRtClient,
-}
-
-impl Runtime {
-    /// Create a CPU PJRT runtime (the only backend in this image).
-    pub fn cpu() -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime { client })
-    }
-
-    pub fn platform_name(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile one HLO-text program.
-    pub fn load_program(&self, path: &Path, desc: ProgramDesc) -> Result<Program> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 path")?,
-        )
-        .with_context(|| format!("parsing HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {path:?}"))?;
-        Ok(Program { exe, desc })
-    }
-
-    /// Load all three programs of an artifact directory.
-    pub fn load_artifact(&self, dir: &Path) -> Result<Artifact> {
-        let manifest = Manifest::load(dir)?;
-        let init = self.load_program(&dir.join(&manifest.init.file), manifest.init.clone())?;
-        let step = self.load_program(&dir.join(&manifest.step.file), manifest.step.clone())?;
-        let eval = self.load_program(&dir.join(&manifest.eval.file), manifest.eval.clone())?;
-        Ok(Artifact { manifest, init, step, eval })
-    }
-}
-
-/// One compiled executable + its ABI description.
-pub struct Program {
-    exe: xla::PjRtLoadedExecutable,
-    desc: ProgramDesc,
-}
-
-impl Program {
-    pub fn desc(&self) -> &ProgramDesc {
-        &self.desc
-    }
-
-    /// Execute with positional literal inputs (borrowed or owned); returns
-    /// the decomposed output tuple (aot.py lowers with `return_tuple=True`).
-    pub fn run<L: std::borrow::Borrow<xla::Literal>>(
-        &self,
-        inputs: &[L],
-    ) -> Result<Vec<xla::Literal>> {
-        anyhow::ensure!(
-            inputs.len() == self.desc.inputs.len(),
-            "program {} expects {} inputs, got {}",
-            self.desc.file,
-            self.desc.inputs.len(),
-            inputs.len()
-        );
-        let result = self
-            .exe
-            .execute::<L>(inputs)
-            .with_context(|| format!("executing {}", self.desc.file))?;
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .context("fetching result literal")?;
-        let outs = tuple.to_tuple().context("decomposing output tuple")?;
-        anyhow::ensure!(
-            outs.len() == self.desc.outputs.len(),
-            "program {} returned {} outputs, manifest says {}",
-            self.desc.file,
-            outs.len(),
-            self.desc.outputs.len()
-        );
-        Ok(outs)
-    }
-
-    /// Convenience: run with host tensors, validating shapes against the
-    /// manifest before dispatch.
-    pub fn run_host(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
-        for (t, d) in inputs.iter().zip(&self.desc.inputs) {
-            anyhow::ensure!(
-                t.shape() == d.shape.as_slice() && t.dtype() == d.dtype,
-                "input {:?}: got {:?}/{:?}, manifest wants {:?}/{:?}",
-                d.name,
-                t.shape(),
-                t.dtype(),
-                d.shape,
-                d.dtype
-            );
-        }
-        let lits: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| t.to_literal())
-            .collect::<Result<_>>()?;
-        let outs = self.run(&lits)?;
-        outs.iter()
-            .zip(&self.desc.outputs)
-            .map(|(l, d)| HostTensor::from_literal(l, &d.shape, d.dtype))
-            .collect()
-    }
-}
-
-/// A fully-loaded artifact: manifest + compiled init/step/eval.
-pub struct Artifact {
-    pub manifest: Manifest,
-    pub init: Program,
-    pub step: Program,
-    pub eval: Program,
-}
+#[cfg(feature = "backend-xla")]
+pub use xla::{Artifact, Program, Runtime, XlaBackend};

@@ -1,0 +1,436 @@
+//! [`SimBackend`]: a pure-rust execution backend.
+//!
+//! The simulator does not run the transformer; it emulates the two things
+//! the coordinator actually consumes (DESIGN.md §backends):
+//!
+//! * **gate statistics** — the per-step dispatch matrix `c_ie`. A freshly
+//!   "initialised" gate dispatches near-uniformly (seeded jitter standing
+//!   in for random gate weights); over training it relaxes toward the
+//!   attractor implied by the penalty matrix it was given. Because the
+//!   TA-MoE penalty is `Norm(1/ĉ)`, the row-normalised inverse penalty *is*
+//!   the Eq. 7 target pattern, so a sim gate under the TA-MoE policy
+//!   converges to `ĉ` exactly as the compiled gate does under the topology
+//!   loss — and a load-balance penalty (constant rows) keeps it uniform.
+//!   The FasterMoE-Hir compulsory ratio clips the remote mass of the
+//!   attractor, reproducing the Hir budget behaviour.
+//! * **loss trajectory** — a byte-level LM curve: cross-entropy decays
+//!   exponentially from `ln(vocab)` toward a floor at a rate proportional
+//!   to the learning rate, plus a small deterministic data-dependent
+//!   ripple (a hash of the batch, not an RNG, so eval stays pure). A
+//!   compulsory dispatch restriction converges to a worse floor — the
+//!   paper's Fig. 5 observation, and the property the fig5 bench asserts.
+//!
+//! Everything is deterministic in `(seed, gate inputs, batches)`: two runs
+//! with identical seeds produce byte-identical logs, matching the PJRT
+//! backend's reproducibility contract.
+
+use super::backend::{Backend, EvalOutputs, GateInputs, StepOutputs};
+use super::manifest::ModelCfg;
+use super::tensor::HostTensor;
+use crate::util::rng::Rng;
+use crate::util::Mat;
+use anyhow::{Context, Result};
+
+/// Steps for the gate to move ~63% of the way to its attractor.
+const GATE_TAU_STEPS: f64 = 24.0;
+/// CE decay rate per step per unit learning rate.
+const LR_DECAY_SCALE: f64 = 30.0;
+/// Irreducible byte-level CE floor for an unrestricted gate.
+const CE_FLOOR: f64 = 1.9;
+/// Extra converged CE per unit of compulsory (non-learnable) local ratio.
+const COMPULSORY_HANDICAP: f64 = 0.35;
+/// Amplitude of the data-dependent CE ripple (relative to ce − floor).
+const NOISE_AMP: f64 = 0.01;
+/// Train→valid CE generalisation gap emitted by `eval`.
+const EVAL_GAP: f64 = 0.04;
+
+/// Pure-rust backend emulating gate statistics and loss trajectory.
+pub struct SimBackend {
+    cfg: ModelCfg,
+    /// Freshly-initialised gate frequencies (rows sum to 1).
+    init_pref: Mat,
+    /// Converged gate frequencies implied by the penalty (rows sum to 1).
+    attractor: Mat,
+    gate: Option<GateInputs>,
+    step: usize,
+    /// Noise-free cross-entropy state.
+    ce: f64,
+    /// Converged CE for this gate configuration.
+    floor: f64,
+}
+
+impl SimBackend {
+    pub fn new(cfg: ModelCfg) -> SimBackend {
+        let (p, n) = (cfg.p, cfg.n_experts);
+        SimBackend {
+            cfg,
+            init_pref: Mat::filled(p, n, 1.0 / n as f64),
+            attractor: Mat::filled(p, n, 1.0 / n as f64),
+            gate: None,
+            step: 0,
+            ce: 0.0,
+            floor: CE_FLOOR,
+        }
+    }
+
+    /// Gate dispatch frequencies at the current training step (rows sum
+    /// to 1): initial preference relaxing toward the attractor.
+    fn frequencies(&self) -> Mat {
+        let lambda = 1.0 - (-(self.step as f64) / GATE_TAU_STEPS).exp();
+        let (p, n) = (self.cfg.p, self.cfg.n_experts);
+        Mat::from_fn(p, n, |i, e| {
+            (1.0 - lambda) * self.init_pref.get(i, e) + lambda * self.attractor.get(i, e)
+        })
+    }
+
+    fn counts(&self) -> Mat {
+        let sent = (self.cfg.k * self.cfg.tokens_per_dev) as f64;
+        self.frequencies().scale(sent)
+    }
+
+    fn require_init(&self) -> Result<&GateInputs> {
+        self.gate.as_ref().context("SimBackend: init() must run before step/eval")
+    }
+
+    /// The unified auxiliary loss the compiled model evaluates:
+    /// `mean_i Σ_e penalty_ie · f_ie²` over the current gate frequencies.
+    fn aux(&self, freq: &Mat) -> f64 {
+        let gate = self.gate.as_ref().expect("init checked by caller");
+        let (p, n) = (freq.rows(), freq.cols());
+        let mut total = 0.0;
+        for i in 0..p {
+            for e in 0..n {
+                let f = freq.get(i, e);
+                total += gate.penalty.get(i, e) * f * f;
+            }
+        }
+        total / p as f64
+    }
+
+    /// Fraction of dispatched tokens exceeding per-expert buffer capacity.
+    fn dropped(&self, counts: &Mat) -> f64 {
+        let gate = self.gate.as_ref().expect("init checked by caller");
+        let total = counts.sum().max(1e-12);
+        let mut over = 0.0;
+        for e in 0..counts.cols() {
+            over += (counts.col_sum(e) - gate.caps.col_sum(e)).max(0.0);
+        }
+        over / total
+    }
+}
+
+/// Scale a non-negative row to sum to 1.
+fn normalise(row: &mut [f64]) {
+    let s: f64 = row.iter().sum();
+    if s > 0.0 {
+        for v in row.iter_mut() {
+            *v /= s;
+        }
+    }
+}
+
+/// Clamp a normalised row's mass on non-local experts (`mask == 0`) to at
+/// most `frac`, redistributing the surplus onto local experts.
+fn clip_remote(row: &mut [f64], local_mask: &[f64], frac: f64) {
+    if frac >= 1.0 {
+        return;
+    }
+    let remote: f64 = row
+        .iter()
+        .zip(local_mask)
+        .filter(|(_, &m)| m == 0.0)
+        .map(|(v, _)| v)
+        .sum();
+    let local = 1.0 - remote;
+    if remote > frac && local > 0.0 {
+        let shrink = frac / remote;
+        let grow = (1.0 - frac) / local;
+        for (v, &m) in row.iter_mut().zip(local_mask) {
+            *v *= if m == 0.0 { shrink } else { grow };
+        }
+    }
+}
+
+/// Deterministic data-dependent ripple in [-1, 1): FNV-1a over the batch
+/// tokens and a salt. A pure function — no generator state — so repeated
+/// eval on the same batch is bit-identical.
+fn batch_ripple(tokens: &HostTensor, salt: u64) -> f64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325 ^ salt.wrapping_mul(0x0100_0000_01b3);
+    if let Some(data) = tokens.as_i32() {
+        for &t in data {
+            h ^= t as u32 as u64;
+            h = h.wrapping_mul(0x0100_0000_01b3);
+        }
+    }
+    (h >> 11) as f64 / (1u64 << 53) as f64 * 2.0 - 1.0
+}
+
+impl Backend for SimBackend {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn model_cfg(&self) -> &ModelCfg {
+        &self.cfg
+    }
+
+    fn init(&mut self, seed: i32, gate: &GateInputs) -> Result<()> {
+        let (p, n) = (self.cfg.p, self.cfg.n_experts);
+        anyhow::ensure!(
+            gate.penalty.rows() == p && gate.penalty.cols() == n,
+            "penalty is {}x{}, model wants {p}x{n}",
+            gate.penalty.rows(),
+            gate.penalty.cols()
+        );
+
+        let frac = gate.hir_remote_frac as f64;
+
+        // Fresh gate weights ⇒ near-uniform dispatch with seeded jitter.
+        // The compulsory budget binds from step 0 (it is enforced by the
+        // dispatcher, not learned), so both trajectory endpoints are
+        // clipped — every convex mix between them then satisfies it too.
+        let mut rng = Rng::seed_from_u64(seed as i64 as u64 ^ 0x51_4D_5F_67_41_54_45);
+        let mut init_pref = Mat::from_fn(p, n, |_, _| (1.0 + 0.08 * rng.normal()).max(0.05));
+        for i in 0..p {
+            normalise(init_pref.row_mut(i));
+            clip_remote(init_pref.row_mut(i), gate.local_mask.row(i), frac);
+        }
+
+        // Attractor: the penalty's fixed point — row-normalised 1/penalty.
+        let mut attractor =
+            Mat::from_fn(p, n, |i, e| 1.0 / gate.penalty.get(i, e).max(1e-12));
+        for i in 0..p {
+            normalise(attractor.row_mut(i));
+            clip_remote(attractor.row_mut(i), gate.local_mask.row(i), frac);
+        }
+
+        // Compulsory (non-learnable) routing converges to a worse floor.
+        let handicap = if frac < 1.0 { COMPULSORY_HANDICAP * (1.0 - frac) } else { 0.0 };
+
+        self.init_pref = init_pref;
+        self.attractor = attractor;
+        self.gate = Some(gate.clone());
+        self.step = 0;
+        self.floor = CE_FLOOR + handicap;
+        self.ce = (self.cfg.vocab as f64).ln() + 0.02 * rng.f64();
+        Ok(())
+    }
+
+    fn train_step(
+        &mut self,
+        tokens: &HostTensor,
+        targets: &HostTensor,
+        lr: f32,
+    ) -> Result<StepOutputs> {
+        self.require_init()?;
+        let shape = [self.cfg.p, self.cfg.batch, self.cfg.seq];
+        anyhow::ensure!(
+            tokens.shape() == shape && targets.shape() == shape,
+            "batch is {:?}/{:?}, model wants {:?}",
+            tokens.shape(),
+            targets.shape(),
+            shape
+        );
+
+        self.step += 1;
+        let rate = LR_DECAY_SCALE * lr.max(0.0) as f64;
+        self.ce = self.floor + (self.ce - self.floor) * (-rate).exp();
+
+        let freq = self.frequencies();
+        let sent = (self.cfg.k * self.cfg.tokens_per_dev) as f64;
+        let counts = freq.scale(sent);
+        let aux = self.aux(&freq);
+        let ripple = batch_ripple(tokens, self.step as u64);
+        let ce = self.ce + NOISE_AMP * (self.ce - self.floor).abs() * ripple;
+        let dropped = self.dropped(&counts);
+        Ok(StepOutputs { loss: ce + 0.01 * aux, ce, aux, dropped, counts })
+    }
+
+    fn eval(&mut self, tokens: &HostTensor, _targets: &HostTensor) -> Result<EvalOutputs> {
+        self.require_init()?;
+        let ripple = batch_ripple(tokens, 0x45_56_41_4C);
+        let ce = self.ce + EVAL_GAP + NOISE_AMP * (self.ce - self.floor).abs() * ripple;
+        Ok(EvalOutputs { ce, counts: self.counts() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gate_for(cfg: &ModelCfg, penalty: Mat, hir_remote_frac: f32) -> GateInputs {
+        let (p, n) = (cfg.p, cfg.n_experts);
+        // two "nodes": experts in the same half are local
+        let local_mask = Mat::from_fn(p, n, |i, e| {
+            if (i < p / 2) == (e < n / 2) {
+                1.0
+            } else {
+                0.0
+            }
+        });
+        GateInputs {
+            penalty,
+            caps: Mat::filled(p, n, cfg.capacity as f64 / p as f64),
+            local_mask,
+            hir_remote_frac,
+        }
+    }
+
+    fn batch(cfg: &ModelCfg, fill: i32) -> (HostTensor, HostTensor) {
+        let numel = cfg.p * cfg.batch * cfg.seq;
+        let shape = [cfg.p, cfg.batch, cfg.seq];
+        (
+            HostTensor::i32(vec![fill; numel], &shape),
+            HostTensor::i32(vec![fill; numel], &shape),
+        )
+    }
+
+    #[test]
+    fn uniform_penalty_keeps_dispatch_uniform() {
+        let cfg = ModelCfg::preset("tiny4").unwrap();
+        let mut b = SimBackend::new(cfg.clone());
+        let gate = gate_for(&cfg, Mat::filled(cfg.p, cfg.n_experts, cfg.n_experts as f64), 1.0);
+        b.init(0, &gate).unwrap();
+        let (tok, tgt) = batch(&cfg, 7);
+        let mut out = None;
+        for _ in 0..200 {
+            out = Some(b.train_step(&tok, &tgt, 1e-3).unwrap());
+        }
+        let counts = out.unwrap().counts;
+        let want = (cfg.k * cfg.tokens_per_dev) as f64 / cfg.n_experts as f64;
+        for i in 0..cfg.p {
+            for e in 0..cfg.n_experts {
+                assert!((counts.get(i, e) - want).abs() < 0.05 * want, "c[{i}][{e}]");
+            }
+        }
+    }
+
+    #[test]
+    fn skewed_penalty_attracts_dispatch() {
+        let cfg = ModelCfg::preset("tiny4").unwrap();
+        // heavily penalise the second half of the experts for everyone
+        let penalty = Mat::from_fn(cfg.p, cfg.n_experts, |_, e| {
+            if e < cfg.n_experts / 2 {
+                1.0
+            } else {
+                100.0
+            }
+        });
+        let mut b = SimBackend::new(cfg.clone());
+        b.init(0, &gate_for(&cfg, penalty, 1.0)).unwrap();
+        let (tok, tgt) = batch(&cfg, 3);
+        let mut counts = None;
+        for _ in 0..200 {
+            counts = Some(b.train_step(&tok, &tgt, 1e-3).unwrap().counts);
+        }
+        let counts = counts.unwrap();
+        assert!(counts.get(0, 0) > 30.0 * counts.get(0, cfg.n_experts - 1));
+        // conservation survives the skew
+        let want = (cfg.k * cfg.tokens_per_dev) as f64;
+        for i in 0..cfg.p {
+            assert!((counts.row_sum(i) - want).abs() < 1e-6 * want);
+        }
+    }
+
+    #[test]
+    fn loss_decays_toward_floor_and_depends_on_lr() {
+        let cfg = ModelCfg::preset("tiny4").unwrap();
+        let gate = gate_for(&cfg, Mat::filled(cfg.p, cfg.n_experts, cfg.n_experts as f64), 1.0);
+        let run = |lr: f32| {
+            let mut b = SimBackend::new(cfg.clone());
+            b.init(1, &gate).unwrap();
+            let (tok, tgt) = batch(&cfg, 5);
+            let mut last = f64::NAN;
+            for _ in 0..50 {
+                last = b.train_step(&tok, &tgt, lr).unwrap().ce;
+            }
+            last
+        };
+        let fast = run(5e-3);
+        let slow = run(5e-4);
+        assert!(fast < slow, "higher lr must reach lower ce: {fast} vs {slow}");
+        assert!(fast > CE_FLOOR - 0.1);
+    }
+
+    #[test]
+    fn hir_restriction_converges_worse() {
+        let cfg = ModelCfg::preset("tiny4").unwrap();
+        let penalty = Mat::filled(cfg.p, cfg.n_experts, cfg.n_experts as f64);
+        let run = |frac: f32| {
+            let mut b = SimBackend::new(cfg.clone());
+            b.init(2, &gate_for(&cfg, penalty.clone(), frac)).unwrap();
+            let (tok, tgt) = batch(&cfg, 9);
+            let mut last = f64::NAN;
+            for _ in 0..400 {
+                last = b.train_step(&tok, &tgt, 5e-3).unwrap().ce;
+            }
+            last
+        };
+        assert!(run(0.25) > run(1.0) + 0.1);
+    }
+
+    #[test]
+    fn hir_budget_clips_remote_mass() {
+        let cfg = ModelCfg::preset("tiny4").unwrap();
+        let penalty = Mat::filled(cfg.p, cfg.n_experts, cfg.n_experts as f64);
+        let frac = 0.25f32;
+        let mut b = SimBackend::new(cfg.clone());
+        let gate = gate_for(&cfg, penalty, frac);
+        b.init(3, &gate).unwrap();
+        let (tok, tgt) = batch(&cfg, 11);
+        let mut counts = None;
+        for _ in 0..300 {
+            counts = Some(b.train_step(&tok, &tgt, 1e-3).unwrap().counts);
+        }
+        let counts = counts.unwrap();
+        let sent = (cfg.k * cfg.tokens_per_dev) as f64;
+        for i in 0..cfg.p {
+            let remote: f64 = (0..cfg.n_experts)
+                .filter(|&e| gate.local_mask.get(i, e) == 0.0)
+                .map(|e| counts.get(i, e))
+                .sum();
+            assert!(remote <= sent * frac as f64 + 1e-6, "rank {i} remote {remote}");
+        }
+    }
+
+    #[test]
+    fn eval_is_pure_and_deterministic() {
+        let cfg = ModelCfg::preset("tiny4").unwrap();
+        let gate = gate_for(&cfg, Mat::filled(cfg.p, cfg.n_experts, cfg.n_experts as f64), 1.0);
+        let mut b = SimBackend::new(cfg.clone());
+        b.init(4, &gate).unwrap();
+        let (tok, tgt) = batch(&cfg, 42);
+        b.train_step(&tok, &tgt, 1e-3).unwrap();
+        let a = b.eval(&tok, &tgt).unwrap();
+        let c = b.eval(&tok, &tgt).unwrap();
+        assert_eq!(a.ce, c.ce);
+        assert_eq!(a.counts.linf_dist(&c.counts), 0.0);
+        // eval ce sits above the training ce (generalisation gap)
+        let train = b.train_step(&tok, &tgt, 0.0).unwrap();
+        assert!(a.ce > train.ce - 0.2);
+    }
+
+    #[test]
+    fn identical_seeds_identical_trajectories() {
+        let cfg = ModelCfg::preset("small8_switch").unwrap();
+        let gate = gate_for(&cfg, Mat::filled(cfg.p, cfg.n_experts, 8.0), 1.0);
+        let run = |seed: i32| {
+            let mut b = SimBackend::new(cfg.clone());
+            b.init(seed, &gate).unwrap();
+            let (tok, tgt) = batch(&cfg, 1);
+            (0..10)
+                .map(|_| b.train_step(&tok, &tgt, 1e-3).unwrap().loss)
+                .collect::<Vec<f64>>()
+        };
+        assert_eq!(run(5), run(5));
+        assert_ne!(run(5), run(6));
+    }
+
+    #[test]
+    fn step_before_init_errors() {
+        let cfg = ModelCfg::preset("tiny4").unwrap();
+        let mut b = SimBackend::new(cfg.clone());
+        let (tok, tgt) = batch(&cfg, 0);
+        assert!(b.train_step(&tok, &tgt, 1e-3).is_err());
+    }
+}

@@ -1,4 +1,4 @@
-//! Host-side dense tensors and Literal conversion.
+//! Host-side dense tensors; `xla::Literal` conversion is feature-gated.
 
 use anyhow::{Context, Result};
 
@@ -83,6 +83,7 @@ impl HostTensor {
     }
 
     /// Convert to an `xla::Literal` with this tensor's shape.
+    #[cfg(feature = "backend-xla")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
         let lit = match self {
@@ -93,6 +94,7 @@ impl HostTensor {
     }
 
     /// Read a literal back into a host tensor of known shape/dtype.
+    #[cfg(feature = "backend-xla")]
     pub fn from_literal(lit: &xla::Literal, shape: &[usize], dtype: DType) -> Result<HostTensor> {
         match dtype {
             DType::F32 => {
@@ -130,6 +132,7 @@ impl HostTensor {
 mod tests {
     use super::*;
 
+    #[cfg(feature = "backend-xla")]
     #[test]
     fn literal_round_trip_f32() {
         let t = HostTensor::f32(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]);
@@ -138,6 +141,7 @@ mod tests {
         assert_eq!(t, back);
     }
 
+    #[cfg(feature = "backend-xla")]
     #[test]
     fn literal_round_trip_i32_scalar() {
         let t = HostTensor::scalar_i32(42);

@@ -1,0 +1,295 @@
+//! PJRT/XLA execution backend (cargo feature `backend-xla`).
+//!
+//! `make artifacts` leaves per-config directories under `artifacts/`:
+//! HLO **text** programs (`init`/`step`/`eval`) plus `manifest.json`
+//! describing every input/output tensor in positional order (the ABI
+//! contract with `python/compile/aot.py`). This module:
+//!
+//! * compiles the HLO text on the PJRT CPU client
+//!   (`HloModuleProto::from_text_file → XlaComputation → compile`, the
+//!   0.5.1-safe path from /opt/xla-example);
+//! * wraps execution behind [`Program::run`] with tuple decomposition and
+//!   shape checking;
+//! * implements the [`Backend`] trait over a loaded artifact
+//!   ([`XlaBackend`]), holding model + Adam state as device literals
+//!   between steps.
+//!
+//! Python never runs here — the binary is self-contained once artifacts
+//! exist.
+
+use super::backend::{Backend, EvalOutputs, GateInputs, StepOutputs};
+use super::manifest::{Manifest, ModelCfg, ProgramDesc};
+use super::tensor::{DType, HostTensor};
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A PJRT client + executable cache root.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT runtime (the only backend in this image).
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text program.
+    pub fn load_program(&self, path: &Path, desc: ProgramDesc) -> Result<Program> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))?;
+        Ok(Program { exe, desc })
+    }
+
+    /// Load all three programs of an artifact directory.
+    pub fn load_artifact(&self, dir: &Path) -> Result<Artifact> {
+        let manifest = Manifest::load(dir)?;
+        let init = self.load_program(&dir.join(&manifest.init.file), manifest.init.clone())?;
+        let step = self.load_program(&dir.join(&manifest.step.file), manifest.step.clone())?;
+        let eval = self.load_program(&dir.join(&manifest.eval.file), manifest.eval.clone())?;
+        Ok(Artifact { manifest, init, step, eval })
+    }
+}
+
+/// One compiled executable + its ABI description.
+pub struct Program {
+    exe: xla::PjRtLoadedExecutable,
+    desc: ProgramDesc,
+}
+
+impl Program {
+    pub fn desc(&self) -> &ProgramDesc {
+        &self.desc
+    }
+
+    /// Execute with positional literal inputs (borrowed or owned); returns
+    /// the decomposed output tuple (aot.py lowers with `return_tuple=True`).
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        inputs: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        anyhow::ensure!(
+            inputs.len() == self.desc.inputs.len(),
+            "program {} expects {} inputs, got {}",
+            self.desc.file,
+            self.desc.inputs.len(),
+            inputs.len()
+        );
+        let result = self
+            .exe
+            .execute::<L>(inputs)
+            .with_context(|| format!("executing {}", self.desc.file))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let outs = tuple.to_tuple().context("decomposing output tuple")?;
+        anyhow::ensure!(
+            outs.len() == self.desc.outputs.len(),
+            "program {} returned {} outputs, manifest says {}",
+            self.desc.file,
+            outs.len(),
+            self.desc.outputs.len()
+        );
+        Ok(outs)
+    }
+
+    /// Convenience: run with host tensors, validating shapes against the
+    /// manifest before dispatch.
+    pub fn run_host(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        for (t, d) in inputs.iter().zip(&self.desc.inputs) {
+            anyhow::ensure!(
+                t.shape() == d.shape.as_slice() && t.dtype() == d.dtype,
+                "input {:?}: got {:?}/{:?}, manifest wants {:?}/{:?}",
+                d.name,
+                t.shape(),
+                t.dtype(),
+                d.shape,
+                d.dtype
+            );
+        }
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let outs = self.run(&lits)?;
+        outs.iter()
+            .zip(&self.desc.outputs)
+            .map(|(l, d)| HostTensor::from_literal(l, &d.shape, d.dtype))
+            .collect()
+    }
+}
+
+/// A fully-loaded artifact: manifest + compiled init/step/eval.
+pub struct Artifact {
+    pub manifest: Manifest,
+    pub init: Program,
+    pub step: Program,
+    pub eval: Program,
+}
+
+/// [`Backend`] over a compiled artifact: PJRT executes the cluster-step
+/// program; this wrapper owns the parameter/optimiser literals, the gate
+/// input literals, and the training-step counter `t`.
+pub struct XlaBackend {
+    #[allow(dead_code)]
+    runtime: Runtime,
+    artifact: Artifact,
+    /// penalty, caps, local_mask, hir_frac as literals (set by `init`).
+    input_lits: Vec<xla::Literal>,
+    /// params ++ m ++ v (kept as XLA literals between steps).
+    state: Vec<xla::Literal>,
+    t: f32,
+}
+
+impl XlaBackend {
+    /// Load + compile an artifact directory. Call [`Backend::init`] before
+    /// stepping.
+    pub fn load(artifact_dir: &Path) -> Result<XlaBackend> {
+        let runtime = Runtime::cpu()?;
+        let artifact = runtime.load_artifact(artifact_dir)?;
+        Ok(XlaBackend { runtime, artifact, input_lits: Vec::new(), state: Vec::new(), t: 0.0 })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.artifact.manifest
+    }
+
+    fn batch_literals(
+        &self,
+        tokens: &HostTensor,
+        targets: &HostTensor,
+    ) -> Result<(xla::Literal, xla::Literal)> {
+        let cfg = &self.artifact.manifest.config;
+        let shape = [cfg.p, cfg.batch, cfg.seq];
+        anyhow::ensure!(
+            tokens.shape() == shape && targets.shape() == shape,
+            "batch is {:?}/{:?}, artifact {} wants {:?}",
+            tokens.shape(),
+            targets.shape(),
+            self.artifact.manifest.name,
+            shape
+        );
+        Ok((tokens.to_literal()?, targets.to_literal()?))
+    }
+
+    fn require_init(&self) -> Result<()> {
+        anyhow::ensure!(!self.state.is_empty(), "XlaBackend: init() must run before step/eval");
+        Ok(())
+    }
+}
+
+impl Backend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn model_cfg(&self) -> &ModelCfg {
+        &self.artifact.manifest.config
+    }
+
+    fn init(&mut self, seed: i32, gate: &GateInputs) -> Result<()> {
+        self.input_lits = vec![
+            HostTensor::from_mat(&gate.penalty).to_literal()?,
+            HostTensor::from_mat(&gate.caps).to_literal()?,
+            HostTensor::from_mat(&gate.local_mask).to_literal()?,
+            HostTensor::scalar_f32(gate.hir_remote_frac).to_literal()?,
+        ];
+
+        // init: seed → params; Adam moments start at zero.
+        let seed_lit = HostTensor::scalar_i32(seed).to_literal()?;
+        let params = self
+            .artifact
+            .init
+            .run(&[seed_lit])
+            .context("running init program")?;
+        let mut state = params;
+        for desc in self
+            .artifact
+            .manifest
+            .params
+            .iter()
+            .chain(&self.artifact.manifest.params)
+        {
+            state.push(HostTensor::f32(vec![0.0; desc.numel()], &desc.shape).to_literal()?);
+        }
+        self.state = state;
+        self.t = 0.0;
+        Ok(())
+    }
+
+    fn train_step(
+        &mut self,
+        tokens: &HostTensor,
+        targets: &HostTensor,
+        lr: f32,
+    ) -> Result<StepOutputs> {
+        self.require_init()?;
+        let n = self.artifact.manifest.n_param_tensors;
+        let (tok_lit, tgt_lit) = self.batch_literals(tokens, targets)?;
+        let t_lit = HostTensor::scalar_f32(self.t).to_literal()?;
+        let lr_lit = HostTensor::scalar_f32(lr).to_literal()?;
+
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(3 * n + 8);
+        args.extend(self.state.iter());
+        args.push(&t_lit);
+        args.push(&lr_lit);
+        args.push(&tok_lit);
+        args.push(&tgt_lit);
+        for lit in &self.input_lits {
+            args.push(lit);
+        }
+
+        let mut outs = self.artifact.step.run(&args)?;
+
+        // split outputs: 3n state, then t, loss, ce, aux, counts, dropped
+        let tail = outs.split_off(3 * n);
+        self.state = outs;
+        let cfg = &self.artifact.manifest.config;
+        let scalars: Vec<f64> = [0usize, 1, 2, 3, 5]
+            .iter()
+            .map(|&i| HostTensor::from_literal(&tail[i], &[], DType::F32).map(|t| t.item()))
+            .collect::<Result<_>>()?;
+        let counts =
+            HostTensor::from_literal(&tail[4], &[cfg.p, cfg.n_experts], DType::F32)?.to_mat()?;
+        self.t = scalars[0] as f32;
+
+        Ok(StepOutputs {
+            loss: scalars[1],
+            ce: scalars[2],
+            aux: scalars[3],
+            dropped: scalars[4],
+            counts,
+        })
+    }
+
+    fn eval(&mut self, tokens: &HostTensor, targets: &HostTensor) -> Result<EvalOutputs> {
+        self.require_init()?;
+        let n = self.artifact.manifest.n_param_tensors;
+        let (tok_lit, tgt_lit) = self.batch_literals(tokens, targets)?;
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(n + 6);
+        args.extend(self.state.iter().take(n));
+        args.push(&tok_lit);
+        args.push(&tgt_lit);
+        for lit in &self.input_lits {
+            args.push(lit);
+        }
+        let outs = self.artifact.eval.run(&args)?;
+        let cfg = &self.artifact.manifest.config;
+        let ce = HostTensor::from_literal(&outs[1], &[], DType::F32)?.item();
+        let counts =
+            HostTensor::from_literal(&outs[3], &[cfg.p, cfg.n_experts], DType::F32)?.to_mat()?;
+        Ok(EvalOutputs { ce, counts })
+    }
+}

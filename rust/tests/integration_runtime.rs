@@ -1,15 +1,19 @@
-//! Integration: the full python-AOT → rust-PJRT path on the tiny artifact.
+//! Integration: the full python-AOT → rust-PJRT path on the tiny artifact,
+//! driven through the `Session`/`XlaBackend` API.
 //!
-//! These tests need `make artifacts` to have run; they are skipped (not
-//! failed) when artifacts are missing so `cargo test` works on a fresh
-//! clone, and exercised for real by `make test`.
+//! Only built under `--features backend-xla`; these tests additionally
+//! need `make artifacts` to have run, and are skipped (not failed) when
+//! artifacts are missing so `cargo test` works on a fresh clone. The
+//! backend-agnostic session behaviour is covered on the simulator in
+//! `session_sim.rs`.
+#![cfg(feature = "backend-xla")]
 
 use std::path::{Path, PathBuf};
 use ta_moe::config::topology_for;
-use ta_moe::coordinator::{Strategy, Trainer, TrainerOptions};
-use ta_moe::data::{builtin_text, Batcher};
+use ta_moe::coordinator::{DispatchPolicy, FastMoeEven, Session, SessionBuilder, TaMoe};
+use ta_moe::data::builtin_text;
 use ta_moe::dispatch::Norm;
-use ta_moe::runtime::{HostTensor, Runtime};
+use ta_moe::runtime::{HostTensor, Runtime, XlaBackend};
 
 fn tiny_dir() -> Option<PathBuf> {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny4");
@@ -26,6 +30,24 @@ macro_rules! require_artifacts {
             }
         }
     };
+}
+
+fn session_on(
+    dir: &Path,
+    cluster: &str,
+    policy: Box<dyn DispatchPolicy>,
+    lr: f32,
+    seed: i32,
+) -> Session {
+    SessionBuilder::new()
+        .backend(Box::new(XlaBackend::load(dir).unwrap()))
+        .topology(topology_for(cluster, 4))
+        .policy(policy)
+        .lr(lr)
+        .seed(seed)
+        .data_text(builtin_text())
+        .build()
+        .unwrap()
 }
 
 #[test]
@@ -60,23 +82,14 @@ fn step_rejects_wrong_arity() {
 #[test]
 fn training_decreases_loss_and_conserves_tokens() {
     let dir = require_artifacts!();
-    let topo = topology_for("C", 4);
-    let mut trainer = Trainer::new(
-        &dir,
-        topo,
-        Strategy::TaMoe { norm: Norm::L1 },
-        TrainerOptions { lr: 2e-3, seed: 0, flops_per_dev: 45e12 },
-    )
-    .unwrap();
-    let cfg = trainer.manifest().config.clone();
-    let mut batcher = Batcher::from_text(builtin_text(), cfg.p, cfg.batch, cfg.seq);
+    let mut session = session_on(&dir, "C", Box::new(TaMoe { norm: Norm::L1 }), 2e-3, 0);
+    let cfg = session.model_cfg().clone();
     let mut losses = Vec::new();
     for _ in 0..12 {
-        let (tok, tgt) = batcher.next_batch();
-        let rec = trainer.train_step(&tok, &tgt).unwrap();
+        let rec = session.step().unwrap();
         losses.push(rec.loss);
         // conservation: every (device, k-slot) pair chose an expert
-        let counts = trainer.last_counts().unwrap();
+        let counts = session.last_counts().unwrap();
         for i in 0..cfg.p {
             let sum = counts.row_sum(i);
             let want = (cfg.k * cfg.tokens_per_dev) as f64;
@@ -94,23 +107,13 @@ fn training_decreases_loss_and_conserves_tokens() {
 #[test]
 fn eval_is_pure_and_deterministic() {
     let dir = require_artifacts!();
-    let topo = topology_for("B", 4);
-    let mut trainer = Trainer::new(
-        &dir,
-        topo,
-        Strategy::FastMoeEven,
-        TrainerOptions::default(),
-    )
-    .unwrap();
-    let cfg = trainer.manifest().config.clone();
-    let mut batcher = Batcher::from_text(builtin_text(), cfg.p, cfg.batch, cfg.seq);
-    let (tok, tgt) = batcher.next_batch();
-    let (l1, c1) = trainer.eval(&tok, &tgt).unwrap();
-    let (l2, c2) = trainer.eval(&tok, &tgt).unwrap();
+    let mut session = session_on(&dir, "B", Box::new(FastMoeEven), 1e-3, 0);
+    let (l1, c1) = session.eval_held_out().unwrap();
+    let (l2, c2) = session.eval_held_out().unwrap();
     assert_eq!(l1, l2);
     assert!(c1.linf_dist(&c2) == 0.0);
     // eval must not change the parameters: a train-free re-eval matches
-    let (l3, _) = trainer.eval(&tok, &tgt).unwrap();
+    let (l3, _) = session.eval_held_out().unwrap();
     assert_eq!(l1, l3);
 }
 
@@ -118,20 +121,10 @@ fn eval_is_pure_and_deterministic() {
 fn identical_seeds_give_identical_runs() {
     let dir = require_artifacts!();
     let run = || {
-        let topo = topology_for("C", 4);
-        let mut t = Trainer::new(
-            &dir,
-            topo,
-            Strategy::TaMoe { norm: Norm::L1 },
-            TrainerOptions { lr: 1e-3, seed: 3, flops_per_dev: 45e12 },
-        )
-        .unwrap();
-        let cfg = t.manifest().config.clone();
-        let mut b = Batcher::from_text(builtin_text(), cfg.p, cfg.batch, cfg.seq);
+        let mut s = session_on(&dir, "C", Box::new(TaMoe { norm: Norm::L1 }), 1e-3, 3);
         let mut out = Vec::new();
         for _ in 0..5 {
-            let (tok, tgt) = b.next_batch();
-            out.push(t.train_step(&tok, &tgt).unwrap().loss);
+            out.push(s.step().unwrap().loss);
         }
         out
     };
@@ -140,21 +133,19 @@ fn identical_seeds_give_identical_runs() {
 
 #[test]
 fn strategies_share_the_same_artifact() {
-    // The same compiled program must serve every strategy (the runtime
+    // The same compiled program must serve every policy (the runtime
     // inputs are the only difference) — core to the §4.3 design.
     let dir = require_artifacts!();
-    for strategy in [
-        Strategy::FastMoeEven,
-        Strategy::TaMoe { norm: Norm::L1 },
-        Strategy::TaMoe { norm: Norm::Softmax { temp: 2.0 } },
-    ] {
-        let topo = topology_for("C", 4);
-        let mut t = Trainer::new(&dir, topo, strategy, TrainerOptions::default()).unwrap();
-        let cfg = t.manifest().config.clone();
-        let mut b = Batcher::from_text(builtin_text(), cfg.p, cfg.batch, cfg.seq);
-        let (tok, tgt) = b.next_batch();
-        let rec = t.train_step(&tok, &tgt).unwrap();
-        assert!(rec.loss.is_finite(), "{:?}", t.strategy().name());
+    let policies: Vec<Box<dyn DispatchPolicy>> = vec![
+        Box::new(FastMoeEven),
+        Box::new(TaMoe { norm: Norm::L1 }),
+        Box::new(TaMoe { norm: Norm::Softmax { temp: 2.0 } }),
+    ];
+    for policy in policies {
+        let name = policy.name();
+        let mut s = session_on(&dir, "C", policy, 1e-3, 0);
+        let rec = s.step().unwrap();
+        assert!(rec.loss.is_finite(), "{name}");
     }
 }
 
@@ -165,19 +156,11 @@ fn tamoe_and_baseline_differ_only_via_inputs() {
     // the CE path does not read the penalty).
     let dir = require_artifacts!();
     let mut first_ce = Vec::new();
-    for strategy in [Strategy::FastMoeEven, Strategy::TaMoe { norm: Norm::L1 }] {
-        let topo = topology_for("C", 4);
-        let mut t = Trainer::new(
-            &dir,
-            topo,
-            strategy,
-            TrainerOptions { lr: 1e-3, seed: 11, flops_per_dev: 45e12 },
-        )
-        .unwrap();
-        let cfg = t.manifest().config.clone();
-        let mut b = Batcher::from_text(builtin_text(), cfg.p, cfg.batch, cfg.seq);
-        let (tok, tgt) = b.next_batch();
-        let rec = t.train_step(&tok, &tgt).unwrap();
+    let policies: Vec<Box<dyn DispatchPolicy>> =
+        vec![Box::new(FastMoeEven), Box::new(TaMoe { norm: Norm::L1 })];
+    for policy in policies {
+        let mut s = session_on(&dir, "C", policy, 1e-3, 11);
+        let rec = s.step().unwrap();
         first_ce.push((rec.ce, rec.aux));
     }
     assert!((first_ce[0].0 - first_ce[1].0).abs() < 1e-5, "{first_ce:?}");

@@ -4,7 +4,10 @@
 //! across randomly generated topologies and problem shapes.
 
 use ta_moe::comm::CostEngine;
-use ta_moe::coordinator::{converged_counts, step_cost, ModelShape, Strategy};
+use ta_moe::coordinator::{
+    converged_counts, step_cost, DeepSpeedEven, DispatchPolicy, FastMoeEven, FasterMoeHir,
+    ModelShape, TaMoe,
+};
 use ta_moe::dispatch::{
     is_locally_optimal, penalty_weights, proportional_caps, sinkhorn_repair,
     target_pattern, DispatchProblem, Norm,
@@ -167,17 +170,17 @@ fn prop_converged_counts_conserve_for_all_strategies() {
         |rng| {
             let topo = random_topology(rng);
             let prob = random_problem(rng);
-            let strat = match rng.below(4) {
-                0 => Strategy::DeepSpeedEven,
-                1 => Strategy::FastMoeEven,
-                2 => Strategy::FasterMoeHir { remote_frac: rng.range_f64(0.0, 1.0) },
-                _ => Strategy::TaMoe { norm: Norm::L1 },
+            let strat: Box<dyn DispatchPolicy> = match rng.below(4) {
+                0 => Box::new(DeepSpeedEven),
+                1 => Box::new(FastMoeEven),
+                2 => Box::new(FasterMoeHir { remote_frac: rng.range_f64(0.0, 1.0) }),
+                _ => Box::new(TaMoe { norm: Norm::L1 }),
             };
             (topo, prob, strat)
         },
         |(topo, prob, strat)| {
             let cfg = cfg_for(topo, prob);
-            let m = converged_counts(strat, topo, &cfg);
+            let m = converged_counts(strat.as_ref(), topo, &cfg);
             let want = (prob.k * prob.s) as f64;
             for i in 0..topo.p() {
                 let r = m.row_sum(i);
@@ -311,7 +314,7 @@ fn prop_step_cost_monotone_in_remote_traffic() {
         |(topo, prob, frac)| {
             let cfg = cfg_for(topo, prob);
             let shape = ModelShape::gpt_medium(false, 1, 1024);
-            let base = converged_counts(&Strategy::TaMoe { norm: Norm::L1 }, topo, &cfg);
+            let base = converged_counts(&TaMoe { norm: Norm::L1 }, topo, &cfg);
             // shift `frac` of rank 0's local volume to the farthest rank
             let mut shifted = base.clone();
             let far = topo.p() - 1;
