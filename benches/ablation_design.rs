@@ -17,8 +17,8 @@
 //! ```
 
 use ta_moe::comm::{
-    hierarchical_a2a_time, rotation_schedule, scheduled_a2a_time, xor_schedule,
-    CostEngine,
+    bvn_schedule, hierarchical_a2a_time, rotation_schedule, scheduled_a2a_time,
+    xor_schedule, CostEngine,
 };
 use ta_moe::dispatch::{penalty_weights, target_pattern, DispatchProblem, Norm};
 use ta_moe::topology::presets;
@@ -63,6 +63,7 @@ fn main() {
         ("concurrent + contention", CostEngine::contention(&topo).exchange_time(&bytes)),
         ("xor rounds", scheduled_a2a_time(&topo, &bytes, &xor_schedule(p))),
         ("rotation rounds", scheduled_a2a_time(&topo, &bytes, &rotation_schedule(p))),
+        ("bvn rounds (byte-aware)", scheduled_a2a_time(&topo, &bytes, &bvn_schedule(&topo, &bytes))),
         ("per-sender serial", CostEngine::per_sender(&topo).exchange_time(&bytes)),
     ] {
         t.row(&[name.into(), fmt_time(time), format!("{:.2}x", time / bound)]);

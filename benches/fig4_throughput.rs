@@ -9,6 +9,7 @@
 //! ```
 
 use std::collections::BTreeMap;
+use ta_moe::comm::A2aAlgo;
 use ta_moe::coordinator::{
     converged_counts, device_flops, throughput, DeepSpeedEven, FastMoeEven, ModelShape,
     TaMoe,
@@ -66,10 +67,11 @@ fn main() {
                 let ds = converged_counts(&DeepSpeedEven, &topo, &cfg);
                 let fm = converged_counts(&FastMoeEven, &topo, &cfg);
                 let ta = converged_counts(&TaMoe { norm: Norm::L1 }, &topo, &cfg);
-                // DeepSpeed uses the hierarchical a2a; FastMoE/TA-MoE direct.
-                let thr_ds = throughput(&shape, &topo, &ds, 1, flops, true);
-                let thr_fm = throughput(&shape, &topo, &fm, 1, flops, false);
-                let thr_ta = throughput(&shape, &topo, &ta, 1, flops, false);
+                // DeepSpeed uses the hierarchical a2a; FastMoE/TA-MoE direct
+                // (each policy's preferred_a2a).
+                let thr_ds = throughput(&shape, &topo, &ds, 1, flops, A2aAlgo::Hierarchical);
+                let thr_fm = throughput(&shape, &topo, &fm, 1, flops, A2aAlgo::Direct);
+                let thr_ta = throughput(&shape, &topo, &ta, 1, flops, A2aAlgo::Direct);
                 let s_ds = thr_ta / thr_ds;
                 let s_fm = thr_ta / thr_fm;
                 t.row(&[

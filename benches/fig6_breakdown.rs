@@ -15,6 +15,7 @@
 mod common;
 
 use std::collections::BTreeMap;
+use ta_moe::comm::A2aAlgo;
 use ta_moe::coordinator::{
     converged_counts, device_flops, step_cost, FastMoeEven, ModelShape, TaMoe,
 };
@@ -61,8 +62,8 @@ fn main() -> anyhow::Result<()> {
         let flops = device_flops('C');
         let even = converged_counts(&FastMoeEven, &topo, &cfg);
         let ta = converged_counts(&TaMoe { norm: Norm::L1 }, &topo, &cfg);
-        let c_even = step_cost(&shape, &topo, &even, 1, flops, false);
-        let c_ta = step_cost(&shape, &topo, &ta, 1, flops, false);
+        let c_even = step_cost(&shape, &topo, &even, 1, flops, A2aAlgo::Direct);
+        let c_ta = step_cost(&shape, &topo, &ta, 1, flops, A2aAlgo::Direct);
         let comm_even = c_even.a2a_s + c_even.allreduce_s;
         let comm_ta = c_ta.a2a_s + c_ta.allreduce_s;
         let s = comm_even / comm_ta;

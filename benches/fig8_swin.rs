@@ -7,6 +7,7 @@
 //! ```
 
 use std::collections::BTreeMap;
+use ta_moe::comm::A2aAlgo;
 use ta_moe::coordinator::{
     converged_counts, device_flops, throughput, FastMoeEven, ModelShape, TaMoe,
 };
@@ -65,8 +66,8 @@ fn main() {
         let flops = device_flops('A');
         let even = converged_counts(&FastMoeEven, &topo, &cfg);
         let ta = converged_counts(&TaMoe { norm: Norm::L1 }, &topo, &cfg);
-        let thr_even = throughput(&shape, &topo, &even, 1, flops, false);
-        let thr_ta = throughput(&shape, &topo, &ta, 1, flops, false);
+        let thr_even = throughput(&shape, &topo, &even, 1, flops, A2aAlgo::Direct);
+        let thr_ta = throughput(&shape, &topo, &ta, 1, flops, A2aAlgo::Direct);
         let s = thr_ta / thr_even;
         speeds.push(s);
         payload.insert(format!("speedup_{gpus}"), Json::Num(s));

@@ -9,7 +9,7 @@
 //! ```
 
 use std::collections::BTreeMap;
-use ta_moe::comm::CostEngine;
+use ta_moe::comm::{bvn_schedule, A2aAlgo, CostEngine};
 use ta_moe::coordinator::{converged_counts, device_flops, step_cost, ModelShape, TaMoe};
 use ta_moe::dispatch::{
     penalty_weights, proportional_caps, target_pattern, DispatchProblem, Norm,
@@ -74,7 +74,17 @@ fn main() {
         std::hint::black_box(CostEngine::contention(&topo64).exchange_time(&bytes));
     });
     bench("step_cost (per-step sim)", &mut || {
-        std::hint::black_box(step_cost(&shape, &topo64, &counts, 1, device_flops('C'), false));
+        std::hint::black_box(step_cost(
+            &shape,
+            &topo64,
+            &counts,
+            1,
+            device_flops('C'),
+            A2aAlgo::Direct,
+        ));
+    });
+    bench("bvn_schedule synthesis (P=64)", &mut || {
+        std::hint::black_box(bvn_schedule(&topo64, &bytes));
     });
     t.print();
     println!(

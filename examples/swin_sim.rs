@@ -9,6 +9,7 @@
 //! ```
 
 use anyhow::Result;
+use ta_moe::comm::A2aAlgo;
 use ta_moe::coordinator::{
     converged_counts, device_flops, throughput, FastMoeEven, ModelShape, SessionBuilder,
     TaMoe,
@@ -45,8 +46,8 @@ fn main() -> Result<()> {
         let cfg = fake_cfg(p, shape.tokens_per_dev, 2);
         let even = converged_counts(&FastMoeEven, &topo, &cfg);
         let ta = converged_counts(&TaMoe { norm: Norm::L1 }, &topo, &cfg);
-        let t_even = throughput(&shape, &topo, &even, 1, device_flops('A'), false);
-        let t_ta = throughput(&shape, &topo, &ta, 1, device_flops('A'), false);
+        let t_even = throughput(&shape, &topo, &even, 1, device_flops('A'), A2aAlgo::Direct);
+        let t_ta = throughput(&shape, &topo, &ta, 1, device_flops('A'), A2aAlgo::Direct);
         t.row(&[
             p.to_string(),
             if nodes == 2 { "symmetric".into() } else { "asymmetric".to_string() },

@@ -75,23 +75,87 @@ impl<'a> CostEngine<'a> {
         }
     }
 
+    /// Completion time of one synchronised round consisting of the given
+    /// deliveries only. Zero-byte pairs cost nothing; self pairs are local
+    /// copies that overlap with the network and never gate a round, so
+    /// they are skipped here (callers price them separately). Returns 0.0
+    /// for an effectively-empty round — an empty round costs nothing.
+    pub fn round_time(&self, bytes: &Mat, round: &[(usize, usize)]) -> f64 {
+        let p = self.topo.p();
+        assert_eq!((bytes.rows(), bytes.cols()), (p, p), "byte matrix shape");
+        let live = |&&(i, j): &&(usize, usize)| i != j && bytes.get(i, j) > 0.0;
+        match self.model {
+            ExchangeModel::SlowestPair => round
+                .iter()
+                .filter(live)
+                .map(|&(i, j)| self.pair_time(i, j, bytes.get(i, j)))
+                .fold(0.0, f64::max),
+            ExchangeModel::PerSenderSerial => {
+                let mut per_sender = vec![0.0; p];
+                for &(i, j) in round.iter().filter(live) {
+                    per_sender[i] += self.pair_time(i, j, bytes.get(i, j));
+                }
+                per_sender.into_iter().fold(0.0, f64::max)
+            }
+            ExchangeModel::Contention => {
+                let load = self.link_load(round.iter().filter(live).copied());
+                round
+                    .iter()
+                    .filter(live)
+                    .map(|&(i, j)| self.contended_pair_time(&load, i, j, bytes.get(i, j)))
+                    .fold(0.0, f64::max)
+            }
+        }
+    }
+
+    /// Flows per directed physical link across the given deliveries.
+    fn link_load(
+        &self,
+        pairs: impl Iterator<Item = (usize, usize)>,
+    ) -> HashMap<(usize, bool), usize> {
+        let mut load = HashMap::new();
+        for (i, j) in pairs {
+            for dl in self.topo.path(i, j) {
+                *load.entry((dl.edge, dl.up)).or_insert(0) += 1;
+            }
+        }
+        load
+    }
+
+    /// One delivery's time under a flow census: α accumulates along the
+    /// path, the slowest hop's β is inflated by its concurrent flows
+    /// (non-blocking point-to-point links never contend).
+    fn contended_pair_time(
+        &self,
+        load: &HashMap<(usize, bool), usize>,
+        i: usize,
+        j: usize,
+        bytes: f64,
+    ) -> f64 {
+        let links = self.topo.links();
+        let mut alpha = 0.0;
+        let mut slow: f64 = 0.0;
+        for dl in self.topo.path(i, j) {
+            let flows = if self.topo.link_contended(dl.edge) {
+                load[&(dl.edge, dl.up)] as f64
+            } else {
+                1.0
+            };
+            alpha += links[dl.edge].alpha;
+            slow = slow.max(links[dl.edge].beta * flows);
+        }
+        alpha + slow * bytes
+    }
+
     /// Contention pricing: each flow crosses its link path with β inflated
     /// by the number of concurrent flows using that (link, direction).
     fn contention_pair_times(&self, bytes: &Mat) -> Mat {
         let p = self.topo.p();
-        // flows per directed link
-        let mut load: HashMap<(usize, bool), usize> = HashMap::new();
-        for i in 0..p {
-            for j in 0..p {
-                if i == j || bytes.get(i, j) <= 0.0 {
-                    continue;
-                }
-                for dl in self.topo.path(i, j) {
-                    *load.entry((dl.edge, dl.up)).or_insert(0) += 1;
-                }
-            }
-        }
-        let links = self.topo.links();
+        let load = self.link_load(
+            (0..p)
+                .flat_map(|i| (0..p).map(move |j| (i, j)))
+                .filter(|&(i, j)| i != j && bytes.get(i, j) > 0.0),
+        );
         Mat::from_fn(p, p, |i, j| {
             let b = bytes.get(i, j);
             if b <= 0.0 {
@@ -100,18 +164,7 @@ impl<'a> CostEngine<'a> {
             if i == j {
                 return self.pair_time(i, i, b);
             }
-            let mut alpha = 0.0;
-            let mut slow: f64 = 0.0;
-            for dl in self.topo.path(i, j) {
-                let flows = if self.topo.link_contended(dl.edge) {
-                    load[&(dl.edge, dl.up)] as f64
-                } else {
-                    1.0 // non-blocking point-to-point fabric
-                };
-                alpha += links[dl.edge].alpha;
-                slow = slow.max(links[dl.edge].beta * flows);
-            }
-            alpha + slow * b
+            self.contended_pair_time(&load, i, j, b)
         })
     }
 }
@@ -202,5 +255,24 @@ mod tests {
     fn shape_mismatch_panics() {
         let t = tree22();
         CostEngine::slowest_pair(&t).pair_times(&Mat::zeros(3, 3));
+    }
+
+    #[test]
+    fn round_time_prices_only_the_given_deliveries() {
+        let t = tree22();
+        let eng = CostEngine::contention(&t);
+        let bytes = Mat::filled(4, 4, 1e6);
+        // a single cross-node delivery is priced at its isolated time
+        let single = eng.round_time(&bytes, &[(0, 2)]);
+        assert!((single - eng.pair_time(0, 2, 1e6)).abs() < 1e-15);
+        // two flows sharing the uplink contend with each other only
+        let two = eng.round_time(&bytes, &[(0, 2), (1, 3)]);
+        assert!(two > single);
+        let full = eng.exchange_time(&bytes);
+        assert!(two < full, "round of 2 must beat the 4-flow exchange");
+        // empty rounds and self/zero pairs cost nothing
+        assert_eq!(eng.round_time(&bytes, &[]), 0.0);
+        assert_eq!(eng.round_time(&bytes, &[(1, 1)]), 0.0);
+        assert_eq!(eng.round_time(&Mat::zeros(4, 4), &[(0, 2)]), 0.0);
     }
 }

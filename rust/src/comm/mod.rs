@@ -20,16 +20,23 @@
 //! all-to-all (intra-gather → inter-exchange → intra-scatter) for the
 //! system-level comparison, and [`ring_allreduce_time`] prices the dense
 //! gradient synchronisation in the coordinator's step-time model.
+//!
+//! All of these execution styles unify behind the [`A2aAlgo`] planner
+//! (`direct | hier | sched:xor | sched:rot | sched:bvn`), the seam
+//! `step_cost`, `Session`, and the `--a2a` CLI flag select on;
+//! [`bvn_schedule`] is its byte-matrix-aware schedule synthesizer.
 
 mod allreduce;
 mod alltoall;
 mod engine;
+mod plan;
 mod profile;
 mod schedules;
 
 pub use allreduce::ring_allreduce_time;
 pub use alltoall::{hierarchical_a2a_time, HierBreakdown};
 pub use engine::{CostEngine, ExchangeModel};
+pub use plan::{bvn_schedule, A2aAlgo, A2aBreakdown, CommPlan, ScheduleKind};
 pub use profile::{profile_exchange, ExchangeProfile};
 pub use schedules::{
     rotation_schedule, scheduled_a2a_time, validate_schedule, xor_schedule, Round,

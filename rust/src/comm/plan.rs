@@ -1,0 +1,726 @@
+//! The unified all-to-all planner: one [`A2aAlgo`] selector for every way
+//! this repo can execute (and therefore price) a MoE dispatch exchange.
+//!
+//! Before this module, three mutually-unaware code paths priced an
+//! exchange (`CostEngine::exchange_time`, [`hierarchical_a2a_time`],
+//! [`scheduled_a2a_time`]) and only a `hierarchical: bool` reached the
+//! step-cost model. [`A2aAlgo`] unifies them:
+//!
+//! * [`A2aAlgo::Direct`] — fully-concurrent exchange under the contention
+//!   engine (FastMoE-style peer-to-peer);
+//! * [`A2aAlgo::Hierarchical`] — the DeepSpeed-MoE/HetuMoE 3-phase
+//!   intra-gather → inter-exchange → intra-scatter;
+//! * [`A2aAlgo::Scheduled`] — NCCL-like synchronised rounds over a
+//!   1-factorisation: [`ScheduleKind::Xor`] (power-of-two P),
+//!   [`ScheduleKind::Rotation`] (any P), or [`ScheduleKind::Bvn`] — the
+//!   byte-matrix-aware schedule synthesised by [`bvn_schedule`].
+//!
+//! Specs parse with [`A2aAlgo::from_str`] (`direct | hier | sched:xor |
+//! sched:rot | sched:bvn`) and round-trip through `Display`, mirroring the
+//! policy registry's contract.
+//!
+//! # The BvN synthesizer
+//!
+//! [`bvn_schedule`] peels the P×P byte matrix into partial permutations,
+//! Birkhoff–von-Neumann style, for **any** P (closing the xor schedule's
+//! power-of-two gap):
+//!
+//! 1. self-traffic goes into round 0 (non-gating local copies);
+//! 2. the remaining entries are peeled heaviest-pairs-first into maximal
+//!    partial permutations, intra-node entries separately from uplink
+//!    entries;
+//! 3. a Kempe-style refinement repeatedly flips alternating components
+//!    between the most expensive round and a cheaper one whenever the
+//!    priced cost drops — this is where byte-awareness pays: heavy flows
+//!    sharing a bottleneck link spread out, light flows pack under the
+//!    gating delivery;
+//! 4. the rotation 1-factorisation (the classic BvN decomposition of the
+//!    uniform matrix) is refined as a second seed and the cheaper plan
+//!    wins, so the synthesizer never regresses below `sched:rot`;
+//! 5. rounds are ordered locality-first: intra-node rounds precede uplink
+//!    rounds, so a real runtime can start local traffic while NICs drain.
+
+use super::alltoall::hierarchical_a2a_time;
+use super::engine::CostEngine;
+use super::schedules::{rotation_schedule, scheduled_a2a_time, xor_schedule, Round};
+use crate::topology::Topology;
+use crate::util::Mat;
+
+/// Which 1-factorisation a [`A2aAlgo::Scheduled`] exchange runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ScheduleKind {
+    /// Round r pairs `i ↔ i ^ r`; P must be a power of two.
+    Xor,
+    /// Round r sends `i → (i + r) mod P`; any P.
+    Rotation,
+    /// Byte-matrix-aware greedy BvN decomposition ([`bvn_schedule`]); any P.
+    Bvn,
+}
+
+/// How an all-to-all exchange is executed on the wire — the planner seam
+/// threaded through `step_cost`, `DispatchPolicy::preferred_a2a`,
+/// `SessionBuilder::a2a`, configs, and the `--a2a` CLI flag.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Default)]
+pub enum A2aAlgo {
+    /// Fully-concurrent P×P exchange under the contention engine.
+    #[default]
+    Direct,
+    /// DeepSpeed-MoE/HetuMoE hierarchical 3-phase exchange.
+    Hierarchical,
+    /// Round-based execution of the given schedule.
+    Scheduled(ScheduleKind),
+}
+
+impl A2aAlgo {
+    /// All selectable algorithms, for sweeps and `--help` text.
+    pub const ALL: [A2aAlgo; 5] = [
+        A2aAlgo::Direct,
+        A2aAlgo::Hierarchical,
+        A2aAlgo::Scheduled(ScheduleKind::Xor),
+        A2aAlgo::Scheduled(ScheduleKind::Rotation),
+        A2aAlgo::Scheduled(ScheduleKind::Bvn),
+    ];
+
+    /// Canonical spec (round-trips through [`str::parse`]).
+    pub fn name(&self) -> String {
+        self.to_string()
+    }
+
+    /// Err when this algo cannot run at world size `p`
+    /// (`sched:xor` needs a power of two).
+    pub fn validate_for(&self, p: usize) -> Result<(), String> {
+        match self {
+            A2aAlgo::Scheduled(ScheduleKind::Xor) if !p.is_power_of_two() => Err(format!(
+                "sched:xor needs a power-of-two world size, got P={p} \
+                 (use sched:rot or sched:bvn)"
+            )),
+            _ => Ok(()),
+        }
+    }
+
+    /// The rounds a scheduled algo executes (`None` for direct/hierarchical).
+    pub fn rounds(&self, topo: &Topology, bytes: &Mat) -> Option<Vec<Round>> {
+        match self {
+            A2aAlgo::Direct | A2aAlgo::Hierarchical => None,
+            A2aAlgo::Scheduled(ScheduleKind::Xor) => Some(xor_schedule(topo.p())),
+            A2aAlgo::Scheduled(ScheduleKind::Rotation) => Some(rotation_schedule(topo.p())),
+            A2aAlgo::Scheduled(ScheduleKind::Bvn) => Some(bvn_schedule(topo, bytes)),
+        }
+    }
+
+    /// Price one exchange of `bytes` and attribute the time to phases.
+    pub fn plan(&self, topo: &Topology, bytes: &Mat) -> CommPlan {
+        let p = topo.p();
+        assert_eq!((bytes.rows(), bytes.cols()), (p, p), "byte matrix shape");
+        let eng = CostEngine::contention(topo);
+        match self {
+            A2aAlgo::Direct => {
+                let times = eng.pair_times(bytes);
+                let mut b = A2aBreakdown::default();
+                // concurrent execution: the whole exchange takes as long as
+                // its gating delivery, attributed to that delivery's class
+                let (mut gi, mut gj, mut t) = (0, 0, 0.0);
+                for i in 0..p {
+                    for j in 0..p {
+                        if times.get(i, j) > t {
+                            t = times.get(i, j);
+                            (gi, gj) = (i, j);
+                        }
+                    }
+                }
+                if gi == gj {
+                    b.local_s = t;
+                } else if topo.same_node(gi, gj) {
+                    b.intra_s = t;
+                } else {
+                    b.inter_s = t;
+                }
+                CommPlan { algo: *self, rounds: None, breakdown: b }
+            }
+            A2aAlgo::Hierarchical => {
+                let h = hierarchical_a2a_time(topo, bytes);
+                // on a single node the "inter" phase is really a direct
+                // intra-node exchange (the hierarchical fallback), so bill
+                // it as such — nothing crosses a node boundary
+                let breakdown = if topo.n_nodes() <= 1 {
+                    A2aBreakdown { local_s: 0.0, intra_s: h.total(), inter_s: 0.0 }
+                } else {
+                    A2aBreakdown {
+                        local_s: 0.0,
+                        intra_s: h.intra_gather + h.intra_scatter,
+                        inter_s: h.inter,
+                    }
+                };
+                CommPlan { algo: *self, rounds: None, breakdown }
+            }
+            A2aAlgo::Scheduled(_) => {
+                let rounds = self.rounds(topo, bytes).expect("scheduled rounds");
+                let (local_s, intra_s, inter_s) =
+                    super::schedules::scheduled_phase_times(topo, bytes, &rounds);
+                CommPlan {
+                    algo: *self,
+                    rounds: Some(rounds),
+                    breakdown: A2aBreakdown { local_s, intra_s, inter_s },
+                }
+            }
+        }
+    }
+
+    /// Completion time of one exchange under this algo.
+    pub fn exchange_time(&self, topo: &Topology, bytes: &Mat) -> f64 {
+        self.plan(topo, bytes).total_s()
+    }
+}
+
+impl std::fmt::Display for A2aAlgo {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            A2aAlgo::Direct => write!(f, "direct"),
+            A2aAlgo::Hierarchical => write!(f, "hier"),
+            A2aAlgo::Scheduled(ScheduleKind::Xor) => write!(f, "sched:xor"),
+            A2aAlgo::Scheduled(ScheduleKind::Rotation) => write!(f, "sched:rot"),
+            A2aAlgo::Scheduled(ScheduleKind::Bvn) => write!(f, "sched:bvn"),
+        }
+    }
+}
+
+impl std::str::FromStr for A2aAlgo {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<A2aAlgo, String> {
+        match s.trim() {
+            "direct" => Ok(A2aAlgo::Direct),
+            "hier" | "hierarchical" => Ok(A2aAlgo::Hierarchical),
+            "sched:xor" => Ok(A2aAlgo::Scheduled(ScheduleKind::Xor)),
+            "sched:rot" | "sched:rotation" => Ok(A2aAlgo::Scheduled(ScheduleKind::Rotation)),
+            "sched:bvn" => Ok(A2aAlgo::Scheduled(ScheduleKind::Bvn)),
+            other => Err(format!(
+                "unknown a2a algo {other:?} (known: direct, hier, sched:xor, \
+                 sched:rot, sched:bvn)"
+            )),
+        }
+    }
+}
+
+/// Where an exchange's time goes: local copies, intra-node deliveries,
+/// cross-node deliveries. Phases sum to the exchange completion time.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct A2aBreakdown {
+    /// Exposed local-copy time (self-traffic not hidden under deliveries).
+    pub local_s: f64,
+    /// Time attributed to intra-node phases/rounds.
+    pub intra_s: f64,
+    /// Time attributed to phases/rounds crossing a node boundary.
+    pub inter_s: f64,
+}
+
+impl A2aBreakdown {
+    pub fn total(&self) -> f64 {
+        self.local_s + self.intra_s + self.inter_s
+    }
+
+    pub fn scale(&self, f: f64) -> A2aBreakdown {
+        A2aBreakdown {
+            local_s: self.local_s * f,
+            intra_s: self.intra_s * f,
+            inter_s: self.inter_s * f,
+        }
+    }
+}
+
+/// A priced exchange: the algorithm, its rounds (for scheduled algos), and
+/// the per-phase time attribution.
+#[derive(Clone, Debug)]
+pub struct CommPlan {
+    pub algo: A2aAlgo,
+    /// The synchronised rounds a scheduled algo executes.
+    pub rounds: Option<Vec<Round>>,
+    pub breakdown: A2aBreakdown,
+}
+
+impl CommPlan {
+    /// Completion time of the planned exchange.
+    pub fn total_s(&self) -> f64 {
+        self.breakdown.total()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// BvN schedule synthesis
+// ---------------------------------------------------------------------------
+
+/// Bounded number of Kempe-refinement flips per candidate schedule.
+const REFINE_SWEEPS: usize = 12;
+
+/// Synthesise a byte-matrix-aware round schedule for any P (see the module
+/// docs for the algorithm). The result always passes
+/// [`super::schedules::validate_schedule`] and never prices above the
+/// rotation schedule under [`scheduled_a2a_time`].
+pub fn bvn_schedule(topo: &Topology, bytes: &Mat) -> Vec<Round> {
+    let p = topo.p();
+    assert_eq!((bytes.rows(), bytes.cols()), (p, p), "byte matrix shape");
+    let self_round: Round = (0..p).map(|i| (i, i)).collect();
+    if p == 1 {
+        return vec![self_round];
+    }
+
+    // candidate seeds: the heaviest-first locality peel, and the rotation
+    // 1-factorisation (so refinement can only improve on sched:rot)
+    let candidates = vec![peel_candidate(topo, bytes), rotation_candidate(p)];
+
+    let mut best: Option<(f64, Vec<Round>)> = None;
+    for cand in candidates {
+        let refined = refine_rounds(topo, bytes, cand);
+        let mut sched = vec![self_round.clone()];
+        sched.extend(refined);
+        let cost = scheduled_a2a_time(topo, bytes, &sched);
+        match &best {
+            Some((c, _)) if cost >= *c => {}
+            _ => best = Some((cost, sched)),
+        }
+    }
+    let (_, mut sched) = best.expect("at least one candidate");
+
+    // locality-first ordering: intra-node rounds before uplink rounds
+    // (stable sort; round order does not change the price)
+    sched[1..].sort_by_key(|round| {
+        round.iter().map(|&(i, j)| topo.level(i, j)).max().unwrap_or(0)
+    });
+    sched
+}
+
+/// Heaviest-first maximal partial permutations, intra-node entries peeled
+/// separately from (and before) cross-node entries.
+fn peel_candidate(topo: &Topology, bytes: &Mat) -> Vec<Round> {
+    let p = topo.p();
+    let mut intra = Vec::new();
+    let mut inter = Vec::new();
+    for i in 0..p {
+        for j in 0..p {
+            if i == j {
+                continue;
+            }
+            let pair = (i, j, bytes.get(i, j));
+            if topo.same_node(i, j) {
+                intra.push(pair);
+            } else {
+                inter.push(pair);
+            }
+        }
+    }
+    let mut rounds = peel_rounds(intra, p);
+    rounds.extend(peel_rounds(inter, p));
+    rounds
+}
+
+/// Greedily peel `(src, dst, weight)` entries into maximal partial
+/// permutations, heaviest first.
+fn peel_rounds(mut pairs: Vec<(usize, usize, f64)>, p: usize) -> Vec<Round> {
+    pairs.sort_by(|a, b| {
+        b.2.total_cmp(&a.2).then_with(|| (a.0, a.1).cmp(&(b.0, b.1)))
+    });
+    let mut rounds = Vec::new();
+    while !pairs.is_empty() {
+        let mut send = vec![false; p];
+        let mut recv = vec![false; p];
+        let mut round = Vec::new();
+        let mut rest = Vec::new();
+        for (i, j, w) in pairs {
+            if !send[i] && !recv[j] {
+                send[i] = true;
+                recv[j] = true;
+                round.push((i, j));
+            } else {
+                rest.push((i, j, w));
+            }
+        }
+        rounds.push(round);
+        pairs = rest;
+    }
+    rounds
+}
+
+/// The rotation 1-factorisation without its self round.
+fn rotation_candidate(p: usize) -> Vec<Round> {
+    rotation_schedule(p).into_iter().skip(1).collect()
+}
+
+/// One alternating component of two rounds: flipping its deliveries
+/// between the rounds keeps both partial permutations valid.
+struct Component {
+    from_a: Vec<(usize, usize)>,
+    from_b: Vec<(usize, usize)>,
+}
+
+/// Alternating components of two partial permutations: components
+/// partition the two rounds' send/receive slots (a device's send in `a`
+/// and its send in `b` always land in the same component), so each
+/// component's deliveries can swap rounds while every device keeps ≤1
+/// send and ≤1 receive per round — and flips of distinct components
+/// compose.
+fn alternating_components(a: &Round, b: &Round, p: usize) -> Vec<Component> {
+    const NONE: usize = usize::MAX;
+    let mut out_a = vec![NONE; p];
+    let mut in_a = vec![NONE; p];
+    for (k, &(i, j)) in a.iter().enumerate() {
+        out_a[i] = k;
+        in_a[j] = k;
+    }
+    let mut out_b = vec![NONE; p];
+    let mut in_b = vec![NONE; p];
+    for (k, &(i, j)) in b.iter().enumerate() {
+        out_b[i] = k;
+        in_b[j] = k;
+    }
+    let mut seen_a = vec![false; a.len()];
+    let mut seen_b = vec![false; b.len()];
+    let mut comps = Vec::new();
+    let starts = (0..a.len()).map(|k| (true, k)).chain((0..b.len()).map(|k| (false, k)));
+    for start in starts {
+        match start {
+            (true, k) if seen_a[k] => continue,
+            (false, k) if seen_b[k] => continue,
+            _ => {}
+        }
+        let mut ca = Vec::new();
+        let mut cb = Vec::new();
+        let mut stack = vec![start];
+        while let Some((is_a, k)) = stack.pop() {
+            if is_a {
+                if std::mem::replace(&mut seen_a[k], true) {
+                    continue;
+                }
+                let (i, j) = a[k];
+                ca.push((i, j));
+                if out_b[i] != NONE {
+                    stack.push((false, out_b[i]));
+                }
+                if in_b[j] != NONE {
+                    stack.push((false, in_b[j]));
+                }
+            } else {
+                if std::mem::replace(&mut seen_b[k], true) {
+                    continue;
+                }
+                let (i, j) = b[k];
+                cb.push((i, j));
+                if out_a[i] != NONE {
+                    stack.push((true, out_a[i]));
+                }
+                if in_a[j] != NONE {
+                    stack.push((true, in_a[j]));
+                }
+            }
+        }
+        comps.push(Component { from_a: ca, from_b: cb });
+    }
+    comps
+}
+
+/// Kempe-style local search: flip alternating components between the most
+/// expensive round and a cheaper one whenever the priced cost drops.
+/// Monotone non-increasing, so a rotation seed never gets worse.
+fn refine_rounds(topo: &Topology, bytes: &Mat, mut rounds: Vec<Round>) -> Vec<Round> {
+    let p = topo.p();
+    let eng = CostEngine::contention(topo);
+    rounds.retain(|r| r.iter().any(|&(i, j)| i != j));
+    let mut costs: Vec<f64> = rounds.iter().map(|r| eng.round_time(bytes, r)).collect();
+    for _ in 0..REFINE_SWEEPS {
+        let Some(a) = (0..costs.len()).max_by(|&x, &y| costs[x].total_cmp(&costs[y])) else {
+            break;
+        };
+        if costs[a] <= 0.0 {
+            break;
+        }
+        let mut order: Vec<usize> = (0..rounds.len()).filter(|&k| k != a).collect();
+        order.sort_by(|&x, &y| costs[x].total_cmp(&costs[y]));
+        let mut improved = false;
+        for &b in &order {
+            for comp in alternating_components(&rounds[a], &rounds[b], p) {
+                let (ca, cb) = (comp.from_a, comp.from_b);
+                if ca.is_empty() && cb.is_empty() {
+                    continue;
+                }
+                let mut new_a: Round =
+                    rounds[a].iter().copied().filter(|pr| !ca.contains(pr)).collect();
+                new_a.extend(cb.iter().copied());
+                let mut new_b: Round =
+                    rounds[b].iter().copied().filter(|pr| !cb.contains(pr)).collect();
+                new_b.extend(ca.iter().copied());
+                let c_na = eng.round_time(bytes, &new_a);
+                let c_nb = eng.round_time(bytes, &new_b);
+                if c_na + c_nb < (costs[a] + costs[b]) * (1.0 - 1e-12) {
+                    rounds[a] = new_a;
+                    rounds[b] = new_b;
+                    costs[a] = c_na;
+                    costs[b] = c_nb;
+                    improved = true;
+                }
+            }
+            if improved {
+                break;
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+    rounds.retain(|r| !r.is_empty());
+    rounds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::schedules::validate_schedule;
+    use crate::dispatch::{target_pattern, DispatchProblem};
+    use crate::topology::{presets, Link, TreeSpec};
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    fn random_tree(rng: &mut Rng) -> Topology {
+        // non-power-of-two and asymmetric shapes included
+        let n_nodes = rng.range(2, 5);
+        let per_node = rng.range(2, 5);
+        let spec = if rng.below(3) == 0 && n_nodes >= 3 {
+            let mut children = vec![TreeSpec::Switch(
+                (0..n_nodes / 2).map(|_| TreeSpec::Devices(per_node)).collect(),
+            )];
+            for _ in n_nodes / 2..n_nodes {
+                children.push(TreeSpec::Switch(vec![TreeSpec::Devices(per_node)]));
+            }
+            TreeSpec::Switch(children)
+        } else {
+            TreeSpec::symmetric(&[n_nodes, per_node])
+        };
+        let dev = Link::from_gbps_us(rng.range_f64(20.0, 300.0), rng.range_f64(1.0, 5.0));
+        let up = Link::from_gbps_us(rng.range_f64(4.0, 25.0), rng.range_f64(5.0, 30.0));
+        let spine = Link::from_gbps_us(rng.range_f64(2.0, 20.0), rng.range_f64(10.0, 40.0));
+        Topology::tree(&spec, &[dev, up, spine], presets::local_copy())
+    }
+
+    /// The fig4 cluster-C byte matrices: even dispatch and the Eq. 7
+    /// TA-MoE target at GPT-Medium scale (d=1024, fp16).
+    fn fig4_cluster_c_bytes(nodes: usize) -> (Topology, Vec<(&'static str, Mat)>) {
+        let topo = presets::cluster_c(nodes);
+        let p = topo.p();
+        let per_tok = 2048.0;
+        let even = Mat::filled(p, p, 6144.0 / p as f64 * per_tok);
+        let prob = DispatchProblem { k: 1, s: 6144, e_per_dev: 1, elem_bytes: 2048 };
+        let ta = target_pattern(&topo, &prob).bytes_matrix();
+        (topo, vec![("even", even), ("ta", ta)])
+    }
+
+    #[test]
+    fn specs_round_trip() {
+        for algo in A2aAlgo::ALL {
+            let spec = algo.name();
+            let parsed: A2aAlgo = spec.parse().unwrap_or_else(|e| panic!("{spec}: {e}"));
+            assert_eq!(parsed, algo, "{spec}");
+        }
+        assert_eq!("hierarchical".parse::<A2aAlgo>().unwrap(), A2aAlgo::Hierarchical);
+        assert_eq!(
+            "sched:rotation".parse::<A2aAlgo>().unwrap(),
+            A2aAlgo::Scheduled(ScheduleKind::Rotation)
+        );
+    }
+
+    #[test]
+    fn bad_specs_rejected() {
+        for bad in ["", "sched", "sched:", "sched:bvn:2", "diagonal", "xor"] {
+            assert!(bad.parse::<A2aAlgo>().is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn xor_validates_only_on_powers_of_two() {
+        let xor = A2aAlgo::Scheduled(ScheduleKind::Xor);
+        assert!(xor.validate_for(8).is_ok());
+        assert!(xor.validate_for(6).is_err());
+        for algo in [
+            A2aAlgo::Direct,
+            A2aAlgo::Hierarchical,
+            A2aAlgo::Scheduled(ScheduleKind::Rotation),
+            A2aAlgo::Scheduled(ScheduleKind::Bvn),
+        ] {
+            assert!(algo.validate_for(6).is_ok(), "{algo}");
+        }
+    }
+
+    #[test]
+    fn prop_bvn_is_valid_for_any_tree() {
+        check(
+            30,
+            0xB1F0,
+            |rng| {
+                let topo = random_tree(rng);
+                let p = topo.p();
+                let bytes = Mat::from_fn(p, p, |_, _| rng.range_f64(0.0, 64e6));
+                (topo, bytes)
+            },
+            |(topo, bytes)| {
+                let rounds = bvn_schedule(topo, bytes);
+                validate_schedule(topo.p(), &rounds)
+                    .map_err(|e| format!("P={}: {e}", topo.p()))
+            },
+        );
+    }
+
+    #[test]
+    fn prop_every_algo_dominates_slowest_pair_bound() {
+        // Eq. 2 lower-bounds any execution of the exchange: each delivery
+        // happens somewhere, and no algo beats its isolated α-β time.
+        check(
+            20,
+            0xA160,
+            |rng| {
+                let topo = random_tree(rng);
+                let p = topo.p();
+                let bytes = Mat::from_fn(p, p, |_, _| rng.range_f64(0.0, 64e6));
+                (topo, bytes)
+            },
+            |(topo, bytes)| {
+                let lb = CostEngine::slowest_pair(topo).exchange_time(bytes);
+                for algo in A2aAlgo::ALL {
+                    if algo.validate_for(topo.p()).is_err() {
+                        continue;
+                    }
+                    let t = algo.exchange_time(topo, bytes);
+                    if t < lb * (1.0 - 1e-9) {
+                        return Err(format!("{algo}: {t} below bound {lb}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn bvn_never_prices_above_rotation_on_fig4_cluster_c() {
+        // the planner acceptance bar: sched:bvn ≤ sched:rot on the fig4
+        // cluster-C byte matrices (even + TA target), including the
+        // 4-node asymmetric spine shape
+        for nodes in [1usize, 2, 4] {
+            let (topo, mats) = fig4_cluster_c_bytes(nodes);
+            let p = topo.p();
+            for (name, bytes) in &mats {
+                let rot = scheduled_a2a_time(&topo, bytes, &rotation_schedule(p));
+                let rounds = bvn_schedule(&topo, bytes);
+                validate_schedule(p, &rounds).unwrap();
+                let bvn = scheduled_a2a_time(&topo, bytes, &rounds);
+                assert!(
+                    bvn <= rot * (1.0 + 1e-9),
+                    "{nodes} nodes / {name}: bvn {bvn} > rot {rot}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bvn_beats_rotation_on_two_node_cluster_c() {
+        // where the byte-aware refinement actually wins, not just ties
+        let (topo, mats) = fig4_cluster_c_bytes(2);
+        let p = topo.p();
+        for (name, bytes) in &mats {
+            let rot = scheduled_a2a_time(&topo, bytes, &rotation_schedule(p));
+            let bvn = scheduled_a2a_time(&topo, bytes, &bvn_schedule(&topo, bytes));
+            assert!(bvn < rot, "{name}: bvn {bvn} !< rot {rot}");
+        }
+    }
+
+    #[test]
+    fn bvn_orders_intra_rounds_before_uplink_rounds() {
+        let (topo, mats) = fig4_cluster_c_bytes(2);
+        let rounds = bvn_schedule(&topo, &mats[0].1);
+        let mut seen_cross = false;
+        for round in &rounds[1..] {
+            let cross = round.iter().any(|&(i, j)| !topo.same_node(i, j));
+            assert!(
+                !seen_cross || cross,
+                "intra-node round after an uplink round"
+            );
+            seen_cross |= cross;
+        }
+        assert!(seen_cross, "multi-node schedule must have uplink rounds");
+    }
+
+    #[test]
+    fn plan_breakdown_sums_to_exchange_time() {
+        let (topo, mats) = fig4_cluster_c_bytes(2);
+        for (_, bytes) in &mats {
+            for algo in A2aAlgo::ALL {
+                let plan = algo.plan(&topo, bytes);
+                let b = plan.breakdown;
+                assert!(
+                    (b.total() - (b.local_s + b.intra_s + b.inter_s)).abs() < 1e-15
+                );
+                assert!(plan.total_s() > 0.0, "{algo}");
+                match algo {
+                    A2aAlgo::Scheduled(_) => {
+                        let rounds = plan.rounds.as_ref().expect("rounds");
+                        let want = scheduled_a2a_time(&topo, bytes, rounds);
+                        assert!(
+                            (plan.total_s() - want).abs() <= 1e-12 * want,
+                            "{algo}: {} != {want}",
+                            plan.total_s()
+                        );
+                    }
+                    A2aAlgo::Hierarchical => {
+                        let want = hierarchical_a2a_time(&topo, bytes).total();
+                        assert!((plan.total_s() - want).abs() <= 1e-12 * want);
+                        assert!(b.intra_s > 0.0 && b.inter_s > 0.0);
+                    }
+                    A2aAlgo::Direct => {
+                        let want = CostEngine::contention(&topo).exchange_time(bytes);
+                        assert!((plan.total_s() - want).abs() <= 1e-12 * want);
+                        assert!(plan.rounds.is_none());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn direct_attributes_gating_delivery_class() {
+        // all traffic intra-node ⇒ the direct plan bills intra, not inter
+        let topo = presets::cluster_c(2);
+        let p = topo.p();
+        let bytes = Mat::from_fn(p, p, |i, j| {
+            if i != j && topo.same_node(i, j) {
+                1e6
+            } else {
+                0.0
+            }
+        });
+        let plan = A2aAlgo::Direct.plan(&topo, &bytes);
+        assert!(plan.breakdown.intra_s > 0.0);
+        assert_eq!(plan.breakdown.inter_s, 0.0);
+        assert_eq!(plan.breakdown.local_s, 0.0);
+    }
+
+    #[test]
+    fn hierarchical_on_single_node_bills_intra_not_inter() {
+        // the 1-node hierarchical fallback is a direct intra-node
+        // exchange — nothing crosses a node boundary
+        let topo = presets::cluster_c(1);
+        let p = topo.p();
+        let bytes = Mat::filled(p, p, 1e6);
+        let plan = A2aAlgo::Hierarchical.plan(&topo, &bytes);
+        assert_eq!(plan.breakdown.inter_s, 0.0);
+        assert!(plan.breakdown.intra_s > 0.0);
+        let want = hierarchical_a2a_time(&topo, &bytes).total();
+        assert!((plan.total_s() - want).abs() <= 1e-12 * want);
+    }
+
+    #[test]
+    fn bvn_single_device_is_self_round_only() {
+        let topo = Topology::homogeneous(
+            1,
+            Link::from_gbps_us(100.0, 1.0),
+            presets::local_copy(),
+        );
+        let rounds = bvn_schedule(&topo, &Mat::filled(1, 1, 1e6));
+        assert_eq!(rounds, vec![vec![(0, 0)]]);
+        validate_schedule(1, &rounds).unwrap();
+    }
+}

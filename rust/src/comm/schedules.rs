@@ -12,10 +12,12 @@
 //!
 //! [`scheduled_a2a_time`] prices an exchange as the sum of per-round
 //! completion times under the contention engine — rounds are separated by
-//! a synchronisation, so the slowest delivery of each round gates it.
+//! a synchronisation, so the slowest delivery of each round gates it
+//! (empty rounds are free, and self-traffic is a non-gating local copy).
 //! This sits between the optimistic slowest-pair bound (Eq. 2) and the
 //! fully-serial model, and is the default ablation comparator in
-//! `benches/ablation_design.rs`.
+//! `benches/ablation_design.rs`. The byte-matrix-aware schedule
+//! synthesizer lives in [`super::plan`] ([`super::plan::bvn_schedule`]).
 
 use super::engine::CostEngine;
 use crate::topology::Topology;
@@ -75,19 +77,54 @@ pub fn validate_schedule(p: usize, rounds: &[Round]) -> Result<(), String> {
 /// Price an exchange under a round-based schedule: rounds run back to
 /// back, each gated by its slowest delivery (contention priced per round,
 /// so only that round's flows share links).
+///
+/// Rounds that carry no positive cross-device bytes are skipped — an
+/// empty round costs nothing, so padding a schedule with empty rounds
+/// leaves the price unchanged. Self pairs are local copies that overlap
+/// with the network rounds and never gate one; only a local copy slower
+/// than the entire round sequence is exposed.
 pub fn scheduled_a2a_time(topo: &Topology, bytes: &Mat, rounds: &[Round]) -> f64 {
+    let (local, intra, inter) = scheduled_phase_times(topo, bytes, rounds);
+    local + intra + inter
+}
+
+/// Per-class attribution of a round sequence's completion time:
+/// `(exposed_local, intra_node, inter_node)`. A round's time goes to
+/// `inter` when any of its positive deliveries crosses a node boundary,
+/// else to `intra`; self-traffic is a non-gating local copy whose excess
+/// over the round sequence is `exposed_local`. The sum is exactly
+/// [`scheduled_a2a_time`]; the planner wraps this into an `A2aBreakdown`.
+pub(super) fn scheduled_phase_times(
+    topo: &Topology,
+    bytes: &Mat,
+    rounds: &[Round],
+) -> (f64, f64, f64) {
     let p = topo.p();
     assert_eq!((bytes.rows(), bytes.cols()), (p, p));
     let eng = CostEngine::contention(topo);
-    let mut total = 0.0;
+    let mut intra = 0.0;
+    let mut inter = 0.0;
+    let mut local: f64 = 0.0;
     for round in rounds {
-        let mut round_bytes = Mat::zeros(p, p);
+        let t = eng.round_time(bytes, round);
+        let mut cross = false;
         for &(i, j) in round {
-            round_bytes.set(i, j, bytes.get(i, j));
+            if bytes.get(i, j) <= 0.0 {
+                continue;
+            }
+            if i == j {
+                local = local.max(eng.pair_time(i, i, bytes.get(i, i)));
+            } else if !topo.same_node(i, j) {
+                cross = true;
+            }
         }
-        total += eng.exchange_time(&round_bytes);
+        if cross {
+            inter += t;
+        } else {
+            intra += t;
+        }
     }
-    total
+    ((local - (intra + inter)).max(0.0), intra, inter)
 }
 
 #[cfg(test)]
@@ -153,7 +190,10 @@ mod tests {
             |(topo, bytes)| {
                 let p = topo.p();
                 let lb = CostEngine::slowest_pair(topo).exchange_time(bytes);
-                let mut schedules = vec![rotation_schedule(p)];
+                let mut schedules = vec![
+                    rotation_schedule(p),
+                    super::super::plan::bvn_schedule(topo, bytes),
+                ];
                 if p.is_power_of_two() {
                     schedules.push(xor_schedule(p));
                 }
@@ -231,6 +271,55 @@ mod tests {
         let t_pair = eng.exchange_time(&rb2);
         assert!(t_single < conc, "isolated round must beat concurrent");
         assert!(t_single <= t_pair);
+    }
+
+    #[test]
+    fn padding_with_empty_rounds_leaves_price_unchanged() {
+        let topo = presets::table1();
+        let bytes = Mat::filled(4, 4, 8e6);
+        let rounds = xor_schedule(4);
+        let base = scheduled_a2a_time(&topo, &bytes, &rounds);
+        let mut padded = vec![Vec::new(), rounds[0].clone(), Vec::new()];
+        padded.extend(rounds[1..].iter().cloned());
+        padded.push(Vec::new());
+        assert_eq!(scheduled_a2a_time(&topo, &bytes, &padded), base);
+        // rounds whose pairs all carry zero bytes are just as free
+        let mut zeroed = bytes.clone();
+        for &(i, j) in &rounds[2] {
+            zeroed.set(i, j, 0.0);
+        }
+        let skipped: Vec<Round> =
+            rounds.iter().cloned().filter(|r| r != &rounds[2]).collect();
+        assert_eq!(
+            scheduled_a2a_time(&topo, &zeroed, &rounds),
+            scheduled_a2a_time(&topo, &zeroed, &skipped),
+        );
+    }
+
+    #[test]
+    fn self_traffic_is_a_non_gating_local_copy() {
+        let topo = presets::table1();
+        let rounds = xor_schedule(4);
+        // pure self-traffic: the schedule costs exactly the slowest copy
+        let mut self_only = Mat::zeros(4, 4);
+        for i in 0..4 {
+            self_only.set(i, i, 32e6);
+        }
+        let eng = CostEngine::contention(&topo);
+        let want = (0..4)
+            .map(|i| eng.pair_time(i, i, 32e6))
+            .fold(0.0, f64::max);
+        assert_eq!(scheduled_a2a_time(&topo, &self_only, &rounds), want);
+        // with real cross traffic the copies hide under the rounds
+        let full = Mat::filled(4, 4, 32e6);
+        let mut no_self = full.clone();
+        for i in 0..4 {
+            no_self.set(i, i, 0.0);
+        }
+        let t_full = scheduled_a2a_time(&topo, &full, &rounds);
+        let t_no_self = scheduled_a2a_time(&topo, &no_self, &rounds);
+        assert_eq!(t_full, t_no_self, "hidden copies must not add cost");
+        assert!(t_full > want);
     }
 
     #[test]

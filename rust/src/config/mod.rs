@@ -5,6 +5,7 @@
 //! works with no file at all; `--config configs/fig3.toml` reproduces a
 //! specific experiment. See `configs/*.toml` for the checked-in presets.
 
+use crate::comm::A2aAlgo;
 use crate::coordinator::{parse_policy, DispatchPolicy};
 use crate::runtime::BackendKind;
 use crate::topology::{presets, Topology};
@@ -25,6 +26,10 @@ pub struct ExperimentConfig {
     pub nodes: usize,
     /// Dispatch-policy spec (see [`parse_policy`]).
     pub strategy: String,
+    /// All-to-all plan: "auto" (the policy's preference) or an
+    /// [`A2aAlgo`] spec (`direct | hier | sched:xor | sched:rot |
+    /// sched:bvn`).
+    pub a2a: String,
     /// Execution backend: "sim" | "xla" | "auto".
     pub backend: String,
     pub steps: usize,
@@ -46,6 +51,7 @@ impl Default for ExperimentConfig {
             cluster: "C".into(),
             nodes: 0, // 0 = derive from the artifact's world size
             strategy: "ta-moe".into(),
+            a2a: "auto".into(),
             backend: "auto".into(),
             steps: 100,
             lr: 1e-3,
@@ -75,6 +81,7 @@ impl ExperimentConfig {
             cluster: doc.str_or("cluster.preset", &d.cluster).to_string(),
             nodes: doc.usize_or("cluster.nodes", d.nodes),
             strategy: doc.str_or("train.strategy", &d.strategy).to_string(),
+            a2a: doc.str_or("train.a2a", &d.a2a).to_string(),
             backend: doc.str_or("train.backend", &d.backend).to_string(),
             steps: doc.usize_or("train.steps", d.steps),
             lr: doc.f64_or("train.lr", d.lr),
@@ -102,6 +109,18 @@ impl ExperimentConfig {
     /// Resolve the policy spec through the registry.
     pub fn parsed_policy(&self) -> Result<Box<dyn DispatchPolicy>> {
         parse_policy(&self.strategy).map_err(anyhow::Error::msg)
+    }
+
+    /// Resolve the a2a spec: `None` means "auto" (defer to the policy's
+    /// [`crate::coordinator::DispatchPolicy::preferred_a2a`]).
+    pub fn parsed_a2a(&self) -> Result<Option<A2aAlgo>> {
+        match self.a2a.trim() {
+            "" | "auto" => Ok(None),
+            spec => spec
+                .parse::<A2aAlgo>()
+                .map(Some)
+                .map_err(anyhow::Error::msg),
+        }
     }
 
     /// Resolve the backend selector.
@@ -226,6 +245,20 @@ lr = 0.01
         let t = topology_for("C", 8); // 4 nodes × 2
         assert_eq!(t.n_nodes(), 4);
         assert!(t.beta(0, 7) > t.beta(0, 1));
+    }
+
+    #[test]
+    fn a2a_defaults_to_auto_and_parses() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.a2a, "auto");
+        assert!(c.parsed_a2a().unwrap().is_none());
+        let c = ExperimentConfig::from_toml("[train]\na2a = \"sched:bvn\"\n").unwrap();
+        assert_eq!(
+            c.parsed_a2a().unwrap(),
+            Some(A2aAlgo::Scheduled(crate::comm::ScheduleKind::Bvn))
+        );
+        let c = ExperimentConfig { a2a: "sched:diagonal".into(), ..Default::default() };
+        assert!(c.parsed_a2a().is_err());
     }
 
     #[test]

@@ -17,7 +17,7 @@
 //! Expert compute is bottlenecked by the most-loaded device (the paper's
 //! load-imbalance effect): `max_j Σ_{e on j} Σ_i c_ie`.
 
-use crate::comm::{hierarchical_a2a_time, ring_allreduce_time, CostEngine};
+use crate::comm::{ring_allreduce_time, A2aAlgo, A2aBreakdown};
 use crate::runtime::ModelCfg;
 use crate::topology::Topology;
 use crate::util::Mat;
@@ -114,8 +114,11 @@ pub fn device_flops(cluster: char) -> f64 {
 #[derive(Clone, Copy, Debug, Default)]
 pub struct StepCost {
     pub compute_s: f64,
+    /// Total all-to-all time; equals `a2a.total()`.
     pub a2a_s: f64,
     pub allreduce_s: f64,
+    /// Per-phase all-to-all split (local / intra-node / inter-node).
+    pub a2a: A2aBreakdown,
 }
 
 impl StepCost {
@@ -127,14 +130,15 @@ impl StepCost {
 /// Price one training step.
 ///
 /// `counts` is the per-MoE-layer dispatch matrix `c_ie` in tokens
-/// (P×N). `hierarchical` selects the DeepSpeed-style a2a schedule.
+/// (P×N). `a2a` selects how the dispatch/combine exchanges execute on
+/// the wire (see [`A2aAlgo`]).
 pub fn step_cost(
     shape: &ModelShape,
     topo: &Topology,
     counts: &Mat,
     e_per_dev: usize,
     flops_per_dev: f64,
-    hierarchical: bool,
+    a2a: A2aAlgo,
 ) -> StepCost {
     let p = topo.p();
     assert_eq!(counts.rows(), p);
@@ -162,17 +166,14 @@ pub fn step_cost(
         }
         tok * (shape.d * shape.elem_bytes) as f64
     });
-    let one = if hierarchical {
-        hierarchical_a2a_time(topo, &bytes).total()
-    } else {
-        CostEngine::contention(topo).exchange_time(&bytes)
-    };
-    let a2a_s = one * 4.0 * shape.n_moe_layers as f64;
+    let plan = a2a.plan(topo, &bytes);
+    let breakdown = plan.breakdown.scale(4.0 * shape.n_moe_layers as f64);
+    let a2a_s = breakdown.total();
 
     // --- dense gradient allreduce ------------------------------------------
     let allreduce_s = ring_allreduce_time(topo, shape.dense_param_bytes());
 
-    StepCost { compute_s, a2a_s, allreduce_s }
+    StepCost { compute_s, a2a_s, allreduce_s, a2a: breakdown }
 }
 
 /// Throughput in tokens/s for a converged dispatch pattern.
@@ -182,9 +183,9 @@ pub fn throughput(
     counts: &Mat,
     e_per_dev: usize,
     flops_per_dev: f64,
-    hierarchical: bool,
+    a2a: A2aAlgo,
 ) -> f64 {
-    let cost = step_cost(shape, topo, counts, e_per_dev, flops_per_dev, hierarchical);
+    let cost = step_cost(shape, topo, counts, e_per_dev, flops_per_dev, a2a);
     topo.p() as f64 * shape.tokens_per_dev as f64 / cost.total()
 }
 
@@ -225,8 +226,8 @@ mod tests {
         let shape = ModelShape::gpt_medium(false, 6, 1024);
         let even = converged_counts(&FastMoeEven, &topo, &cfg);
         let ta = converged_counts(&TaMoe { norm: Norm::L1 }, &topo, &cfg);
-        let t_even = throughput(&shape, &topo, &even, 1, device_flops('C'), false);
-        let t_ta = throughput(&shape, &topo, &ta, 1, device_flops('C'), false);
+        let t_even = throughput(&shape, &topo, &even, 1, device_flops('C'), A2aAlgo::Direct);
+        let t_ta = throughput(&shape, &topo, &ta, 1, device_flops('C'), A2aAlgo::Direct);
         let speedup = t_ta / t_even;
         assert!(speedup > 1.02, "speedup {speedup}");
         assert!(speedup < 6.0, "speedup {speedup} implausibly large");
@@ -238,7 +239,7 @@ mod tests {
         let cfg = ModelCfg { p: 8, n_experts: 8, ..cfg16() };
         let shape = ModelShape::gpt_medium(false, 6, 1024);
         let even = converged_counts(&FastMoeEven, &topo, &cfg);
-        let c = step_cost(&shape, &topo, &even, 1, device_flops('A'), false);
+        let c = step_cost(&shape, &topo, &even, 1, device_flops('A'), A2aAlgo::Direct);
         assert!(c.compute_s > c.a2a_s, "{c:?}");
     }
 
@@ -252,22 +253,29 @@ mod tests {
         for i in 0..8 {
             skew.set(i, 0, 6144.0);
         }
-        let c_even = step_cost(&shape, &topo, &even, 1, device_flops('B'), false);
-        let c_skew = step_cost(&shape, &topo, &skew, 1, device_flops('B'), false);
+        let c_even = step_cost(&shape, &topo, &even, 1, device_flops('B'), A2aAlgo::Direct);
+        let c_skew = step_cost(&shape, &topo, &skew, 1, device_flops('B'), A2aAlgo::Direct);
         assert!(c_skew.compute_s > c_even.compute_s * 2.0);
     }
 
     #[test]
-    fn hierarchical_changes_a2a_only() {
+    fn a2a_algo_changes_a2a_only() {
         let topo = presets::cluster_c(2);
         let cfg = cfg16();
         let shape = ModelShape::gpt_medium(false, 6, 1024);
         let even = converged_counts(&FastMoeEven, &topo, &cfg);
-        let dir = step_cost(&shape, &topo, &even, 1, device_flops('C'), false);
-        let hier = step_cost(&shape, &topo, &even, 1, device_flops('C'), true);
-        assert_eq!(dir.compute_s, hier.compute_s);
-        assert_eq!(dir.allreduce_s, hier.allreduce_s);
-        assert_ne!(dir.a2a_s, hier.a2a_s);
+        let dir = step_cost(&shape, &topo, &even, 1, device_flops('C'), A2aAlgo::Direct);
+        for algo in [
+            A2aAlgo::Hierarchical,
+            A2aAlgo::Scheduled(crate::comm::ScheduleKind::Rotation),
+            A2aAlgo::Scheduled(crate::comm::ScheduleKind::Bvn),
+        ] {
+            let c = step_cost(&shape, &topo, &even, 1, device_flops('C'), algo);
+            assert_eq!(dir.compute_s, c.compute_s, "{algo}");
+            assert_eq!(dir.allreduce_s, c.allreduce_s, "{algo}");
+            assert_ne!(dir.a2a_s, c.a2a_s, "{algo}");
+            assert!((c.a2a.total() - c.a2a_s).abs() < 1e-15, "{algo}");
+        }
     }
 
     #[test]
@@ -278,8 +286,8 @@ mod tests {
         let s2 = ModelShape { k: 2, ..s1 };
         let even1 = converged_counts(&FastMoeEven, &topo, &cfg);
         let even2 = even1.scale(2.0); // top-2 doubles dispatched tokens
-        let c1 = step_cost(&s1, &topo, &even1, 1, device_flops('C'), false);
-        let c2 = step_cost(&s2, &topo, &even2, 1, device_flops('C'), false);
+        let c1 = step_cost(&s1, &topo, &even1, 1, device_flops('C'), A2aAlgo::Direct);
+        let c2 = step_cost(&s2, &topo, &even2, 1, device_flops('C'), A2aAlgo::Direct);
         assert!(c2.a2a_s > c1.a2a_s * 1.5);
     }
 }

@@ -14,6 +14,7 @@
 //! FastMoE it swaps the loss, on DeepSpeed-MoE it also makes the local
 //! capacities proportional to `ĉ`.
 
+use crate::comm::A2aAlgo;
 use crate::dispatch::{
     baseline_penalty_matrix, even_caps, proportional_caps, target_pattern,
     topo_penalty_matrix, DispatchProblem, Norm, TargetPattern,
@@ -35,9 +36,10 @@ pub trait DispatchPolicy: std::fmt::Debug + Send + Sync {
         false
     }
 
-    /// Does its timing model use the hierarchical all-to-all?
-    fn hierarchical_a2a(&self) -> bool {
-        false
+    /// The all-to-all execution plan this policy's host system uses by
+    /// default (overridable per session via `SessionBuilder::a2a`).
+    fn preferred_a2a(&self) -> A2aAlgo {
+        A2aAlgo::Direct
     }
 
     /// The Eq. 7 target pattern this policy steers toward, if any.
@@ -111,8 +113,8 @@ impl DispatchPolicy for DeepSpeedEven {
         "deepspeed".into()
     }
 
-    fn hierarchical_a2a(&self) -> bool {
-        true
+    fn preferred_a2a(&self) -> A2aAlgo {
+        A2aAlgo::Hierarchical
     }
 
     fn runtime_inputs(&self, topo: &Topology, cfg: &ModelCfg) -> PolicyInputs {
@@ -360,11 +362,11 @@ mod tests {
     }
 
     #[test]
-    fn only_deepspeed_uses_hierarchical_a2a() {
-        assert!(DeepSpeedEven.hierarchical_a2a());
-        assert!(!FastMoeEven.hierarchical_a2a());
-        assert!(!TaMoe::default().hierarchical_a2a());
-        assert!(!FasterMoeHir::default().hierarchical_a2a());
+    fn only_deepspeed_prefers_hierarchical_a2a() {
+        assert_eq!(DeepSpeedEven.preferred_a2a(), A2aAlgo::Hierarchical);
+        assert_eq!(FastMoeEven.preferred_a2a(), A2aAlgo::Direct);
+        assert_eq!(TaMoe::default().preferred_a2a(), A2aAlgo::Direct);
+        assert_eq!(FasterMoeHir::default().preferred_a2a(), A2aAlgo::Direct);
         assert!(TaMoe::default().is_topology_aware());
         assert!(!DeepSpeedEven.is_topology_aware());
     }

@@ -221,7 +221,7 @@ mod tests {
             let parsed = parse_policy(&name).unwrap_or_else(|e| panic!("{name}: {e}"));
             assert_eq!(parsed.name(), name, "parse(name()) must round-trip");
             assert_eq!(parsed.is_topology_aware(), p.is_topology_aware());
-            assert_eq!(parsed.hierarchical_a2a(), p.hierarchical_a2a());
+            assert_eq!(parsed.preferred_a2a(), p.preferred_a2a());
         }
     }
 

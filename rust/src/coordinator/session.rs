@@ -29,6 +29,7 @@
 use super::cost::{step_cost, ModelShape};
 use super::policy::{DispatchPolicy, PolicyInputs, TaMoe};
 use super::registry::parse_policy;
+use crate::comm::A2aAlgo;
 use crate::config::topology_for;
 use crate::data::{Batcher, SyntheticCorpus};
 use crate::metrics::{RunLog, StepRecord};
@@ -80,6 +81,8 @@ pub struct SessionBuilder {
     cluster: Option<String>,
     policy: Option<Box<dyn DispatchPolicy>>,
     policy_spec: Option<String>,
+    a2a: Option<A2aAlgo>,
+    a2a_spec: Option<String>,
     data: Option<DataSource>,
     opts: SessionOptions,
 }
@@ -139,6 +142,20 @@ impl SessionBuilder {
     /// (e.g. `"ta-moe:softmax:2"`). Default: `"ta-moe"`.
     pub fn policy_named(mut self, spec: impl Into<String>) -> Self {
         self.policy_spec = Some(spec.into());
+        self
+    }
+
+    /// Execute (and price) the MoE all-to-all with this plan, overriding
+    /// the policy's [`DispatchPolicy::preferred_a2a`].
+    pub fn a2a(mut self, algo: A2aAlgo) -> Self {
+        self.a2a = Some(algo);
+        self
+    }
+
+    /// Parse the a2a plan from a spec at build time
+    /// (`direct | hier | sched:xor | sched:rot | sched:bvn`).
+    pub fn a2a_named(mut self, spec: impl Into<String>) -> Self {
+        self.a2a_spec = Some(spec.into());
         self
     }
 
@@ -222,6 +239,13 @@ impl SessionBuilder {
             (None, None) => Box::new(TaMoe::default()),
         };
 
+        let a2a = match (self.a2a, self.a2a_spec) {
+            (Some(a), _) => a,
+            (None, Some(spec)) => spec.parse::<A2aAlgo>().map_err(anyhow::Error::msg)?,
+            (None, None) => policy.preferred_a2a(),
+        };
+        a2a.validate_for(topo.p()).map_err(anyhow::Error::msg)?;
+
         let inputs = policy.runtime_inputs(&topo, &cfg);
         backend.init(self.opts.seed, &inputs.gate)?;
 
@@ -269,6 +293,7 @@ impl SessionBuilder {
             backend,
             topo,
             policy,
+            a2a,
             inputs,
             shape,
             opts: self.opts,
@@ -286,6 +311,7 @@ pub struct Session {
     backend: Box<dyn Backend>,
     topo: Topology,
     policy: Box<dyn DispatchPolicy>,
+    a2a: A2aAlgo,
     inputs: PolicyInputs,
     shape: ModelShape,
     opts: SessionOptions,
@@ -330,7 +356,7 @@ impl Session {
             &out.counts,
             cfg.e_per_dev,
             self.opts.flops_per_dev,
-            self.policy.hierarchical_a2a(),
+            self.a2a,
         );
         let record = StepRecord {
             step: self.log.records.len(),
@@ -340,6 +366,9 @@ impl Session {
             dropped: out.dropped,
             sim_comm_s: cost.a2a_s + cost.allreduce_s,
             sim_compute_s: cost.compute_s,
+            sim_a2a_local_s: cost.a2a.local_s,
+            sim_a2a_intra_s: cost.a2a.intra_s,
+            sim_a2a_inter_s: cost.a2a.inter_s,
             wall_s,
         };
         self.last_counts = Some(out.counts);
@@ -347,13 +376,15 @@ impl Session {
         Ok(record)
     }
 
-    /// Validation pass on a caller-provided batch; logs (step, loss) and
+    /// Validation pass on a caller-provided batch; logs the loss against
+    /// the number of completed training steps (0 = before any training,
+    /// so a pre-train eval is never attributed to step 0's record) and
     /// returns (ce_loss, counts).
     pub fn eval(&mut self, tokens: &[i32], targets: &[i32]) -> Result<(f64, Mat)> {
         let (tok, tgt) = self.batch_tensors(tokens, targets)?;
         let out = self.backend.eval(&tok, &tgt)?;
-        let step = self.log.records.len().saturating_sub(1);
-        self.log.push_eval(step, out.ce);
+        let steps_done = self.log.records.len();
+        self.log.push_eval(steps_done, out.ce);
         Ok((out.ce, out.counts))
     }
 
@@ -391,6 +422,11 @@ impl Session {
 
     pub fn policy(&self) -> &dyn DispatchPolicy {
         self.policy.as_ref()
+    }
+
+    /// The all-to-all plan the session's step-time model executes.
+    pub fn a2a_algo(&self) -> A2aAlgo {
+        self.a2a
     }
 
     /// The gate inputs + target the policy produced for this run.

@@ -155,7 +155,9 @@ impl Batcher {
         let mut tokens = Vec::with_capacity(total * self.t);
         let mut targets = Vec::with_capacity(total * self.t);
         for _ in 0..total {
-            if self.pos + self.t + 1 >= self.stream.len() {
+            // wrap only when the (t+1)-token window would run off the end;
+            // `pos + t + 1 == len` is still a valid final window
+            if self.pos + self.t + 1 > self.stream.len() {
                 self.pos = 0;
             }
             let seq = &self.stream[self.pos..self.pos + self.t + 1];
@@ -232,6 +234,23 @@ mod tests {
             let (tok, _) = b.next_batch();
             assert_eq!(tok.len(), 2 * 2 * 8);
         }
+    }
+
+    #[test]
+    fn batcher_yields_final_window_before_wrapping() {
+        // a stream of exactly p*b*(t+1)+1 tokens: after the first batch the
+        // cursor sits at p*b*t, and [p*b*t, p*b*t + t + 1) is a valid final
+        // window — the old `>=` wrap check silently skipped it forever.
+        let (p, b, t) = (2usize, 2usize, 4usize);
+        let n = p * b * (t + 1) + 1; // 21 tokens, window [16, 21) is valid
+        let stream: Vec<i32> = (0..n as i32).collect();
+        let mut batcher = Batcher::new(stream, p, b, t);
+        let _ = batcher.next_batch(); // consumes windows at 0, 4, 8, 12
+        let (tok, tgt) = batcher.next_batch();
+        assert_eq!(&tok[..t], &[16, 17, 18, 19], "final window was skipped");
+        assert_eq!(&tgt[..t], &[17, 18, 19, 20]);
+        // and only then does the stream wrap to the head
+        assert_eq!(&tok[t..2 * t], &[0, 1, 2, 3]);
     }
 
     #[test]

@@ -13,8 +13,10 @@
 //!   verify it, and the Eq. 8 penalty weights `p_i = Norm(1/ĉ_i)`.
 //! * [`comm`] — the α-β communication cost engine: slowest-pair (the
 //!   paper's lower bound, Eq. 2), per-sender-serial and link-contention
-//!   exchange models, hierarchical all-to-all, ring allreduce, and the
-//!   Table-1 profiling harness.
+//!   exchange models, hierarchical all-to-all, ring allreduce, the
+//!   Table-1 profiling harness, and the unified [`comm::A2aAlgo`]
+//!   planner (direct / hierarchical / scheduled rounds, including the
+//!   byte-matrix-aware BvN schedule synthesizer).
 //! * [`runtime`] — execution backends behind the [`runtime::Backend`]
 //!   trait: the pure-rust [`runtime::SimBackend`] (default) and PJRT
 //!   execution of the AOT-compiled JAX/Pallas artifacts (HLO text +

@@ -75,6 +75,7 @@ fn print_help() {
          SUBCOMMANDS\n\
            train         --artifact small8_switch --cluster C --strategy ta-moe\n\
                          --backend sim|xla|auto --steps 100 --lr 1e-3 --seed 0\n\
+                         --a2a auto|direct|hier|sched:xor|sched:rot|sched:bvn\n\
                          --config file.toml\n\
            solve         --cluster C --nodes 2 [--tokens 1024] [--k 1]\n\
            profile-topo  --cluster table1 [--nodes 2] [--noise 0.2]\n\
@@ -83,7 +84,9 @@ fn print_help() {
            list-strategies   (also available as a --list-strategies flag)\n\n\
          STRATEGIES: see `ta-moe --list-strategies` (registry-extensible)\n\
          CLUSTERS:   A | B | C | table1 (presets from the paper's Table 2)\n\
-         BACKENDS:   sim (pure rust) | xla (compiled artifacts) | auto"
+         BACKENDS:   sim (pure rust) | xla (compiled artifacts) | auto\n\
+         A2A PLANS:  auto (policy preference) | direct | hier |\n\
+                     sched:xor | sched:rot | sched:bvn (byte-aware BvN)"
     );
 }
 
@@ -166,6 +169,9 @@ fn cmd_train(flags: &Flags) -> Result<()> {
     if let Some(s) = flags.get("strategy") {
         cfg.strategy = s.clone();
     }
+    if let Some(a) = flags.get("a2a") {
+        cfg.a2a = a.clone();
+    }
     if let Some(b) = flags.get("backend") {
         cfg.backend = b.clone();
     }
@@ -174,7 +180,7 @@ fn cmd_train(flags: &Flags) -> Result<()> {
     cfg.seed = flag_parse(flags, "seed", cfg.seed)?;
 
     let cluster_char = cfg.cluster.chars().next().unwrap_or('C');
-    let mut session = SessionBuilder::new()
+    let mut builder = SessionBuilder::new()
         .artifact(cfg.artifacts_dir.clone(), cfg.artifact.clone())
         .backend_kind(cfg.parsed_backend()?)
         .cluster(cfg.cluster.clone())
@@ -182,18 +188,22 @@ fn cmd_train(flags: &Flags) -> Result<()> {
         .lr(cfg.lr as f32)
         .seed(cfg.seed as i32)
         .flops_per_dev(device_flops(cluster_char))
-        .data_synthetic(cfg.seed)
-        .build()?;
+        .data_synthetic(cfg.seed);
+    if let Some(algo) = cfg.parsed_a2a()? {
+        builder = builder.a2a(algo);
+    }
+    let mut session = builder.build()?;
 
     let topo = session.topology();
     println!(
-        "train: artifact={} backend={} cluster={} (P={}, {} nodes) strategy={} steps={}",
+        "train: artifact={} backend={} cluster={} (P={}, {} nodes) strategy={} a2a={} steps={}",
         cfg.artifact,
         session.backend_name(),
         cfg.cluster,
         topo.p(),
         topo.n_nodes(),
         session.policy().name(),
+        session.a2a_algo(),
         cfg.steps
     );
 
@@ -225,9 +235,13 @@ fn cmd_train(flags: &Flags) -> Result<()> {
         session.policy().name().replace(':', "-")
     ));
     session.log().write_csv(&out)?;
+    let (local, intra, inter) = session.log().a2a_phase_totals();
     println!(
-        "done: sim throughput {:.0} tokens/s; log → {}",
+        "done: sim throughput {:.0} tokens/s; a2a phases local {:.1}ms / intra {:.1}ms / inter {:.1}ms; log → {}",
         session.log().sim_throughput(),
+        local * 1e3,
+        intra * 1e3,
+        inter * 1e3,
         out.display()
     );
     Ok(())

@@ -22,6 +22,13 @@ pub struct StepRecord {
     pub sim_comm_s: f64,
     /// Simulated compute time for the step (FLOPs / device_flops).
     pub sim_compute_s: f64,
+    /// A2a time in exposed local copies (part of `sim_comm_s`).
+    pub sim_a2a_local_s: f64,
+    /// A2a time in intra-node phases/rounds (part of `sim_comm_s`).
+    pub sim_a2a_intra_s: f64,
+    /// A2a time in phases/rounds crossing a node boundary (part of
+    /// `sim_comm_s`).
+    pub sim_a2a_inter_s: f64,
     /// Host wall-clock spent executing the XLA step (not simulated).
     pub wall_s: f64,
 }
@@ -37,7 +44,8 @@ impl StepRecord {
 pub struct RunLog {
     pub label: String,
     pub records: Vec<StepRecord>,
-    /// (step, validation loss) points.
+    /// (completed training steps at eval time, validation loss) points.
+    /// 0 completed steps = an eval before any training.
     pub evals: Vec<(usize, f64)>,
     /// Tokens processed per step across the whole cluster.
     pub tokens_per_step: usize,
@@ -52,8 +60,10 @@ impl RunLog {
         self.records.push(r);
     }
 
-    pub fn push_eval(&mut self, step: usize, loss: f64) {
-        self.evals.push((step, loss));
+    /// Record a validation loss measured after `steps_done` completed
+    /// training steps (0 = before any training).
+    pub fn push_eval(&mut self, steps_done: usize, loss: f64) {
+        self.evals.push((steps_done, loss));
     }
 
     /// Simulated cluster time elapsed up to (and including) each step.
@@ -78,13 +88,16 @@ impl RunLog {
     }
 
     /// Simulated time to first reach a validation loss ≤ `target`.
-    /// Linear scan over eval points against the sim clock.
+    /// Linear scan over eval points against the sim clock; an eval before
+    /// any training sits at t = 0.
     pub fn sim_time_to_loss(&self, target: f64) -> Option<f64> {
         let axis = self.sim_time_axis();
-        for &(step, loss) in &self.evals {
+        for &(steps_done, loss) in &self.evals {
             if loss <= target {
-                let idx = step.min(axis.len().saturating_sub(1));
-                return Some(if axis.is_empty() { 0.0 } else { axis[idx] });
+                if steps_done == 0 || axis.is_empty() {
+                    return Some(0.0);
+                }
+                return Some(axis[(steps_done - 1).min(axis.len() - 1)]);
             }
         }
         None
@@ -100,19 +113,47 @@ impl RunLog {
         s / k as f64
     }
 
-    /// Write `step,loss,ce,aux,dropped,sim_comm_s,sim_compute_s,sim_t` CSV.
+    /// Accumulated per-phase a2a split over the run:
+    /// `(local_s, intra_s, inter_s)` — the fig6-style "where does the
+    /// communication time go" series.
+    pub fn a2a_phase_totals(&self) -> (f64, f64, f64) {
+        self.records.iter().fold((0.0, 0.0, 0.0), |(l, a, e), r| {
+            (
+                l + r.sim_a2a_local_s,
+                a + r.sim_a2a_intra_s,
+                e + r.sim_a2a_inter_s,
+            )
+        })
+    }
+
+    /// Write `step,loss,ce,aux,dropped,sim_comm_s,sim_compute_s,
+    /// a2a_local_s,a2a_intra_s,a2a_inter_s,sim_t` CSV.
     pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
         let mut f = std::fs::File::create(path)?;
-        writeln!(f, "step,loss,ce,aux,dropped,sim_comm_s,sim_compute_s,sim_t")?;
+        writeln!(
+            f,
+            "step,loss,ce,aux,dropped,sim_comm_s,sim_compute_s,\
+             a2a_local_s,a2a_intra_s,a2a_inter_s,sim_t"
+        )?;
         let axis = self.sim_time_axis();
         for (r, t) in self.records.iter().zip(axis) {
             writeln!(
                 f,
-                "{},{:.6},{:.6},{:.6},{:.4},{:.6e},{:.6e},{:.6e}",
-                r.step, r.loss, r.ce, r.aux, r.dropped, r.sim_comm_s, r.sim_compute_s, t
+                "{},{:.6},{:.6},{:.6},{:.4},{:.6e},{:.6e},{:.6e},{:.6e},{:.6e},{:.6e}",
+                r.step,
+                r.loss,
+                r.ce,
+                r.aux,
+                r.dropped,
+                r.sim_comm_s,
+                r.sim_compute_s,
+                r.sim_a2a_local_s,
+                r.sim_a2a_intra_s,
+                r.sim_a2a_inter_s,
+                t
             )?;
         }
         Ok(())
@@ -129,6 +170,10 @@ impl RunLog {
         let comp: f64 = self.records.iter().map(|r| r.sim_compute_s).sum();
         m.insert("sim_comm_s".into(), Json::Num(comm));
         m.insert("sim_compute_s".into(), Json::Num(comp));
+        let (local, intra, inter) = self.a2a_phase_totals();
+        m.insert("sim_a2a_local_s".into(), Json::Num(local));
+        m.insert("sim_a2a_intra_s".into(), Json::Num(intra));
+        m.insert("sim_a2a_inter_s".into(), Json::Num(inter));
         Json::Obj(m)
     }
 }
@@ -170,12 +215,38 @@ mod tests {
         for i in 0..10 {
             log.push(rec(i, 5.0 - i as f64 * 0.5, 1.0, 0.0));
         }
-        log.push_eval(2, 4.2);
-        log.push_eval(5, 3.0);
-        log.push_eval(8, 2.0);
+        log.push_eval(3, 4.2);
+        log.push_eval(6, 3.0);
+        log.push_eval(9, 2.0);
         let t = log.sim_time_to_loss(3.0).unwrap();
-        assert_eq!(t, 6.0); // after step 5 → 6 seconds of sim time
+        assert_eq!(t, 6.0); // after 6 completed steps → 6 s of sim time
         assert!(log.sim_time_to_loss(0.1).is_none());
+    }
+
+    #[test]
+    fn eval_before_training_sits_at_time_zero() {
+        let mut log = RunLog::new("x", 10);
+        log.push_eval(0, 1.0); // before any training step
+        log.push(rec(0, 5.0, 1.0, 0.0));
+        assert_eq!(log.sim_time_to_loss(1.5), Some(0.0));
+    }
+
+    #[test]
+    fn a2a_phase_totals_accumulate() {
+        let mut log = RunLog::new("x", 10);
+        for i in 0..3 {
+            log.push(StepRecord {
+                step: i,
+                sim_a2a_local_s: 0.1,
+                sim_a2a_intra_s: 0.2,
+                sim_a2a_inter_s: 0.7,
+                ..Default::default()
+            });
+        }
+        let (l, a, e) = log.a2a_phase_totals();
+        assert!((l - 0.3).abs() < 1e-12);
+        assert!((a - 0.6).abs() < 1e-12);
+        assert!((e - 2.1).abs() < 1e-12);
     }
 
     #[test]

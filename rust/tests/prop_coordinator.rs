@@ -3,7 +3,7 @@
 //! penalty normalisation, cost-model monotonicity, and solver optimality
 //! across randomly generated topologies and problem shapes.
 
-use ta_moe::comm::CostEngine;
+use ta_moe::comm::{A2aAlgo, CostEngine};
 use ta_moe::coordinator::{
     converged_counts, step_cost, DeepSpeedEven, DispatchPolicy, FastMoeEven, FasterMoeHir,
     ModelShape, TaMoe,
@@ -321,8 +321,8 @@ fn prop_step_cost_monotone_in_remote_traffic() {
             let moved = shifted.get(0, 0) * frac;
             shifted.add_assign(0, 0, -moved);
             shifted.add_assign(0, far, moved);
-            let c0 = step_cost(&shape, topo, &base, 1, 45e12, false);
-            let c1 = step_cost(&shape, topo, &shifted, 1, 45e12, false);
+            let c0 = step_cost(&shape, topo, &base, 1, 45e12, A2aAlgo::Direct);
+            let c1 = step_cost(&shape, topo, &shifted, 1, 45e12, A2aAlgo::Direct);
             if c1.a2a_s + 1e-12 < c0.a2a_s {
                 return Err(format!("remote shift got cheaper: {} < {}", c1.a2a_s, c0.a2a_s));
             }

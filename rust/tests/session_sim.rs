@@ -4,9 +4,10 @@
 //! with zero XLA/PJRT and zero compiled artifacts (the acceptance bar for
 //! the default feature set).
 
+use ta_moe::comm::{A2aAlgo, ScheduleKind};
 use ta_moe::coordinator::{
-    converged_counts, device_flops, parse_policy, register_policy, DispatchPolicy,
-    FasterMoeHir, PolicyInputs, Session, SessionBuilder, TaMoe,
+    converged_counts, device_flops, parse_policy, register_policy, DeepSpeedEven,
+    DispatchPolicy, FasterMoeHir, PolicyInputs, Session, SessionBuilder, TaMoe,
 };
 use ta_moe::dispatch::{even_caps, Norm};
 use ta_moe::runtime::{BackendKind, GateInputs, ModelCfg, SimBackend};
@@ -85,10 +86,28 @@ fn sim_run_handles_eval_cadence() {
     let log = s.run(20).unwrap();
     assert_eq!(log.records.len(), 20);
     assert_eq!(log.evals.len(), 4);
+    // evals are attributed to the number of completed steps
+    let steps: Vec<usize> = log.evals.iter().map(|e| e.0).collect();
+    assert_eq!(steps, vec![5, 10, 15, 20]);
     // eval ce sits near the train ce (an emulated generalisation gap)
-    let (step, vl) = *log.evals.last().unwrap();
-    assert_eq!(step, 19);
+    let (_, vl) = *log.evals.last().unwrap();
     assert!((vl - log.records[19].ce).abs() < 0.5);
+}
+
+#[test]
+fn eval_before_training_is_not_attributed_to_step_zero() {
+    // regression: an eval before the first training step used to be logged
+    // against step 0 as if training had already happened
+    let mut s = sim_session("tiny4", Box::new(TaMoe { norm: Norm::L1 }), 5);
+    s.eval_held_out().unwrap();
+    assert_eq!(s.log().evals, vec![(0, s.log().evals[0].1)]);
+    s.run(3).unwrap();
+    s.eval_held_out().unwrap();
+    let steps: Vec<usize> = s.log().evals.iter().map(|e| e.0).collect();
+    assert_eq!(steps, vec![0, 3], "eval-after-step-k must log k completed steps");
+    // the pre-train eval crosses any reachable loss target at t = 0
+    let first_loss = s.log().evals[0].1;
+    assert_eq!(s.log().sim_time_to_loss(first_loss + 1e-9), Some(0.0));
 }
 
 #[test]
@@ -112,6 +131,60 @@ fn hir_converges_worse_than_tamoe_on_sim() {
     let ta = run(Box::new(TaMoe { norm: Norm::L1 }));
     let hir = run(Box::new(FasterMoeHir { remote_frac: 0.25 }));
     assert!(hir > ta + 0.05, "hir {hir} should converge worse than ta-moe {ta}");
+}
+
+#[test]
+fn builder_resolves_a2a_from_policy_preference() {
+    let s = sim_session("tiny4", Box::new(TaMoe { norm: Norm::L1 }), 0);
+    assert_eq!(s.a2a_algo(), A2aAlgo::Direct);
+    let s = sim_session("tiny4", Box::new(DeepSpeedEven), 0);
+    assert_eq!(s.a2a_algo(), A2aAlgo::Hierarchical);
+}
+
+#[test]
+fn a2a_override_changes_the_priced_step_and_its_breakdown() {
+    let run = |algo: Option<A2aAlgo>| {
+        let cfg = ModelCfg::preset("tiny4").unwrap();
+        let mut b = SessionBuilder::new()
+            .backend(Box::new(SimBackend::new(cfg)))
+            .cluster("C")
+            .policy(Box::new(TaMoe { norm: Norm::L1 }))
+            .seed(11);
+        if let Some(a) = algo {
+            b = b.a2a(a);
+        }
+        let mut s = b.build().unwrap();
+        let rec = s.step().unwrap();
+        (s.a2a_algo(), rec)
+    };
+    let (algo_d, direct) = run(None);
+    assert_eq!(algo_d, A2aAlgo::Direct);
+    let (algo_b, bvn) = run(Some(A2aAlgo::Scheduled(ScheduleKind::Bvn)));
+    assert_eq!(algo_b, A2aAlgo::Scheduled(ScheduleKind::Bvn));
+    // same model + data, different wire plan → same loss, different clock
+    assert_eq!(direct.loss, bvn.loss);
+    assert_ne!(direct.sim_comm_s, bvn.sim_comm_s);
+    // the per-phase split adds up to a positive a2a share of comm time
+    for rec in [&direct, &bvn] {
+        let phases = rec.sim_a2a_local_s + rec.sim_a2a_intra_s + rec.sim_a2a_inter_s;
+        assert!(phases > 0.0);
+        assert!(phases <= rec.sim_comm_s + 1e-15);
+    }
+}
+
+#[test]
+fn builder_parses_and_validates_a2a_specs() {
+    let build = |spec: &str| {
+        SessionBuilder::new()
+            .backend(Box::new(SimBackend::new(ModelCfg::preset("tiny4").unwrap())))
+            .a2a_named(spec)
+            .build()
+    };
+    assert_eq!(build("sched:rot").unwrap().a2a_algo().name(), "sched:rot");
+    // tiny4 has P=4 (a power of two), so sched:xor is accepted
+    assert!(build("sched:xor").is_ok());
+    let err = build("sched:diagonal").unwrap_err();
+    assert!(err.to_string().contains("unknown a2a algo"), "{err}");
 }
 
 #[test]
