@@ -1,16 +1,26 @@
-//! L3 hot-path micro-benchmarks (the §Perf baseline): the dispatch solver,
-//! penalty construction, the contention cost engine, and the coordinator's
-//! per-step host work. These are the pure-rust pieces that run every step
-//! or every topology change; the targets and before/after history live in
-//! EXPERIMENTS.md §Perf.
+//! L3 hot-path micro-benchmarks (the EXPERIMENTS.md §Perf baseline): the
+//! dispatch solver, penalty construction, the contention cost engine, the
+//! BvN schedule synthesizer, and the coordinator's per-step host work.
+//! These are the pure-rust pieces that run every step or every topology
+//! change; the targets and before/after history live in EXPERIMENTS.md
+//! §Perf.
 //!
 //! ```bash
 //! cargo bench --bench solver_hotpath
+//! TA_MOE_BENCH_QUICK=1 cargo bench --bench solver_hotpath   # CI smoke
 //! ```
+//!
+//! The P sweep (16/32/64/128 on cluster C) makes asymptotic regressions of
+//! `exchange_time` and `bvn_schedule` visible, and the cached-vs-cold
+//! `step_cost` rows show what the step-level `PlanCache` saves once the
+//! dispatch pattern has converged.
 
 use std::collections::BTreeMap;
-use ta_moe::comm::{bvn_schedule, A2aAlgo, CostEngine};
-use ta_moe::coordinator::{converged_counts, device_flops, step_cost, ModelShape, TaMoe};
+use ta_moe::comm::{bvn_schedule, A2aAlgo, CostEngine, ScheduleKind};
+use ta_moe::coordinator::{
+    converged_counts, device_flops, step_cost, step_cost_cached, ModelShape, PlanCache,
+    TaMoe, PLAN_CACHE_TOL,
+};
 use ta_moe::dispatch::{
     penalty_weights, proportional_caps, target_pattern, DispatchProblem, Norm,
 };
@@ -19,6 +29,11 @@ use ta_moe::util::bench::{record_jsonl, time_it, Table};
 use ta_moe::util::json::Json;
 
 fn main() {
+    // CI quick mode: exercise every row with a handful of samples instead
+    // of a statistically meaningful run
+    let quick = std::env::var("TA_MOE_BENCH_QUICK").map(|v| v != "0").unwrap_or(false);
+    let (warmup, samples) = if quick { (1, 3) } else { (3, 20) };
+
     let topo64 = presets::cluster_c(8); // 64 devices
     let prob = DispatchProblem { k: 1, s: 6144, e_per_dev: 1, elem_bytes: 4096 };
     let tp = target_pattern(&topo64, &prob);
@@ -45,10 +60,10 @@ fn main() {
     };
     let counts = converged_counts(&TaMoe { norm: Norm::L1 }, &topo64, &cfg);
 
-    let mut t = Table::new(&["hot path (P=64)", "mean", "min", "samples"]);
+    let mut t = Table::new(&["hot path", "mean", "min", "samples"]);
     let mut payload = BTreeMap::new();
-    let mut bench = |name: &str, f: &mut dyn FnMut()| {
-        let s = time_it(f, 3, 20);
+    let mut bench = |t: &mut Table, payload: &mut BTreeMap<String, Json>, name: &str, f: &mut dyn FnMut()| {
+        let s = time_it(f, warmup, samples);
         t.row(&[
             name.into(),
             format!("{:.1}us", s.mean_us()),
@@ -58,22 +73,26 @@ fn main() {
         payload.insert(name.to_string(), Json::Num(s.mean_us()));
     };
 
-    bench("topology build (cluster_c x8)", &mut || {
+    bench(&mut t, &mut payload, "topology build (cluster_c x8)", &mut || {
         std::hint::black_box(presets::cluster_c(8));
     });
-    bench("target_pattern (Eq.7 + repair)", &mut || {
+    bench(&mut t, &mut payload, "target_pattern (Eq.7 + repair)", &mut || {
         std::hint::black_box(target_pattern(&topo64, &prob));
     });
-    bench("penalty_weights (Eq.8)", &mut || {
+    bench(&mut t, &mut payload, "penalty_weights (Eq.8)", &mut || {
         std::hint::black_box(penalty_weights(&tp.c, Norm::L1));
     });
-    bench("proportional_caps", &mut || {
+    bench(&mut t, &mut payload, "proportional_caps", &mut || {
         std::hint::black_box(proportional_caps(&tp.c, 12_288));
     });
-    bench("contention exchange_time", &mut || {
-        std::hint::black_box(CostEngine::contention(&topo64).exchange_time(&bytes));
-    });
-    bench("step_cost (per-step sim)", &mut || {
+    {
+        // the per-step pricing path: engine constructed once, zero-alloc after
+        let mut eng = CostEngine::contention(&topo64);
+        bench(&mut t, &mut payload, "contention exchange_time (P=64)", &mut || {
+            std::hint::black_box(eng.exchange_time(&bytes));
+        });
+    }
+    bench(&mut t, &mut payload, "step_cost direct (per-step sim)", &mut || {
         std::hint::black_box(step_cost(
             &shape,
             &topo64,
@@ -83,13 +102,62 @@ fn main() {
             A2aAlgo::Direct,
         ));
     });
-    bench("bvn_schedule synthesis (P=64)", &mut || {
+    let bvn = A2aAlgo::Scheduled(ScheduleKind::Bvn);
+    bench(&mut t, &mut payload, "step_cost sched:bvn (cold)", &mut || {
+        std::hint::black_box(step_cost(&shape, &topo64, &counts, 1, device_flops('C'), bvn));
+    });
+    {
+        let mut cache = PlanCache::new(PLAN_CACHE_TOL);
+        step_cost_cached(&shape, &topo64, &counts, 1, device_flops('C'), bvn, &mut cache);
+        bench(&mut t, &mut payload, "step_cost sched:bvn (cache hit)", &mut || {
+            std::hint::black_box(step_cost_cached(
+                &shape,
+                &topo64,
+                &counts,
+                1,
+                device_flops('C'),
+                bvn,
+                &mut cache,
+            ));
+        });
+        assert_eq!(cache.misses(), 1, "warm loop must stay on the hit path");
+    }
+    bench(&mut t, &mut payload, "bvn_schedule synthesis (P=64)", &mut || {
         std::hint::black_box(bvn_schedule(&topo64, &bytes));
     });
+
+    // asymptotic visibility: the per-step and per-topology paths across P
+    for nodes in [2usize, 4, 8, 16] {
+        let p = nodes * 8;
+        let topo = presets::cluster_c(nodes);
+        let sweep_bytes = target_pattern(&topo, &prob).bytes_matrix();
+        {
+            let mut eng = CostEngine::contention(&topo);
+            bench(&mut t, &mut payload, &format!("exchange_time P={p}"), &mut || {
+                std::hint::black_box(eng.exchange_time(&sweep_bytes));
+            });
+        }
+        bench(&mut t, &mut payload, &format!("bvn_schedule P={p}"), &mut || {
+            std::hint::black_box(bvn_schedule(&topo, &sweep_bytes));
+        });
+    }
+
+    // sanity: the cached and cold step costs price identically
+    {
+        let mut cache = PlanCache::new(PLAN_CACHE_TOL);
+        let cold = step_cost(&shape, &topo64, &counts, 1, device_flops('C'), bvn);
+        step_cost_cached(&shape, &topo64, &counts, 1, device_flops('C'), bvn, &mut cache);
+        let hit =
+            step_cost_cached(&shape, &topo64, &counts, 1, device_flops('C'), bvn, &mut cache);
+        assert_eq!(hit.a2a_s, cold.a2a_s, "cache hit must reproduce the cold price");
+    }
+
     t.print();
     println!(
         "\nper-step paths (step_cost, exchange_time) must stay far below the\n\
-         XLA step wall time (~ms); per-topology paths (solver) below 10ms."
+         XLA step wall time (~ms); per-topology paths (bvn_schedule) below 10ms.\n\
+         Budgets + history: EXPERIMENTS.md §Perf{}",
+        if quick { "  [quick mode]" } else { "" }
     );
     record_jsonl("solver_hotpath", &Json::Obj(payload));
 }

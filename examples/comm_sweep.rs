@@ -38,7 +38,7 @@ fn main() {
 
     for (name, topo) in &topologies {
         println!("\n== {name}: P={}, nodes={} ==", topo.p(), topo.n_nodes());
-        let eng = CostEngine::contention(topo);
+        let mut eng = CostEngine::contention(topo);
         let mut t = Table::new(&["MB/rank", "even", "target (Eq.7)", "speedup"]);
         for mb in [1.0, 8.0, 32.0, 128.0] {
             let bytes = mb * 1024.0 * 1024.0;

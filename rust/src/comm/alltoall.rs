@@ -34,15 +34,14 @@ pub fn hierarchical_a2a_time(topo: &Topology, bytes: &Mat) -> HierBreakdown {
     let p = topo.p();
     assert_eq!((bytes.rows(), bytes.cols()), (p, p));
     let nodes = topo.nodes();
+    let mut eng = CostEngine::contention(topo);
     if nodes.len() <= 1 {
-        let eng = CostEngine::contention(topo);
         return HierBreakdown {
             intra_gather: 0.0,
             inter: eng.exchange_time(bytes),
             intra_scatter: 0.0,
         };
     }
-    let eng = CostEngine::contention(topo);
 
     // Phase 1: within each node, device d hands the data destined for node
     // r to the local rank aligned with r (r-th device of the node, mod

@@ -1,8 +1,23 @@
 //! The core cost engine: price a P×P byte matrix under an exchange model.
+//!
+//! Pricing runs on the coordinator's per-step hot path (DESIGN.md §perf),
+//! so the engine owns all of its scratch state: a dense directed-link flow
+//! census indexed by the topology's flat incidence table (`2*edge + dir`
+//! slots), a touched-slot list for O(flows) resets, and a reusable P×P
+//! output matrix (sized on the first [`CostEngine::pair_times`] call, so
+//! round-only pricing never pays for it). After construction plus that
+//! one-time sizing, [`CostEngine::pair_times`],
+//! [`CostEngine::exchange_time`], and [`CostEngine::round_time`] perform
+//! no heap allocation. A naive `HashMap`-census oracle lives in
+//! `rust/tests/prop_comm_oracle.rs` and pins these paths to 1e-12.
+//!
+//! Self pairs are local copies that overlap the network phase under every
+//! model: only a copy slower than the network phase exposes its excess
+//! (the same convention round-based pricing has always used, so
+//! `exchange_time` and `round_time` now agree on who can gate).
 
 use crate::topology::Topology;
 use crate::util::Mat;
-use std::collections::HashMap;
 
 /// How concurrent peer-to-peer deliveries interact (see module docs).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -12,15 +27,74 @@ pub enum ExchangeModel {
     Contention,
 }
 
-/// Prices exchanges on one topology. Cheap to construct; borrow-only.
+/// Add one delivery's directed-link flows to a dense census.
+#[inline]
+pub(crate) fn census_add(topo: &Topology, census: &mut [u32], i: usize, j: usize) {
+    for &s in topo.pair_slots(i, j) {
+        census[s as usize] += 1;
+    }
+}
+
+/// Remove one delivery's directed-link flows from a dense census.
+#[inline]
+pub(crate) fn census_sub(topo: &Topology, census: &mut [u32], i: usize, j: usize) {
+    for &s in topo.pair_slots(i, j) {
+        census[s as usize] -= 1;
+    }
+}
+
+/// One delivery's time under a dense flow census: α accumulates along the
+/// path, the slowest hop's β is inflated by its concurrent flows
+/// (non-blocking point-to-point links never contend).
+#[inline]
+pub(crate) fn contended_time(
+    topo: &Topology,
+    census: &[u32],
+    i: usize,
+    j: usize,
+    bytes: f64,
+) -> f64 {
+    let mut alpha = 0.0;
+    let mut slow: f64 = 0.0;
+    for &s in topo.pair_slots(i, j) {
+        let s = s as usize;
+        let flows = if topo.slot_contended[s] { census[s] as f64 } else { 1.0 };
+        alpha += topo.slot_alpha[s];
+        slow = slow.max(topo.slot_beta[s] * flows);
+    }
+    alpha + slow * bytes
+}
+
+/// Prices exchanges on one topology. Construction allocates the scratch
+/// census/output buffers once; every pricing call after that is
+/// allocation-free.
 pub struct CostEngine<'a> {
     topo: &'a Topology,
     model: ExchangeModel,
+    /// Dense flow census, indexed by directed-link slot.
+    census: Vec<u32>,
+    /// Slots with non-zero census, for O(flows) resets.
+    touched: Vec<u32>,
+    /// Reusable P×P output of [`CostEngine::pair_times`], sized lazily on
+    /// first use so round-only pricing (`scheduled_phase_times`, the
+    /// `PlanCache` hit path) never allocates it.
+    times: Mat,
+    /// Per-sender accumulator for the serial model's round pricing.
+    per_sender: Vec<f64>,
 }
 
 impl<'a> CostEngine<'a> {
     pub fn new(topo: &'a Topology, model: ExchangeModel) -> Self {
-        CostEngine { topo, model }
+        let p = topo.p();
+        let n_slots = topo.n_slots();
+        CostEngine {
+            topo,
+            model,
+            census: vec![0; n_slots],
+            touched: Vec::with_capacity(n_slots),
+            times: Mat::zeros(0, 0),
+            per_sender: vec![0.0; p],
+        }
     }
 
     pub fn slowest_pair(topo: &'a Topology) -> Self {
@@ -44,35 +118,110 @@ impl<'a> CostEngine<'a> {
         self.topo.alpha(i, j) + self.topo.beta(i, j) * bytes
     }
 
-    /// Per-pair delivery times for a full exchange under the engine's
-    /// model. Zero-byte pairs cost 0 (no message sent).
-    pub fn pair_times(&self, bytes: &Mat) -> Mat {
-        let p = self.topo.p();
-        assert_eq!((bytes.rows(), bytes.cols()), (p, p), "byte matrix shape");
-        match self.model {
-            ExchangeModel::SlowestPair | ExchangeModel::PerSenderSerial => {
-                Mat::from_fn(p, p, |i, j| {
-                    let b = bytes.get(i, j);
-                    if b <= 0.0 {
-                        0.0
-                    } else {
-                        self.pair_time(i, j, b)
-                    }
-                })
+    /// Count `(i, j)`'s flows into the scratch census, tracking touched
+    /// slots so the reset is O(flows), not O(links).
+    #[inline]
+    fn census_insert(&mut self, i: usize, j: usize) {
+        let topo = self.topo;
+        for &s in topo.pair_slots(i, j) {
+            let s = s as usize;
+            if self.census[s] == 0 {
+                self.touched.push(s as u32);
             }
-            ExchangeModel::Contention => self.contention_pair_times(bytes),
+            self.census[s] += 1;
         }
     }
 
-    /// Completion time of the whole exchange under the engine's model.
-    pub fn exchange_time(&self, bytes: &Mat) -> f64 {
-        let times = self.pair_times(bytes);
-        match self.model {
-            ExchangeModel::SlowestPair | ExchangeModel::Contention => times.max().max(0.0),
-            ExchangeModel::PerSenderSerial => (0..times.rows())
-                .map(|i| times.row(i).iter().sum::<f64>())
-                .fold(0.0, f64::max),
+    #[inline]
+    fn census_clear(&mut self) {
+        for &s in &self.touched {
+            self.census[s as usize] = 0;
         }
+        self.touched.clear();
+    }
+
+    /// Per-pair delivery times for a full exchange under the engine's
+    /// model, written into the engine's reusable output matrix. Zero-byte
+    /// pairs cost 0 (no message sent).
+    pub fn pair_times(&mut self, bytes: &Mat) -> &Mat {
+        let p = self.topo.p();
+        assert_eq!((bytes.rows(), bytes.cols()), (p, p), "byte matrix shape");
+        if self.times.rows() != p {
+            self.times = Mat::zeros(p, p); // first use only
+        }
+        match self.model {
+            ExchangeModel::SlowestPair | ExchangeModel::PerSenderSerial => {
+                for i in 0..p {
+                    for j in 0..p {
+                        let b = bytes.get(i, j);
+                        let t = if b <= 0.0 { 0.0 } else { self.pair_time(i, j, b) };
+                        self.times.set(i, j, t);
+                    }
+                }
+            }
+            ExchangeModel::Contention => {
+                for i in 0..p {
+                    for j in 0..p {
+                        if i != j && bytes.get(i, j) > 0.0 {
+                            self.census_insert(i, j);
+                        }
+                    }
+                }
+                for i in 0..p {
+                    for j in 0..p {
+                        let b = bytes.get(i, j);
+                        let t = if b <= 0.0 {
+                            0.0
+                        } else if i == j {
+                            self.pair_time(i, i, b)
+                        } else {
+                            contended_time(self.topo, &self.census, i, j, b)
+                        };
+                        self.times.set(i, j, t);
+                    }
+                }
+                self.census_clear();
+            }
+        }
+        &self.times
+    }
+
+    /// Completion time of the whole exchange under the engine's model.
+    /// Self pairs are overlapped local copies: the network phase is gated
+    /// by cross-device deliveries only, and a copy contributes just its
+    /// excess over that phase (the round-time convention).
+    pub fn exchange_time(&mut self, bytes: &Mat) -> f64 {
+        let p = self.topo.p();
+        self.pair_times(bytes);
+        let mut net: f64 = 0.0;
+        let mut copy: f64 = 0.0;
+        match self.model {
+            ExchangeModel::SlowestPair | ExchangeModel::Contention => {
+                for i in 0..p {
+                    for j in 0..p {
+                        let t = self.times.get(i, j);
+                        if i == j {
+                            copy = copy.max(t);
+                        } else {
+                            net = net.max(t);
+                        }
+                    }
+                }
+            }
+            ExchangeModel::PerSenderSerial => {
+                for i in 0..p {
+                    let mut row = 0.0;
+                    for j in 0..p {
+                        if i != j {
+                            row += self.times.get(i, j);
+                        }
+                    }
+                    net = net.max(row);
+                    copy = copy.max(self.times.get(i, i));
+                }
+            }
+        }
+        net + (copy - net).max(0.0)
     }
 
     /// Completion time of one synchronised round consisting of the given
@@ -80,7 +229,7 @@ impl<'a> CostEngine<'a> {
     /// copies that overlap with the network and never gate a round, so
     /// they are skipped here (callers price them separately). Returns 0.0
     /// for an effectively-empty round — an empty round costs nothing.
-    pub fn round_time(&self, bytes: &Mat, round: &[(usize, usize)]) -> f64 {
+    pub fn round_time(&mut self, bytes: &Mat, round: &[(usize, usize)]) -> f64 {
         let p = self.topo.p();
         assert_eq!((bytes.rows(), bytes.cols()), (p, p), "byte matrix shape");
         let live = |&&(i, j): &&(usize, usize)| i != j && bytes.get(i, j) > 0.0;
@@ -91,81 +240,27 @@ impl<'a> CostEngine<'a> {
                 .map(|&(i, j)| self.pair_time(i, j, bytes.get(i, j)))
                 .fold(0.0, f64::max),
             ExchangeModel::PerSenderSerial => {
-                let mut per_sender = vec![0.0; p];
-                for &(i, j) in round.iter().filter(live) {
-                    per_sender[i] += self.pair_time(i, j, bytes.get(i, j));
+                for v in &mut self.per_sender {
+                    *v = 0.0;
                 }
-                per_sender.into_iter().fold(0.0, f64::max)
+                for &(i, j) in round.iter().filter(live) {
+                    let t = self.pair_time(i, j, bytes.get(i, j));
+                    self.per_sender[i] += t;
+                }
+                self.per_sender.iter().copied().fold(0.0, f64::max)
             }
             ExchangeModel::Contention => {
-                let load = self.link_load(round.iter().filter(live).copied());
-                round
-                    .iter()
-                    .filter(live)
-                    .map(|&(i, j)| self.contended_pair_time(&load, i, j, bytes.get(i, j)))
-                    .fold(0.0, f64::max)
+                for &(i, j) in round.iter().filter(live) {
+                    self.census_insert(i, j);
+                }
+                let mut t: f64 = 0.0;
+                for &(i, j) in round.iter().filter(live) {
+                    t = t.max(contended_time(self.topo, &self.census, i, j, bytes.get(i, j)));
+                }
+                self.census_clear();
+                t
             }
         }
-    }
-
-    /// Flows per directed physical link across the given deliveries.
-    fn link_load(
-        &self,
-        pairs: impl Iterator<Item = (usize, usize)>,
-    ) -> HashMap<(usize, bool), usize> {
-        let mut load = HashMap::new();
-        for (i, j) in pairs {
-            for dl in self.topo.path(i, j) {
-                *load.entry((dl.edge, dl.up)).or_insert(0) += 1;
-            }
-        }
-        load
-    }
-
-    /// One delivery's time under a flow census: α accumulates along the
-    /// path, the slowest hop's β is inflated by its concurrent flows
-    /// (non-blocking point-to-point links never contend).
-    fn contended_pair_time(
-        &self,
-        load: &HashMap<(usize, bool), usize>,
-        i: usize,
-        j: usize,
-        bytes: f64,
-    ) -> f64 {
-        let links = self.topo.links();
-        let mut alpha = 0.0;
-        let mut slow: f64 = 0.0;
-        for dl in self.topo.path(i, j) {
-            let flows = if self.topo.link_contended(dl.edge) {
-                load[&(dl.edge, dl.up)] as f64
-            } else {
-                1.0
-            };
-            alpha += links[dl.edge].alpha;
-            slow = slow.max(links[dl.edge].beta * flows);
-        }
-        alpha + slow * bytes
-    }
-
-    /// Contention pricing: each flow crosses its link path with β inflated
-    /// by the number of concurrent flows using that (link, direction).
-    fn contention_pair_times(&self, bytes: &Mat) -> Mat {
-        let p = self.topo.p();
-        let load = self.link_load(
-            (0..p)
-                .flat_map(|i| (0..p).map(move |j| (i, j)))
-                .filter(|&(i, j)| i != j && bytes.get(i, j) > 0.0),
-        );
-        Mat::from_fn(p, p, |i, j| {
-            let b = bytes.get(i, j);
-            if b <= 0.0 {
-                return 0.0;
-            }
-            if i == j {
-                return self.pair_time(i, i, b);
-            }
-            self.contended_pair_time(&load, i, j, b)
-        })
     }
 }
 
@@ -185,7 +280,7 @@ mod tests {
     #[test]
     fn slowest_pair_is_max_alpha_beta() {
         let t = tree22();
-        let eng = CostEngine::slowest_pair(&t);
+        let mut eng = CostEngine::slowest_pair(&t);
         let bytes = Mat::filled(4, 4, 1e6);
         let want = t.alpha(0, 2) + t.beta(0, 2) * 1e6;
         assert!((eng.exchange_time(&bytes) - want).abs() < 1e-12);
@@ -194,7 +289,7 @@ mod tests {
     #[test]
     fn zero_bytes_cost_nothing() {
         let t = tree22();
-        for eng in [
+        for mut eng in [
             CostEngine::slowest_pair(&t),
             CostEngine::per_sender(&t),
             CostEngine::contention(&t),
@@ -206,18 +301,20 @@ mod tests {
     #[test]
     fn per_sender_serialises_row() {
         let t = tree22();
-        let eng = CostEngine::per_sender(&t);
+        let mut eng = CostEngine::per_sender(&t);
         let bytes = Mat::filled(4, 4, 1e6);
-        let row: f64 = (0..4).map(|j| eng.pair_time(0, j, 1e6)).sum();
+        // the serial phase is the cross-device sends; the local copy
+        // overlaps it and is far faster here, so it exposes nothing
+        let row: f64 = (1..4).map(|j| eng.pair_time(0, j, 1e6)).sum();
         assert!((eng.exchange_time(&bytes) - row).abs() / row < 1e-9);
     }
 
     #[test]
     fn contention_inflates_shared_uplinks() {
         let t = tree22();
-        let eng = CostEngine::contention(&t);
+        let mut eng = CostEngine::contention(&t);
         let full = Mat::filled(4, 4, 1e6);
-        let times = eng.pair_times(&full);
+        let times = eng.pair_times(&full).clone();
         // cross-node flow shares the uplink with 3 other upward flows
         let isolated = eng.pair_time(0, 2, 1e6) - t.alpha(0, 2);
         let contended = times.get(0, 2) - t.alpha(0, 2);
@@ -231,7 +328,7 @@ mod tests {
     #[test]
     fn removing_flows_reduces_contention() {
         let t = tree22();
-        let eng = CostEngine::contention(&t);
+        let mut eng = CostEngine::contention(&t);
         let full = Mat::filled(4, 4, 1e6);
         // only one cross-node flow: 0→2
         let mut sparse = Mat::zeros(4, 4);
@@ -244,10 +341,88 @@ mod tests {
     #[test]
     fn local_traffic_never_contends() {
         let t = tree22();
-        let eng = CostEngine::contention(&t);
+        let mut eng = CostEngine::contention(&t);
         let full = Mat::filled(4, 4, 1e6);
         let want = eng.pair_time(0, 0, 1e6);
         assert!((eng.pair_times(&full).get(0, 0) - want).abs() < 1e-15);
+    }
+
+    #[test]
+    fn repeated_calls_reuse_scratch_exactly() {
+        // the census/touched scratch must reset fully between calls: a
+        // dense exchange priced after a sparse one (and vice versa) must
+        // match a fresh engine bit-for-bit
+        let t = tree22();
+        let full = Mat::filled(4, 4, 2e6);
+        let mut sparse = Mat::zeros(4, 4);
+        sparse.set(0, 2, 2e6);
+        sparse.set(3, 1, 5e5);
+        for model in [
+            ExchangeModel::SlowestPair,
+            ExchangeModel::PerSenderSerial,
+            ExchangeModel::Contention,
+        ] {
+            let mut reused = CostEngine::new(&t, model);
+            let warm = [
+                reused.exchange_time(&full),
+                reused.exchange_time(&sparse),
+                reused.exchange_time(&full),
+                reused.round_time(&full, &[(0, 2), (1, 3)]),
+            ];
+            let cold = [
+                CostEngine::new(&t, model).exchange_time(&full),
+                CostEngine::new(&t, model).exchange_time(&sparse),
+                CostEngine::new(&t, model).exchange_time(&full),
+                CostEngine::new(&t, model).round_time(&full, &[(0, 2), (1, 3)]),
+            ];
+            assert_eq!(warm, cold, "{model:?}");
+        }
+    }
+
+    #[test]
+    fn self_copies_overlap_the_network_phase() {
+        // regression (self-pair convention): a slow local copy no longer
+        // gates the whole exchange — under every model only its excess
+        // over the network phase is exposed, exactly as round-based
+        // pricing has always treated self pairs
+        let t = tree22();
+        let mut bytes = Mat::filled(4, 4, 1e6);
+        bytes.set(0, 0, 1e11); // pathologically slow local copy
+        let mut no_self = bytes.clone();
+        for i in 0..4 {
+            no_self.set(i, i, 0.0);
+        }
+        for model in [
+            ExchangeModel::SlowestPair,
+            ExchangeModel::PerSenderSerial,
+            ExchangeModel::Contention,
+        ] {
+            let mut eng = CostEngine::new(&t, model);
+            let copy = eng.pair_time(0, 0, 1e11);
+            let net = eng.exchange_time(&no_self);
+            let full = eng.exchange_time(&bytes);
+            let want = net + (copy - net).max(0.0);
+            assert!(
+                (full - want).abs() <= 1e-12 * want,
+                "{model:?}: {full} != {want}"
+            );
+            // here the copy dominates, so it is the exchange time …
+            assert!(copy > net && (full - copy).abs() <= 1e-12 * copy, "{model:?}");
+            // … but a fast copy exposes nothing
+            let fast = eng.exchange_time(&Mat::filled(4, 4, 1e6));
+            let net_only = eng.exchange_time(&no_self_of(&Mat::filled(4, 4, 1e6)));
+            assert!((fast - net_only).abs() <= 1e-12 * fast, "{model:?}");
+            // round_time still skips self pairs entirely
+            assert_eq!(eng.round_time(&bytes, &[(0, 0)]), 0.0, "{model:?}");
+        }
+    }
+
+    fn no_self_of(m: &Mat) -> Mat {
+        let mut out = m.clone();
+        for i in 0..m.rows() {
+            out.set(i, i, 0.0);
+        }
+        out
     }
 
     #[test]
@@ -260,7 +435,7 @@ mod tests {
     #[test]
     fn round_time_prices_only_the_given_deliveries() {
         let t = tree22();
-        let eng = CostEngine::contention(&t);
+        let mut eng = CostEngine::contention(&t);
         let bytes = Mat::filled(4, 4, 1e6);
         // a single cross-node delivery is priced at its isolated time
         let single = eng.round_time(&bytes, &[(0, 2)]);

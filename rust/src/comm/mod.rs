@@ -36,7 +36,7 @@ mod schedules;
 pub use allreduce::ring_allreduce_time;
 pub use alltoall::{hierarchical_a2a_time, HierBreakdown};
 pub use engine::{CostEngine, ExchangeModel};
-pub use plan::{bvn_schedule, A2aAlgo, A2aBreakdown, CommPlan, ScheduleKind};
+pub use plan::{bvn_schedule, price_rounds, A2aAlgo, A2aBreakdown, CommPlan, ScheduleKind};
 pub use profile::{profile_exchange, ExchangeProfile};
 pub use schedules::{
     rotation_schedule, scheduled_a2a_time, validate_schedule, xor_schedule, Round,
@@ -66,7 +66,7 @@ mod tests {
                 total / 8.0
             }
         });
-        let eng = CostEngine::contention(&topo);
+        let mut eng = CostEngine::contention(&topo);
         let t_even = eng.exchange_time(&even);
         let t_uneven = eng.exchange_time(&uneven);
         let speedup = t_even / t_uneven;

@@ -41,7 +41,7 @@
 //!    rounds, so a real runtime can start local traffic while NICs drain.
 
 use super::alltoall::hierarchical_a2a_time;
-use super::engine::CostEngine;
+use super::engine::{census_add, census_sub, contended_time, CostEngine};
 use super::schedules::{rotation_schedule, scheduled_a2a_time, xor_schedule, Round};
 use crate::topology::Topology;
 use crate::util::Mat;
@@ -112,29 +112,36 @@ impl A2aAlgo {
     pub fn plan(&self, topo: &Topology, bytes: &Mat) -> CommPlan {
         let p = topo.p();
         assert_eq!((bytes.rows(), bytes.cols()), (p, p), "byte matrix shape");
-        let eng = CostEngine::contention(topo);
         match self {
             A2aAlgo::Direct => {
+                let mut eng = CostEngine::contention(topo);
                 let times = eng.pair_times(bytes);
-                let mut b = A2aBreakdown::default();
-                // concurrent execution: the whole exchange takes as long as
-                // its gating delivery, attributed to that delivery's class
-                let (mut gi, mut gj, mut t) = (0, 0, 0.0);
+                // concurrent execution: the network phase takes as long as
+                // its gating cross-device delivery, attributed to that
+                // delivery's class; self-copies overlap the phase and only
+                // their excess is exposed (the round-time convention)
+                let (mut gi, mut gj, mut net) = (0, 0, 0.0);
+                let mut copy: f64 = 0.0;
                 for i in 0..p {
                     for j in 0..p {
-                        if times.get(i, j) > t {
-                            t = times.get(i, j);
+                        let t = times.get(i, j);
+                        if i == j {
+                            copy = copy.max(t);
+                        } else if t > net {
+                            net = t;
                             (gi, gj) = (i, j);
                         }
                     }
                 }
-                if gi == gj {
-                    b.local_s = t;
-                } else if topo.same_node(gi, gj) {
-                    b.intra_s = t;
-                } else {
-                    b.inter_s = t;
+                let mut b = A2aBreakdown::default();
+                if net > 0.0 {
+                    if topo.same_node(gi, gj) {
+                        b.intra_s = net;
+                    } else {
+                        b.inter_s = net;
+                    }
                 }
+                b.local_s = (copy - net).max(0.0);
                 CommPlan { algo: *self, rounds: None, breakdown: b }
             }
             A2aAlgo::Hierarchical => {
@@ -243,6 +250,17 @@ impl CommPlan {
     pub fn total_s(&self) -> f64 {
         self.breakdown.total()
     }
+}
+
+/// Price an already-synthesised round schedule on (possibly different)
+/// bytes. This is the `PlanCache` hit path: schedule *synthesis* is the
+/// expensive part of [`bvn_schedule`], while pricing a given schedule is
+/// cheap — so a cached plan's rounds are always re-priced on the live byte
+/// matrix and never serve stale times.
+pub fn price_rounds(topo: &Topology, bytes: &Mat, rounds: &[Round]) -> A2aBreakdown {
+    let (local_s, intra_s, inter_s) =
+        super::schedules::scheduled_phase_times(topo, bytes, rounds);
+    A2aBreakdown { local_s, intra_s, inter_s }
 }
 
 // ---------------------------------------------------------------------------
@@ -417,44 +435,159 @@ fn alternating_components(a: &Round, b: &Round, p: usize) -> Vec<Component> {
     comps
 }
 
+/// A round under refinement: its pairs, the dense directed-link census of
+/// its live deliveries, and its current contention price. Maintaining the
+/// census incrementally is what makes a candidate flip O(component +
+/// round) instead of two from-scratch round re-pricings through a
+/// `HashMap` link census.
+struct RoundState {
+    pairs: Round,
+    census: Vec<u32>,
+    cost: f64,
+}
+
+/// Max contended delivery time of `pairs` under `census`, with an early
+/// exit: once the running max reaches `bound` the true cost can only be
+/// ≥ `bound`, which is enough to reject a candidate flip against the
+/// gating-delivery budget — the partial max is returned immediately.
+fn round_cost(
+    topo: &Topology,
+    bytes: &Mat,
+    census: &[u32],
+    pairs: impl Iterator<Item = (usize, usize)>,
+    bound: f64,
+) -> f64 {
+    let mut t: f64 = 0.0;
+    for (i, j) in pairs {
+        if i == j {
+            continue;
+        }
+        let b = bytes.get(i, j);
+        if b <= 0.0 {
+            continue;
+        }
+        t = t.max(contended_time(topo, census, i, j, b));
+        if t >= bound {
+            return t;
+        }
+    }
+    t
+}
+
+/// Disjoint mutable references to two slots of a slice.
+fn two_mut<T>(v: &mut [T], a: usize, b: usize) -> (&mut T, &mut T) {
+    debug_assert_ne!(a, b);
+    if a < b {
+        let (l, r) = v.split_at_mut(b);
+        (&mut l[a], &mut r[0])
+    } else {
+        let (l, r) = v.split_at_mut(a);
+        (&mut r[0], &mut l[b])
+    }
+}
+
 /// Kempe-style local search: flip alternating components between the most
 /// expensive round and a cheaper one whenever the priced cost drops.
 /// Monotone non-increasing, so a rotation seed never gets worse.
+///
+/// The inner loop is incremental: each round keeps a live link census,
+/// candidate flips apply the component's census delta, price the two new
+/// rounds with an early-exit bound at the pair's combined budget, and
+/// revert the delta on rejection — no per-candidate allocation and no
+/// from-scratch re-pricing. Accept/reject decisions (and therefore the
+/// emitted schedule) are identical to the from-scratch formulation.
 fn refine_rounds(topo: &Topology, bytes: &Mat, mut rounds: Vec<Round>) -> Vec<Round> {
     let p = topo.p();
-    let eng = CostEngine::contention(topo);
     rounds.retain(|r| r.iter().any(|&(i, j)| i != j));
-    let mut costs: Vec<f64> = rounds.iter().map(|r| eng.round_time(bytes, r)).collect();
+    let n_slots = topo.n_slots();
+    let live = |i: usize, j: usize| i != j && bytes.get(i, j) > 0.0;
+
+    let mut states: Vec<RoundState> = rounds
+        .into_iter()
+        .map(|pairs| {
+            let mut census = vec![0u32; n_slots];
+            for &(i, j) in pairs.iter().filter(|&&(i, j)| live(i, j)) {
+                census_add(topo, &mut census, i, j);
+            }
+            let cost =
+                round_cost(topo, bytes, &census, pairs.iter().copied(), f64::INFINITY);
+            RoundState { pairs, census, cost }
+        })
+        .collect();
+
     for _ in 0..REFINE_SWEEPS {
-        let Some(a) = (0..costs.len()).max_by(|&x, &y| costs[x].total_cmp(&costs[y])) else {
+        let Some(a) =
+            (0..states.len()).max_by(|&x, &y| states[x].cost.total_cmp(&states[y].cost))
+        else {
             break;
         };
-        if costs[a] <= 0.0 {
+        if states[a].cost <= 0.0 {
             break;
         }
-        let mut order: Vec<usize> = (0..rounds.len()).filter(|&k| k != a).collect();
-        order.sort_by(|&x, &y| costs[x].total_cmp(&costs[y]));
+        let mut order: Vec<usize> = (0..states.len()).filter(|&k| k != a).collect();
+        order.sort_by(|&x, &y| states[x].cost.total_cmp(&states[y].cost));
         let mut improved = false;
         for &b in &order {
-            for comp in alternating_components(&rounds[a], &rounds[b], p) {
-                let (ca, cb) = (comp.from_a, comp.from_b);
+            // components own their pairs, so earlier flips don't invalidate
+            // later ones (distinct components are disjoint and compose)
+            let comps = alternating_components(&states[a].pairs, &states[b].pairs, p);
+            for comp in comps {
+                let (ca, cb) = (&comp.from_a, &comp.from_b);
                 if ca.is_empty() && cb.is_empty() {
                     continue;
                 }
-                let mut new_a: Round =
-                    rounds[a].iter().copied().filter(|pr| !ca.contains(pr)).collect();
-                new_a.extend(cb.iter().copied());
-                let mut new_b: Round =
-                    rounds[b].iter().copied().filter(|pr| !cb.contains(pr)).collect();
-                new_b.extend(ca.iter().copied());
-                let c_na = eng.round_time(bytes, &new_a);
-                let c_nb = eng.round_time(bytes, &new_b);
-                if c_na + c_nb < (costs[a] + costs[b]) * (1.0 - 1e-12) {
-                    rounds[a] = new_a;
-                    rounds[b] = new_b;
-                    costs[a] = c_na;
-                    costs[b] = c_nb;
+                let (sa, sb) = two_mut(&mut states, a, b);
+                let budget = sa.cost + sb.cost;
+                // apply the candidate flip's census delta
+                for &(i, j) in ca.iter().filter(|&&(i, j)| live(i, j)) {
+                    census_sub(topo, &mut sa.census, i, j);
+                    census_add(topo, &mut sb.census, i, j);
+                }
+                for &(i, j) in cb.iter().filter(|&&(i, j)| live(i, j)) {
+                    census_sub(topo, &mut sb.census, i, j);
+                    census_add(topo, &mut sa.census, i, j);
+                }
+                let c_na = round_cost(
+                    topo,
+                    bytes,
+                    &sa.census,
+                    sa.pairs.iter().copied().filter(|pr| !ca.contains(pr)).chain(
+                        cb.iter().copied(),
+                    ),
+                    budget,
+                );
+                let c_nb = if c_na < budget {
+                    round_cost(
+                        topo,
+                        bytes,
+                        &sb.census,
+                        sb.pairs.iter().copied().filter(|pr| !cb.contains(pr)).chain(
+                            ca.iter().copied(),
+                        ),
+                        budget - c_na,
+                    )
+                } else {
+                    f64::INFINITY
+                };
+                if c_na + c_nb < budget * (1.0 - 1e-12) {
+                    // commit: move the component's deliveries between rounds
+                    sa.pairs.retain(|pr| !ca.contains(pr));
+                    sa.pairs.extend(cb.iter().copied());
+                    sb.pairs.retain(|pr| !cb.contains(pr));
+                    sb.pairs.extend(ca.iter().copied());
+                    sa.cost = c_na;
+                    sb.cost = c_nb;
                     improved = true;
+                } else {
+                    // revert the census delta
+                    for &(i, j) in ca.iter().filter(|&&(i, j)| live(i, j)) {
+                        census_add(topo, &mut sa.census, i, j);
+                        census_sub(topo, &mut sb.census, i, j);
+                    }
+                    for &(i, j) in cb.iter().filter(|&&(i, j)| live(i, j)) {
+                        census_add(topo, &mut sb.census, i, j);
+                        census_sub(topo, &mut sa.census, i, j);
+                    }
                 }
             }
             if improved {
@@ -465,8 +598,11 @@ fn refine_rounds(topo: &Topology, bytes: &Mat, mut rounds: Vec<Round>) -> Vec<Ro
             break;
         }
     }
-    rounds.retain(|r| !r.is_empty());
-    rounds
+    states
+        .into_iter()
+        .map(|s| s.pairs)
+        .filter(|r| !r.is_empty())
+        .collect()
 }
 
 #[cfg(test)]

@@ -33,14 +33,16 @@ pub fn profile_exchange(topo: &Topology, bytes_per_rank: f64, ratios: &Mat) -> E
         assert!((s - 1.0).abs() < 1e-6, "ratio row {i} sums to {s}");
     }
     let bytes = ratios.scale(bytes_per_rank);
-    let eng = CostEngine::contention(topo);
-    let times = eng.pair_times(&bytes);
-    let rank0_times: Vec<f64> = (0..p).map(|j| times.get(0, j)).collect();
+    let mut eng = CostEngine::contention(topo);
+    let rank0_times: Vec<f64> = {
+        let times = eng.pair_times(&bytes);
+        (0..p).map(|j| times.get(0, j)).collect()
+    };
     ExchangeProfile {
         rank0_total: rank0_times.iter().sum(),
+        completion: eng.exchange_time(&bytes),
         rank0_times,
         rank0_ratios: ratios.row(0).to_vec(),
-        completion: eng.exchange_time(&bytes),
     }
 }
 

@@ -101,7 +101,7 @@ pub(super) fn scheduled_phase_times(
 ) -> (f64, f64, f64) {
     let p = topo.p();
     assert_eq!((bytes.rows(), bytes.cols()), (p, p));
-    let eng = CostEngine::contention(topo);
+    let mut eng = CostEngine::contention(topo);
     let mut intra = 0.0;
     let mut inter = 0.0;
     let mut local: f64 = 0.0;
@@ -258,7 +258,7 @@ mod tests {
         let conc = CostEngine::contention(&topo).pair_times(&bytes).get(0, 2);
         let round: Round = vec![(0, 2), (1, 3)]; // wait: shares the uplink
         let single: Round = vec![(0, 2)];
-        let eng = CostEngine::contention(&topo);
+        let mut eng = CostEngine::contention(&topo);
         let mut rb = Mat::zeros(4, 4);
         for &(i, j) in &single {
             rb.set(i, j, bytes.get(i, j));
@@ -305,7 +305,7 @@ mod tests {
         for i in 0..4 {
             self_only.set(i, i, 32e6);
         }
-        let eng = CostEngine::contention(&topo);
+        let eng = CostEngine::contention(&topo); // pair_time only (&self)
         let want = (0..4)
             .map(|i| eng.pair_time(i, i, 32e6))
             .fold(0.0, f64::max);

@@ -17,7 +17,7 @@
 //! Expert compute is bottlenecked by the most-loaded device (the paper's
 //! load-imbalance effect): `max_j Σ_{e on j} Σ_i c_ie`.
 
-use crate::comm::{ring_allreduce_time, A2aAlgo, A2aBreakdown};
+use crate::comm::{price_rounds, ring_allreduce_time, A2aAlgo, A2aBreakdown, CommPlan, Round};
 use crate::runtime::ModelCfg;
 use crate::topology::Topology;
 use crate::util::Mat;
@@ -110,6 +110,170 @@ pub fn device_flops(cluster: char) -> f64 {
     }
 }
 
+/// Default relative drift tolerance of a [`PlanCache`]: re-synthesise the
+/// schedule only once the byte matrix has moved more than this fraction of
+/// the per-sender exchange volume since the cached plan was made. With the
+/// sim gate's τ ≈ 24-step relaxation this yields ~5–6 syntheses over a
+/// 200-step run (see `rust/tests/session_sim.rs`).
+pub const PLAN_CACHE_TOL: f64 = 0.10;
+
+/// A step-level cache of synthesised [`CommPlan`] round schedules.
+///
+/// `sched:bvn` synthesis is the expensive part of pricing a step; once the
+/// gate's dispatch pattern converges, the synthesized schedule stops
+/// changing, so [`PlanCache::plan`] keys cached schedules on a quantized
+/// byte-matrix fingerprint and reuses them until the pattern drifts more
+/// than `tol × (total bytes / P)` from the matrix the plan was made for.
+/// Cached *rounds* are always re-priced on the live byte matrix
+/// ([`price_rounds`]), so a hit never serves stale times — only the
+/// schedule structure is reused. Entries are additionally bound to the
+/// topology's link-graph identity (`topo_key`: P, link parameters, path
+/// shapes), so one cache can safely serve calls that alternate
+/// topologies: a schedule built for another link graph is never returned.
+/// `direct`/`hier` plans have no synthesis step and bypass the cache
+/// (neither counter moves).
+#[derive(Debug, Default)]
+pub struct PlanCache {
+    tol: f64,
+    entries: Vec<PlanEntry>,
+    hits: u64,
+    misses: u64,
+}
+
+#[derive(Debug)]
+struct PlanEntry {
+    algo: A2aAlgo,
+    /// Link-graph identity of the topology the schedule was built for.
+    topo_key: u64,
+    fingerprint: u64,
+    /// The byte matrix the cached schedule was synthesised from.
+    bytes: Mat,
+    rounds: Vec<Round>,
+}
+
+impl PlanCache {
+    /// A cache with the given relative drift tolerance; `tol <= 0`
+    /// disables caching (every plan is cold — the uncached baseline).
+    pub fn new(tol: f64) -> PlanCache {
+        PlanCache { tol, ..Default::default() }
+    }
+
+    /// A disabled cache: every [`PlanCache::plan`] call re-synthesises.
+    pub fn disabled() -> PlanCache {
+        Self::new(0.0)
+    }
+
+    /// Schedule re-uses since construction.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Cold syntheses since construction.
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    pub fn tol(&self) -> f64 {
+        self.tol
+    }
+
+    /// Per-sender exchange volume — the drift/quantization scale.
+    fn scale(bytes: &Mat) -> f64 {
+        bytes.sum() / bytes.rows().max(1) as f64
+    }
+
+    /// FNV-1a over the byte matrix quantized to `tol·scale` buckets. The
+    /// bucket width itself is mixed into the hash, so uniformly scaling
+    /// the whole matrix (same buckets, different volume regime) changes
+    /// the fingerprint and falls through to the drift check rather than
+    /// silently hitting forever. Equal fingerprints ⇒ same bucket width
+    /// and every entry in the same bucket ⇒ within tolerance.
+    fn fingerprint(&self, bytes: &Mat) -> u64 {
+        let q = self.tol * Self::scale(bytes);
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut mix = |v: u64| {
+            h ^= v;
+            h = h.wrapping_mul(0x0100_0000_01b3);
+        };
+        mix(bytes.rows() as u64);
+        mix(q.to_bits());
+        for &b in bytes.data() {
+            let bucket = if q > 0.0 { (b / q).round() as i64 } else { 0 };
+            mix(bucket as u64);
+        }
+        h
+    }
+
+    /// Identity of the topology's link graph — the inputs schedule
+    /// synthesis actually depends on (P, link parameters, path shapes).
+    /// Topologies with identical link graphs (e.g. a `with_noise` clone,
+    /// which perturbs only the per-pair α/β matrices) may safely share a
+    /// cached schedule; anything else misses.
+    fn topo_key(topo: &Topology) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut mix = |v: u64| {
+            h ^= v;
+            h = h.wrapping_mul(0x0100_0000_01b3);
+        };
+        mix(topo.p() as u64);
+        mix(topo.links().len() as u64);
+        for (e, l) in topo.links().iter().enumerate() {
+            mix(l.alpha.to_bits());
+            mix(l.beta.to_bits());
+            mix(topo.link_contended(e) as u64);
+        }
+        // path shapes: per-pair hop counts pin the wiring without hashing
+        // every slot (O(P²), not O(P²·hops))
+        for i in 0..topo.p() {
+            for j in 0..topo.p() {
+                mix(topo.path(i, j).len() as u64);
+            }
+        }
+        h
+    }
+
+    /// Price one exchange, reusing the cached schedule while the byte
+    /// matrix stays within tolerance of the one it was synthesised from
+    /// (on the same link graph). Hit plans carry the breakdown only
+    /// (`rounds: None`) — the rounds stay inside the cache, so the common
+    /// path does not deep-copy the schedule it just reused.
+    pub fn plan(&mut self, topo: &Topology, bytes: &Mat, algo: A2aAlgo) -> CommPlan {
+        if !matches!(algo, A2aAlgo::Scheduled(_)) || self.tol <= 0.0 {
+            return algo.plan(topo, bytes); // nothing synthesised to reuse
+        }
+        let fp = self.fingerprint(bytes);
+        let tkey = Self::topo_key(topo);
+        if let Some(e) = self.entries.iter().find(|e| e.algo == algo) {
+            let same_shape = e.topo_key == tkey
+                && e.bytes.rows() == bytes.rows()
+                && e.bytes.cols() == bytes.cols();
+            let hit = same_shape
+                && (e.fingerprint == fp || {
+                    let scale = Self::scale(bytes).max(Self::scale(&e.bytes));
+                    e.bytes.linf_dist(bytes) <= self.tol * scale
+                });
+            if hit {
+                self.hits += 1;
+                return CommPlan {
+                    algo,
+                    breakdown: price_rounds(topo, bytes, &e.rounds),
+                    rounds: None,
+                };
+            }
+        }
+        self.misses += 1;
+        let plan = algo.plan(topo, bytes);
+        let rounds = plan.rounds.clone().expect("scheduled plans carry rounds");
+        let entry =
+            PlanEntry { algo, topo_key: tkey, fingerprint: fp, bytes: bytes.clone(), rounds };
+        match self.entries.iter_mut().find(|e| e.algo == algo) {
+            Some(e) => *e = entry,
+            None => self.entries.push(entry),
+        }
+        plan
+    }
+}
+
 /// Per-step cost breakdown on the simulated cluster clock.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct StepCost {
@@ -140,6 +304,35 @@ pub fn step_cost(
     flops_per_dev: f64,
     a2a: A2aAlgo,
 ) -> StepCost {
+    step_cost_with(shape, topo, counts, e_per_dev, flops_per_dev, a2a, None)
+}
+
+/// [`step_cost`] with a reusable [`PlanCache`]: the schedule synthesised
+/// for the dispatch/combine exchange is reused across steps while the byte
+/// matrix stays within the cache's tolerance. Prices are always computed
+/// from the live `counts`, so a cache hit on an unchanged pattern
+/// reproduces the cold-path [`StepCost`] exactly.
+pub fn step_cost_cached(
+    shape: &ModelShape,
+    topo: &Topology,
+    counts: &Mat,
+    e_per_dev: usize,
+    flops_per_dev: f64,
+    a2a: A2aAlgo,
+    cache: &mut PlanCache,
+) -> StepCost {
+    step_cost_with(shape, topo, counts, e_per_dev, flops_per_dev, a2a, Some(cache))
+}
+
+fn step_cost_with(
+    shape: &ModelShape,
+    topo: &Topology,
+    counts: &Mat,
+    e_per_dev: usize,
+    flops_per_dev: f64,
+    a2a: A2aAlgo,
+    cache: Option<&mut PlanCache>,
+) -> StepCost {
     let p = topo.p();
     assert_eq!(counts.rows(), p);
     let n = counts.cols();
@@ -166,7 +359,10 @@ pub fn step_cost(
         }
         tok * (shape.d * shape.elem_bytes) as f64
     });
-    let plan = a2a.plan(topo, &bytes);
+    let plan = match cache {
+        Some(c) => c.plan(topo, &bytes, a2a),
+        None => a2a.plan(topo, &bytes),
+    };
     let breakdown = plan.breakdown.scale(4.0 * shape.n_moe_layers as f64);
     let a2a_s = breakdown.total();
 
@@ -276,6 +472,67 @@ mod tests {
             assert_ne!(dir.a2a_s, c.a2a_s, "{algo}");
             assert!((c.a2a.total() - c.a2a_s).abs() < 1e-15, "{algo}");
         }
+    }
+
+    #[test]
+    fn plan_cache_hit_reproduces_cold_step_cost_exactly() {
+        let topo = presets::cluster_c(2);
+        let cfg = cfg16();
+        let shape = ModelShape::gpt_medium(false, 6, 1024);
+        let ta = converged_counts(&TaMoe { norm: Norm::L1 }, &topo, &cfg);
+        let algo = A2aAlgo::Scheduled(crate::comm::ScheduleKind::Bvn);
+        let flops = device_flops('C');
+        let cold = step_cost(&shape, &topo, &ta, 1, flops, algo);
+        let mut cache = PlanCache::new(PLAN_CACHE_TOL);
+        let miss = step_cost_cached(&shape, &topo, &ta, 1, flops, algo, &mut cache);
+        let hit = step_cost_cached(&shape, &topo, &ta, 1, flops, algo, &mut cache);
+        assert_eq!((cache.misses(), cache.hits()), (1, 1));
+        for c in [&miss, &hit] {
+            assert_eq!(c.compute_s, cold.compute_s);
+            assert_eq!(c.allreduce_s, cold.allreduce_s);
+            assert_eq!(c.a2a_s, cold.a2a_s);
+            assert_eq!(c.a2a, cold.a2a);
+        }
+        // a pattern within tolerance reuses the schedule but re-prices it
+        // on the live bytes (the total moves with the scaled volume)
+        let drifted = ta.scale(1.0 + 1e-4);
+        let d = step_cost_cached(&shape, &topo, &drifted, 1, flops, algo, &mut cache);
+        assert_eq!((cache.misses(), cache.hits()), (1, 2));
+        assert!(d.a2a_s > cold.a2a_s, "repriced on live bytes");
+        // direct plans have no synthesis step: the cache is bypassed
+        step_cost_cached(&shape, &topo, &ta, 1, flops, A2aAlgo::Direct, &mut cache);
+        assert_eq!((cache.misses(), cache.hits()), (1, 2));
+        // a disabled cache is the uncached baseline
+        let mut off = PlanCache::disabled();
+        let c = step_cost_cached(&shape, &topo, &ta, 1, flops, algo, &mut off);
+        assert_eq!((off.misses(), off.hits()), (0, 0));
+        assert_eq!(c.a2a_s, cold.a2a_s);
+    }
+
+    #[test]
+    fn plan_cache_invalidates_past_tolerance() {
+        let topo = presets::cluster_c(2);
+        let cfg = cfg16();
+        let shape = ModelShape::gpt_medium(false, 6, 1024);
+        let even = converged_counts(&FastMoeEven, &topo, &cfg);
+        let ta = converged_counts(&TaMoe { norm: Norm::L1 }, &topo, &cfg);
+        let algo = A2aAlgo::Scheduled(crate::comm::ScheduleKind::Bvn);
+        let flops = device_flops('C');
+        let mut cache = PlanCache::new(PLAN_CACHE_TOL);
+        step_cost_cached(&shape, &topo, &even, 1, flops, algo, &mut cache);
+        // even → TA target is far past any reasonable tolerance
+        let warm = step_cost_cached(&shape, &topo, &ta, 1, flops, algo, &mut cache);
+        assert_eq!((cache.misses(), cache.hits()), (2, 0));
+        let cold = step_cost(&shape, &topo, &ta, 1, flops, algo);
+        assert_eq!(warm.a2a_s, cold.a2a_s, "re-synthesis matches cold path");
+        // uniform volume growth keeps the pattern *shape* but changes the
+        // regime the schedule was refined for — it must miss, not hit
+        step_cost_cached(&shape, &topo, &ta.scale(4.0), 1, flops, algo, &mut cache);
+        assert_eq!((cache.misses(), cache.hits()), (3, 0));
+        // a different link graph with the same P must miss too
+        let topo_b = presets::cluster_b(2);
+        step_cost_cached(&shape, &topo_b, &ta, 1, flops, algo, &mut cache);
+        assert_eq!((cache.misses(), cache.hits()), (4, 0));
     }
 
     #[test]

@@ -17,7 +17,10 @@ pub mod policy;
 pub mod registry;
 pub mod session;
 
-pub use cost::{device_flops, step_cost, throughput, ModelShape, StepCost};
+pub use cost::{
+    device_flops, step_cost, step_cost_cached, throughput, ModelShape, PlanCache, StepCost,
+    PLAN_CACHE_TOL,
+};
 pub use policy::{
     converged_counts, DeepSpeedEven, DispatchPolicy, FastMoeEven, FasterMoeHir,
     PolicyInputs, TaMoe,

@@ -26,7 +26,7 @@
 //! dispatch counts — the simulated time axis therefore reflects what the
 //! gate actually learned, not what the policy hoped for.
 
-use super::cost::{step_cost, ModelShape};
+use super::cost::{step_cost_cached, ModelShape, PlanCache, PLAN_CACHE_TOL};
 use super::policy::{DispatchPolicy, PolicyInputs, TaMoe};
 use super::registry::parse_policy;
 use crate::comm::A2aAlgo;
@@ -49,11 +49,20 @@ pub struct SessionOptions {
     pub flops_per_dev: f64,
     /// Run a held-out eval every n steps inside [`Session::run`] (0 = off).
     pub eval_every: usize,
+    /// Relative drift tolerance of the step-level [`PlanCache`]
+    /// (≤ 0 disables caching: every step re-synthesises its a2a schedule).
+    pub plan_cache_tol: f64,
 }
 
 impl Default for SessionOptions {
     fn default() -> Self {
-        SessionOptions { lr: 1e-3, seed: 0, flops_per_dev: 45e12, eval_every: 0 }
+        SessionOptions {
+            lr: 1e-3,
+            seed: 0,
+            flops_per_dev: 45e12,
+            eval_every: 0,
+            plan_cache_tol: PLAN_CACHE_TOL,
+        }
     }
 }
 
@@ -198,6 +207,13 @@ impl SessionBuilder {
         self
     }
 
+    /// Relative drift tolerance of the step-level plan cache; pass a value
+    /// ≤ 0 to disable caching (every step re-synthesises its schedule).
+    pub fn plan_cache_tol(mut self, tol: f64) -> Self {
+        self.opts.plan_cache_tol = tol;
+        self
+    }
+
     pub fn options(mut self, opts: SessionOptions) -> Self {
         self.opts = opts;
         self
@@ -289,6 +305,7 @@ impl SessionBuilder {
         );
         let shape = ModelShape::from_cfg(&cfg);
         let tokens_per_step = cfg.p * cfg.tokens_per_dev;
+        let plan_cache = PlanCache::new(self.opts.plan_cache_tol);
         Ok(Session {
             backend,
             topo,
@@ -301,6 +318,7 @@ impl SessionBuilder {
             eval_batch,
             log: RunLog::new(&label, tokens_per_step),
             last_counts: None,
+            plan_cache,
         })
     }
 }
@@ -319,6 +337,8 @@ pub struct Session {
     eval_batch: (Vec<i32>, Vec<i32>),
     log: RunLog,
     last_counts: Option<Mat>,
+    /// Step-level cache of synthesised a2a schedules (see `cost::PlanCache`).
+    plan_cache: PlanCache,
 }
 
 impl Session {
@@ -349,14 +369,16 @@ impl Session {
         let out = self.backend.train_step(&tok, &tgt, self.opts.lr)?;
         let wall_s = wall0.elapsed().as_secs_f64();
 
-        let cfg = self.backend.model_cfg();
-        let cost = step_cost(
+        let hits_before = self.plan_cache.hits();
+        let e_per_dev = self.backend.model_cfg().e_per_dev;
+        let cost = step_cost_cached(
             &self.shape,
             &self.topo,
             &out.counts,
-            cfg.e_per_dev,
+            e_per_dev,
             self.opts.flops_per_dev,
             self.a2a,
+            &mut self.plan_cache,
         );
         let record = StepRecord {
             step: self.log.records.len(),
@@ -369,9 +391,12 @@ impl Session {
             sim_a2a_local_s: cost.a2a.local_s,
             sim_a2a_intra_s: cost.a2a.intra_s,
             sim_a2a_inter_s: cost.a2a.inter_s,
+            plan_cached: self.plan_cache.hits() > hits_before,
             wall_s,
         };
         self.last_counts = Some(out.counts);
+        self.log.plan_hits = self.plan_cache.hits();
+        self.log.plan_misses = self.plan_cache.misses();
         self.log.push(record.clone());
         Ok(record)
     }
@@ -449,5 +474,10 @@ impl Session {
     /// Mean per-MoE-layer dispatch counts of the most recent step.
     pub fn last_counts(&self) -> Option<&Mat> {
         self.last_counts.as_ref()
+    }
+
+    /// The session's step-level a2a schedule cache (hit/miss counters).
+    pub fn plan_cache(&self) -> &PlanCache {
+        &self.plan_cache
     }
 }

@@ -37,7 +37,7 @@ mod tests {
         let topo = presets::table1();
         let p = prob();
         let tp = target_pattern(&topo, &p);
-        let engine = CostEngine::slowest_pair(&topo);
+        let mut engine = CostEngine::slowest_pair(&topo);
         let even = crate::util::Mat::filled(
             topo.p(),
             topo.p(),

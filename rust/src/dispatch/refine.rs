@@ -74,7 +74,7 @@ pub fn is_locally_optimal(
     rel_delta: f64,
     tol: f64,
 ) -> bool {
-    let engine = CostEngine::slowest_pair(topo);
+    let mut engine = CostEngine::slowest_pair(topo);
     let eb = prob.elem_bytes as f64;
     let e = prob.e_per_dev;
     // aggregate expert columns onto their host devices for pricing

@@ -237,11 +237,14 @@ fn cmd_train(flags: &Flags) -> Result<()> {
     session.log().write_csv(&out)?;
     let (local, intra, inter) = session.log().a2a_phase_totals();
     println!(
-        "done: sim throughput {:.0} tokens/s; a2a phases local {:.1}ms / intra {:.1}ms / inter {:.1}ms; log → {}",
+        "done: sim throughput {:.0} tokens/s; a2a phases local {:.1}ms / intra {:.1}ms / inter {:.1}ms; \
+         plan cache {} hits / {} syntheses; log → {}",
         session.log().sim_throughput(),
         local * 1e3,
         intra * 1e3,
         inter * 1e3,
+        session.log().plan_hits,
+        session.log().plan_misses,
         out.display()
     );
     Ok(())

@@ -29,6 +29,9 @@ pub struct StepRecord {
     /// A2a time in phases/rounds crossing a node boundary (part of
     /// `sim_comm_s`).
     pub sim_a2a_inter_s: f64,
+    /// Whether this step's a2a schedule came from the session's
+    /// `PlanCache` (true = hit) rather than a fresh synthesis.
+    pub plan_cached: bool,
     /// Host wall-clock spent executing the XLA step (not simulated).
     pub wall_s: f64,
 }
@@ -49,6 +52,10 @@ pub struct RunLog {
     pub evals: Vec<(usize, f64)>,
     /// Tokens processed per step across the whole cluster.
     pub tokens_per_step: usize,
+    /// `PlanCache` schedule re-uses over the run (see `coordinator::cost`).
+    pub plan_hits: u64,
+    /// `PlanCache` cold schedule syntheses over the run.
+    pub plan_misses: u64,
 }
 
 impl RunLog {
@@ -127,7 +134,7 @@ impl RunLog {
     }
 
     /// Write `step,loss,ce,aux,dropped,sim_comm_s,sim_compute_s,
-    /// a2a_local_s,a2a_intra_s,a2a_inter_s,sim_t` CSV.
+    /// a2a_local_s,a2a_intra_s,a2a_inter_s,plan_hit,sim_t` CSV.
     pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
@@ -136,13 +143,13 @@ impl RunLog {
         writeln!(
             f,
             "step,loss,ce,aux,dropped,sim_comm_s,sim_compute_s,\
-             a2a_local_s,a2a_intra_s,a2a_inter_s,sim_t"
+             a2a_local_s,a2a_intra_s,a2a_inter_s,plan_hit,sim_t"
         )?;
         let axis = self.sim_time_axis();
         for (r, t) in self.records.iter().zip(axis) {
             writeln!(
                 f,
-                "{},{:.6},{:.6},{:.6},{:.4},{:.6e},{:.6e},{:.6e},{:.6e},{:.6e},{:.6e}",
+                "{},{:.6},{:.6},{:.6},{:.4},{:.6e},{:.6e},{:.6e},{:.6e},{:.6e},{},{:.6e}",
                 r.step,
                 r.loss,
                 r.ce,
@@ -153,6 +160,7 @@ impl RunLog {
                 r.sim_a2a_local_s,
                 r.sim_a2a_intra_s,
                 r.sim_a2a_inter_s,
+                r.plan_cached as u8,
                 t
             )?;
         }
@@ -174,6 +182,8 @@ impl RunLog {
         m.insert("sim_a2a_local_s".into(), Json::Num(local));
         m.insert("sim_a2a_intra_s".into(), Json::Num(intra));
         m.insert("sim_a2a_inter_s".into(), Json::Num(inter));
+        m.insert("plan_hits".into(), Json::Num(self.plan_hits as f64));
+        m.insert("plan_misses".into(), Json::Num(self.plan_misses as f64));
         Json::Obj(m)
     }
 }
@@ -268,6 +278,29 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.starts_with("step,loss"));
         assert_eq!(text.lines().count(), 2);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn plan_cache_counters_surface_in_summary_and_csv() {
+        let mut log = RunLog::new("x", 10);
+        log.plan_hits = 7;
+        log.plan_misses = 3;
+        log.push(StepRecord { step: 0, plan_cached: true, ..Default::default() });
+        log.push(StepRecord { step: 1, plan_cached: false, ..Default::default() });
+        let json = log.summary_json().to_string_compact();
+        assert!(json.contains("\"plan_hits\":7"), "{json}");
+        assert!(json.contains("\"plan_misses\":3"), "{json}");
+        let path = std::env::temp_dir().join("ta_moe_test_metrics_cache.csv");
+        log.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let header = text.lines().next().unwrap();
+        assert!(header.contains("plan_hit"), "{header}");
+        let hit_col = header.split(',').position(|c| c == "plan_hit").unwrap();
+        let cols: Vec<&str> = text.lines().nth(1).unwrap().split(',').collect();
+        assert_eq!(cols[hit_col], "1");
+        let cols: Vec<&str> = text.lines().nth(2).unwrap().split(',').collect();
+        assert_eq!(cols[hit_col], "0");
         let _ = std::fs::remove_file(&path);
     }
 }

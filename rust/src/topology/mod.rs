@@ -90,6 +90,21 @@ pub struct Topology {
     pub(crate) link_contended: Vec<bool>,
     /// Per-pair directed link path (empty for i == j).
     pub(crate) paths: Vec<Vec<DirLink>>,
+    /// Flat link-incidence table (see [`Topology::with_incidence`]): CSR
+    /// offsets into [`Topology::path_slots`], one entry per (i, j) pair in
+    /// row-major order, `p*p + 1` entries total.
+    pub(crate) path_off: Vec<u32>,
+    /// Concatenated per-pair directed-link *slot* lists. A slot is
+    /// `2*edge + dir` (`dir` = 1 toward the root), so a flow census over a
+    /// set of deliveries is a dense `Vec` indexed by slot — no hashing on
+    /// the per-step pricing path.
+    pub(crate) path_slots: Vec<u32>,
+    /// Per-slot link latency (duplicated across both directions).
+    pub(crate) slot_alpha: Vec<f64>,
+    /// Per-slot link inverse bandwidth.
+    pub(crate) slot_beta: Vec<f64>,
+    /// Per-slot contention flag (mirrors [`Topology::link_contended`]).
+    pub(crate) slot_contended: Vec<bool>,
 }
 
 impl Topology {
@@ -140,7 +155,13 @@ impl Topology {
             links,
             link_contended: vec![true; n_links],
             paths,
+            path_off: Vec::new(),
+            path_slots: Vec::new(),
+            slot_alpha: Vec::new(),
+            slot_beta: Vec::new(),
+            slot_contended: Vec::new(),
         }
+        .with_incidence()
     }
 
     /// Ring of `links.len()` devices; `links[i]` connects device `i` to
@@ -245,6 +266,51 @@ impl Topology {
         self.link_contended[edge]
     }
 
+    /// Number of directed-link slots (`2 × links`); the length of any
+    /// flow-census vector over this topology.
+    #[inline]
+    pub(crate) fn n_slots(&self) -> usize {
+        self.slot_beta.len()
+    }
+
+    /// Directed-link slot ids of a pair's path (`2*edge + dir`; empty for
+    /// i == j). The flat-incidence mirror of [`Topology::path`].
+    #[inline]
+    pub(crate) fn pair_slots(&self, i: usize, j: usize) -> &[u32] {
+        let k = i * self.p + j;
+        &self.path_slots[self.path_off[k] as usize..self.path_off[k + 1] as usize]
+    }
+
+    /// Fill the flat link-incidence table from `links` + `paths`. Every
+    /// constructor (homogeneous/ring/tree) must finish with this; the
+    /// table is derived state, so `with_noise`/`smoothed` clones stay
+    /// valid (they perturb the per-pair α/β matrices, never the links).
+    fn with_incidence(mut self) -> Topology {
+        let n_slots = 2 * self.links.len();
+        self.slot_alpha = vec![0.0; n_slots];
+        self.slot_beta = vec![0.0; n_slots];
+        self.slot_contended = vec![false; n_slots];
+        for (e, l) in self.links.iter().enumerate() {
+            for d in 0..2 {
+                self.slot_alpha[2 * e + d] = l.alpha;
+                self.slot_beta[2 * e + d] = l.beta;
+                self.slot_contended[2 * e + d] = self.link_contended[e];
+            }
+        }
+        let mut off = Vec::with_capacity(self.p * self.p + 1);
+        off.push(0u32);
+        let mut slots = Vec::new();
+        for path in &self.paths {
+            for dl in path {
+                slots.push((2 * dl.edge + dl.up as usize) as u32);
+            }
+            off.push(slots.len() as u32);
+        }
+        self.path_off = off;
+        self.path_slots = slots;
+        self
+    }
+
     /// The paper's `G_t^i`: devices whose pair level with `i` equals `t`.
     pub fn group(&self, i: usize, t: usize) -> Vec<usize> {
         (0..self.p).filter(|&j| self.level(i, j) == t).collect()
@@ -342,6 +408,33 @@ mod tests {
             }
             all.sort();
             assert_eq!(all, vec![0, 1, 2, 3]);
+        }
+    }
+
+    #[test]
+    fn incidence_table_mirrors_paths() {
+        let spec = TreeSpec::parse("[[2,2],[2]]").unwrap();
+        let trees = [
+            Topology::tree(&spec, &[l(1e-10), l(1e-8), l(1e-7)], Link::new(0.0, 1e-11)),
+            Topology::homogeneous(4, l(1e-9), Link::new(0.0, 1e-11)),
+            Topology::ring(vec![l(1e-9); 5], Link::new(0.0, 1e-11)),
+        ];
+        for t in &trees {
+            assert_eq!(t.n_slots(), 2 * t.links().len());
+            for i in 0..t.p() {
+                for j in 0..t.p() {
+                    let slots = t.pair_slots(i, j);
+                    let path = t.path(i, j);
+                    assert_eq!(slots.len(), path.len());
+                    for (s, dl) in slots.iter().zip(path) {
+                        assert_eq!(*s as usize, 2 * dl.edge + dl.up as usize);
+                        let e = *s as usize / 2;
+                        assert_eq!(t.slot_alpha[*s as usize], t.links()[e].alpha);
+                        assert_eq!(t.slot_beta[*s as usize], t.links()[e].beta);
+                        assert_eq!(t.slot_contended[*s as usize], t.link_contended(e));
+                    }
+                }
+            }
         }
     }
 

@@ -66,7 +66,13 @@ pub(super) fn build(links_ring: Vec<Link>, local: Link) -> Topology {
         link_contended: vec![true; links_ring.len()],
         links: links_ring,
         paths,
+        path_off: Vec::new(),
+        path_slots: Vec::new(),
+        slot_alpha: Vec::new(),
+        slot_beta: Vec::new(),
+        slot_contended: Vec::new(),
     }
+    .with_incidence()
 }
 
 /// Edge ids along the arc from i to j. Clockwise: i → i+1 → … → j uses

@@ -317,7 +317,13 @@ pub(super) fn build(spec: &TreeSpec, level_links: &[Link], local: Link) -> Topol
         links: b.links,
         link_contended: b.contended,
         paths,
+        path_off: Vec::new(),
+        path_slots: Vec::new(),
+        slot_alpha: Vec::new(),
+        slot_beta: Vec::new(),
+        slot_contended: Vec::new(),
     }
+    .with_incidence()
 }
 
 #[cfg(test)]

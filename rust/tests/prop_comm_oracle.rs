@@ -1,0 +1,334 @@
+//! The naive pricing oracle (test-only, per DESIGN.md §perf): a from-first-
+//! principles reimplementation of the α-β engine using a `HashMap` link
+//! census over `Topology::path` — exactly the formulation the optimized
+//! engine replaced with the flat incidence table and scratch census. The
+//! property tests pin the zero-alloc hot paths (`pair_times`,
+//! `exchange_time`, `round_time`) to this oracle to 1e-12 across tree,
+//! asymmetric-tree, and ring topologies, and check that `PlanCache` hits
+//! reproduce the cold-path `StepCost` exactly.
+
+use std::collections::HashMap;
+use ta_moe::comm::{rotation_schedule, A2aAlgo, CostEngine, ExchangeModel, ScheduleKind};
+use ta_moe::coordinator::{
+    device_flops, step_cost, step_cost_cached, ModelShape, PlanCache, PLAN_CACHE_TOL,
+};
+use ta_moe::topology::{presets, Link, Topology, TreeSpec};
+use ta_moe::util::prop::check;
+use ta_moe::util::rng::Rng;
+use ta_moe::util::Mat;
+
+// ---------------------------------------------------------------------------
+// the naive oracle
+// ---------------------------------------------------------------------------
+
+/// Flows per directed physical link across the given deliveries.
+fn naive_link_load(
+    topo: &Topology,
+    pairs: &[(usize, usize)],
+) -> HashMap<(usize, bool), usize> {
+    let mut load = HashMap::new();
+    for &(i, j) in pairs {
+        for dl in topo.path(i, j) {
+            *load.entry((dl.edge, dl.up)).or_insert(0) += 1;
+        }
+    }
+    load
+}
+
+/// One delivery's time under a flow census: α accumulates along the path,
+/// the slowest hop's β is inflated by its concurrent flows.
+fn naive_contended_time(
+    topo: &Topology,
+    load: &HashMap<(usize, bool), usize>,
+    i: usize,
+    j: usize,
+    bytes: f64,
+) -> f64 {
+    let links = topo.links();
+    let mut alpha = 0.0;
+    let mut slow: f64 = 0.0;
+    for dl in topo.path(i, j) {
+        let flows = if topo.link_contended(dl.edge) {
+            load[&(dl.edge, dl.up)] as f64
+        } else {
+            1.0
+        };
+        alpha += links[dl.edge].alpha;
+        slow = slow.max(links[dl.edge].beta * flows);
+    }
+    alpha + slow * bytes
+}
+
+fn pair_time(topo: &Topology, i: usize, j: usize, bytes: f64) -> f64 {
+    topo.alpha(i, j) + topo.beta(i, j) * bytes
+}
+
+/// Oracle mirror of `CostEngine::pair_times`.
+fn naive_pair_times(topo: &Topology, model: ExchangeModel, bytes: &Mat) -> Mat {
+    let p = topo.p();
+    match model {
+        ExchangeModel::SlowestPair | ExchangeModel::PerSenderSerial => {
+            Mat::from_fn(p, p, |i, j| {
+                let b = bytes.get(i, j);
+                if b <= 0.0 {
+                    0.0
+                } else {
+                    pair_time(topo, i, j, b)
+                }
+            })
+        }
+        ExchangeModel::Contention => {
+            let live: Vec<(usize, usize)> = (0..p)
+                .flat_map(|i| (0..p).map(move |j| (i, j)))
+                .filter(|&(i, j)| i != j && bytes.get(i, j) > 0.0)
+                .collect();
+            let load = naive_link_load(topo, &live);
+            Mat::from_fn(p, p, |i, j| {
+                let b = bytes.get(i, j);
+                if b <= 0.0 {
+                    0.0
+                } else if i == j {
+                    pair_time(topo, i, i, b)
+                } else {
+                    naive_contended_time(topo, &load, i, j, b)
+                }
+            })
+        }
+    }
+}
+
+/// Oracle mirror of `CostEngine::exchange_time` (self copies overlap the
+/// network phase; only their excess is exposed).
+fn naive_exchange_time(topo: &Topology, model: ExchangeModel, bytes: &Mat) -> f64 {
+    let p = topo.p();
+    let times = naive_pair_times(topo, model, bytes);
+    let copy = (0..p).map(|i| times.get(i, i)).fold(0.0, f64::max);
+    let net = match model {
+        ExchangeModel::SlowestPair | ExchangeModel::Contention => (0..p)
+            .flat_map(|i| (0..p).map(move |j| (i, j)))
+            .filter(|&(i, j)| i != j)
+            .map(|(i, j)| times.get(i, j))
+            .fold(0.0, f64::max),
+        ExchangeModel::PerSenderSerial => (0..p)
+            .map(|i| (0..p).filter(|&j| j != i).map(|j| times.get(i, j)).sum::<f64>())
+            .fold(0.0, f64::max),
+    };
+    net + (copy - net).max(0.0)
+}
+
+/// Oracle mirror of `CostEngine::round_time`.
+fn naive_round_time(
+    topo: &Topology,
+    model: ExchangeModel,
+    bytes: &Mat,
+    round: &[(usize, usize)],
+) -> f64 {
+    let live: Vec<(usize, usize)> = round
+        .iter()
+        .copied()
+        .filter(|&(i, j)| i != j && bytes.get(i, j) > 0.0)
+        .collect();
+    match model {
+        ExchangeModel::SlowestPair => live
+            .iter()
+            .map(|&(i, j)| pair_time(topo, i, j, bytes.get(i, j)))
+            .fold(0.0, f64::max),
+        ExchangeModel::PerSenderSerial => {
+            let mut per_sender = vec![0.0; topo.p()];
+            for &(i, j) in &live {
+                per_sender[i] += pair_time(topo, i, j, bytes.get(i, j));
+            }
+            per_sender.into_iter().fold(0.0, f64::max)
+        }
+        ExchangeModel::Contention => {
+            let load = naive_link_load(topo, &live);
+            live.iter()
+                .map(|&(i, j)| naive_contended_time(topo, &load, i, j, bytes.get(i, j)))
+                .fold(0.0, f64::max)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// generators
+// ---------------------------------------------------------------------------
+
+const MODELS: [ExchangeModel; 3] = [
+    ExchangeModel::SlowestPair,
+    ExchangeModel::PerSenderSerial,
+    ExchangeModel::Contention,
+];
+
+/// Random topology: symmetric tree, asymmetric tree, or ring.
+fn random_topology(rng: &mut Rng) -> Topology {
+    let dev = Link::from_gbps_us(rng.range_f64(20.0, 300.0), rng.range_f64(1.0, 5.0));
+    let up = Link::from_gbps_us(rng.range_f64(4.0, 25.0), rng.range_f64(5.0, 30.0));
+    let spine = Link::from_gbps_us(rng.range_f64(2.0, 20.0), rng.range_f64(10.0, 40.0));
+    match rng.below(3) {
+        0 => {
+            let spec = TreeSpec::symmetric(&[rng.range(2, 5), rng.range(2, 5)]);
+            Topology::tree(&spec, &[dev, up], presets::local_copy())
+        }
+        1 => {
+            // asymmetric: a deep pod next to shallow nodes
+            let per = rng.range(2, 4);
+            let spec = TreeSpec::Switch(vec![
+                TreeSpec::Switch(vec![TreeSpec::Devices(per), TreeSpec::Devices(per)]),
+                TreeSpec::Switch(vec![TreeSpec::Devices(per)]),
+            ]);
+            Topology::tree(&spec, &[dev, up, spine], presets::local_copy())
+        }
+        _ => {
+            let p = rng.range(3, 9);
+            let links = (0..p)
+                .map(|_| {
+                    Link::from_gbps_us(rng.range_f64(20.0, 300.0), rng.range_f64(1.0, 5.0))
+                })
+                .collect();
+            Topology::ring(links, presets::local_copy())
+        }
+    }
+}
+
+/// Random byte matrix with zeros sprinkled in (exercises the live filter).
+fn random_bytes(rng: &mut Rng, p: usize) -> Mat {
+    Mat::from_fn(p, p, |_, _| {
+        if rng.below(5) == 0 {
+            0.0
+        } else {
+            rng.range_f64(0.0, 64e6)
+        }
+    })
+}
+
+// ---------------------------------------------------------------------------
+// properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_optimized_engine_matches_naive_oracle() {
+    check(
+        40,
+        0x0AC1E,
+        |rng| {
+            let topo = random_topology(rng);
+            let bytes = random_bytes(rng, topo.p());
+            (topo, bytes)
+        },
+        |(topo, bytes)| {
+            let p = topo.p();
+            for model in MODELS {
+                let mut eng = CostEngine::new(topo, model);
+                // pair_times (twice: scratch reuse must not leak state)
+                for _ in 0..2 {
+                    let want = naive_pair_times(topo, model, bytes);
+                    let got = eng.pair_times(bytes).clone();
+                    let d = got.linf_dist(&want);
+                    if d > 1e-12 {
+                        return Err(format!("{model:?} pair_times off by {d}"));
+                    }
+                }
+                // exchange_time
+                let (got, want) =
+                    (eng.exchange_time(bytes), naive_exchange_time(topo, model, bytes));
+                if (got - want).abs() > 1e-12 * want.max(1.0) {
+                    return Err(format!("{model:?} exchange {got} != {want}"));
+                }
+                // round_time over a full 1-factorisation (self round incl.)
+                for round in rotation_schedule(p) {
+                    let got = eng.round_time(bytes, &round);
+                    let want = naive_round_time(topo, model, bytes, &round);
+                    if (got - want).abs() > 1e-12 * want.max(1.0) {
+                        return Err(format!("{model:?} round {got} != {want}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_scheduled_and_planned_prices_match_oracle_round_sums() {
+    // the planner's scheduled price is exactly the oracle's per-round sum
+    // plus the exposed-local-copy excess — pins scheduled_a2a_time (and
+    // therefore bvn refinement's accounting) to the naive formulation
+    check(
+        15,
+        0x5EED5,
+        |rng| {
+            let topo = random_topology(rng);
+            let bytes = random_bytes(rng, topo.p());
+            (topo, bytes)
+        },
+        |(topo, bytes)| {
+            let p = topo.p();
+            let rounds = rotation_schedule(p);
+            let net: f64 = rounds
+                .iter()
+                .map(|r| naive_round_time(topo, ExchangeModel::Contention, bytes, r))
+                .sum();
+            let copy = (0..p)
+                .map(|i| {
+                    if bytes.get(i, i) > 0.0 {
+                        pair_time(topo, i, i, bytes.get(i, i))
+                    } else {
+                        0.0
+                    }
+                })
+                .fold(0.0, f64::max);
+            let want = net + (copy - net).max(0.0);
+            let got = ta_moe::comm::scheduled_a2a_time(topo, bytes, &rounds);
+            if (got - want).abs() > 1e-12 * want.max(1.0) {
+                return Err(format!("scheduled {got} != oracle {want}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_plan_cache_hits_reproduce_cold_step_cost_exactly() {
+    let shape = ModelShape::gpt_medium(false, 6, 1024);
+    check(
+        10,
+        0xCAC4E,
+        |rng| {
+            let nodes = rng.range(2, 5);
+            let topo = presets::cluster_c(nodes);
+            let p = topo.p();
+            let sent = 6144.0;
+            // a random row-stochastic-ish dispatch: positive counts
+            let counts = Mat::from_fn(p, p, |_, _| rng.range_f64(1.0, sent / p as f64));
+            (topo, counts)
+        },
+        |(topo, counts)| {
+            for kind in [ScheduleKind::Rotation, ScheduleKind::Bvn] {
+                let algo = A2aAlgo::Scheduled(kind);
+                let cold = step_cost(&shape, topo, counts, 1, device_flops('C'), algo);
+                let mut cache = PlanCache::new(PLAN_CACHE_TOL);
+                let miss = step_cost_cached(
+                    &shape, topo, counts, 1, device_flops('C'), algo, &mut cache,
+                );
+                let hit = step_cost_cached(
+                    &shape, topo, counts, 1, device_flops('C'), algo, &mut cache,
+                );
+                if (cache.misses(), cache.hits()) != (1, 1) {
+                    return Err(format!(
+                        "{algo}: counters {:?}", (cache.misses(), cache.hits())
+                    ));
+                }
+                for (name, c) in [("miss", &miss), ("hit", &hit)] {
+                    if c.a2a_s != cold.a2a_s
+                        || c.compute_s != cold.compute_s
+                        || c.allreduce_s != cold.allreduce_s
+                        || c.a2a != cold.a2a
+                    {
+                        return Err(format!("{algo} {name}: {c:?} != cold {cold:?}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}

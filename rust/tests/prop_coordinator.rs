@@ -110,7 +110,7 @@ fn prop_target_never_slower_than_even_on_lower_bound() {
         |rng| (random_topology(rng), random_problem(rng)),
         |(topo, prob)| {
             let tp = target_pattern(topo, prob);
-            let eng = CostEngine::slowest_pair(topo);
+            let mut eng = CostEngine::slowest_pair(topo);
             let even = Mat::filled(
                 topo.p(),
                 tp.c.cols(),

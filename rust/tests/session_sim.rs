@@ -173,6 +173,61 @@ fn a2a_override_changes_the_priced_step_and_its_breakdown() {
 }
 
 #[test]
+fn plan_cache_bounds_syntheses_without_distorting_the_clock() {
+    // the perf acceptance bar: a 200-step sched:bvn session re-synthesises
+    // its schedule only while the gate's dispatch pattern is still moving
+    // (≤ ~10 times total, τ ≈ 24 steps), and the cached run's simulated
+    // clock matches an uncached run of the same seed — prices are always
+    // computed from the live byte matrix, only the schedule is reused
+    let run = |cache_tol: f64| {
+        let cfg = ModelCfg::preset("tiny4").unwrap();
+        let mut s = SessionBuilder::new()
+            .backend(Box::new(SimBackend::new(cfg)))
+            .cluster("C")
+            .policy(Box::new(TaMoe { norm: Norm::L1 }))
+            .a2a(A2aAlgo::Scheduled(ScheduleKind::Bvn))
+            .seed(7)
+            .plan_cache_tol(cache_tol)
+            .build()
+            .unwrap();
+        s.run(200).unwrap();
+        let totals: Vec<f64> = s.log().records.iter().map(|r| r.sim_total_s()).collect();
+        (s.log().plan_hits, s.log().plan_misses, totals)
+    };
+    let (hits, misses, cached) = run(ta_moe::coordinator::PLAN_CACHE_TOL);
+    let (hits0, misses0, uncached) = run(0.0); // disabled cache = cold every step
+    assert_eq!((hits0, misses0), (0, 0), "disabled cache must not count");
+    assert!(
+        misses <= 10,
+        "a converged 200-step run must synthesise ≤ ~10 schedules, got {misses}"
+    );
+    assert_eq!(hits + misses, 200, "every step either hits or synthesises");
+    assert!(hits >= 190);
+    // identical clock: per-step totals track the uncached run everywhere
+    // (a hit re-prices the cached schedule on the live bytes; within the
+    // drift tolerance the synthesized schedule is structurally stable, so
+    // any residual difference is refinement noise on near-equal rounds),
+    // and once the gate has converged the two runs agree to fp precision
+    assert_eq!(cached.len(), uncached.len());
+    let mut max_rel = 0.0f64;
+    for (a, b) in cached.iter().zip(&uncached) {
+        max_rel = max_rel.max((a - b).abs() / b.max(1e-30));
+    }
+    assert!(max_rel <= 0.02, "per-step drift {max_rel} vs uncached");
+    let (sa, sb): (f64, f64) = (cached.iter().sum(), uncached.iter().sum());
+    assert!(
+        (sa - sb).abs() <= 1e-2 * sb,
+        "run totals must match: cached {sa} uncached {sb}"
+    );
+    for (a, b) in cached.iter().rev().zip(uncached.iter().rev()).take(50) {
+        assert!(
+            (a - b).abs() <= 2e-3 * b,
+            "converged tail must agree: {a} vs {b}"
+        );
+    }
+}
+
+#[test]
 fn builder_parses_and_validates_a2a_specs() {
     let build = |spec: &str| {
         SessionBuilder::new()
