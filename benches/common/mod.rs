@@ -9,6 +9,9 @@
 //! pure-rust simulator otherwise — so `cargo bench` works on a fresh
 //! clone with no XLA.
 
+// each bench target compiles this module and uses a subset of the helpers
+#![allow(dead_code)]
+
 use anyhow::Result;
 use ta_moe::coordinator::{device_flops, DispatchPolicy, SessionBuilder};
 use ta_moe::metrics::RunLog;

@@ -7,6 +7,7 @@
 
 use crate::comm::A2aAlgo;
 use crate::coordinator::{parse_policy, DispatchPolicy};
+use crate::placement::PlacementConfig;
 use crate::runtime::BackendKind;
 use crate::topology::{presets, Topology};
 use crate::util::toml::TomlDoc;
@@ -30,6 +31,9 @@ pub struct ExperimentConfig {
     /// [`A2aAlgo`] spec (`direct | hier | sched:xor | sched:rot |
     /// sched:bvn`).
     pub a2a: String,
+    /// Expert placement: "off" (canonical hosting), "on" (default
+    /// cadence), or an integer attempt cadence in steps.
+    pub placement: String,
     /// Execution backend: "sim" | "xla" | "auto".
     pub backend: String,
     pub steps: usize,
@@ -52,6 +56,7 @@ impl Default for ExperimentConfig {
             nodes: 0, // 0 = derive from the artifact's world size
             strategy: "ta-moe".into(),
             a2a: "auto".into(),
+            placement: "off".into(),
             backend: "auto".into(),
             steps: 100,
             lr: 1e-3,
@@ -82,6 +87,17 @@ impl ExperimentConfig {
             nodes: doc.usize_or("cluster.nodes", d.nodes),
             strategy: doc.str_or("train.strategy", &d.strategy).to_string(),
             a2a: doc.str_or("train.a2a", &d.a2a).to_string(),
+            // the spec is string-valued ("off" | "on" | "<n>") but the
+            // cadence form reads naturally as a bare TOML integer —
+            // accept both spellings
+            placement: match doc.get("train.placement") {
+                Some(v) => v
+                    .as_str()
+                    .map(str::to_string)
+                    .or_else(|| v.as_usize().map(|n| n.to_string()))
+                    .unwrap_or_else(|| d.placement.clone()),
+                None => d.placement.clone(),
+            },
             backend: doc.str_or("train.backend", &d.backend).to_string(),
             steps: doc.usize_or("train.steps", d.steps),
             lr: doc.f64_or("train.lr", d.lr),
@@ -126,6 +142,11 @@ impl ExperimentConfig {
     /// Resolve the backend selector.
     pub fn parsed_backend(&self) -> Result<BackendKind> {
         self.backend.parse().map_err(anyhow::Error::msg)
+    }
+
+    /// Resolve the placement spec: `None` means canonical hosting.
+    pub fn parsed_placement(&self) -> Result<Option<PlacementConfig>> {
+        PlacementConfig::parse_spec(&self.placement).map_err(anyhow::Error::msg)
     }
 }
 
@@ -259,6 +280,22 @@ lr = 0.01
         );
         let c = ExperimentConfig { a2a: "sched:diagonal".into(), ..Default::default() };
         assert!(c.parsed_a2a().is_err());
+    }
+
+    #[test]
+    fn placement_defaults_to_off_and_parses() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.placement, "off");
+        assert!(c.parsed_placement().unwrap().is_none());
+        let c = ExperimentConfig::from_toml("[train]\nplacement = \"on\"\n").unwrap();
+        assert_eq!(c.parsed_placement().unwrap(), Some(PlacementConfig::default()));
+        let c = ExperimentConfig::from_toml("[train]\nplacement = \"12\"\n").unwrap();
+        assert_eq!(c.parsed_placement().unwrap().unwrap().every, 12);
+        // a bare integer cadence must work too, not silently fall to off
+        let c = ExperimentConfig::from_toml("[train]\nplacement = 12\n").unwrap();
+        assert_eq!(c.parsed_placement().unwrap().unwrap().every, 12);
+        let c = ExperimentConfig { placement: "maybe".into(), ..Default::default() };
+        assert!(c.parsed_placement().is_err());
     }
 
     #[test]

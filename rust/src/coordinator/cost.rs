@@ -18,6 +18,7 @@
 //! load-imbalance effect): `max_j Σ_{e on j} Σ_i c_ie`.
 
 use crate::comm::{price_rounds, ring_allreduce_time, A2aAlgo, A2aBreakdown, CommPlan, Round};
+use crate::placement::Placement;
 use crate::runtime::ModelCfg;
 use crate::topology::Topology;
 use crate::util::Mat;
@@ -89,6 +90,17 @@ impl ModelShape {
         4.0 * self.d as f64 * self.f as f64
     }
 
+    /// Wire bytes of one dispatched token (`d · elem_bytes`).
+    pub fn token_bytes(&self) -> f64 {
+        (self.d * self.elem_bytes) as f64
+    }
+
+    /// Weight bytes of one expert (its two FFN matrices) — the payload a
+    /// live migration moves over the links.
+    pub fn expert_param_bytes(&self) -> f64 {
+        (2 * self.d * self.f * self.elem_bytes) as f64
+    }
+
     /// Bytes of the replicated (dense) parameters, for the allreduce.
     pub fn dense_param_bytes(&self) -> f64 {
         let d = self.d as f64;
@@ -132,10 +144,19 @@ pub const PLAN_CACHE_TOL: f64 = 0.10;
 /// topologies: a schedule built for another link graph is never returned.
 /// `direct`/`hier` plans have no synthesis step and bypass the cache
 /// (neither counter moves).
+///
+/// The cache additionally carries a *placement epoch*
+/// ([`PlanCache::set_epoch`]): expert migration re-routes the byte matrix
+/// through a new expert→device map, so schedules synthesised before the
+/// migration describe traffic that no longer exists — bumping the epoch
+/// drops every cached entry, regardless of how small the fingerprint
+/// drift looks.
 #[derive(Debug, Default)]
 pub struct PlanCache {
     tol: f64,
     entries: Vec<PlanEntry>,
+    /// Placement epoch the cached entries were synthesised under.
+    epoch: u64,
     hits: u64,
     misses: u64,
 }
@@ -175,6 +196,22 @@ impl PlanCache {
 
     pub fn tol(&self) -> f64 {
         self.tol
+    }
+
+    /// The placement epoch the cache currently serves.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Align the cache with a placement epoch: a change invalidates every
+    /// cached schedule (they were synthesised for byte matrices routed
+    /// through the old expert→device map). Idempotent for an unchanged
+    /// epoch — hits keep flowing between migrations.
+    pub fn set_epoch(&mut self, epoch: u64) {
+        if epoch != self.epoch {
+            self.epoch = epoch;
+            self.entries.clear();
+        }
     }
 
     /// Per-sender exchange volume — the drift/quantization scale.
@@ -304,7 +341,33 @@ pub fn step_cost(
     flops_per_dev: f64,
     a2a: A2aAlgo,
 ) -> StepCost {
-    step_cost_with(shape, topo, counts, e_per_dev, flops_per_dev, a2a, None)
+    step_cost_with(shape, topo, counts, e_per_dev, flops_per_dev, a2a, None, None)
+}
+
+/// [`step_cost`] under an explicit expert placement: the exchange's byte
+/// matrix and the per-device expert-compute loads are both routed through
+/// the expert→device map instead of the canonical `e / e_per_dev`
+/// hosting. With the identity placement this reproduces [`step_cost`]
+/// exactly.
+pub fn step_cost_placed(
+    shape: &ModelShape,
+    topo: &Topology,
+    counts: &Mat,
+    placement: &Placement,
+    flops_per_dev: f64,
+    a2a: A2aAlgo,
+    cache: Option<&mut PlanCache>,
+) -> StepCost {
+    step_cost_with(
+        shape,
+        topo,
+        counts,
+        placement.e_per_dev(),
+        flops_per_dev,
+        a2a,
+        cache,
+        Some(placement),
+    )
 }
 
 /// [`step_cost`] with a reusable [`PlanCache`]: the schedule synthesised
@@ -321,9 +384,10 @@ pub fn step_cost_cached(
     a2a: A2aAlgo,
     cache: &mut PlanCache,
 ) -> StepCost {
-    step_cost_with(shape, topo, counts, e_per_dev, flops_per_dev, a2a, Some(cache))
+    step_cost_with(shape, topo, counts, e_per_dev, flops_per_dev, a2a, Some(cache), None)
 }
 
+#[allow(clippy::too_many_arguments)]
 fn step_cost_with(
     shape: &ModelShape,
     topo: &Topology,
@@ -332,33 +396,43 @@ fn step_cost_with(
     flops_per_dev: f64,
     a2a: A2aAlgo,
     cache: Option<&mut PlanCache>,
+    placement: Option<&Placement>,
 ) -> StepCost {
     let p = topo.p();
     assert_eq!(counts.rows(), p);
     let n = counts.cols();
     assert_eq!(n, p * e_per_dev);
+    if let Some(pl) = placement {
+        assert_eq!((pl.p(), pl.e_per_dev()), (p, e_per_dev), "placement shape");
+    }
 
     // --- compute: slowest device bounds the step ---------------------------
     let dense = shape.dense_flops_per_token() * shape.tokens_per_dev as f64;
-    let max_recv: f64 = (0..p)
-        .map(|j| {
-            (0..e_per_dev)
-                .map(|le| counts.col_sum(j * e_per_dev + le))
-                .sum::<f64>()
-        })
-        .fold(0.0, f64::max);
+    let max_recv: f64 = match placement {
+        Some(pl) => pl.recv_per_device(counts).into_iter().fold(0.0, f64::max),
+        None => (0..p)
+            .map(|j| {
+                (0..e_per_dev)
+                    .map(|le| counts.col_sum(j * e_per_dev + le))
+                    .sum::<f64>()
+            })
+            .fold(0.0, f64::max),
+    };
     let expert = shape.expert_flops_per_token() * max_recv * shape.n_moe_layers as f64;
     let fwd_flops = dense + expert;
     let compute_s = 3.0 * fwd_flops / flops_per_dev; // fwd + bwd ≈ 3× fwd
 
     // --- all-to-all: 4 exchanges of the c_ie bytes per MoE layer -----------
-    let bytes = Mat::from_fn(p, p, |i, j| {
-        let mut tok = 0.0;
-        for le in 0..e_per_dev {
-            tok += counts.get(i, j * e_per_dev + le);
-        }
-        tok * (shape.d * shape.elem_bytes) as f64
-    });
+    let bytes = match placement {
+        Some(pl) => pl.bytes_matrix(counts, shape.token_bytes()),
+        None => Mat::from_fn(p, p, |i, j| {
+            let mut tok = 0.0;
+            for le in 0..e_per_dev {
+                tok += counts.get(i, j * e_per_dev + le);
+            }
+            tok * shape.token_bytes()
+        }),
+    };
     let plan = match cache {
         Some(c) => c.plan(topo, &bytes, a2a),
         None => a2a.plan(topo, &bytes),
@@ -533,6 +607,89 @@ mod tests {
         let topo_b = presets::cluster_b(2);
         step_cost_cached(&shape, &topo_b, &ta, 1, flops, algo, &mut cache);
         assert_eq!((cache.misses(), cache.hits()), (4, 0));
+    }
+
+    #[test]
+    fn plan_cache_shares_across_link_identical_topologies() {
+        // the documented topo-identity rule: a `with_noise` clone perturbs
+        // only the per-pair α/β matrices — the link graph is identical, so
+        // a schedule synthesised on the clean topology may be reused
+        let topo = presets::cluster_c(2);
+        let noisy = topo.with_noise(0.2, 42);
+        let cfg = cfg16();
+        let shape = ModelShape::gpt_medium(false, 6, 1024);
+        let ta = converged_counts(&TaMoe { norm: Norm::L1 }, &topo, &cfg);
+        let algo = A2aAlgo::Scheduled(crate::comm::ScheduleKind::Bvn);
+        let flops = device_flops('C');
+        let mut cache = PlanCache::new(PLAN_CACHE_TOL);
+        step_cost_cached(&shape, &topo, &ta, 1, flops, algo, &mut cache);
+        step_cost_cached(&shape, &noisy, &ta, 1, flops, algo, &mut cache);
+        assert_eq!((cache.misses(), cache.hits()), (1, 1), "noise clone must hit");
+    }
+
+    #[test]
+    fn plan_cache_placement_epoch_invalidates() {
+        let topo = presets::cluster_c(2);
+        let cfg = cfg16();
+        let shape = ModelShape::gpt_medium(false, 6, 1024);
+        let ta = converged_counts(&TaMoe { norm: Norm::L1 }, &topo, &cfg);
+        let algo = A2aAlgo::Scheduled(crate::comm::ScheduleKind::Bvn);
+        let flops = device_flops('C');
+        let mut cache = PlanCache::new(PLAN_CACHE_TOL);
+        step_cost_cached(&shape, &topo, &ta, 1, flops, algo, &mut cache);
+        step_cost_cached(&shape, &topo, &ta, 1, flops, algo, &mut cache);
+        assert_eq!((cache.misses(), cache.hits()), (1, 1));
+        // same epoch: idempotent, entries survive
+        cache.set_epoch(0);
+        step_cost_cached(&shape, &topo, &ta, 1, flops, algo, &mut cache);
+        assert_eq!((cache.misses(), cache.hits()), (1, 2));
+        // a migration bumped the epoch: every cached schedule is stale,
+        // even though the byte matrix fingerprint is unchanged
+        cache.set_epoch(1);
+        assert_eq!(cache.epoch(), 1);
+        step_cost_cached(&shape, &topo, &ta, 1, flops, algo, &mut cache);
+        assert_eq!((cache.misses(), cache.hits()), (2, 2), "epoch bump must miss");
+        step_cost_cached(&shape, &topo, &ta, 1, flops, algo, &mut cache);
+        assert_eq!((cache.misses(), cache.hits()), (2, 3), "then caching resumes");
+    }
+
+    #[test]
+    fn identity_placement_reproduces_step_cost_exactly() {
+        let topo = presets::cluster_c(2);
+        let cfg = cfg16();
+        let shape = ModelShape::gpt_medium(false, 6, 1024);
+        let ta = converged_counts(&TaMoe { norm: Norm::L1 }, &topo, &cfg);
+        let flops = device_flops('C');
+        for algo in [A2aAlgo::Direct, A2aAlgo::Scheduled(crate::comm::ScheduleKind::Bvn)] {
+            let canon = step_cost(&shape, &topo, &ta, 1, flops, algo);
+            let ident = Placement::identity(16, 1);
+            let placed = step_cost_placed(&shape, &topo, &ta, &ident, flops, algo, None);
+            assert_eq!(placed.compute_s, canon.compute_s, "{algo}");
+            assert_eq!(placed.a2a_s, canon.a2a_s, "{algo}");
+            assert_eq!(placed.allreduce_s, canon.allreduce_s, "{algo}");
+        }
+    }
+
+    #[test]
+    fn placement_reroutes_bytes_and_compute() {
+        // all senders crowd expert 15 (canonically on device 15): hosting
+        // it elsewhere must change the a2a price, and the compute bound
+        // must follow the hot expert's host, not its id
+        let topo = presets::cluster_c(2);
+        let shape = ModelShape::gpt_medium(false, 6, 1024);
+        let flops = device_flops('C');
+        let mut skew = Mat::filled(16, 16, 64.0);
+        for i in 0..16 {
+            skew.set(i, 15, 4096.0);
+        }
+        let canon = step_cost(&shape, &topo, &skew, 1, flops, A2aAlgo::Direct);
+        let mut pl = Placement::identity(16, 1);
+        pl.swap_experts(15, 0);
+        let placed = step_cost_placed(&shape, &topo, &skew, &pl, flops, A2aAlgo::Direct, None);
+        assert_ne!(placed.a2a_s, canon.a2a_s);
+        // compute: max recv is the same set of column sums either way
+        // (a permutation of devices), so the bound is unchanged
+        assert_eq!(placed.compute_s, canon.compute_s);
     }
 
     #[test]

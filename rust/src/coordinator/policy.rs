@@ -17,8 +17,9 @@
 use crate::comm::A2aAlgo;
 use crate::dispatch::{
     baseline_penalty_matrix, even_caps, proportional_caps, target_pattern,
-    topo_penalty_matrix, DispatchProblem, Norm, TargetPattern,
+    target_pattern_placed, topo_penalty_matrix, DispatchProblem, Norm, TargetPattern,
 };
+use crate::placement::Placement;
 use crate::runtime::{GateInputs, ModelCfg};
 use crate::topology::Topology;
 use crate::util::Mat;
@@ -50,6 +51,25 @@ pub trait DispatchPolicy: std::fmt::Debug + Send + Sync {
 
     /// Build the model's runtime inputs for this policy on a topology.
     fn runtime_inputs(&self, topo: &Topology, cfg: &ModelCfg) -> PolicyInputs;
+
+    /// [`runtime_inputs`] under an explicit expert placement (live
+    /// migration moved experts off their canonical hosts). The default
+    /// re-derives the intra-node mask from the placement and keeps
+    /// everything else; topology-aware policies additionally re-solve
+    /// their target for the new hosting (see [`TaMoe`]). With the
+    /// identity placement this must agree with [`runtime_inputs`].
+    ///
+    /// [`runtime_inputs`]: DispatchPolicy::runtime_inputs
+    fn runtime_inputs_placed(
+        &self,
+        topo: &Topology,
+        cfg: &ModelCfg,
+        placement: &Placement,
+    ) -> PolicyInputs {
+        let mut inputs = self.runtime_inputs(topo, cfg);
+        inputs.gate.local_mask = placement.local_mask(topo);
+        inputs
+    }
 
     /// The dispatch pattern the gate converges to under this policy, used
     /// by the analytic throughput model (fig4/fig6a/fig8) — validated
@@ -216,6 +236,35 @@ impl Default for TaMoe {
     }
 }
 
+impl TaMoe {
+    /// Penalty/caps/mask for a solved target pattern (shared by the
+    /// canonical and placed input paths).
+    fn inputs_for(
+        &self,
+        _topo: &Topology,
+        cfg: &ModelCfg,
+        tp: TargetPattern,
+        local_mask: Mat,
+    ) -> PolicyInputs {
+        let caps = if cfg.dispatch == "local" {
+            // §4.3: local capacities proportional to ĉ
+            proportional_caps(&tp.c, cfg.capacity)
+        } else {
+            // FastMoE host: capacity untouched, only the loss changes
+            even_caps(cfg.p, cfg.n_experts, cfg.capacity)
+        };
+        PolicyInputs {
+            gate: GateInputs {
+                penalty: topo_penalty_matrix(&tp.c, self.norm),
+                caps,
+                local_mask,
+                hir_remote_frac: 1.0,
+            },
+            target: Some(tp),
+        }
+    }
+}
+
 impl DispatchPolicy for TaMoe {
     fn name(&self) -> String {
         match self.norm {
@@ -235,22 +284,21 @@ impl DispatchPolicy for TaMoe {
     fn runtime_inputs(&self, topo: &Topology, cfg: &ModelCfg) -> PolicyInputs {
         assert_eq!(topo.p(), cfg.p, "topology/model world-size mismatch");
         let tp = self.target(topo, cfg).expect("ta-moe target");
-        let caps = if cfg.dispatch == "local" {
-            // §4.3: local capacities proportional to ĉ
-            proportional_caps(&tp.c, cfg.capacity)
-        } else {
-            // FastMoE host: capacity untouched, only the loss changes
-            even_caps(cfg.p, cfg.n_experts, cfg.capacity)
-        };
-        PolicyInputs {
-            gate: GateInputs {
-                penalty: topo_penalty_matrix(&tp.c, self.norm),
-                caps,
-                local_mask: topo.local_mask(cfg.n_experts, cfg.e_per_dev),
-                hir_remote_frac: 1.0,
-            },
-            target: Some(tp),
-        }
+        self.inputs_for(topo, cfg, tp, topo.local_mask(cfg.n_experts, cfg.e_per_dev))
+    }
+
+    /// Topology-aware placement support: re-solve Eq. 7 for the experts'
+    /// actual hosts, so the loss steers dispatch toward where the weights
+    /// now live, and re-derive mask + capacities from the same solution.
+    fn runtime_inputs_placed(
+        &self,
+        topo: &Topology,
+        cfg: &ModelCfg,
+        placement: &Placement,
+    ) -> PolicyInputs {
+        assert_eq!(topo.p(), cfg.p, "topology/model world-size mismatch");
+        let tp = target_pattern_placed(topo, &dispatch_problem(cfg), placement);
+        self.inputs_for(topo, cfg, tp, placement.local_mask(topo))
     }
 
     /// The topology loss drives `c → ĉ`.
@@ -359,6 +407,48 @@ mod tests {
         for i in 0..8 {
             assert!((m.row_sum(i) - 64.0).abs() < 1e-9);
         }
+    }
+
+    #[test]
+    fn placed_inputs_agree_with_canonical_on_identity() {
+        let topo = presets::cluster_b(2);
+        let c = cfg(16, "local");
+        let ident = Placement::identity(16, 1);
+        for policy in [
+            Box::new(TaMoe { norm: Norm::L1 }) as Box<dyn DispatchPolicy>,
+            Box::new(FastMoeEven),
+            Box::new(FasterMoeHir { remote_frac: 0.2 }),
+        ] {
+            let a = policy.runtime_inputs(&topo, &c);
+            let b = policy.runtime_inputs_placed(&topo, &c, &ident);
+            let name = policy.name();
+            assert_eq!(a.gate.penalty.linf_dist(&b.gate.penalty), 0.0, "{name}");
+            assert_eq!(a.gate.caps.linf_dist(&b.gate.caps), 0.0, "{name}");
+            assert_eq!(a.gate.local_mask.linf_dist(&b.gate.local_mask), 0.0, "{name}");
+        }
+    }
+
+    #[test]
+    fn tamoe_placed_inputs_follow_the_migrated_expert() {
+        let topo = presets::cluster_b(2);
+        let c = cfg(16, "local");
+        // expert 8 (canonically across the node boundary from device 0)
+        // migrates onto device 0's node; expert 1 takes its place
+        let mut pl = Placement::identity(16, 1);
+        pl.swap_experts(1, 8);
+        let pi = TaMoe { norm: Norm::L1 }.runtime_inputs_placed(&topo, &c, &pl);
+        let tp = pi.target.as_ref().unwrap();
+        // the re-solved target sends device 0 more to expert 8 (now
+        // near) than to expert 1 (now far), inverting the canonical order
+        assert!(tp.c.get(0, 8) > tp.c.get(0, 1));
+        assert!(pi.gate.penalty.get(0, 8) < pi.gate.penalty.get(0, 1));
+        // and the mask follows the hosts
+        assert_eq!(pi.gate.local_mask.get(0, 8), 1.0);
+        assert_eq!(pi.gate.local_mask.get(0, 1), 0.0);
+        // the default (non-topology-aware) impl swaps only the mask
+        let pe = FastMoeEven.runtime_inputs_placed(&topo, &c, &pl);
+        assert_eq!(pe.gate.local_mask.get(0, 8), 1.0);
+        assert_eq!(pe.gate.penalty.get(0, 0), 16.0, "penalty untouched");
     }
 
     #[test]

@@ -26,13 +26,14 @@
 //! dispatch counts — the simulated time axis therefore reflects what the
 //! gate actually learned, not what the policy hoped for.
 
-use super::cost::{step_cost_cached, ModelShape, PlanCache, PLAN_CACHE_TOL};
+use super::cost::{step_cost_cached, step_cost_placed, ModelShape, PlanCache, PLAN_CACHE_TOL};
 use super::policy::{DispatchPolicy, PolicyInputs, TaMoe};
 use super::registry::parse_policy;
 use crate::comm::A2aAlgo;
 use crate::config::topology_for;
 use crate::data::{Batcher, SyntheticCorpus};
-use crate::metrics::{RunLog, StepRecord};
+use crate::metrics::{MigrationRecord, RunLog, StepRecord};
+use crate::placement::{Placement, PlacementConfig, PlacementEngine};
 use crate::runtime::{open_backend, Backend, BackendKind, HostTensor};
 use crate::topology::Topology;
 use crate::util::Mat;
@@ -52,6 +53,9 @@ pub struct SessionOptions {
     /// Relative drift tolerance of the step-level [`PlanCache`]
     /// (≤ 0 disables caching: every step re-synthesises its a2a schedule).
     pub plan_cache_tol: f64,
+    /// Topology- and load-aware expert placement with amortised live
+    /// migration (`None` = canonical hosting forever).
+    pub placement: Option<PlacementConfig>,
 }
 
 impl Default for SessionOptions {
@@ -62,6 +66,7 @@ impl Default for SessionOptions {
             flops_per_dev: 45e12,
             eval_every: 0,
             plan_cache_tol: PLAN_CACHE_TOL,
+            placement: None,
         }
     }
 }
@@ -214,6 +219,25 @@ impl SessionBuilder {
         self
     }
 
+    /// Enable topology- and load-aware expert placement with this full
+    /// configuration (see [`PlacementConfig`]).
+    pub fn placement(mut self, cfg: PlacementConfig) -> Self {
+        self.opts.placement = Some(cfg);
+        self
+    }
+
+    /// Enable expert placement with default knobs, attempting a
+    /// re-placement every `every` steps (0 disables placement entirely —
+    /// the canonical hosting is kept for the whole run).
+    pub fn placement_every(mut self, every: usize) -> Self {
+        self.opts.placement = if every == 0 {
+            None
+        } else {
+            Some(PlacementConfig { every, ..Default::default() })
+        };
+        self
+    }
+
     pub fn options(mut self, opts: SessionOptions) -> Self {
         self.opts = opts;
         self
@@ -306,6 +330,19 @@ impl SessionBuilder {
         let shape = ModelShape::from_cfg(&cfg);
         let tokens_per_step = cfg.p * cfg.tokens_per_dev;
         let plan_cache = PlanCache::new(self.opts.plan_cache_tol);
+        // dispatch + combine in forward and their mirrors in backward:
+        // the exchanges of the c_ie byte matrix one training step prices
+        let placement = self.opts.placement.map(|pcfg| {
+            PlacementEngine::new(
+                pcfg,
+                cfg.p,
+                cfg.e_per_dev,
+                shape.token_bytes(),
+                shape.expert_param_bytes(),
+                (4 * shape.n_moe_layers) as f64,
+                a2a,
+            )
+        });
         Ok(Session {
             backend,
             topo,
@@ -319,6 +356,7 @@ impl SessionBuilder {
             log: RunLog::new(&label, tokens_per_step),
             last_counts: None,
             plan_cache,
+            placement,
         })
     }
 }
@@ -339,6 +377,9 @@ pub struct Session {
     last_counts: Option<Mat>,
     /// Step-level cache of synthesised a2a schedules (see `cost::PlanCache`).
     plan_cache: PlanCache,
+    /// Topology- and load-aware expert placement engine (None = canonical
+    /// hosting for the whole run).
+    placement: Option<PlacementEngine>,
 }
 
 impl Session {
@@ -369,17 +410,60 @@ impl Session {
         let out = self.backend.train_step(&tok, &tgt, self.opts.lr)?;
         let wall_s = wall0.elapsed().as_secs_f64();
 
+        // placement: fold the measured loads in and, at the engine's
+        // cadence, migrate experts when the move amortises. Step-time
+        // semantics: gating (which produced `counts`) precedes dispatch,
+        // so a migration decided here happens *between* them — the step
+        // stalls for the weight transfer (its cost is charged to this
+        // step's clock) and this step's a2a exchanges then run under the
+        // NEW placement. A migration additionally
+        // (a) invalidates cached a2a schedules via the placement epoch,
+        // (b) re-points the policy inputs (mask, and for topology-aware
+        //     policies the target/penalty) at the new hosting — live,
+        //     without resetting the backend's training state.
+        let mut migration_s = 0.0;
+        if let Some(eng) = self.placement.as_mut() {
+            eng.observe(&out.counts);
+            if let Some(m) = eng.maybe_replace(&self.topo, &out.counts) {
+                migration_s = m.cost_s;
+                self.plan_cache.set_epoch(eng.epoch());
+                let mcfg = self.backend.model_cfg().clone();
+                let new_inputs =
+                    self.policy.runtime_inputs_placed(&self.topo, &mcfg, eng.placement());
+                self.backend.update_gate(&new_inputs.gate)?;
+                self.inputs = new_inputs;
+                self.log.push_migration(MigrationRecord {
+                    step: self.log.records.len(),
+                    moved: m.moved.len(),
+                    bytes: m.bytes,
+                    cost_s: m.cost_s,
+                    predicted_saving_s: m.predicted_saving_s,
+                    realized_saving_s: m.realized_saving_s,
+                });
+            }
+        }
+
         let hits_before = self.plan_cache.hits();
-        let e_per_dev = self.backend.model_cfg().e_per_dev;
-        let cost = step_cost_cached(
-            &self.shape,
-            &self.topo,
-            &out.counts,
-            e_per_dev,
-            self.opts.flops_per_dev,
-            self.a2a,
-            &mut self.plan_cache,
-        );
+        let cost = match self.placement.as_ref() {
+            Some(eng) => step_cost_placed(
+                &self.shape,
+                &self.topo,
+                &out.counts,
+                eng.placement(),
+                self.opts.flops_per_dev,
+                self.a2a,
+                Some(&mut self.plan_cache),
+            ),
+            None => step_cost_cached(
+                &self.shape,
+                &self.topo,
+                &out.counts,
+                self.backend.model_cfg().e_per_dev,
+                self.opts.flops_per_dev,
+                self.a2a,
+                &mut self.plan_cache,
+            ),
+        };
         let record = StepRecord {
             step: self.log.records.len(),
             loss: out.loss,
@@ -392,6 +476,7 @@ impl Session {
             sim_a2a_intra_s: cost.a2a.intra_s,
             sim_a2a_inter_s: cost.a2a.inter_s,
             plan_cached: self.plan_cache.hits() > hits_before,
+            sim_migration_s: migration_s,
             wall_s,
         };
         self.last_counts = Some(out.counts);
@@ -479,5 +564,15 @@ impl Session {
     /// The session's step-level a2a schedule cache (hit/miss counters).
     pub fn plan_cache(&self) -> &PlanCache {
         &self.plan_cache
+    }
+
+    /// The live expert→device map (None when placement is disabled).
+    pub fn placement(&self) -> Option<&Placement> {
+        self.placement.as_ref().map(|e| e.placement())
+    }
+
+    /// Accepted migrations so far (0 when placement is disabled).
+    pub fn placement_epoch(&self) -> u64 {
+        self.placement.as_ref().map_or(0, |e| e.epoch())
     }
 }

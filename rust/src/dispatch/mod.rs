@@ -18,7 +18,7 @@ pub use penalty::{
     topo_penalty_matrix, Norm,
 };
 pub use refine::{is_locally_optimal, sinkhorn_repair};
-pub use target::{target_pattern, DispatchProblem, TargetPattern};
+pub use target::{target_pattern, target_pattern_placed, DispatchProblem, TargetPattern};
 
 #[cfg(test)]
 mod tests {

@@ -17,6 +17,7 @@
 //! level parameters instead of by rebuilding the graph).
 
 use super::refine::sinkhorn_repair;
+use crate::placement::Placement;
 use crate::topology::{smooth_levels, Topology, TopologyKind};
 use crate::util::Mat;
 
@@ -80,17 +81,20 @@ impl TargetPattern {
         assert!(self.c.min() >= 0.0, "negative dispatch volume");
     }
 
-    /// Per-pair byte matrix (P×P): bytes device i sends to device j.
+    /// Per-pair byte matrix (P×P): bytes device i sends to device j under
+    /// the canonical expert hosting (`e → e / e_per_dev`).
     pub fn bytes_matrix(&self) -> Mat {
         let p = self.c.rows();
-        let e = self.problem.e_per_dev;
-        Mat::from_fn(p, p, |i, j| {
-            let mut tokens = 0.0;
-            for le in 0..e {
-                tokens += self.c.get(i, j * e + le);
-            }
-            tokens * self.problem.elem_bytes as f64
-        })
+        self.bytes_matrix_placed(&Placement::identity(p, self.problem.e_per_dev))
+    }
+
+    /// [`bytes_matrix`] routed through an explicit expert placement:
+    /// tokens for expert `e` land on `placement.device_of(e)`, wherever
+    /// migration put it.
+    ///
+    /// [`bytes_matrix`]: TargetPattern::bytes_matrix
+    pub fn bytes_matrix_placed(&self, placement: &Placement) -> Mat {
+        placement.bytes_matrix(&self.c, self.problem.elem_bytes as f64)
     }
 }
 
@@ -130,11 +134,26 @@ pub(crate) fn beta_hat(topo: &Topology) -> Mat {
     Mat::from_fn(p, p, |i, j| beta[topo.level(i, j)])
 }
 
-/// Solve Eq. 6 for the target pattern ĉ (Eq. 7) on a topology.
+/// Solve Eq. 6 for the target pattern ĉ (Eq. 7) on a topology, under the
+/// canonical expert hosting.
 pub fn target_pattern(topo: &Topology, prob: &DispatchProblem) -> TargetPattern {
+    target_pattern_placed(topo, prob, &Placement::identity(topo.p(), prob.e_per_dev))
+}
+
+/// [`target_pattern`] under an explicit expert placement: the closed form
+/// reads `β̂_{i, host(e)}` with `host(e) = placement.device_of(e)`, so
+/// after a migration the topology-aware loss steers dispatch toward the
+/// experts' *actual* hosts.
+pub fn target_pattern_placed(
+    topo: &Topology,
+    prob: &DispatchProblem,
+    placement: &Placement,
+) -> TargetPattern {
     let p = topo.p();
     let e = prob.e_per_dev;
     let n = p * e;
+    assert_eq!(placement.p(), p, "placement/topology world mismatch");
+    assert_eq!(placement.n_experts(), n, "placement expert count");
     let bh = beta_hat(topo);
 
     let ks = prob.sent_per_dev();
@@ -142,7 +161,7 @@ pub fn target_pattern(topo: &Topology, prob: &DispatchProblem) -> TargetPattern 
     for i in 0..p {
         let denom: f64 = (0..p).map(|j| 1.0 / bh.get(i, j)).sum();
         for ei in 0..n {
-            let host = ei / e;
+            let host = placement.device_of(ei);
             c.set(i, ei, ks / (e as f64 * denom) * (1.0 / bh.get(i, host)));
         }
     }
@@ -257,5 +276,40 @@ mod tests {
         assert_eq!(bm.rows(), 4);
         let want = (tp.c.get(0, 2) + tp.c.get(0, 3)) * 100.0;
         assert!((bm.get(0, 1) - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn placed_target_follows_the_experts_host() {
+        let topo = tree22();
+        let p = prob();
+        // swap experts 0 and 2 across the node boundary
+        let mut pl = Placement::identity(4, 1);
+        pl.swap_experts(0, 2);
+        let tp = target_pattern_placed(&topo, &p, &pl);
+        tp.assert_feasible(1e-9);
+        // from device 0's view, expert 2 is now local (its host is device
+        // 0) and expert 0 is across the uplink: Eq. 7 volumes follow the
+        // host, not the expert id
+        assert!(tp.c.get(0, 2) > tp.c.get(0, 1), "local beats intra");
+        assert!(tp.c.get(0, 1) > tp.c.get(0, 0), "intra beats inter");
+        // identity placement reproduces the canonical solution exactly
+        let canon = target_pattern(&topo, &p);
+        let ident = target_pattern_placed(&topo, &p, &Placement::identity(4, 1));
+        assert_eq!(canon.c.linf_dist(&ident.c), 0.0);
+    }
+
+    #[test]
+    fn placed_bytes_matrix_routes_through_the_permutation() {
+        let p = DispatchProblem { k: 1, s: 1000, e_per_dev: 1, elem_bytes: 100 };
+        let tp = target_pattern(&tree22(), &p);
+        let mut pl = Placement::identity(4, 1);
+        pl.swap_experts(1, 3);
+        let bm = tp.bytes_matrix_placed(&pl);
+        // expert 1's tokens now land on device 3, expert 3's on device 1
+        assert!((bm.get(0, 3) - tp.c.get(0, 1) * 100.0).abs() < 1e-9);
+        assert!((bm.get(0, 1) - tp.c.get(0, 3) * 100.0).abs() < 1e-9);
+        // the identity route matches the canonical bytes matrix
+        let ident = tp.bytes_matrix_placed(&Placement::identity(4, 1));
+        assert_eq!(ident.linf_dist(&tp.bytes_matrix()), 0.0);
     }
 }

@@ -28,6 +28,11 @@
 //!   third-party policies, composed with a backend + topology + data into
 //!   a [`coordinator::Session`], with simulated-time accounting and
 //!   metrics.
+//! * [`placement`] — the topology- and load-aware expert placement
+//!   engine: an expert→device [`placement::Placement`] map (identity by
+//!   default), EWMA gate-load tracking, greedy + swap-descent solvers
+//!   priced through the comm engine, and amortised live migration of
+//!   expert weights wired into the [`coordinator::Session`] step loop.
 //! * [`data`] — byte-level tokenizer, bundled tiny corpus and a synthetic
 //!   Zipf corpus generator, shard-aware batching.
 //! * [`config`] — TOML experiment configs and the cluster A/B/C presets
@@ -47,11 +52,13 @@ pub mod coordinator;
 pub mod data;
 pub mod dispatch;
 pub mod metrics;
+pub mod placement;
 pub mod runtime;
 pub mod topology;
 pub mod util;
 
 pub use config::ExperimentConfig;
 pub use coordinator::{DispatchPolicy, Session, SessionBuilder};
+pub use placement::{Placement, PlacementConfig, PlacementEngine};
 pub use runtime::{Backend, SimBackend};
 pub use topology::Topology;

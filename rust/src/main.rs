@@ -76,7 +76,7 @@ fn print_help() {
            train         --artifact small8_switch --cluster C --strategy ta-moe\n\
                          --backend sim|xla|auto --steps 100 --lr 1e-3 --seed 0\n\
                          --a2a auto|direct|hier|sched:xor|sched:rot|sched:bvn\n\
-                         --config file.toml\n\
+                         --placement off|on|<every-steps> --config file.toml\n\
            solve         --cluster C --nodes 2 [--tokens 1024] [--k 1]\n\
            profile-topo  --cluster table1 [--nodes 2] [--noise 0.2]\n\
            bench-comm    [--mb 128]\n\
@@ -86,7 +86,9 @@ fn print_help() {
          CLUSTERS:   A | B | C | table1 (presets from the paper's Table 2)\n\
          BACKENDS:   sim (pure rust) | xla (compiled artifacts) | auto\n\
          A2A PLANS:  auto (policy preference) | direct | hier |\n\
-                     sched:xor | sched:rot | sched:bvn (byte-aware BvN)"
+                     sched:xor | sched:rot | sched:bvn (byte-aware BvN)\n\
+         PLACEMENT:  off (canonical expert hosting) | on (amortised live\n\
+                     migration, default cadence) | <every-steps>"
     );
 }
 
@@ -172,6 +174,9 @@ fn cmd_train(flags: &Flags) -> Result<()> {
     if let Some(a) = flags.get("a2a") {
         cfg.a2a = a.clone();
     }
+    if let Some(p) = flags.get("placement") {
+        cfg.placement = p.clone();
+    }
     if let Some(b) = flags.get("backend") {
         cfg.backend = b.clone();
     }
@@ -192,11 +197,16 @@ fn cmd_train(flags: &Flags) -> Result<()> {
     if let Some(algo) = cfg.parsed_a2a()? {
         builder = builder.a2a(algo);
     }
+    let placement_cfg = cfg.parsed_placement()?;
+    if let Some(pcfg) = placement_cfg {
+        builder = builder.placement(pcfg);
+    }
     let mut session = builder.build()?;
 
     let topo = session.topology();
     println!(
-        "train: artifact={} backend={} cluster={} (P={}, {} nodes) strategy={} a2a={} steps={}",
+        "train: artifact={} backend={} cluster={} (P={}, {} nodes) strategy={} a2a={} \
+         placement={} steps={}",
         cfg.artifact,
         session.backend_name(),
         cfg.cluster,
@@ -204,6 +214,10 @@ fn cmd_train(flags: &Flags) -> Result<()> {
         topo.n_nodes(),
         session.policy().name(),
         session.a2a_algo(),
+        match placement_cfg {
+            Some(p) => format!("every {} steps", p.every),
+            None => "off".into(),
+        },
         cfg.steps
     );
 
@@ -247,6 +261,19 @@ fn cmd_train(flags: &Flags) -> Result<()> {
         session.log().plan_misses,
         out.display()
     );
+    if placement_cfg.is_some() {
+        let log = session.log();
+        let (pred, real) = log.migration_savings();
+        println!(
+            "placement: {} migrations, {:.0} KiB of expert weights moved; \
+             per-step savings at decision time, summed over migrations: \
+             predicted {:.3}ms vs realized {:.3}ms",
+            log.migrations.len(),
+            log.migration_bytes() / 1024.0,
+            pred * 1e3,
+            real * 1e3
+        );
+    }
     Ok(())
 }
 

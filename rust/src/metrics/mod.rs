@@ -32,14 +32,36 @@ pub struct StepRecord {
     /// Whether this step's a2a schedule came from the session's
     /// `PlanCache` (true = hit) rather than a fresh synthesis.
     pub plan_cached: bool,
+    /// Simulated time spent migrating expert weights this step (0 for the
+    /// overwhelming majority of steps; charged by the placement engine).
+    pub sim_migration_s: f64,
     /// Host wall-clock spent executing the XLA step (not simulated).
     pub wall_s: f64,
 }
 
 impl StepRecord {
     pub fn sim_total_s(&self) -> f64 {
-        self.sim_comm_s + self.sim_compute_s
+        self.sim_comm_s + self.sim_compute_s + self.sim_migration_s
     }
+}
+
+/// One accepted expert migration, as the run log records it: what moved,
+/// what the move cost on the cluster clock, and the per-step savings the
+/// amortisation decision predicted vs what the live counts realised.
+#[derive(Clone, Debug, Default)]
+pub struct MigrationRecord {
+    /// Training step the migration happened on.
+    pub step: usize,
+    /// Number of experts whose host changed.
+    pub moved: usize,
+    /// Expert-weight bytes moved over the links.
+    pub bytes: f64,
+    /// One-off migration time charged to the step clock.
+    pub cost_s: f64,
+    /// Predicted per-step a2a saving (on the EWMA load estimate).
+    pub predicted_saving_s: f64,
+    /// Per-step saving re-priced on the deciding step's live counts.
+    pub realized_saving_s: f64,
 }
 
 /// A labelled sequence of step records (+ optional eval points).
@@ -56,6 +78,8 @@ pub struct RunLog {
     pub plan_hits: u64,
     /// `PlanCache` cold schedule syntheses over the run.
     pub plan_misses: u64,
+    /// Accepted expert migrations, in step order (placement engine).
+    pub migrations: Vec<MigrationRecord>,
 }
 
 impl RunLog {
@@ -120,6 +144,24 @@ impl RunLog {
         s / k as f64
     }
 
+    /// Record an accepted expert migration.
+    pub fn push_migration(&mut self, m: MigrationRecord) {
+        self.migrations.push(m);
+    }
+
+    /// Total expert-weight bytes moved by migrations over the run.
+    pub fn migration_bytes(&self) -> f64 {
+        self.migrations.iter().map(|m| m.bytes).sum()
+    }
+
+    /// Summed per-step savings accounting over all migrations:
+    /// `(predicted_s, realized_s)`.
+    pub fn migration_savings(&self) -> (f64, f64) {
+        self.migrations.iter().fold((0.0, 0.0), |(p, r), m| {
+            (p + m.predicted_saving_s, r + m.realized_saving_s)
+        })
+    }
+
     /// Accumulated per-phase a2a split over the run:
     /// `(local_s, intra_s, inter_s)` — the fig6-style "where does the
     /// communication time go" series.
@@ -134,7 +176,8 @@ impl RunLog {
     }
 
     /// Write `step,loss,ce,aux,dropped,sim_comm_s,sim_compute_s,
-    /// a2a_local_s,a2a_intra_s,a2a_inter_s,plan_hit,sim_t` CSV.
+    /// a2a_local_s,a2a_intra_s,a2a_inter_s,plan_hit,migration_s,sim_t`
+    /// CSV.
     pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
@@ -143,13 +186,13 @@ impl RunLog {
         writeln!(
             f,
             "step,loss,ce,aux,dropped,sim_comm_s,sim_compute_s,\
-             a2a_local_s,a2a_intra_s,a2a_inter_s,plan_hit,sim_t"
+             a2a_local_s,a2a_intra_s,a2a_inter_s,plan_hit,migration_s,sim_t"
         )?;
         let axis = self.sim_time_axis();
         for (r, t) in self.records.iter().zip(axis) {
             writeln!(
                 f,
-                "{},{:.6},{:.6},{:.6},{:.4},{:.6e},{:.6e},{:.6e},{:.6e},{:.6e},{},{:.6e}",
+                "{},{:.6},{:.6},{:.6},{:.4},{:.6e},{:.6e},{:.6e},{:.6e},{:.6e},{},{:.6e},{:.6e}",
                 r.step,
                 r.loss,
                 r.ce,
@@ -161,6 +204,7 @@ impl RunLog {
                 r.sim_a2a_intra_s,
                 r.sim_a2a_inter_s,
                 r.plan_cached as u8,
+                r.sim_migration_s,
                 t
             )?;
         }
@@ -184,6 +228,13 @@ impl RunLog {
         m.insert("sim_a2a_inter_s".into(), Json::Num(inter));
         m.insert("plan_hits".into(), Json::Num(self.plan_hits as f64));
         m.insert("plan_misses".into(), Json::Num(self.plan_misses as f64));
+        m.insert("migrations".into(), Json::Num(self.migrations.len() as f64));
+        m.insert("migration_bytes".into(), Json::Num(self.migration_bytes()));
+        let mig_s: f64 = self.records.iter().map(|r| r.sim_migration_s).sum();
+        m.insert("migration_s".into(), Json::Num(mig_s));
+        let (pred, real) = self.migration_savings();
+        m.insert("migration_predicted_saving_s".into(), Json::Num(pred));
+        m.insert("migration_realized_saving_s".into(), Json::Num(real));
         Json::Obj(m)
     }
 }
@@ -278,6 +329,44 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.starts_with("step,loss"));
         assert_eq!(text.lines().count(), 2);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn migration_accounting_surfaces_everywhere() {
+        let mut log = RunLog::new("x", 10);
+        log.push(StepRecord {
+            step: 0,
+            sim_comm_s: 1.0,
+            sim_compute_s: 1.0,
+            sim_migration_s: 0.5,
+            ..Default::default()
+        });
+        log.push(StepRecord { step: 1, sim_comm_s: 1.0, sim_compute_s: 1.0, ..Default::default() });
+        log.push_migration(MigrationRecord {
+            step: 0,
+            moved: 2,
+            bytes: 2048.0,
+            cost_s: 0.5,
+            predicted_saving_s: 0.1,
+            realized_saving_s: 0.08,
+        });
+        // the migration is charged to the step clock
+        assert_eq!(log.records[0].sim_total_s(), 2.5);
+        assert_eq!(log.sim_time_axis(), vec![2.5, 4.5]);
+        assert_eq!(log.migration_bytes(), 2048.0);
+        let (p, r) = log.migration_savings();
+        assert!((p - 0.1).abs() < 1e-12 && (r - 0.08).abs() < 1e-12);
+        let json = log.summary_json().to_string_compact();
+        assert!(json.contains("\"migrations\":1"), "{json}");
+        assert!(json.contains("\"migration_bytes\":2048"), "{json}");
+        let path = std::env::temp_dir().join("ta_moe_test_metrics_migration.csv");
+        log.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let header = text.lines().next().unwrap();
+        let col = header.split(',').position(|c| c == "migration_s").unwrap();
+        let row0: Vec<&str> = text.lines().nth(1).unwrap().split(',').collect();
+        assert_eq!(row0[col], "5.000000e-1");
         let _ = std::fs::remove_file(&path);
     }
 

@@ -1,0 +1,347 @@
+//! Topology- and load-aware expert placement (the dual axis to §4.2).
+//!
+//! TA-MoE adapts the *dispatch pattern* to the topology; this module
+//! adapts the *expert-to-device mapping* to the observed gate load — the
+//! optimisation axis the related systems exploit (HetuMoE's hierarchical
+//! dispatch presumes good expert locality, MoNTA co-optimises the parallel
+//! layout with network traffic). A hot expert stranded behind a slow
+//! inter-node link no longer stays there forever:
+//!
+//! * [`Placement`] — the expert→device map. The canonical (identity)
+//!   mapping `expert e → device e / e_per_dev` is the default everywhere;
+//!   any other map must still be a permutation of the expert slots that
+//!   hosts exactly `e_per_dev` experts per device.
+//! * [`GateLoadEwma`] — an exponentially-weighted accumulator over the
+//!   per-step dispatch counts `c_ie`, the load estimate placement
+//!   decisions are made on (one noisy step must not trigger a migration).
+//! * [`solver`] — the placement objective (predicted per-exchange byte
+//!   matrix priced through the [`crate::comm::CostEngine`] contention
+//!   model) plus two deterministic solvers: a locality-aware greedy
+//!   initialiser and a swap-based local search that never increases the
+//!   priced objective.
+//! * [`engine`] — the amortised live-migration controller: re-placement
+//!   only triggers when the predicted per-step savings pay for moving the
+//!   expert weights (priced over the real links) within a configurable
+//!   horizon. Every accepted migration bumps a *placement epoch* that
+//!   invalidates the step-level `PlanCache` (schedules were synthesised
+//!   for the old routing).
+//!
+//! Placement changes where experts *live*, not what the gate *learns*:
+//! the dispatch matrix `c_ie` stays in expert space, and only its routing
+//! onto devices (byte matrices, per-device compute loads, the intra-node
+//! mask) goes through the placement map.
+
+pub mod engine;
+pub mod solver;
+
+pub use engine::{Migration, PlacementConfig, PlacementEngine};
+pub use solver::{greedy_placement, local_search, solve_placement, PlacementObjective};
+
+use crate::topology::Topology;
+use crate::util::Mat;
+
+/// An expert→device map: `device_of[e]` hosts expert `e`. Always a
+/// permutation of the canonical layout — every device hosts exactly
+/// `e_per_dev` experts.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Placement {
+    device_of: Vec<usize>,
+    p: usize,
+    e_per_dev: usize,
+}
+
+impl Placement {
+    /// The canonical mapping `expert e → device e / e_per_dev`.
+    pub fn identity(p: usize, e_per_dev: usize) -> Placement {
+        assert!(p >= 1 && e_per_dev >= 1);
+        Placement {
+            device_of: (0..p * e_per_dev).map(|e| e / e_per_dev).collect(),
+            p,
+            e_per_dev,
+        }
+    }
+
+    /// Build from an explicit map, validating the `e_per_dev`-slot
+    /// permutation invariant.
+    pub fn from_device_of(
+        device_of: Vec<usize>,
+        p: usize,
+        e_per_dev: usize,
+    ) -> Result<Placement, String> {
+        if device_of.len() != p * e_per_dev {
+            return Err(format!(
+                "placement maps {} experts, world has {}",
+                device_of.len(),
+                p * e_per_dev
+            ));
+        }
+        let mut slots = vec![0usize; p];
+        for (e, &d) in device_of.iter().enumerate() {
+            if d >= p {
+                return Err(format!("expert {e} placed on device {d} >= P={p}"));
+            }
+            slots[d] += 1;
+        }
+        if let Some(d) = (0..p).find(|&d| slots[d] != e_per_dev) {
+            return Err(format!(
+                "device {d} hosts {} experts, every device must host {e_per_dev}",
+                slots[d]
+            ));
+        }
+        Ok(Placement { device_of, p, e_per_dev })
+    }
+
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    pub fn e_per_dev(&self) -> usize {
+        self.e_per_dev
+    }
+
+    pub fn n_experts(&self) -> usize {
+        self.device_of.len()
+    }
+
+    /// Device hosting expert `e`.
+    #[inline]
+    pub fn device_of(&self, e: usize) -> usize {
+        self.device_of[e]
+    }
+
+    pub fn device_map(&self) -> &[usize] {
+        &self.device_of
+    }
+
+    /// Experts hosted on device `d`, in expert order.
+    pub fn experts_on(&self, d: usize) -> Vec<usize> {
+        (0..self.device_of.len()).filter(|&e| self.device_of[e] == d).collect()
+    }
+
+    /// Is this the canonical `e / e_per_dev` layout?
+    pub fn is_identity(&self) -> bool {
+        self.device_of.iter().enumerate().all(|(e, &d)| d == e / self.e_per_dev)
+    }
+
+    /// Swap the hosts of two experts (the local-search move). Keeps the
+    /// slot invariant by construction.
+    pub fn swap_experts(&mut self, a: usize, b: usize) {
+        self.device_of.swap(a, b);
+    }
+
+    /// `[P, N]` mask: 1.0 where expert `e`'s host shares a node with
+    /// device `i` — the placement-aware form of
+    /// [`Topology::local_mask`].
+    pub fn local_mask(&self, topo: &Topology) -> Mat {
+        assert_eq!(topo.p(), self.p, "placement/topology world mismatch");
+        Mat::from_fn(self.p, self.n_experts(), |i, e| {
+            if topo.same_node(i, self.device_of[e]) {
+                1.0
+            } else {
+                0.0
+            }
+        })
+    }
+
+    /// Route a `P×N` dispatch matrix (tokens) onto devices: the `P×P`
+    /// byte matrix of one exchange under this placement
+    /// (`bytes[i][j] = Σ_{e on j} counts[i][e] · token_bytes`).
+    pub fn bytes_matrix(&self, counts: &Mat, token_bytes: f64) -> Mat {
+        assert_eq!(counts.rows(), self.p, "counts rows");
+        assert_eq!(counts.cols(), self.n_experts(), "counts cols");
+        // accumulate tokens first, scale once: identical rounding to the
+        // canonical sum-then-multiply bytes loop in `step_cost`, so the
+        // identity placement reproduces it bit-for-bit
+        let mut bytes = Mat::zeros(self.p, self.p);
+        for i in 0..self.p {
+            for e in 0..self.n_experts() {
+                bytes.add_assign(i, self.device_of[e], counts.get(i, e));
+            }
+        }
+        for v in bytes.data_mut() {
+            *v *= token_bytes;
+        }
+        bytes
+    }
+
+    /// Tokens received per device under this placement (the expert-compute
+    /// load the slowest device bounds).
+    pub fn recv_per_device(&self, counts: &Mat) -> Vec<f64> {
+        assert_eq!(counts.cols(), self.n_experts(), "counts cols");
+        let mut recv = vec![0.0; self.p];
+        for e in 0..self.n_experts() {
+            recv[self.device_of[e]] += counts.col_sum(e);
+        }
+        recv
+    }
+
+    /// Experts hosted on a different device in `to` than here.
+    pub fn moved_experts(&self, to: &Placement) -> Vec<usize> {
+        assert_eq!(self.device_of.len(), to.device_of.len());
+        (0..self.device_of.len()).filter(|&e| self.device_of[e] != to.device_of[e]).collect()
+    }
+
+    /// `P×P` byte matrix of migrating from this placement to `to`:
+    /// `expert_bytes` flows from each moved expert's old host to its new
+    /// host. Priced over the real links by the migration cost model.
+    pub fn migration_bytes(&self, to: &Placement, expert_bytes: f64) -> Mat {
+        let mut bytes = Mat::zeros(self.p, self.p);
+        for e in self.moved_experts(to) {
+            bytes.add_assign(self.device_of[e], to.device_of[e], expert_bytes);
+        }
+        bytes
+    }
+}
+
+/// EWMA accumulator over per-step gate loads `c_ie` (tokens, P×N). The
+/// placement engine decides on this smoothed estimate, never on a single
+/// step's counts.
+#[derive(Clone, Debug)]
+pub struct GateLoadEwma {
+    loads: Mat,
+    alpha: f64,
+    steps: u64,
+}
+
+impl GateLoadEwma {
+    /// `alpha` is the weight of the newest observation (0 < alpha ≤ 1).
+    pub fn new(p: usize, n_experts: usize, alpha: f64) -> GateLoadEwma {
+        assert!(alpha > 0.0 && alpha <= 1.0, "ewma alpha {alpha} out of (0, 1]");
+        GateLoadEwma { loads: Mat::zeros(p, n_experts), alpha, steps: 0 }
+    }
+
+    /// Fold one step's dispatch counts in. The first observation seeds the
+    /// estimate directly (no decay toward the zero init).
+    pub fn observe(&mut self, counts: &Mat) {
+        assert_eq!(
+            (counts.rows(), counts.cols()),
+            (self.loads.rows(), self.loads.cols()),
+            "counts shape"
+        );
+        if self.steps == 0 {
+            self.loads = counts.clone();
+        } else {
+            let a = self.alpha;
+            for (l, &c) in self.loads.data_mut().iter_mut().zip(counts.data()) {
+                *l = (1.0 - a) * *l + a * c;
+            }
+        }
+        self.steps += 1;
+    }
+
+    /// The smoothed per-step load estimate (tokens, P×N).
+    pub fn loads(&self) -> &Mat {
+        &self.loads
+    }
+
+    /// Observations folded in so far.
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::presets;
+
+    #[test]
+    fn identity_matches_canonical_hosting() {
+        let pl = Placement::identity(4, 2);
+        assert_eq!(pl.n_experts(), 8);
+        assert!(pl.is_identity());
+        for e in 0..8 {
+            assert_eq!(pl.device_of(e), e / 2);
+        }
+        assert_eq!(pl.experts_on(1), vec![2, 3]);
+    }
+
+    #[test]
+    fn from_device_of_validates_slots() {
+        assert!(Placement::from_device_of(vec![0, 1, 2, 3], 4, 1).is_ok());
+        assert!(Placement::from_device_of(vec![1, 0, 3, 2], 4, 1).is_ok());
+        // device 0 hosts two experts, device 1 none
+        assert!(Placement::from_device_of(vec![0, 0, 2, 3], 4, 1).is_err());
+        // out of range
+        assert!(Placement::from_device_of(vec![0, 1, 2, 4], 4, 1).is_err());
+        // wrong length
+        assert!(Placement::from_device_of(vec![0, 1], 4, 1).is_err());
+    }
+
+    #[test]
+    fn swap_keeps_validity_and_breaks_identity() {
+        let mut pl = Placement::identity(4, 1);
+        pl.swap_experts(0, 2);
+        assert!(!pl.is_identity());
+        assert_eq!(pl.device_of(0), 2);
+        assert_eq!(pl.device_of(2), 0);
+        assert!(Placement::from_device_of(pl.device_map().to_vec(), 4, 1).is_ok());
+    }
+
+    #[test]
+    fn local_mask_follows_the_placement_not_the_expert_id() {
+        let topo = presets::table1(); // [2,2]: devices {0,1} node0, {2,3} node1
+        let mut pl = Placement::identity(4, 1);
+        pl.swap_experts(0, 2);
+        let m = pl.local_mask(&topo);
+        // expert 2 now lives on device 0 (node 0)
+        assert_eq!(m.get(0, 2), 1.0);
+        assert_eq!(m.get(3, 2), 0.0);
+        // expert 0 moved to node 1
+        assert_eq!(m.get(0, 0), 0.0);
+        assert_eq!(m.get(3, 0), 1.0);
+        // canonical mask for untouched experts
+        assert_eq!(m.get(0, 1), 1.0);
+        assert_eq!(m.get(3, 3), 1.0);
+    }
+
+    #[test]
+    fn bytes_matrix_routes_through_the_placement() {
+        let mut counts = Mat::zeros(2, 4); // P=2, e_per_dev=2
+        counts.set(0, 2, 10.0);
+        counts.set(0, 3, 5.0);
+        let ident = Placement::identity(2, 2);
+        let b = ident.bytes_matrix(&counts, 2.0);
+        assert_eq!(b.get(0, 1), 30.0); // experts 2,3 on device 1
+        let mut pl = Placement::identity(2, 2);
+        pl.swap_experts(0, 2); // expert 2 → device 0, expert 0 → device 1
+        let b = pl.bytes_matrix(&counts, 2.0);
+        assert_eq!(b.get(0, 0), 20.0);
+        assert_eq!(b.get(0, 1), 10.0);
+    }
+
+    #[test]
+    fn recv_per_device_groups_by_host() {
+        let counts = Mat::from_fn(2, 2, |i, e| (i * 2 + e) as f64 + 1.0);
+        // col sums: e0 = 1 + 3 = 4, e1 = 2 + 4 = 6
+        let ident = Placement::identity(2, 1);
+        assert_eq!(ident.recv_per_device(&counts), vec![4.0, 6.0]);
+        let swapped = Placement::from_device_of(vec![1, 0], 2, 1).unwrap();
+        assert_eq!(swapped.recv_per_device(&counts), vec![6.0, 4.0]);
+    }
+
+    #[test]
+    fn migration_bytes_covers_exactly_the_moved_experts() {
+        let a = Placement::identity(4, 1);
+        let mut b = Placement::identity(4, 1);
+        b.swap_experts(1, 3);
+        assert_eq!(a.moved_experts(&b), vec![1, 3]);
+        let m = a.migration_bytes(&b, 100.0);
+        assert_eq!(m.get(1, 3), 100.0); // expert 1: device 1 → 3
+        assert_eq!(m.get(3, 1), 100.0); // expert 3: device 3 → 1
+        assert_eq!(m.sum(), 200.0);
+        assert!(a.migration_bytes(&a, 100.0).sum() == 0.0);
+    }
+
+    #[test]
+    fn ewma_seeds_then_smooths() {
+        let mut ew = GateLoadEwma::new(1, 2, 0.5);
+        assert_eq!(ew.steps(), 0);
+        ew.observe(&Mat::from_vec(1, 2, vec![4.0, 0.0]));
+        assert_eq!(ew.loads().get(0, 0), 4.0, "first observation seeds");
+        ew.observe(&Mat::from_vec(1, 2, vec![0.0, 4.0]));
+        assert_eq!(ew.loads().get(0, 0), 2.0);
+        assert_eq!(ew.loads().get(0, 1), 2.0);
+        assert_eq!(ew.steps(), 2);
+    }
+}

@@ -1,0 +1,331 @@
+//! Placement objective + solvers.
+//!
+//! The objective prices what placement actually changes: the `P×P` byte
+//! matrix of one dispatch exchange (loads routed onto devices through the
+//! placement map) under the [`CostEngine`] contention model — the same
+//! α-β machinery the step clock uses, so "better placement" means "this
+//! exchange completes sooner on these links", not a proxy like inter-node
+//! byte count.
+//!
+//! Two deterministic solvers:
+//!
+//! * [`greedy_placement`] — locality-aware initialiser: experts are
+//!   assigned heaviest-first to the open device minimising the
+//!   load-weighted α-β delivery cost from every sender (ties broken by
+//!   device index, so the result is reproducible);
+//! * [`local_search`] — first-improvement swap descent over expert pairs:
+//!   a swap is kept only when the priced objective strictly drops, so the
+//!   search is monotone non-increasing and terminates.
+//!
+//! [`solve_placement`] runs the search from both the current placement and
+//! the greedy initialiser and returns the cheaper result, preferring the
+//! current-seeded one on ties (fewer weights to move).
+
+use super::Placement;
+use crate::comm::CostEngine;
+use crate::topology::Topology;
+use crate::util::Mat;
+
+/// Swap-descent sweeps bound (each sweep is O(N²) candidate swaps, each
+/// re-priced from scratch — placement attempts run at the engine cadence,
+/// not per step, so the simple full re-price stays well inside the
+/// per-topology budget at the P this repo sweeps; an incremental census
+/// delta à la `refine_rounds` is the upgrade path if P grows).
+const SEARCH_SWEEPS: usize = 8;
+/// Relative improvement a swap must clear to be accepted (guards against
+/// fp-noise cycles; also the "strictly decreases" margin tests rely on).
+const SEARCH_REL_TOL: f64 = 1e-12;
+
+/// Prices placements on one topology: predicted per-exchange completion
+/// time of the EWMA loads routed through a candidate map, and the cost of
+/// moving expert weights over the real links.
+pub struct PlacementObjective<'a> {
+    engine: CostEngine<'a>,
+    token_bytes: f64,
+}
+
+impl<'a> PlacementObjective<'a> {
+    /// `token_bytes` is the wire size of one dispatched token (d · elem).
+    pub fn new(topo: &'a Topology, token_bytes: f64) -> PlacementObjective<'a> {
+        PlacementObjective { engine: CostEngine::contention(topo), token_bytes }
+    }
+
+    /// Completion time of one dispatch exchange of `loads` (tokens, P×N)
+    /// under `placement`.
+    pub fn cost(&mut self, loads: &Mat, placement: &Placement) -> f64 {
+        self.engine.exchange_time(&placement.bytes_matrix(loads, self.token_bytes))
+    }
+
+    /// Time to move every re-placed expert's weights (`expert_bytes` each)
+    /// from its old host to its new one, as one concurrent exchange over
+    /// the real links. Zero when the placements agree.
+    pub fn migration_cost(&mut self, from: &Placement, to: &Placement, expert_bytes: f64) -> f64 {
+        let bytes = from.migration_bytes(to, expert_bytes);
+        if bytes.sum() <= 0.0 {
+            return 0.0;
+        }
+        self.engine.exchange_time(&bytes)
+    }
+}
+
+/// Locality-aware greedy initial placement: experts heaviest-first, each
+/// onto the open device minimising `Σ_i loads[i][e] · (α_id + β_id·tok)`
+/// — the load-weighted isolated delivery cost of reaching that expert
+/// there. Deterministic: ties break toward the lower expert id and lower
+/// device id. The result always satisfies the `e_per_dev` slot invariant.
+pub fn greedy_placement(
+    topo: &Topology,
+    loads: &Mat,
+    e_per_dev: usize,
+    token_bytes: f64,
+) -> Placement {
+    let p = topo.p();
+    let n = p * e_per_dev;
+    assert_eq!((loads.rows(), loads.cols()), (p, n), "loads shape");
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| loads.col_sum(b).total_cmp(&loads.col_sum(a)).then(a.cmp(&b)));
+    let mut free = vec![e_per_dev; p];
+    let mut device_of = vec![usize::MAX; n];
+    for e in order {
+        let mut best = usize::MAX;
+        let mut best_cost = f64::INFINITY;
+        for d in 0..p {
+            if free[d] == 0 {
+                continue;
+            }
+            let cost: f64 = (0..p)
+                .map(|i| {
+                    loads.get(i, e) * (topo.alpha(i, d) + topo.beta(i, d) * token_bytes)
+                })
+                .sum();
+            if cost < best_cost {
+                best_cost = cost;
+                best = d;
+            }
+        }
+        device_of[e] = best;
+        free[best] -= 1;
+    }
+    Placement::from_device_of(device_of, p, e_per_dev).expect("greedy respects slots")
+}
+
+/// First-improvement swap descent from `init`: repeatedly try swapping
+/// every expert pair hosted on different devices, keeping a swap only when
+/// the priced objective strictly drops. Monotone non-increasing in the
+/// objective; returns when a full sweep finds no improving swap (or at the
+/// sweep bound).
+pub fn local_search(
+    obj: &mut PlacementObjective<'_>,
+    loads: &Mat,
+    init: Placement,
+) -> Placement {
+    let n = init.n_experts();
+    let mut placement = init;
+    let mut cost = obj.cost(loads, &placement);
+    for _ in 0..SEARCH_SWEEPS {
+        let mut improved = false;
+        for a in 0..n {
+            for b in (a + 1)..n {
+                if placement.device_of(a) == placement.device_of(b) {
+                    continue;
+                }
+                placement.swap_experts(a, b);
+                let c = obj.cost(loads, &placement);
+                if c < cost * (1.0 - SEARCH_REL_TOL) {
+                    cost = c;
+                    improved = true;
+                } else {
+                    placement.swap_experts(a, b); // revert
+                }
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+    placement
+}
+
+/// Solve for a placement of `loads` on `topo`: swap descent seeded from
+/// both the current placement and the greedy initialiser; the cheaper
+/// result wins, with ties (within fp tolerance) going to the
+/// current-seeded solution so no-op decisions don't shuffle experts.
+pub fn solve_placement(
+    topo: &Topology,
+    loads: &Mat,
+    current: &Placement,
+    token_bytes: f64,
+) -> Placement {
+    let mut obj = PlacementObjective::new(topo, token_bytes);
+    let from_current = local_search(&mut obj, loads, current.clone());
+    let greedy = greedy_placement(topo, loads, current.e_per_dev(), token_bytes);
+    let from_greedy = local_search(&mut obj, loads, greedy);
+    let c_cur = obj.cost(loads, &from_current);
+    let c_grd = obj.cost(loads, &from_greedy);
+    if c_grd < c_cur * (1.0 - SEARCH_REL_TOL) {
+        from_greedy
+    } else {
+        from_current
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{presets, Link, Topology, TreeSpec};
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    fn random_tree(rng: &mut Rng) -> Topology {
+        let n_nodes = rng.range(2, 4);
+        let per_node = rng.range(2, 4);
+        let dev = Link::from_gbps_us(rng.range_f64(20.0, 300.0), rng.range_f64(1.0, 5.0));
+        let up = Link::from_gbps_us(rng.range_f64(4.0, 25.0), rng.range_f64(5.0, 30.0));
+        Topology::tree(
+            &TreeSpec::symmetric(&[n_nodes, per_node]),
+            &[dev, up],
+            presets::local_copy(),
+        )
+    }
+
+    /// The skewed load of the scenario tests: node-0 devices crowd the
+    /// experts canonically hosted on node 1, node-1 devices stay uniform.
+    fn skewed_loads(topo: &Topology, sent: f64) -> Mat {
+        let p = topo.p();
+        Mat::from_fn(p, p, |i, e| {
+            if topo.node_of(i) == 0 {
+                let hot = topo.node_of(e) == 1;
+                let n_hot = (0..p).filter(|&x| topo.node_of(x) == 1).count() as f64;
+                let n_cold = p as f64 - n_hot;
+                if hot {
+                    0.9 * sent / n_hot
+                } else {
+                    0.1 * sent / n_cold
+                }
+            } else {
+                sent / p as f64
+            }
+        })
+    }
+
+    #[test]
+    fn prop_solvers_emit_valid_placements() {
+        check(
+            25,
+            0x51AC,
+            |rng| {
+                let topo = random_tree(rng);
+                let p = topo.p();
+                let e_per_dev = 1 + rng.below(2);
+                let loads = Mat::from_fn(p, p * e_per_dev, |_, _| rng.range_f64(0.0, 1000.0));
+                (topo, loads, e_per_dev)
+            },
+            |(topo, loads, e_per_dev)| {
+                let tok = 512.0;
+                let greedy = greedy_placement(topo, loads, *e_per_dev, tok);
+                Placement::from_device_of(
+                    greedy.device_map().to_vec(),
+                    topo.p(),
+                    *e_per_dev,
+                )
+                .map_err(|e| format!("greedy: {e}"))?;
+                let mut obj = PlacementObjective::new(topo, tok);
+                let searched = local_search(&mut obj, loads, greedy);
+                Placement::from_device_of(
+                    searched.device_map().to_vec(),
+                    topo.p(),
+                    *e_per_dev,
+                )
+                .map_err(|e| format!("local_search: {e}"))?;
+                let solved =
+                    solve_placement(topo, loads, &Placement::identity(topo.p(), *e_per_dev), tok);
+                Placement::from_device_of(
+                    solved.device_map().to_vec(),
+                    topo.p(),
+                    *e_per_dev,
+                )
+                .map_err(|e| format!("solve: {e}"))?;
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_local_search_never_increases_the_objective() {
+        check(
+            25,
+            0x51AD,
+            |rng| {
+                let topo = random_tree(rng);
+                let p = topo.p();
+                let loads = Mat::from_fn(p, p, |_, _| rng.range_f64(0.0, 1000.0));
+                // random valid start: a shuffled identity
+                let mut device_of: Vec<usize> = (0..p).collect();
+                rng.shuffle(&mut device_of);
+                (topo, loads, device_of)
+            },
+            |(topo, loads, device_of)| {
+                let tok = 512.0;
+                let init = Placement::from_device_of(device_of.clone(), topo.p(), 1).unwrap();
+                let mut obj = PlacementObjective::new(topo, tok);
+                let before = obj.cost(loads, &init);
+                let after_p = local_search(&mut obj, loads, init);
+                let after = obj.cost(loads, &after_p);
+                if after > before * (1.0 + 1e-9) {
+                    return Err(format!("search increased cost {before} → {after}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn skewed_load_beats_canonical_on_2x2_tree() {
+        // The scenario the subsystem exists for: node-0 senders crowd the
+        // experts canonically hosted across the uplink. The solver must
+        // pull the hot experts onto node 0 and strictly beat identity.
+        let topo = presets::table1(); // the [2,2] tree
+        let loads = skewed_loads(&topo, 1024.0);
+        let ident = Placement::identity(4, 1);
+        let tok = 2048.0;
+        let mut obj = PlacementObjective::new(&topo, tok);
+        let c_ident = obj.cost(&loads, &ident);
+        let solved = solve_placement(&topo, &loads, &ident, tok);
+        let c_solved = obj.cost(&loads, &solved);
+        assert!(
+            c_solved < c_ident * 0.9,
+            "solved {c_solved} not clearly below canonical {c_ident}"
+        );
+        assert!(!solved.is_identity());
+        // the hot experts (canonically on node 1) now live on node 0
+        let hot_on_node0 = (0..4)
+            .filter(|&e| topo.node_of(e) == 1 && topo.node_of(solved.device_of(e)) == 0)
+            .count();
+        assert!(hot_on_node0 >= 1, "no hot expert moved: {:?}", solved.device_map());
+    }
+
+    #[test]
+    fn uniform_load_keeps_identity_competitive() {
+        // On a symmetric tree with uniform load every placement prices the
+        // same, so solve_placement must return the current (identity)
+        // placement — the tie rule that prevents pointless migrations.
+        let topo = presets::table1();
+        let loads = Mat::filled(4, 4, 256.0);
+        let ident = Placement::identity(4, 1);
+        let solved = solve_placement(&topo, &loads, &ident, 2048.0);
+        assert!(solved.is_identity(), "{:?}", solved.device_map());
+    }
+
+    #[test]
+    fn greedy_pulls_hot_experts_toward_their_senders() {
+        let topo = presets::table1();
+        let loads = skewed_loads(&topo, 1024.0);
+        let greedy = greedy_placement(&topo, &loads, 1, 2048.0);
+        // the heaviest experts are the canonical node-1 residents; greedy
+        // must host at least one of them on node 0 (where the load is)
+        let pulled = (0..4)
+            .filter(|&e| topo.node_of(e) == 1 && topo.node_of(greedy.device_of(e)) == 0)
+            .count();
+        assert!(pulled >= 1, "{:?}", greedy.device_map());
+    }
+}

@@ -68,6 +68,19 @@ pub trait Backend {
     /// again restarts training from scratch.
     fn init(&mut self, seed: i32, gate: &GateInputs) -> Result<()>;
 
+    /// Replace the gate's runtime inputs **without** resetting model or
+    /// optimiser state — the live-update seam expert migration uses: a
+    /// re-placed expert changes the intra-node mask (and, for
+    /// topology-aware policies, the penalty/capacity matrices), and the
+    /// gate must steer toward the new hosting from wherever training
+    /// currently is. Backends that cannot apply a live update may ignore
+    /// it (the default is a no-op); callers must not assume the update
+    /// took effect on such backends.
+    fn update_gate(&mut self, gate: &GateInputs) -> Result<()> {
+        let _ = gate;
+        Ok(())
+    }
+
     /// One optimisation step on a `[P, B, T]` i32 token/target batch.
     fn train_step(
         &mut self,

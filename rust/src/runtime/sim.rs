@@ -119,6 +119,27 @@ impl SimBackend {
     }
 }
 
+/// The penalty matrix's fixed point under the mask/budget: row-normalised
+/// `1/penalty`, remote mass clipped to the compulsory budget. Shared by
+/// `init` and `update_gate` so a live-migrated gate relaxes toward exactly
+/// the fixed point a freshly-initialised one would.
+fn attractor_of(p: usize, n: usize, gate: &GateInputs) -> Mat {
+    let frac = gate.hir_remote_frac as f64;
+    let mut attractor = Mat::from_fn(p, n, |i, e| 1.0 / gate.penalty.get(i, e).max(1e-12));
+    for i in 0..p {
+        normalise(attractor.row_mut(i));
+        clip_remote(attractor.row_mut(i), gate.local_mask.row(i), frac);
+    }
+    attractor
+}
+
+/// Converged CE for a gate configuration: compulsory (non-learnable)
+/// routing converges to a worse floor.
+fn floor_of(gate: &GateInputs) -> f64 {
+    let frac = gate.hir_remote_frac as f64;
+    CE_FLOOR + if frac < 1.0 { COMPULSORY_HANDICAP * (1.0 - frac) } else { 0.0 }
+}
+
 /// Scale a non-negative row to sum to 1.
 fn normalise(row: &mut [f64]) {
     let s: f64 = row.iter().sum();
@@ -196,23 +217,39 @@ impl Backend for SimBackend {
             clip_remote(init_pref.row_mut(i), gate.local_mask.row(i), frac);
         }
 
-        // Attractor: the penalty's fixed point — row-normalised 1/penalty.
-        let mut attractor =
-            Mat::from_fn(p, n, |i, e| 1.0 / gate.penalty.get(i, e).max(1e-12));
-        for i in 0..p {
-            normalise(attractor.row_mut(i));
-            clip_remote(attractor.row_mut(i), gate.local_mask.row(i), frac);
-        }
-
-        // Compulsory (non-learnable) routing converges to a worse floor.
-        let handicap = if frac < 1.0 { COMPULSORY_HANDICAP * (1.0 - frac) } else { 0.0 };
-
         self.init_pref = init_pref;
-        self.attractor = attractor;
+        self.attractor = attractor_of(p, n, gate);
         self.gate = Some(gate.clone());
         self.step = 0;
-        self.floor = CE_FLOOR + handicap;
+        self.floor = floor_of(gate);
         self.ce = (self.cfg.vocab as f64).ln() + 0.02 * rng.f64();
+        Ok(())
+    }
+
+    fn update_gate(&mut self, gate: &GateInputs) -> Result<()> {
+        self.require_init()?;
+        let (p, n) = (self.cfg.p, self.cfg.n_experts);
+        anyhow::ensure!(
+            gate.penalty.rows() == p && gate.penalty.cols() == n,
+            "penalty is {}x{}, model wants {p}x{n}",
+            gate.penalty.rows(),
+            gate.penalty.cols()
+        );
+        // Re-point the attractor at the new penalty's fixed point under
+        // the new mask/budget; training state (step, ce) is preserved —
+        // the gate relaxes toward the new target from wherever it
+        // currently is, exactly what a live loss-matrix swap does to the
+        // compiled gate. The historic initial preference is re-clipped
+        // against the new mask too: the compulsory budget is enforced by
+        // the dispatcher, so BOTH trajectory endpoints must satisfy it —
+        // every convex mix between them then does as well.
+        let frac = gate.hir_remote_frac as f64;
+        for i in 0..p {
+            clip_remote(self.init_pref.row_mut(i), gate.local_mask.row(i), frac);
+        }
+        self.attractor = attractor_of(p, n, gate);
+        self.floor = floor_of(gate);
+        self.gate = Some(gate.clone());
         Ok(())
     }
 
@@ -432,5 +469,30 @@ mod tests {
         let mut b = SimBackend::new(cfg.clone());
         let (tok, tgt) = batch(&cfg, 0);
         assert!(b.train_step(&tok, &tgt, 1e-3).is_err());
+    }
+
+    #[test]
+    fn update_gate_repoints_attractor_without_resetting_training() {
+        let cfg = ModelCfg::preset("tiny4").unwrap();
+        let mut b = SimBackend::new(cfg.clone());
+        let n = cfg.n_experts;
+        b.init(0, &gate_for(&cfg, Mat::filled(cfg.p, n, n as f64), 1.0)).unwrap();
+        let (tok, tgt) = batch(&cfg, 13);
+        let mut ce_before = f64::NAN;
+        for _ in 0..100 {
+            ce_before = b.train_step(&tok, &tgt, 2e-3).unwrap().ce;
+        }
+        // live-swap to a penalty that crowds the first expert
+        let skew = Mat::from_fn(cfg.p, n, |_, e| if e == 0 { 1.0 } else { 50.0 });
+        b.update_gate(&gate_for(&cfg, skew, 1.0)).unwrap();
+        let out = b.train_step(&tok, &tgt, 2e-3).unwrap();
+        // training state survived: the loss continues from where it was
+        assert!(out.ce <= ce_before + 0.05, "ce jumped: {} → {}", ce_before, out.ce);
+        // but the dispatch now tracks the new attractor
+        assert!(out.counts.get(0, 0) > 10.0 * out.counts.get(0, n - 1));
+        // update before init is an error
+        let mut fresh = SimBackend::new(cfg.clone());
+        let gate = gate_for(&cfg, Mat::filled(cfg.p, n, n as f64), 1.0);
+        assert!(fresh.update_gate(&gate).is_err());
     }
 }

@@ -316,9 +316,11 @@ impl Topology {
         (0..self.p).filter(|&j| self.level(i, j) == t).collect()
     }
 
-    /// Perturb all per-pair α/β with relative log-normal-ish noise — the
-    /// "profiling noise" that Eq. 5 smoothing is designed to remove. The
-    /// link graph is left untouched (contention still uses true links).
+    /// Perturb cross-device per-pair α/β with relative log-normal-ish
+    /// noise — the "profiling noise" that Eq. 5 smoothing is designed to
+    /// remove. Self pairs (i == j) are local memory copies no profiler
+    /// mismeasures, so the diagonal stays exact; the link graph is left
+    /// untouched (contention still uses true links).
     pub fn with_noise(&self, rel_sigma: f64, seed: u64) -> Topology {
         let mut rng = Rng::seed_from_u64(seed);
         let mut t = self.clone();
@@ -327,6 +329,10 @@ impl Topology {
             for j in 0..p {
                 let fa: f64 = 1.0 + rel_sigma * (rng.f64() * 2.0 - 1.0);
                 let fb: f64 = 1.0 + rel_sigma * (rng.f64() * 2.0 - 1.0);
+                if i == j {
+                    continue; // draws still consumed: off-diagonal noise
+                              // stays seed-stable across this fix
+                }
                 t.alpha.set(i, j, self.alpha.get(i, j) * fa.max(0.05));
                 t.beta.set(i, j, self.beta.get(i, j) * fb.max(0.05));
             }
@@ -446,5 +452,29 @@ mod tests {
         assert_eq!(n1.beta_mat(), n2.beta_mat());
         assert_eq!(n1.links(), t.links());
         assert!(n1.beta_mat().linf_dist(t.beta_mat()) > 0.0);
+    }
+
+    #[test]
+    fn noise_leaves_local_copies_exact() {
+        // regression: profiling noise used to perturb the diagonal too,
+        // distorting the local-copy (i == j) α/β that no profiler measures
+        // over a link
+        let spec = TreeSpec::parse("[[2,2],[2]]").unwrap();
+        let t = Topology::tree(&spec, &[l(1e-10), l(1e-8)], Link::new(3e-7, 1e-11));
+        let n = t.with_noise(0.3, 7);
+        for i in 0..t.p() {
+            assert_eq!(n.alpha(i, i), t.alpha(i, i), "alpha diag {i}");
+            assert_eq!(n.beta(i, i), t.beta(i, i), "beta diag {i}");
+        }
+        // off-diagonal entries are still perturbed
+        let mut moved = 0;
+        for i in 0..t.p() {
+            for j in 0..t.p() {
+                if i != j && n.beta(i, j) != t.beta(i, j) {
+                    moved += 1;
+                }
+            }
+        }
+        assert!(moved > 0, "noise must still perturb cross-device pairs");
     }
 }

@@ -269,6 +269,129 @@ fn builder_resolves_artifact_names_on_sim() {
 }
 
 // ---------------------------------------------------------------------------
+// topology- and load-aware expert placement (the PR-4 acceptance criterion)
+// ---------------------------------------------------------------------------
+
+/// A skewed synthetic gate load: node-0 devices crowd the experts
+/// canonically hosted on node 1 (45% each on a [2,2] tree), node-1
+/// devices dispatch uniformly. The penalty is keyed to the *canonical*
+/// host on purpose — the load lives in expert space and does not follow a
+/// migration, so placement alone must win the comparison.
+#[derive(Debug)]
+struct SkewedLoad;
+
+impl DispatchPolicy for SkewedLoad {
+    fn name(&self) -> String {
+        "skewed-load".into()
+    }
+
+    fn runtime_inputs(&self, topo: &Topology, cfg: &ModelCfg) -> PolicyInputs {
+        // sim-gate attractor = row-normalised 1/penalty: rows become
+        // (0.05, 0.05, 0.45, 0.45) for node-0 devices, uniform for node 1
+        let penalty = Mat::from_fn(cfg.p, cfg.n_experts, |i, e| {
+            if topo.node_of(i) == 0 && topo.node_of(e / cfg.e_per_dev) == 0 {
+                9.0
+            } else {
+                1.0
+            }
+        });
+        PolicyInputs {
+            gate: GateInputs {
+                penalty,
+                caps: even_caps(cfg.p, cfg.n_experts, cfg.capacity),
+                local_mask: topo.local_mask(cfg.n_experts, cfg.e_per_dev),
+                hir_remote_frac: 1.0,
+            },
+            target: None,
+        }
+    }
+
+    fn converged_counts(&self, topo: &Topology, cfg: &ModelCfg) -> Mat {
+        let inputs = self.runtime_inputs(topo, cfg);
+        let sent = (cfg.k * cfg.tokens_per_dev) as f64;
+        Mat::from_fn(cfg.p, cfg.n_experts, |i, e| {
+            let w = 1.0 / inputs.gate.penalty.get(i, e);
+            let row: f64 =
+                (0..cfg.n_experts).map(|x| 1.0 / inputs.gate.penalty.get(i, x)).sum();
+            sent * w / row
+        })
+    }
+}
+
+#[test]
+fn placement_beats_canonical_on_skewed_load_over_2x2_tree() {
+    let run = |placement_every: usize| {
+        let cfg = ModelCfg::preset("tiny4").unwrap(); // P = 4, matches [2,2]
+        let mut s = SessionBuilder::new()
+            .backend(Box::new(SimBackend::new(cfg)))
+            .topology(ta_moe::topology::presets::table1()) // the [2,2] tree preset
+            .policy(Box::new(SkewedLoad))
+            .seed(21)
+            .placement_every(placement_every) // 0 = canonical hosting forever
+            .build()
+            .unwrap();
+        s.run(80).unwrap();
+        s
+    };
+    let on = run(8);
+    let off = run(0);
+
+    // identical model/data/policy: the placement axis must not touch what
+    // the gate learns, only where its traffic lands
+    assert_eq!(
+        on.log().records.last().unwrap().loss,
+        off.log().records.last().unwrap().loss
+    );
+
+    // canonical run: no engine, no migrations, identity forever
+    assert!(off.placement().is_none());
+    assert!(off.log().migrations.is_empty());
+
+    // placement run: at least one amortisation-gated migration happened,
+    // with full savings accounting
+    let log = on.log();
+    assert!(
+        !log.migrations.is_empty(),
+        "skewed load over the [2,2] tree must trigger a migration"
+    );
+    assert!(on.placement().is_some_and(|p| !p.is_identity()));
+    assert!(on.placement_epoch() >= 1);
+    for m in &log.migrations {
+        assert!(m.moved > 0);
+        assert!(m.bytes > 0.0, "weight bytes moved must be recorded");
+        assert!(m.cost_s > 0.0, "migration time must be priced");
+        assert!(m.predicted_saving_s > 0.0, "gate only accepts predicted wins");
+        assert!(m.realized_saving_s.is_finite());
+        // the migration's cost is charged to that step's clock
+        let rec = &log.records[m.step];
+        assert_eq!(rec.sim_migration_s, m.cost_s);
+        assert!(rec.sim_total_s() >= rec.sim_comm_s + rec.sim_compute_s + m.cost_s - 1e-15);
+    }
+    assert!(log.migration_bytes() > 0.0);
+
+    // the acceptance bar: strictly lower total a2a sim time than the
+    // canonical placement...
+    let a2a_total = |s: &Session| {
+        let (l, a, e) = s.log().a2a_phase_totals();
+        l + a + e
+    };
+    let (t_on, t_off) = (a2a_total(&on), a2a_total(&off));
+    assert!(
+        t_on < t_off,
+        "placement-on a2a {t_on} must beat canonical {t_off}"
+    );
+    // ...and the migration pays for itself within the run even with its
+    // cost charged to the clock
+    let total = |s: &Session| s.log().sim_time_axis().last().copied().unwrap();
+    assert!(
+        total(&on) < total(&off),
+        "placement-on total {} must beat canonical {}",
+        total(&on),
+        total(&off)
+    );
+}
+
+// ---------------------------------------------------------------------------
 // third-party policy registration (the open-API acceptance criterion)
 // ---------------------------------------------------------------------------
 
