@@ -15,7 +15,11 @@
 //!
 //! ```bash
 //! cargo bench --bench ablation_a2a
+//! TA_MOE_BENCH_QUICK=1 cargo bench --bench ablation_a2a   # CI smoke
 //! ```
+//!
+//! Quick mode keeps every shape assertion but sweeps only the 2-node
+//! cluster-C arm (the one the paper's headline numbers come from).
 
 use std::collections::BTreeMap;
 use ta_moe::comm::A2aAlgo;
@@ -61,11 +65,15 @@ fn policies() -> Vec<Box<dyn DispatchPolicy>> {
 }
 
 fn main() {
+    // CI quick mode: one cluster arm, every assertion still enforced
+    let quick = std::env::var("TA_MOE_BENCH_QUICK").map(|v| v != "0").unwrap_or(false);
     println!("Ablation: a2a plan × dispatch policy × cluster (per-step a2a seconds)\n");
     let shape = ModelShape::gpt_medium(false, 6, 1024);
     let mut payload = BTreeMap::new();
 
-    for (cluster, nodes) in [("B", 2usize), ("C", 2), ("C", 4)] {
+    let arms: &[(&str, usize)] =
+        if quick { &[("C", 2)] } else { &[("B", 2), ("C", 2), ("C", 4)] };
+    for &(cluster, nodes) in arms {
         let topo = presets::by_name(cluster, nodes).unwrap();
         let p = topo.p();
         let cfg = cfg_for(p);

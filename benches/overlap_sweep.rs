@@ -1,0 +1,176 @@
+//! Sweep: chunk count × a2a plan × cluster on the overlap timeline.
+//!
+//! For every cluster arm and a2a algorithm, price one converged TA-MoE
+//! step at each chunk count in the autotuner's sweep and report the
+//! overlapped makespan and the exposed-communication fraction
+//! (exposed a2a / total a2a) — the overlap-layer companion to
+//! `ablation_a2a`: *how much of the wire time the pipeline hides* matters
+//! alongside what the pattern is and how it executes.
+//!
+//! Shape assertions:
+//! * `k = 1` reproduces the serial step price to 1e-12 on every arm;
+//! * the autotuned clock never exceeds the serial clock, and never
+//!   exceeds any swept fixed-`k` clock, on every arm;
+//! * the overlapped clock never drops below the analytic phase floor
+//!   `max(compute, allreduce)`.
+//!
+//! ```bash
+//! cargo bench --bench overlap_sweep
+//! TA_MOE_BENCH_QUICK=1 cargo bench --bench overlap_sweep   # CI smoke
+//! ```
+//!
+//! Quick mode sweeps only the 2-node cluster-C arm with the direct and
+//! BvN plans; all assertions stay enforced.
+
+use std::collections::BTreeMap;
+use ta_moe::comm::A2aAlgo;
+use ta_moe::coordinator::{
+    converged_counts, device_flops, step_cost, step_cost_overlapped, ModelShape, TaMoe,
+};
+use ta_moe::dispatch::Norm;
+use ta_moe::overlap::{OverlapMode, CHUNK_SWEEP};
+use ta_moe::runtime::ModelCfg;
+use ta_moe::topology::presets;
+use ta_moe::util::bench::{record_jsonl, Table};
+use ta_moe::util::json::Json;
+
+fn cfg_for(p: usize) -> ModelCfg {
+    ModelCfg {
+        p,
+        e_per_dev: 1,
+        layers: 12,
+        d: 1024,
+        f: 4096,
+        heads: 16,
+        vocab: 50_000,
+        batch: 6,
+        seq: 1024,
+        k: 1,
+        cap_factor: 1.0,
+        gate: "switch".into(),
+        dispatch: "local".into(),
+        n_experts: p,
+        capacity: 12_288,
+        tokens_per_dev: 6144,
+        moe_layer_ids: (0..6).map(|i| 2 * i + 1).collect(),
+    }
+}
+
+fn main() {
+    let quick = std::env::var("TA_MOE_BENCH_QUICK").map(|v| v != "0").unwrap_or(false);
+    println!("Overlap sweep: chunk count × a2a plan × cluster (per-step seconds)\n");
+    let shape = ModelShape::gpt_medium(false, 6, 1024);
+    let mut payload = BTreeMap::new();
+
+    let arms: &[(&str, usize)] =
+        if quick { &[("C", 2)] } else { &[("B", 2), ("C", 2), ("C", 4)] };
+    let algos: &[A2aAlgo] = if quick {
+        &[A2aAlgo::Direct, A2aAlgo::Scheduled(ta_moe::comm::ScheduleKind::Bvn)]
+    } else {
+        &[
+            A2aAlgo::Direct,
+            A2aAlgo::Hierarchical,
+            A2aAlgo::Scheduled(ta_moe::comm::ScheduleKind::Rotation),
+            A2aAlgo::Scheduled(ta_moe::comm::ScheduleKind::Bvn),
+        ]
+    };
+
+    for &(cluster, nodes) in arms {
+        let topo = presets::by_name(cluster, nodes).unwrap();
+        let p = topo.p();
+        let cfg = cfg_for(p);
+        let flops = device_flops(cluster.chars().next().unwrap());
+        let counts = converged_counts(&TaMoe { norm: Norm::L1 }, &topo, &cfg);
+        println!("== cluster {cluster} × {nodes} nodes (P={p}), ta-moe dispatch ==");
+        let mut t = Table::new(&[
+            "a2a", "serial", "k=1", "k=2", "k=4", "k=8", "k=16", "auto (k)",
+            "exposed a2a",
+        ]);
+        for &algo in algos {
+            if algo.validate_for(p).is_err() {
+                continue;
+            }
+            let serial = step_cost(&shape, &topo, &counts, 1, flops, algo);
+            let mut cells = vec![algo.name(), format!("{:.2}ms", serial.serial_total() * 1e3)];
+            let mut best_fixed = f64::INFINITY;
+            for k in CHUNK_SWEEP {
+                let c = step_cost_overlapped(
+                    &shape,
+                    &topo,
+                    &counts,
+                    1,
+                    flops,
+                    algo,
+                    OverlapMode::Fixed(k),
+                    None,
+                    None,
+                );
+                cells.push(format!("{:.2}ms", c.step_s() * 1e3));
+                best_fixed = best_fixed.min(c.step_s());
+                if k == 1 {
+                    // the serial-equality bar, on every arm
+                    let (got, want) = (c.step_s(), serial.serial_total());
+                    assert!(
+                        (got - want).abs() <= 1e-12 * want,
+                        "{cluster}x{nodes}/{algo}: k=1 {got} != serial {want}"
+                    );
+                }
+                let floor = serial.compute_s.max(serial.allreduce_s);
+                assert!(
+                    c.step_s() >= floor * (1.0 - 1e-9),
+                    "{cluster}x{nodes}/{algo} k={k}: below the phase floor"
+                );
+            }
+            let auto = step_cost_overlapped(
+                &shape,
+                &topo,
+                &counts,
+                1,
+                flops,
+                algo,
+                OverlapMode::Auto,
+                None,
+                None,
+            );
+            cells.push(format!("{:.2}ms ({})", auto.step_s() * 1e3, auto.chunks));
+            let exposed_frac = if auto.a2a_s > 0.0 {
+                auto.exposed_a2a_s / auto.a2a_s
+            } else {
+                0.0
+            };
+            cells.push(format!("{:.0}%", exposed_frac * 100.0));
+            t.row(&cells);
+
+            // the autotuner's guarantee: never above serial, never above
+            // any swept fixed k
+            assert!(
+                auto.step_s() <= serial.serial_total() * (1.0 + 1e-9),
+                "{cluster}x{nodes}/{algo}: auto above serial"
+            );
+            assert!(
+                auto.step_s() <= best_fixed * (1.0 + 1e-9),
+                "{cluster}x{nodes}/{algo}: auto above the best fixed k"
+            );
+            payload.insert(
+                format!("{cluster}{nodes}_{}_overlap_eff", algo.name()),
+                Json::Num(auto.overlap_efficiency()),
+            );
+            payload.insert(
+                format!("{cluster}{nodes}_{}_auto_k", algo.name()),
+                Json::Num(auto.chunks as f64),
+            );
+            payload.insert(
+                format!("{cluster}{nodes}_{}_exposed_frac", algo.name()),
+                Json::Num(exposed_frac),
+            );
+        }
+        t.print();
+        println!();
+    }
+    println!(
+        "The overlapped clock interpolates the serial sum (k=1) and the\n\
+         busiest-resource bound (large k), re-paying per-chunk latency —\n\
+         the autotuner picks the knee per (topology, plan)."
+    );
+    record_jsonl("overlap_sweep", &Json::Obj(payload));
+}

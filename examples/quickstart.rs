@@ -6,6 +6,9 @@
 //! cargo run --release --example quickstart
 //! ```
 //!
+//! The session below exercises the full builder surface the CLI exposes:
+//! an explicit a2a plan (`--a2a sched:bvn`), amortised expert placement
+//! (`--placement 8`), and the chunk-overlap autotuner (`--overlap auto`).
 //! With compiled artifacts (`make artifacts`) and `--features backend-xla`
 //! the same `Session` drives the real compiled model instead — swap the
 //! `.backend(...)` line for `.artifact("artifacts", "tiny4")`.
@@ -32,16 +35,26 @@ fn main() -> Result<()> {
 
     // 2. Compose backend + topology + policy into a session. The TA-MoE
     //    policy computes the Eq. 7 target pattern and the Eq. 8 penalty
-    //    matrix from the topology.
+    //    matrix from the topology; the byte-aware BvN schedule executes
+    //    the exchanges, expert placement may migrate hot experts, and the
+    //    overlap autotuner picks how many token chunks to pipeline.
     let mut session = SessionBuilder::new()
         .backend(Box::new(SimBackend::new(cfg)))
         .topology(topo)
         .policy(Box::new(TaMoe { norm: Norm::L1 }))
+        .a2a_named("sched:bvn")
+        .placement_every(8)
+        .overlap_named("auto")
         .lr(2e-3)
         .seed(0)
         .flops_per_dev(device_flops('C'))
         .data_text(builtin_text())
         .build()?;
+    println!(
+        "session: a2a={} placement=every-8-steps overlap={}",
+        session.a2a_algo(),
+        session.overlap_mode()
+    );
 
     let inputs = session.policy_inputs();
     let target = inputs.target.as_ref().expect("ta-moe target");
@@ -75,6 +88,16 @@ fn main() -> Result<()> {
     println!(
         "\nsimulated throughput: {:.0} tokens/s on the cluster clock",
         session.log().sim_throughput()
+    );
+    let log = session.log();
+    let max_chunks = log.records.iter().map(|r| r.chunks).max().unwrap_or(1);
+    println!(
+        "overlap: {:.1}% of the serial clock hidden (chunk count up to {}); \
+         placement: {} migration(s), epoch {}",
+        log.overlap_efficiency() * 100.0,
+        max_chunks,
+        log.migrations.len(),
+        session.placement_epoch()
     );
 
     // 4. Where did the gate actually send tokens?

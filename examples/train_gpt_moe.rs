@@ -13,6 +13,9 @@
 //! TA_MOE_STEPS=400 cargo run --release --example train_gpt_moe
 //! TA_MOE_ARTIFACT=small8_gshard cargo run --release --example train_gpt_moe
 //! TA_MOE_BACKEND=sim cargo run --release --example train_gpt_moe
+//! # the full session surface: wire plan, expert placement, chunk overlap
+//! TA_MOE_A2A=sched:bvn TA_MOE_PLACEMENT=16 TA_MOE_OVERLAP=auto \
+//!     cargo run --release --example train_gpt_moe
 //! ```
 //!
 //! Outputs: `target/runs/e2e_<artifact>_<strategy>.csv` per arm and a
@@ -38,23 +41,39 @@ fn main() -> Result<()> {
         .map_err(anyhow::Error::msg)?;
     let eval_every = 10;
     let seed = 42u64;
+    // the rest of the builder surface, env-tunable like the CLI flags
+    let a2a = std::env::var("TA_MOE_A2A").unwrap_or_else(|_| "auto".into());
+    let placement = std::env::var("TA_MOE_PLACEMENT").unwrap_or_else(|_| "off".into());
+    let overlap = std::env::var("TA_MOE_OVERLAP").unwrap_or_else(|_| "off".into());
 
     let arms = ["fastmoe", "ta-moe"];
 
     let mut summaries = Vec::new();
     for name in arms {
-        println!("=== arm: {name} ({artifact}, cluster C, {steps} steps) ===");
-        let mut session = SessionBuilder::new()
+        println!(
+            "=== arm: {name} ({artifact}, cluster C, {steps} steps, a2a={a2a}, \
+             placement={placement}, overlap={overlap}) ==="
+        );
+        let mut builder = SessionBuilder::new()
             .artifact("artifacts", artifact.clone())
             .backend_kind(backend)
             .cluster("C")
             .policy(parse_policy(name).map_err(anyhow::Error::msg)?)
+            .overlap_named(overlap.clone())
             .lr(1e-3)
             .seed(seed as i32)
             .flops_per_dev(device_flops('C'))
             // identical data across arms: same seed → byte-identical stream
-            .data_synthetic(seed)
-            .build()?;
+            .data_synthetic(seed);
+        if a2a != "auto" {
+            builder = builder.a2a_named(a2a.clone());
+        }
+        if let Some(pcfg) =
+            ta_moe::PlacementConfig::parse_spec(&placement).map_err(anyhow::Error::msg)?
+        {
+            builder = builder.placement(pcfg);
+        }
+        let mut session = builder.build()?;
         let cfg = session.model_cfg().clone();
 
         for step in 0..steps {
@@ -100,18 +119,25 @@ fn main() -> Result<()> {
             vloss,
             session.log().sim_throughput(),
             local_frac,
+            session.log().overlap_efficiency(),
+            session.log().migrations.len(),
         ));
     }
 
     println!();
-    let mut t = Table::new(&["arm", "valid ce", "valid ppl", "sim tokens/s", "rank0 on-node %"]);
-    for (name, vloss, thr, lf) in &summaries {
+    let mut t = Table::new(&[
+        "arm", "valid ce", "valid ppl", "sim tokens/s", "rank0 on-node %", "overlap hidden %",
+        "migrations",
+    ]);
+    for (name, vloss, thr, lf, eff, migs) in &summaries {
         t.row(&[
             name.to_string(),
             format!("{vloss:.4}"),
             format!("{:.1}", vloss.exp()),
             format!("{thr:.0}"),
             format!("{:.0}", lf * 100.0),
+            format!("{:.1}", eff * 100.0),
+            migs.to_string(),
         ]);
     }
     t.print();

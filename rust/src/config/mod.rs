@@ -7,6 +7,7 @@
 
 use crate::comm::A2aAlgo;
 use crate::coordinator::{parse_policy, DispatchPolicy};
+use crate::overlap::OverlapMode;
 use crate::placement::PlacementConfig;
 use crate::runtime::BackendKind;
 use crate::topology::{presets, Topology};
@@ -34,6 +35,9 @@ pub struct ExperimentConfig {
     /// Expert placement: "off" (canonical hosting), "on" (default
     /// cadence), or an integer attempt cadence in steps.
     pub placement: String,
+    /// Step-clock overlap: "off"/"serial" (the serial phase sum),
+    /// "k=<n>" (fixed chunk count), or "auto" (chunk-count autotuner).
+    pub overlap: String,
     /// Execution backend: "sim" | "xla" | "auto".
     pub backend: String,
     pub steps: usize,
@@ -57,6 +61,7 @@ impl Default for ExperimentConfig {
             strategy: "ta-moe".into(),
             a2a: "auto".into(),
             placement: "off".into(),
+            overlap: "off".into(),
             backend: "auto".into(),
             steps: 100,
             lr: 1e-3,
@@ -98,6 +103,7 @@ impl ExperimentConfig {
                     .unwrap_or_else(|| d.placement.clone()),
                 None => d.placement.clone(),
             },
+            overlap: doc.str_or("train.overlap", &d.overlap).to_string(),
             backend: doc.str_or("train.backend", &d.backend).to_string(),
             steps: doc.usize_or("train.steps", d.steps),
             lr: doc.f64_or("train.lr", d.lr),
@@ -147,6 +153,11 @@ impl ExperimentConfig {
     /// Resolve the placement spec: `None` means canonical hosting.
     pub fn parsed_placement(&self) -> Result<Option<PlacementConfig>> {
         PlacementConfig::parse_spec(&self.placement).map_err(anyhow::Error::msg)
+    }
+
+    /// Resolve the overlap spec (`off | serial | k=<n> | auto`).
+    pub fn parsed_overlap(&self) -> Result<OverlapMode> {
+        self.overlap.parse().map_err(anyhow::Error::msg)
     }
 }
 
@@ -296,6 +307,19 @@ lr = 0.01
         assert_eq!(c.parsed_placement().unwrap().unwrap().every, 12);
         let c = ExperimentConfig { placement: "maybe".into(), ..Default::default() };
         assert!(c.parsed_placement().is_err());
+    }
+
+    #[test]
+    fn overlap_defaults_to_off_and_parses() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.overlap, "off");
+        assert_eq!(c.parsed_overlap().unwrap(), OverlapMode::Serial);
+        let c = ExperimentConfig::from_toml("[train]\noverlap = \"auto\"\n").unwrap();
+        assert_eq!(c.parsed_overlap().unwrap(), OverlapMode::Auto);
+        let c = ExperimentConfig::from_toml("[train]\noverlap = \"k=8\"\n").unwrap();
+        assert_eq!(c.parsed_overlap().unwrap(), OverlapMode::Fixed(8));
+        let c = ExperimentConfig { overlap: "chunked".into(), ..Default::default() };
+        assert!(c.parsed_overlap().is_err());
     }
 
     #[test]

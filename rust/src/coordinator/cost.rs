@@ -16,8 +16,16 @@
 //!
 //! Expert compute is bottlenecked by the most-loaded device (the paper's
 //! load-imbalance effect): `max_j Σ_{e on j} Σ_i c_ie`.
+//!
+//! The back-to-back sum of those charges ([`StepCost::serial_total`]) is
+//! a *serial upper bound*: real MoE runtimes pipeline token chunks
+//! through dispatch → expert → combine and hide the allreduce under the
+//! backward pass. [`step_cost_overlapped`] prices that regime on the
+//! [`crate::overlap`] timeline, with the chunk-count autotuner's winners
+//! memoised through the (epoch-aware) [`PlanCache`].
 
 use crate::comm::{price_rounds, ring_allreduce_time, A2aAlgo, A2aBreakdown, CommPlan, Round};
+use crate::overlap::{autotune_k, pipeline_cost, OverlapInputs, OverlapMode};
 use crate::placement::Placement;
 use crate::runtime::ModelCfg;
 use crate::topology::Topology;
@@ -101,6 +109,34 @@ impl ModelShape {
         (2 * self.d * self.f * self.elem_bytes) as f64
     }
 
+    /// Forward dense compute seconds per step at `flops_per_dev` —
+    /// the single source of the overlap engine's dense timing (backward
+    /// dense is 2× this, matching the 3×-forward step estimate).
+    pub fn dense_fwd_s(&self, flops_per_dev: f64) -> f64 {
+        self.dense_flops_per_token() * self.tokens_per_dev as f64 / flops_per_dev
+    }
+
+    /// Expert compute seconds per *received* token, totalled over all MoE
+    /// layers, forward + backward (3× forward).
+    pub fn expert_s_per_token(&self, flops_per_dev: f64) -> f64 {
+        3.0 * self.expert_flops_per_token() * self.n_moe_layers as f64 / flops_per_dev
+    }
+
+    /// The overlap engine's view of one step under per-device received
+    /// token loads `recv` — shared by [`step_cost_overlapped`], the
+    /// placement gate's `OverlapPricing`, and the overlap property tests,
+    /// so the timing derivation has one source of truth.
+    pub fn overlap_inputs(&self, flops_per_dev: f64, recv: &[f64]) -> OverlapInputs {
+        let dense_fwd_s = self.dense_fwd_s(flops_per_dev);
+        let per_tok = self.expert_s_per_token(flops_per_dev);
+        OverlapInputs {
+            dense_fwd_s,
+            dense_bwd_s: 2.0 * dense_fwd_s,
+            expert_s_per_dev: recv.iter().map(|&r| r * per_tok).collect(),
+            n_moe: self.n_moe_layers,
+        }
+    }
+
     /// Bytes of the replicated (dense) parameters, for the allreduce.
     pub fn dense_param_bytes(&self) -> f64 {
         let d = self.d as f64;
@@ -155,6 +191,8 @@ pub const PLAN_CACHE_TOL: f64 = 0.10;
 pub struct PlanCache {
     tol: f64,
     entries: Vec<PlanEntry>,
+    /// Memoised overlap-autotuner winners (see [`PlanCache::tuned_k`]).
+    tuned: Vec<TuneEntry>,
     /// Placement epoch the cached entries were synthesised under.
     epoch: u64,
     hits: u64,
@@ -170,6 +208,18 @@ struct PlanEntry {
     /// The byte matrix the cached schedule was synthesised from.
     bytes: Mat,
     rounds: Vec<Round>,
+}
+
+/// One memoised chunk-count autotune result: the winning `k` for a
+/// (topology, plan, byte-pattern) triple, reused under the same drift
+/// tolerance (and the same placement epoch) as cached schedules.
+#[derive(Debug)]
+struct TuneEntry {
+    algo: A2aAlgo,
+    topo_key: u64,
+    fingerprint: u64,
+    bytes: Mat,
+    k: usize,
 }
 
 impl PlanCache {
@@ -211,6 +261,7 @@ impl PlanCache {
         if epoch != self.epoch {
             self.epoch = epoch;
             self.entries.clear();
+            self.tuned.clear();
         }
     }
 
@@ -281,14 +332,8 @@ impl PlanCache {
         let fp = self.fingerprint(bytes);
         let tkey = Self::topo_key(topo);
         if let Some(e) = self.entries.iter().find(|e| e.algo == algo) {
-            let same_shape = e.topo_key == tkey
-                && e.bytes.rows() == bytes.rows()
-                && e.bytes.cols() == bytes.cols();
-            let hit = same_shape
-                && (e.fingerprint == fp || {
-                    let scale = Self::scale(bytes).max(Self::scale(&e.bytes));
-                    e.bytes.linf_dist(bytes) <= self.tol * scale
-                });
+            let hit =
+                e.topo_key == tkey && self.pattern_hit(&e.bytes, e.fingerprint, bytes, fp);
             if hit {
                 self.hits += 1;
                 return CommPlan {
@@ -309,6 +354,86 @@ impl PlanCache {
         }
         plan
     }
+
+    /// Is a cached pattern within drift tolerance of the live one?
+    fn pattern_hit(&self, cached: &Mat, cached_fp: u64, bytes: &Mat, fp: u64) -> bool {
+        cached.rows() == bytes.rows()
+            && cached.cols() == bytes.cols()
+            && (cached_fp == fp || {
+                let scale = Self::scale(bytes).max(Self::scale(cached));
+                cached.linf_dist(bytes) <= self.tol * scale
+            })
+    }
+
+    /// Price one `1/k` chunk of an exchange, reusing the cached round
+    /// schedule where one is within tolerance of the live byte matrix
+    /// (synthesis runs on the *full* matrix — an even `1/k` split leaves
+    /// the optimal round structure unchanged, so chunks re-price the same
+    /// rounds on `bytes/k`). Direct/hierarchical plans, cache misses, and
+    /// disabled caches price the chunk matrix from scratch; counters are
+    /// untouched (the serial pricing of the same step already accounted
+    /// the hit or synthesis).
+    pub fn chunk_breakdown(
+        &self,
+        topo: &Topology,
+        bytes: &Mat,
+        algo: A2aAlgo,
+        k: usize,
+    ) -> A2aBreakdown {
+        assert!(k >= 1, "chunk count must be >= 1");
+        let chunk = bytes.scale(1.0 / k as f64);
+        if matches!(algo, A2aAlgo::Scheduled(_)) && self.tol > 0.0 {
+            let fp = self.fingerprint(bytes);
+            let tkey = Self::topo_key(topo);
+            if let Some(e) = self.entries.iter().find(|e| e.algo == algo) {
+                if e.topo_key == tkey && self.pattern_hit(&e.bytes, e.fingerprint, bytes, fp)
+                {
+                    return price_rounds(topo, &chunk, &e.rounds);
+                }
+            }
+        }
+        algo.plan(topo, &chunk).breakdown
+    }
+
+    /// The memoised autotuned chunk count for this (topology, plan,
+    /// pattern), if one is cached within the drift tolerance. A disabled
+    /// cache never memoises (the autotuner sweeps every step — the
+    /// uncached baseline).
+    pub fn tuned_k(&self, topo: &Topology, bytes: &Mat, algo: A2aAlgo) -> Option<usize> {
+        if self.tol <= 0.0 {
+            return None;
+        }
+        let fp = self.fingerprint(bytes);
+        let tkey = Self::topo_key(topo);
+        self.tuned
+            .iter()
+            .find(|e| {
+                e.algo == algo
+                    && e.topo_key == tkey
+                    && self.pattern_hit(&e.bytes, e.fingerprint, bytes, fp)
+            })
+            .map(|e| e.k)
+    }
+
+    /// Memoise an autotuned chunk count for this (topology, plan,
+    /// pattern). Entries follow the same drift/topology/epoch
+    /// invalidation rules as cached schedules.
+    pub fn remember_k(&mut self, topo: &Topology, bytes: &Mat, algo: A2aAlgo, k: usize) {
+        if self.tol <= 0.0 {
+            return;
+        }
+        let entry = TuneEntry {
+            algo,
+            topo_key: Self::topo_key(topo),
+            fingerprint: self.fingerprint(bytes),
+            bytes: bytes.clone(),
+            k,
+        };
+        match self.tuned.iter_mut().find(|e| e.algo == algo) {
+            Some(e) => *e = entry,
+            None => self.tuned.push(entry),
+        }
+    }
 }
 
 /// Per-step cost breakdown on the simulated cluster clock.
@@ -320,11 +445,51 @@ pub struct StepCost {
     pub allreduce_s: f64,
     /// Per-phase all-to-all split (local / intra-node / inter-node).
     pub a2a: A2aBreakdown,
+    /// Step time on the chunked overlap timeline
+    /// ([`step_cost_overlapped`]); equals [`StepCost::serial_total`] for
+    /// serially-priced steps and at `k = 1`.
+    pub overlapped_s: f64,
+    /// A2a time not hidden under compute on the timeline (the whole
+    /// `a2a_s` when priced serially).
+    pub exposed_a2a_s: f64,
+    /// Token chunks the step was pipelined into (1 = serial).
+    pub chunks: usize,
 }
 
 impl StepCost {
-    pub fn total(&self) -> f64 {
+    /// The serial upper bound: compute, a2a, and allreduce executed back
+    /// to back with nothing overlapping — the clock every pre-overlap
+    /// comparison in this repo was priced on.
+    pub fn serial_total(&self) -> f64 {
         self.compute_s + self.a2a_s + self.allreduce_s
+    }
+
+    /// Alias of [`StepCost::serial_total`], kept for callers that price
+    /// analytic (non-overlapped) sweeps. Prefer `serial_total` where the
+    /// serial-vs-overlapped distinction matters, and [`StepCost::step_s`]
+    /// for "how long did this step take".
+    pub fn total(&self) -> f64 {
+        self.serial_total()
+    }
+
+    /// The step clock. Every pricing path fills `overlapped_s` — serial
+    /// pricing copies its serial total in, overlap pricing the timeline
+    /// makespan — so this is always the time the step is charged.
+    pub fn step_s(&self) -> f64 {
+        self.overlapped_s
+    }
+
+    /// Fraction of the serial clock the overlap engine hides:
+    /// `(serial - overlapped) / serial`. Zero for serially-priced steps;
+    /// negative when a forced chunk count re-pays more latency than it
+    /// overlaps.
+    pub fn overlap_efficiency(&self) -> f64 {
+        let serial = self.serial_total();
+        if serial <= 0.0 {
+            0.0
+        } else {
+            (serial - self.step_s()) / serial
+        }
     }
 }
 
@@ -387,6 +552,87 @@ pub fn step_cost_cached(
     step_cost_with(shape, topo, counts, e_per_dev, flops_per_dev, a2a, Some(cache), None)
 }
 
+/// [`step_cost`] priced on the chunked overlap timeline instead of the
+/// serial phase sum (DESIGN.md §overlap). `mode` selects the clock:
+///
+/// * [`OverlapMode::Serial`] — identical to the serial paths above
+///   (`overlapped_s` set to the serial total, `chunks = 1`);
+/// * [`OverlapMode::Fixed`]`(k)` — the dispatch byte matrix and expert
+///   FLOPs split into `k` token chunks pipelined through
+///   dispatch → expert → combine (per-chunk exchanges priced on
+///   `bytes/k` through the cache's round schedules);
+/// * [`OverlapMode::Auto`] — the chunk-count autotuner sweeps
+///   `k ∈ {1, 2, 4, 8, 16}` and memoises the winner through the cache
+///   (epoch-aware, drift-invalidated). Since `k = 1` is in the sweep the
+///   tuned clock never exceeds the serial one.
+///
+/// The serial fields (`compute_s`, `a2a_s`, `allreduce_s`, the phase
+/// split) are always the serial attribution, so the serial-vs-overlapped
+/// comparison is carried by every priced step.
+#[allow(clippy::too_many_arguments)]
+pub fn step_cost_overlapped(
+    shape: &ModelShape,
+    topo: &Topology,
+    counts: &Mat,
+    e_per_dev: usize,
+    flops_per_dev: f64,
+    a2a: A2aAlgo,
+    mode: OverlapMode,
+    mut cache: Option<&mut PlanCache>,
+    placement: Option<&Placement>,
+) -> StepCost {
+    let (serial, bytes, recv) = priced_step(
+        shape,
+        topo,
+        counts,
+        e_per_dev,
+        flops_per_dev,
+        a2a,
+        cache.as_deref_mut(),
+        placement,
+    );
+    if mode == OverlapMode::Serial {
+        return serial;
+    }
+
+    let inputs = shape.overlap_inputs(flops_per_dev, &recv);
+    let chunk_of = |k: usize| {
+        let breakdown = match cache.as_deref() {
+            Some(c) => c.chunk_breakdown(topo, &bytes, a2a, k),
+            None => a2a.plan(topo, &bytes.scale(1.0 / k as f64)).breakdown,
+        };
+        let ar_chunk = ring_allreduce_time(topo, shape.dense_param_bytes() / k as f64);
+        (breakdown, ar_chunk)
+    };
+    let (k, pipe) = match mode {
+        OverlapMode::Serial => unreachable!("handled above"),
+        OverlapMode::Fixed(k) => {
+            let (chunk, ar_chunk) = chunk_of(k);
+            (k, pipeline_cost(&inputs, &chunk, ar_chunk, k))
+        }
+        OverlapMode::Auto => match cache.as_deref().and_then(|c| c.tuned_k(topo, &bytes, a2a))
+        {
+            Some(k) => {
+                let (chunk, ar_chunk) = chunk_of(k);
+                (k, pipeline_cost(&inputs, &chunk, ar_chunk, k))
+            }
+            None => {
+                let (k, pipe) = autotune_k(&inputs, chunk_of);
+                if let Some(c) = cache.as_deref_mut() {
+                    c.remember_k(topo, &bytes, a2a, k);
+                }
+                (k, pipe)
+            }
+        },
+    };
+    StepCost {
+        overlapped_s: pipe.makespan_s,
+        exposed_a2a_s: pipe.exposed_a2a_s,
+        chunks: k,
+        ..serial
+    }
+}
+
 #[allow(clippy::too_many_arguments)]
 fn step_cost_with(
     shape: &ModelShape,
@@ -398,6 +644,23 @@ fn step_cost_with(
     cache: Option<&mut PlanCache>,
     placement: Option<&Placement>,
 ) -> StepCost {
+    priced_step(shape, topo, counts, e_per_dev, flops_per_dev, a2a, cache, placement).0
+}
+
+/// The shared serial pricing: the [`StepCost`] plus the routed dispatch
+/// byte matrix and per-device received-token loads the overlap engine
+/// reuses.
+#[allow(clippy::too_many_arguments)]
+fn priced_step(
+    shape: &ModelShape,
+    topo: &Topology,
+    counts: &Mat,
+    e_per_dev: usize,
+    flops_per_dev: f64,
+    a2a: A2aAlgo,
+    cache: Option<&mut PlanCache>,
+    placement: Option<&Placement>,
+) -> (StepCost, Mat, Vec<f64>) {
     let p = topo.p();
     assert_eq!(counts.rows(), p);
     let n = counts.cols();
@@ -408,16 +671,17 @@ fn step_cost_with(
 
     // --- compute: slowest device bounds the step ---------------------------
     let dense = shape.dense_flops_per_token() * shape.tokens_per_dev as f64;
-    let max_recv: f64 = match placement {
-        Some(pl) => pl.recv_per_device(counts).into_iter().fold(0.0, f64::max),
+    let recv: Vec<f64> = match placement {
+        Some(pl) => pl.recv_per_device(counts),
         None => (0..p)
             .map(|j| {
                 (0..e_per_dev)
                     .map(|le| counts.col_sum(j * e_per_dev + le))
                     .sum::<f64>()
             })
-            .fold(0.0, f64::max),
+            .collect(),
     };
+    let max_recv: f64 = recv.iter().copied().fold(0.0, f64::max);
     let expert = shape.expert_flops_per_token() * max_recv * shape.n_moe_layers as f64;
     let fwd_flops = dense + expert;
     let compute_s = 3.0 * fwd_flops / flops_per_dev; // fwd + bwd ≈ 3× fwd
@@ -443,10 +707,21 @@ fn step_cost_with(
     // --- dense gradient allreduce ------------------------------------------
     let allreduce_s = ring_allreduce_time(topo, shape.dense_param_bytes());
 
-    StepCost { compute_s, a2a_s, allreduce_s, a2a: breakdown }
+    let cost = StepCost {
+        compute_s,
+        a2a_s,
+        allreduce_s,
+        a2a: breakdown,
+        overlapped_s: compute_s + a2a_s + allreduce_s,
+        exposed_a2a_s: a2a_s,
+        chunks: 1,
+    };
+    (cost, bytes, recv)
 }
 
-/// Throughput in tokens/s for a converged dispatch pattern.
+/// Throughput in tokens/s for a converged dispatch pattern, on the
+/// serial clock (the analytic-sweep convention; overlapped runs report
+/// throughput through `RunLog::sim_throughput` instead).
 pub fn throughput(
     shape: &ModelShape,
     topo: &Topology,
@@ -456,7 +731,7 @@ pub fn throughput(
     a2a: A2aAlgo,
 ) -> f64 {
     let cost = step_cost(shape, topo, counts, e_per_dev, flops_per_dev, a2a);
-    topo.p() as f64 * shape.tokens_per_dev as f64 / cost.total()
+    topo.p() as f64 * shape.tokens_per_dev as f64 / cost.serial_total()
 }
 
 #[cfg(test)]
@@ -690,6 +965,147 @@ mod tests {
         // compute: max recv is the same set of column sums either way
         // (a permutation of devices), so the bound is unchanged
         assert_eq!(placed.compute_s, canon.compute_s);
+    }
+
+    #[test]
+    fn overlapped_serial_mode_is_the_serial_clock() {
+        let topo = presets::cluster_c(2);
+        let cfg = cfg16();
+        let shape = ModelShape::gpt_medium(false, 6, 1024);
+        let ta = converged_counts(&TaMoe { norm: Norm::L1 }, &topo, &cfg);
+        let flops = device_flops('C');
+        for algo in [A2aAlgo::Direct, A2aAlgo::Scheduled(crate::comm::ScheduleKind::Bvn)] {
+            let serial = step_cost(&shape, &topo, &ta, 1, flops, algo);
+            assert_eq!(serial.step_s(), serial.serial_total(), "{algo}");
+            assert_eq!(serial.chunks, 1, "{algo}");
+            assert_eq!(serial.exposed_a2a_s, serial.a2a_s, "{algo}");
+            assert_eq!(serial.overlap_efficiency(), 0.0, "{algo}");
+            let ov = step_cost_overlapped(
+                &shape,
+                &topo,
+                &ta,
+                1,
+                flops,
+                algo,
+                OverlapMode::Serial,
+                None,
+                None,
+            );
+            assert_eq!(ov.step_s(), serial.serial_total(), "{algo}");
+            assert_eq!(ov.a2a_s, serial.a2a_s, "{algo}");
+        }
+    }
+
+    #[test]
+    fn overlapped_k1_reproduces_the_serial_price() {
+        let topo = presets::cluster_c(2);
+        let cfg = cfg16();
+        let shape = ModelShape::gpt_medium(false, 6, 1024);
+        let ta = converged_counts(&TaMoe { norm: Norm::L1 }, &topo, &cfg);
+        let flops = device_flops('C');
+        for algo in [
+            A2aAlgo::Direct,
+            A2aAlgo::Hierarchical,
+            A2aAlgo::Scheduled(crate::comm::ScheduleKind::Bvn),
+        ] {
+            let serial = step_cost(&shape, &topo, &ta, 1, flops, algo);
+            for cached in [false, true] {
+                let mut cache = PlanCache::new(PLAN_CACHE_TOL);
+                let c = step_cost_overlapped(
+                    &shape,
+                    &topo,
+                    &ta,
+                    1,
+                    flops,
+                    algo,
+                    OverlapMode::Fixed(1),
+                    if cached { Some(&mut cache) } else { None },
+                    None,
+                );
+                let (got, want) = (c.step_s(), serial.serial_total());
+                assert!(
+                    (got - want).abs() <= 1e-12 * want,
+                    "{algo} cached={cached}: {got} != {want}"
+                );
+                assert_eq!(c.chunks, 1);
+            }
+        }
+    }
+
+    #[test]
+    fn overlapped_auto_never_exceeds_serial_and_memoises() {
+        let topo = presets::cluster_c(2);
+        let cfg = cfg16();
+        let shape = ModelShape::gpt_medium(false, 6, 1024);
+        let ta = converged_counts(&TaMoe { norm: Norm::L1 }, &topo, &cfg);
+        let algo = A2aAlgo::Scheduled(crate::comm::ScheduleKind::Bvn);
+        let flops = device_flops('C');
+        let serial = step_cost(&shape, &topo, &ta, 1, flops, algo);
+        let mut cache = PlanCache::new(PLAN_CACHE_TOL);
+        let auto = step_cost_overlapped(
+            &shape,
+            &topo,
+            &ta,
+            1,
+            flops,
+            algo,
+            OverlapMode::Auto,
+            Some(&mut cache),
+            None,
+        );
+        // k = 1 is in the sweep, so auto can only improve on serial
+        assert!(auto.step_s() <= serial.serial_total() * (1.0 + 1e-9));
+        assert!(auto.chunks >= 1);
+        assert!(auto.exposed_a2a_s <= auto.a2a_s * (1.0 + 1e-9));
+        // the winner is memoised against the routed byte matrix
+        // (e_per_dev = 1 ⇒ bytes = counts · token_bytes)
+        let bytes = ta.scale(shape.token_bytes());
+        assert_eq!(cache.tuned_k(&topo, &bytes, algo), Some(auto.chunks));
+        let again = step_cost_overlapped(
+            &shape,
+            &topo,
+            &ta,
+            1,
+            flops,
+            algo,
+            OverlapMode::Auto,
+            Some(&mut cache),
+            None,
+        );
+        assert_eq!(again.chunks, auto.chunks);
+        assert_eq!(again.step_s(), auto.step_s());
+        // a placement epoch bump drops the memo with the schedules
+        cache.set_epoch(9);
+        assert_eq!(cache.tuned_k(&topo, &bytes, algo), None);
+    }
+
+    #[test]
+    fn chunk_breakdown_scales_like_the_plan() {
+        let topo = presets::cluster_c(2);
+        let cfg = cfg16();
+        let shape = ModelShape::gpt_medium(false, 6, 1024);
+        let ta = converged_counts(&TaMoe { norm: Norm::L1 }, &topo, &cfg);
+        let bytes = Mat::from_fn(16, 16, |i, j| ta.get(i, j) * shape.token_bytes());
+        let algo = A2aAlgo::Scheduled(crate::comm::ScheduleKind::Bvn);
+        let mut cache = PlanCache::new(PLAN_CACHE_TOL);
+        let full = cache.plan(&topo, &bytes, algo).breakdown;
+        // k = 1 chunk is the full exchange, bit for bit
+        assert_eq!(cache.chunk_breakdown(&topo, &bytes, algo, 1), full);
+        // a 1/k chunk is cheaper than the full exchange but never cheaper
+        // than 1/k of it (α terms do not shrink)
+        for k in [2usize, 4, 8] {
+            let c = cache.chunk_breakdown(&topo, &bytes, algo, k);
+            assert!(c.total() < full.total(), "k={k}");
+            assert!(c.total() >= full.total() / k as f64 * (1.0 - 1e-12), "k={k}");
+        }
+        // the disabled cache prices chunks from scratch: at k = 1 that is
+        // exactly the planner's own price (synthesis decisions on a freshly
+        // scaled chunk matrix may legitimately differ for k > 1)
+        let cold = PlanCache::disabled();
+        let c1 = cold.chunk_breakdown(&topo, &bytes, algo, 1);
+        assert_eq!(c1, algo.plan(&topo, &bytes).breakdown);
+        let c8 = cold.chunk_breakdown(&topo, &bytes, algo, 8);
+        assert!(c8.total() > 0.0 && c8.total() < full.total());
     }
 
     #[test]

@@ -18,8 +18,8 @@ pub mod registry;
 pub mod session;
 
 pub use cost::{
-    device_flops, step_cost, step_cost_cached, step_cost_placed, throughput, ModelShape,
-    PlanCache, StepCost, PLAN_CACHE_TOL,
+    device_flops, step_cost, step_cost_cached, step_cost_overlapped, step_cost_placed,
+    throughput, ModelShape, PlanCache, StepCost, PLAN_CACHE_TOL,
 };
 pub use policy::{
     converged_counts, DeepSpeedEven, DispatchPolicy, FastMoeEven, FasterMoeHir,

@@ -22,18 +22,23 @@
 //!
 //! Per step the session feeds the next batch to the backend, reads back
 //! the gate statistics `c_ie`, and charges the step to the simulated
-//! cluster clock via [`super::cost::step_cost`] using the *measured*
-//! dispatch counts — the simulated time axis therefore reflects what the
-//! gate actually learned, not what the policy hoped for.
+//! cluster clock via [`super::cost::step_cost_overlapped`] using the
+//! *measured* dispatch counts — the simulated time axis therefore
+//! reflects what the gate actually learned, not what the policy hoped
+//! for. With the default [`OverlapMode::Serial`] the clock is the
+//! historic serial phase sum; `--overlap k=<n>|auto` charges the chunked
+//! pipeline's makespan instead (`sim_comm_s` then records the *exposed*
+//! communication).
 
-use super::cost::{step_cost_cached, step_cost_placed, ModelShape, PlanCache, PLAN_CACHE_TOL};
+use super::cost::{step_cost_overlapped, ModelShape, PlanCache, PLAN_CACHE_TOL};
 use super::policy::{DispatchPolicy, PolicyInputs, TaMoe};
 use super::registry::parse_policy;
 use crate::comm::A2aAlgo;
 use crate::config::topology_for;
 use crate::data::{Batcher, SyntheticCorpus};
 use crate::metrics::{MigrationRecord, RunLog, StepRecord};
-use crate::placement::{Placement, PlacementConfig, PlacementEngine};
+use crate::overlap::OverlapMode;
+use crate::placement::{OverlapPricing, Placement, PlacementConfig, PlacementEngine};
 use crate::runtime::{open_backend, Backend, BackendKind, HostTensor};
 use crate::topology::Topology;
 use crate::util::Mat;
@@ -56,6 +61,10 @@ pub struct SessionOptions {
     /// Topology- and load-aware expert placement with amortised live
     /// migration (`None` = canonical hosting forever).
     pub placement: Option<PlacementConfig>,
+    /// How the step clock is priced: serially (the historic upper bound),
+    /// as a fixed-`k` chunk pipeline, or chunk-count-autotuned
+    /// (see [`crate::overlap`]).
+    pub overlap: OverlapMode,
 }
 
 impl Default for SessionOptions {
@@ -67,6 +76,7 @@ impl Default for SessionOptions {
             eval_every: 0,
             plan_cache_tol: PLAN_CACHE_TOL,
             placement: None,
+            overlap: OverlapMode::Serial,
         }
     }
 }
@@ -97,6 +107,7 @@ pub struct SessionBuilder {
     policy_spec: Option<String>,
     a2a: Option<A2aAlgo>,
     a2a_spec: Option<String>,
+    overlap_spec: Option<String>,
     data: Option<DataSource>,
     opts: SessionOptions,
 }
@@ -170,6 +181,20 @@ impl SessionBuilder {
     /// (`direct | hier | sched:xor | sched:rot | sched:bvn`).
     pub fn a2a_named(mut self, spec: impl Into<String>) -> Self {
         self.a2a_spec = Some(spec.into());
+        self
+    }
+
+    /// Price the step clock on the chunked overlap timeline
+    /// (see [`OverlapMode`]; the default is the serial clock).
+    pub fn overlap(mut self, mode: OverlapMode) -> Self {
+        self.opts.overlap = mode;
+        self
+    }
+
+    /// Parse the overlap mode from a spec at build time
+    /// (`off | serial | k=<n> | auto`).
+    pub fn overlap_named(mut self, spec: impl Into<String>) -> Self {
+        self.overlap_spec = Some(spec.into());
         self
     }
 
@@ -286,8 +311,17 @@ impl SessionBuilder {
         };
         a2a.validate_for(topo.p()).map_err(anyhow::Error::msg)?;
 
+        let mut opts = self.opts;
+        if let Some(spec) = self.overlap_spec {
+            opts.overlap = spec.parse::<OverlapMode>().map_err(anyhow::Error::msg)?;
+        }
+        anyhow::ensure!(
+            opts.overlap != OverlapMode::Fixed(0),
+            "overlap chunk count must be >= 1"
+        );
+
         let inputs = policy.runtime_inputs(&topo, &cfg);
-        backend.init(self.opts.seed, &inputs.gate)?;
+        backend.init(opts.seed, &inputs.gate)?;
 
         // data pipeline: training stream + one held-out eval batch drawn
         // from the same distribution. Synthetic data gets a disjoint
@@ -296,7 +330,7 @@ impl SessionBuilder {
         let min_len = cfg.p * cfg.batch * (cfg.seq + 1);
         let data = self
             .data
-            .unwrap_or(DataSource::Synthetic { seed: self.opts.seed as u64 });
+            .unwrap_or(DataSource::Synthetic { seed: opts.seed as u64 });
         let (batcher, eval_batch) = match data {
             DataSource::Synthetic { seed } => {
                 let stream = SyntheticCorpus::new(seed).tokens(min_len * 64);
@@ -329,11 +363,11 @@ impl SessionBuilder {
         );
         let shape = ModelShape::from_cfg(&cfg);
         let tokens_per_step = cfg.p * cfg.tokens_per_dev;
-        let plan_cache = PlanCache::new(self.opts.plan_cache_tol);
+        let plan_cache = PlanCache::new(opts.plan_cache_tol);
         // dispatch + combine in forward and their mirrors in backward:
         // the exchanges of the c_ie byte matrix one training step prices
-        let placement = self.opts.placement.map(|pcfg| {
-            PlacementEngine::new(
+        let placement = opts.placement.map(|pcfg| {
+            let engine = PlacementEngine::new(
                 pcfg,
                 cfg.p,
                 cfg.e_per_dev,
@@ -341,7 +375,23 @@ impl SessionBuilder {
                 shape.expert_param_bytes(),
                 (4 * shape.n_moe_layers) as f64,
                 a2a,
-            )
+            );
+            if opts.overlap == OverlapMode::Serial {
+                engine
+            } else {
+                // the session charges the overlapped clock, so the
+                // amortisation gate must predict savings on it too (same
+                // ModelShape derivation as step_cost_overlapped)
+                let dense_fwd_s = shape.dense_fwd_s(opts.flops_per_dev);
+                engine.with_overlap(OverlapPricing {
+                    mode: opts.overlap,
+                    dense_fwd_s,
+                    dense_bwd_s: 2.0 * dense_fwd_s,
+                    expert_s_per_token: shape.expert_s_per_token(opts.flops_per_dev),
+                    n_moe: shape.n_moe_layers,
+                    dense_param_bytes: shape.dense_param_bytes(),
+                })
+            }
         });
         Ok(Session {
             backend,
@@ -350,7 +400,7 @@ impl SessionBuilder {
             a2a,
             inputs,
             shape,
-            opts: self.opts,
+            opts,
             batcher,
             eval_batch,
             log: RunLog::new(&label, tokens_per_step),
@@ -444,37 +494,35 @@ impl Session {
         }
 
         let hits_before = self.plan_cache.hits();
-        let cost = match self.placement.as_ref() {
-            Some(eng) => step_cost_placed(
-                &self.shape,
-                &self.topo,
-                &out.counts,
-                eng.placement(),
-                self.opts.flops_per_dev,
-                self.a2a,
-                Some(&mut self.plan_cache),
-            ),
-            None => step_cost_cached(
-                &self.shape,
-                &self.topo,
-                &out.counts,
-                self.backend.model_cfg().e_per_dev,
-                self.opts.flops_per_dev,
-                self.a2a,
-                &mut self.plan_cache,
-            ),
-        };
+        // one pricing path for every (placement × overlap) combination:
+        // serial mode reproduces the historic clock exactly, overlap
+        // modes charge the chunked timeline's makespan instead (the
+        // exposed communication replaces the serial a2a + allreduce sum)
+        let cost = step_cost_overlapped(
+            &self.shape,
+            &self.topo,
+            &out.counts,
+            self.backend.model_cfg().e_per_dev,
+            self.opts.flops_per_dev,
+            self.a2a,
+            self.opts.overlap,
+            Some(&mut self.plan_cache),
+            self.placement.as_ref().map(|e| e.placement()),
+        );
         let record = StepRecord {
             step: self.log.records.len(),
             loss: out.loss,
             ce: out.ce,
             aux: out.aux,
             dropped: out.dropped,
-            sim_comm_s: cost.a2a_s + cost.allreduce_s,
+            sim_comm_s: cost.step_s() - cost.compute_s,
             sim_compute_s: cost.compute_s,
             sim_a2a_local_s: cost.a2a.local_s,
             sim_a2a_intra_s: cost.a2a.intra_s,
             sim_a2a_inter_s: cost.a2a.inter_s,
+            sim_serial_s: cost.serial_total(),
+            sim_a2a_exposed_s: cost.exposed_a2a_s,
+            chunks: cost.chunks,
             plan_cached: self.plan_cache.hits() > hits_before,
             sim_migration_s: migration_s,
             wall_s,
@@ -537,6 +585,11 @@ impl Session {
     /// The all-to-all plan the session's step-time model executes.
     pub fn a2a_algo(&self) -> A2aAlgo {
         self.a2a
+    }
+
+    /// How the session's step clock is priced (see [`OverlapMode`]).
+    pub fn overlap_mode(&self) -> OverlapMode {
+        self.opts.overlap
     }
 
     /// The gate inputs + target the policy produced for this run.

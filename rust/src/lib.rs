@@ -28,6 +28,11 @@
 //!   third-party policies, composed with a backend + topology + data into
 //!   a [`coordinator::Session`], with simulated-time accounting and
 //!   metrics.
+//! * [`overlap`] — the chunked dispatch–compute–combine overlap engine:
+//!   an event-driven multi-resource [`overlap::Timeline`], the chunk
+//!   pipeline DAG with combine(c) ∥ dispatch(c+1) and bucketed-allreduce
+//!   overlap, and the chunk-count autotuner behind
+//!   [`overlap::OverlapMode`] / `--overlap`.
 //! * [`placement`] — the topology- and load-aware expert placement
 //!   engine: an expert→device [`placement::Placement`] map (identity by
 //!   default), EWMA gate-load tracking, greedy + swap-descent solvers
@@ -52,6 +57,7 @@ pub mod coordinator;
 pub mod data;
 pub mod dispatch;
 pub mod metrics;
+pub mod overlap;
 pub mod placement;
 pub mod runtime;
 pub mod topology;
@@ -59,6 +65,7 @@ pub mod util;
 
 pub use config::ExperimentConfig;
 pub use coordinator::{DispatchPolicy, Session, SessionBuilder};
+pub use overlap::OverlapMode;
 pub use placement::{Placement, PlacementConfig, PlacementEngine};
 pub use runtime::{Backend, SimBackend};
 pub use topology::Topology;

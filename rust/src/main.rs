@@ -76,7 +76,8 @@ fn print_help() {
            train         --artifact small8_switch --cluster C --strategy ta-moe\n\
                          --backend sim|xla|auto --steps 100 --lr 1e-3 --seed 0\n\
                          --a2a auto|direct|hier|sched:xor|sched:rot|sched:bvn\n\
-                         --placement off|on|<every-steps> --config file.toml\n\
+                         --placement off|on|<every-steps> --overlap off|serial|k=<n>|auto\n\
+                         --config file.toml\n\
            solve         --cluster C --nodes 2 [--tokens 1024] [--k 1]\n\
            profile-topo  --cluster table1 [--nodes 2] [--noise 0.2]\n\
            bench-comm    [--mb 128]\n\
@@ -88,7 +89,9 @@ fn print_help() {
          A2A PLANS:  auto (policy preference) | direct | hier |\n\
                      sched:xor | sched:rot | sched:bvn (byte-aware BvN)\n\
          PLACEMENT:  off (canonical expert hosting) | on (amortised live\n\
-                     migration, default cadence) | <every-steps>"
+                     migration, default cadence) | <every-steps>\n\
+         OVERLAP:    off|serial (serial phase-sum clock) | k=<n> (fixed\n\
+                     chunk pipeline) | auto (chunk-count autotuner)"
     );
 }
 
@@ -177,6 +180,9 @@ fn cmd_train(flags: &Flags) -> Result<()> {
     if let Some(p) = flags.get("placement") {
         cfg.placement = p.clone();
     }
+    if let Some(o) = flags.get("overlap") {
+        cfg.overlap = o.clone();
+    }
     if let Some(b) = flags.get("backend") {
         cfg.backend = b.clone();
     }
@@ -201,12 +207,14 @@ fn cmd_train(flags: &Flags) -> Result<()> {
     if let Some(pcfg) = placement_cfg {
         builder = builder.placement(pcfg);
     }
+    let overlap_mode = cfg.parsed_overlap()?;
+    builder = builder.overlap(overlap_mode);
     let mut session = builder.build()?;
 
     let topo = session.topology();
     println!(
         "train: artifact={} backend={} cluster={} (P={}, {} nodes) strategy={} a2a={} \
-         placement={} steps={}",
+         placement={} overlap={} steps={}",
         cfg.artifact,
         session.backend_name(),
         cfg.cluster,
@@ -218,6 +226,7 @@ fn cmd_train(flags: &Flags) -> Result<()> {
             Some(p) => format!("every {} steps", p.every),
             None => "off".into(),
         },
+        overlap_mode,
         cfg.steps
     );
 
@@ -261,6 +270,25 @@ fn cmd_train(flags: &Flags) -> Result<()> {
         session.log().plan_misses,
         out.display()
     );
+    if overlap_mode != ta_moe::OverlapMode::Serial {
+        let log = session.log();
+        let charged: f64 =
+            log.records.iter().map(|r| r.sim_comm_s + r.sim_compute_s).sum();
+        let max_chunks = log.records.iter().map(|r| r.chunks).max().unwrap_or(1);
+        println!(
+            "overlap: {:.1}% of the serial clock hidden ({:.1}ms charged vs {:.1}ms serial); \
+             a2a exposed {:.1}ms of {:.1}ms; chunk count up to {}",
+            log.overlap_efficiency() * 100.0,
+            charged * 1e3,
+            log.sim_serial_total() * 1e3,
+            log.a2a_exposed_total() * 1e3,
+            {
+                let (l, a, e) = log.a2a_phase_totals();
+                (l + a + e) * 1e3
+            },
+            max_chunks
+        );
+    }
     if placement_cfg.is_some() {
         let log = session.log();
         let (pred, real) = log.migration_savings();

@@ -29,6 +29,16 @@ pub struct StepRecord {
     /// A2a time in phases/rounds crossing a node boundary (part of
     /// `sim_comm_s`).
     pub sim_a2a_inter_s: f64,
+    /// The serial upper bound of this step (phases back to back). Equals
+    /// `sim_comm_s + sim_compute_s` on serially-priced steps; with
+    /// `--overlap` the charged clock is smaller and
+    /// `(serial - charged) / serial` is the step's overlap efficiency.
+    pub sim_serial_s: f64,
+    /// A2a time not hidden under compute on the overlap timeline
+    /// (the whole a2a time for serially-priced steps).
+    pub sim_a2a_exposed_s: f64,
+    /// Token chunks the step was pipelined into (1 = serial clock).
+    pub chunks: usize,
     /// Whether this step's a2a schedule came from the session's
     /// `PlanCache` (true = hit) rather than a fresh synthesis.
     pub plan_cached: bool,
@@ -162,6 +172,33 @@ impl RunLog {
         })
     }
 
+    /// Total serial upper bound over the run (the clock the run would
+    /// have been charged without overlap; migration time excluded).
+    pub fn sim_serial_total(&self) -> f64 {
+        self.records.iter().map(|r| r.sim_serial_s).sum()
+    }
+
+    /// Fraction of the serial clock the overlap engine hid over the run:
+    /// `(serial − charged) / serial`, with the charged clock being
+    /// `sim_comm_s + sim_compute_s` per step (migration time excluded
+    /// from both sides). ~0 for serial runs; negative when a forced
+    /// chunk count re-pays more latency than it overlaps.
+    pub fn overlap_efficiency(&self) -> f64 {
+        let serial = self.sim_serial_total();
+        if serial <= 0.0 {
+            return 0.0;
+        }
+        let charged: f64 =
+            self.records.iter().map(|r| r.sim_comm_s + r.sim_compute_s).sum();
+        (serial - charged) / serial
+    }
+
+    /// Total a2a time left exposed (not hidden under compute) over the
+    /// run.
+    pub fn a2a_exposed_total(&self) -> f64 {
+        self.records.iter().map(|r| r.sim_a2a_exposed_s).sum()
+    }
+
     /// Accumulated per-phase a2a split over the run:
     /// `(local_s, intra_s, inter_s)` — the fig6-style "where does the
     /// communication time go" series.
@@ -176,8 +213,8 @@ impl RunLog {
     }
 
     /// Write `step,loss,ce,aux,dropped,sim_comm_s,sim_compute_s,
-    /// a2a_local_s,a2a_intra_s,a2a_inter_s,plan_hit,migration_s,sim_t`
-    /// CSV.
+    /// a2a_local_s,a2a_intra_s,a2a_inter_s,a2a_exposed_s,serial_s,chunks,
+    /// plan_hit,migration_s,sim_t` CSV.
     pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
@@ -186,13 +223,14 @@ impl RunLog {
         writeln!(
             f,
             "step,loss,ce,aux,dropped,sim_comm_s,sim_compute_s,\
-             a2a_local_s,a2a_intra_s,a2a_inter_s,plan_hit,migration_s,sim_t"
+             a2a_local_s,a2a_intra_s,a2a_inter_s,a2a_exposed_s,serial_s,chunks,\
+             plan_hit,migration_s,sim_t"
         )?;
         let axis = self.sim_time_axis();
         for (r, t) in self.records.iter().zip(axis) {
             writeln!(
                 f,
-                "{},{:.6},{:.6},{:.6},{:.4},{:.6e},{:.6e},{:.6e},{:.6e},{:.6e},{},{:.6e},{:.6e}",
+                "{},{:.6},{:.6},{:.6},{:.4},{:.6e},{:.6e},{:.6e},{:.6e},{:.6e},{:.6e},{:.6e},{},{},{:.6e},{:.6e}",
                 r.step,
                 r.loss,
                 r.ce,
@@ -203,6 +241,9 @@ impl RunLog {
                 r.sim_a2a_local_s,
                 r.sim_a2a_intra_s,
                 r.sim_a2a_inter_s,
+                r.sim_a2a_exposed_s,
+                r.sim_serial_s,
+                r.chunks,
                 r.plan_cached as u8,
                 r.sim_migration_s,
                 t
@@ -226,6 +267,11 @@ impl RunLog {
         m.insert("sim_a2a_local_s".into(), Json::Num(local));
         m.insert("sim_a2a_intra_s".into(), Json::Num(intra));
         m.insert("sim_a2a_inter_s".into(), Json::Num(inter));
+        m.insert("sim_serial_s".into(), Json::Num(self.sim_serial_total()));
+        m.insert("sim_a2a_exposed_s".into(), Json::Num(self.a2a_exposed_total()));
+        m.insert("overlap_efficiency".into(), Json::Num(self.overlap_efficiency()));
+        let max_chunks = self.records.iter().map(|r| r.chunks).max().unwrap_or(0);
+        m.insert("chunks_max".into(), Json::Num(max_chunks as f64));
         m.insert("plan_hits".into(), Json::Num(self.plan_hits as f64));
         m.insert("plan_misses".into(), Json::Num(self.plan_misses as f64));
         m.insert("migrations".into(), Json::Num(self.migrations.len() as f64));
@@ -367,6 +413,52 @@ mod tests {
         let col = header.split(',').position(|c| c == "migration_s").unwrap();
         let row0: Vec<&str> = text.lines().nth(1).unwrap().split(',').collect();
         assert_eq!(row0[col], "5.000000e-1");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn overlap_accounting_surfaces_in_summary_and_csv() {
+        let mut log = RunLog::new("x", 10);
+        // an overlapped step: serial bound 3.0, charged clock 2.0
+        log.push(StepRecord {
+            step: 0,
+            sim_comm_s: 1.0, // exposed comm on the timeline
+            sim_compute_s: 1.0,
+            sim_serial_s: 3.0,
+            sim_a2a_exposed_s: 0.6,
+            chunks: 4,
+            ..Default::default()
+        });
+        // and a serially-priced one: no hiding
+        log.push(StepRecord {
+            step: 1,
+            sim_comm_s: 2.0,
+            sim_compute_s: 1.0,
+            sim_serial_s: 3.0,
+            sim_a2a_exposed_s: 1.5,
+            chunks: 1,
+            ..Default::default()
+        });
+        assert_eq!(log.sim_serial_total(), 6.0);
+        // charged 2 + 3 = 5 of a 6 s serial bound → 1/6 hidden
+        assert!((log.overlap_efficiency() - 1.0 / 6.0).abs() < 1e-12);
+        assert!((log.a2a_exposed_total() - 2.1).abs() < 1e-12);
+        let json = log.summary_json().to_string_compact();
+        assert!(json.contains("\"sim_serial_s\":6"), "{json}");
+        assert!(json.contains("\"chunks_max\":4"), "{json}");
+        assert!(json.contains("\"overlap_efficiency\":"), "{json}");
+        let path = std::env::temp_dir().join("ta_moe_test_metrics_overlap.csv");
+        log.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let header = text.lines().next().unwrap();
+        for col in ["a2a_exposed_s", "serial_s", "chunks"] {
+            assert!(header.split(',').any(|c| c == col), "{header}");
+        }
+        let chunks_col = header.split(',').position(|c| c == "chunks").unwrap();
+        let row0: Vec<&str> = text.lines().nth(1).unwrap().split(',').collect();
+        assert_eq!(row0[chunks_col], "4");
+        let serial_col = header.split(',').position(|c| c == "serial_s").unwrap();
+        assert_eq!(row0[serial_col], "3.000000e0");
         let _ = std::fs::remove_file(&path);
     }
 

@@ -1,0 +1,106 @@
+//! The chunk-count autotuner.
+//!
+//! Chunking trades per-chunk latency (every chunk exchange re-pays the
+//! path α, every gradient bucket re-pays the ring latency) against
+//! pipeline overlap, so the best `k` depends on the topology, the byte
+//! matrix, and the a2a plan. [`autotune_k`] sweeps
+//! [`CHUNK_SWEEP`](super::CHUNK_SWEEP) with caller-supplied per-chunk
+//! pricing and returns the cheapest pipeline; since `k = 1` is in the
+//! sweep, the winner never prices above the serial clock. The per-step
+//! memoisation of the winner (keyed on the byte-matrix fingerprint,
+//! invalidated by topology changes and placement epochs) lives in
+//! `coordinator::cost::PlanCache`.
+
+use super::chunk::{pipeline_cost, OverlapInputs, PipelineCost, CHUNK_SWEEP};
+use crate::comm::A2aBreakdown;
+
+/// Sweep the chunk counts and return `(k, cost)` of the cheapest
+/// pipeline. `chunk_of(k)` must return the priced breakdown of one
+/// exchange of `bytes/k` and the ring time of one `1/k` gradient bucket.
+/// Near-ties (within 1e-9 relative) keep the smaller `k` — less
+/// launch/synchronisation overhead for the same clock.
+pub fn autotune_k(
+    inp: &OverlapInputs,
+    mut chunk_of: impl FnMut(usize) -> (A2aBreakdown, f64),
+) -> (usize, PipelineCost) {
+    let mut best: Option<(usize, PipelineCost)> = None;
+    for k in CHUNK_SWEEP {
+        let (chunk, ar_chunk) = chunk_of(k);
+        let cost = pipeline_cost(inp, &chunk, ar_chunk, k);
+        let better = match &best {
+            None => true,
+            Some((_, b)) => cost.makespan_s < b.makespan_s * (1.0 - 1e-9),
+        };
+        if better {
+            best = Some((k, cost));
+        }
+    }
+    best.expect("CHUNK_SWEEP is non-empty")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inp(expert: f64) -> OverlapInputs {
+        OverlapInputs {
+            dense_fwd_s: 0.1,
+            dense_bwd_s: 0.2,
+            expert_s_per_dev: vec![expert; 4],
+            n_moe: 2,
+        }
+    }
+
+    /// α-β per-chunk pricing: each chunk exchange costs `alpha + beta/k`.
+    fn pricer(
+        alpha: f64,
+        inter: f64,
+        ar: f64,
+    ) -> impl FnMut(usize) -> (A2aBreakdown, f64) {
+        move |k| {
+            let kf = k as f64;
+            (
+                A2aBreakdown {
+                    local_s: 0.0,
+                    intra_s: 0.0,
+                    inter_s: alpha + inter / kf,
+                },
+                ar / kf,
+            )
+        }
+    }
+
+    #[test]
+    fn alpha_dominated_steps_stay_serial() {
+        // chunking only re-pays latency here: the winner must be k = 1
+        let (k, cost) = autotune_k(&inp(0.01), &mut pricer(1.0, 0.01, 0.5));
+        assert_eq!(k, 1);
+        assert_eq!(cost.chunks, 1);
+    }
+
+    #[test]
+    fn bandwidth_dominated_steps_chunk() {
+        // big payloads, tiny α: pipelining wins and the winner beats serial
+        let mut price = pricer(1e-3, 4.0, 0.5);
+        let (k, cost) = autotune_k(&inp(2.0), &mut price);
+        assert!(k > 1, "expected chunking to win, got k={k}");
+        let (c1, ar1) = price(1);
+        let serial = pipeline_cost(&inp(2.0), &c1, ar1, 1);
+        assert!(cost.makespan_s < serial.makespan_s);
+    }
+
+    #[test]
+    fn winner_never_prices_above_serial() {
+        // k = 1 is in the sweep, so the tuned clock is ≤ the serial clock
+        for (alpha, inter) in [(0.5, 0.1), (1e-3, 8.0), (0.1, 0.1)] {
+            let mut price = pricer(alpha, inter, 0.5);
+            let (_, cost) = autotune_k(&inp(1.0), &mut price);
+            let (c1, ar1) = price(1);
+            let serial = pipeline_cost(&inp(1.0), &c1, ar1, 1);
+            assert!(
+                cost.makespan_s <= serial.makespan_s * (1.0 + 1e-9),
+                "alpha={alpha} inter={inter}"
+            );
+        }
+    }
+}

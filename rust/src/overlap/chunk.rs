@@ -1,0 +1,294 @@
+//! The chunked dispatch–compute–combine pipeline.
+//!
+//! [`pipeline_cost`] prices one training step as a dependency DAG of
+//! chunk-granular events on a [`Timeline`] instead of a serial phase sum.
+//! The step is modelled as `2 · n_moe` *MoE blocks* (each MoE layer's
+//! forward pass and its backward mirror), every block being one
+//! dispatch → expert-compute → combine sequence over the step's dispatch
+//! byte matrix, split into `k` equal token chunks:
+//!
+//! * each chunk's dispatch exchange runs as an intra-node event followed
+//!   by an inter-node event on the *dispatch* channels (locality-first,
+//!   the BvN round ordering); its combine mirrors that on the *combine*
+//!   channels. Dispatch and combine channels are distinct because the two
+//!   exchanges traverse the links in opposite directions (the topology's
+//!   directed `2·edge + dir` slots), so combine of chunk `c` overlaps
+//!   dispatch of chunk `c+1` — the MoNTA/Parallel-Folding overlap;
+//! * each chunk's expert compute runs per device on that device's
+//!   compute stream (the most-loaded device gates, as in the serial
+//!   model), between its dispatch and its combine;
+//! * forward dense compute precedes each forward block's dispatch (the
+//!   gate needs the layer input); all backward dense compute is folded
+//!   into a *tail* after the last MoE block — lower layers and
+//!   embedding/logit grads dominate backward FLOPs — which is the
+//!   allreduce's legal overlap window: the gradient allreduce is split
+//!   into `k` buckets, bucket `c` firing after tail slice `c`.
+//!
+//! With `k = 1` every edge of the DAG is on one chain, so the makespan is
+//! *exactly* the serial phase sum; as `k` grows the schedule approaches
+//! the busiest-resource bound while re-paying per-chunk latency (each
+//! chunk exchange is priced on `bytes/k`, so α terms do not shrink) —
+//! the tradeoff [`super::autotune_k`] sweeps.
+
+use super::timeline::{EventClass, EventId, Timeline};
+use crate::comm::A2aBreakdown;
+
+/// Chunk counts the autotuner sweeps (and benches/tests grid over).
+pub const CHUNK_SWEEP: [usize; 5] = [1, 2, 4, 8, 16];
+
+/// Everything the pipeline needs to know about one step, independent of
+/// how the exchanges are priced (the caller supplies per-chunk a2a
+/// breakdowns separately, typically via the plan cache).
+#[derive(Clone, Debug)]
+pub struct OverlapInputs {
+    /// Forward dense compute (attention, dense FFN, logits), split evenly
+    /// across the forward blocks' pre-dispatch slices.
+    pub dense_fwd_s: f64,
+    /// Backward dense compute, folded into the post-block tail the
+    /// allreduce buckets overlap.
+    pub dense_bwd_s: f64,
+    /// Total expert compute per device over all MoE layers, forward +
+    /// backward (length P). The slowest device gates each chunk.
+    pub expert_s_per_dev: Vec<f64>,
+    /// MoE layers in the model; the pipeline runs `2 · n_moe` blocks.
+    pub n_moe: usize,
+}
+
+/// The priced pipeline: the overlapped clock plus the analytic envelope
+/// and exposure accounting.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PipelineCost {
+    /// Completion time of the chunked step on the event timeline.
+    pub makespan_s: f64,
+    /// Sum of every event duration — executing this chunking serially.
+    /// Upper-bounds the makespan; at `k = 1` it *is* the makespan.
+    pub serial_sum_s: f64,
+    /// Busiest single resource — the lower bound on the makespan.
+    pub bound_s: f64,
+    /// A2a time with no compute in flight (the exposed communication).
+    pub exposed_a2a_s: f64,
+    /// Allreduce time hidden under neither compute nor a2a.
+    pub exposed_allreduce_s: f64,
+    /// Token chunks the step was split into.
+    pub chunks: usize,
+}
+
+impl PipelineCost {
+    /// All communication not hidden under compute.
+    pub fn exposed_comm_s(&self) -> f64 {
+        self.exposed_a2a_s + self.exposed_allreduce_s
+    }
+}
+
+/// Price one step as a `k`-chunk pipeline. `chunk` is the priced
+/// breakdown of ONE exchange of `bytes/k` (same breakdown for dispatch
+/// and combine, mirroring the serial model's convention of pricing all
+/// `4 · n_moe` exchanges identically); `allreduce_chunk_s` the ring time
+/// of one `1/k` gradient bucket.
+pub fn pipeline_cost(
+    inp: &OverlapInputs,
+    chunk: &A2aBreakdown,
+    allreduce_chunk_s: f64,
+    k: usize,
+) -> PipelineCost {
+    assert!(k >= 1, "chunk count must be >= 1");
+    let p = inp.expert_s_per_dev.len();
+    assert!(p >= 1, "pipeline needs at least one device");
+
+    // resource map: P compute streams, 4 directional link channels, the
+    // allreduce channel
+    let disp_intra = p;
+    let disp_inter = p + 1;
+    let comb_intra = p + 2;
+    let comb_inter = p + 3;
+    let ar_chan = p + 4;
+    let mut tl = Timeline::new(p + 5);
+
+    // exposed local copies ride the intra event (they are serial with the
+    // network phase in the breakdown's convention)
+    let intra_s = chunk.local_s + chunk.intra_s;
+    let inter_s = chunk.inter_s;
+    let kf = k as f64;
+
+    let n_blocks = 2 * inp.n_moe;
+    let dense_slice = if inp.n_moe > 0 { inp.dense_fwd_s / inp.n_moe as f64 } else { 0.0 };
+    // the last events of the previous block every device must wait for
+    let mut join: Vec<EventId> = Vec::new();
+    let mut scratch: Vec<EventId> = Vec::with_capacity(p);
+    for b in 0..n_blocks {
+        let is_bwd = b >= inp.n_moe;
+        // forward blocks carry their dense slice (the gate needs the
+        // layer input); backward dense is all in the tail
+        let slice = if is_bwd { 0.0 } else { dense_slice };
+        scratch.clear();
+        for dev in 0..p {
+            scratch.push(tl.schedule(dev, EventClass::Compute, slice, &join));
+        }
+        let dense_ev = scratch.clone();
+        join.clear();
+        for _c in 0..k {
+            let di = tl.schedule(disp_intra, EventClass::A2a, intra_s, &dense_ev);
+            let dx = tl.schedule(disp_inter, EventClass::A2a, inter_s, &[di]);
+            scratch.clear();
+            for dev in 0..p {
+                // fwd/bwd expert split: backward is 2x forward
+                let e = inp.expert_s_per_dev[dev] / 3.0
+                    * if is_bwd { 2.0 } else { 1.0 }
+                    / inp.n_moe as f64
+                    / kf;
+                scratch.push(tl.schedule(dev, EventClass::Compute, e, &[dx]));
+            }
+            let ci = tl.schedule(comb_intra, EventClass::A2a, intra_s, &scratch);
+            let cx = tl.schedule(comb_inter, EventClass::A2a, inter_s, &[ci]);
+            join.push(cx);
+        }
+    }
+
+    // backward dense tail in k slices, each releasing one gradient bucket
+    // (a MoE-free model has no blocks, so its forward dense lands here too
+    // rather than silently vanishing from the clock)
+    let tail = inp.dense_bwd_s + if n_blocks == 0 { inp.dense_fwd_s } else { 0.0 };
+    let tail_slice = tail / kf;
+    for _c in 0..k {
+        scratch.clear();
+        for dev in 0..p {
+            scratch.push(tl.schedule(dev, EventClass::Compute, tail_slice, &join));
+        }
+        join = scratch.clone();
+        tl.schedule(ar_chan, EventClass::Allreduce, allreduce_chunk_s, &join);
+    }
+
+    PipelineCost {
+        makespan_s: tl.makespan(),
+        serial_sum_s: tl.serial_sum(),
+        bound_s: tl.max_busy(),
+        exposed_a2a_s: tl.exposed(EventClass::A2a, &[EventClass::Compute]),
+        exposed_allreduce_s: tl
+            .exposed(EventClass::Allreduce, &[EventClass::Compute, EventClass::A2a]),
+        chunks: k,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inputs(p: usize) -> OverlapInputs {
+        OverlapInputs {
+            dense_fwd_s: 3.0,
+            dense_bwd_s: 6.0,
+            expert_s_per_dev: (0..p).map(|d| 3.0 + d as f64).collect(),
+            n_moe: 3,
+        }
+    }
+
+    /// Serial allreduce time the tests bucket into `k` chunks.
+    const AR: f64 = 4.0;
+
+    fn chunk(intra: f64, inter: f64, k: usize) -> A2aBreakdown {
+        A2aBreakdown { local_s: 0.0, intra_s: intra / k as f64, inter_s: inter / k as f64 }
+    }
+
+    #[test]
+    fn k1_is_the_serial_phase_sum() {
+        let inp = inputs(4);
+        let (intra, inter) = (0.5, 2.0);
+        let c = pipeline_cost(&inp, &chunk(intra, inter, 1), AR, 1);
+        // 2·n_moe blocks × 2 exchanges × (intra + inter) + dense + slowest
+        // expert + allreduce, all on one chain
+        let a2a = 4.0 * inp.n_moe as f64 * (intra + inter);
+        let want = inp.dense_fwd_s + inp.dense_bwd_s + 6.0 + a2a + AR;
+        assert!(
+            (c.makespan_s - want).abs() <= 1e-12 * want,
+            "{} != {want}",
+            c.makespan_s
+        );
+        assert!((c.serial_sum_s - c.makespan_s).abs() <= 1e-12 * want);
+        assert_eq!(c.chunks, 1);
+        // nothing overlaps at k = 1: the full a2a and allreduce are exposed
+        assert!((c.exposed_a2a_s - a2a).abs() <= 1e-12 * a2a);
+        assert!((c.exposed_allreduce_s - AR).abs() <= 1e-12);
+    }
+
+    #[test]
+    fn bounds_sandwich_the_makespan_for_all_k() {
+        let inp = inputs(5);
+        for k in CHUNK_SWEEP {
+            let c = pipeline_cost(&inp, &chunk(1.0, 4.0, k), AR / k as f64, k);
+            assert!(c.bound_s <= c.makespan_s * (1.0 + 1e-12), "k={k}");
+            assert!(c.makespan_s <= c.serial_sum_s * (1.0 + 1e-12), "k={k}");
+            assert!(c.exposed_a2a_s >= 0.0 && c.exposed_allreduce_s >= 0.0);
+            assert!(c.exposed_comm_s() <= c.makespan_s * (1.0 + 1e-12));
+        }
+    }
+
+    #[test]
+    fn fluid_chunking_is_monotone_and_approaches_the_bound() {
+        // with per-chunk durations = phase/k (no latency re-pay, the
+        // α = 0 regime) finer chunking can only help
+        let inp = inputs(4);
+        let mut prev = f64::INFINITY;
+        let mut last = 0.0;
+        for k in CHUNK_SWEEP {
+            let c = pipeline_cost(&inp, &chunk(1.0, 4.0, k), AR / k as f64, k);
+            assert!(
+                c.makespan_s <= prev * (1.0 + 1e-12),
+                "k={k}: {} > previous {prev}",
+                c.makespan_s
+            );
+            prev = c.makespan_s;
+            last = c.makespan_s;
+        }
+        let k1 = pipeline_cost(&inp, &chunk(1.0, 4.0, 1), AR, 1).makespan_s;
+        assert!(last < k1, "chunking must strictly beat serial here");
+    }
+
+    #[test]
+    fn combine_overlaps_next_chunks_dispatch() {
+        // comm-only pipeline (no compute): one block, dispatch T + combine
+        // T serially; chunked, combine chunk c rides under dispatch chunk
+        // c+1, so the block tends to T as k grows
+        let inp = OverlapInputs {
+            dense_fwd_s: 0.0,
+            dense_bwd_s: 0.0,
+            expert_s_per_dev: vec![0.0; 4],
+            n_moe: 1,
+        };
+        let t = 8.0;
+        let serial = pipeline_cost(&inp, &chunk(0.0, t, 1), 0.0, 1).makespan_s;
+        assert!((serial - 2.0 * 2.0 * t).abs() < 1e-12); // 2 blocks × (disp + comb)
+        let k = 8;
+        let c = pipeline_cost(&inp, &chunk(0.0, t, k), 0.0, k).makespan_s;
+        // flow shop: per block ≈ t + t/k
+        let want = 2.0 * (t + t / k as f64);
+        assert!((c - want).abs() <= 1e-9 * want, "{c} != {want}");
+    }
+
+    #[test]
+    fn allreduce_hides_under_the_backward_tail() {
+        let inp = OverlapInputs {
+            dense_fwd_s: 0.0,
+            dense_bwd_s: 10.0,
+            expert_s_per_dev: vec![0.0; 2],
+            n_moe: 1,
+        };
+        let zero = A2aBreakdown::default();
+        // k = 1: the bucket waits for the whole tail — fully exposed
+        let s = pipeline_cost(&inp, &zero, 4.0, 1);
+        assert!((s.exposed_allreduce_s - 4.0).abs() < 1e-12);
+        // k = 4: buckets fire after each tail slice; only the last bucket
+        // (1s) sticks out past the tail
+        let c = pipeline_cost(&inp, &zero, 1.0, 4);
+        assert!((c.exposed_allreduce_s - 1.0).abs() < 1e-12, "{:?}", c);
+        assert!((c.makespan_s - 11.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slowest_device_gates_expert_compute() {
+        let mut inp = inputs(3);
+        inp.expert_s_per_dev = vec![1.0, 1.0, 9.0];
+        let c = pipeline_cost(&inp, &A2aBreakdown::default(), AR, 1);
+        let want = inp.dense_fwd_s + inp.dense_bwd_s + 9.0 + AR;
+        assert!((c.makespan_s - want).abs() <= 1e-12 * want);
+    }
+}

@@ -1,0 +1,117 @@
+//! Chunked dispatch–compute–combine overlap engine.
+//!
+//! The serial step-cost model (`StepCost::serial_total`) charges
+//! `compute + a2a + allreduce` back to back, which overstates the value
+//! of shrinking inter-node bytes: real MoE runtimes (FasterMoE's smart
+//! scheduling, MoNTA, MoE Parallel Folding) pipeline token chunks through
+//! dispatch → expert → combine and hide the gradient allreduce under the
+//! backward pass, so the *slowest resource*, not the sum of phases,
+//! bounds the step. This module prices that regime:
+//!
+//! * [`Timeline`] — an event-driven multi-resource scheduler with typed
+//!   resources (per-device compute streams, intra-/inter-node link
+//!   channels per transfer direction, the allreduce channel), returning
+//!   the makespan plus per-resource busy and per-class exposure
+//!   accounting;
+//! * [`pipeline_cost`] — the chunk DAG: the dispatch byte matrix and
+//!   expert FLOPs split into `k` token chunks, dispatch(c) → expert(c) →
+//!   combine(c) per chunk with combine of chunk `c` overlapping dispatch
+//!   of chunk `c+1`, and the allreduce bucketed over the backward tail.
+//!   Per-chunk exchanges are priced on `bytes/k` through the same
+//!   contention engine as the serial model (α terms re-paid per chunk);
+//! * [`autotune_k`] — sweeps `k ∈ {1, 2, 4, 8, 16}` and keeps the
+//!   cheapest pipeline (never above the serial clock, since `k = 1` *is*
+//!   the serial clock to fp precision).
+//!
+//! [`OverlapMode`] is the user-facing selector threaded through
+//! `SessionBuilder::overlap`, the `train.overlap` config key, and the
+//! `--overlap` CLI flag; `coordinator::cost::step_cost_overlapped` wires
+//! the engine into the step clock and memoises the tuned `k` through the
+//! epoch-aware `PlanCache`.
+
+mod autotune;
+mod chunk;
+mod timeline;
+
+pub use autotune::autotune_k;
+pub use chunk::{pipeline_cost, OverlapInputs, PipelineCost, CHUNK_SWEEP};
+pub use timeline::{EventClass, EventId, Timeline};
+
+/// How a session prices its step clock: serially (the historic model), as
+/// a fixed-`k` chunk pipeline, or autotuned per dispatch pattern.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum OverlapMode {
+    /// Phases back to back — the serial upper bound (`off` in specs).
+    #[default]
+    Serial,
+    /// Chunked pipeline with exactly this many token chunks (`k=<n>`).
+    Fixed(usize),
+    /// Sweep the chunk counts per (topology, plan) and keep the winner.
+    Auto,
+}
+
+impl OverlapMode {
+    /// The chunk count this mode pins, if any (`Auto` resolves per step).
+    pub fn fixed_k(&self) -> Option<usize> {
+        match self {
+            OverlapMode::Fixed(k) => Some(*k),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for OverlapMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            OverlapMode::Serial => write!(f, "serial"),
+            OverlapMode::Fixed(k) => write!(f, "k={k}"),
+            OverlapMode::Auto => write!(f, "auto"),
+        }
+    }
+}
+
+impl std::str::FromStr for OverlapMode {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<OverlapMode, String> {
+        match s.trim() {
+            "off" | "serial" => Ok(OverlapMode::Serial),
+            "auto" => Ok(OverlapMode::Auto),
+            other => match other.strip_prefix("k=") {
+                Some(n) => match n.parse::<usize>() {
+                    Ok(k) if k >= 1 => Ok(OverlapMode::Fixed(k)),
+                    Ok(_) => Err("overlap chunk count must be >= 1".into()),
+                    Err(e) => Err(format!("bad overlap chunk count {n:?}: {e}")),
+                },
+                None => Err(format!(
+                    "unknown overlap mode {other:?} (known: off, serial, k=<n>, auto)"
+                )),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_round_trip() {
+        for mode in [OverlapMode::Serial, OverlapMode::Fixed(4), OverlapMode::Auto] {
+            let spec = mode.to_string();
+            assert_eq!(spec.parse::<OverlapMode>().unwrap(), mode, "{spec}");
+        }
+        // `off` is an accepted alias of the serial clock
+        assert_eq!("off".parse::<OverlapMode>().unwrap(), OverlapMode::Serial);
+        assert_eq!("k=16".parse::<OverlapMode>().unwrap(), OverlapMode::Fixed(16));
+        assert_eq!(OverlapMode::Fixed(8).fixed_k(), Some(8));
+        assert_eq!(OverlapMode::Auto.fixed_k(), None);
+    }
+
+    #[test]
+    fn bad_specs_rejected() {
+        for bad in ["", "k=", "k=0", "k=two", "chunks:4", "maybe"] {
+            assert!(bad.parse::<OverlapMode>().is_err(), "{bad:?} should not parse");
+        }
+    }
+}

@@ -1,0 +1,246 @@
+//! The event-driven multi-resource timeline.
+//!
+//! A [`Timeline`] owns a set of *resources* (per-device compute streams,
+//! directional link channels, the allreduce channel — the caller decides
+//! the mapping) and schedules *events* against them. An event occupies
+//! exactly one resource for its duration and may depend on earlier
+//! events; it starts at the later of its resource's free time and its
+//! slowest dependency's completion (list scheduling in submission order,
+//! which for the regular chunk DAGs built by [`super::chunk`] reproduces
+//! the classic flow-shop recurrence `C(c,s) = max(C(c-1,s), C(c,s-1)) +
+//! d_s`). The timeline tracks, besides the makespan:
+//!
+//! * per-resource *busy* time — the analytic lower bound of any schedule
+//!   is the busiest single resource ([`Timeline::max_busy`]);
+//! * per-class activity intervals, from which [`Timeline::exposed`]
+//!   measures how much of one class of work is *not* hidden under
+//!   another (e.g. a2a time with no compute in flight — the "exposed
+//!   communication" every overlap paper reports).
+
+/// Index of a scheduled event, used to declare dependencies.
+pub type EventId = usize;
+
+/// What kind of work an event represents, for exposure accounting.
+/// (Resources say *where* an event runs; the class says *what* it is.)
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventClass {
+    Compute,
+    A2a,
+    Allreduce,
+}
+
+/// An event-driven schedule under construction. See the module docs.
+#[derive(Debug)]
+pub struct Timeline {
+    /// Earliest free time per resource.
+    free_at: Vec<f64>,
+    /// Accumulated occupied time per resource.
+    busy: Vec<f64>,
+    /// Completion time per event, indexed by [`EventId`].
+    end_of: Vec<f64>,
+    /// `(class, start, end)` of every positive-duration event.
+    intervals: Vec<(EventClass, f64, f64)>,
+    makespan: f64,
+}
+
+impl Timeline {
+    pub fn new(n_resources: usize) -> Timeline {
+        Timeline {
+            free_at: vec![0.0; n_resources],
+            busy: vec![0.0; n_resources],
+            end_of: Vec::new(),
+            intervals: Vec::new(),
+            makespan: 0.0,
+        }
+    }
+
+    /// Schedule one event on `resource` with the given dependencies.
+    /// Returns its id for later `deps` lists. Zero-duration events are
+    /// legal — they carry dependencies without occupying time.
+    pub fn schedule(
+        &mut self,
+        resource: usize,
+        class: EventClass,
+        duration: f64,
+        deps: &[EventId],
+    ) -> EventId {
+        debug_assert!(duration >= 0.0, "negative event duration {duration}");
+        let mut start = self.free_at[resource];
+        for &d in deps {
+            start = start.max(self.end_of[d]);
+        }
+        let end = start + duration;
+        self.free_at[resource] = end;
+        self.busy[resource] += duration;
+        if duration > 0.0 {
+            self.intervals.push((class, start, end));
+        }
+        self.makespan = self.makespan.max(end);
+        self.end_of.push(end);
+        self.end_of.len() - 1
+    }
+
+    /// Completion time of the whole schedule.
+    pub fn makespan(&self) -> f64 {
+        self.makespan
+    }
+
+    /// Completion time of one event.
+    pub fn end_of(&self, id: EventId) -> f64 {
+        self.end_of[id]
+    }
+
+    /// Accumulated occupied time per resource.
+    pub fn busy(&self) -> &[f64] {
+        &self.busy
+    }
+
+    /// The busiest single resource — the analytic lower bound on the
+    /// makespan of *any* schedule of these events.
+    pub fn max_busy(&self) -> f64 {
+        self.busy.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Sum of every event duration — the serial execution of the same
+    /// events, and (for list scheduling) an upper bound on the makespan.
+    pub fn serial_sum(&self) -> f64 {
+        self.busy.iter().sum()
+    }
+
+    /// Measure of the times where an event of `class` is running and no
+    /// event of any class in `hidden_by` is — the exposed portion of that
+    /// class of work.
+    pub fn exposed(&self, class: EventClass, hidden_by: &[EventClass]) -> f64 {
+        let target = union_of(
+            self.intervals
+                .iter()
+                .filter(|(c, _, _)| *c == class)
+                .map(|&(_, s, e)| (s, e))
+                .collect(),
+        );
+        let hide = union_of(
+            self.intervals
+                .iter()
+                .filter(|(c, _, _)| hidden_by.contains(c))
+                .map(|&(_, s, e)| (s, e))
+                .collect(),
+        );
+        measure_minus(&target, &hide)
+    }
+}
+
+/// Sort + merge a set of intervals into a disjoint union.
+fn union_of(mut iv: Vec<(f64, f64)>) -> Vec<(f64, f64)> {
+    iv.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let mut out: Vec<(f64, f64)> = Vec::with_capacity(iv.len());
+    for (s, e) in iv {
+        match out.last_mut() {
+            Some(last) if s <= last.1 => last.1 = last.1.max(e),
+            _ => out.push((s, e)),
+        }
+    }
+    out
+}
+
+/// `measure(a \ b)` for two disjoint, sorted interval unions.
+fn measure_minus(a: &[(f64, f64)], b: &[(f64, f64)]) -> f64 {
+    let mut total = 0.0;
+    let mut bi = 0;
+    for &(s, e) in a {
+        let mut cur = s;
+        while bi < b.len() && b[bi].1 <= cur {
+            bi += 1;
+        }
+        let mut k = bi;
+        while cur < e {
+            if k >= b.len() || b[k].0 >= e {
+                total += e - cur;
+                break;
+            }
+            if b[k].0 > cur {
+                total += b[k].0 - cur;
+            }
+            cur = cur.max(b[k].1);
+            k += 1;
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_of_dependencies_serialises() {
+        let mut t = Timeline::new(2);
+        let a = t.schedule(0, EventClass::Compute, 1.0, &[]);
+        let b = t.schedule(1, EventClass::A2a, 2.0, &[a]);
+        let c = t.schedule(0, EventClass::Compute, 0.5, &[b]);
+        assert_eq!(t.end_of(a), 1.0);
+        assert_eq!(t.end_of(b), 3.0);
+        assert_eq!(t.end_of(c), 3.5);
+        assert_eq!(t.makespan(), 3.5);
+        assert_eq!(t.busy(), &[1.5, 2.0]);
+        assert_eq!(t.serial_sum(), 3.5);
+        assert_eq!(t.max_busy(), 2.0);
+    }
+
+    #[test]
+    fn resource_occupancy_serialises_independent_events() {
+        let mut t = Timeline::new(1);
+        t.schedule(0, EventClass::A2a, 1.0, &[]);
+        t.schedule(0, EventClass::A2a, 1.0, &[]); // no dep, same resource
+        assert_eq!(t.makespan(), 2.0);
+    }
+
+    #[test]
+    fn independent_resources_overlap() {
+        let mut t = Timeline::new(2);
+        t.schedule(0, EventClass::Compute, 3.0, &[]);
+        t.schedule(1, EventClass::A2a, 2.0, &[]);
+        assert_eq!(t.makespan(), 3.0);
+        assert_eq!(t.serial_sum(), 5.0);
+        // the a2a runs entirely under the compute: nothing exposed
+        assert_eq!(t.exposed(EventClass::A2a, &[EventClass::Compute]), 0.0);
+        // the compute's tail is not hidden by the shorter a2a
+        assert_eq!(t.exposed(EventClass::Compute, &[EventClass::A2a]), 1.0);
+    }
+
+    #[test]
+    fn exposed_measures_partial_overlap() {
+        let mut t = Timeline::new(3);
+        // compute [0, 2); a2a [1, 4) on its own channel; exposed = [2, 4)
+        let c = t.schedule(0, EventClass::Compute, 2.0, &[]);
+        let gate = t.schedule(2, EventClass::Compute, 1.0, &[]);
+        let _ = c;
+        let a = t.schedule(1, EventClass::A2a, 3.0, &[gate]);
+        assert_eq!(t.end_of(a), 4.0);
+        assert_eq!(t.exposed(EventClass::A2a, &[EventClass::Compute]), 2.0);
+        // against nothing, the full a2a interval is exposed
+        assert_eq!(t.exposed(EventClass::A2a, &[]), 3.0);
+    }
+
+    #[test]
+    fn zero_duration_events_carry_deps_without_time() {
+        let mut t = Timeline::new(1);
+        let a = t.schedule(0, EventClass::Compute, 1.0, &[]);
+        let barrier = t.schedule(0, EventClass::Compute, 0.0, &[a]);
+        let b = t.schedule(0, EventClass::Compute, 1.0, &[barrier]);
+        assert_eq!(t.end_of(b), 2.0);
+        assert_eq!(t.makespan(), 2.0);
+        // the barrier adds no interval
+        assert_eq!(t.exposed(EventClass::Compute, &[]), 2.0);
+    }
+
+    #[test]
+    fn interval_helpers_merge_and_subtract() {
+        let u = union_of(vec![(3.0, 4.0), (0.0, 1.0), (0.5, 2.0)]);
+        assert_eq!(u, vec![(0.0, 2.0), (3.0, 4.0)]);
+        // [0,2)∪[3,4) minus [1,3.5) = [0,1) + [3.5,4)
+        let m = measure_minus(&u, &[(1.0, 3.5)]);
+        assert!((m - 1.5).abs() < 1e-15);
+        assert_eq!(measure_minus(&u, &[]), 3.0);
+        assert_eq!(measure_minus(&[], &u), 0.0);
+    }
+}

@@ -12,7 +12,8 @@
 
 use super::solver::{solve_placement, PlacementObjective};
 use super::{GateLoadEwma, Placement};
-use crate::comm::A2aAlgo;
+use crate::comm::{price_rounds, ring_allreduce_time, A2aAlgo};
+use crate::overlap::{autotune_k, pipeline_cost, OverlapInputs, OverlapMode};
 use crate::topology::Topology;
 use crate::util::Mat;
 
@@ -78,6 +79,77 @@ pub struct Migration {
     pub realized_saving_s: f64,
 }
 
+/// How the amortisation gate prices a step when the session's clock runs
+/// on the chunked overlap timeline: candidate placements are compared on
+/// full overlapped step makespans, so a2a bytes the pipeline hides under
+/// compute produce no predicted saving and cannot trigger a migration.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OverlapPricing {
+    /// The session's overlap mode (`Auto` re-tunes the chunk count for
+    /// each candidate placement, exactly as the session would after the
+    /// migration).
+    pub mode: OverlapMode,
+    /// Forward dense compute per step (see `overlap::OverlapInputs`).
+    pub dense_fwd_s: f64,
+    /// Backward dense compute per step (the allreduce's overlap window).
+    pub dense_bwd_s: f64,
+    /// Expert compute seconds per received token, totalled over all MoE
+    /// layers, forward + backward.
+    pub expert_s_per_token: f64,
+    /// MoE layers in the model.
+    pub n_moe: usize,
+    /// Dense gradient bytes (per-bucket allreduce pricing).
+    pub dense_param_bytes: f64,
+}
+
+impl OverlapPricing {
+    /// Overlapped step time of `counts` routed through `pl` — the clock
+    /// the session would charge for a step under this placement.
+    fn step_s(
+        &self,
+        topo: &Topology,
+        pl: &Placement,
+        counts: &Mat,
+        a2a: A2aAlgo,
+        token_bytes: f64,
+    ) -> f64 {
+        let bytes = pl.bytes_matrix(counts, token_bytes);
+        let inputs = OverlapInputs {
+            dense_fwd_s: self.dense_fwd_s,
+            dense_bwd_s: self.dense_bwd_s,
+            expert_s_per_dev: pl
+                .recv_per_device(counts)
+                .into_iter()
+                .map(|r| r * self.expert_s_per_token)
+                .collect(),
+            n_moe: self.n_moe,
+        };
+        // synthesise the round schedule once per candidate byte matrix
+        // (an even 1/k split leaves the optimal structure unchanged), so
+        // the autotune sweep re-prices rounds instead of re-running BvN
+        // synthesis per chunk count
+        let rounds = a2a.rounds(topo, &bytes);
+        let chunk_of = |k: usize| {
+            let chunk = bytes.scale(1.0 / k as f64);
+            let breakdown = match &rounds {
+                Some(r) => price_rounds(topo, &chunk, r),
+                None => a2a.plan(topo, &chunk).breakdown,
+            };
+            (breakdown, ring_allreduce_time(topo, self.dense_param_bytes / k as f64))
+        };
+        match self.mode {
+            OverlapMode::Auto => autotune_k(&inputs, chunk_of).1.makespan_s,
+            // Serial prices as the k = 1 pipeline — one chain, the same
+            // clock to fp precision
+            mode => {
+                let k = mode.fixed_k().unwrap_or(1);
+                let (chunk, ar_chunk) = chunk_of(k);
+                pipeline_cost(&inputs, &chunk, ar_chunk, k).makespan_s
+            }
+        }
+    }
+}
+
 /// Load-tracking + solve + amortisation gate, owning the session's
 /// current [`Placement`] and its epoch.
 #[derive(Debug)]
@@ -97,6 +169,10 @@ pub struct PlacementEngine {
     /// accept/reject savings are priced under it, so a candidate that
     /// only wins under a plan the session doesn't run is never applied.
     a2a: A2aAlgo,
+    /// When the session prices steps on the overlap timeline, savings are
+    /// re-priced under the overlapped clock too ([`OverlapPricing`]) —
+    /// the gate must not chase a2a time that was never exposed.
+    overlap: Option<OverlapPricing>,
     steps: u64,
 }
 
@@ -119,8 +195,21 @@ impl PlacementEngine {
             expert_bytes,
             exchanges_per_step,
             a2a,
+            overlap: None,
             steps: 0,
         }
+    }
+
+    /// Price migration savings under the chunked overlap clock instead of
+    /// the serial a2a diff (use when the session runs with `--overlap`).
+    pub fn with_overlap(mut self, pricing: OverlapPricing) -> PlacementEngine {
+        self.overlap = Some(pricing);
+        self
+    }
+
+    /// The overlapped-clock pricing the gate uses, if any.
+    pub fn overlap_pricing(&self) -> Option<&OverlapPricing> {
+        self.overlap.as_ref()
     }
 
     /// The current expert→device map.
@@ -161,22 +250,27 @@ impl PlacementEngine {
         }
         // the swap descent searches on the cheap direct-contention proxy;
         // the accept/reject decision re-prices both placements under the
-        // a2a plan the step clock actually runs, so a proxy-only win
-        // (e.g. one that a hierarchical exchange would erase) is rejected
-        let exchange = |pl: &Placement, counts: &Mat| {
-            self.a2a.exchange_time(topo, &pl.bytes_matrix(counts, self.token_bytes))
+        // clock the session actually runs: the a2a plan, and — when the
+        // session prices steps on the overlap timeline — the overlapped
+        // makespan, so a2a bytes hidden under compute yield no saving and
+        // a proxy-only win is never applied
+        let step_time = |pl: &Placement, counts: &Mat| match &self.overlap {
+            None => {
+                self.a2a.exchange_time(topo, &pl.bytes_matrix(counts, self.token_bytes))
+                    * self.exchanges_per_step
+            }
+            Some(ov) => ov.step_s(topo, pl, counts, self.a2a, self.token_bytes),
         };
-        let cur = exchange(&self.placement, self.loads.loads());
-        let new = exchange(&candidate, self.loads.loads());
-        let predicted_saving_s = (cur - new) * self.exchanges_per_step;
+        let cur = step_time(&self.placement, self.loads.loads());
+        let new = step_time(&candidate, self.loads.loads());
+        let predicted_saving_s = cur - new;
         let mut obj = PlacementObjective::new(topo, self.token_bytes);
         let cost_s = obj.migration_cost(&self.placement, &candidate, self.expert_bytes);
         if predicted_saving_s <= 0.0 || predicted_saving_s * self.cfg.horizon < cost_s {
             return None; // does not amortise — keep the current placement
         }
-        let realized_saving_s = (exchange(&self.placement, live_counts)
-            - exchange(&candidate, live_counts))
-            * self.exchanges_per_step;
+        let realized_saving_s =
+            step_time(&self.placement, live_counts) - step_time(&candidate, live_counts);
         let moved = self.placement.moved_experts(&candidate);
         let bytes = moved.len() as f64 * self.expert_bytes;
         self.placement = candidate;
@@ -259,6 +353,56 @@ mod tests {
         assert!((m.realized_saving_s - m.predicted_saving_s).abs() <= 1e-9);
         // the gate held: the accepted move amortises within the horizon
         assert!(m.predicted_saving_s * cfg.horizon >= m.cost_s);
+    }
+
+    #[test]
+    fn overlapped_gate_discounts_a2a_time_hidden_under_compute() {
+        // the serial gate prices a migration's saving as the full a2a
+        // diff; the overlapped gate prices full step makespans, so a2a
+        // bytes pipelined under heavy expert compute contribute only
+        // their exposed slivers (the pipe edges) — the predicted saving
+        // must collapse relative to the serial gate's for the SAME skew.
+        // (The received loads are a permutation across placements, so the
+        // compute bound itself is placement-invariant here.)
+        let topo = presets::table1();
+        let cfg = PlacementConfig { every: 4, horizon: 1e9, ewma_alpha: 0.5 };
+        // fat tokens so the uplink β term (which migration can shrink)
+        // dominates the path α (which it cannot)
+        let fat = || PlacementEngine::new(cfg, 4, 1, 4096.0, 16384.0, 8.0, A2aAlgo::Direct);
+        let counts = skewed_counts(&topo, 32.0);
+        let migrate = |mut eng: PlacementEngine| -> Migration {
+            for _ in 0..8 {
+                eng.observe(&counts);
+                if let Some(m) = eng.maybe_replace(&topo, &counts) {
+                    return m;
+                }
+            }
+            panic!("skewed load must migrate under a 1e9-step horizon");
+        };
+
+        let serial = migrate(fat());
+        let pricing = OverlapPricing {
+            mode: crate::overlap::OverlapMode::Fixed(4),
+            dense_fwd_s: 0.0,
+            dense_bwd_s: 0.0,
+            expert_s_per_token: 1.0, // seconds per token: compute dwarfs a2a
+            n_moe: 2,
+            dense_param_bytes: 0.0,
+        };
+        let eng = fat().with_overlap(pricing);
+        assert_eq!(eng.overlap_pricing(), Some(&pricing));
+        let hidden = migrate(eng);
+        assert!(
+            hidden.predicted_saving_s < serial.predicted_saving_s / 2.0,
+            "hidden a2a must be discounted: overlapped {} vs serial {}",
+            hidden.predicted_saving_s,
+            serial.predicted_saving_s
+        );
+        // with compute stripped back out the overlapped gate still sees
+        // (most of) the saving: the a2a really is exposed again
+        let exposed = OverlapPricing { expert_s_per_token: 0.0, ..pricing };
+        let m = migrate(fat().with_overlap(exposed));
+        assert!(m.predicted_saving_s > hidden.predicted_saving_s * 2.0);
     }
 
     #[test]

@@ -34,7 +34,7 @@
 pub mod engine;
 pub mod solver;
 
-pub use engine::{Migration, PlacementConfig, PlacementEngine};
+pub use engine::{Migration, OverlapPricing, PlacementConfig, PlacementEngine};
 pub use solver::{greedy_placement, local_search, solve_placement, PlacementObjective};
 
 use crate::topology::Topology;

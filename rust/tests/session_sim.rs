@@ -392,6 +392,127 @@ fn placement_beats_canonical_on_skewed_load_over_2x2_tree() {
 }
 
 // ---------------------------------------------------------------------------
+// chunked overlap engine (the ISSUE-5 acceptance criterion)
+// ---------------------------------------------------------------------------
+
+/// A 2×2 tree whose inter-node uplink is a bandwidth bottleneck (β-term
+/// far above the path α), so pipelining token chunks through
+/// dispatch → expert → combine has real time to hide.
+fn bottleneck22() -> Topology {
+    use ta_moe::topology::{Link, TreeSpec};
+    Topology::tree(
+        &TreeSpec::parse("[2,2]").unwrap(),
+        &[Link::from_gbps_us(45.0, 1.0), Link::from_gbps_us(0.01, 1.0)],
+        ta_moe::topology::presets::local_copy(),
+    )
+}
+
+fn overlap_session(spec: &str, seed: i32) -> Session {
+    let cfg = ModelCfg::preset("tiny4").unwrap(); // P = 4, matches [2,2]
+    SessionBuilder::new()
+        .backend(Box::new(SimBackend::new(cfg)))
+        .topology(bottleneck22())
+        .policy_named("fastmoe") // even dispatch keeps the uplink loaded
+        .a2a(A2aAlgo::Direct)
+        .seed(seed)
+        .overlap_named(spec)
+        .build()
+        .unwrap()
+}
+
+#[test]
+fn overlap_auto_beats_serial_on_bottleneck_2x2_tree() {
+    let run = |spec: &str| {
+        let mut s = overlap_session(spec, 33);
+        s.run(40).unwrap();
+        s
+    };
+    let serial = run("serial");
+    let k1 = run("k=1");
+    let auto = run("auto");
+
+    // the clock axis must not touch what the model learns
+    let last_loss = |s: &Session| s.log().records.last().unwrap().loss;
+    assert_eq!(last_loss(&serial), last_loss(&k1));
+    assert_eq!(last_loss(&serial), last_loss(&auto));
+
+    // `--overlap k=1` reproduces the serial clock exactly (per step)
+    assert_eq!(serial.overlap_mode(), ta_moe::OverlapMode::Serial);
+    assert_eq!(k1.overlap_mode(), ta_moe::OverlapMode::Fixed(1));
+    for (a, b) in serial.log().records.iter().zip(&k1.log().records) {
+        let (ts, tk) = (a.sim_total_s(), b.sim_total_s());
+        assert!((ts - tk).abs() <= 1e-12 * ts, "step {}: {ts} != {tk}", a.step);
+        assert_eq!(b.chunks, 1);
+        // serial-mode bookkeeping: the serial bound IS the charged clock
+        assert!((a.sim_serial_s - ts).abs() <= 1e-12 * ts);
+    }
+
+    // `--overlap auto` picks k > 1 on the bottlenecked tree and charges a
+    // strictly lower simulated clock under the same seed
+    assert_eq!(auto.overlap_mode(), ta_moe::OverlapMode::Auto);
+    let max_chunks = auto.log().records.iter().map(|r| r.chunks).max().unwrap();
+    assert!(max_chunks > 1, "auto must chunk here, got k={max_chunks}");
+    let total = |s: &Session| s.log().sim_time_axis().last().copied().unwrap();
+    let (t_auto, t_serial) = (total(&auto), total(&serial));
+    assert!(
+        t_auto < t_serial * 0.99,
+        "auto clock {t_auto} must strictly beat serial {t_serial}"
+    );
+
+    // the logging/summary paths report the overlapped clock (ISSUE-5
+    // satellite regression): per-step records charge ≤ their own serial
+    // bound, the run-level efficiency is positive, and the summary/CSV
+    // carry the new columns
+    for r in &auto.log().records {
+        let charged = r.sim_comm_s + r.sim_compute_s;
+        assert!(charged <= r.sim_serial_s * (1.0 + 1e-9), "step {}", r.step);
+        assert!(r.chunks >= 1);
+        assert!(r.sim_a2a_exposed_s >= 0.0);
+    }
+    let serial_bound: f64 = auto.log().records.iter().map(|r| r.sim_serial_s).sum();
+    assert!(t_auto < serial_bound);
+    assert!(auto.log().overlap_efficiency() > 0.005);
+    assert!(serial.log().overlap_efficiency().abs() < 1e-9);
+    let json = auto.log().summary_json().to_string_compact();
+    assert!(json.contains("\"overlap_efficiency\":"), "{json}");
+    assert!(json.contains(&format!("\"chunks_max\":{max_chunks}")), "{json}");
+    let path = std::env::temp_dir().join("ta_moe_overlap_acceptance.csv");
+    auto.log().write_csv(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let header = text.lines().next().unwrap();
+    let chunks_col = header.split(',').position(|c| c == "chunks").unwrap();
+    assert!(text
+        .lines()
+        .skip(1)
+        .any(|l| l.split(',').nth(chunks_col).unwrap().parse::<usize>().unwrap() > 1));
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn builder_parses_and_validates_overlap_specs() {
+    let build = |spec: &str| {
+        SessionBuilder::new()
+            .backend(Box::new(SimBackend::new(ModelCfg::preset("tiny4").unwrap())))
+            .overlap_named(spec)
+            .build()
+    };
+    assert_eq!(
+        build("k=4").unwrap().overlap_mode(),
+        ta_moe::OverlapMode::Fixed(4)
+    );
+    assert_eq!(build("off").unwrap().overlap_mode(), ta_moe::OverlapMode::Serial);
+    let err = build("sometimes").unwrap_err();
+    assert!(err.to_string().contains("unknown overlap mode"), "{err}");
+    // the typed setter is validated at build time too, not at step time
+    let err = SessionBuilder::new()
+        .backend(Box::new(SimBackend::new(ModelCfg::preset("tiny4").unwrap())))
+        .overlap(ta_moe::OverlapMode::Fixed(0))
+        .build()
+        .unwrap_err();
+    assert!(err.to_string().contains("chunk count"), "{err}");
+}
+
+// ---------------------------------------------------------------------------
 // third-party policy registration (the open-API acceptance criterion)
 // ---------------------------------------------------------------------------
 
