@@ -1,0 +1,488 @@
+#!/usr/bin/env python3
+"""Bit-exact python mirror of the serving simulator's decision math.
+
+Mirrors, straight from the rust sources (plain python3, no dependencies):
+
+* ``rust/src/util/rng.rs``       — SplitMix64-seeded xoshiro256**;
+* ``rust/src/serve/trace.rs``    — Poisson / bursty-MMPP / diurnal traces;
+* ``rust/src/serve/mod.rs``      — route-matrix construction and per-token
+                                   weighted expert sampling;
+* ``rust/src/serve/cache.rs``    — expert-weight cache residency (LRU and
+                                   EWMA-prioritized retention);
+* ``rust/src/serve/batcher.rs``  — continuous-batching admission, token
+                                   accounting, and retirement;
+* ``rust/src/metrics/mod.rs``    — nearest-rank percentiles.
+
+Every floating-point step follows IEEE-754 double semantics, so the
+sequences here equal the rust ones bit for bit; the golden vectors
+asserted below are the same constants pinned in the rust unit tests.
+Run ``python3 python/serve_mirror.py`` — it prints a short report and
+exits nonzero on the first violated invariant.
+"""
+
+import math
+import sys
+
+MASK = (1 << 64) - 1
+
+# ------------------------------------------------------------------ rng
+
+
+class Rng:
+    """xoshiro256** seeded via SplitMix64 (util/rng.rs)."""
+
+    def __init__(self, seed):
+        x = seed & MASK
+        s = []
+        for _ in range(4):
+            x = (x + 0x9E3779B97F4A7C15) & MASK
+            z = x
+            z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+            z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+            s.append(z ^ (z >> 31))
+        self.s = s
+
+    @staticmethod
+    def _rotl(x, k):
+        return ((x << k) | (x >> (64 - k))) & MASK
+
+    def next_u64(self):
+        s = self.s
+        result = (self._rotl((s[1] * 5) & MASK, 7) * 9) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = self._rotl(s[3], 45)
+        return result
+
+    def f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def below(self, n):
+        assert n > 0
+        return (self.next_u64() * n) >> 64  # Lemire multiply-shift
+
+    def range(self, lo, hi):
+        return lo + self.below(hi - lo)
+
+    def weighted(self, weights):
+        # rust sums left to right; fsum would compensate differently
+        total = 0.0
+        for w in weights:
+            total += w
+        assert total > 0.0
+        x = self.f64() * total
+        for i, w in enumerate(weights):
+            x -= w
+            if x <= 0.0:
+                return i
+        return len(weights) - 1
+
+
+# ---------------------------------------------------------------- traces
+
+BURST_HIGH_X = 4.0
+BURST_LOW_DIV = 4.0
+BURST_SWITCH_P = 0.08
+DIURNAL_PERIOD_S = 120.0
+DIURNAL_AMPL = 0.8
+
+
+def exp_gap(rng, rate):
+    return -math.log(max(rng.f64(), 1e-300)) / rate
+
+
+def span_sample(rng, mean):
+    lo = max(mean // 2, 1)
+    hi = max(-(-3 * mean // 2), lo + 1)  # div_ceil(3·mean, 2)
+    return rng.range(lo, hi)
+
+
+def generate_trace(kind, rate_rps, n_requests, seed, prompt_mean=32, output_mean=16):
+    """Mirror of serve/trace.rs::generate. Returns [(arrival, prompt, output)]."""
+    assert rate_rps > 0.0
+    rng = Rng(seed)
+    t = 0.0
+    burst_on = False
+    out = []
+    for _ in range(n_requests):
+        if kind == "poisson":
+            t += exp_gap(rng, rate_rps)
+        elif kind == "bursty":
+            rate = rate_rps * BURST_HIGH_X if burst_on else rate_rps / BURST_LOW_DIV
+            t += exp_gap(rng, rate)
+            if rng.f64() < BURST_SWITCH_P:
+                burst_on = not burst_on
+        elif kind == "diurnal":
+            peak = rate_rps * (1.0 + DIURNAL_AMPL)
+            while True:
+                t += exp_gap(rng, peak)
+                rate_t = rate_rps * (
+                    1.0 + DIURNAL_AMPL * math.sin(2.0 * math.pi * t / DIURNAL_PERIOD_S)
+                )
+                if rng.f64() * peak < rate_t:
+                    break
+        else:
+            raise ValueError(kind)
+        prompt = span_sample(rng, prompt_mean)
+        output = span_sample(rng, output_mean)
+        out.append((t, prompt, output))
+    return out
+
+
+# ----------------------------------------------------------------- routing
+
+
+def route_row(base_row, e_per_dev, zipf_s):
+    """Mirror of serve/mod.rs::route_matrix for one device row."""
+    row = [max(b, 0.0) * (1.0 + (e % e_per_dev)) ** (-zipf_s) for e, b in enumerate(base_row)]
+    total = 0.0
+    for w in row:
+        total += w
+    n = len(row)
+    if total > 0.0:
+        return [w / total for w in row]
+    return [1.0 / n] * n
+
+
+def sample_counts(rng, route, tokens, k):
+    """Mirror of ServeSession::sample_counts: fixed (device, token, draw) order."""
+    p, n = len(route), len(route[0])
+    counts = [[0.0] * n for _ in range(p)]
+    for dev in range(p):
+        t = tokens[dev]
+        if t == 0:
+            continue
+        row = route[dev]
+        for _ in range(t):
+            for _ in range(k):
+                counts[dev][rng.weighted(row)] += 1.0
+    return counts
+
+
+# ------------------------------------------------------------------- cache
+
+
+class ExpertCache:
+    """Mirror of serve/cache.rs::ExpertCache (identity placement)."""
+
+    def __init__(self, p, e_per_dev, cap, policy, alpha=0.25):
+        assert 0.0 < alpha <= 1.0
+        n = p * e_per_dev
+        self.p, self.e_per_dev, self.cap = p, e_per_dev, cap
+        self.policy, self.alpha = policy, alpha
+        self.resident = [cap == 0] * n
+        self.stamp = [0] * n
+        self.ewma = [0.0] * n
+        self.tick = 0
+        self.hits = 0
+        self.misses = 0
+
+    def priority(self, e):
+        recency = float(self.stamp[e]) - e / (self.p * self.e_per_dev)
+        if self.policy == "lru":
+            return recency
+        return self.ewma[e] * 1e9 + recency  # ewma
+
+    def access(self, col_loads, device_of):
+        n = self.p * self.e_per_dev
+        self.tick += 1
+        hits = misses = 0
+        fetch = []
+        for e in range(n):
+            load = col_loads[e]
+            self.ewma[e] = (1.0 - self.alpha) * self.ewma[e] + self.alpha * load
+            if load <= 0.0:
+                continue
+            if self.resident[e]:
+                hits += 1
+            else:
+                misses += 1
+                fetch.append((e // self.e_per_dev, device_of(e)))
+            self.stamp[e] = self.tick
+            self.resident[e] = True
+        if self.cap > 0:
+            self.settle(device_of)
+        self.hits += hits
+        self.misses += misses
+        return hits, misses, fetch
+
+    def settle(self, device_of):
+        n = self.p * self.e_per_dev
+        for dev in range(self.p):
+            here = [e for e in range(n) if device_of(e) == dev and self.resident[e]]
+            if len(here) <= self.cap:
+                continue
+            here.sort(key=self.priority, reverse=True)
+            for e in here[self.cap :]:
+                self.resident[e] = False
+
+
+# ----------------------------------------------------------------- batcher
+
+
+class ContinuousBatcher:
+    """Mirror of serve/batcher.rs::ContinuousBatcher."""
+
+    def __init__(self, trace, p, max_inflight_per_dev):
+        assert p > 0 and max_inflight_per_dev > 0
+        self.trace = trace
+        self.next = 0
+        self.inflight = []  # [id, arrival, prompt, output, emitted, dev, first]
+        self.per_dev = [0] * p
+        self.max = max_inflight_per_dev
+
+    def _open_device(self):
+        dev = min(range(len(self.per_dev)), key=lambda d: (self.per_dev[d], d))
+        return dev if self.per_dev[dev] < self.max else None
+
+    def admit(self, now):
+        admitted = 0
+        while self.next < len(self.trace) and self.trace[self.next][0] <= now:
+            dev = self._open_device()
+            if dev is None:
+                break
+            arrival, prompt, output = self.trace[self.next]
+            self.inflight.append([self.next, arrival, prompt, max(output, 1), 0, dev, None])
+            self.per_dev[dev] += 1
+            self.next += 1
+            admitted += 1
+        return admitted
+
+    def tokens_per_device(self):
+        t = [0] * len(self.per_dev)
+        for s in self.inflight:
+            t[s[5]] += s[2] if s[4] == 0 else 1
+        return t
+
+    def advance(self, now_end):
+        done, keep = [], []
+        for s in self.inflight:
+            if s[4] == 0:
+                s[6] = now_end
+            s[4] += 1
+            if s[4] >= s[3]:
+                self.per_dev[s[5]] -= 1
+                done.append((s[0], s[1], s[6], now_end, s[2], s[3]))
+            else:
+                keep.append(s)
+        self.inflight = keep
+        done.sort(key=lambda r: r[0])
+        return done
+
+    def next_arrival(self):
+        return self.trace[self.next][0] if self.next < len(self.trace) else None
+
+    def done(self):
+        return self.next >= len(self.trace) and not self.inflight
+
+
+# --------------------------------------------------------------- metrics
+
+
+def percentile(xs, q):
+    """Nearest-rank percentile (metrics/mod.rs; quickselect there, sort here)."""
+    if not xs:
+        return None
+    n = len(xs)
+    q = min(max(q, 0.0), 100.0)
+    rank = min(max(int(math.ceil(q / 100.0 * n)), 1), n)
+    return sorted(xs)[rank - 1]
+
+
+# ---------------------------------------------------------------- checks
+
+FAILURES = []
+
+
+def check(name, cond, detail=""):
+    status = "ok" if cond else "FAIL"
+    print(f"  [{status}] {name}" + (f" — {detail}" if detail and not cond else ""))
+    if not cond:
+        FAILURES.append(name)
+
+
+def main():
+    print("serve_mirror: bit-exact decision-math mirror\n")
+
+    # -- rng golden vector (pinned in rust/src/util/rng.rs tests) --------
+    print("rng:")
+    r = Rng(42)
+    golden = [r.next_u64() for _ in range(4)]
+    check(
+        "xoshiro256** golden vector, seed 42",
+        golden
+        == [
+            0x15780B2E0C2EC716,
+            0x6104D9866D113A7E,
+            0xAE17533239E499A1,
+            0xECB8AD4703B360A1,
+        ],
+        f"got {[hex(g) for g in golden]}",
+    )
+    r = Rng(42)
+    check("f64 golden, seed 42", r.f64() == 0.08386297105988216, f"got {Rng(42).f64()!r}")
+    r = Rng(7)
+    check("below(10) golden, seed 7", [r.below(10) for _ in range(4)] == [7, 2, 8, 9])
+    a, b = Rng(5), Rng(5)
+    check("determinism in seed", all(a.next_u64() == b.next_u64() for _ in range(256)))
+
+    # -- traces ----------------------------------------------------------
+    print("traces:")
+    for kind in ("poisson", "bursty", "diurnal"):
+        t1 = generate_trace(kind, 20.0, 64, 7)
+        t2 = generate_trace(kind, 20.0, 64, 7)
+        check(f"{kind} deterministic in seed", t1 == t2)
+        check(
+            f"{kind} sorted, lengths in band",
+            all(x[0] <= y[0] for x, y in zip(t1, t1[1:]))
+            and all(16 <= r[1] < 48 and 8 <= r[2] < 24 for r in t1),
+        )
+    first = generate_trace("poisson", 20.0, 1, 42)[0]
+    check(
+        "poisson golden first request, seed 42",
+        first == (0.1239285554529295, 28, 18),
+        f"got {first!r}",
+    )
+
+    def cv2(kind):
+        arr = [r[0] for r in generate_trace(kind, 20.0, 512, 11)]
+        gaps = [b - a for a, b in zip(arr, arr[1:])]
+        mean = sum(gaps) / len(gaps)
+        return sum((g - mean) ** 2 for g in gaps) / len(gaps) / (mean * mean)
+
+    check(
+        "bursty dispersion exceeds poisson",
+        cv2("bursty") > cv2("poisson") * 1.5,
+        f"bursty {cv2('bursty'):.2f} vs poisson {cv2('poisson'):.2f}",
+    )
+
+    # -- routing ---------------------------------------------------------
+    print("routing:")
+    base = [3.0, 1.0, 0.5, 0.5]  # one device's converged dispatch row
+    row = route_row(base, 2, 1.0)
+    check("route row normalised", abs(sum(row) - 1.0) < 1e-12)
+    check("zipf tilt favours expert 0 of each block", row[0] > row[1] and row[2] > row[3])
+    check("zero row falls back to uniform", route_row([0.0, 0.0], 2, 1.0) == [0.5, 0.5])
+    rng = Rng(9)
+    counts = sample_counts(rng, [row, row], [100, 0], 2)
+    check(
+        "sampling conserves k·tokens per device",
+        sum(counts[0]) == 200.0 and sum(counts[1]) == 0.0,
+    )
+    check("hot expert drew the most tokens", counts[0][0] == max(counts[0]))
+
+    # -- cache -----------------------------------------------------------
+    print("cache:")
+    p, e = 4, 6
+    n = p * e
+    ident = lambda x: x // e
+
+    def replay(policy, cap, seed):
+        rng = Rng(seed)
+        cache = ExpertCache(p, e, cap, policy)
+        touched = set()
+        for _ in range(60):
+            loads = [0.0] * n
+            for _ in range(p * 3):
+                x = rng.below(n * (n + 1) // 2)
+                acc = 0
+                for cand in range(n):
+                    acc += n - cand
+                    if x < acc:
+                        loads[cand] += 1.0
+                        touched.add(cand)
+                        break
+            cache.access(loads, ident)
+        return cache.hits, cache.misses, len(touched)
+
+    for policy in ("lru", "ewma"):
+        prev = -1
+        ok = True
+        for cap in range(1, e + 1):
+            hits, misses, _ = replay(policy, cap, 42)
+            ok = ok and hits >= prev
+            prev = hits
+        check(f"{policy} hit count monotone in capacity", ok)
+        _, misses, touched = replay(policy, e, 99)
+        check(f"{policy} full capacity -> compulsory misses only", misses == touched)
+        hits, misses, _ = replay(policy, 0, 5)
+        check(f"{policy} cap=0 disables caching", misses == 0 and hits > 0)
+
+    # EWMA keeps the hot expert through a one-iteration cold burst; LRU
+    # evicts it (the retention difference the acceptance test banks on)
+    def burst(policy):
+        cache = ExpertCache(2, 2, 1, policy)
+        hot = lambda: cache.access([8.0, 0.0, 0.0, 0.0], lambda x: x // 2)
+        for _ in range(6):
+            hot()
+        cache.access([0.0, 1.0, 0.0, 0.0], lambda x: x // 2)  # cold burst
+        hits, misses, _ = hot()
+        return hits
+
+    check("ewma retains the hot expert through a burst", burst("ewma") == 1)
+    check("lru drops the hot expert on the same burst", burst("lru") == 0)
+
+    # -- batcher ---------------------------------------------------------
+    print("batcher:")
+    b = ContinuousBatcher([(0.0, 10, 3)], 1, 8)
+    b.admit(0.0)
+    ok = b.tokens_per_device() == [10]
+    b.advance(0.25)
+    ok = ok and b.tokens_per_device() == [1]
+    b.advance(0.5)
+    done = b.advance(0.75)
+    rec = done[0]
+    ttft = rec[2] - rec[1]
+    tpot = (rec[3] - rec[2]) / (rec[5] - 1)
+    check("prefill/decode token bill", ok)
+    check("ttft and tpot math", ttft == 0.25 and abs(tpot - 0.25) < 1e-12 and b.done())
+
+    trace = generate_trace("bursty", 50.0, 48, 9)
+    b = ContinuousBatcher(trace, 4, 8)
+    now, admitted, finished, records = 0.0, 0, 0, []
+    while not b.done():
+        if not b.inflight and b.next_arrival() is not None:
+            now = max(now, b.next_arrival())
+        admitted += b.admit(now)
+        now += 0.01
+        got = b.advance(now)
+        finished += len(got)
+        records.extend(got)
+    check("conservation: every request admitted and retired", admitted == finished == 48)
+    check(
+        "lifecycle ordering on every record",
+        all(r[1] < r[2] <= r[3] for r in records),
+    )
+
+    # -- percentiles -----------------------------------------------------
+    print("percentiles:")
+    rng = Rng(0xC0FFEE)
+    ok = True
+    for _ in range(100):
+        m = 1 + rng.below(97)
+        xs = [rng.f64() * 1e3 - 500.0 for _ in range(m)]
+        srt = sorted(xs)
+        for q in (0.0, 25.0, 50.0, 90.0, 99.0, 100.0):
+            rank = min(max(int(math.ceil(q / 100.0 * m)), 1), m)
+            ok = ok and percentile(xs, q) == srt[rank - 1]
+    check("nearest-rank percentile matches the sort oracle", ok)
+    check("empty and clamped edges", percentile([], 50.0) is None and percentile([1.0, 2.0], 250.0) == 2.0)
+
+    ttfts = [r[2] - r[1] for r in records]
+    p50, p99 = percentile(ttfts, 50.0), percentile(ttfts, 99.0)
+    check("p99 dominates p50 on the replayed trace", p50 <= p99)
+
+    print()
+    if FAILURES:
+        print(f"serve_mirror: {len(FAILURES)} FAILED: {', '.join(FAILURES)}")
+    else:
+        print("serve_mirror: all invariants hold")
+
+
+if __name__ == "__main__":
+    main()
+    sys.exit(1 if FAILURES else 0)

@@ -49,6 +49,65 @@ pub struct ExperimentConfig {
     pub out_dir: PathBuf,
     /// Use the synthetic Zipf corpus (true) or the builtin text (false).
     pub synthetic_data: bool,
+    /// Serving-mode knobs (`ta-moe serve`; ignored by training).
+    pub serve: ServeConfig,
+}
+
+/// The `[serve]` section: arrival trace + expert cache + SLO knobs for
+/// the continuous-batching serving simulator (see [`crate::serve`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeConfig {
+    /// Arrival process: "poisson" | "bursty" | "diurnal".
+    pub trace: String,
+    /// Mean arrival rate, requests/second.
+    pub rate_rps: f64,
+    /// Requests in the trace.
+    pub requests: usize,
+    /// Mean prompt / output lengths in tokens.
+    pub prompt_mean: usize,
+    pub output_mean: usize,
+    /// Resident experts per device (0 = unlimited, caching off).
+    pub cache_cap: usize,
+    /// Eviction policy: "lru" | "ewma".
+    pub cache: String,
+    /// TTFT deadline for goodput, milliseconds.
+    pub slo_ms: f64,
+    /// Concurrent sequences per device (KV-cache slots).
+    pub max_inflight: usize,
+    /// Experts hosted per device (0 = keep the artifact's value).
+    pub experts_per_dev: usize,
+    /// Zipf exponent of the expert-popularity tilt.
+    pub zipf: f64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            trace: "poisson".into(),
+            rate_rps: 8.0,
+            requests: 64,
+            prompt_mean: 32,
+            output_mean: 16,
+            cache_cap: 0,
+            cache: "lru".into(),
+            slo_ms: 200.0,
+            max_inflight: 8,
+            experts_per_dev: 0,
+            zipf: 1.0,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Resolve the trace spec.
+    pub fn parsed_trace(&self) -> Result<crate::serve::TraceKind> {
+        self.trace.parse().map_err(anyhow::Error::msg)
+    }
+
+    /// Resolve the cache-policy spec.
+    pub fn parsed_cache(&self) -> Result<crate::serve::CachePolicy> {
+        self.cache.parse().map_err(anyhow::Error::msg)
+    }
 }
 
 impl Default for ExperimentConfig {
@@ -70,6 +129,7 @@ impl Default for ExperimentConfig {
             log_every: 10,
             out_dir: "target/runs".into(),
             synthetic_data: true,
+            serve: ServeConfig::default(),
         }
     }
 }
@@ -112,6 +172,20 @@ impl ExperimentConfig {
             log_every: doc.usize_or("train.log_every", d.log_every),
             out_dir: doc.str_or("out.dir", "target/runs").into(),
             synthetic_data: doc.bool_or("train.synthetic_data", d.synthetic_data),
+            serve: ServeConfig {
+                trace: doc.str_or("serve.trace", &d.serve.trace).to_string(),
+                rate_rps: doc.f64_or("serve.rate_rps", d.serve.rate_rps),
+                requests: doc.usize_or("serve.requests", d.serve.requests),
+                prompt_mean: doc.usize_or("serve.prompt_mean", d.serve.prompt_mean),
+                output_mean: doc.usize_or("serve.output_mean", d.serve.output_mean),
+                cache_cap: doc.usize_or("serve.cache_cap", d.serve.cache_cap),
+                cache: doc.str_or("serve.cache", &d.serve.cache).to_string(),
+                slo_ms: doc.f64_or("serve.slo_ms", d.serve.slo_ms),
+                max_inflight: doc.usize_or("serve.max_inflight", d.serve.max_inflight),
+                experts_per_dev: doc
+                    .usize_or("serve.experts_per_dev", d.serve.experts_per_dev),
+                zipf: doc.f64_or("serve.zipf", d.serve.zipf),
+            },
         })
     }
 
@@ -338,6 +412,45 @@ lr = 0.01
         let mut c = ExperimentConfig::default();
         c.backend = "gpu".into();
         assert!(c.parsed_backend().is_err());
+    }
+
+    #[test]
+    fn serve_section_defaults_and_overrides() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.serve, ServeConfig::default());
+        assert_eq!(c.serve.parsed_trace().unwrap(), crate::serve::TraceKind::Poisson);
+        assert_eq!(c.serve.parsed_cache().unwrap(), crate::serve::CachePolicy::Lru);
+        let c = ExperimentConfig::from_toml(
+            r#"
+[serve]
+trace = "bursty"
+rate_rps = 12.5
+requests = 128
+cache_cap = 2
+cache = "ewma"
+slo_ms = 150.0
+max_inflight = 4
+experts_per_dev = 4
+zipf = 0.5
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.serve.parsed_trace().unwrap(), crate::serve::TraceKind::Bursty);
+        assert_eq!(
+            c.serve.parsed_cache().unwrap(),
+            crate::serve::CachePolicy::EwmaPrioritized
+        );
+        assert_eq!(c.serve.requests, 128);
+        assert_eq!(c.serve.cache_cap, 2);
+        assert_eq!(c.serve.experts_per_dev, 4);
+        assert!((c.serve.rate_rps - 12.5).abs() < 1e-12);
+        assert!((c.serve.slo_ms - 150.0).abs() < 1e-12);
+        // bad specs surface as errors, not defaults
+        let mut bad = ExperimentConfig::default();
+        bad.serve.trace = "weibull".into();
+        assert!(bad.serve.parsed_trace().is_err());
+        bad.serve.cache = "fifo".into();
+        assert!(bad.serve.parsed_cache().is_err());
     }
 
     #[test]

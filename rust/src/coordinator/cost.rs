@@ -25,7 +25,10 @@
 //! memoised through the (epoch-aware) [`PlanCache`].
 
 use crate::comm::{price_rounds, ring_allreduce_time, A2aAlgo, A2aBreakdown, CommPlan, Round};
-use crate::overlap::{autotune_k, pipeline_cost, OverlapInputs, OverlapMode};
+use crate::overlap::{
+    autotune_k, autotune_k_forward, pipeline_cost, pipeline_cost_forward, OverlapInputs,
+    OverlapMode,
+};
 use crate::placement::Placement;
 use crate::runtime::ModelCfg;
 use crate::topology::Topology;
@@ -127,11 +130,26 @@ impl ModelShape {
     /// placement gate's `OverlapPricing`, and the overlap property tests,
     /// so the timing derivation has one source of truth.
     pub fn overlap_inputs(&self, flops_per_dev: f64, recv: &[f64]) -> OverlapInputs {
+        self.overlap_inputs_profiled(flops_per_dev, recv, StepProfile::train())
+    }
+
+    /// [`ModelShape::overlap_inputs`] under an explicit [`StepProfile`]:
+    /// backward dense is whatever the profile's compute multiple adds on
+    /// top of forward (zero for decode), and per-device expert seconds
+    /// scale by the same multiple.
+    pub fn overlap_inputs_profiled(
+        &self,
+        flops_per_dev: f64,
+        recv: &[f64],
+        profile: StepProfile,
+    ) -> OverlapInputs {
         let dense_fwd_s = self.dense_fwd_s(flops_per_dev);
-        let per_tok = self.expert_s_per_token(flops_per_dev);
+        let per_tok = profile.compute_mult * self.expert_flops_per_token()
+            * self.n_moe_layers as f64
+            / flops_per_dev;
         OverlapInputs {
             dense_fwd_s,
-            dense_bwd_s: 2.0 * dense_fwd_s,
+            dense_bwd_s: (profile.compute_mult - 1.0).max(0.0) * dense_fwd_s,
             expert_s_per_dev: recv.iter().map(|&r| r * per_tok).collect(),
             n_moe: self.n_moe_layers,
         }
@@ -155,6 +173,46 @@ pub fn device_flops(cluster: char) -> f64 {
         'A' => 120e12, // A100 fp16 (312 peak × ~0.38 MFU)
         _ => 45e12,    // V100 (125 peak fp16 × ~0.36; paper runs fp32 on B/C,
                        // absorbed into the same effective rate)
+    }
+}
+
+/// What one priced step physically runs — the knob that lets training and
+/// inference decode share [`priced_step`]'s α-β/contention machinery:
+///
+/// * **train** — forward + backward (compute ≈ 3× forward), dispatch and
+///   combine in both directions (4 exchanges of the `c_ie` bytes per MoE
+///   layer), plus the dense-gradient ring allreduce;
+/// * **decode** — forward only (1× compute, 2 exchanges per layer, no
+///   allreduce), the per-iteration clock of the continuous-batching
+///   serving simulator (`crate::serve`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StepProfile {
+    /// Total compute as a multiple of the forward pass (3.0 train, 1.0
+    /// decode).
+    pub compute_mult: f64,
+    /// Dispatch/combine exchanges of the `c_ie` byte matrix per MoE layer
+    /// (4.0 train: dispatch/combine × fwd/bwd; 2.0 decode).
+    pub exchanges_per_layer: f64,
+    /// Whether the dense-gradient ring allreduce is charged.
+    pub allreduce: bool,
+}
+
+impl StepProfile {
+    /// The historic training clock; every pre-existing `step_cost*` path
+    /// prices with this profile, bit-identically to before it existed.
+    pub fn train() -> StepProfile {
+        StepProfile { compute_mult: 3.0, exchanges_per_layer: 4.0, allreduce: true }
+    }
+
+    /// One decode iteration of an inference batch: forward only.
+    pub fn decode() -> StepProfile {
+        StepProfile { compute_mult: 1.0, exchanges_per_layer: 2.0, allreduce: false }
+    }
+
+    /// Forward-only profiles (no backward mirror, no allreduce) pipeline
+    /// through `n_moe` blocks instead of the training DAG's `2 · n_moe`.
+    pub fn is_forward_only(&self) -> bool {
+        !self.allreduce && self.compute_mult <= 1.0
     }
 }
 
@@ -578,6 +636,40 @@ pub fn step_cost_overlapped(
     flops_per_dev: f64,
     a2a: A2aAlgo,
     mode: OverlapMode,
+    cache: Option<&mut PlanCache>,
+    placement: Option<&Placement>,
+) -> StepCost {
+    step_cost_profiled(
+        shape,
+        topo,
+        counts,
+        e_per_dev,
+        flops_per_dev,
+        a2a,
+        mode,
+        StepProfile::train(),
+        cache,
+        placement,
+    )
+}
+
+/// [`step_cost_overlapped`] under an explicit [`StepProfile`] — the entry
+/// point the serving simulator prices decode iterations through
+/// ([`StepProfile::decode`]: forward-only compute, 2 exchanges per MoE
+/// layer, no allreduce). With [`StepProfile::train`] this *is*
+/// [`step_cost_overlapped`]. Forward-only profiles pipeline through the
+/// `n_moe`-block forward DAG ([`pipeline_cost_forward`]); everything else
+/// (plan cache, tuned-`k` memo, placement routing) is shared.
+#[allow(clippy::too_many_arguments)]
+pub fn step_cost_profiled(
+    shape: &ModelShape,
+    topo: &Topology,
+    counts: &Mat,
+    e_per_dev: usize,
+    flops_per_dev: f64,
+    a2a: A2aAlgo,
+    mode: OverlapMode,
+    profile: StepProfile,
     mut cache: Option<&mut PlanCache>,
     placement: Option<&Placement>,
 ) -> StepCost {
@@ -588,6 +680,7 @@ pub fn step_cost_overlapped(
         e_per_dev,
         flops_per_dev,
         a2a,
+        profile,
         cache.as_deref_mut(),
         placement,
     );
@@ -595,29 +688,45 @@ pub fn step_cost_overlapped(
         return serial;
     }
 
-    let inputs = shape.overlap_inputs(flops_per_dev, &recv);
+    let inputs = shape.overlap_inputs_profiled(flops_per_dev, &recv, profile);
+    let forward_only = profile.is_forward_only();
     let chunk_of = |k: usize| {
         let breakdown = match cache.as_deref() {
             Some(c) => c.chunk_breakdown(topo, &bytes, a2a, k),
             None => a2a.plan(topo, &bytes.scale(1.0 / k as f64)).breakdown,
         };
-        let ar_chunk = ring_allreduce_time(topo, shape.dense_param_bytes() / k as f64);
+        let ar_chunk = if profile.allreduce {
+            ring_allreduce_time(topo, shape.dense_param_bytes() / k as f64)
+        } else {
+            0.0
+        };
         (breakdown, ar_chunk)
+    };
+    let price = |inputs: &OverlapInputs, chunk: &A2aBreakdown, ar: f64, k: usize| {
+        if forward_only {
+            pipeline_cost_forward(inputs, chunk, k)
+        } else {
+            pipeline_cost(inputs, chunk, ar, k)
+        }
     };
     let (k, pipe) = match mode {
         OverlapMode::Serial => unreachable!("handled above"),
         OverlapMode::Fixed(k) => {
             let (chunk, ar_chunk) = chunk_of(k);
-            (k, pipeline_cost(&inputs, &chunk, ar_chunk, k))
+            (k, price(&inputs, &chunk, ar_chunk, k))
         }
         OverlapMode::Auto => match cache.as_deref().and_then(|c| c.tuned_k(topo, &bytes, a2a))
         {
             Some(k) => {
                 let (chunk, ar_chunk) = chunk_of(k);
-                (k, pipeline_cost(&inputs, &chunk, ar_chunk, k))
+                (k, price(&inputs, &chunk, ar_chunk, k))
             }
             None => {
-                let (k, pipe) = autotune_k(&inputs, chunk_of);
+                let (k, pipe) = if forward_only {
+                    autotune_k_forward(&inputs, chunk_of)
+                } else {
+                    autotune_k(&inputs, chunk_of)
+                };
                 if let Some(c) = cache.as_deref_mut() {
                     c.remember_k(topo, &bytes, a2a, k);
                 }
@@ -644,7 +753,18 @@ fn step_cost_with(
     cache: Option<&mut PlanCache>,
     placement: Option<&Placement>,
 ) -> StepCost {
-    priced_step(shape, topo, counts, e_per_dev, flops_per_dev, a2a, cache, placement).0
+    priced_step(
+        shape,
+        topo,
+        counts,
+        e_per_dev,
+        flops_per_dev,
+        a2a,
+        StepProfile::train(),
+        cache,
+        placement,
+    )
+    .0
 }
 
 /// The shared serial pricing: the [`StepCost`] plus the routed dispatch
@@ -658,6 +778,7 @@ fn priced_step(
     e_per_dev: usize,
     flops_per_dev: f64,
     a2a: A2aAlgo,
+    profile: StepProfile,
     cache: Option<&mut PlanCache>,
     placement: Option<&Placement>,
 ) -> (StepCost, Mat, Vec<f64>) {
@@ -684,9 +805,10 @@ fn priced_step(
     let max_recv: f64 = recv.iter().copied().fold(0.0, f64::max);
     let expert = shape.expert_flops_per_token() * max_recv * shape.n_moe_layers as f64;
     let fwd_flops = dense + expert;
-    let compute_s = 3.0 * fwd_flops / flops_per_dev; // fwd + bwd ≈ 3× fwd
+    // train: fwd + bwd ≈ 3× fwd; decode: forward only (1×)
+    let compute_s = profile.compute_mult * fwd_flops / flops_per_dev;
 
-    // --- all-to-all: 4 exchanges of the c_ie bytes per MoE layer -----------
+    // --- all-to-all: the profile's exchanges of the c_ie bytes per layer ---
     let bytes = match placement {
         Some(pl) => pl.bytes_matrix(counts, shape.token_bytes()),
         None => Mat::from_fn(p, p, |i, j| {
@@ -701,11 +823,17 @@ fn priced_step(
         Some(c) => c.plan(topo, &bytes, a2a),
         None => a2a.plan(topo, &bytes),
     };
-    let breakdown = plan.breakdown.scale(4.0 * shape.n_moe_layers as f64);
+    let breakdown = plan
+        .breakdown
+        .scale(profile.exchanges_per_layer * shape.n_moe_layers as f64);
     let a2a_s = breakdown.total();
 
-    // --- dense gradient allreduce ------------------------------------------
-    let allreduce_s = ring_allreduce_time(topo, shape.dense_param_bytes());
+    // --- dense gradient allreduce (training profiles only) -----------------
+    let allreduce_s = if profile.allreduce {
+        ring_allreduce_time(topo, shape.dense_param_bytes())
+    } else {
+        0.0
+    };
 
     let cost = StepCost {
         compute_s,

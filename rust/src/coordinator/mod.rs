@@ -10,16 +10,22 @@
 //! * [`session`] — [`Session`]/[`SessionBuilder`]: topology + policy +
 //!   backend + data + metrics composed into one training run.
 //! * [`cost`] — the simulated cluster clock: FLOP model + α-β all-to-all +
-//!   allreduce, priced on measured `c_ie`.
+//!   allreduce, priced on measured `c_ie` (training and decode
+//!   [`StepProfile`]s).
+//! * [`workload`] — [`Workload`]/[`WorkloadCore`]: the pricing state a
+//!   run of any kind (training session, serving simulator) drives its
+//!   steps through.
 
 pub mod cost;
 pub mod policy;
 pub mod registry;
 pub mod session;
+pub mod workload;
 
 pub use cost::{
     device_flops, step_cost, step_cost_cached, step_cost_overlapped, step_cost_placed,
-    throughput, ModelShape, PlanCache, StepCost, PLAN_CACHE_TOL,
+    step_cost_profiled, throughput, ModelShape, PlanCache, StepCost, StepProfile,
+    PLAN_CACHE_TOL,
 };
 pub use policy::{
     converged_counts, DeepSpeedEven, DispatchPolicy, FastMoeEven, FasterMoeHir,
@@ -27,3 +33,4 @@ pub use policy::{
 };
 pub use registry::{list_policies, parse_policy, register_policy, PolicyFactory};
 pub use session::{DataSource, Session, SessionBuilder, SessionOptions};
+pub use workload::{Workload, WorkloadCore};

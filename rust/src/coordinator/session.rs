@@ -30,15 +30,16 @@
 //! pipeline's makespan instead (`sim_comm_s` then records the *exposed*
 //! communication).
 
-use super::cost::{step_cost_overlapped, ModelShape, PlanCache, PLAN_CACHE_TOL};
+use super::cost::{ModelShape, PlanCache, StepProfile, PLAN_CACHE_TOL};
 use super::policy::{DispatchPolicy, PolicyInputs, TaMoe};
 use super::registry::parse_policy;
+use super::workload::{Workload, WorkloadCore};
 use crate::comm::A2aAlgo;
 use crate::config::topology_for;
 use crate::data::{Batcher, SyntheticCorpus};
 use crate::metrics::{MigrationRecord, RunLog, StepRecord};
 use crate::overlap::OverlapMode;
-use crate::placement::{OverlapPricing, Placement, PlacementConfig, PlacementEngine};
+use crate::placement::{Placement, PlacementConfig};
 use crate::runtime::{open_backend, Backend, BackendKind, HostTensor};
 use crate::topology::Topology;
 use crate::util::Mat;
@@ -363,73 +364,48 @@ impl SessionBuilder {
         );
         let shape = ModelShape::from_cfg(&cfg);
         let tokens_per_step = cfg.p * cfg.tokens_per_dev;
-        let plan_cache = PlanCache::new(opts.plan_cache_tol);
-        // dispatch + combine in forward and their mirrors in backward:
-        // the exchanges of the c_ie byte matrix one training step prices
-        let placement = opts.placement.map(|pcfg| {
-            let engine = PlacementEngine::new(
-                pcfg,
-                cfg.p,
-                cfg.e_per_dev,
-                shape.token_bytes(),
-                shape.expert_param_bytes(),
-                (4 * shape.n_moe_layers) as f64,
-                a2a,
-            );
-            if opts.overlap == OverlapMode::Serial {
-                engine
-            } else {
-                // the session charges the overlapped clock, so the
-                // amortisation gate must predict savings on it too (same
-                // ModelShape derivation as step_cost_overlapped)
-                let dense_fwd_s = shape.dense_fwd_s(opts.flops_per_dev);
-                engine.with_overlap(OverlapPricing {
-                    mode: opts.overlap,
-                    dense_fwd_s,
-                    dense_bwd_s: 2.0 * dense_fwd_s,
-                    expert_s_per_token: shape.expert_s_per_token(opts.flops_per_dev),
-                    n_moe: shape.n_moe_layers,
-                    dense_param_bytes: shape.dense_param_bytes(),
-                })
-            }
-        });
+        // the shared pricing state: plan cache, placement engine, overlap
+        // clock — one training step exchanges the c_ie byte matrix
+        // 4 · n_moe times (dispatch + combine, forward + backward)
+        let core = WorkloadCore::new(
+            topo,
+            shape,
+            a2a,
+            opts.overlap,
+            opts.flops_per_dev,
+            cfg.e_per_dev,
+            StepProfile::train(),
+            opts.plan_cache_tol,
+            opts.placement.clone(),
+        );
         Ok(Session {
             backend,
-            topo,
             policy,
-            a2a,
             inputs,
-            shape,
+            core,
             opts,
             batcher,
             eval_batch,
             log: RunLog::new(&label, tokens_per_step),
             last_counts: None,
-            plan_cache,
-            placement,
         })
     }
 }
 
 /// A fully-assembled training run over one backend, one topology, and one
-/// dispatch policy. Replaces the old `Trainer`.
+/// dispatch policy. Replaces the old `Trainer`. The pricing half
+/// (topology, plan cache, placement engine, overlap clock) lives in a
+/// [`WorkloadCore`] shared with the serving simulator.
 pub struct Session {
     backend: Box<dyn Backend>,
-    topo: Topology,
     policy: Box<dyn DispatchPolicy>,
-    a2a: A2aAlgo,
     inputs: PolicyInputs,
-    shape: ModelShape,
+    core: WorkloadCore,
     opts: SessionOptions,
     batcher: Batcher,
     eval_batch: (Vec<i32>, Vec<i32>),
     log: RunLog,
     last_counts: Option<Mat>,
-    /// Step-level cache of synthesised a2a schedules (see `cost::PlanCache`).
-    plan_cache: PlanCache,
-    /// Topology- and load-aware expert placement engine (None = canonical
-    /// hosting for the whole run).
-    placement: Option<PlacementEngine>,
 }
 
 impl Session {
@@ -472,43 +448,31 @@ impl Session {
         //     policies the target/penalty) at the new hosting — live,
         //     without resetting the backend's training state.
         let mut migration_s = 0.0;
-        if let Some(eng) = self.placement.as_mut() {
-            eng.observe(&out.counts);
-            if let Some(m) = eng.maybe_replace(&self.topo, &out.counts) {
-                migration_s = m.cost_s;
-                self.plan_cache.set_epoch(eng.epoch());
-                let mcfg = self.backend.model_cfg().clone();
-                let new_inputs =
-                    self.policy.runtime_inputs_placed(&self.topo, &mcfg, eng.placement());
-                self.backend.update_gate(&new_inputs.gate)?;
-                self.inputs = new_inputs;
-                self.log.push_migration(MigrationRecord {
-                    step: self.log.records.len(),
-                    moved: m.moved.len(),
-                    bytes: m.bytes,
-                    cost_s: m.cost_s,
-                    predicted_saving_s: m.predicted_saving_s,
-                    realized_saving_s: m.realized_saving_s,
-                });
-            }
+        self.core.observe(&out.counts);
+        if let Some(m) = self.core.maybe_migrate(&out.counts) {
+            migration_s = m.cost_s;
+            let mcfg = self.backend.model_cfg().clone();
+            let placement = self.core.placement().expect("migration implies placement");
+            let new_inputs =
+                self.policy.runtime_inputs_placed(self.core.topology(), &mcfg, placement);
+            self.backend.update_gate(&new_inputs.gate)?;
+            self.inputs = new_inputs;
+            self.log.push_migration(MigrationRecord {
+                step: self.log.records.len(),
+                moved: m.moved.len(),
+                bytes: m.bytes,
+                cost_s: m.cost_s,
+                predicted_saving_s: m.predicted_saving_s,
+                realized_saving_s: m.realized_saving_s,
+            });
         }
 
-        let hits_before = self.plan_cache.hits();
+        let hits_before = self.core.plan_cache().hits();
         // one pricing path for every (placement × overlap) combination:
         // serial mode reproduces the historic clock exactly, overlap
         // modes charge the chunked timeline's makespan instead (the
         // exposed communication replaces the serial a2a + allreduce sum)
-        let cost = step_cost_overlapped(
-            &self.shape,
-            &self.topo,
-            &out.counts,
-            self.backend.model_cfg().e_per_dev,
-            self.opts.flops_per_dev,
-            self.a2a,
-            self.opts.overlap,
-            Some(&mut self.plan_cache),
-            self.placement.as_ref().map(|e| e.placement()),
-        );
+        let cost = self.core.price(&out.counts);
         let record = StepRecord {
             step: self.log.records.len(),
             loss: out.loss,
@@ -523,13 +487,14 @@ impl Session {
             sim_serial_s: cost.serial_total(),
             sim_a2a_exposed_s: cost.exposed_a2a_s,
             chunks: cost.chunks,
-            plan_cached: self.plan_cache.hits() > hits_before,
+            plan_cached: self.core.plan_cache().hits() > hits_before,
             sim_migration_s: migration_s,
             wall_s,
+            ..Default::default()
         };
         self.last_counts = Some(out.counts);
-        self.log.plan_hits = self.plan_cache.hits();
-        self.log.plan_misses = self.plan_cache.misses();
+        self.log.plan_hits = self.core.plan_cache().hits();
+        self.log.plan_misses = self.core.plan_cache().misses();
         self.log.push(record.clone());
         Ok(record)
     }
@@ -584,12 +549,12 @@ impl Session {
 
     /// The all-to-all plan the session's step-time model executes.
     pub fn a2a_algo(&self) -> A2aAlgo {
-        self.a2a
+        self.core.a2a_algo()
     }
 
     /// How the session's step clock is priced (see [`OverlapMode`]).
     pub fn overlap_mode(&self) -> OverlapMode {
-        self.opts.overlap
+        self.core.overlap_mode()
     }
 
     /// The gate inputs + target the policy produced for this run.
@@ -598,7 +563,7 @@ impl Session {
     }
 
     pub fn topology(&self) -> &Topology {
-        &self.topo
+        self.core.topology()
     }
 
     pub fn log(&self) -> &RunLog {
@@ -616,16 +581,30 @@ impl Session {
 
     /// The session's step-level a2a schedule cache (hit/miss counters).
     pub fn plan_cache(&self) -> &PlanCache {
-        &self.plan_cache
+        self.core.plan_cache()
     }
 
     /// The live expert→device map (None when placement is disabled).
     pub fn placement(&self) -> Option<&Placement> {
-        self.placement.as_ref().map(|e| e.placement())
+        self.core.placement()
     }
 
     /// Accepted migrations so far (0 when placement is disabled).
     pub fn placement_epoch(&self) -> u64 {
-        self.placement.as_ref().map_or(0, |e| e.epoch())
+        self.core.placement_epoch()
+    }
+}
+
+impl Workload for Session {
+    fn step(&mut self) -> Result<StepRecord> {
+        Session::step(self)
+    }
+
+    fn log(&self) -> &RunLog {
+        &self.log
+    }
+
+    fn core(&self) -> &WorkloadCore {
+        &self.core
     }
 }

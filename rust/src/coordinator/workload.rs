@@ -1,0 +1,224 @@
+//! [`Workload`] + [`WorkloadCore`]: the pricing infrastructure a run of
+//! *any* kind — training ([`super::Session`]) or continuous-batching
+//! inference serving (`crate::serve::ServeSession`) — drives its steps
+//! through.
+//!
+//! A workload owns three things the step loop varies (what produces the
+//! per-step dispatch counts, what a "step" means, what gets logged) and
+//! shares everything that prices them: the topology, the model shape, the
+//! a2a plan, the epoch-aware [`PlanCache`], the optional live
+//! [`PlacementEngine`], and the overlap clock. [`WorkloadCore`] bundles
+//! the shared half so `Session::train_step` and the serve iteration loop
+//! are the same four moves: observe loads → maybe migrate → price counts
+//! under the workload's [`StepProfile`] → log.
+
+use super::cost::{step_cost_profiled, ModelShape, PlanCache, StepCost, StepProfile};
+use crate::comm::A2aAlgo;
+use crate::metrics::{RunLog, StepRecord};
+use crate::overlap::OverlapMode;
+use crate::placement::{
+    Migration, OverlapPricing, Placement, PlacementConfig, PlacementEngine,
+};
+use crate::topology::Topology;
+use crate::util::Mat;
+use anyhow::Result;
+
+/// The shared pricing state of one run: everything between "here are this
+/// step's dispatch counts" and "here is what the step cost on the cluster
+/// clock", independent of whether the counts came from a training batch
+/// or an inference micro-batch.
+pub struct WorkloadCore {
+    topo: Topology,
+    shape: ModelShape,
+    a2a: A2aAlgo,
+    overlap: OverlapMode,
+    flops_per_dev: f64,
+    e_per_dev: usize,
+    profile: StepProfile,
+    plan_cache: PlanCache,
+    placement: Option<PlacementEngine>,
+}
+
+impl WorkloadCore {
+    /// Assemble the core. `placement_cfg` enables the live placement
+    /// engine; its amortisation gate prices candidate hostings on the
+    /// overlapped clock for training profiles (the historic behaviour)
+    /// and on the serial exchange clock for forward-only profiles (the
+    /// training pipeline DAG does not model a decode step, and a serial
+    /// gate is conservative: it never overstates a candidate's saving
+    /// relative to the charged clock by more than the overlap win).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        topo: Topology,
+        shape: ModelShape,
+        a2a: A2aAlgo,
+        overlap: OverlapMode,
+        flops_per_dev: f64,
+        e_per_dev: usize,
+        profile: StepProfile,
+        plan_cache_tol: f64,
+        placement_cfg: Option<PlacementConfig>,
+    ) -> WorkloadCore {
+        let placement = placement_cfg.map(|pcfg| {
+            let engine = PlacementEngine::new(
+                pcfg,
+                topo.p(),
+                e_per_dev,
+                shape.token_bytes(),
+                shape.expert_param_bytes(),
+                profile.exchanges_per_layer * shape.n_moe_layers as f64,
+                a2a,
+            );
+            if overlap == OverlapMode::Serial || profile.is_forward_only() {
+                engine
+            } else {
+                // the run charges the overlapped clock, so the
+                // amortisation gate must predict savings on it too (same
+                // ModelShape derivation as step_cost_profiled)
+                let dense_fwd_s = shape.dense_fwd_s(flops_per_dev);
+                engine.with_overlap(OverlapPricing {
+                    mode: overlap,
+                    dense_fwd_s,
+                    dense_bwd_s: (profile.compute_mult - 1.0).max(0.0) * dense_fwd_s,
+                    expert_s_per_token: profile.compute_mult
+                        * shape.expert_flops_per_token()
+                        * shape.n_moe_layers as f64
+                        / flops_per_dev,
+                    n_moe: shape.n_moe_layers,
+                    dense_param_bytes: shape.dense_param_bytes(),
+                })
+            }
+        });
+        WorkloadCore {
+            topo,
+            shape,
+            a2a,
+            overlap,
+            flops_per_dev,
+            e_per_dev,
+            profile,
+            plan_cache: PlanCache::new(plan_cache_tol),
+            placement,
+        }
+    }
+
+    /// Price one step's dispatch counts on the cluster clock under the
+    /// core's profile, routing through the live placement and the plan
+    /// cache.
+    pub fn price(&mut self, counts: &Mat) -> StepCost {
+        let shape = self.shape.clone();
+        self.price_with_shape(&shape, counts)
+    }
+
+    /// [`Self::price`] with a per-step shape override. Serving iterations
+    /// vary `tokens_per_dev` with the live batch (prefills vs decodes),
+    /// so the continuous batcher prices each iteration under a shape
+    /// cloned from the core's with only the token dimension rewritten.
+    pub fn price_with_shape(&mut self, shape: &ModelShape, counts: &Mat) -> StepCost {
+        step_cost_profiled(
+            shape,
+            &self.topo,
+            counts,
+            self.e_per_dev,
+            self.flops_per_dev,
+            self.a2a,
+            self.overlap,
+            self.profile,
+            Some(&mut self.plan_cache),
+            self.placement.as_ref().map(|e| e.placement()),
+        )
+    }
+
+    /// Fold one step's measured loads into the placement engine's EWMA
+    /// (no-op when placement is disabled).
+    pub fn observe(&mut self, counts: &Mat) {
+        if let Some(eng) = self.placement.as_mut() {
+            eng.observe(counts);
+        }
+    }
+
+    /// At the placement engine's cadence, re-solve the hosting and accept
+    /// the move when it amortises. On acceptance the plan cache's epoch
+    /// is bumped (cached schedules were synthesised for the old byte
+    /// routing); the *caller* re-points whatever else depends on the
+    /// hosting — the gate inputs for training, the expert-weight caches
+    /// for serving.
+    pub fn maybe_migrate(&mut self, live_counts: &Mat) -> Option<Migration> {
+        let m = self.placement.as_mut()?.maybe_replace(&self.topo, live_counts)?;
+        let epoch = self.placement.as_ref().expect("placement present").epoch();
+        self.plan_cache.set_epoch(epoch);
+        Some(m)
+    }
+
+    // -- accessors ----------------------------------------------------------
+
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    pub fn shape(&self) -> &ModelShape {
+        &self.shape
+    }
+
+    pub fn a2a_algo(&self) -> A2aAlgo {
+        self.a2a
+    }
+
+    pub fn overlap_mode(&self) -> OverlapMode {
+        self.overlap
+    }
+
+    pub fn flops_per_dev(&self) -> f64 {
+        self.flops_per_dev
+    }
+
+    pub fn e_per_dev(&self) -> usize {
+        self.e_per_dev
+    }
+
+    pub fn profile(&self) -> StepProfile {
+        self.profile
+    }
+
+    pub fn plan_cache(&self) -> &PlanCache {
+        &self.plan_cache
+    }
+
+    /// The live expert→device map (None when placement is disabled).
+    pub fn placement(&self) -> Option<&Placement> {
+        self.placement.as_ref().map(|e| e.placement())
+    }
+
+    /// Accepted migrations so far (0 when placement is disabled).
+    pub fn placement_epoch(&self) -> u64 {
+        self.placement.as_ref().map_or(0, |e| e.epoch())
+    }
+
+    /// The placement engine itself, for workloads that need its loads.
+    pub fn placement_engine(&self) -> Option<&PlacementEngine> {
+        self.placement.as_ref()
+    }
+}
+
+/// One run that prices its steps through a [`WorkloadCore`] — the seam
+/// that lets benches/CLI drive a training `Session` and a serving
+/// `ServeSession` identically.
+pub trait Workload {
+    /// Advance by one priced step (a training batch, a decode iteration)
+    /// and return its record.
+    fn step(&mut self) -> Result<StepRecord>;
+
+    /// The accumulated run log.
+    fn log(&self) -> &RunLog;
+
+    /// The shared pricing state.
+    fn core(&self) -> &WorkloadCore;
+
+    /// Drive `steps` steps back to back.
+    fn run_steps(&mut self, steps: usize) -> Result<()> {
+        for _ in 0..steps {
+            self.step()?;
+        }
+        Ok(())
+    }
+}

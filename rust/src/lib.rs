@@ -38,6 +38,12 @@
 //!   default), EWMA gate-load tracking, greedy + swap-descent solvers
 //!   priced through the comm engine, and amortised live migration of
 //!   expert weights wired into the [`coordinator::Session`] step loop.
+//! * [`serve`] — the inference serving simulator: continuous batching
+//!   over seeded arrival traces (Poisson / bursty MMPP / diurnal), an
+//!   expert-weight device cache (LRU / gate-load-EWMA) whose misses are
+//!   priced as real transfers, and SLO accounting (TTFT/TPOT percentiles,
+//!   goodput under a deadline) — all sharing the training pricing stack
+//!   through the [`coordinator::Workload`] seam.
 //! * [`data`] — byte-level tokenizer, bundled tiny corpus and a synthetic
 //!   Zipf corpus generator, shard-aware batching.
 //! * [`config`] — TOML experiment configs and the cluster A/B/C presets
@@ -60,12 +66,14 @@ pub mod metrics;
 pub mod overlap;
 pub mod placement;
 pub mod runtime;
+pub mod serve;
 pub mod topology;
 pub mod util;
 
 pub use config::ExperimentConfig;
-pub use coordinator::{DispatchPolicy, Session, SessionBuilder};
+pub use coordinator::{DispatchPolicy, Session, SessionBuilder, Workload};
 pub use overlap::OverlapMode;
 pub use placement::{Placement, PlacementConfig, PlacementEngine};
 pub use runtime::{Backend, SimBackend};
+pub use serve::{CachePolicy, ServeBuilder, ServeSession, TraceConfig, TraceKind};
 pub use topology::Topology;

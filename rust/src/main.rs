@@ -7,6 +7,10 @@
 //!                    sim` runs the pure-rust simulator (no artifacts, no
 //!                    XLA); `--backend xla` the compiled artifacts
 //!                    (requires `--features backend-xla`); default `auto`.
+//! * `serve`        — continuous-batching inference serving simulator:
+//!                    seeded arrival traces, expert-weight caching, SLO
+//!                    metrics (TTFT/TPOT percentiles, goodput) — pure
+//!                    pricing, no backend or artifacts needed.
 //! * `solve`        — print the Eq. 7 target dispatch pattern and Eq. 8
 //!                    penalty weights for a cluster.
 //! * `profile-topo` — show a topology's α/β matrices, levels, and the
@@ -15,7 +19,9 @@
 //! * `info`         — list compiled artifacts and their shapes.
 //!
 //! `--list-strategies` (any position) prints the dispatch-policy registry,
-//! including policies registered by downstream code.
+//! including policies registered by downstream code. `--list-modes`
+//! enumerates every selectable mode spec — a2a plans, overlap modes,
+//! placement specs, serve traces and cache policies.
 //!
 //! Flags are `--key value`; `ta-moe <cmd> --help` lists them. (CLI parsing
 //! is hand-rolled — this image has no clap; see DESIGN.md
@@ -25,10 +31,11 @@ use anyhow::{Context, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use ta_moe::comm::profile_exchange;
+use ta_moe::comm::{profile_exchange, A2aAlgo};
 use ta_moe::config::{topology_for, ExperimentConfig};
 use ta_moe::coordinator::{device_flops, list_policies, SessionBuilder};
 use ta_moe::dispatch::{penalty_weights, target_pattern, DispatchProblem, Norm};
+use ta_moe::serve::{CachePolicy, ServeBuilder, TraceConfig, TraceKind};
 use ta_moe::topology::smooth_levels;
 use ta_moe::util::bench::Table;
 use ta_moe::util::Mat;
@@ -50,13 +57,18 @@ fn run(args: &[String]) -> Result<()> {
     if flags.contains_key("list-strategies") {
         return cmd_list_strategies();
     }
+    if flags.contains_key("list-modes") {
+        return cmd_list_modes();
+    }
     match cmd.as_deref() {
         Some("train") => cmd_train(&flags),
+        Some("serve") => cmd_serve(&flags),
         Some("solve") => cmd_solve(&flags),
         Some("profile-topo") => cmd_profile_topo(&flags),
         Some("bench-comm") => cmd_bench_comm(&flags),
         Some("info") => cmd_info(&flags),
         Some("list-strategies") => cmd_list_strategies(),
+        Some("list-modes") => cmd_list_modes(),
         Some("help") | None => {
             print_help();
             Ok(())
@@ -78,11 +90,18 @@ fn print_help() {
                          --a2a auto|direct|hier|sched:xor|sched:rot|sched:bvn\n\
                          --placement off|on|<every-steps> --overlap off|serial|k=<n>|auto\n\
                          --config file.toml\n\
+           serve         --artifact tiny4 --cluster table1 --strategy ta-moe\n\
+                         --trace poisson|bursty|diurnal --rate 8 --requests 64\n\
+                         --cache-cap <n> --cache lru|ewma --slo-ms 200\n\
+                         --experts-per-dev <n> --max-inflight 8 --zipf 1.0\n\
+                         --a2a ... --placement ... --overlap ... --seed 0\n\
            solve         --cluster C --nodes 2 [--tokens 1024] [--k 1]\n\
            profile-topo  --cluster table1 [--nodes 2] [--noise 0.2]\n\
            bench-comm    [--mb 128]\n\
            info          [--artifacts-dir artifacts]\n\
-           list-strategies   (also available as a --list-strategies flag)\n\n\
+           list-strategies   (also available as a --list-strategies flag)\n\
+           list-modes        every mode spec: a2a, overlap, placement,\n\
+                             serve traces, cache policies\n\n\
          STRATEGIES: see `ta-moe --list-strategies` (registry-extensible)\n\
          CLUSTERS:   A | B | C | table1 (presets from the paper's Table 2)\n\
          BACKENDS:   sim (pure rust) | xla (compiled artifacts) | auto\n\
@@ -91,14 +110,17 @@ fn print_help() {
          PLACEMENT:  off (canonical expert hosting) | on (amortised live\n\
                      migration, default cadence) | <every-steps>\n\
          OVERLAP:    off|serial (serial phase-sum clock) | k=<n> (fixed\n\
-                     chunk pipeline) | auto (chunk-count autotuner)"
+                     chunk pipeline) | auto (chunk-count autotuner)\n\
+         TRACES:     poisson | bursty (2-state MMPP) | diurnal (thinned\n\
+                     sinusoidal rate)\n\
+         CACHE:      lru | ewma (gate-load-EWMA-prioritized eviction)"
     );
 }
 
 type Flags = BTreeMap<String, String>;
 
 /// Flags that take no value.
-const BOOL_FLAGS: &[&str] = &["help", "list-strategies"];
+const BOOL_FLAGS: &[&str] = &["help", "list-strategies", "list-modes"];
 
 fn parse_args(args: &[String]) -> Result<(Option<String>, Flags)> {
     let mut cmd = None;
@@ -303,6 +325,201 @@ fn cmd_train(flags: &Flags) -> Result<()> {
         );
     }
     Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// serve
+// ---------------------------------------------------------------------------
+
+fn cmd_serve(flags: &Flags) -> Result<()> {
+    let mut cfg = match flags.get("config") {
+        Some(path) => ExperimentConfig::from_toml_file(Path::new(path))?,
+        None => ExperimentConfig::default(),
+    };
+    if let Some(a) = flags.get("artifact") {
+        cfg.artifact = a.clone();
+    }
+    if let Some(c) = flags.get("cluster") {
+        cfg.cluster = c.clone();
+    }
+    if let Some(s) = flags.get("strategy") {
+        cfg.strategy = s.clone();
+    }
+    if let Some(a) = flags.get("a2a") {
+        cfg.a2a = a.clone();
+    }
+    if let Some(p) = flags.get("placement") {
+        cfg.placement = p.clone();
+    }
+    if let Some(o) = flags.get("overlap") {
+        cfg.overlap = o.clone();
+    }
+    if let Some(t) = flags.get("trace") {
+        cfg.serve.trace = t.clone();
+    }
+    if let Some(c) = flags.get("cache") {
+        cfg.serve.cache = c.clone();
+    }
+    cfg.seed = flag_parse(flags, "seed", cfg.seed)?;
+    cfg.serve.rate_rps = flag_parse(flags, "rate", cfg.serve.rate_rps)?;
+    cfg.serve.requests = flag_parse(flags, "requests", cfg.serve.requests)?;
+    cfg.serve.cache_cap = flag_parse(flags, "cache-cap", cfg.serve.cache_cap)?;
+    cfg.serve.slo_ms = flag_parse(flags, "slo-ms", cfg.serve.slo_ms)?;
+    cfg.serve.max_inflight = flag_parse(flags, "max-inflight", cfg.serve.max_inflight)?;
+    cfg.serve.experts_per_dev =
+        flag_parse(flags, "experts-per-dev", cfg.serve.experts_per_dev)?;
+    cfg.serve.zipf = flag_parse(flags, "zipf", cfg.serve.zipf)?;
+    cfg.serve.prompt_mean = flag_parse(flags, "prompt-mean", cfg.serve.prompt_mean)?;
+    cfg.serve.output_mean = flag_parse(flags, "output-mean", cfg.serve.output_mean)?;
+    let max_iters = flag_parse(flags, "max-iters", 1_000_000usize)?;
+
+    // same model-shape resolution as training: compiled manifest when
+    // present, built-in preset otherwise — serving needs no artifacts
+    let model = ta_moe::runtime::resolve_model_cfg(&cfg.artifacts_dir, &cfg.artifact)?;
+    let cluster_char = cfg.cluster.chars().next().unwrap_or('C');
+    let mut builder = ServeBuilder::new()
+        .model_cfg(model)
+        .cluster(cfg.cluster.clone())
+        .policy(cfg.parsed_policy()?)
+        .flops_per_dev(device_flops(cluster_char))
+        .trace(TraceConfig {
+            kind: cfg.serve.parsed_trace()?,
+            rate_rps: cfg.serve.rate_rps,
+            n_requests: cfg.serve.requests,
+            seed: cfg.seed,
+            prompt_mean: cfg.serve.prompt_mean,
+            output_mean: cfg.serve.output_mean,
+        })
+        .cache_cap(cfg.serve.cache_cap)
+        .cache_policy(cfg.serve.parsed_cache()?)
+        .slo_ms(cfg.serve.slo_ms)
+        .max_inflight_per_dev(cfg.serve.max_inflight)
+        .zipf_s(cfg.serve.zipf)
+        .overlap(cfg.parsed_overlap()?)
+        .placement(cfg.parsed_placement()?);
+    if let Some(algo) = cfg.parsed_a2a()? {
+        builder = builder.a2a(algo);
+    }
+    if cfg.serve.experts_per_dev > 0 {
+        builder = builder.experts_per_dev(cfg.serve.experts_per_dev);
+    }
+    let mut sess = builder.build()?;
+
+    println!(
+        "serve: model={} cluster={} (P={}) strategy={} a2a={} trace={} rate={}rps \
+         requests={} cache={}(cap={}) slo={}ms",
+        cfg.artifact,
+        cfg.cluster,
+        sess.model_cfg().p,
+        cfg.strategy,
+        sess.a2a_algo(),
+        cfg.serve.trace,
+        cfg.serve.rate_rps,
+        cfg.serve.requests,
+        cfg.serve.cache,
+        cfg.serve.cache_cap,
+        cfg.serve.slo_ms
+    );
+    sess.run(max_iters)?;
+
+    let log = sess.log();
+    println!(
+        "done: {} requests over {} iterations, {:.2}s simulated; goodput {:.1} tok/s \
+         (TTFT SLO {:.0}ms)",
+        log.requests.len(),
+        log.records.len(),
+        sess.now_s(),
+        sess.goodput(),
+        sess.slo_s() * 1e3
+    );
+    let (p50, p99) = (
+        log.ttft_percentile(50.0).unwrap_or(0.0),
+        log.ttft_percentile(99.0).unwrap_or(0.0),
+    );
+    println!(
+        "latency: TTFT p50 {:.2}ms / p99 {:.2}ms; TPOT p50 {:.3}ms / p99 {:.3}ms; \
+         cache {:.1}% hits ({} misses); {} migrations",
+        p50 * 1e3,
+        p99 * 1e3,
+        log.tpot_percentile(50.0).unwrap_or(0.0) * 1e3,
+        log.tpot_percentile(99.0).unwrap_or(0.0) * 1e3,
+        log.cache_hit_rate() * 100.0,
+        log.cache_misses,
+        log.migrations.len()
+    );
+    let stem = format!(
+        "serve_{}_{}_{}_{}",
+        cfg.artifact,
+        cfg.cluster,
+        cfg.strategy.replace(':', "-"),
+        cfg.serve.trace
+    );
+    let csv = cfg.out_dir.join(format!("{stem}.csv"));
+    log.write_csv(&csv)?;
+    let json_path = cfg.out_dir.join(format!("{stem}.json"));
+    std::fs::write(&json_path, log.summary_json().to_string_compact())?;
+    println!("log → {} / {}", csv.display(), json_path.display());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// list-modes
+// ---------------------------------------------------------------------------
+
+fn cmd_list_modes() -> Result<()> {
+    let mut t = Table::new(&["kind", "spec", "description"]);
+    for algo in A2aAlgo::ALL {
+        t.row(&["a2a".into(), algo.to_string(), a2a_help(algo).into()]);
+    }
+    for (spec, help) in [
+        ("off|serial", "serial phase-sum clock (a2a fully exposed)"),
+        ("k=<n>", "fixed n-chunk dispatch-compute-combine pipeline"),
+        ("auto", "per-step chunk-count autotuner"),
+    ] {
+        t.row(&["overlap".into(), spec.into(), help.into()]);
+    }
+    for (spec, help) in [
+        ("off", "canonical expert hosting (expert e on device e/E)"),
+        ("on", "amortised live migration, default cadence"),
+        ("<n>", "live migration, re-solve attempted every n steps"),
+    ] {
+        t.row(&["placement".into(), spec.into(), help.into()]);
+    }
+    for kind in TraceKind::ALL {
+        t.row(&["trace".into(), kind.to_string(), trace_help(kind).into()]);
+    }
+    for policy in CachePolicy::ALL {
+        t.row(&["cache".into(), policy.to_string(), cache_help(policy).into()]);
+    }
+    t.print();
+    println!("\ndispatch policies: see `ta-moe --list-strategies`");
+    Ok(())
+}
+
+fn a2a_help(algo: A2aAlgo) -> &'static str {
+    use ta_moe::comm::ScheduleKind;
+    match algo {
+        A2aAlgo::Direct => "every pair exchanges at once (contention-priced)",
+        A2aAlgo::Hierarchical => "intra-node gather, inter-node exchange, scatter",
+        A2aAlgo::Scheduled(ScheduleKind::Xor) => "P contention-free rounds, XOR pairing",
+        A2aAlgo::Scheduled(ScheduleKind::Rotation) => "P rounds, rotation pairing",
+        A2aAlgo::Scheduled(ScheduleKind::Bvn) => "byte-matrix-aware BvN round synthesis",
+    }
+}
+
+fn trace_help(kind: TraceKind) -> &'static str {
+    match kind {
+        TraceKind::Poisson => "exponential inter-arrivals at the mean rate",
+        TraceKind::Bursty => "2-state MMPP (alias mmpp): ON/OFF bursts",
+        TraceKind::Diurnal => "Poisson thinned against a sinusoidal day curve",
+    }
+}
+
+fn cache_help(policy: CachePolicy) -> &'static str {
+    match policy {
+        CachePolicy::Lru => "evict the least-recently-touched expert",
+        CachePolicy::EwmaPrioritized => "evict the lowest gate-load EWMA expert",
+    }
 }
 
 // ---------------------------------------------------------------------------

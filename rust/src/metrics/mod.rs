@@ -47,11 +47,107 @@ pub struct StepRecord {
     pub sim_migration_s: f64,
     /// Host wall-clock spent executing the XLA step (not simulated).
     pub wall_s: f64,
+    /// Sequences in flight this iteration (serving runs; 0 in training).
+    pub inflight: usize,
+    /// Sequences admitted from the arrival queue this iteration.
+    pub admitted: usize,
+    /// Sequences that emitted their last token this iteration.
+    pub finished: usize,
+    /// Expert-weight cache hits this iteration (serving runs).
+    pub cache_hits: usize,
+    /// Expert-weight cache misses this iteration (serving runs).
+    pub cache_misses: usize,
+    /// Simulated time fetching missed expert weights over the links,
+    /// charged to this iteration's clock (serving runs).
+    pub sim_fetch_s: f64,
 }
 
 impl StepRecord {
     pub fn sim_total_s(&self) -> f64 {
-        self.sim_comm_s + self.sim_compute_s + self.sim_migration_s
+        self.sim_comm_s + self.sim_compute_s + self.sim_migration_s + self.sim_fetch_s
+    }
+}
+
+/// One served request's lifecycle on the simulated clock (serving runs).
+#[derive(Clone, Debug, Default)]
+pub struct RequestRecord {
+    /// Arrival order (the trace index).
+    pub id: usize,
+    /// Arrival time on the simulated clock.
+    pub arrival_s: f64,
+    /// When the first output token was emitted (end of the prefill
+    /// iteration).
+    pub first_token_s: f64,
+    /// When the last output token was emitted.
+    pub finish_s: f64,
+    pub prompt_tokens: usize,
+    pub output_tokens: usize,
+}
+
+impl RequestRecord {
+    /// Time to first token: queueing + prefill.
+    pub fn ttft_s(&self) -> f64 {
+        self.first_token_s - self.arrival_s
+    }
+
+    /// Mean time per output token after the first.
+    pub fn tpot_s(&self) -> f64 {
+        if self.output_tokens <= 1 {
+            return 0.0;
+        }
+        (self.finish_s - self.first_token_s) / (self.output_tokens - 1) as f64
+    }
+}
+
+/// Exact nearest-rank percentile via quickselect (no full sort): the
+/// `ceil(q/100 · n)`-th smallest sample, `q` clamped to [0, 100]. `None`
+/// on an empty slice. Property-tested against the naive sort oracle in
+/// `rust/tests/prop_serve.rs`.
+pub fn percentile(xs: &[f64], q: f64) -> Option<f64> {
+    if xs.is_empty() {
+        return None;
+    }
+    let n = xs.len();
+    let q = q.clamp(0.0, 100.0);
+    let rank = ((q / 100.0 * n as f64).ceil() as usize).clamp(1, n);
+    let mut v = xs.to_vec();
+    Some(quickselect(&mut v, rank - 1))
+}
+
+/// In-place quickselect of the `k`-th smallest (0-based), median-of-three
+/// pivot (deterministic — no RNG in the metrics path).
+fn quickselect(v: &mut [f64], k: usize) -> f64 {
+    let (mut lo, mut hi) = (0usize, v.len() - 1);
+    loop {
+        if lo == hi {
+            return v[lo];
+        }
+        // median-of-three pivot, moved to hi
+        let mid = lo + (hi - lo) / 2;
+        if v[mid] < v[lo] {
+            v.swap(mid, lo);
+        }
+        if v[hi] < v[lo] {
+            v.swap(hi, lo);
+        }
+        if v[hi] < v[mid] {
+            v.swap(hi, mid);
+        }
+        v.swap(mid, hi);
+        let pivot = v[hi];
+        let mut store = lo;
+        for i in lo..hi {
+            if v[i] < pivot {
+                v.swap(i, store);
+                store += 1;
+            }
+        }
+        v.swap(store, hi);
+        match k.cmp(&store) {
+            std::cmp::Ordering::Equal => return v[store],
+            std::cmp::Ordering::Less => hi = store - 1,
+            std::cmp::Ordering::Greater => lo = store + 1,
+        }
     }
 }
 
@@ -90,6 +186,12 @@ pub struct RunLog {
     pub plan_misses: u64,
     /// Accepted expert migrations, in step order (placement engine).
     pub migrations: Vec<MigrationRecord>,
+    /// Completed requests, in finish order (serving runs).
+    pub requests: Vec<RequestRecord>,
+    /// Expert-weight cache hits over the run (serving runs).
+    pub cache_hits: u64,
+    /// Expert-weight cache misses over the run (serving runs).
+    pub cache_misses: u64,
 }
 
 impl RunLog {
@@ -212,9 +314,58 @@ impl RunLog {
         })
     }
 
+    /// Record one completed request (serving runs).
+    pub fn push_request(&mut self, r: RequestRecord) {
+        self.requests.push(r);
+    }
+
+    /// Nearest-rank percentile of time-to-first-token over completed
+    /// requests (`None` before any completed).
+    pub fn ttft_percentile(&self, q: f64) -> Option<f64> {
+        let xs: Vec<f64> = self.requests.iter().map(|r| r.ttft_s()).collect();
+        percentile(&xs, q)
+    }
+
+    /// Nearest-rank percentile of mean per-output-token latency over
+    /// completed requests with ≥ 2 output tokens.
+    pub fn tpot_percentile(&self, q: f64) -> Option<f64> {
+        let xs: Vec<f64> =
+            self.requests.iter().filter(|r| r.output_tokens > 1).map(|r| r.tpot_s()).collect();
+        percentile(&xs, q)
+    }
+
+    /// Goodput under a TTFT deadline: output tokens/s counting only
+    /// completed requests whose first token met `slo_s`, over the
+    /// simulated clock.
+    pub fn goodput(&self, slo_s: f64) -> f64 {
+        let total = self.sim_time_axis().last().copied().unwrap_or(0.0);
+        if total <= 0.0 {
+            return 0.0;
+        }
+        let good: usize = self
+            .requests
+            .iter()
+            .filter(|r| r.ttft_s() <= slo_s)
+            .map(|r| r.output_tokens)
+            .sum();
+        good as f64 / total
+    }
+
+    /// Expert-weight cache hit rate over the run (0 when the run never
+    /// touched a cache, i.e. every training run).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.cache_hits as f64 / total as f64
+    }
+
     /// Write `step,loss,ce,aux,dropped,sim_comm_s,sim_compute_s,
     /// a2a_local_s,a2a_intra_s,a2a_inter_s,a2a_exposed_s,serial_s,chunks,
-    /// plan_hit,migration_s,sim_t` CSV.
+    /// plan_hit,migration_s,inflight,admitted,finished,cache_hits,
+    /// cache_misses,fetch_s,sim_t` CSV (the serve columns are zero on
+    /// training runs).
     pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
@@ -224,13 +375,14 @@ impl RunLog {
             f,
             "step,loss,ce,aux,dropped,sim_comm_s,sim_compute_s,\
              a2a_local_s,a2a_intra_s,a2a_inter_s,a2a_exposed_s,serial_s,chunks,\
-             plan_hit,migration_s,sim_t"
+             plan_hit,migration_s,inflight,admitted,finished,cache_hits,\
+             cache_misses,fetch_s,sim_t"
         )?;
         let axis = self.sim_time_axis();
         for (r, t) in self.records.iter().zip(axis) {
             writeln!(
                 f,
-                "{},{:.6},{:.6},{:.6},{:.4},{:.6e},{:.6e},{:.6e},{:.6e},{:.6e},{:.6e},{:.6e},{},{},{:.6e},{:.6e}",
+                "{},{:.6},{:.6},{:.6},{:.4},{:.6e},{:.6e},{:.6e},{:.6e},{:.6e},{:.6e},{:.6e},{},{},{:.6e},{},{},{},{},{},{:.6e},{:.6e}",
                 r.step,
                 r.loss,
                 r.ce,
@@ -246,6 +398,12 @@ impl RunLog {
                 r.chunks,
                 r.plan_cached as u8,
                 r.sim_migration_s,
+                r.inflight,
+                r.admitted,
+                r.finished,
+                r.cache_hits,
+                r.cache_misses,
+                r.sim_fetch_s,
                 t
             )?;
         }
@@ -281,6 +439,18 @@ impl RunLog {
         let (pred, real) = self.migration_savings();
         m.insert("migration_predicted_saving_s".into(), Json::Num(pred));
         m.insert("migration_realized_saving_s".into(), Json::Num(real));
+        if !self.requests.is_empty() || self.cache_hits + self.cache_misses > 0 {
+            m.insert("requests".into(), Json::Num(self.requests.len() as f64));
+            m.insert("ttft_p50_s".into(), Json::Num(self.ttft_percentile(50.0).unwrap_or(0.0)));
+            m.insert("ttft_p99_s".into(), Json::Num(self.ttft_percentile(99.0).unwrap_or(0.0)));
+            m.insert("tpot_p50_s".into(), Json::Num(self.tpot_percentile(50.0).unwrap_or(0.0)));
+            m.insert("tpot_p99_s".into(), Json::Num(self.tpot_percentile(99.0).unwrap_or(0.0)));
+            m.insert("cache_hits".into(), Json::Num(self.cache_hits as f64));
+            m.insert("cache_misses".into(), Json::Num(self.cache_misses as f64));
+            m.insert("cache_hit_rate".into(), Json::Num(self.cache_hit_rate()));
+            let fetch: f64 = self.records.iter().map(|r| r.sim_fetch_s).sum();
+            m.insert("fetch_s".into(), Json::Num(fetch));
+        }
         Json::Obj(m)
     }
 }
@@ -460,6 +630,105 @@ mod tests {
         let serial_col = header.split(',').position(|c| c == "serial_s").unwrap();
         assert_eq!(row0[serial_col], "3.000000e0");
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn percentile_matches_sort_oracle_on_small_samples() {
+        let xs = [3.0, 1.0, 4.0, 1.5, 9.0, 2.6, 5.0];
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(f64::total_cmp);
+        for q in [0.0, 10.0, 50.0, 90.0, 99.0, 100.0] {
+            let rank = ((q / 100.0 * xs.len() as f64).ceil() as usize).clamp(1, xs.len());
+            assert_eq!(percentile(&xs, q), Some(sorted[rank - 1]), "q={q}");
+        }
+        assert_eq!(percentile(&[], 50.0), None);
+        assert_eq!(percentile(&[7.0], 99.0), Some(7.0));
+    }
+
+    #[test]
+    fn request_latency_accounting() {
+        let r = RequestRecord {
+            id: 0,
+            arrival_s: 1.0,
+            first_token_s: 1.5,
+            finish_s: 3.5,
+            prompt_tokens: 8,
+            output_tokens: 5,
+        };
+        assert!((r.ttft_s() - 0.5).abs() < 1e-12);
+        assert!((r.tpot_s() - 0.5).abs() < 1e-12); // 2.0 s / 4 tokens
+    }
+
+    #[test]
+    fn goodput_counts_only_requests_meeting_the_slo() {
+        let mut log = RunLog::new("serve", 0);
+        log.push(StepRecord { step: 0, sim_compute_s: 10.0, ..Default::default() });
+        log.push_request(RequestRecord {
+            id: 0,
+            arrival_s: 0.0,
+            first_token_s: 0.1,
+            finish_s: 1.0,
+            prompt_tokens: 4,
+            output_tokens: 20,
+        });
+        log.push_request(RequestRecord {
+            id: 1,
+            arrival_s: 0.0,
+            first_token_s: 5.0, // misses a 1 s TTFT deadline
+            finish_s: 9.0,
+            prompt_tokens: 4,
+            output_tokens: 30,
+        });
+        assert!((log.goodput(1.0) - 2.0).abs() < 1e-12); // 20 tokens / 10 s
+        assert!((log.goodput(10.0) - 5.0).abs() < 1e-12); // all 50 tokens
+        assert_eq!(log.ttft_percentile(50.0), Some(0.1));
+        assert_eq!(log.ttft_percentile(99.0), Some(5.0));
+    }
+
+    #[test]
+    fn serve_columns_and_summary_keys_surface() {
+        let mut log = RunLog::new("serve", 0);
+        log.cache_hits = 9;
+        log.cache_misses = 1;
+        log.push(StepRecord {
+            step: 0,
+            inflight: 3,
+            admitted: 2,
+            finished: 1,
+            cache_hits: 9,
+            cache_misses: 1,
+            sim_fetch_s: 0.25,
+            sim_compute_s: 1.0,
+            ..Default::default()
+        });
+        // fetch time is charged to the step clock
+        assert!((log.records[0].sim_total_s() - 1.25).abs() < 1e-12);
+        assert!((log.cache_hit_rate() - 0.9).abs() < 1e-12);
+        let json = log.summary_json().to_string_compact();
+        for key in ["cache_hit_rate", "ttft_p99_s", "tpot_p50_s", "fetch_s", "requests"] {
+            assert!(json.contains(&format!("\"{key}\":")), "{key} missing: {json}");
+        }
+        let path = std::env::temp_dir().join("ta_moe_test_metrics_serve.csv");
+        log.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let header = text.lines().next().unwrap();
+        let row0: Vec<&str> = text.lines().nth(1).unwrap().split(',').collect();
+        for (col, want) in
+            [("inflight", "3"), ("admitted", "2"), ("finished", "1"), ("cache_hits", "9")]
+        {
+            let i = header.split(',').position(|c| c == col).unwrap();
+            assert_eq!(row0[i], want, "{col}");
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn training_summaries_omit_serve_keys() {
+        let mut log = RunLog::new("train", 10);
+        log.push(rec(0, 1.0, 0.1, 0.2));
+        let json = log.summary_json().to_string_compact();
+        assert!(!json.contains("cache_hit_rate"), "{json}");
+        assert!(!json.contains("ttft_p99_s"), "{json}");
     }
 
     #[test]

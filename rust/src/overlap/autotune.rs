@@ -11,7 +11,7 @@
 //! invalidated by topology changes and placement epochs) lives in
 //! `coordinator::cost::PlanCache`.
 
-use super::chunk::{pipeline_cost, OverlapInputs, PipelineCost, CHUNK_SWEEP};
+use super::chunk::{pipeline_cost, pipeline_cost_forward, OverlapInputs, PipelineCost, CHUNK_SWEEP};
 use crate::comm::A2aBreakdown;
 
 /// Sweep the chunk counts and return `(k, cost)` of the cheapest
@@ -27,6 +27,29 @@ pub fn autotune_k(
     for k in CHUNK_SWEEP {
         let (chunk, ar_chunk) = chunk_of(k);
         let cost = pipeline_cost(inp, &chunk, ar_chunk, k);
+        let better = match &best {
+            None => true,
+            Some((_, b)) => cost.makespan_s < b.makespan_s * (1.0 - 1e-9),
+        };
+        if better {
+            best = Some((k, cost));
+        }
+    }
+    best.expect("CHUNK_SWEEP is non-empty")
+}
+
+/// [`autotune_k`] over the forward-only pipeline
+/// ([`pipeline_cost_forward`]) — the decode-iteration variant the serving
+/// simulator tunes. `chunk_of(k)`'s allreduce component is ignored
+/// (forward passes run none).
+pub fn autotune_k_forward(
+    inp: &OverlapInputs,
+    mut chunk_of: impl FnMut(usize) -> (A2aBreakdown, f64),
+) -> (usize, PipelineCost) {
+    let mut best: Option<(usize, PipelineCost)> = None;
+    for k in CHUNK_SWEEP {
+        let (chunk, _ar) = chunk_of(k);
+        let cost = pipeline_cost_forward(inp, &chunk, k);
         let better = match &best {
             None => true,
             Some((_, b)) => cost.makespan_s < b.makespan_s * (1.0 - 1e-9),

@@ -169,6 +169,69 @@ pub fn pipeline_cost(
     }
 }
 
+/// Price one **forward-only** pass (an inference decode iteration) as a
+/// `k`-chunk pipeline: `n_moe` blocks of dispatch → expert → combine with
+/// no backward mirror, no tail, and no allreduce. `inp.expert_s_per_dev`
+/// is the *forward* expert total per device (no 3× fwd/bwd folding —
+/// build it via `ModelShape::overlap_inputs_profiled` with a forward-only
+/// profile) and `inp.dense_bwd_s` is ignored. As in [`pipeline_cost`],
+/// `chunk` prices ONE exchange of `bytes/k` and `k = 1` is exactly the
+/// serial phase sum.
+pub fn pipeline_cost_forward(inp: &OverlapInputs, chunk: &A2aBreakdown, k: usize) -> PipelineCost {
+    assert!(k >= 1, "chunk count must be >= 1");
+    let p = inp.expert_s_per_dev.len();
+    assert!(p >= 1, "pipeline needs at least one device");
+
+    let disp_intra = p;
+    let disp_inter = p + 1;
+    let comb_intra = p + 2;
+    let comb_inter = p + 3;
+    let mut tl = Timeline::new(p + 4);
+
+    let intra_s = chunk.local_s + chunk.intra_s;
+    let inter_s = chunk.inter_s;
+    let kf = k as f64;
+
+    let dense_slice = if inp.n_moe > 0 { inp.dense_fwd_s / inp.n_moe as f64 } else { 0.0 };
+    let mut join: Vec<EventId> = Vec::new();
+    let mut scratch: Vec<EventId> = Vec::with_capacity(p);
+    for _b in 0..inp.n_moe {
+        scratch.clear();
+        for dev in 0..p {
+            scratch.push(tl.schedule(dev, EventClass::Compute, dense_slice, &join));
+        }
+        let dense_ev = scratch.clone();
+        join.clear();
+        for _c in 0..k {
+            let di = tl.schedule(disp_intra, EventClass::A2a, intra_s, &dense_ev);
+            let dx = tl.schedule(disp_inter, EventClass::A2a, inter_s, &[di]);
+            scratch.clear();
+            for dev in 0..p {
+                let e = inp.expert_s_per_dev[dev] / inp.n_moe as f64 / kf;
+                scratch.push(tl.schedule(dev, EventClass::Compute, e, &[dx]));
+            }
+            let ci = tl.schedule(comb_intra, EventClass::A2a, intra_s, &scratch);
+            let cx = tl.schedule(comb_inter, EventClass::A2a, inter_s, &[ci]);
+            join.push(cx);
+        }
+    }
+    // a MoE-free model is a pure dense forward pass
+    if inp.n_moe == 0 {
+        for dev in 0..p {
+            tl.schedule(dev, EventClass::Compute, inp.dense_fwd_s, &[]);
+        }
+    }
+
+    PipelineCost {
+        makespan_s: tl.makespan(),
+        serial_sum_s: tl.serial_sum(),
+        bound_s: tl.max_busy(),
+        exposed_a2a_s: tl.exposed(EventClass::A2a, &[EventClass::Compute]),
+        exposed_allreduce_s: 0.0,
+        chunks: k,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -281,6 +344,65 @@ mod tests {
         let c = pipeline_cost(&inp, &zero, 1.0, 4);
         assert!((c.exposed_allreduce_s - 1.0).abs() < 1e-12, "{:?}", c);
         assert!((c.makespan_s - 11.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn forward_k1_is_the_serial_phase_sum() {
+        // forward-only expert totals: no 3× folding in the inputs
+        let inp = OverlapInputs {
+            dense_fwd_s: 2.0,
+            dense_bwd_s: 99.0, // ignored by the forward pipeline
+            expert_s_per_dev: vec![1.0, 4.0, 2.0],
+            n_moe: 2,
+        };
+        let (intra, inter) = (0.5, 1.5);
+        let c = pipeline_cost_forward(&inp, &chunk(intra, inter, 1), 1);
+        // n_moe blocks × 2 exchanges × (intra + inter) + dense fwd + slowest
+        let a2a = 2.0 * inp.n_moe as f64 * (intra + inter);
+        let want = inp.dense_fwd_s + 4.0 + a2a;
+        assert!((c.makespan_s - want).abs() <= 1e-12 * want, "{} != {want}", c.makespan_s);
+        assert!((c.exposed_a2a_s - a2a).abs() <= 1e-12 * a2a);
+        assert_eq!(c.exposed_allreduce_s, 0.0);
+    }
+
+    #[test]
+    fn forward_bounds_sandwich_for_all_k() {
+        let inp = OverlapInputs {
+            dense_fwd_s: 1.0,
+            dense_bwd_s: 0.0,
+            expert_s_per_dev: vec![2.0; 4],
+            n_moe: 3,
+        };
+        for k in CHUNK_SWEEP {
+            let c = pipeline_cost_forward(&inp, &chunk(1.0, 4.0, k), k);
+            assert!(c.bound_s <= c.makespan_s * (1.0 + 1e-12), "k={k}");
+            assert!(c.makespan_s <= c.serial_sum_s * (1.0 + 1e-12), "k={k}");
+        }
+    }
+
+    #[test]
+    fn forward_chunking_overlaps_in_the_fluid_regime() {
+        let inp = OverlapInputs {
+            dense_fwd_s: 1.0,
+            dense_bwd_s: 0.0,
+            expert_s_per_dev: vec![4.0; 4],
+            n_moe: 2,
+        };
+        let k1 = pipeline_cost_forward(&inp, &chunk(1.0, 4.0, 1), 1).makespan_s;
+        let k8 = pipeline_cost_forward(&inp, &chunk(1.0, 4.0, 8), 8).makespan_s;
+        assert!(k8 < k1, "fluid forward chunking must beat serial: {k8} vs {k1}");
+    }
+
+    #[test]
+    fn forward_moe_free_model_is_pure_dense() {
+        let inp = OverlapInputs {
+            dense_fwd_s: 5.0,
+            dense_bwd_s: 0.0,
+            expert_s_per_dev: vec![0.0; 2],
+            n_moe: 0,
+        };
+        let c = pipeline_cost_forward(&inp, &A2aBreakdown::default(), 4);
+        assert!((c.makespan_s - 5.0).abs() < 1e-12);
     }
 
     #[test]

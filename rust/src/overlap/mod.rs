@@ -33,8 +33,8 @@ mod autotune;
 mod chunk;
 mod timeline;
 
-pub use autotune::autotune_k;
-pub use chunk::{pipeline_cost, OverlapInputs, PipelineCost, CHUNK_SWEEP};
+pub use autotune::{autotune_k, autotune_k_forward};
+pub use chunk::{pipeline_cost, pipeline_cost_forward, OverlapInputs, PipelineCost, CHUNK_SWEEP};
 pub use timeline::{EventClass, EventId, Timeline};
 
 /// How a session prices its step clock: serially (the historic model), as

@@ -1,0 +1,227 @@
+//! Continuous batcher: the iteration-level scheduler of the serving
+//! simulator.
+//!
+//! Orca-style continuous batching — sequences join and leave the running
+//! batch at *iteration* granularity instead of waiting for a whole batch
+//! to drain. Each simulated iteration:
+//!
+//! 1. [`ContinuousBatcher::admit`] pulls every request that has arrived
+//!    by `now` into the in-flight set, least-loaded device first, capped
+//!    at `max_inflight_per_dev` sequences per device (the KV-cache slot
+//!    budget);
+//! 2. [`ContinuousBatcher::tokens_per_device`] reports the iteration's
+//!    token bill: a sequence in its prefill iteration contributes its
+//!    whole prompt, a decoding sequence contributes one token;
+//! 3. after the step is priced, [`ContinuousBatcher::advance`] stamps
+//!    prefilling sequences' first-token time (TTFT), emits one output
+//!    token per sequence, and retires finished sequences as
+//!    [`RequestRecord`]s for the run log.
+//!
+//! The batcher owns queueing and lifetime only — routing and pricing live
+//! in [`super::ServeSession`].
+
+use super::trace::Request;
+use crate::metrics::RequestRecord;
+
+/// One in-flight sequence.
+#[derive(Clone, Debug)]
+struct Sequence {
+    id: usize,
+    arrival_s: f64,
+    prompt_tokens: usize,
+    output_tokens: usize,
+    /// Output tokens emitted so far; 0 means the prefill iteration is
+    /// still pending.
+    emitted: usize,
+    /// Device whose batch the sequence joined (its KV cache lives there).
+    device: usize,
+    first_token_s: Option<f64>,
+}
+
+/// Iteration-granular admission + retirement over a fixed arrival trace.
+#[derive(Clone, Debug)]
+pub struct ContinuousBatcher {
+    trace: Vec<Request>,
+    /// Next unadmitted trace index.
+    next: usize,
+    inflight: Vec<Sequence>,
+    per_dev: Vec<usize>,
+    max_inflight_per_dev: usize,
+}
+
+impl ContinuousBatcher {
+    pub fn new(trace: Vec<Request>, p: usize, max_inflight_per_dev: usize) -> ContinuousBatcher {
+        assert!(p > 0 && max_inflight_per_dev > 0);
+        ContinuousBatcher {
+            trace,
+            next: 0,
+            inflight: Vec::new(),
+            per_dev: vec![0; p],
+            max_inflight_per_dev,
+        }
+    }
+
+    /// Admit every request arrived by `now`, least-loaded device first
+    /// (ties to the lowest device id), until per-device slots run out.
+    /// Returns how many were admitted.
+    pub fn admit(&mut self, now: f64) -> usize {
+        let mut admitted = 0;
+        while self.next < self.trace.len() && self.trace[self.next].arrival_s <= now {
+            let Some(dev) = self.least_loaded_open_device() else { break };
+            let r = self.trace[self.next];
+            self.inflight.push(Sequence {
+                id: self.next,
+                arrival_s: r.arrival_s,
+                prompt_tokens: r.prompt_tokens,
+                output_tokens: r.output_tokens.max(1),
+                emitted: 0,
+                device: dev,
+                first_token_s: None,
+            });
+            self.per_dev[dev] += 1;
+            self.next += 1;
+            admitted += 1;
+        }
+        admitted
+    }
+
+    fn least_loaded_open_device(&self) -> Option<usize> {
+        let (dev, &load) = self
+            .per_dev
+            .iter()
+            .enumerate()
+            .min_by_key(|&(d, &load)| (load, d))?;
+        (load < self.max_inflight_per_dev).then_some(dev)
+    }
+
+    /// This iteration's token bill per device: prompt length for
+    /// sequences still prefilling, one decode token otherwise.
+    pub fn tokens_per_device(&self) -> Vec<usize> {
+        let mut t = vec![0usize; self.per_dev.len()];
+        for s in &self.inflight {
+            t[s.device] += if s.emitted == 0 { s.prompt_tokens } else { 1 };
+        }
+        t
+    }
+
+    /// Close the iteration that ended at `now_end`: every in-flight
+    /// sequence emits one token (prefills emit their first and stamp
+    /// TTFT); finished sequences retire as records, in id order.
+    pub fn advance(&mut self, now_end: f64) -> Vec<RequestRecord> {
+        let mut done = Vec::new();
+        let mut keep = Vec::with_capacity(self.inflight.len());
+        for mut s in self.inflight.drain(..) {
+            if s.emitted == 0 {
+                s.first_token_s = Some(now_end);
+            }
+            s.emitted += 1;
+            if s.emitted >= s.output_tokens {
+                self.per_dev[s.device] -= 1;
+                done.push(RequestRecord {
+                    id: s.id,
+                    arrival_s: s.arrival_s,
+                    first_token_s: s.first_token_s.unwrap_or(now_end),
+                    finish_s: now_end,
+                    prompt_tokens: s.prompt_tokens,
+                    output_tokens: s.output_tokens,
+                });
+            } else {
+                keep.push(s);
+            }
+        }
+        self.inflight = keep;
+        done.sort_by_key(|r| r.id);
+        done
+    }
+
+    /// Arrival time of the next unadmitted request (for idle-skip).
+    pub fn next_arrival(&self) -> Option<f64> {
+        self.trace.get(self.next).map(|r| r.arrival_s)
+    }
+
+    pub fn inflight_len(&self) -> usize {
+        self.inflight.len()
+    }
+
+    /// True once every trace request has been admitted and retired.
+    pub fn done(&self) -> bool {
+        self.next >= self.trace.len() && self.inflight.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(arrival_s: f64, prompt: usize, output: usize) -> Request {
+        Request { arrival_s, prompt_tokens: prompt, output_tokens: output }
+    }
+
+    #[test]
+    fn admits_in_arrival_order_to_least_loaded_device() {
+        let trace = vec![req(0.0, 8, 2), req(0.0, 8, 2), req(0.5, 8, 2)];
+        let mut b = ContinuousBatcher::new(trace, 2, 4);
+        assert_eq!(b.admit(0.0), 2); // req 2 not yet arrived
+        assert_eq!(b.tokens_per_device(), vec![8, 8]); // spread across devs
+        assert_eq!(b.admit(1.0), 1);
+        assert_eq!(b.inflight_len(), 3);
+    }
+
+    #[test]
+    fn per_device_slot_cap_defers_admission() {
+        let trace = vec![req(0.0, 4, 3); 5];
+        let mut b = ContinuousBatcher::new(trace, 2, 2);
+        assert_eq!(b.admit(0.0), 4); // 2 devices × 2 slots
+        assert_eq!(b.admit(0.0), 0); // full
+        // finish everyone: 3 output tokens each → 3 iterations
+        b.advance(1.0);
+        b.advance(2.0);
+        let done = b.advance(3.0);
+        assert_eq!(done.len(), 4);
+        assert_eq!(b.admit(3.0), 1); // slot freed, straggler admitted
+        assert!(!b.done());
+    }
+
+    #[test]
+    fn prefill_then_decode_token_accounting() {
+        let mut b = ContinuousBatcher::new(vec![req(0.0, 10, 3)], 1, 8);
+        b.admit(0.0);
+        assert_eq!(b.tokens_per_device(), vec![10]); // prefill
+        assert!(b.advance(0.25).is_empty()); // first token out
+        assert_eq!(b.tokens_per_device(), vec![1]); // decode
+        assert!(b.advance(0.5).is_empty());
+        let done = b.advance(0.75);
+        assert_eq!(done.len(), 1);
+        let r = &done[0];
+        assert_eq!(r.ttft_s(), 0.25);
+        assert_eq!(r.finish_s, 0.75);
+        // 2 post-first tokens over 0.5 s
+        assert!((r.tpot_s() - 0.25).abs() < 1e-12);
+        assert!(b.done());
+    }
+
+    #[test]
+    fn single_token_requests_finish_in_their_prefill_iteration() {
+        let mut b = ContinuousBatcher::new(vec![req(0.0, 6, 1)], 1, 8);
+        b.admit(0.0);
+        let done = b.advance(0.1);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].first_token_s, done[0].finish_s);
+        assert_eq!(done[0].tpot_s(), 0.0);
+        assert!(b.done());
+    }
+
+    #[test]
+    fn next_arrival_supports_idle_skip() {
+        let mut b = ContinuousBatcher::new(vec![req(0.0, 4, 1), req(9.0, 4, 1)], 1, 8);
+        assert_eq!(b.next_arrival(), Some(0.0));
+        b.admit(0.0);
+        b.advance(0.2);
+        assert_eq!(b.inflight_len(), 0);
+        assert_eq!(b.next_arrival(), Some(9.0)); // clock can jump to 9.0
+        b.admit(9.0);
+        b.advance(9.3);
+        assert!(b.done());
+        assert_eq!(b.next_arrival(), None);
+    }
+}

@@ -1,0 +1,341 @@
+//! Expert-weight device cache with capacity eviction.
+//!
+//! At serving batch sizes the expert weights, not the activations, are
+//! the memory bill: a device hosting `e_per_dev` experts may only have
+//! HBM for `cap` of them resident. Every decode iteration touches the
+//! hosted experts the gate routed tokens to; a touched expert that is not
+//! resident is a **miss** and its weights stream in from the expert's
+//! canonical home device (the parameter-server copy) — priced as real
+//! bytes over the real links by the caller, through the same contention
+//! [`crate::comm::CostEngine`] that prices migrations.
+//!
+//! Retention is priority-based and cache-oblivious: the access stream
+//! (which experts the gate picks) does not depend on cache contents, so a
+//! device's residents are always the top-`cap` hosted experts under the
+//! policy's priority order. That makes the hit rate provably monotone in
+//! capacity for **both** policies (the priority order is
+//! capacity-independent, and top-`cap` prefixes are nested), and makes
+//! `cap ≥ e_per_dev` purely compulsory-miss (zero misses after warmup) —
+//! the invariants `rust/tests/prop_serve.rs` checks.
+//!
+//! * [`CachePolicy::Lru`] — priority = recency of last touch;
+//! * [`CachePolicy::EwmaPrioritized`] — priority = the expert's gate-load
+//!   EWMA (the serving twin of the placement engine's
+//!   [`crate::placement::GateLoadEwma`]), recency as tie-break: a
+//!   one-burst cold expert cannot evict a consistently hot one.
+
+use crate::placement::Placement;
+use crate::util::Mat;
+
+/// Which eviction priority the expert cache uses (CLI `--cache`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum CachePolicy {
+    #[default]
+    Lru,
+    EwmaPrioritized,
+}
+
+impl CachePolicy {
+    /// All selectable policies, for `--list-modes` and sweeps.
+    pub const ALL: [CachePolicy; 2] = [CachePolicy::Lru, CachePolicy::EwmaPrioritized];
+}
+
+impl std::fmt::Display for CachePolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            CachePolicy::Lru => "lru",
+            CachePolicy::EwmaPrioritized => "ewma",
+        })
+    }
+}
+
+impl std::str::FromStr for CachePolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<CachePolicy, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "lru" => Ok(CachePolicy::Lru),
+            "ewma" | "ewma-prioritized" => Ok(CachePolicy::EwmaPrioritized),
+            other => Err(format!("unknown cache policy {other:?} (lru|ewma)")),
+        }
+    }
+}
+
+/// One iteration's cache outcome: the hit/miss counts and the fetch byte
+/// matrix (`bytes[home][host]`, canonical home → current host) the caller
+/// prices through the contention engine.
+#[derive(Clone, Debug)]
+pub struct CacheAccess {
+    pub hits: usize,
+    pub misses: usize,
+    pub fetch_bytes: Mat,
+}
+
+/// Per-device expert-weight cache over the experts each device currently
+/// hosts. `cap` is the resident-expert capacity per device; `cap = 0`
+/// disables caching entirely (every expert always resident — the
+/// infinite-HBM baseline).
+#[derive(Clone, Debug)]
+pub struct ExpertCache {
+    p: usize,
+    e_per_dev: usize,
+    cap: usize,
+    policy: CachePolicy,
+    alpha: f64,
+    /// resident[e]: whether expert e is resident on its current host.
+    resident: Vec<bool>,
+    /// Last-touch stamp per expert (iteration counter; 0 = never).
+    stamp: Vec<u64>,
+    /// Gate-load EWMA per expert.
+    ewma: Vec<f64>,
+    tick: u64,
+    total_hits: u64,
+    total_misses: u64,
+}
+
+impl ExpertCache {
+    pub fn new(p: usize, e_per_dev: usize, cap: usize, policy: CachePolicy) -> ExpertCache {
+        Self::with_alpha(p, e_per_dev, cap, policy, 0.25)
+    }
+
+    pub fn with_alpha(
+        p: usize,
+        e_per_dev: usize,
+        cap: usize,
+        policy: CachePolicy,
+        alpha: f64,
+    ) -> ExpertCache {
+        assert!(alpha > 0.0 && alpha <= 1.0, "EWMA alpha must be in (0, 1]");
+        let n = p * e_per_dev;
+        ExpertCache {
+            p,
+            e_per_dev,
+            cap,
+            policy,
+            alpha,
+            resident: vec![cap == 0; n],
+            stamp: vec![0; n],
+            ewma: vec![0.0; n],
+            tick: 0,
+            total_hits: 0,
+            total_misses: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn policy(&self) -> CachePolicy {
+        self.policy
+    }
+
+    pub fn total_hits(&self) -> u64 {
+        self.total_hits
+    }
+
+    pub fn total_misses(&self) -> u64 {
+        self.total_misses
+    }
+
+    /// One iteration: `counts` is the P×N dispatch matrix (tokens),
+    /// `placement` the active expert→device map, `expert_bytes` one
+    /// expert's weight payload. Touched experts (column sum > 0) hit if
+    /// resident, otherwise miss and fetch `expert_bytes` from their
+    /// canonical home into their current host; residency is then
+    /// re-settled to the top-`cap` priority experts per device.
+    pub fn access(
+        &mut self,
+        counts: &Mat,
+        placement: &Placement,
+        expert_bytes: f64,
+    ) -> CacheAccess {
+        let n = self.p * self.e_per_dev;
+        assert_eq!(counts.cols(), n, "counts shape");
+        assert_eq!((placement.p(), placement.e_per_dev()), (self.p, self.e_per_dev));
+        self.tick += 1;
+
+        let mut hits = 0;
+        let mut misses = 0;
+        let mut fetch = Mat::zeros(self.p, self.p);
+        for e in 0..n {
+            let load = counts.col_sum(e);
+            // gate-load EWMA over every expert, touched or not
+            self.ewma[e] = (1.0 - self.alpha) * self.ewma[e] + self.alpha * load;
+            if load <= 0.0 {
+                continue;
+            }
+            if self.resident[e] {
+                hits += 1;
+            } else {
+                misses += 1;
+                let home = e / self.e_per_dev;
+                let host = placement.device_of(e);
+                fetch.add_assign(home, host, expert_bytes);
+            }
+            self.stamp[e] = self.tick;
+            self.resident[e] = true;
+        }
+        if self.cap > 0 {
+            self.settle(placement);
+        }
+        self.total_hits += hits as u64;
+        self.total_misses += misses as u64;
+        CacheAccess { hits, misses, fetch_bytes: fetch }
+    }
+
+    /// After a live migration, moved experts' weights travelled with the
+    /// migration (already priced by the placement engine): they arrive
+    /// resident on their new host, and the old host's copy is dropped.
+    /// Residency is re-settled per device under the new hosting.
+    pub fn apply_migration(&mut self, moved: &[usize], placement: &Placement) {
+        for &e in moved {
+            self.resident[e] = true;
+            self.stamp[e] = self.tick;
+        }
+        if self.cap > 0 {
+            self.settle(placement);
+        }
+    }
+
+    /// Whether expert `e` is currently resident on its host.
+    pub fn is_resident(&self, e: usize) -> bool {
+        self.resident[e]
+    }
+
+    /// Keep only the top-`cap` priority resident experts per device.
+    fn settle(&mut self, placement: &Placement) {
+        for dev in 0..self.p {
+            let mut resident_here: Vec<usize> = placement
+                .experts_on(dev)
+                .into_iter()
+                .filter(|&e| self.resident[e])
+                .collect();
+            if resident_here.len() <= self.cap {
+                continue;
+            }
+            // highest priority first; evict the tail
+            resident_here.sort_by(|&a, &b| self.priority(b).total_cmp(&self.priority(a)));
+            for &e in &resident_here[self.cap..] {
+                self.resident[e] = false;
+            }
+        }
+    }
+
+    /// Retention priority (higher = keep). Strictly positive stamps make
+    /// the recency tie-break well-ordered; the index term breaks exact
+    /// ties deterministically.
+    fn priority(&self, e: usize) -> f64 {
+        let recency = self.stamp[e] as f64 - e as f64 / (self.p * self.e_per_dev) as f64;
+        match self.policy {
+            CachePolicy::Lru => recency,
+            // EWMA dominates; recency only breaks near-exact load ties
+            CachePolicy::EwmaPrioritized => self.ewma[e] * 1e9 + recency,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn counts_for(p: usize, e_per_dev: usize, touched: &[(usize, f64)]) -> Mat {
+        let mut m = Mat::zeros(p, p * e_per_dev);
+        for &(e, tok) in touched {
+            m.set(0, e, tok);
+        }
+        m
+    }
+
+    #[test]
+    fn policies_round_trip() {
+        for pol in CachePolicy::ALL {
+            let spec = pol.to_string();
+            assert_eq!(spec.parse::<CachePolicy>().unwrap(), pol, "{spec}");
+        }
+        assert!("fifo".parse::<CachePolicy>().is_err());
+    }
+
+    #[test]
+    fn first_touch_misses_then_hits_within_capacity() {
+        let pl = Placement::identity(2, 2);
+        let mut c = ExpertCache::new(2, 2, 2, CachePolicy::Lru);
+        let counts = counts_for(2, 2, &[(0, 4.0), (1, 2.0)]);
+        let a = c.access(&counts, &pl, 100.0);
+        assert_eq!((a.hits, a.misses), (0, 2)); // compulsory
+        assert_eq!(a.fetch_bytes.get(0, 0), 200.0); // both home = host = 0
+        let a = c.access(&counts, &pl, 100.0);
+        assert_eq!((a.hits, a.misses), (2, 0));
+        assert_eq!(a.fetch_bytes.sum(), 0.0);
+    }
+
+    #[test]
+    fn lru_evicts_the_coldest_expert() {
+        // device 0 hosts experts 0..4, cap 2
+        let pl = Placement::identity(1, 4);
+        let mut c = ExpertCache::new(1, 4, 2, CachePolicy::Lru);
+        c.access(&counts_for(1, 4, &[(0, 1.0)]), &pl, 1.0);
+        c.access(&counts_for(1, 4, &[(1, 1.0)]), &pl, 1.0);
+        c.access(&counts_for(1, 4, &[(2, 1.0)]), &pl, 1.0); // evicts 0 (oldest)
+        assert!(!c.is_resident(0) && c.is_resident(1) && c.is_resident(2));
+        let a = c.access(&counts_for(1, 4, &[(0, 1.0)]), &pl, 1.0);
+        assert_eq!(a.misses, 1);
+    }
+
+    #[test]
+    fn ewma_keeps_the_hot_expert_through_a_burst() {
+        let pl = Placement::identity(1, 4);
+        let mut lru = ExpertCache::new(1, 4, 1, CachePolicy::Lru);
+        let mut ewma = ExpertCache::new(1, 4, 1, CachePolicy::EwmaPrioritized);
+        // expert 0 is consistently hot; expert 3 gets one cold burst
+        for _ in 0..10 {
+            lru.access(&counts_for(1, 4, &[(0, 10.0)]), &pl, 1.0);
+            ewma.access(&counts_for(1, 4, &[(0, 10.0)]), &pl, 1.0);
+        }
+        lru.access(&counts_for(1, 4, &[(3, 1.0)]), &pl, 1.0);
+        ewma.access(&counts_for(1, 4, &[(3, 1.0)]), &pl, 1.0);
+        // LRU dropped the hot expert for the burst; EWMA kept it
+        assert!(!lru.is_resident(0) && lru.is_resident(3));
+        assert!(ewma.is_resident(0) && !ewma.is_resident(3));
+        let a = ewma.access(&counts_for(1, 4, &[(0, 10.0)]), &pl, 1.0);
+        assert_eq!(a.hits, 1);
+        let a = lru.access(&counts_for(1, 4, &[(0, 10.0)]), &pl, 1.0);
+        assert_eq!(a.misses, 1);
+    }
+
+    #[test]
+    fn misses_fetch_from_canonical_home_to_current_host() {
+        // expert 0's home is device 0; swap it to device 1
+        let mut pl = Placement::identity(2, 1);
+        pl.swap_experts(0, 1);
+        let mut c = ExpertCache::new(2, 1, 1, CachePolicy::Lru);
+        let mut counts = Mat::zeros(2, 2);
+        counts.set(0, 0, 3.0);
+        let a = c.access(&counts, &pl, 64.0);
+        assert_eq!(a.misses, 1);
+        assert_eq!(a.fetch_bytes.get(0, 1), 64.0); // home 0 → host 1
+    }
+
+    #[test]
+    fn cap_zero_disables_caching() {
+        let pl = Placement::identity(1, 4);
+        let mut c = ExpertCache::new(1, 4, 0, CachePolicy::Lru);
+        for _ in 0..3 {
+            let a = c.access(&counts_for(1, 4, &[(0, 1.0), (3, 1.0)]), &pl, 1.0);
+            assert_eq!(a.misses, 0);
+        }
+    }
+
+    #[test]
+    fn migrated_expert_arrives_resident_on_new_host() {
+        let mut pl = Placement::identity(2, 2);
+        let mut c = ExpertCache::new(2, 2, 2, CachePolicy::Lru);
+        let mut counts = Mat::zeros(2, 4);
+        counts.set(0, 0, 1.0);
+        c.access(&counts, &pl, 1.0);
+        pl.swap_experts(0, 2);
+        c.apply_migration(&[0, 2], &pl);
+        let a = c.access(&counts, &pl, 1.0); // expert 0 now hosted on dev 1
+        assert_eq!((a.hits, a.misses), (1, 0));
+    }
+}

@@ -1,0 +1,714 @@
+//! Inference serving simulator: continuous batching + expert-weight
+//! caching + SLO metrics on the same priced cluster as training.
+//!
+//! Training answered "how fast does a step go"; serving asks "how fast
+//! does a *token* come back". This module reuses the whole pricing stack
+//! — topology, contention-aware a2a plans, the epoch-aware
+//! [`PlanCache`](crate::coordinator::PlanCache), live placement, the
+//! chunked overlap clock — through the [`Workload`] seam, and adds the
+//! three things a decode loop has that a training loop does not:
+//!
+//! * a [`batcher`] admitting and retiring sequences at iteration
+//!   granularity against a seeded arrival [`trace`];
+//! * a [`cache`] holding only part of each device's expert weights, whose
+//!   misses are priced as real byte transfers over the real links;
+//! * SLO accounting (TTFT/TPOT percentiles, goodput under a deadline)
+//!   accumulated in the shared [`RunLog`].
+//!
+//! Each simulated iteration prices one decode/prefill step under
+//! [`StepProfile::decode`] — forward-only, dispatch+combine once per MoE
+//! layer, no gradient allreduce — with `tokens_per_dev` set to the live
+//! batch's largest per-device token bill, then advances the request clock
+//! by `step + fetch + migration` seconds. Routing draws each token's
+//! top-k experts from the policy's converged dispatch pattern tilted by a
+//! Zipf popularity over each device's canonical experts, so gate skew is
+//! present without running a real gate network: the point is pricing the
+//! *system*, not the model. There is no [`crate::runtime`] backend in the
+//! loop — `python/serve_mirror.py` reproduces the decision math instead.
+//!
+//! ```no_run
+//! use ta_moe::serve::{ServeBuilder, TraceKind};
+//! let mut sess = ServeBuilder::new()
+//!     .preset("tiny4")
+//!     .experts_per_dev(4)
+//!     .cluster("table1")
+//!     .policy_named("ta-moe")
+//!     .trace_kind(TraceKind::Bursty)
+//!     .cache_cap(2)
+//!     .build()
+//!     .unwrap();
+//! sess.run(10_000).unwrap();
+//! println!("goodput {:.1} tok/s", sess.goodput());
+//! ```
+
+pub mod batcher;
+pub mod cache;
+pub mod trace;
+
+pub use batcher::ContinuousBatcher;
+pub use cache::{CacheAccess, CachePolicy, ExpertCache};
+pub use trace::{Request, TraceConfig, TraceKind};
+
+use crate::comm::{A2aAlgo, CostEngine};
+use crate::coordinator::{
+    converged_counts, parse_policy, DispatchPolicy, ModelShape, PolicyInputs, StepProfile,
+    TaMoe, Workload, WorkloadCore, PLAN_CACHE_TOL,
+};
+use crate::metrics::{MigrationRecord, RequestRecord, RunLog, StepRecord};
+use crate::overlap::OverlapMode;
+use crate::placement::{Placement, PlacementConfig};
+use crate::runtime::ModelCfg;
+use crate::topology::Topology;
+use crate::util::{rng::Rng, Mat};
+use anyhow::Result;
+
+/// Seed salt separating the routing RNG stream from the trace RNG (the
+/// python mirror uses the same constant).
+pub const ROUTE_SEED_SALT: u64 = 0x5345_5256_45; // "SERVE"
+
+/// Builder for a [`ServeSession`] — same shape as
+/// [`crate::coordinator::SessionBuilder`], minus the backend (serving is
+/// pure pricing) plus the serve knobs: trace, cache, SLO, admission.
+pub struct ServeBuilder {
+    cfg: ModelCfg,
+    /// Unknown preset name, surfaced as an error at [`ServeBuilder::build`]
+    /// so the chain stays infallible.
+    preset_err: Option<String>,
+    experts_per_dev: Option<usize>,
+    topo: Option<Topology>,
+    cluster: Option<String>,
+    policy: Option<Box<dyn DispatchPolicy>>,
+    policy_spec: Option<String>,
+    a2a: Option<A2aAlgo>,
+    a2a_spec: Option<String>,
+    overlap: OverlapMode,
+    overlap_spec: Option<String>,
+    placement: Option<PlacementConfig>,
+    plan_cache_tol: f64,
+    flops_per_dev: f64,
+    trace: TraceConfig,
+    cache_cap: usize,
+    cache_policy: CachePolicy,
+    slo_ms: f64,
+    max_inflight_per_dev: usize,
+    zipf_s: f64,
+    label: Option<String>,
+}
+
+impl Default for ServeBuilder {
+    fn default() -> Self {
+        ServeBuilder {
+            cfg: ModelCfg::preset("tiny4").expect("tiny4 preset"),
+            preset_err: None,
+            experts_per_dev: None,
+            topo: None,
+            cluster: None,
+            policy: None,
+            policy_spec: None,
+            a2a: None,
+            a2a_spec: None,
+            overlap: OverlapMode::Serial,
+            overlap_spec: None,
+            placement: None,
+            plan_cache_tol: PLAN_CACHE_TOL,
+            flops_per_dev: 45e12,
+            trace: TraceConfig::default(),
+            cache_cap: 0,
+            cache_policy: CachePolicy::Lru,
+            slo_ms: 200.0,
+            max_inflight_per_dev: 8,
+            zipf_s: 1.0,
+            label: None,
+        }
+    }
+}
+
+impl ServeBuilder {
+    pub fn new() -> ServeBuilder {
+        ServeBuilder::default()
+    }
+
+    /// Model shape by preset name (see [`ModelCfg::preset_names`]).
+    pub fn preset(mut self, name: &str) -> Self {
+        match ModelCfg::preset(name) {
+            Some(cfg) => self.cfg = cfg,
+            None => self.preset_err = Some(name.to_string()),
+        }
+        self
+    }
+
+    /// Explicit model config (tests; sweeping shapes without presets).
+    pub fn model_cfg(mut self, cfg: ModelCfg) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Override experts hosted per device (the serving knob that creates
+    /// cache pressure; presets all ship `e_per_dev = 1`). Rewrites the
+    /// derived fields the same way `configs.py` does.
+    pub fn experts_per_dev(mut self, n: usize) -> Self {
+        self.experts_per_dev = Some(n);
+        self
+    }
+
+    /// Cluster preset name ("A" | "B" | "C" | "table1"), scaled to the
+    /// model's world size.
+    pub fn cluster(mut self, name: impl Into<String>) -> Self {
+        self.cluster = Some(name.into());
+        self
+    }
+
+    pub fn topology(mut self, topo: Topology) -> Self {
+        self.topo = Some(topo);
+        self
+    }
+
+    pub fn policy(mut self, policy: Box<dyn DispatchPolicy>) -> Self {
+        self.policy = Some(policy);
+        self
+    }
+
+    /// Policy by registry name ("ta-moe" | "deepspeed" | ...).
+    pub fn policy_named(mut self, spec: impl Into<String>) -> Self {
+        self.policy_spec = Some(spec.into());
+        self
+    }
+
+    pub fn a2a(mut self, algo: A2aAlgo) -> Self {
+        self.a2a = Some(algo);
+        self
+    }
+
+    pub fn a2a_named(mut self, spec: impl Into<String>) -> Self {
+        self.a2a_spec = Some(spec.into());
+        self
+    }
+
+    pub fn overlap(mut self, mode: OverlapMode) -> Self {
+        self.overlap = mode;
+        self
+    }
+
+    pub fn overlap_named(mut self, spec: impl Into<String>) -> Self {
+        self.overlap_spec = Some(spec.into());
+        self
+    }
+
+    /// Enable the live placement engine (None = canonical hosting).
+    pub fn placement(mut self, cfg: Option<PlacementConfig>) -> Self {
+        self.placement = cfg;
+        self
+    }
+
+    /// Placement with the default config at an attempt cadence.
+    pub fn placement_every(mut self, every: usize) -> Self {
+        self.placement = Some(PlacementConfig { every, ..Default::default() });
+        self
+    }
+
+    pub fn plan_cache_tol(mut self, tol: f64) -> Self {
+        self.plan_cache_tol = tol;
+        self
+    }
+
+    pub fn flops_per_dev(mut self, flops: f64) -> Self {
+        self.flops_per_dev = flops;
+        self
+    }
+
+    /// Full arrival-trace config (kind + rate + length + seed + shapes).
+    pub fn trace(mut self, cfg: TraceConfig) -> Self {
+        self.trace = cfg;
+        self
+    }
+
+    pub fn trace_kind(mut self, kind: TraceKind) -> Self {
+        self.trace.kind = kind;
+        self
+    }
+
+    pub fn rate_rps(mut self, rate: f64) -> Self {
+        self.trace.rate_rps = rate;
+        self
+    }
+
+    pub fn requests(mut self, n: usize) -> Self {
+        self.trace.n_requests = n;
+        self
+    }
+
+    /// Seed for both the trace and the routing draws (the routing stream
+    /// is salted with [`ROUTE_SEED_SALT`]).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.trace.seed = seed;
+        self
+    }
+
+    /// Resident experts per device (0 = unlimited, caching disabled).
+    pub fn cache_cap(mut self, cap: usize) -> Self {
+        self.cache_cap = cap;
+        self
+    }
+
+    pub fn cache_policy(mut self, policy: CachePolicy) -> Self {
+        self.cache_policy = policy;
+        self
+    }
+
+    /// TTFT deadline for [`ServeSession::goodput`], in milliseconds.
+    pub fn slo_ms(mut self, ms: f64) -> Self {
+        self.slo_ms = ms;
+        self
+    }
+
+    /// KV-cache slot budget: concurrent sequences per device.
+    pub fn max_inflight_per_dev(mut self, n: usize) -> Self {
+        self.max_inflight_per_dev = n;
+        self
+    }
+
+    /// Zipf exponent of the per-device expert popularity tilt (0 = the
+    /// policy's converged pattern unmodified).
+    pub fn zipf_s(mut self, s: f64) -> Self {
+        self.zipf_s = s;
+        self
+    }
+
+    pub fn label(mut self, label: impl Into<String>) -> Self {
+        self.label = Some(label.into());
+        self
+    }
+
+    /// Assemble the session: resolve topology/policy/a2a exactly like the
+    /// training builder, generate the trace, derive the routing matrix,
+    /// and wire the batcher + cache into a [`WorkloadCore`] running the
+    /// decode [`StepProfile`].
+    pub fn build(self) -> Result<ServeSession> {
+        if let Some(name) = self.preset_err {
+            anyhow::bail!(
+                "unknown model preset {name:?} (known: {:?})",
+                ModelCfg::preset_names()
+            );
+        }
+        let mut cfg = self.cfg;
+        if let Some(e) = self.experts_per_dev {
+            anyhow::ensure!(e > 0, "experts_per_dev must be >= 1");
+            cfg.e_per_dev = e;
+            cfg.n_experts = cfg.p * e;
+            // same formula as configs.py / ModelCfg::preset
+            let raw = (cfg.cap_factor * (cfg.k * cfg.tokens_per_dev * cfg.p) as f64
+                / cfg.n_experts as f64)
+                .ceil();
+            cfg.capacity = (raw as usize).div_ceil(8) * 8;
+        }
+
+        let topo = match (self.topo, self.cluster) {
+            (Some(t), _) => t,
+            (None, Some(c)) => crate::config::topology_for(&c, cfg.p),
+            (None, None) => crate::config::topology_for("C", cfg.p),
+        };
+        anyhow::ensure!(
+            topo.p() == cfg.p,
+            "topology has {} devices, model wants {}",
+            topo.p(),
+            cfg.p
+        );
+
+        let policy: Box<dyn DispatchPolicy> = match (self.policy, self.policy_spec) {
+            (Some(p), _) => p,
+            (None, Some(spec)) => parse_policy(&spec).map_err(anyhow::Error::msg)?,
+            (None, None) => Box::new(TaMoe::default()),
+        };
+        let a2a = match (self.a2a, self.a2a_spec) {
+            (Some(a), _) => a,
+            (None, Some(spec)) => spec.parse::<A2aAlgo>().map_err(anyhow::Error::msg)?,
+            (None, None) => policy.preferred_a2a(),
+        };
+        a2a.validate_for(topo.p()).map_err(anyhow::Error::msg)?;
+        let overlap = match self.overlap_spec {
+            Some(spec) => spec.parse::<OverlapMode>().map_err(anyhow::Error::msg)?,
+            None => self.overlap,
+        };
+        anyhow::ensure!(overlap != OverlapMode::Fixed(0), "overlap chunk count must be >= 1");
+        anyhow::ensure!(self.trace.n_requests > 0, "trace must carry at least one request");
+        anyhow::ensure!(self.slo_ms > 0.0, "SLO must be positive");
+
+        let inputs = policy.runtime_inputs(&topo, &cfg);
+        let route = route_matrix(&inputs, policy.as_ref(), &topo, &cfg, self.zipf_s);
+        let requests =
+            trace::generate(&self.trace);
+        let batcher = ContinuousBatcher::new(requests, cfg.p, self.max_inflight_per_dev);
+        let cache =
+            ExpertCache::new(cfg.p, cfg.e_per_dev, self.cache_cap, self.cache_policy);
+        let label = self.label.unwrap_or_else(|| {
+            format!("serve-{}/{}", self.trace.kind, policy.name())
+        });
+        let shape = ModelShape::from_cfg(&cfg);
+        let core = WorkloadCore::new(
+            topo,
+            shape,
+            a2a,
+            overlap,
+            self.flops_per_dev,
+            cfg.e_per_dev,
+            StepProfile::decode(),
+            self.plan_cache_tol,
+            self.placement,
+        );
+        let identity = Placement::identity(cfg.p, cfg.e_per_dev);
+        let rng = Rng::seed_from_u64(self.trace.seed ^ ROUTE_SEED_SALT);
+        Ok(ServeSession {
+            core,
+            policy,
+            cfg,
+            route,
+            cache,
+            batcher,
+            rng,
+            identity,
+            log: RunLog::new(&label, 0),
+            now_s: 0.0,
+            slo_s: self.slo_ms * 1e-3,
+            zipf_s: self.zipf_s,
+        })
+    }
+}
+
+/// Routing matrix: the policy's converged dispatch preference (the
+/// TA-MoE Eq. 7 target when the policy has one) tilted per source device
+/// by a Zipf popularity over each device's canonical expert block, rows
+/// normalised to draw weights. Skew is intrinsic to the canonical expert
+/// id, so migrating a hot expert moves its load with it.
+fn route_matrix(
+    inputs: &PolicyInputs,
+    policy: &dyn DispatchPolicy,
+    topo: &Topology,
+    cfg: &ModelCfg,
+    zipf_s: f64,
+) -> Mat {
+    let base = match &inputs.target {
+        Some(t) => t.c.clone(),
+        None => converged_counts(policy, topo, cfg),
+    };
+    let (p, n) = (cfg.p, cfg.n_experts);
+    let mut route = Mat::zeros(p, n);
+    for i in 0..p {
+        let row: Vec<f64> = (0..n)
+            .map(|e| {
+                let pop = (1.0 + (e % cfg.e_per_dev) as f64).powf(-zipf_s);
+                base.get(i, e).max(0.0) * pop
+            })
+            .collect();
+        let sum: f64 = row.iter().sum();
+        if sum > 0.0 {
+            for e in 0..n {
+                route.set(i, e, row[e] / sum);
+            }
+        } else {
+            for e in 0..n {
+                route.set(i, e, 1.0 / n as f64);
+            }
+        }
+    }
+    route
+}
+
+/// A continuous-batching serving run over one topology, one dispatch
+/// policy, and one arrival trace — the inference twin of
+/// [`crate::coordinator::Session`], priced on the same cluster clock.
+pub struct ServeSession {
+    core: WorkloadCore,
+    policy: Box<dyn DispatchPolicy>,
+    cfg: ModelCfg,
+    /// P×N per-device expert draw weights (rows sum to 1).
+    route: Mat,
+    cache: ExpertCache,
+    batcher: ContinuousBatcher,
+    rng: Rng,
+    /// Canonical hosting, used whenever the placement engine is off.
+    identity: Placement,
+    log: RunLog,
+    /// The simulated request clock (includes idle gaps between arrivals —
+    /// unlike the busy-time axis in [`RunLog::sim_time_axis`]).
+    now_s: f64,
+    slo_s: f64,
+    zipf_s: f64,
+}
+
+impl ServeSession {
+    /// One serving iteration: admit arrivals, sample the batch's routed
+    /// counts, let placement observe/migrate, charge cache misses, price
+    /// the decode step, advance the clock, retire finished requests.
+    pub fn step(&mut self) -> Result<StepRecord> {
+        anyhow::ensure!(!self.batcher.done(), "serve step on an exhausted trace");
+        // idle-skip: nothing in flight → jump the clock to the next
+        // arrival instead of simulating empty iterations
+        if self.batcher.inflight_len() == 0 {
+            if let Some(t) = self.batcher.next_arrival() {
+                self.now_s = self.now_s.max(t);
+            }
+        }
+        let admitted = self.batcher.admit(self.now_s);
+        let inflight = self.batcher.inflight_len();
+        let tokens = self.batcher.tokens_per_device();
+        let counts = self.sample_counts(&tokens);
+
+        // placement: fold loads, maybe migrate — on acceptance re-derive
+        // the routing for the new hosting and move cached weights with
+        // their experts
+        let mut migration_s = 0.0;
+        self.core.observe(&counts);
+        if let Some(m) = self.core.maybe_migrate(&counts) {
+            migration_s = m.cost_s;
+            let placement = self.core.placement().expect("migration implies placement");
+            let inputs =
+                self.policy.runtime_inputs_placed(self.core.topology(), &self.cfg, placement);
+            self.route =
+                route_matrix(&inputs, self.policy.as_ref(), self.core.topology(), &self.cfg, self.zipf_s);
+            self.cache.apply_migration(&m.moved, placement);
+            self.log.push_migration(MigrationRecord {
+                step: self.log.records.len(),
+                moved: m.moved.len(),
+                bytes: m.bytes,
+                cost_s: m.cost_s,
+                predicted_saving_s: m.predicted_saving_s,
+                realized_saving_s: m.realized_saving_s,
+            });
+        }
+
+        // expert-weight cache: misses stream weights home → host over the
+        // real links, priced by the same contention engine as migrations
+        let expert_bytes = self.core.shape().expert_param_bytes();
+        let access = {
+            let placement = self.core.placement().unwrap_or(&self.identity);
+            self.cache.access(&counts, placement, expert_bytes)
+        };
+        let fetch_s = if access.fetch_bytes.sum() > 0.0 {
+            CostEngine::contention(self.core.topology()).exchange_time(&access.fetch_bytes)
+        } else {
+            0.0
+        };
+
+        // price the iteration under the decode profile, with the token
+        // dimension set to the live batch's largest per-device bill
+        let mut shape = *self.core.shape();
+        shape.tokens_per_dev = tokens.iter().copied().max().unwrap_or(0).max(1);
+        let hits_before = self.core.plan_cache().hits();
+        let cost = self.core.price_with_shape(&shape, &counts);
+
+        self.now_s += cost.step_s() + fetch_s + migration_s;
+        let finished = self.batcher.advance(self.now_s);
+        for r in &finished {
+            self.log.push_request(r.clone());
+        }
+        self.log.cache_hits += access.hits as u64;
+        self.log.cache_misses += access.misses as u64;
+
+        let record = StepRecord {
+            step: self.log.records.len(),
+            sim_comm_s: cost.step_s() - cost.compute_s,
+            sim_compute_s: cost.compute_s,
+            sim_a2a_local_s: cost.a2a.local_s,
+            sim_a2a_intra_s: cost.a2a.intra_s,
+            sim_a2a_inter_s: cost.a2a.inter_s,
+            sim_serial_s: cost.serial_total(),
+            sim_a2a_exposed_s: cost.exposed_a2a_s,
+            chunks: cost.chunks,
+            plan_cached: self.core.plan_cache().hits() > hits_before,
+            sim_migration_s: migration_s,
+            sim_fetch_s: fetch_s,
+            inflight,
+            admitted,
+            finished: finished.len(),
+            cache_hits: access.hits,
+            cache_misses: access.misses,
+            ..Default::default()
+        };
+        self.log.plan_hits = self.core.plan_cache().hits();
+        self.log.plan_misses = self.core.plan_cache().misses();
+        self.log.push(record.clone());
+        Ok(record)
+    }
+
+    /// Each of device `i`'s tokens draws `k` experts from the routing
+    /// row, in fixed (device, token, draw) order — `python/serve_mirror.py`
+    /// replays the same stream.
+    fn sample_counts(&mut self, tokens: &[usize]) -> Mat {
+        let n = self.cfg.n_experts;
+        let mut counts = Mat::zeros(self.cfg.p, n);
+        for (dev, &t) in tokens.iter().enumerate() {
+            if t == 0 {
+                continue;
+            }
+            let row: Vec<f64> = (0..n).map(|e| self.route.get(dev, e)).collect();
+            for _ in 0..t {
+                for _ in 0..self.cfg.k {
+                    let e = self.rng.weighted(&row);
+                    counts.add_assign(dev, e, 1.0);
+                }
+            }
+        }
+        counts
+    }
+
+    /// Drive iterations until the trace is fully served (or `max_iters`
+    /// as a runaway stop).
+    pub fn run(&mut self, max_iters: usize) -> Result<()> {
+        let mut iters = 0;
+        while !self.batcher.done() {
+            anyhow::ensure!(iters < max_iters, "serve run exceeded {max_iters} iterations");
+            self.step()?;
+            iters += 1;
+        }
+        Ok(())
+    }
+
+    pub fn log(&self) -> &RunLog {
+        &self.log
+    }
+
+    /// Output tokens per busy-second from requests meeting the TTFT SLO.
+    pub fn goodput(&self) -> f64 {
+        self.log.goodput(self.slo_s)
+    }
+
+    pub fn slo_s(&self) -> f64 {
+        self.slo_s
+    }
+
+    pub fn a2a_algo(&self) -> A2aAlgo {
+        self.core.a2a_algo()
+    }
+
+    pub fn overlap_mode(&self) -> OverlapMode {
+        self.core.overlap_mode()
+    }
+
+    pub fn topology(&self) -> &Topology {
+        self.core.topology()
+    }
+
+    /// The simulated request clock (arrival time axis).
+    pub fn now_s(&self) -> f64 {
+        self.now_s
+    }
+
+    pub fn cache(&self) -> &ExpertCache {
+        &self.cache
+    }
+
+    pub fn model_cfg(&self) -> &ModelCfg {
+        &self.cfg
+    }
+
+    /// The live routing matrix (tests; the mirror checks its rows).
+    pub fn route(&self) -> &Mat {
+        &self.route
+    }
+
+    pub fn done(&self) -> bool {
+        self.batcher.done()
+    }
+}
+
+impl Workload for ServeSession {
+    fn step(&mut self) -> Result<StepRecord> {
+        ServeSession::step(self)
+    }
+
+    fn log(&self) -> &RunLog {
+        &self.log
+    }
+
+    fn core(&self) -> &WorkloadCore {
+        &self.core
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_builder() -> ServeBuilder {
+        ServeBuilder::new()
+            .preset("tiny4")
+            .cluster("table1")
+            .requests(24)
+            .seed(5)
+    }
+
+    #[test]
+    fn serves_a_whole_trace_deterministically() {
+        let mut a = quick_builder().build().unwrap();
+        let mut b = quick_builder().build().unwrap();
+        a.run(100_000).unwrap();
+        b.run(100_000).unwrap();
+        assert!(a.done());
+        assert_eq!(a.log().requests.len(), 24);
+        assert_eq!(b.log().requests.len(), 24);
+        for (x, y) in a.log().requests.iter().zip(&b.log().requests) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.finish_s, y.finish_s);
+        }
+        // every request finishes after it arrives, first token before last
+        for r in &a.log().requests {
+            assert!(r.first_token_s > r.arrival_s);
+            assert!(r.finish_s >= r.first_token_s);
+        }
+    }
+
+    #[test]
+    fn routing_rows_are_normalised_draw_weights() {
+        let sess = quick_builder().experts_per_dev(4).zipf_s(1.0).build().unwrap();
+        let route = sess.route();
+        assert_eq!((route.rows(), route.cols()), (4, 16));
+        for i in 0..4 {
+            let sum: f64 = (0..16).map(|e| route.get(i, e)).sum();
+            assert!((sum - 1.0).abs() < 1e-9, "row {i} sums to {sum}");
+            // Zipf tilt: within a device's canonical block, expert 0
+            // outweighs expert 3
+            assert!(route.get(i, 4 * i) > route.get(i, 4 * i + 3));
+        }
+    }
+
+    #[test]
+    fn constrained_cache_misses_cost_time() {
+        let run = |cap| {
+            let mut s = quick_builder()
+                .experts_per_dev(4)
+                .cache_cap(cap)
+                .build()
+                .unwrap();
+            s.run(100_000).unwrap();
+            let fetch: f64 = s.log().records.iter().map(|r| r.sim_fetch_s).sum();
+            (s.log().cache_hit_rate(), fetch)
+        };
+        let (rate_tight, fetch_tight) = run(1);
+        let (rate_loose, fetch_loose) = run(4);
+        assert!(rate_tight < rate_loose);
+        assert!(fetch_tight > fetch_loose);
+        // cap = e_per_dev → compulsory misses only, all local copies
+        let (rate_full, _) = run(4);
+        assert!(rate_full > 0.9, "hit rate {rate_full}");
+    }
+
+    #[test]
+    fn builder_rejects_nonsense() {
+        assert!(ServeBuilder::new().preset("gpt5_huge").build().is_err());
+        assert!(quick_builder().requests(0).build().is_err());
+        assert!(quick_builder().slo_ms(-1.0).build().is_err());
+        assert!(quick_builder().policy_named("nope").build().is_err());
+    }
+
+    #[test]
+    fn serve_summary_surfaces_slo_metrics() {
+        let mut s = quick_builder().experts_per_dev(2).cache_cap(1).build().unwrap();
+        s.run(100_000).unwrap();
+        let json = s.log().summary_json().to_string_compact();
+        for key in ["ttft_p99_s", "tpot_p50_s", "cache_hit_rate", "requests"] {
+            assert!(json.contains(key), "missing {key} in {json}");
+        }
+        assert!(s.goodput() >= 0.0);
+        assert!(s.log().ttft_percentile(99.0).unwrap() >= s.log().ttft_percentile(50.0).unwrap());
+    }
+}

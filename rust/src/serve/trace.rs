@@ -1,0 +1,257 @@
+//! Request-arrival trace generators for the serving simulator.
+//!
+//! Three processes, all seeded through [`crate::util::rng::Rng`] so a
+//! trace is a pure function of its [`TraceConfig`] (the python mirror
+//! `python/serve_mirror.py` reproduces them bit-for-bit):
+//!
+//! * [`TraceKind::Poisson`] — exponential inter-arrivals at `rate_rps`;
+//! * [`TraceKind::Bursty`] — a 2-state Markov-modulated Poisson process:
+//!   an ON state arriving at `BURST_HIGH_X · rate` and an OFF state at
+//!   `rate / BURST_LOW_DIV`, toggling with probability `BURST_SWITCH_P`
+//!   after each arrival (geometric sojourns). This is the trace the
+//!   acceptance scenario stresses caches with: bursts pile sequences up
+//!   and quiet spells let them drain;
+//! * [`TraceKind::Diurnal`] — a replayed diurnal curve: a Poisson process
+//!   thinned against `rate · (1 + DIURNAL_AMPL · sin(2πt / DIURNAL_PERIOD_S))`,
+//!   compressing a day's load shape into a simulable period.
+//!
+//! Per request the generator draws, in this fixed order: the
+//! inter-arrival gap (plus the thinning/state draws its process needs),
+//! the prompt length, then the output length — both uniform in
+//! `[mean/2, 3·mean/2)` (mirrorable with one `below` draw each).
+
+use crate::util::rng::Rng;
+
+/// Burst state multiplier / divisor / toggle probability of the MMPP.
+pub const BURST_HIGH_X: f64 = 4.0;
+pub const BURST_LOW_DIV: f64 = 4.0;
+pub const BURST_SWITCH_P: f64 = 0.08;
+/// Compressed "day" of the diurnal trace, and its modulation depth.
+pub const DIURNAL_PERIOD_S: f64 = 120.0;
+pub const DIURNAL_AMPL: f64 = 0.8;
+
+/// One inference request: when it arrives and how much work it carries.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Request {
+    /// Arrival time on the simulated clock, seconds from trace start.
+    pub arrival_s: f64,
+    /// Prompt tokens to prefill in the request's first iteration.
+    pub prompt_tokens: usize,
+    /// Output tokens to decode (≥ 1; the first is emitted by prefill).
+    pub output_tokens: usize,
+}
+
+/// Which arrival process generates the trace (CLI `--trace`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum TraceKind {
+    #[default]
+    Poisson,
+    Bursty,
+    Diurnal,
+}
+
+impl TraceKind {
+    /// All selectable traces, for `--list-modes` and sweeps.
+    pub const ALL: [TraceKind; 3] = [TraceKind::Poisson, TraceKind::Bursty, TraceKind::Diurnal];
+}
+
+impl std::fmt::Display for TraceKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            TraceKind::Poisson => "poisson",
+            TraceKind::Bursty => "bursty",
+            TraceKind::Diurnal => "diurnal",
+        })
+    }
+}
+
+impl std::str::FromStr for TraceKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<TraceKind, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "poisson" => Ok(TraceKind::Poisson),
+            "bursty" | "mmpp" => Ok(TraceKind::Bursty),
+            "diurnal" => Ok(TraceKind::Diurnal),
+            other => Err(format!("unknown trace {other:?} (poisson|bursty|diurnal)")),
+        }
+    }
+}
+
+/// Everything a trace is a function of.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceConfig {
+    pub kind: TraceKind,
+    /// Mean arrival rate in requests/second (of the unmodulated process).
+    pub rate_rps: f64,
+    /// Requests to generate.
+    pub n_requests: usize,
+    pub seed: u64,
+    /// Mean prompt length in tokens (lengths uniform in [m/2, 3m/2)).
+    pub prompt_mean: usize,
+    /// Mean output length in tokens (same distribution; min 1).
+    pub output_mean: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            kind: TraceKind::Poisson,
+            rate_rps: 8.0,
+            n_requests: 64,
+            seed: 0,
+            prompt_mean: 32,
+            output_mean: 16,
+        }
+    }
+}
+
+/// Generate the trace: `n_requests` requests in arrival order.
+pub fn generate(cfg: &TraceConfig) -> Vec<Request> {
+    assert!(cfg.rate_rps > 0.0, "arrival rate must be positive");
+    let mut rng = Rng::seed_from_u64(cfg.seed);
+    let mut t = 0.0;
+    let mut burst_on = false;
+    let mut out = Vec::with_capacity(cfg.n_requests);
+    for _ in 0..cfg.n_requests {
+        match cfg.kind {
+            TraceKind::Poisson => {
+                t += exp_gap(&mut rng, cfg.rate_rps);
+            }
+            TraceKind::Bursty => {
+                let rate = if burst_on {
+                    cfg.rate_rps * BURST_HIGH_X
+                } else {
+                    cfg.rate_rps / BURST_LOW_DIV
+                };
+                t += exp_gap(&mut rng, rate);
+                if rng.f64() < BURST_SWITCH_P {
+                    burst_on = !burst_on;
+                }
+            }
+            TraceKind::Diurnal => {
+                // thinning against the sinusoidal envelope: propose at the
+                // peak rate, accept with rate(t)/peak
+                let peak = cfg.rate_rps * (1.0 + DIURNAL_AMPL);
+                loop {
+                    t += exp_gap(&mut rng, peak);
+                    let rate_t = cfg.rate_rps
+                        * (1.0
+                            + DIURNAL_AMPL
+                                * (2.0 * std::f64::consts::PI * t / DIURNAL_PERIOD_S).sin());
+                    if rng.f64() * peak < rate_t {
+                        break;
+                    }
+                }
+            }
+        }
+        let prompt = span_sample(&mut rng, cfg.prompt_mean);
+        let output = span_sample(&mut rng, cfg.output_mean);
+        out.push(Request { arrival_s: t, prompt_tokens: prompt, output_tokens: output });
+    }
+    out
+}
+
+/// Exponential inter-arrival gap at `rate` (one `f64` draw).
+fn exp_gap(rng: &mut Rng, rate: f64) -> f64 {
+    -rng.f64().max(1e-300).ln() / rate
+}
+
+/// Uniform length in `[mean/2, 3·mean/2)`, at least 1 (one `below` draw).
+fn span_sample(rng: &mut Rng, mean: usize) -> usize {
+    let lo = (mean / 2).max(1);
+    let hi = (3 * mean).div_ceil(2).max(lo + 1);
+    rng.range(lo, hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kinds_round_trip_and_reject_garbage() {
+        for kind in TraceKind::ALL {
+            let spec = kind.to_string();
+            assert_eq!(spec.parse::<TraceKind>().unwrap(), kind, "{spec}");
+        }
+        assert!("weibull".parse::<TraceKind>().is_err());
+    }
+
+    #[test]
+    fn traces_are_deterministic_in_seed() {
+        for kind in TraceKind::ALL {
+            let cfg = TraceConfig { kind, seed: 42, ..Default::default() };
+            assert_eq!(generate(&cfg), generate(&cfg), "{kind}");
+            let other = TraceConfig { seed: 43, ..cfg };
+            assert_ne!(generate(&cfg), generate(&other), "{kind}");
+        }
+    }
+
+    #[test]
+    fn arrivals_are_sorted_and_lengths_in_band() {
+        for kind in TraceKind::ALL {
+            let cfg = TraceConfig { kind, n_requests: 200, seed: 7, ..Default::default() };
+            let trace = generate(&cfg);
+            assert_eq!(trace.len(), 200);
+            for w in trace.windows(2) {
+                assert!(w[1].arrival_s >= w[0].arrival_s, "{kind}");
+            }
+            for r in &trace {
+                assert!(r.prompt_tokens >= cfg.prompt_mean / 2, "{kind}");
+                assert!(r.prompt_tokens < 3 * cfg.prompt_mean, "{kind}");
+                assert!(r.output_tokens >= 1, "{kind}");
+            }
+        }
+    }
+
+    #[test]
+    fn golden_first_request_matches_the_python_mirror() {
+        // pinned in python/serve_mirror.py: same seed, same draw order,
+        // same IEEE-754 arithmetic
+        let cfg = TraceConfig {
+            kind: TraceKind::Poisson,
+            rate_rps: 20.0,
+            n_requests: 1,
+            seed: 42,
+            prompt_mean: 32,
+            output_mean: 16,
+        };
+        let r = generate(&cfg)[0];
+        assert_eq!(r.arrival_s.to_bits(), 0.1239285554529295f64.to_bits());
+        assert_eq!((r.prompt_tokens, r.output_tokens), (28, 18));
+    }
+
+    #[test]
+    fn poisson_mean_rate_is_close() {
+        let cfg = TraceConfig {
+            kind: TraceKind::Poisson,
+            rate_rps: 10.0,
+            n_requests: 2000,
+            seed: 3,
+            ..Default::default()
+        };
+        let trace = generate(&cfg);
+        let span = trace.last().unwrap().arrival_s;
+        let measured = trace.len() as f64 / span;
+        assert!((measured - 10.0).abs() < 1.0, "rate {measured}");
+    }
+
+    #[test]
+    fn bursty_has_heavier_gap_tail_than_poisson() {
+        // same mean-ish rate, but the MMPP mixes short ON gaps with long
+        // OFF gaps → higher gap variance
+        let n = 2000;
+        let var = |kind| {
+            let cfg =
+                TraceConfig { kind, rate_rps: 8.0, n_requests: n, seed: 11, ..Default::default() };
+            let tr = generate(&cfg);
+            let gaps: Vec<f64> =
+                tr.windows(2).map(|w| w[1].arrival_s - w[0].arrival_s).collect();
+            let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+            gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>()
+                / gaps.len() as f64
+                / (mean * mean) // squared coefficient of variation
+        };
+        assert!(var(TraceKind::Bursty) > var(TraceKind::Poisson) * 1.5);
+    }
+}

@@ -1,0 +1,295 @@
+//! Property tests for the serving subsystem: the quickselect percentile
+//! against a full-sort oracle, trace-generator determinism, expert-cache
+//! eviction invariants (hit rate monotone in capacity; a full-size cache
+//! takes only compulsory misses), and parse/Display round-trips for every
+//! user-facing mode spec.
+
+use std::str::FromStr;
+
+use ta_moe::comm::A2aAlgo;
+use ta_moe::metrics::percentile;
+use ta_moe::overlap::OverlapMode;
+use ta_moe::placement::Placement;
+use ta_moe::serve::{trace, CachePolicy, ExpertCache, TraceConfig, TraceKind};
+use ta_moe::util::rng::Rng;
+use ta_moe::util::Mat;
+
+// ---------------------------------------------------------------- percentile
+
+#[test]
+fn percentile_matches_the_sort_oracle() {
+    let mut rng = Rng::seed_from_u64(0xC0FFEE);
+    for trial in 0..200 {
+        let n = 1 + rng.below(97);
+        let xs: Vec<f64> = (0..n).map(|_| rng.f64() * 1e3 - 500.0).collect();
+        let mut sorted = xs.clone();
+        sorted.sort_by(f64::total_cmp);
+        for q in [0.0, 1.0, 25.0, 50.0, 90.0, 99.0, 100.0, rng.f64() * 100.0] {
+            let rank = ((q / 100.0 * n as f64).ceil() as usize).clamp(1, n);
+            let oracle = sorted[rank - 1];
+            assert_eq!(
+                percentile(&xs, q),
+                Some(oracle),
+                "trial {trial}: n={n} q={q}"
+            );
+        }
+    }
+}
+
+#[test]
+fn percentile_edge_cases() {
+    assert_eq!(percentile(&[], 50.0), None);
+    assert_eq!(percentile(&[7.0], 0.0), Some(7.0));
+    assert_eq!(percentile(&[7.0], 100.0), Some(7.0));
+    // out-of-range q clamps rather than panics
+    assert_eq!(percentile(&[1.0, 2.0], -5.0), Some(1.0));
+    assert_eq!(percentile(&[1.0, 2.0], 250.0), Some(2.0));
+    // duplicates are fine for the nearest-rank definition
+    assert_eq!(percentile(&[3.0, 3.0, 3.0], 50.0), Some(3.0));
+}
+
+// ------------------------------------------------------------------- traces
+
+fn trace_cfg(kind: TraceKind, seed: u64) -> TraceConfig {
+    TraceConfig {
+        kind,
+        rate_rps: 20.0,
+        n_requests: 64,
+        seed,
+        prompt_mean: 32,
+        output_mean: 16,
+    }
+}
+
+#[test]
+fn traces_are_seed_deterministic_and_seed_sensitive() {
+    for kind in TraceKind::ALL {
+        let a = trace::generate(&trace_cfg(kind, 7));
+        let b = trace::generate(&trace_cfg(kind, 7));
+        assert_eq!(a.len(), 64, "{kind}");
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival_s.to_bits(), y.arrival_s.to_bits(), "{kind}");
+            assert_eq!(x.prompt_tokens, y.prompt_tokens, "{kind}");
+            assert_eq!(x.output_tokens, y.output_tokens, "{kind}");
+        }
+        let c = trace::generate(&trace_cfg(kind, 8));
+        assert!(
+            a.iter().zip(&c).any(|(x, y)| x.arrival_s != y.arrival_s),
+            "{kind}: different seeds must give different arrivals"
+        );
+    }
+}
+
+#[test]
+fn traces_are_well_formed() {
+    for kind in TraceKind::ALL {
+        let reqs = trace::generate(&trace_cfg(kind, 3));
+        let mut prev = 0.0;
+        for r in &reqs {
+            assert!(r.arrival_s >= prev, "{kind}: arrivals must be sorted");
+            assert!(r.arrival_s.is_finite());
+            prev = r.arrival_s;
+            assert!(r.prompt_tokens >= 1);
+            assert!(r.output_tokens >= 1);
+            // spans are uniform in [mean/2, 3·mean/2)
+            assert!(r.prompt_tokens >= 16 && r.prompt_tokens < 48, "{kind}");
+            assert!(r.output_tokens >= 8 && r.output_tokens < 24, "{kind}");
+        }
+    }
+}
+
+/// Coefficient of variation of the inter-arrival gaps.
+fn gap_cv(arrivals: &[f64]) -> f64 {
+    let gaps: Vec<f64> = arrivals.windows(2).map(|w| w[1] - w[0]).collect();
+    let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+    let var =
+        gaps.iter().map(|g| (g - mean).powi(2)).sum::<f64>() / gaps.len() as f64;
+    var.sqrt() / mean
+}
+
+#[test]
+fn bursty_traces_are_burstier_than_poisson() {
+    // average the dispersion over several seeds so the test is not hostage
+    // to one draw; MMPP inter-arrival CV strictly exceeds the exponential's
+    let mut cv_poisson = 0.0;
+    let mut cv_bursty = 0.0;
+    for seed in 0..8 {
+        let mut cfg = trace_cfg(TraceKind::Poisson, seed);
+        cfg.n_requests = 256;
+        let arr: Vec<f64> =
+            trace::generate(&cfg).iter().map(|r| r.arrival_s).collect();
+        cv_poisson += gap_cv(&arr);
+        cfg.kind = TraceKind::Bursty;
+        let arr: Vec<f64> =
+            trace::generate(&cfg).iter().map(|r| r.arrival_s).collect();
+        cv_bursty += gap_cv(&arr);
+    }
+    assert!(
+        cv_bursty > cv_poisson,
+        "bursty CV {:.3} must exceed poisson CV {:.3}",
+        cv_bursty / 8.0,
+        cv_poisson / 8.0
+    );
+}
+
+// -------------------------------------------------------------------- cache
+
+/// Replay one random access stream against a cache of the given capacity
+/// and return (hits, misses, distinct experts touched). The stream itself
+/// is capacity-independent.
+fn replay(
+    policy: CachePolicy,
+    cap: usize,
+    seed: u64,
+    p: usize,
+    e: usize,
+) -> (u64, u64, u64) {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut cache = ExpertCache::new(p, e, cap, policy);
+    let pl = Placement::identity(p, e);
+    let mut touched = vec![false; p * e];
+    for _ in 0..60 {
+        let mut counts = Mat::zeros(p, p * e);
+        for d in 0..p {
+            for _ in 0..3 {
+                // zipf-flavoured stream: low expert ids run hot
+                let x = rng.below(p * e * (p * e + 1) / 2);
+                let mut acc = 0;
+                let mut pick = 0;
+                for cand in 0..p * e {
+                    acc += p * e - cand;
+                    if x < acc {
+                        pick = cand;
+                        break;
+                    }
+                }
+                counts.add_assign(d, pick, 1.0);
+                touched[pick] = true;
+            }
+        }
+        cache.access(&counts, &pl, 1.0);
+    }
+    let distinct = touched.iter().filter(|&&t| t).count() as u64;
+    (cache.total_hits(), cache.total_misses(), distinct)
+}
+
+#[test]
+fn cache_hit_rate_is_monotone_in_capacity_for_both_policies() {
+    let (p, e) = (4, 6);
+    for policy in CachePolicy::ALL {
+        for seed in [1, 42, 1234] {
+            let mut prev_hits = 0;
+            let mut accesses = None;
+            for cap in 1..=e {
+                let (hits, misses, _) = replay(policy, cap, seed, p, e);
+                // the access stream is cache-oblivious, so totals agree
+                match accesses {
+                    None => accesses = Some(hits + misses),
+                    Some(t) => assert_eq!(t, hits + misses, "{policy} cap={cap}"),
+                }
+                assert!(
+                    hits >= prev_hits,
+                    "{policy} seed={seed}: hits fell {prev_hits}->{hits} at cap={cap}"
+                );
+                prev_hits = hits;
+            }
+        }
+    }
+}
+
+#[test]
+fn full_capacity_takes_only_compulsory_misses() {
+    let (p, e) = (4, 6);
+    for policy in CachePolicy::ALL {
+        let (_, misses, touched) = replay(policy, e, 99, p, e);
+        // no expert is ever evicted at full capacity, so misses are
+        // exactly the compulsory first touches
+        assert_eq!(misses, touched, "{policy}");
+        assert!(touched > 0);
+        // and an over-provisioned cache changes nothing
+        let (_, misses_over, _) = replay(policy, e + 3, 99, p, e);
+        assert_eq!(misses, misses_over, "{policy}");
+    }
+}
+
+#[test]
+fn cap_zero_is_an_uncached_tier_with_no_misses() {
+    for policy in CachePolicy::ALL {
+        let (hits, misses, _) = replay(policy, 0, 5, 4, 6);
+        assert_eq!(misses, 0, "{policy}");
+        assert!(hits > 0, "{policy}");
+    }
+}
+
+#[test]
+fn eviction_respects_capacity_per_device() {
+    let (p, e, cap) = (2, 4, 2);
+    for policy in CachePolicy::ALL {
+        let mut cache = ExpertCache::new(p, e, cap, policy);
+        let pl = Placement::identity(p, e);
+        let mut rng = Rng::seed_from_u64(11);
+        for _ in 0..40 {
+            let mut counts = Mat::zeros(p, p * e);
+            for d in 0..p {
+                counts.add_assign(d, rng.below(p * e), 1.0);
+            }
+            cache.access(&counts, &pl, 1.0);
+            for dev in 0..p {
+                let resident = (0..p * e)
+                    .filter(|&x| pl.device_of(x) == dev && cache.is_resident(x))
+                    .count();
+                assert!(
+                    resident <= cap,
+                    "{policy}: device {dev} holds {resident} > cap {cap}"
+                );
+            }
+        }
+    }
+}
+
+// -------------------------------------------------------- spec round-trips
+
+#[test]
+fn a2a_specs_round_trip() {
+    for algo in A2aAlgo::ALL {
+        let spec = algo.to_string();
+        assert_eq!(A2aAlgo::from_str(&spec), Ok(algo), "{spec}");
+    }
+    assert!(A2aAlgo::from_str("carrier-pigeon").is_err());
+}
+
+#[test]
+fn overlap_specs_round_trip() {
+    for mode in [OverlapMode::Serial, OverlapMode::Fixed(1), OverlapMode::Fixed(7), OverlapMode::Auto] {
+        let spec = mode.to_string();
+        assert_eq!(OverlapMode::from_str(&spec), Ok(mode), "{spec}");
+    }
+    // "off" is the documented alias for the serial clock
+    assert_eq!(OverlapMode::from_str("off"), Ok(OverlapMode::Serial));
+    assert!(OverlapMode::from_str("k=0").is_err());
+    assert!(OverlapMode::from_str("sideways").is_err());
+}
+
+#[test]
+fn trace_specs_round_trip() {
+    for kind in TraceKind::ALL {
+        let spec = kind.to_string();
+        assert_eq!(TraceKind::from_str(&spec), Ok(kind), "{spec}");
+    }
+    // the queueing-theory name for the bursty generator is accepted too
+    assert_eq!(TraceKind::from_str("mmpp"), Ok(TraceKind::Bursty));
+    assert!(TraceKind::from_str("weibull").is_err());
+}
+
+#[test]
+fn cache_specs_round_trip() {
+    for policy in CachePolicy::ALL {
+        let spec = policy.to_string();
+        assert_eq!(CachePolicy::from_str(&spec), Ok(policy), "{spec}");
+    }
+    assert_eq!(
+        CachePolicy::from_str("ewma-prioritized"),
+        Ok(CachePolicy::EwmaPrioritized)
+    );
+    assert!(CachePolicy::from_str("fifo").is_err());
+}
