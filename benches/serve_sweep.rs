@@ -54,7 +54,7 @@ fn serve(
         })
         .cache_cap(cap)
         .cache_policy(cache)
-        .slo_ms(200.0)
+        .slo_s(0.2)
         .build()
         .unwrap();
     s.run(1_000_000).unwrap();

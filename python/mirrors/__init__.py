@@ -1,0 +1,35 @@
+"""Plain-python mirrors of the crate's priced decision math.
+
+The container that grows this repo has no rust toolchain (ROADMAP
+standing constraint), so every numerical subsystem ships a python
+mirror of its decision rules, validated by self-checks that run in CI
+and in this container. ``python/serve_mirror.py`` covers the serving
+stack (rng, traces, cache, batcher); this package covers the rest:
+
+* :mod:`mirrors.comm_pricing`     — α-β link pricing with contention and
+  the self-copy overlap convention (``rust/src/comm/engine.rs``);
+* :mod:`mirrors.bvn_refine`       — heaviest-first peeling and the
+  Kempe-style alternating-component refinement of round schedules
+  (``rust/src/comm/plan.rs``);
+* :mod:`mirrors.placement_gate`   — EWMA gate-load tracking and the
+  amortised migration accept/reject gate
+  (``rust/src/placement/engine.rs``);
+* :mod:`mirrors.overlap_autotune` — the chunk-count sweep and its
+  near-tie selection rule (``rust/src/overlap/autotune.rs``).
+
+``python/pallas_lint/mirror_registry.json`` pins each mirror symbol to
+the rust function it mirrors by token fingerprint: editing the priced
+rust function without re-validating its mirror fails the lint.
+
+Run any module directly (``python3 -m mirrors.comm_pricing``) for its
+self-check; each exits nonzero on the first violated invariant.
+"""
+
+from __future__ import annotations
+
+__all__ = [
+    "comm_pricing",
+    "bvn_refine",
+    "placement_gate",
+    "overlap_autotune",
+]

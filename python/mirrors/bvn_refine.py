@@ -1,0 +1,310 @@
+#!/usr/bin/env python3
+"""Mirror of the BvN round-schedule synthesis math (rust/src/comm/plan.rs).
+
+Ports the decision rules of the byte-matrix-aware schedule synthesiser:
+
+* ``peel_rounds`` — greedy heaviest-first maximal partial permutations,
+  with the exact tie-break (descending weight, then ascending
+  ``(src, dst)``) that makes peeling deterministic;
+* ``alternating_components`` — the component decomposition of two
+  partial permutations whose flips keep both rounds valid;
+* ``round_cost`` — max contended delivery time of a round under a live
+  link census, with the early-exit bound;
+* ``refine_rounds`` — the Kempe-style local search: flip components
+  between the most expensive round and cheaper ones, accepting iff
+  ``c_na + c_nb < budget * (1 - 1e-12)``, at most ``REFINE_SWEEPS``
+  sweeps. Monotone non-increasing by construction.
+
+Pricing runs through :mod:`mirrors.comm_pricing` (the engine mirror).
+Run ``python3 -m mirrors.bvn_refine`` for the self-check.
+"""
+
+from __future__ import annotations
+
+import sys
+from typing import List, Sequence, Tuple
+
+from mirrors.comm_pricing import (
+    Topology,
+    census_add,
+    census_sub,
+    contended_time,
+    two_node_tree,
+)
+
+Pair = Tuple[int, int]
+Round = List[Pair]
+
+REFINE_SWEEPS = 12  # plan.rs: bounded flips per candidate schedule
+
+
+def peel_rounds(pairs: List[Tuple[int, int, float]], p: int) -> List[Round]:
+    """Greedily peel (src, dst, weight) into maximal partial permutations,
+    heaviest first; ties broken by ascending (src, dst)."""
+    pairs = sorted(pairs, key=lambda e: (-e[2], e[0], e[1]))
+    rounds: List[Round] = []
+    while pairs:
+        send = [False] * p
+        recv = [False] * p
+        rnd: Round = []
+        rest: List[Tuple[int, int, float]] = []
+        for i, j, w in pairs:
+            if not send[i] and not recv[j]:
+                send[i] = True
+                recv[j] = True
+                rnd.append((i, j))
+            else:
+                rest.append((i, j, w))
+        rounds.append(rnd)
+        pairs = rest
+    return rounds
+
+
+def alternating_components(a: Round, b: Round, p: int) -> List[Tuple[Round, Round]]:
+    """Alternating components of two partial permutations.
+
+    Each component is ``(from_a, from_b)``; swapping a component's
+    deliveries between the rounds keeps every device at ≤1 send and ≤1
+    receive per round, and flips of distinct components compose.
+    """
+    NONE = -1
+    out_a = [NONE] * p
+    in_a = [NONE] * p
+    for k, (i, j) in enumerate(a):
+        out_a[i] = k
+        in_a[j] = k
+    out_b = [NONE] * p
+    in_b = [NONE] * p
+    for k, (i, j) in enumerate(b):
+        out_b[i] = k
+        in_b[j] = k
+    seen_a = [False] * len(a)
+    seen_b = [False] * len(b)
+    comps: List[Tuple[Round, Round]] = []
+    starts = [(True, k) for k in range(len(a))] + [(False, k) for k in range(len(b))]
+    for start in starts:
+        is_a0, k0 = start
+        if (is_a0 and seen_a[k0]) or (not is_a0 and seen_b[k0]):
+            continue
+        ca: Round = []
+        cb: Round = []
+        stack = [start]
+        while stack:
+            is_a, k = stack.pop()
+            if is_a:
+                if seen_a[k]:
+                    continue
+                seen_a[k] = True
+                i, j = a[k]
+                ca.append((i, j))
+                if out_b[i] != NONE:
+                    stack.append((False, out_b[i]))
+                if in_b[j] != NONE:
+                    stack.append((False, in_b[j]))
+            else:
+                if seen_b[k]:
+                    continue
+                seen_b[k] = True
+                i, j = b[k]
+                cb.append((i, j))
+                if out_a[i] != NONE:
+                    stack.append((True, out_a[i]))
+                if in_a[j] != NONE:
+                    stack.append((True, in_a[j]))
+        comps.append((ca, cb))
+    return comps
+
+
+def round_cost(
+    topo: Topology,
+    bytes_mat: Sequence[Sequence[float]],
+    census: Sequence[int],
+    pairs,
+    bound: float,
+) -> float:
+    """Max contended delivery time of ``pairs``, early-exiting at
+    ``bound`` (enough to reject a flip against the combined budget)."""
+    t = 0.0
+    for i, j in pairs:
+        if i == j:
+            continue
+        b = bytes_mat[i][j]
+        if b <= 0.0:
+            continue
+        t = max(t, contended_time(topo, census, i, j, b))
+        if t >= bound:
+            return t
+    return t
+
+
+def refine_rounds(
+    topo: Topology, bytes_mat: Sequence[Sequence[float]], rounds: List[Round]
+) -> List[Round]:
+    """Kempe-style local search over round schedules (plan.rs).
+
+    Flip alternating components between the most expensive round and a
+    cheaper one whenever the priced cost drops:
+    accept iff ``c_na + c_nb < budget * (1 - 1e-12)``. Monotone
+    non-increasing, so a rotation seed never gets worse.
+    """
+    p = topo.p
+    rounds = [r for r in rounds if any(i != j for i, j in r)]
+    n_slots = topo.n_slots()
+    live = lambda i, j: i != j and bytes_mat[i][j] > 0.0
+
+    states = []
+    for pairs in rounds:
+        census = [0] * n_slots
+        for i, j in pairs:
+            if live(i, j):
+                census_add(topo, census, i, j)
+        cost = round_cost(topo, bytes_mat, census, list(pairs), float("inf"))
+        states.append({"pairs": list(pairs), "census": census, "cost": cost})
+
+    for _ in range(REFINE_SWEEPS):
+        if not states:
+            break
+        a = max(range(len(states)), key=lambda k: states[k]["cost"])
+        if states[a]["cost"] <= 0.0:
+            break
+        order = sorted(
+            (k for k in range(len(states)) if k != a), key=lambda k: states[k]["cost"]
+        )
+        improved = False
+        for b in order:
+            sa, sb = states[a], states[b]
+            comps = alternating_components(sa["pairs"], sb["pairs"], p)
+            for ca, cb in comps:
+                if not ca and not cb:
+                    continue
+                budget = sa["cost"] + sb["cost"]
+                for i, j in ca:
+                    if live(i, j):
+                        census_sub(topo, sa["census"], i, j)
+                        census_add(topo, sb["census"], i, j)
+                for i, j in cb:
+                    if live(i, j):
+                        census_sub(topo, sb["census"], i, j)
+                        census_add(topo, sa["census"], i, j)
+                c_na = round_cost(
+                    topo,
+                    bytes_mat,
+                    sa["census"],
+                    [pr for pr in sa["pairs"] if pr not in ca] + list(cb),
+                    budget,
+                )
+                c_nb = (
+                    round_cost(
+                        topo,
+                        bytes_mat,
+                        sb["census"],
+                        [pr for pr in sb["pairs"] if pr not in cb] + list(ca),
+                        budget - c_na,
+                    )
+                    if c_na < budget
+                    else float("inf")
+                )
+                if c_na + c_nb < budget * (1.0 - 1e-12):
+                    sa["pairs"] = [pr for pr in sa["pairs"] if pr not in ca] + list(cb)
+                    sb["pairs"] = [pr for pr in sb["pairs"] if pr not in cb] + list(ca)
+                    sa["cost"] = c_na
+                    sb["cost"] = c_nb
+                    improved = True
+                else:
+                    for i, j in ca:
+                        if live(i, j):
+                            census_add(topo, sa["census"], i, j)
+                            census_sub(topo, sb["census"], i, j)
+                    for i, j in cb:
+                        if live(i, j):
+                            census_add(topo, sb["census"], i, j)
+                            census_sub(topo, sa["census"], i, j)
+            if improved:
+                break
+        if not improved:
+            break
+    return [s["pairs"] for s in states if s["pairs"]]
+
+
+# ----------------------------------------------------------- self-check
+
+
+def _is_partial_permutation(rnd: Round, p: int) -> bool:
+    return (
+        len({i for i, _ in rnd}) == len(rnd) and len({j for _, j in rnd}) == len(rnd)
+    )
+
+
+def _max_round_cost(topo, bytes_mat, rounds) -> float:
+    worst = 0.0
+    for rnd in rounds:
+        census = [0] * topo.n_slots()
+        for i, j in rnd:
+            if i != j and bytes_mat[i][j] > 0.0:
+                census_add(topo, census, i, j)
+        worst = max(worst, round_cost(topo, bytes_mat, census, rnd, float("inf")))
+    return worst
+
+
+def main() -> int:
+    p = 4
+    t = two_node_tree()
+
+    # -- peeling: heaviest first, deterministic tie-break --------------
+    pairs = [(0, 1, 3.0), (1, 0, 3.0), (0, 2, 5.0), (2, 3, 1.0), (1, 2, 5.0)]
+    rounds = peel_rounds(list(pairs), p)
+    assert rounds[0][0] == (0, 2), rounds  # weight 5, (0,2) < (1,2)
+    for rnd in rounds:
+        assert _is_partial_permutation(rnd, p), rnd
+    assert sorted((i, j) for r in rounds for (i, j) in r) == sorted(
+        (i, j) for i, j, _ in pairs
+    )
+
+    # -- components partition and preserve validity --------------------
+    a = [(0, 1), (1, 2), (2, 3)]
+    b = [(0, 2), (1, 3), (2, 1)]
+    comps = alternating_components(a, b, p)
+    assert sorted(pr for ca, _ in comps for pr in ca) == sorted(a)
+    assert sorted(pr for _, cb in comps for pr in cb) == sorted(b)
+    for ca, cb in comps:  # each flip keeps both rounds valid
+        na = [pr for pr in a if pr not in ca] + cb
+        nb = [pr for pr in b if pr not in cb] + ca
+        assert _is_partial_permutation(na, p) and _is_partial_permutation(nb, p)
+
+    # -- refinement: monotone, permutation-preserving ------------------
+    mb = 1e6
+    bytes_mat = [[0.0] * p for _ in range(p)]
+    # a heavy and a light cross-node delivery crowd the uplink in one
+    # round: the census doubles the heavy delivery's β, so moving the
+    # light one out is a strict improvement (with equal weights the split
+    # is cost-neutral under the flow census and correctly rejected)
+    bytes_mat[0][2] = 4 * mb
+    bytes_mat[1][3] = mb
+    bytes_mat[0][1] = mb
+    bytes_mat[2][3] = mb
+    seed = [[(0, 2), (1, 3)], [(0, 1), (2, 3)]]
+    before = _max_round_cost(t, bytes_mat, seed)
+    refined = refine_rounds(t, bytes_mat, [list(r) for r in seed])
+    after = _max_round_cost(t, bytes_mat, refined)
+    assert after < before, (before, after)
+    sent = sorted(pr for r in refined for pr in r)
+    assert sent == sorted(pr for r in seed for pr in r), "deliveries conserved"
+    for rnd in refined:
+        assert _is_partial_permutation(rnd, p), rnd
+
+    # the two heavy cross-node deliveries share the uplink census: the
+    # refiner must split them into different rounds
+    heavy_rounds = [
+        k for k, rnd in enumerate(refined) if (0, 2) in rnd or (1, 3) in rnd
+    ]
+    assert len(heavy_rounds) == 2 and heavy_rounds[0] != heavy_rounds[1], refined
+
+    # -- empty/self-only rounds are dropped ----------------------------
+    assert refine_rounds(t, bytes_mat, [[(0, 0), (1, 1)]]) == []
+
+    print("mirrors.bvn_refine: all self-checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,219 @@
+#!/usr/bin/env python3
+"""Mirror of the α-β communication cost engine (rust/src/comm/engine.rs).
+
+The rust engine prices a P×P byte matrix on a topology whose per-pair
+paths are lists of directed-link *slots* (``2*edge + dir``), each slot
+carrying an ``alpha`` (latency), ``beta`` (seconds/byte) and a
+``contended`` flag. The decision math mirrored here, IEEE-754 double
+semantics throughout:
+
+* ``contended_time`` — one delivery under a live flow census: α
+  accumulates along the path, the slowest hop's β is inflated by its
+  concurrent flows (non-contended point-to-point slots never are);
+* ``pair_times`` — the contention exchange model: census all live
+  cross-device deliveries, then price each pair against it;
+* ``exchange_time`` — completion time of the whole exchange. Self pairs
+  are local copies that overlap the network phase and contribute only
+  their excess: ``net + max(copy - net, 0)``.
+
+Run ``python3 -m mirrors.comm_pricing`` for the self-check.
+"""
+
+from __future__ import annotations
+
+import sys
+from typing import Dict, List, Sequence, Tuple
+
+
+class Topology:
+    """Slot-level view of a topology: per-pair slot paths + link tables.
+
+    ``paths[(i, j)]`` lists the directed-link slots a delivery i→j
+    crosses; self pairs use the local-copy constants instead.
+    """
+
+    def __init__(
+        self,
+        p: int,
+        paths: Dict[Tuple[int, int], Sequence[int]],
+        slot_alpha: Sequence[float],
+        slot_beta: Sequence[float],
+        slot_contended: Sequence[bool],
+        local_alpha: float,
+        local_beta: float,
+    ):
+        self.p = p
+        self.paths = paths
+        self.slot_alpha = list(slot_alpha)
+        self.slot_beta = list(slot_beta)
+        self.slot_contended = list(slot_contended)
+        self.local_alpha = local_alpha
+        self.local_beta = local_beta
+
+    def pair_slots(self, i: int, j: int) -> Sequence[int]:
+        return self.paths[(i, j)]
+
+    def n_slots(self) -> int:
+        return len(self.slot_alpha)
+
+    def pair_time(self, i: int, j: int, nbytes: float) -> float:
+        """Isolated delivery time: α_ij + β_ij · bytes (no contention)."""
+        if i == j:
+            return self.local_alpha + self.local_beta * nbytes
+        alpha = 0.0
+        beta = 0.0
+        for s in self.pair_slots(i, j):
+            alpha += self.slot_alpha[s]
+            beta = max(beta, self.slot_beta[s])
+        return alpha + beta * nbytes
+
+
+def census_add(topo: Topology, census: List[int], i: int, j: int) -> None:
+    for s in topo.pair_slots(i, j):
+        census[s] += 1
+
+
+def census_sub(topo: Topology, census: List[int], i: int, j: int) -> None:
+    for s in topo.pair_slots(i, j):
+        census[s] -= 1
+
+
+def contended_time(
+    topo: Topology, census: Sequence[int], i: int, j: int, nbytes: float
+) -> float:
+    """One delivery's time under a dense flow census (engine.rs).
+
+    α accumulates along the path; the slowest hop's β is inflated by its
+    concurrent flows. Non-contended point-to-point slots never contend.
+    """
+    alpha = 0.0
+    slow = 0.0
+    for s in topo.pair_slots(i, j):
+        flows = float(census[s]) if topo.slot_contended[s] else 1.0
+        alpha += topo.slot_alpha[s]
+        slow = max(slow, topo.slot_beta[s] * flows)
+    return alpha + slow * nbytes
+
+
+def pair_times(topo: Topology, bytes_mat: Sequence[Sequence[float]]) -> List[List[float]]:
+    """Per-pair delivery times of a full exchange (contention model)."""
+    p = topo.p
+    census = [0] * topo.n_slots()
+    for i in range(p):
+        for j in range(p):
+            if i != j and bytes_mat[i][j] > 0.0:
+                census_add(topo, census, i, j)
+    times = [[0.0] * p for _ in range(p)]
+    for i in range(p):
+        for j in range(p):
+            b = bytes_mat[i][j]
+            if b <= 0.0:
+                t = 0.0
+            elif i == j:
+                t = topo.pair_time(i, i, b)
+            else:
+                t = contended_time(topo, census, i, j, b)
+            times[i][j] = t
+    return times
+
+
+def exchange_time(topo: Topology, bytes_mat: Sequence[Sequence[float]]) -> float:
+    """Exchange completion time with the self-copy overlap convention.
+
+    The network phase is gated by cross-device deliveries only; a local
+    copy contributes just its excess over that phase:
+    ``net + max(copy - net, 0)`` (engine.rs ``exchange_time``).
+    """
+    times = pair_times(topo, bytes_mat)
+    net = 0.0
+    copy = 0.0
+    for i in range(topo.p):
+        for j in range(topo.p):
+            if i == j:
+                copy = max(copy, times[i][j])
+            else:
+                net = max(net, times[i][j])
+    return net + max(copy - net, 0.0)
+
+
+# ----------------------------------------------------------- self-check
+
+
+def two_node_tree() -> Topology:
+    """[2,2]: four devices, two leaf switches, one contended uplink pair.
+
+    Slots 0–7: device links up/down (dev d up = 2d, down = 2d+1), slots
+    8–11: switch uplinks (sw s up = 8+2s, down = 9+2s). A delivery
+    crosses: own device link up, [uplink up, peer uplink down when
+    crossing nodes], peer device link down.
+    """
+    dev_a, dev_b = 1e-6, 1e-11  # 100 GB/s device links
+    up_a, up_b = 5e-6, 1e-10  # 10 GB/s uplinks
+    slot_alpha = [dev_a] * 8 + [up_a] * 4
+    slot_beta = [dev_b] * 8 + [up_b] * 4
+    slot_contended = [True] * 12
+    node = lambda d: d // 2
+    paths = {}
+    for i in range(4):
+        for j in range(4):
+            if i == j:
+                continue
+            path = [2 * i]  # own device link up
+            if node(i) != node(j):
+                path.append(8 + 2 * node(i))  # own uplink up
+                path.append(9 + 2 * node(j))  # peer uplink down
+            path.append(2 * j + 1)  # peer device link down
+            paths[(i, j)] = path
+    return Topology(4, paths, slot_alpha, slot_beta, slot_contended, 0.0, 1e-12)
+
+
+def main() -> int:
+    t = two_node_tree()
+    mb = 1e6
+
+    # -- isolated pair: α sums along the path, slowest β gates ---------
+    one = [[0.0] * 4 for _ in range(4)]
+    one[0][2] = mb  # single cross-node delivery
+    got = exchange_time(t, one)
+    want = (1e-6 + 5e-6 + 5e-6 + 1e-6) + 1e-10 * mb
+    assert abs(got - want) < 1e-18, (got, want)
+
+    # -- contention: two deliveries share dev 0's uplink slot ----------
+    two = [[0.0] * 4 for _ in range(4)]
+    two[0][2] = mb
+    two[0][3] = mb
+    # both cross slot 8 (node-0 uplink up) AND slot 0 (dev-0 link up):
+    # census 2 inflates the slowest hop's β (uplink) to 2e-10. But note
+    # the send side serialises on slot 0 too — uplink stays the gate.
+    got = exchange_time(t, two)
+    want = (1e-6 + 5e-6 + 5e-6 + 1e-6) + (1e-10 * 2.0) * mb
+    assert abs(got - want) < 1e-18, (got, want)
+
+    # -- non-contended slots never inflate -----------------------------
+    t_pp = two_node_tree()
+    t_pp.slot_contended = [False] * 12
+    got = exchange_time(t_pp, two)
+    want = (1e-6 + 5e-6 + 5e-6 + 1e-6) + 1e-10 * mb
+    assert abs(got - want) < 1e-18, (got, want)
+
+    # -- self-copy convention: only the excess over the net phase ------
+    net_and_copy = [[0.0] * 4 for _ in range(4)]
+    net_and_copy[0][1] = mb  # intra-node: 2e-6 + 1e-11·1e6 = 1.2e-5
+    net_and_copy[2][2] = mb  # local copy: 1e-12·1e6 = 1e-6 < net → free
+    net = 2e-6 + 1e-11 * mb
+    got = exchange_time(t, net_and_copy)
+    assert abs(got - net) < 1e-18, (got, net)
+    net_and_copy[2][2] = 2e10  # slow copy: 2e-2 ≫ net → copy gates
+    got = exchange_time(t, net_and_copy)
+    want = net + (1e-12 * 2e10 - net)
+    assert abs(got - want) < 1e-18, (got, want)
+
+    # -- zero-byte pairs cost nothing ----------------------------------
+    assert exchange_time(t, [[0.0] * 4 for _ in range(4)]) == 0.0
+
+    print("mirrors.comm_pricing: all self-checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,85 @@
+#!/usr/bin/env python3
+"""Mirror of the chunk-count autotuner (rust/src/overlap/autotune.rs).
+
+The decision rule: sweep ``CHUNK_SWEEP``, price each pipeline with the
+caller-supplied ``cost_of(k)``, and keep the cheapest — where "cheaper"
+means beating the incumbent by more than 1e-9 relative
+(``cost < best * (1 - 1e-9)``), so near-ties keep the smaller ``k``
+(less launch/synchronisation overhead for the same clock). ``k = 1`` is
+in the sweep, so the winner never prices above the serial clock.
+
+Run ``python3 -m mirrors.overlap_autotune`` for the self-check.
+"""
+
+from __future__ import annotations
+
+import sys
+from typing import Callable, Tuple
+
+# overlap/chunk.rs: the candidate chunk counts
+CHUNK_SWEEP = (1, 2, 4, 8, 16)
+
+
+def autotune_k(cost_of: Callable[[int], float]) -> Tuple[int, float]:
+    """Sweep CHUNK_SWEEP and return ``(k, makespan_s)`` of the winner.
+
+    Selection is exactly autotune.rs: a candidate replaces the incumbent
+    iff ``cost < best * (1 - 1e-9)``; the sweep ascends, so ties and
+    near-ties resolve to the smaller chunk count.
+    """
+    best = None
+    for k in CHUNK_SWEEP:
+        cost = cost_of(k)
+        if best is None or cost < best[1] * (1.0 - 1e-9):
+            best = (k, cost)
+    assert best is not None, "CHUNK_SWEEP is non-empty"
+    return best
+
+
+# ----------------------------------------------------------- self-check
+
+
+def _pipeline_toy(alpha: float, volume_s: float, fixed_s: float) -> Callable[[int], float]:
+    """A toy chunked-pipeline clock with the real trade-off shape: each
+    of the k chunks re-pays the path latency α, the byte volume divides
+    by k and overlaps all but one chunk's worth with ``fixed_s``."""
+
+    def cost(k: int) -> float:
+        chunk_s = alpha + volume_s / k
+        return chunk_s + max(fixed_s, (k - 1) * chunk_s)
+
+    return cost
+
+
+def main() -> int:
+    # -- alpha-dominated steps stay serial -----------------------------
+    k, cost = autotune_k(_pipeline_toy(1.0, 0.01, 0.5))
+    assert k == 1, k
+    assert cost == _pipeline_toy(1.0, 0.01, 0.5)(1)
+
+    # -- bandwidth-dominated steps chunk, and beat serial --------------
+    price = _pipeline_toy(1e-4, 2.0, 2.0)
+    k, cost = autotune_k(price)
+    assert k > 1, k
+    assert cost < price(1)
+
+    # -- winner never prices above serial (k = 1 is in the sweep) ------
+    for args in [(0.5, 0.1, 0.2), (1e-3, 8.0, 4.0), (0.1, 0.1, 0.05)]:
+        price = _pipeline_toy(*args)
+        _, cost = autotune_k(price)
+        assert cost <= price(1) + 1e-18
+
+    # -- near-ties keep the smaller k ----------------------------------
+    k, _ = autotune_k(lambda k: 1.0)  # exact tie across the sweep
+    assert k == 1, k
+    k, _ = autotune_k(lambda k: 1.0 - (5e-10 if k == 4 else 0.0))
+    assert k == 1, "a 5e-10 relative win is inside the 1e-9 tie band"
+    k, _ = autotune_k(lambda k: 1.0 - (5e-9 if k == 4 else 0.0))
+    assert k == 4, "a 5e-9 relative win is a real improvement"
+
+    print("mirrors.overlap_autotune: all self-checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,106 @@
+#!/usr/bin/env python3
+"""Mirror of the placement engine's decision math
+(rust/src/placement/engine.rs, rust/src/placement/mod.rs).
+
+Three rules decide whether a live expert migration happens:
+
+* ``cadence_due`` — the engine only considers a move every
+  ``cfg.every`` steps (never at step 0, never when disabled);
+* ``GateLoadEwma`` — the load estimate the solver sees: the first
+  observation seeds the estimate directly (no decay toward the zero
+  init), then ``l = (1 - a)·l + a·c`` per step;
+* ``migration_gate`` — the amortisation accept/reject: a candidate
+  placement is applied iff its predicted per-step saving is positive
+  AND pays for the migration within the horizon:
+  reject iff ``saving_s <= 0 or saving_s * horizon < cost_s``.
+
+Run ``python3 -m mirrors.placement_gate`` for the self-check.
+"""
+
+from __future__ import annotations
+
+import sys
+from typing import List, Sequence
+
+
+def cadence_due(steps: int, every: int) -> bool:
+    """Whether `maybe_replace` even considers a candidate at this step."""
+    return every != 0 and steps != 0 and steps % every == 0
+
+
+class GateLoadEwma:
+    """EWMA over per-step dispatch counts (placement/mod.rs).
+
+    ``alpha`` is the weight of the newest observation (0 < alpha ≤ 1);
+    the first observation seeds the estimate directly.
+    """
+
+    def __init__(self, p: int, n_experts: int, alpha: float):
+        assert 0.0 < alpha <= 1.0, f"ewma alpha {alpha} out of (0, 1]"
+        self.loads: List[List[float]] = [[0.0] * n_experts for _ in range(p)]
+        self.alpha = alpha
+        self.steps = 0
+
+    def observe(self, counts: Sequence[Sequence[float]]) -> None:
+        assert len(counts) == len(self.loads)
+        assert all(len(r) == len(self.loads[0]) for r in counts)
+        if self.steps == 0:
+            self.loads = [list(row) for row in counts]
+        else:
+            a = self.alpha
+            for li, ci in zip(self.loads, counts):
+                for e in range(len(li)):
+                    li[e] = (1.0 - a) * li[e] + a * ci[e]
+        self.steps += 1
+
+
+def migration_gate(predicted_saving_s: float, horizon: float, cost_s: float) -> bool:
+    """The amortisation gate of `maybe_replace` (engine.rs).
+
+    True = migrate. The candidate must save time at all, and the saving
+    over ``horizon`` steps must cover the one-off migration cost — both
+    priced under the clock the session actually runs (a2a plan or
+    overlapped makespan), never the solver's search proxy.
+    """
+    if predicted_saving_s <= 0.0 or predicted_saving_s * horizon < cost_s:
+        return False
+    return True
+
+
+# ----------------------------------------------------------- self-check
+
+
+def main() -> int:
+    # -- cadence -------------------------------------------------------
+    assert not cadence_due(0, 8), "never at step 0"
+    assert not cadence_due(4, 8)
+    assert cadence_due(8, 8) and cadence_due(16, 8)
+    assert not cadence_due(8, 0), "every = 0 disables placement"
+
+    # -- EWMA: first observation seeds, then exponential decay ---------
+    ewma = GateLoadEwma(1, 2, 0.25)
+    ewma.observe([[8.0, 0.0]])
+    assert ewma.loads == [[8.0, 0.0]], "first observation seeds directly"
+    ewma.observe([[0.0, 8.0]])
+    assert ewma.loads == [[0.75 * 8.0, 0.25 * 8.0]], ewma.loads
+    ewma.observe([[0.0, 8.0]])
+    want0 = 0.75 * 0.75 * 8.0
+    want1 = 0.75 * (0.25 * 8.0) + 0.25 * 8.0
+    assert abs(ewma.loads[0][0] - want0) < 1e-15
+    assert abs(ewma.loads[0][1] - want1) < 1e-15
+    assert ewma.steps == 3
+
+    # -- amortisation gate ---------------------------------------------
+    assert migration_gate(1e-3, 100.0, 5e-2), "0.1s saved vs 0.05s cost"
+    assert not migration_gate(1e-3, 100.0, 2e-1), "does not amortise"
+    assert not migration_gate(0.0, 1e9, 0.0), "zero saving never migrates"
+    assert not migration_gate(-1e-3, 1e9, 0.0), "regressions never migrate"
+    # boundary: saving * horizon == cost_s is accepted (strict <)
+    assert migration_gate(1e-3, 100.0, 1e-1)
+
+    print("mirrors.placement_gate: all self-checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,27 @@
+"""pallas-lint: toolchain-free static analysis for the ta_moe crate.
+
+A stdlib-only python analyzer with a lightweight rust tokenizer and five
+rule families (DESIGN.md §static-analysis):
+
+* ``determinism``  — no unordered collections, wall clocks, or ambient
+  RNG in priced/decision modules.
+* ``units``        — ``_s``/``_bytes``/``_gbps`` suffix consistency
+  across struct fields, the CSV schema in ``metrics/mod.rs``, and
+  summary-JSON keys.
+* ``mirror``       — the declared registry of decision-math functions
+  must have python mirror counterparts, and a registered rust function
+  cannot change without the registry (and mirror) being touched.
+* ``ratchet``      — per-file ``unwrap``/``expect``/indexing budgets
+  pinned in a checked-in baseline that may only decrease.
+* ``structure``    — delimiter balance and pub-fn call-site
+  cross-reference, automating what PRs 1–6 verified by hand.
+
+Run ``python -m pallas_lint rust/src`` from the repo root. Exit code 0
+means zero findings. The container needs no cargo/rustc.
+"""
+
+from .findings import Finding
+from .runner import run_lint
+
+__version__ = "0.1.0"
+__all__ = ["Finding", "run_lint", "__version__"]

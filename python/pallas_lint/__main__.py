@@ -1,0 +1,86 @@
+"""CLI: ``python -m pallas_lint [paths] [options]``.
+
+Zero findings → exit 0. Designed for containers with no rust
+toolchain: the analyzer is stdlib-only python.
+
+Examples (from the repo root, ``PYTHONPATH=python``)::
+
+    python -m pallas_lint rust/src                 # full rule set
+    python -m pallas_lint --only structure rust/tests benches examples
+    python -m pallas_lint --list-registry          # mirror coverage map
+    python -m pallas_lint --write-baseline rust/src
+    python -m pallas_lint --update-fingerprints
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from . import __version__, rules_mirror, rules_ratchet
+from .runner import ALL_RULES, find_repo_root, run_lint
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="pallas_lint",
+        description="toolchain-free static analysis for the ta_moe crate",
+    )
+    ap.add_argument("paths", nargs="*", default=["rust/src"], help="files or directories to scan")
+    ap.add_argument(
+        "--only",
+        action="append",
+        metavar="RULE",
+        help=f"run only these rule families (repeatable; one of {sorted(ALL_RULES)})",
+    )
+    ap.add_argument(
+        "--write-baseline",
+        action="store_true",
+        help="regenerate panic_baseline.json from the scanned files",
+    )
+    ap.add_argument(
+        "--update-fingerprints",
+        action="store_true",
+        help="refresh mirror_registry.json fingerprints after re-validating mirrors",
+    )
+    ap.add_argument(
+        "--list-registry",
+        action="store_true",
+        help="print the mirror-coverage registry and exit",
+    )
+    ap.add_argument("--version", action="version", version=f"pallas-lint {__version__}")
+    args = ap.parse_args(argv)
+
+    if args.list_registry:
+        entries = rules_mirror.load_registry()
+        subsystems = sorted({e["subsystem"] for e in entries})
+        print(f"mirror-coverage registry: {len(entries)} entries, "
+              f"{len(subsystems)} subsystems")
+        for e in entries:
+            print(f"  [{e['subsystem']}] {e['rust_file']}::{e['rust_fn']}"
+                  f"  ->  {e['mirror_file']}::{e['mirror_symbol']}")
+        return 0
+
+    rules = set(args.only) if args.only else None
+    findings, files = run_lint(
+        args.paths, rules=rules, update_fingerprints=args.update_fingerprints
+    )
+
+    if args.write_baseline:
+        rules_ratchet.write_baseline(files)
+        print(f"pallas-lint: wrote panic baseline for {len(files)} files")
+        # re-run so the exit status reflects the fresh baseline
+        findings, _ = run_lint(args.paths, rules=rules)
+
+    for f in findings:
+        print(f.render())
+    n = len(findings)
+    scanned = len(files)
+    label = "finding" if n == 1 else "findings"
+    print(f"pallas-lint: {n} {label} in {scanned} files "
+          f"({', '.join(sorted(rules or ALL_RULES))})")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,81 @@
+"""Rule configuration: what counts as priced, canonical, or forbidden.
+
+Everything here is policy, not mechanism — the rule implementations
+live in ``rules_*.py``. Keep this file the single place a reviewer has
+to read to know what the linter enforces.
+"""
+
+from __future__ import annotations
+
+# Directories under rust/src whose code makes or prices decisions that
+# must be bit-reproducible across runs and machines. Wall clocks and
+# ambient RNG are forbidden here (determinism rule); unordered
+# collections are forbidden everywhere.
+PRICED_DIRS = {"comm", "coordinator", "placement", "overlap", "serve", "dispatch"}
+
+# Unordered std collections: iteration order varies per *instance*
+# (RandomState), so any fold/emission over them is nondeterministic.
+# BTreeMap/BTreeSet are the sanctioned replacements.
+UNORDERED_TYPES = {"HashMap", "HashSet"}
+
+# Wall-clock and ambient-RNG identifiers forbidden in PRICED_DIRS.
+WALL_CLOCKS = {"Instant", "SystemTime"}
+AMBIENT_RNG = {"thread_rng", "ThreadRng", "from_entropy", "OsRng"}
+
+# Canonical unit suffixes (ROADMAP standing constraint: every priced
+# quantity names its unit). Used by the metrics schema check.
+CANONICAL_SUFFIXES = ("_s", "_bytes", "_gbps", "_us", "_rps", "_flops")
+
+# Non-canonical unit spellings: a field/fn/key ending in one of these
+# drifts from the repo convention (seconds are `_s`, bytes `_bytes`,
+# bandwidth `_gbps`). Checked on struct fields, fn names, and
+# summary-JSON keys. Order matters: longest match wins over `_s`.
+FORBIDDEN_SUFFIXES = (
+    "_secs",
+    "_seconds",
+    "_sec",
+    "_millis",
+    "_ms",
+    "_mins",
+    "_nanos",
+    "_ns",
+    "_byte",
+    "_kb",
+    "_mb",
+    "_gb",
+    "_bps",
+    "_mbps",
+    "_gbit",
+)
+
+# metrics/mod.rs CSV schema: columns that do not literally equal their
+# StepRecord source field. Everything else must match the field name
+# exactly or be the field name minus the `sim_` prefix.
+CSV_ALIASES = {
+    "plan_hit": "plan_cached",  # bool emitted as 0/1
+    "sim_t": "t",  # cumulative time axis local, not a record field
+}
+
+# StepRecord fields intentionally absent from the CSV row.
+CSV_SKIPPED_FIELDS = {"wall_s"}
+
+# Mirror registry: the priced subsystems that must stay covered. The
+# registry json may add entries but can never drop below this set.
+REQUIRED_SUBSYSTEMS = {
+    "comm-pricing",
+    "bvn-refinement",
+    "placement-gate",
+    "overlap-autotune",
+    "serve-cache",
+    "serve-batcher",
+}
+
+# Inline allow directive, written in a comment on the finding's line or
+# the line directly above it:
+#
+#   // pallas-lint: allow(determinism) -- <justification, >= 10 chars>
+#
+# A directive without a justification is itself a finding (allowlist
+# rule): every exception must say why, inline, where reviewers read it.
+DIRECTIVE_MARKER = "pallas-lint:"
+MIN_JUSTIFICATION = 10

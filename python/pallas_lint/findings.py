@@ -1,0 +1,16 @@
+"""Finding type shared by every rule family."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True, order=True)
+class Finding:
+    path: str  # repo-relative, '/'-separated
+    line: int
+    rule: str  # determinism | units | mirror | ratchet | structure | allowlist
+    msg: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.msg}"

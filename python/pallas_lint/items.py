@@ -1,0 +1,219 @@
+"""Item extraction over the token stream: files, fns, structs, allows."""
+
+from __future__ import annotations
+
+import hashlib
+import re
+from typing import Dict, List, Optional, Set, Tuple
+
+from . import config
+from .findings import Finding
+from .rustlex import Comment, LexError, Tok, lex
+
+DIRECTIVE_RE = re.compile(
+    r"pallas-lint:\s*allow\(([a-z\-, ]+)\)\s*(?:--|—|:)?\s*(.*)"
+)
+
+OPEN = {"(": ")", "[": "]", "{": "}"}
+CLOSE = {")": "(", "]": "[", "}": "{"}
+
+
+class SourceFile:
+    """One lexed rust file plus its allow directives."""
+
+    def __init__(self, relpath: str, src: str):
+        self.relpath = relpath
+        self.src = src
+        self.toks, self.comments, self.errors = lex(src)
+        # line -> set of rules allowed there (directive line + next line)
+        self.allows: Dict[int, Set[str]] = {}
+        self.directive_findings: List[Finding] = []
+        self._parse_directives()
+
+    def _parse_directives(self) -> None:
+        for com in self.comments:
+            if config.DIRECTIVE_MARKER not in com.text:
+                continue
+            m = DIRECTIVE_RE.search(com.text)
+            if not m:
+                self.directive_findings.append(
+                    Finding(
+                        self.relpath,
+                        com.line,
+                        "allowlist",
+                        "malformed pallas-lint directive (expected "
+                        "`pallas-lint: allow(<rule>) -- <justification>`)",
+                    )
+                )
+                continue
+            rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+            justification = m.group(2).strip()
+            # multi-line justifications continue on following comment lines;
+            # accept them by looking at the raw comment only — require the
+            # directive line itself to carry the why
+            if len(justification) < config.MIN_JUSTIFICATION:
+                self.directive_findings.append(
+                    Finding(
+                        self.relpath,
+                        com.line,
+                        "allowlist",
+                        "pallas-lint allow directive without an inline "
+                        "justification (policy: every exception says why)",
+                    )
+                )
+                continue
+            last = com.line + com.text.count("\n")
+            for line in (com.line, last + 1):
+                self.allows.setdefault(line, set()).update(rules)
+
+    def allowed(self, line: int, rule: str) -> bool:
+        return rule in self.allows.get(line, ())
+
+
+def struct_fields(sf: SourceFile, struct_name: str) -> List[Tuple[str, int]]:
+    """Field names of `struct struct_name { .. }` in declaration order."""
+    toks = sf.toks
+    out: List[Tuple[str, int]] = []
+    for i, t in enumerate(toks):
+        if t.kind == "ident" and t.text == "struct":
+            if i + 1 < len(toks) and toks[i + 1].text == struct_name:
+                # find the opening brace (skip generics)
+                j = i + 2
+                while j < len(toks) and toks[j].text != "{":
+                    j += 1
+                depth = 0
+                expect_field = True
+                while j < len(toks):
+                    t2 = toks[j]
+                    if t2.text == "{":
+                        depth += 1
+                        if depth == 1:
+                            expect_field = True
+                    elif t2.text == "}":
+                        depth -= 1
+                        if depth == 0:
+                            return out
+                    elif depth == 1:
+                        if t2.text == ",":
+                            expect_field = True
+                        elif (
+                            expect_field
+                            and t2.kind == "ident"
+                            and t2.text != "pub"
+                            and j + 1 < len(toks)
+                            and toks[j + 1].text == ":"
+                            and (j + 2 >= len(toks) or toks[j + 2].text != ":")
+                        ):
+                            out.append((t2.text, t2.line))
+                            expect_field = False
+                    j += 1
+                return out
+    return out
+
+
+def all_struct_fields(sf: SourceFile) -> List[Tuple[str, int]]:
+    """(field, line) for every struct with named fields in the file."""
+    toks = sf.toks
+    out: List[Tuple[str, int]] = []
+    for i, t in enumerate(toks):
+        if t.kind == "ident" and t.text == "struct" and i + 1 < len(toks):
+            name = toks[i + 1]
+            if name.kind == "ident":
+                out.extend(struct_fields(sf, name.text))
+    # struct_fields re-scans from the top, so de-dup by (name, line)
+    return sorted(set(out), key=lambda x: x[1])
+
+
+def fn_names(sf: SourceFile) -> List[Tuple[str, int, bool]]:
+    """(name, line, is_pub) for every `fn` item/method in the file.
+
+    `is_pub` is true only for plain `pub fn` (not `pub(crate)`), i.e.
+    the crate's public API surface.
+    """
+    toks = sf.toks
+    out: List[Tuple[str, int, bool]] = []
+    for i, t in enumerate(toks):
+        if t.kind == "ident" and t.text == "fn" and i + 1 < len(toks):
+            name = toks[i + 1]
+            if name.kind != "ident":
+                continue
+            is_pub = i >= 1 and toks[i - 1].kind == "ident" and toks[i - 1].text == "pub"
+            out.append((name.text, name.line, is_pub))
+    return out
+
+
+def fn_token_span(sf: SourceFile, fn_name: str) -> Optional[Tuple[int, int]]:
+    """[start, end] token indices of `fn fn_name .. { .. }` (first match).
+
+    Starts at the `fn` keyword and ends at the matching close brace of
+    the body, so a signature or body edit always changes the span.
+    """
+    toks = sf.toks
+    for i, t in enumerate(toks):
+        if t.kind == "ident" and t.text == "fn":
+            if i + 1 < len(toks) and toks[i + 1].kind == "ident" and toks[i + 1].text == fn_name:
+                depth = 0
+                seen_body = False
+                j = i
+                while j < len(toks):
+                    txt = toks[j].text
+                    if txt == "{":
+                        depth += 1
+                        seen_body = True
+                    elif txt == "}":
+                        depth -= 1
+                        if seen_body and depth == 0:
+                            return (i, j)
+                    elif txt == ";" and not seen_body and depth == 0:
+                        return (i, j)  # bodyless (trait) fn
+                    j += 1
+                return (i, len(toks) - 1)
+    return None
+
+
+def fn_fingerprint(sf: SourceFile, fn_name: str) -> Optional[str]:
+    """sha256 over the fn's normalized token stream (whitespace- and
+    comment-insensitive, so formatting churn never invalidates it)."""
+    span = fn_token_span(sf, fn_name)
+    if span is None:
+        return None
+    i, j = span
+    blob = "\x1f".join(f"{t.kind}:{t.text}" for t in sf.toks[i : j + 1])
+    return hashlib.sha256(blob.encode("utf-8")).hexdigest()
+
+
+def delimiter_findings(sf: SourceFile) -> List[Finding]:
+    """Balance check over the token stream (strings/comments excluded)."""
+    out = [
+        Finding(sf.relpath, e.line, "structure", e.msg) for e in sf.errors
+    ]
+    stack: List[Tok] = []
+    for t in sf.toks:
+        if t.kind != "punct":
+            continue
+        if t.text in OPEN:
+            stack.append(t)
+        elif t.text in CLOSE:
+            if not stack or stack[-1].text != CLOSE[t.text]:
+                opener = stack[-1] if stack else None
+                ctx = (
+                    f" (innermost open `{opener.text}` at line {opener.line})"
+                    if opener
+                    else ""
+                )
+                out.append(
+                    Finding(
+                        sf.relpath,
+                        t.line,
+                        "structure",
+                        f"unbalanced `{t.text}`{ctx}",
+                    )
+                )
+                return out  # everything after is noise
+            stack.pop()
+    if stack:
+        t = stack[-1]
+        out.append(
+            Finding(sf.relpath, t.line, "structure", f"unclosed `{t.text}`")
+        )
+    return out

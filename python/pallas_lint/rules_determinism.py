@@ -1,0 +1,82 @@
+"""Rule family: determinism.
+
+Every pricing and routing decision in this repo is seeded and
+bit-exact (ROADMAP standing constraint); the benchmarks are only
+comparable because two runs of the same config produce the same
+numbers. Three mechanical hazards break that silently:
+
+* ``HashMap``/``HashSet`` — iteration order differs per *instance*
+  (each map draws its own ``RandomState``), so any fold, emission, or
+  first-wins assignment over one is nondeterministic. Forbidden in
+  every scanned file; ``BTreeMap``/``BTreeSet`` are the replacements.
+* ``Instant``/``SystemTime`` — wall clocks inside priced modules leak
+  host timing into decisions. Forbidden in ``PRICED_DIRS``.
+* ``thread_rng``/``from_entropy``/``OsRng`` — ambient RNG is unseeded
+  by construction. Forbidden in ``PRICED_DIRS`` (the repo's own
+  ``util::rng::Rng`` is the seeded alternative).
+
+Exceptions carry an inline ``pallas-lint: allow(determinism) -- why``
+directive; the one sanctioned pattern is observability-only wall-clock
+measurement that never feeds the simulated clock.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from . import config
+from .findings import Finding
+from .items import SourceFile
+
+
+def _in_priced_dir(relpath: str) -> bool:
+    parts = relpath.replace("\\", "/").split("/")
+    if "src" in parts:
+        parts = parts[parts.index("src") + 1 :]
+    return bool(parts) and parts[0] in config.PRICED_DIRS
+
+
+def check(sf: SourceFile) -> List[Finding]:
+    out: List[Finding] = []
+    priced = _in_priced_dir(sf.relpath)
+    for t in sf.toks:
+        if t.kind != "ident":
+            continue
+        if t.text in config.UNORDERED_TYPES:
+            if sf.allowed(t.line, "determinism"):
+                continue
+            out.append(
+                Finding(
+                    sf.relpath,
+                    t.line,
+                    "determinism",
+                    f"`{t.text}` iterates in per-instance random order; "
+                    "use BTreeMap/BTreeSet or sort before iterating "
+                    "(allow only for documented naive oracles)",
+                )
+            )
+        elif priced and t.text in config.WALL_CLOCKS:
+            if sf.allowed(t.line, "determinism"):
+                continue
+            out.append(
+                Finding(
+                    sf.relpath,
+                    t.line,
+                    "determinism",
+                    f"wall clock `{t.text}` in priced module; simulated "
+                    "time must come from the cost engine, not the host",
+                )
+            )
+        elif priced and t.text in config.AMBIENT_RNG:
+            if sf.allowed(t.line, "determinism"):
+                continue
+            out.append(
+                Finding(
+                    sf.relpath,
+                    t.line,
+                    "determinism",
+                    f"ambient RNG `{t.text}` in priced module; draw from "
+                    "the seeded util::rng::Rng instead",
+                )
+            )
+    return out

@@ -1,0 +1,140 @@
+"""Rule family: mirror coverage.
+
+The container that grows this repo has no rust toolchain, so every
+numerical subsystem ships with a plain-python mirror of its decision
+math (ROADMAP standing constraint; ``python/serve_mirror.py`` and
+``python/mirrors/``). This rule makes that ritual enforceable:
+
+``mirror_registry.json`` declares, per priced subsystem, which rust
+function is the decision math, which python symbol mirrors it, and a
+fingerprint of the rust function's token stream. The check fails when
+
+* a registered rust function or python mirror symbol no longer exists,
+* a registered rust function's tokens changed but the registry was not
+  updated — i.e. a priced function changed without anyone re-validating
+  its mirror (run ``python -m pallas_lint --update-fingerprints`` after
+  updating the mirror), or
+* the registry drops below the required subsystem set (comm pricing,
+  BvN refinement, placement gate, overlap autotune, serve cache,
+  serve batcher).
+"""
+
+from __future__ import annotations
+
+import ast
+import json
+import os
+from typing import Dict, List
+
+from . import config
+from .findings import Finding
+from .items import SourceFile, fn_fingerprint
+
+REGISTRY_FILE = os.path.join(os.path.dirname(__file__), "mirror_registry.json")
+
+
+def load_registry(path: str = REGISTRY_FILE) -> List[Dict[str, str]]:
+    with open(path, "r", encoding="utf-8") as f:
+        return json.load(f)["entries"]
+
+
+def save_registry(entries: List[Dict[str, str]], path: str = REGISTRY_FILE) -> None:
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump({"entries": entries}, f, indent=2, sort_keys=False)
+        f.write("\n")
+
+
+def _python_symbols(py_path: str) -> set:
+    """Top-level functions/classes and `Class.method` names of a file."""
+    with open(py_path, "r", encoding="utf-8") as f:
+        tree = ast.parse(f.read(), filename=py_path)
+    syms = set()
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            syms.add(node.name)
+        elif isinstance(node, ast.ClassDef):
+            syms.add(node.name)
+            for sub in node.body:
+                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    syms.add(f"{node.name}.{sub.name}")
+    return syms
+
+
+def check(repo_root: str, update_fingerprints: bool = False) -> List[Finding]:
+    out: List[Finding] = []
+    try:
+        entries = load_registry(REGISTRY_FILE)
+    except (OSError, ValueError, KeyError) as e:
+        return [Finding("python/pallas_lint/mirror_registry.json", 1, "mirror", f"unreadable registry: {e}")]
+
+    subsystems = {e.get("subsystem", "") for e in entries}
+    missing = config.REQUIRED_SUBSYSTEMS - subsystems
+    if missing:
+        out.append(
+            Finding(
+                "python/pallas_lint/mirror_registry.json",
+                1,
+                "mirror",
+                f"registry no longer covers required subsystems: {sorted(missing)}",
+            )
+        )
+
+    dirty = False
+    for e in entries:
+        where = f"{e['subsystem']}: {e['rust_file']}::{e['rust_fn']}"
+        rust_path = os.path.join(repo_root, e["rust_file"])
+        if not os.path.isfile(rust_path):
+            out.append(Finding(e["rust_file"], 1, "mirror", f"{where}: rust file missing"))
+            continue
+        with open(rust_path, "r", encoding="utf-8") as f:
+            sf = SourceFile(e["rust_file"], f.read())
+        fp = fn_fingerprint(sf, e["rust_fn"])
+        if fp is None:
+            out.append(
+                Finding(
+                    e["rust_file"],
+                    1,
+                    "mirror",
+                    f"{where}: registered fn not found — priced decision "
+                    "math moved without updating the mirror registry",
+                )
+            )
+            continue
+        if update_fingerprints:
+            if e.get("fingerprint") != fp:
+                e["fingerprint"] = fp
+                dirty = True
+        elif e.get("fingerprint") != fp:
+            out.append(
+                Finding(
+                    e["rust_file"],
+                    1,
+                    "mirror",
+                    f"{where}: fingerprint changed — the priced function "
+                    f"was edited; re-validate `{e['mirror_file']}::"
+                    f"{e['mirror_symbol']}` against it, then run "
+                    "`python -m pallas_lint --update-fingerprints`",
+                )
+            )
+
+        py_path = os.path.join(repo_root, e["mirror_file"])
+        if not os.path.isfile(py_path):
+            out.append(Finding(e["mirror_file"], 1, "mirror", f"{where}: mirror file missing"))
+            continue
+        try:
+            syms = _python_symbols(py_path)
+        except SyntaxError as ex:
+            out.append(Finding(e["mirror_file"], ex.lineno or 1, "mirror", f"mirror does not parse: {ex.msg}"))
+            continue
+        if e["mirror_symbol"] not in syms:
+            out.append(
+                Finding(
+                    e["mirror_file"],
+                    1,
+                    "mirror",
+                    f"{where}: mirror symbol `{e['mirror_symbol']}` missing",
+                )
+            )
+    if update_fingerprints and dirty:
+        save_registry(entries)
+    return out

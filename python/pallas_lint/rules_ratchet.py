@@ -1,0 +1,101 @@
+"""Rule family: panic-path ratchet.
+
+``unwrap``/``expect``/direct indexing are panic paths: fine where an
+invariant genuinely holds, corrosive when they accrete. Instead of
+litigating each one, the linter pins today's per-file counts in
+``panic_baseline.json`` and enforces a ratchet: a file's count may
+only stay or go down. New files start at budget 0 unless the baseline
+is regenerated (``--write-baseline``) in the same PR that adds them —
+which shows up in review as a diff to the checked-in baseline.
+
+Counted mechanically on the token stream:
+
+* ``unwrap`` / ``expect`` call tokens (any receiver),
+* index expressions — a ``[`` directly following an identifier, ``)``
+  or ``]`` (attribute ``#[..]`` and macro ``vec![..]`` forms excluded).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+from .findings import Finding
+from .items import SourceFile
+
+BASELINE_FILE = os.path.join(os.path.dirname(__file__), "panic_baseline.json")
+
+COUNTERS = ("unwrap", "expect", "index")
+
+
+def count_panics(sf: SourceFile) -> Dict[str, int]:
+    toks = sf.toks
+    counts = {c: 0 for c in COUNTERS}
+    for i, t in enumerate(toks):
+        if t.kind == "ident" and t.text in ("unwrap", "expect"):
+            if i + 1 < len(toks) and toks[i + 1].text == "(":
+                counts[t.text] += 1
+        elif t.kind == "punct" and t.text == "[" and i >= 1:
+            prev = toks[i - 1]
+            if prev.kind == "ident" or prev.text in (")", "]"):
+                if i >= 2 and toks[i - 2].text == "#":
+                    continue  # attribute #[...]
+                counts["index"] += 1
+    return counts
+
+
+def load_baseline(path: str = BASELINE_FILE) -> Dict[str, Dict[str, int]]:
+    with open(path, "r", encoding="utf-8") as f:
+        return json.load(f)
+
+
+def write_baseline(files: List[SourceFile], path: str = BASELINE_FILE) -> None:
+    data = {sf.relpath: count_panics(sf) for sf in sorted(files, key=lambda s: s.relpath)}
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def check(files: List[SourceFile], baseline_path: str = BASELINE_FILE) -> List[Finding]:
+    out: List[Finding] = []
+    try:
+        baseline = load_baseline(baseline_path)
+    except (OSError, ValueError) as e:
+        return [
+            Finding(
+                "python/pallas_lint/panic_baseline.json",
+                1,
+                "ratchet",
+                f"unreadable panic baseline: {e} (regenerate with --write-baseline)",
+            )
+        ]
+    for sf in files:
+        counts = count_panics(sf)
+        budget = baseline.get(sf.relpath)
+        if budget is None:
+            if any(counts.values()):
+                out.append(
+                    Finding(
+                        sf.relpath,
+                        1,
+                        "ratchet",
+                        f"file not in panic baseline but has panic paths "
+                        f"{counts}; add it via --write-baseline (reviewed "
+                        "as a baseline diff)",
+                    )
+                )
+            continue
+        for c in COUNTERS:
+            if counts[c] > budget.get(c, 0):
+                out.append(
+                    Finding(
+                        sf.relpath,
+                        1,
+                        "ratchet",
+                        f"panic-path ratchet: {c} count {counts[c]} exceeds "
+                        f"the pinned budget {budget.get(c, 0)} — handle the "
+                        "error or tighten the invariant instead",
+                    )
+                )
+    return out

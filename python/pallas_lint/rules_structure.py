@@ -1,0 +1,79 @@
+"""Rule family: structure.
+
+Automates the two checks every previous PR ran by hand in lieu of a
+compiler (CHANGES.md, PRs 1–6):
+
+* **delimiter balance** — parens/brackets/braces must balance per file,
+  with strings, char literals, lifetimes, and (nested) comments lexed
+  properly so they can't fool the count. Catches the gross syntax
+  slips a missing toolchain would otherwise let through.
+* **call-site cross-reference** — every plain ``pub fn`` in the scanned
+  tree must be referenced somewhere else in the repo's rust corpus
+  (``rust/``, ``benches/``, ``examples/``): a public function nobody
+  calls or tests is either dead API or a wiring mistake (the
+  cross-reference PRs 1–6 performed manually after each refactor).
+  ``main`` and trait-required methods referenced via their trait
+  declaration pass naturally (the trait's ``fn`` name counts as a
+  reference).
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Dict, List
+
+from .findings import Finding
+from .items import SourceFile, delimiter_findings, fn_names
+from .rustlex import lex
+
+CROSSREF_EXEMPT = {"main"}
+
+
+def check_file(sf: SourceFile) -> List[Finding]:
+    return delimiter_findings(sf)
+
+
+def _ident_counts(path: str) -> Dict[str, int]:
+    with open(path, "r", encoding="utf-8") as f:
+        toks, _, _ = lex(f.read())
+    counts: Dict[str, int] = {}
+    for t in toks:
+        if t.kind == "ident":
+            counts[t.text] = counts.get(t.text, 0) + 1
+    return counts
+
+
+def crossref(files: List[SourceFile], repo_root: str) -> List[Finding]:
+    """Flag pub fns whose name appears nowhere beyond its definition."""
+    # reference corpus: every .rs file under the repo's rust trees
+    corpus: Dict[str, int] = {}
+    for sub in ("rust", "benches", "examples"):
+        base = os.path.join(repo_root, sub)
+        for dirpath, _dirs, names in os.walk(base):
+            for name in sorted(names):
+                if name.endswith(".rs"):
+                    for ident, c in _ident_counts(os.path.join(dirpath, name)).items():
+                        corpus[ident] = corpus.get(ident, 0) + c
+
+    out: List[Finding] = []
+    for sf in files:
+        for name, line, is_pub in fn_names(sf):
+            if not is_pub or name in CROSSREF_EXEMPT:
+                continue
+            if sf.allowed(line, "structure"):
+                continue
+            # the definition itself contributes exactly one occurrence;
+            # anything beyond it (call, trait decl, re-export, test) is
+            # a reference
+            if corpus.get(name, 0) < 2:
+                out.append(
+                    Finding(
+                        sf.relpath,
+                        line,
+                        "structure",
+                        f"pub fn `{name}` has no call sites or references "
+                        "anywhere in rust/, benches/, or examples/ — dead "
+                        "API or missed wiring",
+                    )
+                )
+    return out

@@ -1,0 +1,273 @@
+"""Rule family: units.
+
+The repo's naming convention (DESIGN.md): every quantity carries its
+unit as a suffix — seconds are ``_s``, byte counts ``_bytes``,
+bandwidths ``_gbps`` (with ``_us``/``_rps``/``_flops`` where natural).
+Two checks enforce it:
+
+* **naming** — struct fields and fn names must not use drifting unit
+  spellings (``_ms``, ``_secs``, ``_byte``, ``_gb``, …). One spelling
+  per unit keeps CSV columns, JSON keys, and code greppable as one
+  vocabulary.
+* **metrics schema** — ``metrics/mod.rs`` must declare the CSV schema
+  as machine-checkable consts (``CSV_HEADER`` + ``CSV_SCHEMA``
+  column→field pairs). The header, the schema, the ``StepRecord``
+  field order, and the actual ``write_csv`` row emission are
+  cross-checked token-by-token, so a column can no longer drift from
+  the field it claims to print — the bug class PRs 2–6 guarded against
+  by hand.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import List, Optional, Tuple
+
+from . import config
+from .findings import Finding
+from .items import SourceFile, all_struct_fields, fn_names, fn_token_span, struct_fields
+
+SNAKE_RE = re.compile(r"^[a-z][a-z0-9_]*$")
+
+
+def _forbidden_suffix(name: str) -> Optional[str]:
+    for suf in config.FORBIDDEN_SUFFIXES:
+        if name.endswith(suf):
+            return suf
+    return None
+
+
+def _const_str(sf: SourceFile, const_name: str) -> Optional[Tuple[str, int]]:
+    toks = sf.toks
+    for i, t in enumerate(toks):
+        if t.kind == "ident" and t.text == const_name and i >= 1:
+            if toks[i - 1].kind == "ident" and toks[i - 1].text == "const":
+                for j in range(i + 1, min(i + 12, len(toks))):
+                    if toks[j].kind == "str":
+                        return toks[j].text, toks[j].line
+    return None
+
+
+def _const_str_pairs(sf: SourceFile, const_name: str) -> Optional[Tuple[List[Tuple[str, str]], int]]:
+    toks = sf.toks
+    for i, t in enumerate(toks):
+        if t.kind == "ident" and t.text == const_name and i >= 1:
+            if toks[i - 1].kind == "ident" and toks[i - 1].text == "const":
+                strs: List[str] = []
+                j = i + 1
+                while j < len(toks) and toks[j].text != ";":
+                    if toks[j].kind == "str":
+                        strs.append(toks[j].text)
+                    j += 1
+                pairs = list(zip(strs[0::2], strs[1::2]))
+                return pairs, t.line
+    return None
+
+
+def _unescape_header(raw: str) -> str:
+    # a `\` before a newline is rust's string continuation: it swallows
+    # the newline and leading whitespace of the next line
+    return re.sub(r"\\\n\s*", "", raw)
+
+
+def _field_refs_in_fn(sf: SourceFile, fn: str, receiver: str = "r") -> List[str]:
+    span = fn_token_span(sf, fn)
+    if span is None:
+        return []
+    toks = sf.toks
+    refs: List[str] = []
+    for k in range(span[0], span[1] - 1):
+        if (
+            toks[k].kind == "ident"
+            and toks[k].text == receiver
+            and toks[k + 1].text == "."
+            and toks[k + 2].kind == "ident"
+        ):
+            refs.append(toks[k + 2].text)
+    return refs
+
+
+def _col_matches_field(col: str, field: str) -> bool:
+    if config.CSV_ALIASES.get(col) == field:
+        return True
+    return field == col or field == "sim_" + col
+
+
+def _suffixes_agree(col: str, field: str) -> bool:
+    if config.CSV_ALIASES.get(col) == field:
+        return True  # documented aliases own their naming
+    for suf in config.CANONICAL_SUFFIXES:
+        if col.endswith(suf) != field.endswith(suf):
+            return False
+    return True
+
+
+def check(sf: SourceFile) -> List[Finding]:
+    out: List[Finding] = []
+
+    # -- naming: one spelling per unit, everywhere ---------------------
+    for name, line in all_struct_fields(sf):
+        suf = _forbidden_suffix(name)
+        if suf and not sf.allowed(line, "units"):
+            out.append(
+                Finding(
+                    sf.relpath,
+                    line,
+                    "units",
+                    f"field `{name}` uses non-canonical unit suffix "
+                    f"`{suf}` (canonical: {', '.join(config.CANONICAL_SUFFIXES)})",
+                )
+            )
+    for name, line, _pub in fn_names(sf):
+        suf = _forbidden_suffix(name)
+        if suf and not sf.allowed(line, "units"):
+            out.append(
+                Finding(
+                    sf.relpath,
+                    line,
+                    "units",
+                    f"fn `{name}` uses non-canonical unit suffix `{suf}`",
+                )
+            )
+
+    # -- metrics CSV/JSON schema ---------------------------------------
+    if sf.relpath.replace("\\", "/").endswith("metrics/mod.rs"):
+        out.extend(_check_metrics_schema(sf))
+    return out
+
+
+def _check_metrics_schema(sf: SourceFile) -> List[Finding]:
+    out: List[Finding] = []
+    header = _const_str(sf, "CSV_HEADER")
+    schema = _const_str_pairs(sf, "CSV_SCHEMA")
+    if header is None or schema is None:
+        out.append(
+            Finding(
+                sf.relpath,
+                1,
+                "units",
+                "metrics module must declare `CSV_HEADER` and "
+                "`CSV_SCHEMA` consts (the machine-checkable CSV schema)",
+            )
+        )
+        return out
+    header_raw, header_line = header
+    pairs, schema_line = schema
+    cols = _unescape_header(header_raw).split(",")
+
+    if cols != [c for c, _ in pairs]:
+        out.append(
+            Finding(
+                sf.relpath,
+                header_line,
+                "units",
+                f"CSV_HEADER columns {cols} do not match CSV_SCHEMA "
+                f"columns {[c for c, _ in pairs]}",
+            )
+        )
+
+    fields = [f for f, _ in struct_fields(sf, "StepRecord")]
+    for col, field in pairs:
+        if not _col_matches_field(col, field):
+            out.append(
+                Finding(
+                    sf.relpath,
+                    schema_line,
+                    "units",
+                    f"CSV column `{col}` maps to `{field}`, which is "
+                    "neither the field name, `sim_`+column, nor a "
+                    "declared alias",
+                )
+            )
+        if not _suffixes_agree(col, field):
+            out.append(
+                Finding(
+                    sf.relpath,
+                    schema_line,
+                    "units",
+                    f"CSV column `{col}` and source field `{field}` "
+                    "disagree on unit suffix",
+                )
+            )
+        if field != "t" and field not in fields:
+            out.append(
+                Finding(
+                    sf.relpath,
+                    schema_line,
+                    "units",
+                    f"CSV_SCHEMA references `{field}`, not a StepRecord field",
+                )
+            )
+
+    # schema field order must follow StepRecord declaration order, and
+    # every record field is either emitted or explicitly skipped
+    schema_fields = [f for _, f in pairs if f != "t"]
+    idx = {f: i for i, f in enumerate(fields)}
+    positions = [idx[f] for f in schema_fields if f in idx]
+    if positions != sorted(positions):
+        out.append(
+            Finding(
+                sf.relpath,
+                schema_line,
+                "units",
+                "CSV column order does not follow StepRecord field order",
+            )
+        )
+    for f in fields:
+        if f not in schema_fields and f not in config.CSV_SKIPPED_FIELDS:
+            out.append(
+                Finding(
+                    sf.relpath,
+                    schema_line,
+                    "units",
+                    f"StepRecord field `{f}` is missing from CSV_SCHEMA "
+                    "(add it or list it in CSV_SKIPPED_FIELDS)",
+                )
+            )
+
+    # the row actually written must be the schema, in order
+    refs = _field_refs_in_fn(sf, "write_csv")
+    if refs != schema_fields:
+        out.append(
+            Finding(
+                sf.relpath,
+                schema_line,
+                "units",
+                f"write_csv emits fields {refs} but CSV_SCHEMA declares "
+                f"{schema_fields}",
+            )
+        )
+
+    # summary-JSON keys: snake_case, canonical unit vocabulary
+    span = fn_token_span(sf, "summary_json")
+    if span is not None:
+        toks = sf.toks
+        for k in range(span[0], span[1] - 3):
+            if (
+                toks[k].kind == "ident"
+                and toks[k].text == "insert"
+                and toks[k + 1].text == "("
+                and toks[k + 2].kind == "str"
+            ):
+                key, line = toks[k + 2].text, toks[k + 2].line
+                if not SNAKE_RE.match(key):
+                    out.append(
+                        Finding(
+                            sf.relpath,
+                            line,
+                            "units",
+                            f"summary-JSON key `{key}` is not snake_case",
+                        )
+                    )
+                suf = _forbidden_suffix(key)
+                if suf and not sf.allowed(line, "units"):
+                    out.append(
+                        Finding(
+                            sf.relpath,
+                            line,
+                            "units",
+                            f"summary-JSON key `{key}` uses non-canonical "
+                            f"unit suffix `{suf}`",
+                        )
+                    )
+    return out

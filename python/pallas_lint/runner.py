@@ -1,0 +1,106 @@
+"""Scan orchestration: discover files, run rule families, collect findings."""
+
+from __future__ import annotations
+
+import os
+from typing import Iterable, List, Optional, Sequence, Set, Tuple
+
+from . import (
+    rules_determinism,
+    rules_mirror,
+    rules_ratchet,
+    rules_structure,
+    rules_units,
+)
+from .findings import Finding
+from .items import SourceFile
+
+ALL_RULES = {"determinism", "units", "mirror", "ratchet", "structure"}
+
+
+def find_repo_root(start: str) -> str:
+    cur = os.path.abspath(start)
+    if os.path.isfile(cur):
+        cur = os.path.dirname(cur)
+    while True:
+        if os.path.isfile(os.path.join(cur, "Cargo.toml")):
+            return cur
+        parent = os.path.dirname(cur)
+        if parent == cur:
+            raise SystemExit(f"pallas-lint: no Cargo.toml above {start}")
+        cur = parent
+
+
+def discover(paths: Sequence[str]) -> List[str]:
+    out: List[str] = []
+    for p in paths:
+        if os.path.isfile(p) and p.endswith(".rs"):
+            out.append(os.path.abspath(p))
+        elif os.path.isdir(p):
+            for dirpath, _dirs, names in os.walk(p):
+                for name in sorted(names):
+                    if name.endswith(".rs"):
+                        out.append(os.path.abspath(os.path.join(dirpath, name)))
+        else:
+            raise SystemExit(f"pallas-lint: no such path {p}")
+    return sorted(set(out))
+
+
+def load_files(abs_paths: Iterable[str], repo_root: str) -> List[SourceFile]:
+    files: List[SourceFile] = []
+    for ap in abs_paths:
+        rel = os.path.relpath(ap, repo_root).replace(os.sep, "/")
+        with open(ap, "r", encoding="utf-8") as f:
+            files.append(SourceFile(rel, f.read()))
+    return files
+
+
+def run_lint(
+    paths: Sequence[str],
+    rules: Optional[Set[str]] = None,
+    repo_root: Optional[str] = None,
+    update_fingerprints: bool = False,
+    baseline_path: Optional[str] = None,
+    registry_path: Optional[str] = None,
+) -> Tuple[List[Finding], List[SourceFile]]:
+    rules = set(rules) if rules else set(ALL_RULES)
+    unknown = rules - ALL_RULES
+    if unknown:
+        raise SystemExit(f"pallas-lint: unknown rule families {sorted(unknown)}")
+    root = repo_root or find_repo_root(paths[0] if paths else ".")
+    files = load_files(discover(paths), root)
+
+    findings: List[Finding] = []
+    for sf in files:
+        # malformed/unjustified allow directives are findings regardless
+        # of which families run — an allowlist is policy, not a loophole
+        findings.extend(sf.directive_findings)
+        if "structure" in rules:
+            findings.extend(rules_structure.check_file(sf))
+        if "determinism" in rules:
+            findings.extend(rules_determinism.check(sf))
+        if "units" in rules:
+            findings.extend(rules_units.check(sf))
+    if "structure" in rules:
+        findings.extend(rules_structure.crossref(files, root))
+    if "ratchet" in rules:
+        findings.extend(
+            rules_ratchet.check(files, baseline_path or rules_ratchet.BASELINE_FILE)
+        )
+    if "mirror" in rules:
+        findings.extend(
+            _run_mirror(root, update_fingerprints, registry_path)
+        )
+    return sorted(set(findings)), files
+
+
+def _run_mirror(root: str, update: bool, registry_path: Optional[str]) -> List[Finding]:
+    if registry_path is None:
+        return rules_mirror.check(root, update)
+    # test seam: point the rule at an alternate registry
+    orig = rules_mirror.REGISTRY_FILE
+    rules_mirror.REGISTRY_FILE = registry_path
+    try:
+        return rules_mirror.check(root, update)
+    finally:
+        rules_mirror.REGISTRY_FILE = orig

@@ -1,0 +1,173 @@
+"""A lightweight rust lexer: just enough to analyze, never to compile.
+
+Produces a flat token stream with line numbers, the comment list (for
+allow directives), and lexical errors (unterminated strings/comments —
+surfaced by the ``structure`` rule). Comments and string/char literal
+*contents* never appear in the token stream, so a ``HashMap`` mentioned
+in a doc comment or a format string can never trip a rule.
+
+Handled rust lexical forms: line + nested block comments, string
+literals with escapes, raw (byte) strings ``r#".."#`` at any hash
+depth, byte strings, char literals vs lifetimes, identifiers, numbers,
+and single-char punctuation.
+"""
+
+from __future__ import annotations
+
+from typing import List, NamedTuple, Tuple
+
+IDENT_START = set("abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ_")
+IDENT_CONT = IDENT_START | set("0123456789")
+DIGITS = set("0123456789")
+
+
+class Tok(NamedTuple):
+    kind: str  # "ident" | "num" | "str" | "char" | "life" | "punct"
+    text: str
+    line: int
+
+
+class Comment(NamedTuple):
+    line: int  # line the comment starts on
+    text: str  # comment body without the // or /* */ fences
+
+
+class LexError(NamedTuple):
+    line: int
+    msg: str
+
+
+def lex(src: str) -> Tuple[List[Tok], List[Comment], List[LexError]]:
+    toks: List[Tok] = []
+    comments: List[Comment] = []
+    errors: List[LexError] = []
+    i, n, line = 0, len(src), 1
+
+    def bump_lines(text: str) -> None:
+        nonlocal line
+        line += text.count("\n")
+
+    while i < n:
+        c = src[i]
+        if c == "\n":
+            line += 1
+            i += 1
+            continue
+        if c in " \t\r":
+            i += 1
+            continue
+        # comments
+        if src.startswith("//", i):
+            end = src.find("\n", i)
+            end = n if end == -1 else end
+            comments.append(Comment(line, src[i + 2 : end]))
+            i = end
+            continue
+        if src.startswith("/*", i):
+            start_line = line
+            depth, j = 1, i + 2
+            while j < n and depth > 0:
+                if src.startswith("/*", j):
+                    depth += 1
+                    j += 2
+                elif src.startswith("*/", j):
+                    depth -= 1
+                    j += 2
+                else:
+                    if src[j] == "\n":
+                        line += 1
+                    j += 1
+            if depth > 0:
+                errors.append(LexError(start_line, "unterminated block comment"))
+            comments.append(Comment(start_line, src[i + 2 : max(i + 2, j - 2)]))
+            i = j
+            continue
+        # raw strings r".."  r#".."#  br#".."# (any hash depth)
+        if c in "rb":
+            j = i
+            if src[j] == "b":
+                j += 1
+            if j < n and src[j] == "r":
+                k = j + 1
+                hashes = 0
+                while k < n and src[k] == "#":
+                    hashes += 1
+                    k += 1
+                if k < n and src[k] == '"':
+                    close = '"' + "#" * hashes
+                    end = src.find(close, k + 1)
+                    if end == -1:
+                        errors.append(LexError(line, "unterminated raw string"))
+                        i = n
+                        continue
+                    toks.append(Tok("str", src[k + 1 : end], line))
+                    bump_lines(src[i : end + len(close)])
+                    i = end + len(close)
+                    continue
+        # plain / byte strings
+        if c == '"' or (c == "b" and i + 1 < n and src[i + 1] == '"'):
+            j = i + (2 if c == "b" else 1)
+            start_line = line
+            buf = []
+            while j < n and src[j] != '"':
+                if src[j] == "\\" and j + 1 < n:
+                    if src[j + 1] == "\n":
+                        line += 1
+                    buf.append(src[j : j + 2])
+                    j += 2
+                    continue
+                if src[j] == "\n":
+                    line += 1
+                buf.append(src[j])
+                j += 1
+            if j >= n:
+                errors.append(LexError(start_line, "unterminated string literal"))
+            toks.append(Tok("str", "".join(buf), start_line))
+            i = j + 1
+            continue
+        # char literal vs lifetime
+        if c == "'":
+            if i + 1 < n and src[i + 1] == "\\":
+                j = i + 2
+                if j < n and src[j] == "\n":
+                    line += 1
+                j += 1
+                # \u{...} and multi-char escapes: scan to the closing quote
+                while j < n and src[j] != "'":
+                    j += 1
+                if j >= n:
+                    errors.append(LexError(line, "unterminated char literal"))
+                toks.append(Tok("char", src[i + 1 : j], line))
+                i = j + 1
+                continue
+            if i + 2 < n and src[i + 2] == "'":
+                toks.append(Tok("char", src[i + 1], line))
+                i += 3
+                continue
+            # lifetime: 'ident (no closing quote)
+            j = i + 1
+            while j < n and src[j] in IDENT_CONT:
+                j += 1
+            toks.append(Tok("life", src[i + 1 : j], line))
+            i = j
+            continue
+        # identifiers
+        if c in IDENT_START:
+            j = i + 1
+            while j < n and src[j] in IDENT_CONT:
+                j += 1
+            toks.append(Tok("ident", src[i:j], line))
+            i = j
+            continue
+        # numbers (no '.' so range expressions like 0..p stay punctuation)
+        if c in DIGITS:
+            j = i + 1
+            while j < n and src[j] in IDENT_CONT:
+                j += 1
+            toks.append(Tok("num", src[i:j], line))
+            i = j
+            continue
+        toks.append(Tok("punct", c, line))
+        i += 1
+
+    return toks, comments, errors

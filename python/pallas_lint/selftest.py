@@ -1,0 +1,293 @@
+"""pallas-lint's own test suite (stdlib unittest, no toolchain).
+
+Fixture rust snippets with known violations pin every rule family's
+behavior — what fires, what the allowlist suppresses, and the exact
+golden findings — plus the end-to-end acceptance run: the real crate
+must lint clean with the checked-in baseline and registry.
+
+Run ``python3 -m pallas_lint.selftest`` (CI `static-analysis` job).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import unittest
+
+from . import rules_determinism, rules_mirror, rules_ratchet, rules_structure, rules_units
+from .items import SourceFile, fn_fingerprint, fn_names, struct_fields
+from .runner import find_repo_root, run_lint
+from .rustlex import lex
+
+REPO = find_repo_root(os.path.dirname(__file__))
+
+
+def sf(src: str, relpath: str = "rust/src/comm/fixture.rs") -> SourceFile:
+    return SourceFile(relpath, src)
+
+
+class LexerTest(unittest.TestCase):
+    def kinds(self, src):
+        toks, _, errs = lex(src)
+        self.assertEqual(errs, [])
+        return [(t.kind, t.text) for t in toks]
+
+    def test_strings_comments_chars_lifetimes(self):
+        src = r'''
+// line comment with HashMap
+/* block /* nested */ still comment Instant */
+let s = "str with } brace \" esc";
+let r = r#"raw "with" quotes }"#;
+let b = b"bytes";
+let c = '}';
+let esc = '\n';
+let lt: &'static str = "x";
+'''
+        toks = self.kinds(src)
+        # no comment text leaks into the identifier stream
+        self.assertNotIn(("ident", "HashMap"), toks)
+        self.assertNotIn(("ident", "Instant"), toks)
+        # braces inside strings/chars don't count as delimiters
+        f = sf(src)
+        self.assertEqual(rules_structure.check_file(f), [])
+        # char vs lifetime disambiguation
+        self.assertIn(("char", "}"), toks)
+        self.assertIn(("char", "\\n"), toks)
+        self.assertIn(("life", "static"), toks)
+
+    def test_unbalanced_delimiters_are_findings(self):
+        f = sf("fn broken() { let x = (1 + 2; }\n")
+        found = rules_structure.check_file(f)
+        self.assertEqual(len(found), 1)
+        self.assertEqual(found[0].rule, "structure")
+        f = sf("fn unclosed() { let v = vec![1, 2;\n")
+        self.assertTrue(rules_structure.check_file(f))
+
+
+class DeterminismTest(unittest.TestCase):
+    def test_unordered_types_flagged_everywhere(self):
+        f = sf("use std::collections::HashMap;\n", "rust/src/util/x.rs")
+        found = rules_determinism.check(f)
+        self.assertEqual([x.rule for x in found], ["determinism"])
+        self.assertIn("HashMap", found[0].msg)
+
+    def test_wall_clock_only_in_priced_dirs(self):
+        src = "fn t() -> f64 { Instant::now().elapsed().as_secs_f64() }\n"
+        self.assertTrue(rules_determinism.check(sf(src, "rust/src/comm/x.rs")))
+        self.assertTrue(rules_determinism.check(sf(src, "rust/src/serve/x.rs")))
+        # util is a harness, not a priced module
+        self.assertEqual(rules_determinism.check(sf(src, "rust/src/util/x.rs")), [])
+
+    def test_ambient_rng_flagged(self):
+        f = sf("let mut rng = thread_rng();\n", "rust/src/dispatch/x.rs")
+        found = rules_determinism.check(f)
+        self.assertEqual(len(found), 1)
+        self.assertIn("thread_rng", found[0].msg)
+
+    def test_allow_directive_suppresses_with_justification(self):
+        src = (
+            "// pallas-lint: allow(determinism) -- wall_s observability only\n"
+            "let t0 = std::time::Instant::now();\n"
+        )
+        f = sf(src, "rust/src/coordinator/x.rs")
+        self.assertEqual(rules_determinism.check(f), [])
+        self.assertEqual(f.directive_findings, [])
+
+    def test_unjustified_directive_is_a_finding(self):
+        src = (
+            "// pallas-lint: allow(determinism)\n"
+            "let t0 = std::time::Instant::now();\n"
+        )
+        f = sf(src, "rust/src/coordinator/x.rs")
+        self.assertEqual([x.rule for x in f.directive_findings], ["allowlist"])
+        # and it does NOT suppress: the exception is unjustified
+        self.assertTrue(rules_determinism.check(f))
+
+    def test_doc_comment_mentions_never_fire(self):
+        f = sf("//! A naive `HashMap` oracle lives in tests.\nfn f() {}\n")
+        self.assertEqual(rules_determinism.check(f), [])
+
+
+class UnitsTest(unittest.TestCase):
+    def test_forbidden_suffixes_on_fields_and_fns(self):
+        src = (
+            "pub struct S {\n"
+            "    pub latency_ms: f64,\n"
+            "    pub window_s: f64,\n"
+            "}\n"
+            "pub fn poll_secs() -> f64 { 0.0 }\n"
+            "pub fn poll_s() -> f64 { 0.0 }\n"
+        )
+        found = rules_units.check(sf(src))
+        msgs = sorted(x.msg for x in found)
+        self.assertEqual(len(found), 2, msgs)
+        self.assertIn("latency_ms", msgs[0])
+        self.assertIn("poll_secs", msgs[1])
+
+    def test_metrics_file_requires_schema_consts(self):
+        f = sf("pub struct StepRecord { pub a: f64 }\n", "rust/src/metrics/mod.rs")
+        found = rules_units.check(f)
+        self.assertTrue(any("CSV_HEADER" in x.msg for x in found))
+
+    def test_schema_cross_checks(self):
+        src = (
+            'pub const CSV_HEADER: &str = "step,comm_s";\n'
+            'pub const CSV_SCHEMA: &[(&str, &str)] = &[("step", "step"), ("comm_s", "sim_comm_s")];\n'
+            "pub struct StepRecord { pub step: usize, pub sim_comm_s: f64 }\n"
+            "impl L { pub fn write_csv(&self) { for r in &self.records {\n"
+            "    emit(r.step, r.sim_comm_s); } } }\n"
+        )
+        self.assertEqual(rules_units.check(sf(src, "rust/src/metrics/mod.rs")), [])
+        # a swapped emission order must fire
+        bad = src.replace("emit(r.step, r.sim_comm_s)", "emit(r.sim_comm_s, r.step)")
+        found = rules_units.check(sf(bad, "rust/src/metrics/mod.rs"))
+        self.assertTrue(any("write_csv emits" in x.msg for x in found))
+        # a header/schema mismatch must fire
+        bad = src.replace('"step,comm_s"', '"step,comm_s,extra"')
+        found = rules_units.check(sf(bad, "rust/src/metrics/mod.rs"))
+        self.assertTrue(any("do not match CSV_SCHEMA" in x.msg for x in found))
+        # a column whose suffix disagrees with its field must fire
+        bad = src.replace('("comm_s", "sim_comm_s")', '("comm", "sim_comm_s")').replace(
+            '"step,comm_s"', '"step,comm"'
+        )
+        found = rules_units.check(sf(bad, "rust/src/metrics/mod.rs"))
+        self.assertTrue(any("disagree on unit suffix" in x.msg for x in found))
+
+
+class RatchetTest(unittest.TestCase):
+    SRC = (
+        "fn f(v: &[f64], m: &Mat) -> f64 {\n"
+        "    #[derive(Clone)]\n"  # attribute bracket: not an index
+        "    struct T;\n"
+        "    let a = v[0] + v[1];\n"  # 2 index exprs
+        "    let b = v.first().unwrap();\n"  # 1 unwrap
+        "    let c = v.get(1).expect(\"one\");\n"  # 1 expect
+        "    let d = vec![1, 2];\n"  # macro bracket: not an index
+        "    a + b + c + d[0]\n"  # 1 index expr
+        "}\n"
+    )
+
+    def test_count_panics(self):
+        counts = rules_ratchet.count_panics(sf(self.SRC))
+        self.assertEqual(counts, {"unwrap": 1, "expect": 1, "index": 3})
+
+    def test_ratchet_only_goes_down(self):
+        f = sf(self.SRC, "rust/src/comm/fixture.rs")
+        with tempfile.NamedTemporaryFile("w", suffix=".json", delete=False) as tmp:
+            json.dump({f.relpath: {"unwrap": 1, "expect": 1, "index": 3}}, tmp)
+            path = tmp.name
+        try:
+            self.assertEqual(rules_ratchet.check([f], path), [])
+            with open(path, "w") as fh:  # tighten: the same counts now exceed
+                json.dump({f.relpath: {"unwrap": 0, "expect": 1, "index": 3}}, fh)
+            found = rules_ratchet.check([f], path)
+            self.assertEqual(len(found), 1)
+            self.assertIn("unwrap count 1 exceeds", found[0].msg)
+        finally:
+            os.unlink(path)
+
+    def test_unlisted_file_with_panics_is_flagged(self):
+        f = sf(self.SRC, "rust/src/comm/new_file.rs")
+        with tempfile.NamedTemporaryFile("w", suffix=".json", delete=False) as tmp:
+            json.dump({}, tmp)
+            path = tmp.name
+        try:
+            found = rules_ratchet.check([f], path)
+            self.assertEqual(len(found), 1)
+            self.assertIn("not in panic baseline", found[0].msg)
+        finally:
+            os.unlink(path)
+
+
+class MirrorTest(unittest.TestCase):
+    def test_fingerprint_ignores_formatting_but_not_tokens(self):
+        a = sf("fn f(x: f64) -> f64 { x * 2.0 }\n")
+        b = sf("fn f(\n    x: f64\n) -> f64 {\n    // doubled\n    x * 2.0\n}\n")
+        c = sf("fn f(x: f64) -> f64 { x * 3.0 }\n")
+        fa, fb, fc = (fn_fingerprint(s, "f") for s in (a, b, c))
+        self.assertEqual(fa, fb, "whitespace/comment churn must not invalidate")
+        self.assertNotEqual(fa, fc, "a token edit must invalidate")
+
+    def test_edited_priced_fn_without_registry_update_fires(self):
+        entries = rules_mirror.load_registry()
+        target = next(e for e in entries if e["subsystem"] == "overlap-autotune")
+        stale = [dict(target, fingerprint="0" * 64)]
+        with tempfile.NamedTemporaryFile("w", suffix=".json", delete=False) as tmp:
+            json.dump({"entries": stale}, tmp)
+            path = tmp.name
+        try:
+            findings, _ = run_lint(
+                [os.path.join(REPO, "rust/src/overlap")],
+                rules={"mirror"},
+                repo_root=REPO,
+                registry_path=path,
+            )
+            self.assertTrue(
+                any("fingerprint changed" in x.msg for x in findings), findings
+            )
+        finally:
+            os.unlink(path)
+
+    def test_missing_mirror_symbol_fires(self):
+        entries = rules_mirror.load_registry()
+        target = dict(entries[0], mirror_symbol="no_such_symbol")
+        with tempfile.NamedTemporaryFile("w", suffix=".json", delete=False) as tmp:
+            json.dump({"entries": [target]}, tmp)
+            path = tmp.name
+        try:
+            findings, _ = run_lint(
+                [os.path.join(REPO, "rust/src/comm")],
+                rules={"mirror"},
+                repo_root=REPO,
+                registry_path=path,
+            )
+            self.assertTrue(any("no_such_symbol" in x.msg for x in findings))
+            # dropping subsystems below the required set also fires
+            self.assertTrue(
+                any("required subsystems" in x.msg for x in findings), findings
+            )
+        finally:
+            os.unlink(path)
+
+
+class StructureTest(unittest.TestCase):
+    def test_item_extraction(self):
+        src = (
+            "pub struct S { pub a_s: f64, b_bytes: usize }\n"
+            "impl S { pub fn get(&self) -> f64 { self.a_s } fn hidden(&self) {} }\n"
+        )
+        f = sf(src)
+        self.assertEqual([n for n, _ in struct_fields(f, "S")], ["a_s", "b_bytes"])
+        names = {(n, p) for n, _, p in fn_names(f)}
+        self.assertEqual(names, {("get", True), ("hidden", False)})
+
+    def test_dead_pub_fn_crossref(self):
+        f = sf("pub fn orphan_fn_zzz() {}\n", "rust/src/comm/fixture.rs")
+        found = rules_structure.crossref([f], REPO)
+        self.assertEqual(len(found), 1)
+        self.assertIn("orphan_fn_zzz", found[0].msg)
+        # a referenced fn passes: `main` is exempt, and anything that
+        # appears twice in the corpus (definition + use) is fine
+        f2 = sf("pub fn exchange_time() {}\n", "rust/src/comm/fixture.rs")
+        self.assertEqual(rules_structure.crossref([f2], REPO), [])
+
+
+class AcceptanceTest(unittest.TestCase):
+    def test_real_crate_lints_clean(self):
+        findings, files = run_lint(
+            [os.path.join(REPO, "rust/src")], repo_root=REPO
+        )
+        self.assertEqual(
+            [x.render() for x in findings], [], "rust/src must lint at zero findings"
+        )
+        self.assertGreaterEqual(len(files), 40)
+
+    def test_tests_benches_examples_structure_clean(self):
+        paths = [os.path.join(REPO, p) for p in ("rust/tests", "benches", "examples")]
+        findings, _ = run_lint(paths, rules={"structure"}, repo_root=REPO)
+        self.assertEqual([x.render() for x in findings], [])
+
+
+if __name__ == "__main__":
+    unittest.main(verbosity=2)

@@ -70,8 +70,8 @@ pub struct ServeConfig {
     pub cache_cap: usize,
     /// Eviction policy: "lru" | "ewma".
     pub cache: String,
-    /// TTFT deadline for goodput, milliseconds.
-    pub slo_ms: f64,
+    /// TTFT deadline for goodput, seconds.
+    pub slo_s: f64,
     /// Concurrent sequences per device (KV-cache slots).
     pub max_inflight: usize,
     /// Experts hosted per device (0 = keep the artifact's value).
@@ -90,7 +90,7 @@ impl Default for ServeConfig {
             output_mean: 16,
             cache_cap: 0,
             cache: "lru".into(),
-            slo_ms: 200.0,
+            slo_s: 0.2,
             max_inflight: 8,
             experts_per_dev: 0,
             zipf: 1.0,
@@ -180,7 +180,7 @@ impl ExperimentConfig {
                 output_mean: doc.usize_or("serve.output_mean", d.serve.output_mean),
                 cache_cap: doc.usize_or("serve.cache_cap", d.serve.cache_cap),
                 cache: doc.str_or("serve.cache", &d.serve.cache).to_string(),
-                slo_ms: doc.f64_or("serve.slo_ms", d.serve.slo_ms),
+                slo_s: doc.f64_or("serve.slo_s", d.serve.slo_s),
                 max_inflight: doc.usize_or("serve.max_inflight", d.serve.max_inflight),
                 experts_per_dev: doc
                     .usize_or("serve.experts_per_dev", d.serve.experts_per_dev),
@@ -428,7 +428,7 @@ rate_rps = 12.5
 requests = 128
 cache_cap = 2
 cache = "ewma"
-slo_ms = 150.0
+slo_s = 0.15
 max_inflight = 4
 experts_per_dev = 4
 zipf = 0.5
@@ -444,7 +444,7 @@ zipf = 0.5
         assert_eq!(c.serve.cache_cap, 2);
         assert_eq!(c.serve.experts_per_dev, 4);
         assert!((c.serve.rate_rps - 12.5).abs() < 1e-12);
-        assert!((c.serve.slo_ms - 150.0).abs() < 1e-12);
+        assert!((c.serve.slo_s - 0.15).abs() < 1e-12);
         // bad specs surface as errors, not defaults
         let mut bad = ExperimentConfig::default();
         bad.serve.trace = "weibull".into();

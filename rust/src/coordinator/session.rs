@@ -45,7 +45,6 @@ use crate::topology::Topology;
 use crate::util::Mat;
 use anyhow::{Context, Result};
 use std::path::PathBuf;
-use std::time::Instant;
 
 /// Scalar knobs of a session.
 #[derive(Clone, Debug)]
@@ -432,7 +431,11 @@ impl Session {
     /// prices the step on the simulated cluster clock and logs it.
     pub fn train_step(&mut self, tokens: &[i32], targets: &[i32]) -> Result<StepRecord> {
         let (tok, tgt) = self.batch_tensors(tokens, targets)?;
-        let wall0 = Instant::now();
+        // Host wall-clock for the wall_s observability metric only: it never
+        // feeds the simulated clock or any priced decision.
+        #[allow(clippy::disallowed_methods)]
+        // pallas-lint: allow(determinism) -- wall_s observability metric only; never priced
+        let wall0 = std::time::Instant::now();
         let out = self.backend.train_step(&tok, &tgt, self.opts.lr)?;
         let wall_s = wall0.elapsed().as_secs_f64();
 
@@ -568,10 +571,6 @@ impl Session {
 
     pub fn log(&self) -> &RunLog {
         &self.log
-    }
-
-    pub fn log_mut(&mut self) -> &mut RunLog {
-        &mut self.log
     }
 
     /// Mean per-MoE-layer dispatch counts of the most recent step.

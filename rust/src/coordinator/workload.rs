@@ -193,11 +193,6 @@ impl WorkloadCore {
     pub fn placement_epoch(&self) -> u64 {
         self.placement.as_ref().map_or(0, |e| e.epoch())
     }
-
-    /// The placement engine itself, for workloads that need its loads.
-    pub fn placement_engine(&self) -> Option<&PlacementEngine> {
-        self.placement.as_ref()
-    }
 }
 
 /// One run that prices its steps through a [`WorkloadCore`] — the seam

@@ -202,13 +202,36 @@ mod tests {
         let mut c = SyntheticCorpus::new(1);
         let toks = c.tokens(30_000);
         let text = ByteTokenizer::decode(&toks);
-        let mut counts = std::collections::HashMap::new();
+        // BTreeMap, not HashMap: HashMap's per-instance RandomState makes
+        // even two identical maps iterate in different orders within one
+        // process, so nothing derived from iteration may come from one.
+        let mut counts = std::collections::BTreeMap::new();
         for w in text.split_whitespace() {
             *counts.entry(w.trim_end_matches('.')).or_insert(0usize) += 1;
         }
         let max = *counts.values().max().unwrap();
         let min = *counts.values().min().unwrap();
         assert!(max > min * 5, "max {max} min {min}");
+    }
+
+    #[test]
+    fn unigram_counts_are_reproducible_in_order() {
+        // Regression: the counts map used to be a HashMap, whose iteration
+        // order differs between two identical instances. The ordered map
+        // must yield the exact same (word, count) sequence every build.
+        let mut c = SyntheticCorpus::new(1);
+        let toks = c.tokens(5_000);
+        let text = ByteTokenizer::decode(&toks);
+        let collect = || {
+            let mut counts = std::collections::BTreeMap::new();
+            for w in text.split_whitespace() {
+                *counts.entry(w.trim_end_matches('.')).or_insert(0usize) += 1;
+            }
+            counts.into_iter().collect::<Vec<_>>()
+        };
+        let a = collect();
+        assert_eq!(a, collect());
+        assert!(a.windows(2).all(|w| w[0].0 < w[1].0), "sorted by word");
     }
 
     #[test]

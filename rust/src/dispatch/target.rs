@@ -63,7 +63,9 @@ impl TargetPattern {
         let p = self.c.rows();
         let n = self.c.cols();
         let want_row = self.problem.sent_per_dev();
-        let want_col = want_row * p as f64 / n as f64;
+        // Eq. 4: c has one column per expert (N = P·E), so the per-column
+        // target is exactly the balanced receive per expert.
+        let want_col = self.problem.recv_per_expert();
         for i in 0..p {
             let r = self.c.row_sum(i);
             assert!(

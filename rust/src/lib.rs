@@ -57,6 +57,10 @@
 //! simulator stands in for the compiled model, so the whole crate —
 //! training loops, benches, tier-1 tests — needs no XLA at all.
 
+// The simulator prices clusters it never touches: everything is plain
+// safe rust, and the crate keeps it that way mechanically.
+#![forbid(unsafe_code)]
+
 pub mod comm;
 pub mod config;
 pub mod coordinator;

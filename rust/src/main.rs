@@ -92,7 +92,7 @@ fn print_help() {
                          --config file.toml\n\
            serve         --artifact tiny4 --cluster table1 --strategy ta-moe\n\
                          --trace poisson|bursty|diurnal --rate 8 --requests 64\n\
-                         --cache-cap <n> --cache lru|ewma --slo-ms 200\n\
+                         --cache-cap <n> --cache lru|ewma --slo-s 0.2\n\
                          --experts-per-dev <n> --max-inflight 8 --zipf 1.0\n\
                          --a2a ... --placement ... --overlap ... --seed 0\n\
            solve         --cluster C --nodes 2 [--tokens 1024] [--k 1]\n\
@@ -364,7 +364,7 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     cfg.serve.rate_rps = flag_parse(flags, "rate", cfg.serve.rate_rps)?;
     cfg.serve.requests = flag_parse(flags, "requests", cfg.serve.requests)?;
     cfg.serve.cache_cap = flag_parse(flags, "cache-cap", cfg.serve.cache_cap)?;
-    cfg.serve.slo_ms = flag_parse(flags, "slo-ms", cfg.serve.slo_ms)?;
+    cfg.serve.slo_s = flag_parse(flags, "slo-s", cfg.serve.slo_s)?;
     cfg.serve.max_inflight = flag_parse(flags, "max-inflight", cfg.serve.max_inflight)?;
     cfg.serve.experts_per_dev =
         flag_parse(flags, "experts-per-dev", cfg.serve.experts_per_dev)?;
@@ -392,7 +392,7 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         })
         .cache_cap(cfg.serve.cache_cap)
         .cache_policy(cfg.serve.parsed_cache()?)
-        .slo_ms(cfg.serve.slo_ms)
+        .slo_s(cfg.serve.slo_s)
         .max_inflight_per_dev(cfg.serve.max_inflight)
         .zipf_s(cfg.serve.zipf)
         .overlap(cfg.parsed_overlap()?)
@@ -407,7 +407,7 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
 
     println!(
         "serve: model={} cluster={} (P={}) strategy={} a2a={} trace={} rate={}rps \
-         requests={} cache={}(cap={}) slo={}ms",
+         requests={} cache={}(cap={}) slo={}s",
         cfg.artifact,
         cfg.cluster,
         sess.model_cfg().p,
@@ -418,7 +418,7 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         cfg.serve.requests,
         cfg.serve.cache,
         cfg.serve.cache_cap,
-        cfg.serve.slo_ms
+        cfg.serve.slo_s
     );
     sess.run(max_iters)?;
 

@@ -10,6 +10,45 @@ use std::collections::BTreeMap;
 use std::io::Write;
 use std::path::Path;
 
+/// CSV column header emitted by [`RunLog::write_csv`]: one column per
+/// [`StepRecord`] field in declaration order — `wall_s` is skipped (host
+/// wall-clock, not reproducible) — plus the derived `sim_t` time axis.
+pub const CSV_HEADER: &str = "step,loss,ce,aux,dropped,sim_comm_s,sim_compute_s,\
+    a2a_local_s,a2a_intra_s,a2a_inter_s,a2a_exposed_s,serial_s,chunks,\
+    plan_hit,migration_s,inflight,admitted,finished,cache_hits,\
+    cache_misses,fetch_s,sim_t";
+
+/// Column → [`StepRecord`] field map behind [`CSV_HEADER`], in emission
+/// order. `plan_hit` ⇒ `plan_cached` and `sim_t` ⇒ the derived time axis
+/// are the two declared aliases; every other column is the field name or
+/// the field minus its `sim_` prefix. pallas-lint (units rule) and
+/// `csv_schema_matches_struct` cross-check header, schema, struct order,
+/// and the actual `write_csv` emission against each other.
+pub const CSV_SCHEMA: &[(&str, &str)] = &[
+    ("step", "step"),
+    ("loss", "loss"),
+    ("ce", "ce"),
+    ("aux", "aux"),
+    ("dropped", "dropped"),
+    ("sim_comm_s", "sim_comm_s"),
+    ("sim_compute_s", "sim_compute_s"),
+    ("a2a_local_s", "sim_a2a_local_s"),
+    ("a2a_intra_s", "sim_a2a_intra_s"),
+    ("a2a_inter_s", "sim_a2a_inter_s"),
+    ("a2a_exposed_s", "sim_a2a_exposed_s"),
+    ("serial_s", "sim_serial_s"),
+    ("chunks", "chunks"),
+    ("plan_hit", "plan_cached"),
+    ("migration_s", "sim_migration_s"),
+    ("inflight", "inflight"),
+    ("admitted", "admitted"),
+    ("finished", "finished"),
+    ("cache_hits", "cache_hits"),
+    ("cache_misses", "cache_misses"),
+    ("fetch_s", "sim_fetch_s"),
+    ("sim_t", "t"),
+];
+
 /// One training step's observables.
 #[derive(Clone, Debug, Default)]
 pub struct StepRecord {
@@ -29,14 +68,14 @@ pub struct StepRecord {
     /// A2a time in phases/rounds crossing a node boundary (part of
     /// `sim_comm_s`).
     pub sim_a2a_inter_s: f64,
+    /// A2a time not hidden under compute on the overlap timeline
+    /// (the whole a2a time for serially-priced steps).
+    pub sim_a2a_exposed_s: f64,
     /// The serial upper bound of this step (phases back to back). Equals
     /// `sim_comm_s + sim_compute_s` on serially-priced steps; with
     /// `--overlap` the charged clock is smaller and
     /// `(serial - charged) / serial` is the step's overlap efficiency.
     pub sim_serial_s: f64,
-    /// A2a time not hidden under compute on the overlap timeline
-    /// (the whole a2a time for serially-priced steps).
-    pub sim_a2a_exposed_s: f64,
     /// Token chunks the step was pipelined into (1 = serial clock).
     pub chunks: usize,
     /// Whether this step's a2a schedule came from the session's
@@ -361,23 +400,15 @@ impl RunLog {
         self.cache_hits as f64 / total as f64
     }
 
-    /// Write `step,loss,ce,aux,dropped,sim_comm_s,sim_compute_s,
-    /// a2a_local_s,a2a_intra_s,a2a_inter_s,a2a_exposed_s,serial_s,chunks,
-    /// plan_hit,migration_s,inflight,admitted,finished,cache_hits,
-    /// cache_misses,fetch_s,sim_t` CSV (the serve columns are zero on
-    /// training runs).
+    /// Write the [`CSV_HEADER`] columns (the serve columns are zero on
+    /// training runs). The column↔field map is pinned by [`CSV_SCHEMA`]
+    /// and cross-checked by pallas-lint and `csv_schema_matches_struct`.
     pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
         let mut f = std::fs::File::create(path)?;
-        writeln!(
-            f,
-            "step,loss,ce,aux,dropped,sim_comm_s,sim_compute_s,\
-             a2a_local_s,a2a_intra_s,a2a_inter_s,a2a_exposed_s,serial_s,chunks,\
-             plan_hit,migration_s,inflight,admitted,finished,cache_hits,\
-             cache_misses,fetch_s,sim_t"
-        )?;
+        writeln!(f, "{CSV_HEADER}")?;
         let axis = self.sim_time_axis();
         for (r, t) in self.records.iter().zip(axis) {
             writeln!(
@@ -584,6 +615,96 @@ mod tests {
         let row0: Vec<&str> = text.lines().nth(1).unwrap().split(',').collect();
         assert_eq!(row0[col], "5.000000e-1");
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn csv_schema_matches_struct() {
+        // Sentinel record: every emitted field carries a distinct value,
+        // so each CSV cell can be traced back to the exact field
+        // CSV_SCHEMA claims that column prints. Catches silent column ↔
+        // field drift that format-string reordering would introduce.
+        let rec = StepRecord {
+            step: 1,
+            loss: 2.0,
+            ce: 3.0,
+            aux: 4.0,
+            dropped: 5.0,
+            sim_comm_s: 6.0,
+            sim_compute_s: 7.0,
+            sim_a2a_local_s: 8.0,
+            sim_a2a_intra_s: 9.0,
+            sim_a2a_inter_s: 10.0,
+            sim_a2a_exposed_s: 11.0,
+            sim_serial_s: 12.0,
+            chunks: 13,
+            plan_cached: true,
+            sim_migration_s: 15.0,
+            wall_s: 99.0, // host wall-clock: deliberately absent from the CSV
+            inflight: 16,
+            admitted: 17,
+            finished: 18,
+            cache_hits: 19,
+            cache_misses: 20,
+            sim_fetch_s: 21.0,
+        };
+        let sim_t = rec.sim_total_s(); // 6 + 7 + 15 + 21
+        let mut log = RunLog::new("schema", 0);
+        log.push(rec);
+        let path = std::env::temp_dir().join("ta_moe_test_metrics_schema.csv");
+        log.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let header: Vec<&str> = text.lines().next().unwrap().split(',').collect();
+        let row: Vec<f64> = text
+            .lines()
+            .nth(1)
+            .unwrap()
+            .split(',')
+            .map(|v| v.parse().unwrap())
+            .collect();
+        let _ = std::fs::remove_file(&path);
+
+        let schema_cols: Vec<&str> = CSV_SCHEMA.iter().map(|(c, _)| *c).collect();
+        assert_eq!(header, schema_cols, "header must be CSV_SCHEMA's columns");
+        assert_eq!(row.len(), header.len());
+        let want = [
+            ("step", 1.0),
+            ("loss", 2.0),
+            ("ce", 3.0),
+            ("aux", 4.0),
+            ("dropped", 5.0),
+            ("sim_comm_s", 6.0),
+            ("sim_compute_s", 7.0),
+            ("a2a_local_s", 8.0),
+            ("a2a_intra_s", 9.0),
+            ("a2a_inter_s", 10.0),
+            ("a2a_exposed_s", 11.0),
+            ("serial_s", 12.0),
+            ("chunks", 13.0),
+            ("plan_hit", 1.0),
+            ("migration_s", 15.0),
+            ("inflight", 16.0),
+            ("admitted", 17.0),
+            ("finished", 18.0),
+            ("cache_hits", 19.0),
+            ("cache_misses", 20.0),
+            ("fetch_s", 21.0),
+            ("sim_t", sim_t),
+        ];
+        assert_eq!(want.len(), header.len());
+        for (col, v) in want {
+            let i = header.iter().position(|c| *c == col).unwrap();
+            assert!(
+                (row[i] - v).abs() < 1e-9,
+                "column {col}: csv {} != field sentinel {v}",
+                row[i]
+            );
+        }
+        // unit suffixes: every seconds column says so
+        for (col, field) in CSV_SCHEMA {
+            if field.ends_with("_s") && *col != "sim_t" {
+                assert!(col.ends_with("_s"), "{col} drops the _s suffix");
+            }
+        }
     }
 
     #[test]

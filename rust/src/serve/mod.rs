@@ -89,7 +89,7 @@ pub struct ServeBuilder {
     trace: TraceConfig,
     cache_cap: usize,
     cache_policy: CachePolicy,
-    slo_ms: f64,
+    slo_s: f64,
     max_inflight_per_dev: usize,
     zipf_s: f64,
     label: Option<String>,
@@ -115,7 +115,7 @@ impl Default for ServeBuilder {
             trace: TraceConfig::default(),
             cache_cap: 0,
             cache_policy: CachePolicy::Lru,
-            slo_ms: 200.0,
+            slo_s: 0.2,
             max_inflight_per_dev: 8,
             zipf_s: 1.0,
             label: None,
@@ -255,9 +255,9 @@ impl ServeBuilder {
         self
     }
 
-    /// TTFT deadline for [`ServeSession::goodput`], in milliseconds.
-    pub fn slo_ms(mut self, ms: f64) -> Self {
-        self.slo_ms = ms;
+    /// TTFT deadline for [`ServeSession::goodput`], in seconds.
+    pub fn slo_s(mut self, s: f64) -> Self {
+        self.slo_s = s;
         self
     }
 
@@ -331,7 +331,7 @@ impl ServeBuilder {
         };
         anyhow::ensure!(overlap != OverlapMode::Fixed(0), "overlap chunk count must be >= 1");
         anyhow::ensure!(self.trace.n_requests > 0, "trace must carry at least one request");
-        anyhow::ensure!(self.slo_ms > 0.0, "SLO must be positive");
+        anyhow::ensure!(self.slo_s > 0.0, "SLO must be positive");
 
         let inputs = policy.runtime_inputs(&topo, &cfg);
         let route = route_matrix(&inputs, policy.as_ref(), &topo, &cfg, self.zipf_s);
@@ -368,7 +368,7 @@ impl ServeBuilder {
             identity,
             log: RunLog::new(&label, 0),
             now_s: 0.0,
-            slo_s: self.slo_ms * 1e-3,
+            slo_s: self.slo_s,
             zipf_s: self.zipf_s,
         })
     }
@@ -633,6 +633,7 @@ mod tests {
         ServeBuilder::new()
             .preset("tiny4")
             .cluster("table1")
+            .trace_kind(TraceKind::Poisson)
             .requests(24)
             .seed(5)
     }
@@ -696,7 +697,7 @@ mod tests {
     fn builder_rejects_nonsense() {
         assert!(ServeBuilder::new().preset("gpt5_huge").build().is_err());
         assert!(quick_builder().requests(0).build().is_err());
-        assert!(quick_builder().slo_ms(-1.0).build().is_err());
+        assert!(quick_builder().slo_s(-1.0).build().is_err());
         assert!(quick_builder().policy_named("nope").build().is_err());
     }
 

@@ -449,6 +449,7 @@ mod tests {
         let t = Topology::homogeneous(4, l(1e-9), Link::new(0.0, 1e-11));
         let n1 = t.with_noise(0.2, 42);
         let n2 = t.with_noise(0.2, 42);
+        assert_eq!(n1.alpha_mat(), n2.alpha_mat());
         assert_eq!(n1.beta_mat(), n2.beta_mat());
         assert_eq!(n1.links(), t.links());
         assert!(n1.beta_mat().linf_dist(t.beta_mat()) > 0.0);

@@ -254,8 +254,10 @@ pub(super) fn build(spec: &TreeSpec, level_links: &[Link], local: Link) -> Topol
     let mut level = vec![0usize; p * p];
     let mut paths = vec![Vec::new(); p * p];
 
-    // node ids: compact leaf-switch ids in first-seen order
-    let mut node_ids = std::collections::HashMap::new();
+    // node ids: compact leaf-switch ids in first-seen order (BTreeMap for
+    // the crate-wide ordered-collections rule; assignment is first-seen via
+    // `entry`, so the ids are deterministic by construction)
+    let mut node_ids = std::collections::BTreeMap::new();
     let node_of: Vec<usize> = (0..p)
         .map(|d| {
             let sw = b.dev_switch[d];
@@ -386,6 +388,25 @@ mod tests {
         assert_eq!(t.level(0, 2), 2);
         assert_eq!(t.node_of(0), t.node_of(1));
         assert_ne!(t.node_of(0), t.node_of(2));
+    }
+
+    #[test]
+    fn leaf_node_ids_are_first_seen_and_reproducible() {
+        // Regression: leaf-switch ids were assigned through a HashMap;
+        // first-seen assignment via `entry` was already deterministic, but
+        // the ordered map pins the invariant mechanically. Ids must be
+        // compact, start at 0, and be identical across rebuilds.
+        let spec = TreeSpec::parse("[2,3,2]").unwrap();
+        let t1 = Topology::tree(&spec, &links(), Link::new(0.0, 1e-12));
+        let t2 = Topology::tree(&spec, &links(), Link::new(0.0, 1e-12));
+        let ids1: Vec<usize> = (0..t1.p()).map(|d| t1.node_of(d)).collect();
+        let ids2: Vec<usize> = (0..t2.p()).map(|d| t2.node_of(d)).collect();
+        assert_eq!(ids1, ids2);
+        assert_eq!(ids1[0], 0, "first device maps to node 0");
+        for w in ids1.windows(2) {
+            // first-seen order over contiguous leaf groups: ids never skip
+            assert!(w[1] == w[0] || w[1] == w[0] + 1, "ids {ids1:?}");
+        }
     }
 
     #[test]

@@ -7,6 +7,13 @@
 //! asymmetric-tree, and ring topologies, and check that `PlanCache` hits
 //! reproduce the cold-path `StepCost` exactly.
 
+// The whole point of this file is the naive HashMap formulation the
+// engine replaced (see module doc): the one sanctioned use of the
+// unordered type banned crate-wide by clippy.toml and pallas-lint.
+// pallas-lint: allow(determinism) -- documented naive oracle; results are
+// reduced order-independently (sums/maxima), never iterated for decisions.
+#![allow(clippy::disallowed_types)]
+
 use std::collections::HashMap;
 use ta_moe::comm::{rotation_schedule, A2aAlgo, CostEngine, ExchangeModel, ScheduleKind};
 use ta_moe::coordinator::{

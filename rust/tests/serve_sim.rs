@@ -36,7 +36,7 @@ fn scenario(
         })
         .cache_cap(2)
         .cache_policy(cache)
-        .slo_ms(200.0)
+        .slo_s(0.2)
         .overlap(overlap);
     if placement {
         b = b.placement_every(8);

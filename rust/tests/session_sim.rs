@@ -7,7 +7,8 @@
 use ta_moe::comm::{A2aAlgo, ScheduleKind};
 use ta_moe::coordinator::{
     converged_counts, device_flops, parse_policy, register_policy, DeepSpeedEven,
-    DispatchPolicy, FasterMoeHir, PolicyInputs, Session, SessionBuilder, TaMoe,
+    DispatchPolicy, FasterMoeHir, PolicyInputs, Session, SessionBuilder,
+    SessionOptions, TaMoe,
 };
 use ta_moe::dispatch::{even_caps, Norm};
 use ta_moe::runtime::{BackendKind, GateInputs, ModelCfg, SimBackend};
@@ -25,6 +26,32 @@ fn sim_session(preset: &str, policy: Box<dyn DispatchPolicy>, seed: i32) -> Sess
         .flops_per_dev(device_flops('C'))
         .build()
         .unwrap()
+}
+
+#[test]
+fn options_bundle_matches_individual_setters() {
+    // `SessionBuilder::options` installs a whole SessionOptions at once;
+    // it must be bit-identical to the equivalent chain of setters.
+    let cfg = ModelCfg::preset("tiny4").expect("builtin preset");
+    let mut via_setters = sim_session("tiny4", Box::new(TaMoe { norm: Norm::L1 }), 3);
+    let mut via_options = SessionBuilder::new()
+        .backend(Box::new(SimBackend::new(cfg)))
+        .cluster("C")
+        .policy(Box::new(TaMoe { norm: Norm::L1 }))
+        .options(SessionOptions {
+            lr: 2e-3,
+            seed: 3,
+            flops_per_dev: device_flops('C'),
+            ..SessionOptions::default()
+        })
+        .build()
+        .unwrap();
+    for _ in 0..5 {
+        let a = via_setters.step().unwrap();
+        let b = via_options.step().unwrap();
+        assert_eq!(a.loss, b.loss);
+        assert_eq!(a.sim_comm_s, b.sim_comm_s);
+    }
 }
 
 #[test]
