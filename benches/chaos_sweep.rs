@@ -1,0 +1,144 @@
+//! Sweep: fault class × dispatch policy under the adaptive vs static stack.
+//!
+//! Replays each scripted fault class (straggler, degraded link, node loss,
+//! gate drift) over the bottlenecked [2,2] tree and reports, per policy,
+//! the perturbed-vs-clean simulated clock, the adaptive stack's margin
+//! over the static one, and the step-clock recovery time after the fault
+//! window closes — the robustness companion to `placement_sweep` /
+//! `overlap_sweep`: *how the stack degrades* matters alongside how fast
+//! it is when nothing breaks.
+//!
+//! Shape assertions:
+//! * on the even-dispatch arms the adaptive stack (live placement +
+//!   epoch-aware plan cache + autotuned overlap) strictly beats the
+//!   static stack (canonical hosting, cache pinned, serial clock) under
+//!   every fault class;
+//! * every bounded fault window yields a finite step-clock recovery.
+//!
+//! ```bash
+//! cargo bench --bench chaos_sweep
+//! TA_MOE_BENCH_QUICK=1 cargo bench --bench chaos_sweep   # CI smoke
+//! ```
+
+mod common;
+
+use std::collections::BTreeMap;
+use ta_moe::comm::{A2aAlgo, ScheduleKind};
+use ta_moe::coordinator::SessionBuilder;
+use ta_moe::metrics::RunLog;
+use ta_moe::runtime::{ModelCfg, SimBackend};
+use ta_moe::topology::{Link, Topology, TreeSpec};
+use ta_moe::util::bench::{record_jsonl, Table};
+use ta_moe::util::json::Json;
+
+/// The acceptance fabric: a [2,2] tree whose uplink is the bottleneck, so
+/// every fault class has real communication time to stress.
+fn bottleneck22() -> Topology {
+    Topology::tree(
+        &TreeSpec::parse("[2,2]").unwrap(),
+        &[Link::from_gbps_us(45.0, 1.0), Link::from_gbps_us(0.01, 1.0)],
+        ta_moe::topology::presets::local_copy(),
+    )
+}
+
+fn run_arm(policy: &str, chaos: &str, adaptive: bool, steps: usize) -> RunLog {
+    let cfg = ModelCfg::preset("tiny4").unwrap();
+    let mut b = SessionBuilder::new()
+        .backend(Box::new(SimBackend::new(cfg)))
+        .topology(bottleneck22())
+        .policy_named(policy)
+        .a2a(A2aAlgo::Scheduled(ScheduleKind::Bvn))
+        .seed(17)
+        .chaos_named(chaos);
+    b = if adaptive {
+        b.placement_every(8).overlap_named("auto")
+    } else {
+        b.overlap_named("serial").plan_cache_tol(0.0)
+    };
+    let mut s = b.build().expect("arm builds");
+    s.run(steps).expect("arm runs");
+    s.log().clone()
+}
+
+fn total_s(log: &RunLog) -> f64 {
+    log.sim_time_axis().last().copied().unwrap_or(0.0)
+}
+
+fn main() {
+    let quick = std::env::var("TA_MOE_BENCH_QUICK").map(|v| v != "0").unwrap_or(false);
+    let steps = common::env_steps(if quick { 40 } else { 120 });
+    let (onset, close) = (steps / 4, steps / 2);
+
+    // every window is bounded and closes mid-run so recovery is observable
+    let classes: Vec<(&str, String)> = vec![
+        ("straggler", format!("straggler:1x3@{onset}-{close}:flap=4")),
+        ("link", format!("link:4x4@{onset}-{close}")),
+        ("nodeloss", format!("nodeloss:2@{close}")),
+        ("drift", format!("drift:1@{onset}-{close}")),
+    ];
+
+    println!("Chaos sweep: fault class × policy, adaptive vs static ({steps} steps)\n");
+    let mut t = Table::new(&[
+        "policy", "class", "clean", "adaptive", "static", "margin", "recovery", "events",
+    ]);
+    let mut payload = BTreeMap::new();
+
+    for policy in ["fastmoe", "ta-moe"] {
+        let clean_s = total_s(&run_arm(policy, "off", true, steps));
+        for (class, spec) in &classes {
+            let adaptive = run_arm(policy, spec, true, steps);
+            let static_ = run_arm(policy, spec, false, steps);
+            let (ta, ts) = (total_s(&adaptive), total_s(&static_));
+            let recovery = adaptive.recovery_steps();
+            t.row(&[
+                policy.into(),
+                (*class).into(),
+                format!("{:.2}ms", clean_s * 1e3),
+                format!("{:.2}ms", ta * 1e3),
+                format!("{:.2}ms", ts * 1e3),
+                format!("{:+.1}%", (ts - ta) / ts * 100.0),
+                recovery.map_or("never".into(), |r| format!("{r} steps")),
+                adaptive.perturbations.len().to_string(),
+            ]);
+            payload.insert(
+                format!("{policy}/{class}"),
+                Json::Obj(BTreeMap::from([
+                    ("clean_s".to_string(), Json::Num(clean_s)),
+                    ("adaptive_s".to_string(), Json::Num(ta)),
+                    ("static_s".to_string(), Json::Num(ts)),
+                    (
+                        "recovery_steps".to_string(),
+                        Json::Num(recovery.map_or(-1.0, |r| r as f64)),
+                    ),
+                    (
+                        "events".to_string(),
+                        Json::Num(adaptive.perturbations.len() as f64),
+                    ),
+                ])),
+            );
+
+            assert!(
+                !adaptive.perturbations.is_empty(),
+                "{policy}/{class}: the fault stream must reach the run log"
+            );
+            // bounded window + comm-dominated fabric ⇒ the step clock
+            // settles back into the pre-onset band before the run ends
+            assert!(
+                recovery.is_some(),
+                "{policy}/{class}: bounded fault must yield finite recovery"
+            );
+            // the structural win (proven by the overlap acceptance test on
+            // this exact fabric) holds for even dispatch under every class;
+            // locality-aware dispatch starves the uplink so its margin is
+            // reported but not asserted
+            if policy == "fastmoe" {
+                assert!(
+                    ta < ts,
+                    "{policy}/{class}: adaptive clock {ta} must beat static {ts}"
+                );
+            }
+        }
+    }
+    t.print();
+    record_jsonl("chaos_sweep", &Json::Obj(payload));
+}

@@ -1,0 +1,114 @@
+#!/usr/bin/env python3
+"""Mirror of the perturbation schedule + recovery metric (rust/src/perturb/mod.rs).
+
+Two decision rules ride the fault stream end to end and must price the
+same on both sides of the language boundary:
+
+* ``straggler_active`` — whether a scripted straggler with window
+  ``[start, end)`` and ``flap_period`` is slowing its device at ``step``.
+  A zero period holds over the whole window; otherwise the slowdown
+  alternates on/off in ``flap_period``-step blocks, starting *on*.
+* ``recovery_steps`` — the headline robustness observable: steps from
+  fault onset until the step clock first returns within ``tol`` of the
+  pre-onset steady state (baseline = mean of the ``window`` steps before
+  onset; recovered at the first ``t >= onset`` with
+  ``step_s[t] <= baseline * (1 + tol)``). ``None`` when there is no
+  pre-onset history or the clock never comes back — the summary JSON
+  encodes that as ``recovery_steps: -1``.
+
+Run ``python3 -m mirrors.perturb_recovery`` for the self-check.
+"""
+
+from __future__ import annotations
+
+import sys
+from typing import Optional, Sequence
+
+# perturb/mod.rs: an omitted window end never closes (usize::MAX there).
+OPEN_END = 2**64 - 1
+
+# metrics/mod.rs: the run-log defaults fed to recovery_steps.
+RECOVERY_WINDOW = 8
+RECOVERY_TOL = 0.05
+
+
+def straggler_active(step: int, start: int, end: int, flap_period: int) -> bool:
+    """Exactly perturb/mod.rs::straggler_active: in-window, and either a
+    constant slowdown (period 0) or the even `flap_period`-block."""
+    if step < start or step >= end:
+        return False
+    return flap_period == 0 or ((step - start) // flap_period) % 2 == 0
+
+
+def recovery_steps(
+    step_s: Sequence[float], onset: int, window: int, tol: float
+) -> Optional[int]:
+    """Exactly perturb/mod.rs::recovery_steps, including the edge cases:
+    no pre-onset history (onset 0), onset past the series, or a zero
+    baseline window all return None; so does a clock that never returns
+    to ``baseline * (1 + tol)``."""
+    if onset == 0 or onset > len(step_s) or window == 0:
+        return None
+    lo = max(onset - window, 0)  # saturating_sub
+    base = step_s[lo:onset]
+    baseline = sum(base) / len(base)
+    for t in range(onset, len(step_s)):
+        if step_s[t] <= baseline * (1.0 + tol):
+            return t - onset
+    return None
+
+
+# ----------------------------------------------------------- self-check
+
+
+def main() -> int:
+    # -- straggler window edges: [start, end) ---------------------------
+    assert not straggler_active(9, 10, 20, 0)
+    assert straggler_active(10, 10, 20, 0)
+    assert straggler_active(19, 10, 20, 0)
+    assert not straggler_active(20, 10, 20, 0)
+
+    # -- an omitted end never closes ------------------------------------
+    assert straggler_active(10**9, 10, OPEN_END, 0)
+
+    # -- flapping alternates in period blocks, starting on --------------
+    on = [step for step in range(10, 26) if straggler_active(step, 10, 26, 4)]
+    assert on == [10, 11, 12, 13, 18, 19, 20, 21], on
+    # period 1 toggles every step
+    assert straggler_active(10, 10, 20, 1)
+    assert not straggler_active(11, 10, 20, 1)
+    # the flap phase is anchored at the window start, not step 0
+    assert straggler_active(13, 13, 20, 4) and not straggler_active(13, 9, 20, 4)
+
+    # -- recovery: clean series recovers instantly ----------------------
+    flat = [1.0] * 20
+    assert recovery_steps(flat, 10, RECOVERY_WINDOW, RECOVERY_TOL) == 0
+
+    # -- a bounded spike recovers when it re-enters the 5% band ---------
+    series = [1.0] * 10 + [4.0] * 6 + [1.02] * 8
+    assert recovery_steps(series, 10, RECOVERY_WINDOW, RECOVERY_TOL) == 6
+    # a tighter tolerance pushes recovery past the 1.02 tail entirely
+    assert recovery_steps(series, 10, RECOVERY_WINDOW, 0.01) is None
+
+    # -- baseline is the mean of the pre-onset window only --------------
+    # window 2 sees [1.0, 3.0] -> baseline 2.0: the 2.05 tail is inside
+    # tol; window 1 sees [3.0] -> baseline 3.0 admits the spike at once
+    ramp = [9.0] * 8 + [1.0, 3.0] + [2.5] * 4 + [2.05] * 4
+    assert recovery_steps(ramp, 10, 2, RECOVERY_TOL) == 4
+    assert recovery_steps(ramp, 10, 1, RECOVERY_TOL) == 0
+
+    # -- the None edge cases, exactly as rust prices them ---------------
+    assert recovery_steps([2.0, 2.0], 0, RECOVERY_WINDOW, RECOVERY_TOL) is None
+    assert recovery_steps([2.0, 2.0], 3, RECOVERY_WINDOW, RECOVERY_TOL) is None
+    assert recovery_steps([2.0, 2.0], 1, 0, RECOVERY_TOL) is None
+    # onset == len: baseline exists but nothing after it ever recovers
+    assert recovery_steps([1.0, 1.0], 2, RECOVERY_WINDOW, RECOVERY_TOL) is None
+    # never recovers inside the series
+    assert recovery_steps([1.0] * 5 + [9.0] * 5, 5, 4, RECOVERY_TOL) is None
+
+    print("mirrors.perturb_recovery: all self-checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

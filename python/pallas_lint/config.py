@@ -11,7 +11,7 @@ from __future__ import annotations
 # must be bit-reproducible across runs and machines. Wall clocks and
 # ambient RNG are forbidden here (determinism rule); unordered
 # collections are forbidden everywhere.
-PRICED_DIRS = {"comm", "coordinator", "placement", "overlap", "serve", "dispatch"}
+PRICED_DIRS = {"comm", "coordinator", "placement", "overlap", "serve", "dispatch", "perturb"}
 
 # Unordered std collections: iteration order varies per *instance*
 # (RandomState), so any fold/emission over them is nondeterministic.
@@ -68,6 +68,7 @@ REQUIRED_SUBSYSTEMS = {
     "overlap-autotune",
     "serve-cache",
     "serve-batcher",
+    "perturb-recovery",
 }
 
 # Inline allow directive, written in a comment on the finding's line or

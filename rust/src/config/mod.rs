@@ -40,6 +40,10 @@ pub struct ExperimentConfig {
     pub overlap: String,
     /// Execution backend: "sim" | "xla" | "auto".
     pub backend: String,
+    /// Scripted fault stream: "off", or `+`-joined chaos events
+    /// (`straggler:… | link:… | nodeloss:… | drift:…`; see
+    /// [`crate::perturb::ChaosSpec`]). Applies to train and serve alike.
+    pub chaos: String,
     pub steps: usize,
     pub lr: f64,
     pub seed: u64,
@@ -122,6 +126,7 @@ impl Default for ExperimentConfig {
             placement: "off".into(),
             overlap: "off".into(),
             backend: "auto".into(),
+            chaos: "off".into(),
             steps: 100,
             lr: 1e-3,
             seed: 0,
@@ -165,6 +170,7 @@ impl ExperimentConfig {
             },
             overlap: doc.str_or("train.overlap", &d.overlap).to_string(),
             backend: doc.str_or("train.backend", &d.backend).to_string(),
+            chaos: doc.str_or("chaos.spec", &d.chaos).to_string(),
             steps: doc.usize_or("train.steps", d.steps),
             lr: doc.f64_or("train.lr", d.lr),
             seed: doc.usize_or("train.seed", d.seed as usize) as u64,
@@ -232,6 +238,11 @@ impl ExperimentConfig {
     /// Resolve the overlap spec (`off | serial | k=<n> | auto`).
     pub fn parsed_overlap(&self) -> Result<OverlapMode> {
         self.overlap.parse().map_err(anyhow::Error::msg)
+    }
+
+    /// Resolve the fault-stream spec (`off`, or `+`-joined chaos events).
+    pub fn parsed_chaos(&self) -> Result<crate::perturb::ChaosSpec> {
+        self.chaos.parse().map_err(anyhow::Error::msg)
     }
 }
 
@@ -394,6 +405,22 @@ lr = 0.01
         assert_eq!(c.parsed_overlap().unwrap(), OverlapMode::Fixed(8));
         let c = ExperimentConfig { overlap: "chunked".into(), ..Default::default() };
         assert!(c.parsed_overlap().is_err());
+    }
+
+    #[test]
+    fn chaos_defaults_to_off_and_parses() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.chaos, "off");
+        assert!(c.parsed_chaos().unwrap().is_off());
+        let c = ExperimentConfig::from_toml(
+            "[chaos]\nspec = \"straggler:0x2@10-20+nodeloss:3@40\"\n",
+        )
+        .unwrap();
+        let spec = c.parsed_chaos().unwrap();
+        assert!(!spec.is_off());
+        assert_eq!(spec.to_string(), "straggler:0x2@10-20+nodeloss:3@40");
+        let c = ExperimentConfig { chaos: "meteor:9@1".into(), ..Default::default() };
+        assert!(c.parsed_chaos().is_err());
     }
 
     #[test]

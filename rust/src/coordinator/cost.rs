@@ -253,6 +253,10 @@ pub struct PlanCache {
     tuned: Vec<TuneEntry>,
     /// Placement epoch the cached entries were synthesised under.
     epoch: u64,
+    /// Topology epoch the cached entries were synthesised under (bumped
+    /// by the perturbation layer whenever it mutates link or per-pair
+    /// α/β state in place — see [`PlanCache::set_topo_epoch`]).
+    topo_epoch: u64,
     hits: u64,
     misses: u64,
 }
@@ -318,6 +322,29 @@ impl PlanCache {
     pub fn set_epoch(&mut self, epoch: u64) {
         if epoch != self.epoch {
             self.epoch = epoch;
+            self.entries.clear();
+            self.tuned.clear();
+        }
+    }
+
+    /// The topology epoch the cache currently serves.
+    pub fn topo_epoch(&self) -> u64 {
+        self.topo_epoch
+    }
+
+    /// Align the cache with a *topology* epoch. `topo_key` already makes
+    /// link-graph mutations (e.g. [`Topology::scale_link`]) miss
+    /// naturally, but per-pair-only α/β mutations share a `topo_key` with
+    /// the clean topology — that is exactly the staleness this explicit
+    /// epoch closes: the perturbation layer bumps it on *every* in-place
+    /// topology mutation, dropping cached BvN schedules and tuned-`k`
+    /// memos alike. (The comm engine's flow-census scratch needs no
+    /// epoch: `CostEngine` borrows the topology, so any `&mut` mutation
+    /// invalidates it at compile time.) Idempotent for an unchanged
+    /// epoch, like [`PlanCache::set_epoch`].
+    pub fn set_topo_epoch(&mut self, epoch: u64) {
+        if epoch != self.topo_epoch {
+            self.topo_epoch = epoch;
             self.entries.clear();
             self.tuned.clear();
         }
@@ -670,8 +697,57 @@ pub fn step_cost_profiled(
     a2a: A2aAlgo,
     mode: OverlapMode,
     profile: StepProfile,
+    cache: Option<&mut PlanCache>,
+    placement: Option<&Placement>,
+) -> StepCost {
+    step_cost_inner(
+        shape, topo, counts, e_per_dev, flops_per_dev, a2a, mode, profile, cache, placement,
+        None,
+    )
+}
+
+/// [`step_cost_profiled`] under per-device compute slowdown factors — the
+/// straggler model of the perturbation layer (`crate::perturb`). Factor
+/// `s_i ≥ 1` multiplies device `i`'s compute time: the serial compute
+/// bound becomes `max_i s_i · t_i` over per-device forward loads, and on
+/// the overlap timeline each device's expert seconds scale by `s_i` while
+/// the dense phases scale by `max_i s_i` (a synchronous step runs at the
+/// slowest replica's pace). A slowdown of all-ones reproduces
+/// [`step_cost_profiled`] exactly; communication is never touched (link
+/// faults go through [`Topology::scale_link`] instead).
+#[allow(clippy::too_many_arguments)]
+pub fn step_cost_perturbed(
+    shape: &ModelShape,
+    topo: &Topology,
+    counts: &Mat,
+    e_per_dev: usize,
+    flops_per_dev: f64,
+    a2a: A2aAlgo,
+    mode: OverlapMode,
+    profile: StepProfile,
+    cache: Option<&mut PlanCache>,
+    placement: Option<&Placement>,
+    slowdown: &[f64],
+) -> StepCost {
+    step_cost_inner(
+        shape, topo, counts, e_per_dev, flops_per_dev, a2a, mode, profile, cache, placement,
+        Some(slowdown),
+    )
+}
+
+#[allow(clippy::too_many_arguments)]
+fn step_cost_inner(
+    shape: &ModelShape,
+    topo: &Topology,
+    counts: &Mat,
+    e_per_dev: usize,
+    flops_per_dev: f64,
+    a2a: A2aAlgo,
+    mode: OverlapMode,
+    profile: StepProfile,
     mut cache: Option<&mut PlanCache>,
     placement: Option<&Placement>,
+    slowdown: Option<&[f64]>,
 ) -> StepCost {
     let (serial, bytes, recv) = priced_step(
         shape,
@@ -683,12 +759,21 @@ pub fn step_cost_profiled(
         profile,
         cache.as_deref_mut(),
         placement,
+        slowdown,
     );
     if mode == OverlapMode::Serial {
         return serial;
     }
 
-    let inputs = shape.overlap_inputs_profiled(flops_per_dev, &recv, profile);
+    let mut inputs = shape.overlap_inputs_profiled(flops_per_dev, &recv, profile);
+    if let Some(s) = slowdown {
+        let max_slow = s.iter().copied().fold(1.0, f64::max);
+        inputs.dense_fwd_s *= max_slow;
+        inputs.dense_bwd_s *= max_slow;
+        for (t, &sl) in inputs.expert_s_per_dev.iter_mut().zip(s) {
+            *t *= sl;
+        }
+    }
     let forward_only = profile.is_forward_only();
     let chunk_of = |k: usize| {
         let breakdown = match cache.as_deref() {
@@ -763,6 +848,7 @@ fn step_cost_with(
         StepProfile::train(),
         cache,
         placement,
+        None,
     )
     .0
 }
@@ -781,6 +867,7 @@ fn priced_step(
     profile: StepProfile,
     cache: Option<&mut PlanCache>,
     placement: Option<&Placement>,
+    slowdown: Option<&[f64]>,
 ) -> (StepCost, Mat, Vec<f64>) {
     let p = topo.p();
     assert_eq!(counts.rows(), p);
@@ -806,7 +893,22 @@ fn priced_step(
     let expert = shape.expert_flops_per_token() * max_recv * shape.n_moe_layers as f64;
     let fwd_flops = dense + expert;
     // train: fwd + bwd ≈ 3× fwd; decode: forward only (1×)
-    let compute_s = profile.compute_mult * fwd_flops / flops_per_dev;
+    let compute_s = match slowdown {
+        None => profile.compute_mult * fwd_flops / flops_per_dev,
+        // stragglers: the synchronous step waits on the slowest device's
+        // slowed compute, which is no longer necessarily the max-recv one
+        Some(s) => {
+            assert_eq!(s.len(), p, "slowdown length");
+            recv.iter()
+                .zip(s)
+                .map(|(&r, &sl)| {
+                    let fwd =
+                        dense + shape.expert_flops_per_token() * r * shape.n_moe_layers as f64;
+                    profile.compute_mult * fwd / flops_per_dev * sl
+                })
+                .fold(0.0, f64::max)
+        }
+    };
 
     // --- all-to-all: the profile's exchanges of the c_ie bytes per layer ---
     let bytes = match placement {
@@ -1054,6 +1156,112 @@ mod tests {
         assert_eq!((cache.misses(), cache.hits()), (2, 2), "epoch bump must miss");
         step_cost_cached(&shape, &topo, &ta, 1, flops, algo, &mut cache);
         assert_eq!((cache.misses(), cache.hits()), (2, 3), "then caching resumes");
+    }
+
+    #[test]
+    fn plan_cache_topology_epoch_invalidates_schedules() {
+        // per-pair-only α/β mutation leaves `topo_key` unchanged (the
+        // `with_noise` sharing rule), so without the explicit topology
+        // epoch a degraded network would keep serving stale schedules
+        let topo = presets::cluster_c(2);
+        let cfg = cfg16();
+        let shape = ModelShape::gpt_medium(false, 6, 1024);
+        let ta = converged_counts(&TaMoe { norm: Norm::L1 }, &topo, &cfg);
+        let algo = A2aAlgo::Scheduled(crate::comm::ScheduleKind::Bvn);
+        let flops = device_flops('C');
+        let mut cache = PlanCache::new(PLAN_CACHE_TOL);
+        step_cost_cached(&shape, &topo, &ta, 1, flops, algo, &mut cache);
+        step_cost_cached(&shape, &topo, &ta, 1, flops, algo, &mut cache);
+        assert_eq!((cache.misses(), cache.hits()), (1, 1));
+        // same topo epoch: idempotent
+        cache.set_topo_epoch(0);
+        step_cost_cached(&shape, &topo, &ta, 1, flops, algo, &mut cache);
+        assert_eq!((cache.misses(), cache.hits()), (1, 2));
+        // a topology mutation bumped the epoch: cached schedules are stale
+        cache.set_topo_epoch(1);
+        assert_eq!(cache.topo_epoch(), 1);
+        step_cost_cached(&shape, &topo, &ta, 1, flops, algo, &mut cache);
+        assert_eq!((cache.misses(), cache.hits()), (2, 2), "topo epoch bump must miss");
+    }
+
+    #[test]
+    fn plan_cache_topology_epoch_invalidates_tuned_k() {
+        let topo = presets::cluster_c(2);
+        let cfg = cfg16();
+        let shape = ModelShape::gpt_medium(false, 6, 1024);
+        let ta = converged_counts(&TaMoe { norm: Norm::L1 }, &topo, &cfg);
+        let algo = A2aAlgo::Scheduled(crate::comm::ScheduleKind::Bvn);
+        let bytes = ta.scale(shape.token_bytes());
+        let mut cache = PlanCache::new(PLAN_CACHE_TOL);
+        cache.remember_k(&topo, &bytes, algo, 4);
+        assert_eq!(cache.tuned_k(&topo, &bytes, algo), Some(4));
+        cache.set_topo_epoch(3);
+        assert_eq!(cache.tuned_k(&topo, &bytes, algo), None, "tuned-k memo must drop");
+    }
+
+    #[test]
+    fn scale_link_misses_naturally_via_topo_key() {
+        // link-table mutation changes `topo_key`, so even without an
+        // epoch bump a degraded link never reuses the clean schedule
+        let topo = presets::cluster_c(2);
+        let cfg = cfg16();
+        let shape = ModelShape::gpt_medium(false, 6, 1024);
+        let ta = converged_counts(&TaMoe { norm: Norm::L1 }, &topo, &cfg);
+        let algo = A2aAlgo::Scheduled(crate::comm::ScheduleKind::Bvn);
+        let flops = device_flops('C');
+        let mut cache = PlanCache::new(PLAN_CACHE_TOL);
+        step_cost_cached(&shape, &topo, &ta, 1, flops, algo, &mut cache);
+        let mut degraded = topo.clone();
+        degraded.scale_link(0, 3.0);
+        step_cost_cached(&shape, &degraded, &ta, 1, flops, algo, &mut cache);
+        assert_eq!((cache.misses(), cache.hits()), (2, 0), "mutated links must miss");
+    }
+
+    #[test]
+    fn unit_slowdown_reproduces_profiled_price_exactly() {
+        let topo = presets::cluster_c(2);
+        let cfg = cfg16();
+        let shape = ModelShape::gpt_medium(false, 6, 1024);
+        let ta = converged_counts(&TaMoe { norm: Norm::L1 }, &topo, &cfg);
+        let flops = device_flops('C');
+        let algo = A2aAlgo::Scheduled(crate::comm::ScheduleKind::Bvn);
+        let ones = vec![1.0; 16];
+        for mode in [OverlapMode::Serial, OverlapMode::Fixed(4), OverlapMode::Auto] {
+            let clean = step_cost_profiled(
+                &shape, &topo, &ta, 1, flops, algo, mode,
+                StepProfile::train(), None, None,
+            );
+            let slowed = step_cost_perturbed(
+                &shape, &topo, &ta, 1, flops, algo, mode,
+                StepProfile::train(), None, None, &ones,
+            );
+            assert_eq!(slowed.compute_s, clean.compute_s, "{mode}");
+            assert_eq!(slowed.a2a_s, clean.a2a_s, "{mode}");
+            assert_eq!(slowed.step_s(), clean.step_s(), "{mode}");
+        }
+    }
+
+    #[test]
+    fn straggler_slowdown_raises_compute_monotonically() {
+        let topo = presets::cluster_c(2);
+        let cfg = cfg16();
+        let shape = ModelShape::gpt_medium(false, 6, 1024);
+        let ta = converged_counts(&TaMoe { norm: Norm::L1 }, &topo, &cfg);
+        let flops = device_flops('C');
+        let clean = step_cost(&shape, &topo, &ta, 1, flops, A2aAlgo::Direct);
+        let mut prev = clean.compute_s;
+        for factor in [1.5, 2.0, 4.0] {
+            let mut s = vec![1.0; 16];
+            s[3] = factor;
+            let c = step_cost_perturbed(
+                &shape, &topo, &ta, 1, flops, A2aAlgo::Direct, OverlapMode::Serial,
+                StepProfile::train(), None, None, &s,
+            );
+            assert!(c.compute_s >= prev, "factor {factor}");
+            assert_eq!(c.a2a_s, clean.a2a_s, "stragglers never touch the wire");
+            prev = c.compute_s;
+        }
+        assert!(prev > clean.compute_s, "a 4× straggler must show up in compute");
     }
 
     #[test]

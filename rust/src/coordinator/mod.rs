@@ -23,9 +23,9 @@ pub mod session;
 pub mod workload;
 
 pub use cost::{
-    device_flops, step_cost, step_cost_cached, step_cost_overlapped, step_cost_placed,
-    step_cost_profiled, throughput, ModelShape, PlanCache, StepCost, StepProfile,
-    PLAN_CACHE_TOL,
+    device_flops, step_cost, step_cost_cached, step_cost_overlapped, step_cost_perturbed,
+    step_cost_placed, step_cost_profiled, throughput, ModelShape, PlanCache, StepCost,
+    StepProfile, PLAN_CACHE_TOL,
 };
 pub use policy::{
     converged_counts, DeepSpeedEven, DispatchPolicy, FastMoeEven, FasterMoeHir,
@@ -33,4 +33,4 @@ pub use policy::{
 };
 pub use registry::{list_policies, parse_policy, register_policy, PolicyFactory};
 pub use session::{DataSource, Session, SessionBuilder, SessionOptions};
-pub use workload::{Workload, WorkloadCore};
+pub use workload::{ChaosReport, Workload, WorkloadCore};

@@ -37,8 +37,9 @@ use super::workload::{Workload, WorkloadCore};
 use crate::comm::A2aAlgo;
 use crate::config::topology_for;
 use crate::data::{Batcher, SyntheticCorpus};
-use crate::metrics::{MigrationRecord, RunLog, StepRecord};
+use crate::metrics::{MigrationRecord, PerturbationRecord, RunLog, StepRecord};
 use crate::overlap::OverlapMode;
+use crate::perturb::ChaosSpec;
 use crate::placement::{Placement, PlacementConfig};
 use crate::runtime::{open_backend, Backend, BackendKind, HostTensor};
 use crate::topology::Topology;
@@ -65,6 +66,9 @@ pub struct SessionOptions {
     /// as a fixed-`k` chunk pipeline, or chunk-count-autotuned
     /// (see [`crate::overlap`]).
     pub overlap: OverlapMode,
+    /// Scripted fault stream (`off` = the clean run, bit-identical to a
+    /// session without the engine; see [`crate::perturb`]).
+    pub chaos: ChaosSpec,
 }
 
 impl Default for SessionOptions {
@@ -77,6 +81,7 @@ impl Default for SessionOptions {
             plan_cache_tol: PLAN_CACHE_TOL,
             placement: None,
             overlap: OverlapMode::Serial,
+            chaos: ChaosSpec::off(),
         }
     }
 }
@@ -108,6 +113,7 @@ pub struct SessionBuilder {
     a2a: Option<A2aAlgo>,
     a2a_spec: Option<String>,
     overlap_spec: Option<String>,
+    chaos_spec: Option<String>,
     data: Option<DataSource>,
     opts: SessionOptions,
 }
@@ -195,6 +201,20 @@ impl SessionBuilder {
     /// (`off | serial | k=<n> | auto`).
     pub fn overlap_named(mut self, spec: impl Into<String>) -> Self {
         self.overlap_spec = Some(spec.into());
+        self
+    }
+
+    /// Inject this scripted fault stream (see [`ChaosSpec`]).
+    pub fn chaos(mut self, spec: ChaosSpec) -> Self {
+        self.opts.chaos = spec;
+        self
+    }
+
+    /// Parse the fault stream from a `--chaos` spec at build time
+    /// (`off`, or `+`-joined `straggler:…`, `link:…`, `nodeloss:…`,
+    /// `drift:…` events).
+    pub fn chaos_named(mut self, spec: impl Into<String>) -> Self {
+        self.chaos_spec = Some(spec.into());
         self
     }
 
@@ -315,6 +335,9 @@ impl SessionBuilder {
         if let Some(spec) = self.overlap_spec {
             opts.overlap = spec.parse::<OverlapMode>().map_err(anyhow::Error::msg)?;
         }
+        if let Some(spec) = self.chaos_spec {
+            opts.chaos = spec.parse::<ChaosSpec>().map_err(anyhow::Error::msg)?;
+        }
         anyhow::ensure!(
             opts.overlap != OverlapMode::Fixed(0),
             "overlap chunk count must be >= 1"
@@ -376,7 +399,8 @@ impl SessionBuilder {
             StepProfile::train(),
             opts.plan_cache_tol,
             opts.placement.clone(),
-        );
+        )
+        .with_chaos(opts.chaos.clone())?;
         Ok(Session {
             backend,
             policy,
@@ -439,6 +463,35 @@ impl Session {
         let out = self.backend.train_step(&tok, &tgt, self.opts.lr)?;
         let wall_s = wall0.elapsed().as_secs_f64();
 
+        // chaos: the fault stream fires first — topology mutations and
+        // the elastic re-scale happen before the gate loads are observed,
+        // so the EWMA, the migration gate, and the pricing all see the
+        // perturbed world (exactly what a real job would measure). An
+        // emergency evacuation is charged like an accepted migration.
+        let mut counts = out.counts;
+        let mut migration_s = 0.0;
+        let mut rehosted = false;
+        if let Some(report) = self.core.chaos_step(&mut counts) {
+            for ev in &report.events {
+                self.log.push_perturbation(PerturbationRecord {
+                    step: self.log.records.len(),
+                    event: ev.clone(),
+                });
+            }
+            if let Some(m) = &report.migration {
+                migration_s += m.cost_s;
+                rehosted = true;
+                self.log.push_migration(MigrationRecord {
+                    step: self.log.records.len(),
+                    moved: m.moved.len(),
+                    bytes: m.bytes,
+                    cost_s: m.cost_s,
+                    predicted_saving_s: m.predicted_saving_s,
+                    realized_saving_s: m.realized_saving_s,
+                });
+            }
+        }
+
         // placement: fold the measured loads in and, at the engine's
         // cadence, migrate experts when the move amortises. Step-time
         // semantics: gating (which produced `counts`) precedes dispatch,
@@ -450,16 +503,10 @@ impl Session {
         // (b) re-points the policy inputs (mask, and for topology-aware
         //     policies the target/penalty) at the new hosting — live,
         //     without resetting the backend's training state.
-        let mut migration_s = 0.0;
-        self.core.observe(&out.counts);
-        if let Some(m) = self.core.maybe_migrate(&out.counts) {
-            migration_s = m.cost_s;
-            let mcfg = self.backend.model_cfg().clone();
-            let placement = self.core.placement().expect("migration implies placement");
-            let new_inputs =
-                self.policy.runtime_inputs_placed(self.core.topology(), &mcfg, placement);
-            self.backend.update_gate(&new_inputs.gate)?;
-            self.inputs = new_inputs;
+        self.core.observe(&counts);
+        if let Some(m) = self.core.maybe_migrate(&counts) {
+            migration_s += m.cost_s;
+            rehosted = true;
             self.log.push_migration(MigrationRecord {
                 step: self.log.records.len(),
                 moved: m.moved.len(),
@@ -469,13 +516,21 @@ impl Session {
                 realized_saving_s: m.realized_saving_s,
             });
         }
+        if rehosted {
+            let mcfg = self.backend.model_cfg().clone();
+            let placement = self.core.placement().expect("migration implies placement");
+            let new_inputs =
+                self.policy.runtime_inputs_placed(self.core.topology(), &mcfg, placement);
+            self.backend.update_gate(&new_inputs.gate)?;
+            self.inputs = new_inputs;
+        }
 
         let hits_before = self.core.plan_cache().hits();
         // one pricing path for every (placement × overlap) combination:
         // serial mode reproduces the historic clock exactly, overlap
         // modes charge the chunked timeline's makespan instead (the
         // exposed communication replaces the serial a2a + allreduce sum)
-        let cost = self.core.price(&out.counts);
+        let cost = self.core.price(&counts);
         let record = StepRecord {
             step: self.log.records.len(),
             loss: out.loss,
@@ -495,7 +550,7 @@ impl Session {
             wall_s,
             ..Default::default()
         };
-        self.last_counts = Some(out.counts);
+        self.last_counts = Some(counts);
         self.log.plan_hits = self.core.plan_cache().hits();
         self.log.plan_misses = self.core.plan_cache().misses();
         self.log.push(record.clone());

@@ -12,10 +12,13 @@
 //! are the same four moves: observe loads → maybe migrate → price counts
 //! under the workload's [`StepProfile`] → log.
 
-use super::cost::{step_cost_profiled, ModelShape, PlanCache, StepCost, StepProfile};
+use super::cost::{
+    step_cost_perturbed, step_cost_profiled, ModelShape, PlanCache, StepCost, StepProfile,
+};
 use crate::comm::A2aAlgo;
 use crate::metrics::{RunLog, StepRecord};
 use crate::overlap::OverlapMode;
+use crate::perturb::{ChaosEngine, ChaosSpec, FiredEvent};
 use crate::placement::{
     Migration, OverlapPricing, Placement, PlacementConfig, PlacementEngine,
 };
@@ -37,6 +40,32 @@ pub struct WorkloadCore {
     profile: StepProfile,
     plan_cache: PlanCache,
     placement: Option<PlacementEngine>,
+    /// The scripted fault stream, if any (`None` and an attached-but-off
+    /// spec both leave every priced path bit-identical to a clean run).
+    chaos: Option<ChaosEngine>,
+    /// Monotone counter bumped by every topology mutation (link scaling,
+    /// node death); forwarded to [`PlanCache::set_topo_epoch`].
+    topo_epoch: u64,
+    /// Per-device compute slowdown of the step being priced (set by
+    /// [`Self::chaos_step`], consumed by [`Self::price_with_shape`];
+    /// `None` = every device at full speed, the clean fast path).
+    slowdown: Option<Vec<f64>>,
+}
+
+/// What the fault stream did to one step, returned by
+/// [`WorkloadCore::chaos_step`] for the session to log and charge.
+#[derive(Clone, Debug, Default)]
+pub struct ChaosReport {
+    /// Events that fired at this step (onsets, restores, deaths), in
+    /// their canonical spec spelling — the strings the run log records.
+    pub events: Vec<String>,
+    /// Devices that died this step — the serve session must drain their
+    /// in-flight sequences (`ContinuousBatcher::fail_device`).
+    pub dead_devices: Vec<usize>,
+    /// The emergency evacuation a node death triggered, if any. Its
+    /// `cost_s` must be charged to the step clock by the caller, like an
+    /// ordinary accepted migration.
+    pub migration: Option<Migration>,
 }
 
 impl WorkloadCore {
@@ -99,7 +128,68 @@ impl WorkloadCore {
             profile,
             plan_cache: PlanCache::new(plan_cache_tol),
             placement,
+            chaos: None,
+            topo_epoch: 0,
+            slowdown: None,
         }
+    }
+
+    /// Attach a scripted fault stream. An `off` spec attaches nothing at
+    /// all, so the clean path stays structurally identical to a core
+    /// built without chaos.
+    pub fn with_chaos(mut self, spec: ChaosSpec) -> Result<WorkloadCore> {
+        spec.validate(self.topo.p(), self.topo.links().len())
+            .map_err(anyhow::Error::msg)?;
+        if !spec.is_off() {
+            self.chaos = Some(ChaosEngine::new(spec));
+        }
+        Ok(self)
+    }
+
+    /// Advance the fault stream by one step: execute the topology
+    /// mutations firing now (link α/β scaling, node death — each bumps
+    /// the topology epoch so the plan cache drops schedules synthesised
+    /// for the old fabric), run the emergency evacuation on a death,
+    /// rewrite `counts` (gate drift, elastic re-scale), and latch the
+    /// per-device compute slowdown for the pricing call that follows.
+    /// Returns `None` when no fault stream is attached (and leaves
+    /// `counts` untouched).
+    pub fn chaos_step(&mut self, counts: &mut Mat) -> Option<ChaosReport> {
+        let fired = self.chaos.as_ref()?.fired();
+        let mut report = ChaosReport::default();
+        for ev in &fired {
+            report.events.push(ev.to_string());
+            match *ev {
+                FiredEvent::LinkScale { edge, factor } => {
+                    self.topo.scale_link(edge, factor);
+                    self.topo_epoch += 1;
+                    self.plan_cache.set_topo_epoch(self.topo_epoch);
+                }
+                FiredEvent::NodeLoss { dev } => {
+                    self.topo.mark_dead(dev);
+                    report.dead_devices.push(dev);
+                    self.topo_epoch += 1;
+                    self.plan_cache.set_topo_epoch(self.topo_epoch);
+                    if let Some(eng) = self.placement.as_mut() {
+                        if let Some(m) = eng.evacuate(&self.topo, dev) {
+                            self.plan_cache.set_epoch(eng.epoch());
+                            report.migration = Some(m);
+                        }
+                    }
+                }
+                // window-open markers: logged above, nothing to execute
+                FiredEvent::StragglerOn { .. } | FiredEvent::DriftOn { .. } => {}
+            }
+        }
+        let chaos = self.chaos.as_ref().expect("chaos present");
+        chaos.transform_counts(
+            counts,
+            &self.topo,
+            self.placement.as_ref().map(|e| e.placement()),
+        );
+        self.slowdown = chaos.slowdown(&self.topo);
+        self.chaos.as_mut().expect("chaos present").advance();
+        Some(report)
     }
 
     /// Price one step's dispatch counts on the cluster clock under the
@@ -115,18 +205,35 @@ impl WorkloadCore {
     /// so the continuous batcher prices each iteration under a shape
     /// cloned from the core's with only the token dimension rewritten.
     pub fn price_with_shape(&mut self, shape: &ModelShape, counts: &Mat) -> StepCost {
-        step_cost_profiled(
-            shape,
-            &self.topo,
-            counts,
-            self.e_per_dev,
-            self.flops_per_dev,
-            self.a2a,
-            self.overlap,
-            self.profile,
-            Some(&mut self.plan_cache),
-            self.placement.as_ref().map(|e| e.placement()),
-        )
+        match self.slowdown.clone() {
+            // active stragglers: price compute per device under the
+            // latched slowdown factors
+            Some(s) => step_cost_perturbed(
+                shape,
+                &self.topo,
+                counts,
+                self.e_per_dev,
+                self.flops_per_dev,
+                self.a2a,
+                self.overlap,
+                self.profile,
+                Some(&mut self.plan_cache),
+                self.placement.as_ref().map(|e| e.placement()),
+                &s,
+            ),
+            None => step_cost_profiled(
+                shape,
+                &self.topo,
+                counts,
+                self.e_per_dev,
+                self.flops_per_dev,
+                self.a2a,
+                self.overlap,
+                self.profile,
+                Some(&mut self.plan_cache),
+                self.placement.as_ref().map(|e| e.placement()),
+            ),
+        }
     }
 
     /// Fold one step's measured loads into the placement engine's EWMA
@@ -192,6 +299,16 @@ impl WorkloadCore {
     /// Accepted migrations so far (0 when placement is disabled).
     pub fn placement_epoch(&self) -> u64 {
         self.placement.as_ref().map_or(0, |e| e.epoch())
+    }
+
+    /// Topology mutations executed so far (0 on a clean fabric).
+    pub fn topo_epoch(&self) -> u64 {
+        self.topo_epoch
+    }
+
+    /// The attached fault stream, if any.
+    pub fn chaos(&self) -> Option<&ChaosEngine> {
+        self.chaos.as_ref()
     }
 }
 

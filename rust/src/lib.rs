@@ -38,6 +38,12 @@
 //!   default), EWMA gate-load tracking, greedy + swap-descent solvers
 //!   priced through the comm engine, and amortised live migration of
 //!   expert weights wired into the [`coordinator::Session`] step loop.
+//! * [`perturb`] — the scripted fault-injection engine: seeded
+//!   step-granular [`perturb::Perturbation`] streams (stragglers,
+//!   degraded links, node loss with elastic re-scale, gate-load regime
+//!   shifts) replayed through the [`coordinator::Workload`] seam so
+//!   training and serving face the same fault model, plus the
+//!   recovery-time metric ([`perturb::recovery_steps`]).
 //! * [`serve`] — the inference serving simulator: continuous batching
 //!   over seeded arrival traces (Poisson / bursty MMPP / diurnal), an
 //!   expert-weight device cache (LRU / gate-load-EWMA) whose misses are
@@ -68,6 +74,7 @@ pub mod data;
 pub mod dispatch;
 pub mod metrics;
 pub mod overlap;
+pub mod perturb;
 pub mod placement;
 pub mod runtime;
 pub mod serve;
@@ -77,6 +84,7 @@ pub mod util;
 pub use config::ExperimentConfig;
 pub use coordinator::{DispatchPolicy, Session, SessionBuilder, Workload};
 pub use overlap::OverlapMode;
+pub use perturb::{ChaosEngine, ChaosSpec};
 pub use placement::{Placement, PlacementConfig, PlacementEngine};
 pub use runtime::{Backend, SimBackend};
 pub use serve::{CachePolicy, ServeBuilder, ServeSession, TraceConfig, TraceKind};

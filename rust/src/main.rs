@@ -89,12 +89,12 @@ fn print_help() {
                          --backend sim|xla|auto --steps 100 --lr 1e-3 --seed 0\n\
                          --a2a auto|direct|hier|sched:xor|sched:rot|sched:bvn\n\
                          --placement off|on|<every-steps> --overlap off|serial|k=<n>|auto\n\
-                         --config file.toml\n\
+                         --chaos off|<events> --config file.toml\n\
            serve         --artifact tiny4 --cluster table1 --strategy ta-moe\n\
                          --trace poisson|bursty|diurnal --rate 8 --requests 64\n\
                          --cache-cap <n> --cache lru|ewma --slo-s 0.2\n\
                          --experts-per-dev <n> --max-inflight 8 --zipf 1.0\n\
-                         --a2a ... --placement ... --overlap ... --seed 0\n\
+                         --a2a ... --placement ... --overlap ... --chaos ... --seed 0\n\
            solve         --cluster C --nodes 2 [--tokens 1024] [--k 1]\n\
            profile-topo  --cluster table1 [--nodes 2] [--noise 0.2]\n\
            bench-comm    [--mb 128]\n\
@@ -113,7 +113,10 @@ fn print_help() {
                      chunk pipeline) | auto (chunk-count autotuner)\n\
          TRACES:     poisson | bursty (2-state MMPP) | diurnal (thinned\n\
                      sinusoidal rate)\n\
-         CACHE:      lru | ewma (gate-load-EWMA-prioritized eviction)"
+         CACHE:      lru | ewma (gate-load-EWMA-prioritized eviction)\n\
+         CHAOS:      off | `+`-joined scripted faults, e.g.\n\
+                     straggler:0x2@10-20:flap=4 + link:1x3@30-60 +\n\
+                     nodeloss:3@80 + drift:1@40-50 (see `ta-moe --list-modes`)"
     );
 }
 
@@ -208,6 +211,9 @@ fn cmd_train(flags: &Flags) -> Result<()> {
     if let Some(b) = flags.get("backend") {
         cfg.backend = b.clone();
     }
+    if let Some(c) = flags.get("chaos") {
+        cfg.chaos = c.clone();
+    }
     cfg.steps = flag_parse(flags, "steps", cfg.steps)?;
     cfg.lr = flag_parse(flags, "lr", cfg.lr)?;
     cfg.seed = flag_parse(flags, "seed", cfg.seed)?;
@@ -231,6 +237,8 @@ fn cmd_train(flags: &Flags) -> Result<()> {
     }
     let overlap_mode = cfg.parsed_overlap()?;
     builder = builder.overlap(overlap_mode);
+    let chaos_spec = cfg.parsed_chaos()?;
+    builder = builder.chaos(chaos_spec.clone());
     let mut session = builder.build()?;
 
     let topo = session.topology();
@@ -251,6 +259,9 @@ fn cmd_train(flags: &Flags) -> Result<()> {
         overlap_mode,
         cfg.steps
     );
+    if !chaos_spec.is_off() {
+        println!("chaos: {chaos_spec}");
+    }
 
     for step in 0..cfg.steps {
         let rec = session.step()?;
@@ -324,6 +335,25 @@ fn cmd_train(flags: &Flags) -> Result<()> {
             real * 1e3
         );
     }
+    if !chaos_spec.is_off() {
+        let log = session.log();
+        let recovery = match log.recovery_steps() {
+            Some(n) => format!("{n} steps"),
+            None => "not within the run".into(),
+        };
+        println!(
+            "chaos: {} events fired (first at step {}); step-clock recovery: {}",
+            log.perturbations.len(),
+            log.first_perturbation_step()
+                .map_or_else(|| "-".into(), |s| s.to_string()),
+            recovery
+        );
+        // chaos runs also get the JSON summary (recovery_steps & co);
+        // clean runs keep the historic CSV-only output byte for byte
+        let json_path = out.with_extension("json");
+        std::fs::write(&json_path, log.summary_json().to_string_compact())?;
+        println!("summary → {}", json_path.display());
+    }
     Ok(())
 }
 
@@ -359,6 +389,9 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     }
     if let Some(c) = flags.get("cache") {
         cfg.serve.cache = c.clone();
+    }
+    if let Some(c) = flags.get("chaos") {
+        cfg.chaos = c.clone();
     }
     cfg.seed = flag_parse(flags, "seed", cfg.seed)?;
     cfg.serve.rate_rps = flag_parse(flags, "rate", cfg.serve.rate_rps)?;
@@ -397,6 +430,8 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         .zipf_s(cfg.serve.zipf)
         .overlap(cfg.parsed_overlap()?)
         .placement(cfg.parsed_placement()?);
+    let chaos_spec = cfg.parsed_chaos()?;
+    builder = builder.chaos(chaos_spec.clone());
     if let Some(algo) = cfg.parsed_a2a()? {
         builder = builder.a2a(algo);
     }
@@ -420,6 +455,9 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         cfg.serve.cache_cap,
         cfg.serve.slo_s
     );
+    if !chaos_spec.is_off() {
+        println!("chaos: {chaos_spec}");
+    }
     sess.run(max_iters)?;
 
     let log = sess.log();
@@ -447,6 +485,19 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         log.cache_misses,
         log.migrations.len()
     );
+    if !chaos_spec.is_off() {
+        let recovery = match log.recovery_steps() {
+            Some(n) => format!("{n} iterations"),
+            None => "not within the run".into(),
+        };
+        println!(
+            "chaos: {} events fired (first at iteration {}); step-clock recovery: {}",
+            log.perturbations.len(),
+            log.first_perturbation_step()
+                .map_or_else(|| "-".into(), |s| s.to_string()),
+            recovery
+        );
+    }
     let stem = format!(
         "serve_{}_{}_{}_{}",
         cfg.artifact,
@@ -491,6 +542,9 @@ fn cmd_list_modes() -> Result<()> {
     for policy in CachePolicy::ALL {
         t.row(&["cache".into(), policy.to_string(), cache_help(policy).into()]);
     }
+    for (spec, help) in CHAOS_MODE_ROWS {
+        t.row(&["chaos".into(), (*spec).into(), (*help).into()]);
+    }
     t.print();
     println!("\ndispatch policies: see `ta-moe --list-strategies`");
     Ok(())
@@ -521,6 +575,24 @@ fn cache_help(policy: CachePolicy) -> &'static str {
         CachePolicy::EwmaPrioritized => "evict the lowest gate-load EWMA expert",
     }
 }
+
+/// The `--list-modes` chaos rows. Every example is a *parseable* spec in
+/// its canonical spelling (a test round-trips each one), joinable with
+/// `+` into one `--chaos` argument.
+const CHAOS_MODE_ROWS: &[(&str, &str)] = &[
+    ("off", "no fault injection (bit-identical to a run without the engine)"),
+    (
+        "straggler:0x2@10-20:flap=4",
+        "device 0 computes 2x slower over steps [10,20), flapping every 4 steps",
+    ),
+    ("straggler:1x1.5@25", "device 1 permanently 1.5x slower from step 25 on"),
+    ("link:1x3@30-60", "link 1's alpha/beta scaled 3x over [30,60), restored after"),
+    (
+        "nodeloss:3@80",
+        "device 3 dies at step 80: experts evacuated, in-flight work re-homed",
+    ),
+    ("drift:1@40-50", "gate regime shift: expert columns rotate by 1 over [40,50)"),
+];
 
 // ---------------------------------------------------------------------------
 // solve
@@ -634,6 +706,24 @@ fn cmd_bench_comm(flags: &Flags) -> Result<()> {
 // ---------------------------------------------------------------------------
 // info
 // ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::CHAOS_MODE_ROWS;
+    use ta_moe::perturb::ChaosSpec;
+
+    #[test]
+    fn listed_chaos_examples_parse_and_round_trip() {
+        for (spec, _) in CHAOS_MODE_ROWS {
+            let parsed: ChaosSpec = spec.parse().unwrap();
+            assert_eq!(parsed.to_string(), *spec, "canonical form drifted for {spec}");
+        }
+        // the composed spelling from the help text
+        let joined = "straggler:0x2@10-20:flap=4+link:1x3@30-60+nodeloss:3@80+drift:1@40-50";
+        let parsed: ChaosSpec = joined.parse().unwrap();
+        assert_eq!(parsed.to_string(), joined);
+    }
+}
 
 fn cmd_info(flags: &Flags) -> Result<()> {
     let dir = PathBuf::from(flag(flags, "artifacts-dir", "artifacts"));

@@ -209,6 +209,16 @@ pub struct MigrationRecord {
     pub realized_saving_s: f64,
 }
 
+/// One fault-stream event as the run log records it: which step it fired
+/// on and its canonical spec spelling (see [`crate::perturb`]).
+#[derive(Clone, Debug, Default)]
+pub struct PerturbationRecord {
+    /// Step (0-based record index) the event fired on.
+    pub step: usize,
+    /// Canonical event string, e.g. `straggler:1x2` or `nodeloss:3`.
+    pub event: String,
+}
+
 /// A labelled sequence of step records (+ optional eval points).
 #[derive(Clone, Debug, Default)]
 pub struct RunLog {
@@ -225,6 +235,9 @@ pub struct RunLog {
     pub plan_misses: u64,
     /// Accepted expert migrations, in step order (placement engine).
     pub migrations: Vec<MigrationRecord>,
+    /// Fault-stream events that fired, in step order (perturbation
+    /// engine; empty on clean runs).
+    pub perturbations: Vec<PerturbationRecord>,
     /// Completed requests, in finish order (serving runs).
     pub requests: Vec<RequestRecord>,
     /// Expert-weight cache hits over the run (serving runs).
@@ -298,6 +311,33 @@ impl RunLog {
     /// Record an accepted expert migration.
     pub fn push_migration(&mut self, m: MigrationRecord) {
         self.migrations.push(m);
+    }
+
+    /// Record one fault-stream event.
+    pub fn push_perturbation(&mut self, p: PerturbationRecord) {
+        self.perturbations.push(p);
+    }
+
+    /// Step the first fault fired on (`None` on clean runs).
+    pub fn first_perturbation_step(&self) -> Option<usize> {
+        self.perturbations.first().map(|p| p.step)
+    }
+
+    /// Steps from the first fault's onset until the per-step clock
+    /// (including migration/fetch spikes) first returns within
+    /// [`crate::perturb::RECOVERY_TOL`] of the mean of the
+    /// [`crate::perturb::RECOVERY_WINDOW`] pre-onset steps. `None` on a
+    /// clean run, when the fault fired on step 0 (no baseline), or when
+    /// the clock never comes back inside the band.
+    pub fn recovery_steps(&self) -> Option<usize> {
+        let onset = self.first_perturbation_step()?;
+        let step_s: Vec<f64> = self.records.iter().map(|r| r.sim_total_s()).collect();
+        crate::perturb::recovery_steps(
+            &step_s,
+            onset,
+            crate::perturb::RECOVERY_WINDOW,
+            crate::perturb::RECOVERY_TOL,
+        )
     }
 
     /// Total expert-weight bytes moved by migrations over the run.
@@ -470,6 +510,18 @@ impl RunLog {
         let (pred, real) = self.migration_savings();
         m.insert("migration_predicted_saving_s".into(), Json::Num(pred));
         m.insert("migration_realized_saving_s".into(), Json::Num(real));
+        // chaos keys only when faults actually fired: a `--chaos off` run
+        // stays byte-identical to one without the engine at all
+        if !self.perturbations.is_empty() {
+            m.insert("perturbations".into(), Json::Num(self.perturbations.len() as f64));
+            m.insert(
+                "first_perturb_step".into(),
+                Json::Num(self.first_perturbation_step().unwrap_or(0) as f64),
+            );
+            // -1 encodes "never recovered" (and "no pre-fault baseline")
+            let recovery = self.recovery_steps().map_or(-1.0, |r| r as f64);
+            m.insert("recovery_steps".into(), Json::Num(recovery));
+        }
         if !self.requests.is_empty() || self.cache_hits + self.cache_misses > 0 {
             m.insert("requests".into(), Json::Num(self.requests.len() as f64));
             m.insert("ttft_p50_s".into(), Json::Num(self.ttft_percentile(50.0).unwrap_or(0.0)));
@@ -850,6 +902,47 @@ mod tests {
         let json = log.summary_json().to_string_compact();
         assert!(!json.contains("cache_hit_rate"), "{json}");
         assert!(!json.contains("ttft_p99_s"), "{json}");
+    }
+
+    #[test]
+    fn clean_summaries_omit_chaos_keys() {
+        let mut log = RunLog::new("clean", 10);
+        log.push(rec(0, 1.0, 0.1, 0.2));
+        let json = log.summary_json().to_string_compact();
+        assert!(!json.contains("perturbations"), "{json}");
+        assert!(!json.contains("recovery_steps"), "{json}");
+    }
+
+    #[test]
+    fn perturbation_accounting_and_recovery_surface() {
+        let mut log = RunLog::new("chaos", 10);
+        // 4 steady steps at 1.0 s, a fault spikes steps 4-5, back by 6
+        for (i, s) in [1.0, 1.0, 1.0, 1.0, 3.0, 2.0, 1.02, 1.0].iter().enumerate() {
+            log.push(StepRecord { step: i, sim_compute_s: *s, ..Default::default() });
+        }
+        log.push_perturbation(PerturbationRecord { step: 4, event: "straggler:1x3".into() });
+        log.push_perturbation(PerturbationRecord { step: 9, event: "link:0x2".into() });
+        assert_eq!(log.first_perturbation_step(), Some(4));
+        assert_eq!(log.recovery_steps(), Some(2));
+        let json = log.summary_json().to_string_compact();
+        assert!(json.contains("\"perturbations\":2"), "{json}");
+        assert!(json.contains("\"first_perturb_step\":4"), "{json}");
+        assert!(json.contains("\"recovery_steps\":2"), "{json}");
+        // an unrecovered run reports -1
+        let mut stuck = RunLog::new("stuck", 10);
+        for (i, s) in [1.0, 1.0, 5.0, 5.0].iter().enumerate() {
+            stuck.push(StepRecord { step: i, sim_compute_s: *s, ..Default::default() });
+        }
+        stuck.push_perturbation(PerturbationRecord { step: 2, event: "nodeloss:1".into() });
+        assert_eq!(stuck.recovery_steps(), None);
+        let json = stuck.summary_json().to_string_compact();
+        assert!(json.contains("\"recovery_steps\":-1"), "{json}");
+        // the CSV schema is untouched: no chaos columns
+        let path = std::env::temp_dir().join("ta_moe_test_metrics_chaos.csv");
+        log.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(!text.lines().next().unwrap().contains("perturb"), "{text}");
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

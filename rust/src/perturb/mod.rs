@@ -1,0 +1,769 @@
+//! Scripted fault injection: the perturbation engine (ROADMAP item 5).
+//!
+//! Every scenario before this module priced a *static* cluster: clean
+//! links, healthy devices, a stationary gate distribution. The adaptive
+//! stack — EWMA gate tracking, the drift-tolerant [`PlanCache`], the
+//! placement engine, the overlap autotuner — exists precisely for
+//! networks that change under the job, so this module makes them change,
+//! deterministically and reproducibly, at step granularity through the
+//! [`Workload`] seam shared by training and serving.
+//!
+//! Four perturbation classes ([`PerturbKind`]):
+//!
+//! * **stragglers** — a per-device compute slowdown factor, constant over
+//!   a step window or *flapping* (alternating on/off every `flap_period`
+//!   steps, the classic intermittently-throttled host);
+//! * **degraded links** — a physical link's α and β scale by a factor at
+//!   the window start and scale back at its end. Per-pair costs re-derive
+//!   through the stored routing paths ([`Topology::scale_link`]) and the
+//!   mutation bumps the shared *topology epoch*, so the [`PlanCache`]
+//!   drops schedules and tuned chunk counts synthesised for the old
+//!   fabric and the step loop re-enters BvN synthesis + overlap
+//!   autotuning;
+//! * **node loss** — a device drops dead ([`Topology::mark_dead`]). The
+//!   world elastically shrinks: the corpse's sender row is dropped, the
+//!   tokens every surviving sender routed toward corpse-hosted experts
+//!   are re-gated onto live-hosted experts, and the placement engine
+//!   runs an *emergency evacuation* (amortisation gate bypassed, cost
+//!   still charged to the clock) that swaps loaded experts off the dead
+//!   host;
+//! * **gate drift** — a cyclic shift of the expert columns over a step
+//!   window: a regime change in the gate distribution that stresses
+//!   `GateLoadEwma` smoothing and the plan-cache tolerance band without
+//!   touching the fabric.
+//!
+//! Recovery is the observable: [`recovery_steps`] reports how many steps
+//! after a fault's onset the step clock returns within [`RECOVERY_TOL`]
+//! of the pre-fault steady state (the mean of the [`RECOVERY_WINDOW`]
+//! steps before onset). The schedule itself is pure data — parsing a
+//! [`ChaosSpec`] and replaying it produce the same faults on every run,
+//! and an empty spec (`off`) leaves every code path bit-identical to a
+//! run without the engine.
+//!
+//! [`PlanCache`]: crate::coordinator::PlanCache
+//! [`Workload`]: crate::coordinator::Workload
+//! [`Topology::scale_link`]: crate::topology::Topology::scale_link
+//! [`Topology::mark_dead`]: crate::topology::Topology::mark_dead
+
+use crate::placement::Placement;
+use crate::topology::Topology;
+use crate::util::Mat;
+
+/// Steps of pre-fault history averaged into the recovery baseline.
+pub const RECOVERY_WINDOW: usize = 8;
+/// Relative band around the baseline that counts as "recovered".
+pub const RECOVERY_TOL: f64 = 0.05;
+/// `end_step` sentinel for a window that never closes.
+pub const OPEN_END: usize = usize::MAX;
+
+/// What a perturbation does while its window is active.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PerturbKind {
+    /// Device `dev` computes `factor`× slower. `flap_period == 0` means
+    /// constant over the window; otherwise the slowdown alternates
+    /// on/off every `flap_period` steps from the window start.
+    Straggler { dev: usize, factor: f64, flap_period: usize },
+    /// Physical link `edge` degrades: α and β scale by `factor` at the
+    /// window start and scale back (×1/factor) at the window end.
+    LinkDegrade { edge: usize, factor: f64 },
+    /// Device `dev` drops dead at the window start (one-shot; the end is
+    /// meaningless — a corpse stays a corpse).
+    NodeLoss { dev: usize },
+    /// Gate regime shift: expert columns of the dispatch counts rotate
+    /// left by `shift` while the window is active.
+    GateDrift { shift: usize },
+}
+
+/// One scripted fault: a kind plus its step window `[start, end)`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Perturbation {
+    pub kind: PerturbKind,
+    /// First step (0-based) the fault is active / fires.
+    pub start_step: usize,
+    /// First step past the window ([`OPEN_END`] = never closes).
+    pub end_step: usize,
+}
+
+/// Is a straggler with window `[start, end)` and `flap_period` slowing
+/// its device down at `step`? With a zero period the slowdown holds over
+/// the whole window; otherwise it alternates on/off in `flap_period`
+/// blocks, starting on. (Mirrored in `python/mirrors/perturb_recovery.py`.)
+pub fn straggler_active(step: usize, start: usize, end: usize, flap_period: usize) -> bool {
+    if step < start || step >= end {
+        return false;
+    }
+    flap_period == 0 || ((step - start) / flap_period) % 2 == 0
+}
+
+/// Steps from fault onset until the step clock first returns within
+/// `tol` of the pre-onset steady state: baseline = mean of the `window`
+/// steps before `onset`, recovered at the first `t >= onset` with
+/// `step_s[t] <= baseline * (1 + tol)`. `None` when there is no
+/// pre-onset history or the clock never comes back.
+/// (Mirrored in `python/mirrors/perturb_recovery.py`.)
+pub fn recovery_steps(step_s: &[f64], onset: usize, window: usize, tol: f64) -> Option<usize> {
+    if onset == 0 || onset > step_s.len() || window == 0 {
+        return None;
+    }
+    let lo = onset.saturating_sub(window);
+    let base = &step_s[lo..onset];
+    let baseline = base.iter().sum::<f64>() / base.len() as f64;
+    (onset..step_s.len())
+        .find(|&t| step_s[t] <= baseline * (1.0 + tol))
+        .map(|t| t - onset)
+}
+
+/// A parsed `--chaos` schedule: zero or more [`Perturbation`]s. The
+/// grammar (one event, `+`-join for several; `off` for none):
+///
+/// ```text
+/// straggler:<dev>x<factor>@<start>[-<end>][:flap=<period>]
+/// link:<edge>x<factor>@<start>[-<end>]
+/// nodeloss:<dev>@<step>
+/// drift:<shift>@<start>[-<end>]
+/// ```
+///
+/// Windows are `[start, end)`; an omitted end never closes. `Display`
+/// emits the canonical spelling, so parse → format round-trips.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct ChaosSpec {
+    pub events: Vec<Perturbation>,
+}
+
+impl ChaosSpec {
+    /// The empty schedule (`off`).
+    pub fn off() -> ChaosSpec {
+        ChaosSpec::default()
+    }
+
+    /// No events scheduled?
+    pub fn is_off(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Check every referenced device/link exists on a `p`-device fabric
+    /// with `n_links` physical links.
+    pub fn validate(&self, p: usize, n_links: usize) -> Result<(), String> {
+        for ev in &self.events {
+            match ev.kind {
+                PerturbKind::Straggler { dev, factor, .. } => {
+                    if dev >= p {
+                        return Err(format!("straggler device {dev} >= P={p}"));
+                    }
+                    if factor < 1.0 {
+                        return Err(format!("straggler factor {factor} < 1 speeds a device up"));
+                    }
+                }
+                PerturbKind::LinkDegrade { edge, factor } => {
+                    if edge >= n_links {
+                        return Err(format!("link {edge} out of range ({n_links} links)"));
+                    }
+                    if factor <= 0.0 {
+                        return Err(format!("link factor {factor} must be positive"));
+                    }
+                }
+                PerturbKind::NodeLoss { dev } => {
+                    if dev >= p {
+                        return Err(format!("nodeloss device {dev} >= P={p}"));
+                    }
+                }
+                PerturbKind::GateDrift { .. } => {}
+            }
+        }
+        let dead = self
+            .events
+            .iter()
+            .filter(|e| matches!(e.kind, PerturbKind::NodeLoss { .. }))
+            .count();
+        if dead >= p {
+            return Err(format!("{dead} node losses would kill all {p} devices"));
+        }
+        Ok(())
+    }
+}
+
+/// `"<start>[-<end>]"` → `(start, end_exclusive)`.
+fn parse_window(s: &str) -> Result<(usize, usize), String> {
+    let bad = |e: &dyn std::fmt::Display| format!("bad step window {s:?}: {e}");
+    match s.split_once('-') {
+        None => {
+            let start = s.parse::<usize>().map_err(|e| bad(&e))?;
+            Ok((start, OPEN_END))
+        }
+        Some((a, b)) => {
+            let start = a.parse::<usize>().map_err(|e| bad(&e))?;
+            let end = b.parse::<usize>().map_err(|e| bad(&e))?;
+            if end <= start {
+                return Err(format!("empty step window {s:?} (end <= start)"));
+            }
+            Ok((start, end))
+        }
+    }
+}
+
+/// `"<id>x<factor>@<window>"` → `(id, factor, start, end)`.
+fn parse_target(s: &str) -> Result<(usize, f64, usize, usize), String> {
+    let (head, window) = s
+        .split_once('@')
+        .ok_or_else(|| format!("missing @<step window> in {s:?}"))?;
+    let (id, factor) = head
+        .split_once('x')
+        .ok_or_else(|| format!("missing x<factor> in {head:?}"))?;
+    let id = id.parse::<usize>().map_err(|e| format!("bad id {id:?}: {e}"))?;
+    let factor =
+        factor.parse::<f64>().map_err(|e| format!("bad factor {factor:?}: {e}"))?;
+    let (start, end) = parse_window(window)?;
+    Ok((id, factor, start, end))
+}
+
+impl std::str::FromStr for ChaosSpec {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<ChaosSpec, String> {
+        let s = s.trim();
+        if s.is_empty() || s == "off" {
+            return Ok(ChaosSpec::off());
+        }
+        let mut events = Vec::new();
+        for part in s.split('+') {
+            let part = part.trim();
+            let (family, rest) = part
+                .split_once(':')
+                .ok_or_else(|| format!("chaos event {part:?} has no <family>: prefix"))?;
+            let ev = match family {
+                "straggler" => {
+                    let (body, flap_period) = match rest.rsplit_once(":flap=") {
+                        Some((body, n)) => {
+                            let period = n
+                                .parse::<usize>()
+                                .map_err(|e| format!("bad flap period {n:?}: {e}"))?;
+                            if period == 0 {
+                                return Err("flap period must be >= 1".into());
+                            }
+                            (body, period)
+                        }
+                        None => (rest, 0),
+                    };
+                    let (dev, factor, start_step, end_step) = parse_target(body)?;
+                    Perturbation {
+                        kind: PerturbKind::Straggler { dev, factor, flap_period },
+                        start_step,
+                        end_step,
+                    }
+                }
+                "link" => {
+                    let (edge, factor, start_step, end_step) = parse_target(rest)?;
+                    Perturbation {
+                        kind: PerturbKind::LinkDegrade { edge, factor },
+                        start_step,
+                        end_step,
+                    }
+                }
+                "nodeloss" => {
+                    let (dev, step) = rest
+                        .split_once('@')
+                        .ok_or_else(|| format!("missing @<step> in {rest:?}"))?;
+                    let dev =
+                        dev.parse::<usize>().map_err(|e| format!("bad device {dev:?}: {e}"))?;
+                    let step = step
+                        .parse::<usize>()
+                        .map_err(|e| format!("bad step {step:?}: {e}"))?;
+                    Perturbation {
+                        kind: PerturbKind::NodeLoss { dev },
+                        start_step: step,
+                        end_step: OPEN_END,
+                    }
+                }
+                "drift" => {
+                    let (shift, window) = rest
+                        .split_once('@')
+                        .ok_or_else(|| format!("missing @<step window> in {rest:?}"))?;
+                    let shift = shift
+                        .parse::<usize>()
+                        .map_err(|e| format!("bad shift {shift:?}: {e}"))?;
+                    let (start_step, end_step) = parse_window(window)?;
+                    Perturbation {
+                        kind: PerturbKind::GateDrift { shift },
+                        start_step,
+                        end_step,
+                    }
+                }
+                other => {
+                    return Err(format!(
+                        "unknown chaos family {other:?} (known: straggler, link, nodeloss, drift)"
+                    ))
+                }
+            };
+            events.push(ev);
+        }
+        Ok(ChaosSpec { events })
+    }
+}
+
+impl std::fmt::Display for ChaosSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.events.is_empty() {
+            return write!(f, "off");
+        }
+        let window = |start: usize, end: usize| {
+            if end == OPEN_END {
+                format!("{start}")
+            } else {
+                format!("{start}-{end}")
+            }
+        };
+        let parts: Vec<String> = self
+            .events
+            .iter()
+            .map(|ev| match ev.kind {
+                PerturbKind::Straggler { dev, factor, flap_period } => {
+                    let flap = if flap_period > 0 {
+                        format!(":flap={flap_period}")
+                    } else {
+                        String::new()
+                    };
+                    format!(
+                        "straggler:{dev}x{factor}@{}{flap}",
+                        window(ev.start_step, ev.end_step)
+                    )
+                }
+                PerturbKind::LinkDegrade { edge, factor } => {
+                    format!("link:{edge}x{factor}@{}", window(ev.start_step, ev.end_step))
+                }
+                PerturbKind::NodeLoss { dev } => {
+                    format!("nodeloss:{dev}@{}", ev.start_step)
+                }
+                PerturbKind::GateDrift { shift } => {
+                    format!("drift:{shift}@{}", window(ev.start_step, ev.end_step))
+                }
+            })
+            .collect();
+        write!(f, "{}", parts.join("+"))
+    }
+}
+
+/// A topology-or-log action firing at one step, returned by
+/// [`ChaosEngine::fired`] for the step loop to execute and record.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FiredEvent {
+    /// Scale link `edge`'s α/β by `factor` (a degradation onset, or its
+    /// restore with the reciprocal factor). Bumps the topology epoch.
+    LinkScale { edge: usize, factor: f64 },
+    /// Device `dev` dies now. Bumps the topology epoch and triggers the
+    /// emergency evacuation.
+    NodeLoss { dev: usize },
+    /// A straggler window opens (log-only: the slowdown itself flows
+    /// through [`ChaosEngine::slowdown`] every step).
+    StragglerOn { dev: usize, factor: f64 },
+    /// A gate-drift window opens (log-only: the shift flows through
+    /// [`ChaosEngine::transform_counts`] every step).
+    DriftOn { shift: usize },
+}
+
+impl std::fmt::Display for FiredEvent {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            FiredEvent::LinkScale { edge, factor } => write!(f, "link:{edge}x{factor}"),
+            FiredEvent::NodeLoss { dev } => write!(f, "nodeloss:{dev}"),
+            FiredEvent::StragglerOn { dev, factor } => write!(f, "straggler:{dev}x{factor}"),
+            FiredEvent::DriftOn { shift } => write!(f, "drift:{shift}"),
+        }
+    }
+}
+
+/// Replays a [`ChaosSpec`] against a step counter. The engine itself is
+/// pure bookkeeping — the step loop asks what [`fired`](Self::fired)
+/// this step (and executes the topology mutations), pushes the dispatch
+/// counts through [`transform_counts`](Self::transform_counts), prices
+/// compute under [`slowdown`](Self::slowdown), then
+/// [`advance`](Self::advance)s the clock.
+#[derive(Clone, Debug)]
+pub struct ChaosEngine {
+    spec: ChaosSpec,
+    step: usize,
+}
+
+impl ChaosEngine {
+    pub fn new(spec: ChaosSpec) -> ChaosEngine {
+        ChaosEngine { spec, step: 0 }
+    }
+
+    /// The schedule being replayed.
+    pub fn spec(&self) -> &ChaosSpec {
+        &self.spec
+    }
+
+    /// The current (0-based) step the next queries answer for.
+    pub fn step(&self) -> usize {
+        self.step
+    }
+
+    /// Move to the next step. Call once per priced step, after the
+    /// queries.
+    pub fn advance(&mut self) {
+        self.step += 1;
+    }
+
+    /// Actions firing at the current step, in spec order: link scalings
+    /// at window boundaries (restore uses the reciprocal factor), node
+    /// deaths, and log-only window-open markers for stragglers and
+    /// drift.
+    pub fn fired(&self) -> Vec<FiredEvent> {
+        let mut out = Vec::new();
+        for ev in &self.spec.events {
+            match ev.kind {
+                PerturbKind::LinkDegrade { edge, factor } => {
+                    if self.step == ev.start_step {
+                        out.push(FiredEvent::LinkScale { edge, factor });
+                    }
+                    if self.step == ev.end_step {
+                        out.push(FiredEvent::LinkScale { edge, factor: 1.0 / factor });
+                    }
+                }
+                PerturbKind::NodeLoss { dev } => {
+                    if self.step == ev.start_step {
+                        out.push(FiredEvent::NodeLoss { dev });
+                    }
+                }
+                PerturbKind::Straggler { dev, factor, .. } => {
+                    if self.step == ev.start_step {
+                        out.push(FiredEvent::StragglerOn { dev, factor });
+                    }
+                }
+                PerturbKind::GateDrift { shift } => {
+                    if self.step == ev.start_step {
+                        out.push(FiredEvent::DriftOn { shift });
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Per-device compute slowdown factors for the current step, or
+    /// `None` when every factor is 1 (the clean-path guarantee: a step
+    /// with no active straggler prices bit-identically to a run without
+    /// the engine). Concurrent stragglers on one device compose
+    /// multiplicatively; dead devices are clamped back to 1 (a corpse's
+    /// idle dense clock must not become the compute bound).
+    pub fn slowdown(&self, topo: &Topology) -> Option<Vec<f64>> {
+        let mut s = vec![1.0; topo.p()];
+        let mut any = false;
+        for ev in &self.spec.events {
+            if let PerturbKind::Straggler { dev, factor, flap_period } = ev.kind {
+                if straggler_active(self.step, ev.start_step, ev.end_step, flap_period)
+                    && topo.is_alive(dev)
+                {
+                    s[dev] *= factor;
+                    any = any || factor != 1.0;
+                }
+            }
+        }
+        if any {
+            Some(s)
+        } else {
+            None
+        }
+    }
+
+    /// Rewrite one step's dispatch counts (tokens, P×N) for the current
+    /// step: active gate-drift windows rotate the expert columns, then —
+    /// when any device is dead — the elastic re-scale applies: dead
+    /// senders' rows drop to zero (the world shrank; survivors keep
+    /// their own batch) and each live sender's tokens aimed at
+    /// corpse-hosted experts re-gate onto its live-hosted experts,
+    /// proportionally to its existing distribution (uniform when it sent
+    /// them nothing). Live senders' row sums are conserved. With no
+    /// active drift and no corpse the counts are untouched (bit-identity
+    /// for the clean path).
+    pub fn transform_counts(
+        &self,
+        counts: &mut Mat,
+        topo: &Topology,
+        placement: Option<&Placement>,
+    ) {
+        let p = topo.p();
+        let n = counts.cols();
+        assert_eq!(counts.rows(), p, "counts rows");
+        let shift: usize = self
+            .spec
+            .events
+            .iter()
+            .filter_map(|ev| match ev.kind {
+                PerturbKind::GateDrift { shift }
+                    if self.step >= ev.start_step && self.step < ev.end_step =>
+                {
+                    Some(shift)
+                }
+                _ => None,
+            })
+            .sum();
+        if shift % n != 0 {
+            let shift = shift % n;
+            let old = counts.clone();
+            for i in 0..p {
+                for e in 0..n {
+                    counts.set(i, e, old.get(i, (e + shift) % n));
+                }
+            }
+        }
+        if topo.n_alive() == p {
+            return;
+        }
+        let e_per_dev = n / p;
+        let host = |e: usize| placement.map_or(e / e_per_dev, |pl| pl.device_of(e));
+        let live_cols: Vec<usize> = (0..n).filter(|&e| topo.is_alive(host(e))).collect();
+        let dead_cols: Vec<usize> = (0..n).filter(|&e| !topo.is_alive(host(e))).collect();
+        assert!(!live_cols.is_empty(), "no live expert host left");
+        for i in 0..p {
+            if !topo.is_alive(i) {
+                for e in 0..n {
+                    counts.set(i, e, 0.0);
+                }
+                continue;
+            }
+            let stranded: f64 = dead_cols.iter().map(|&e| counts.get(i, e)).sum();
+            if stranded > 0.0 {
+                let live_sum: f64 = live_cols.iter().map(|&e| counts.get(i, e)).sum();
+                if live_sum > 0.0 {
+                    for &e in &live_cols {
+                        let v = counts.get(i, e);
+                        counts.set(i, e, v + stranded * (v / live_sum));
+                    }
+                } else {
+                    let share = stranded / live_cols.len() as f64;
+                    for &e in &live_cols {
+                        counts.set(i, e, share);
+                    }
+                }
+            }
+            for &e in &dead_cols {
+                counts.set(i, e, 0.0);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::presets;
+
+    fn parse(s: &str) -> ChaosSpec {
+        s.parse().unwrap()
+    }
+
+    #[test]
+    fn spec_parse_display_round_trips() {
+        for s in [
+            "off",
+            "straggler:0x2@10",
+            "straggler:3x1.5@10-50",
+            "straggler:1x4@0-64:flap=8",
+            "link:2x4@16-48",
+            "link:0x0.5@5",
+            "nodeloss:2@32",
+            "drift:1@8-40",
+            "straggler:0x2@4-20+link:1x8@10-30+nodeloss:3@16+drift:2@24",
+        ] {
+            let spec = parse(s);
+            assert_eq!(spec.to_string(), s, "canonical display");
+            assert_eq!(parse(&spec.to_string()), spec, "round-trip");
+        }
+        assert_eq!(parse(""), ChaosSpec::off());
+        assert!(parse("off").is_off());
+        assert!(!parse("nodeloss:0@1").is_off());
+    }
+
+    #[test]
+    fn spec_rejects_malformed_events() {
+        for s in [
+            "straggler:0@10",          // missing factor
+            "straggler:0x2",           // missing window
+            "straggler:0x2@9:flap=0",  // zero flap period
+            "link:ax2@3",              // non-numeric edge
+            "link:0x2@8-8",            // empty window
+            "link:0x2@9-3",            // inverted window
+            "nodeloss:1",              // missing step
+            "drift:@4",                // missing shift
+            "meteor:0@3",              // unknown family
+            "straggler",               // no payload
+        ] {
+            assert!(s.parse::<ChaosSpec>().is_err(), "{s:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn validate_checks_world_bounds() {
+        // table1 tree: P=4, 4 device downlinks + 1 uplink = 5 links
+        let topo = presets::table1();
+        let (p, n_links) = (topo.p(), topo.links().len());
+        assert!(parse("straggler:3x2@0").validate(p, n_links).is_ok());
+        assert!(parse("straggler:4x2@0").validate(p, n_links).is_err());
+        assert!(parse("straggler:0x0.5@0").validate(p, n_links).is_err());
+        assert!(parse("link:4x2@0").validate(p, n_links).is_ok());
+        assert!(parse("link:5x2@0").validate(p, n_links).is_err());
+        assert!(parse("nodeloss:3@1").validate(p, n_links).is_ok());
+        assert!(parse("nodeloss:4@1").validate(p, n_links).is_err());
+        let all_dead = "nodeloss:0@1+nodeloss:1@2+nodeloss:2@3+nodeloss:3@4";
+        assert!(parse(all_dead).validate(p, n_links).is_err());
+    }
+
+    #[test]
+    fn straggler_active_windows_and_flaps() {
+        // constant window [4, 8)
+        assert!(!straggler_active(3, 4, 8, 0));
+        assert!(straggler_active(4, 4, 8, 0));
+        assert!(straggler_active(7, 4, 8, 0));
+        assert!(!straggler_active(8, 4, 8, 0));
+        // open end
+        assert!(straggler_active(1_000_000, 4, OPEN_END, 0));
+        // flap period 2 from step 10: on 10-11, off 12-13, on 14-15, …
+        for (step, on) in [(10, true), (11, true), (12, false), (13, false), (14, true)] {
+            assert_eq!(straggler_active(step, 10, OPEN_END, 2), on, "step {step}");
+        }
+        // the window still clips the flapping
+        assert!(!straggler_active(14, 10, 14, 2));
+    }
+
+    #[test]
+    fn recovery_steps_finds_the_first_return() {
+        let clock = [1.0, 1.0, 1.0, 1.0, 3.0, 2.0, 1.04, 1.0];
+        // baseline = 1.0; tol 5% → recovered at t=6 (1.04 <= 1.05)
+        assert_eq!(recovery_steps(&clock, 4, 8, 0.05), Some(2));
+        // tighter band: only t=7 qualifies
+        assert_eq!(recovery_steps(&clock, 4, 8, 0.01), Some(3));
+        // instant recovery: onset step already inside the band
+        assert_eq!(recovery_steps(&[1.0, 1.0, 1.0], 2, 8, 0.05), Some(0));
+        // never returns
+        assert_eq!(recovery_steps(&[1.0, 1.0, 5.0, 5.0], 2, 8, 0.05), None);
+        // no pre-onset history
+        assert_eq!(recovery_steps(&clock, 0, 8, 0.05), None);
+        assert_eq!(recovery_steps(&[], 1, 8, 0.05), None);
+    }
+
+    #[test]
+    fn fired_marks_window_boundaries() {
+        let spec = parse("link:1x4@2-5+nodeloss:3@2+straggler:0x2@3+drift:1@4-6");
+        let mut eng = ChaosEngine::new(spec);
+        assert_eq!(eng.step(), 0);
+        assert!(eng.fired().is_empty());
+        eng.advance();
+        eng.advance();
+        assert_eq!(
+            eng.fired(),
+            vec![
+                FiredEvent::LinkScale { edge: 1, factor: 4.0 },
+                FiredEvent::NodeLoss { dev: 3 },
+            ]
+        );
+        eng.advance();
+        assert_eq!(eng.fired(), vec![FiredEvent::StragglerOn { dev: 0, factor: 2.0 }]);
+        eng.advance();
+        assert_eq!(eng.fired(), vec![FiredEvent::DriftOn { shift: 1 }]);
+        eng.advance();
+        // link restore fires at the window end with the reciprocal factor
+        assert_eq!(eng.fired(), vec![FiredEvent::LinkScale { edge: 1, factor: 0.25 }]);
+        assert_eq!(eng.fired()[0].to_string(), "link:1x0.25");
+        eng.advance();
+        assert!(eng.fired().is_empty(), "drift close is silent");
+    }
+
+    #[test]
+    fn slowdown_composes_and_respects_liveness() {
+        let mut topo = presets::table1();
+        let spec = parse("straggler:1x2@0+straggler:1x3@0-4+straggler:2x1.5@8");
+        let mut eng = ChaosEngine::new(spec);
+        assert_eq!(eng.slowdown(&topo), Some(vec![1.0, 6.0, 1.0, 1.0]));
+        for _ in 0..4 {
+            eng.advance();
+        }
+        assert_eq!(eng.slowdown(&topo), Some(vec![1.0, 2.0, 1.0, 1.0]));
+        for _ in 0..4 {
+            eng.advance();
+        }
+        assert_eq!(eng.slowdown(&topo), Some(vec![1.0, 2.0, 1.5, 1.0]));
+        // a dead straggler is no straggler
+        topo.mark_dead(1);
+        assert_eq!(eng.slowdown(&topo), Some(vec![1.0, 1.0, 1.5, 1.0]));
+        // no active straggler at all → None, the clean-path guarantee
+        let eng = ChaosEngine::new(parse("link:0x2@0"));
+        assert_eq!(eng.slowdown(&topo), None);
+    }
+
+    #[test]
+    fn transform_counts_is_identity_on_the_clean_path() {
+        let topo = presets::table1();
+        let eng = ChaosEngine::new(parse("straggler:0x2@0+link:0x2@0"));
+        let counts = Mat::from_fn(4, 4, |i, e| (i * 4 + e) as f64);
+        let mut got = counts.clone();
+        eng.transform_counts(&mut got, &topo, None);
+        assert_eq!(got.data(), counts.data(), "bit-identical");
+    }
+
+    #[test]
+    fn drift_rotates_expert_columns_inside_the_window() {
+        let topo = presets::table1();
+        let mut eng = ChaosEngine::new(parse("drift:1@1-3"));
+        let counts = Mat::from_fn(4, 4, |_, e| e as f64);
+        let mut got = counts.clone();
+        eng.transform_counts(&mut got, &topo, None);
+        assert_eq!(got.data(), counts.data(), "inactive before the window");
+        eng.advance();
+        let mut got = counts.clone();
+        eng.transform_counts(&mut got, &topo, None);
+        for e in 0..4 {
+            assert_eq!(got.get(0, e), ((e + 1) % 4) as f64, "rotated left by 1");
+        }
+        eng.advance();
+        eng.advance();
+        let mut got = counts.clone();
+        eng.transform_counts(&mut got, &topo, None);
+        assert_eq!(got.data(), counts.data(), "inactive after the window");
+    }
+
+    #[test]
+    fn node_loss_drops_the_corpse_and_conserves_live_rows() {
+        let mut topo = presets::table1();
+        topo.mark_dead(3);
+        let eng = ChaosEngine::new(parse("nodeloss:3@0"));
+        let mut counts = Mat::from_fn(4, 4, |_, _| 8.0);
+        eng.transform_counts(&mut counts, &topo, None);
+        for e in 0..4 {
+            assert_eq!(counts.get(3, e), 0.0, "dead sender row dropped");
+        }
+        for i in 0..3 {
+            assert_eq!(counts.get(i, 3), 0.0, "dead-hosted column emptied");
+        }
+        for i in 0..3 {
+            let row: f64 = (0..4).map(|e| counts.get(i, e)).sum();
+            assert!((row - 32.0).abs() < 1e-12, "live row {i} conserved: {row}");
+            // proportional re-gate of a uniform row stays uniform
+            for e in 0..3 {
+                assert!((counts.get(i, e) - 32.0 / 3.0).abs() < 1e-12);
+            }
+        }
+        // a sender with zero live-hosted tokens re-gates uniformly
+        let mut counts = Mat::zeros(4, 4);
+        counts.set(0, 3, 9.0);
+        eng.transform_counts(&mut counts, &topo, None);
+        for e in 0..3 {
+            assert!((counts.get(0, e) - 3.0).abs() < 1e-12);
+        }
+        assert_eq!(counts.get(0, 3), 0.0);
+    }
+
+    #[test]
+    fn node_loss_follows_the_placement_map() {
+        // expert 3 was evacuated to device 0, expert 0 parked on corpse 3:
+        // the dead-hosted column is 0, not 3
+        let mut topo = presets::table1();
+        topo.mark_dead(3);
+        let pl = Placement::from_device_of(vec![3, 1, 2, 0], 4, 1).unwrap();
+        let eng = ChaosEngine::new(parse("nodeloss:3@0"));
+        let mut counts = Mat::from_fn(4, 4, |_, _| 4.0);
+        eng.transform_counts(&mut counts, &topo, Some(&pl));
+        assert_eq!(counts.get(0, 0), 0.0, "expert 0 now corpse-hosted");
+        assert!(counts.get(0, 3) > 4.0, "expert 3 absorbs re-gated share");
+    }
+}

@@ -284,6 +284,70 @@ impl PlacementEngine {
             realized_saving_s,
         })
     }
+
+    /// Emergency evacuation on node loss: swap every loaded expert hosted
+    /// on `dead_dev` with the coldest expert hosted on a live device, so
+    /// only (near-)dead load parks on the corpse. Unlike
+    /// [`maybe_replace`](Self::maybe_replace) this bypasses the cadence
+    /// and amortisation gates — there is no choice to amortise, the host
+    /// is gone — but the migration is still priced over the real links
+    /// and must be charged to the clock by the caller. The placement
+    /// stays a full `e_per_dev`-slot permutation (the corpse keeps
+    /// hosting its quota of cold experts; the chaos layer re-gates their
+    /// traffic to live hosts), so the permutation invariant survives.
+    /// Returns `None` when nothing on the corpse carries load worth
+    /// moving (then no epoch bump either).
+    pub fn evacuate(&mut self, topo: &Topology, dead_dev: usize) -> Option<Migration> {
+        assert_eq!(topo.p(), self.placement.p(), "topology/placement world mismatch");
+        assert!(dead_dev < self.placement.p(), "device {dead_dev} out of range");
+        let mut candidate = self.placement.clone();
+        let loads = self.loads.loads();
+        // hottest evacuees first: if parking spots run out, the hottest
+        // experts are guaranteed to have been rescued
+        let mut evacuees = candidate.experts_on(dead_dev);
+        evacuees.sort_by(|&a, &b| {
+            loads.col_sum(b).total_cmp(&loads.col_sum(a)).then(a.cmp(&b))
+        });
+        for e in evacuees {
+            if loads.col_sum(e) <= 0.0 {
+                break; // remaining evacuees are cold — nothing to rescue
+            }
+            // coldest expert currently hosted on a live device (ties break
+            // toward the lower expert id: deterministic)
+            let cold = (0..candidate.n_experts())
+                .filter(|&x| {
+                    let d = candidate.device_of(x);
+                    d != dead_dev && topo.is_alive(d)
+                })
+                .min_by(|&a, &b| {
+                    loads.col_sum(a).total_cmp(&loads.col_sum(b)).then(a.cmp(&b))
+                });
+            let Some(cold) = cold else { break };
+            if loads.col_sum(cold) >= loads.col_sum(e) {
+                break; // swapping would park a hotter expert on the corpse
+            }
+            candidate.swap_experts(e, cold);
+        }
+        if candidate == self.placement {
+            return None;
+        }
+        let mut obj = PlacementObjective::new(topo, self.token_bytes);
+        let cost_s = obj.migration_cost(&self.placement, &candidate, self.expert_bytes);
+        let moved = self.placement.moved_experts(&candidate);
+        let bytes = moved.len() as f64 * self.expert_bytes;
+        self.placement = candidate;
+        self.epoch += 1;
+        Some(Migration {
+            step: self.steps,
+            moved,
+            bytes,
+            cost_s,
+            // an evacuation is not an optimisation: there is no "kept the
+            // old placement" counterfactual to price a saving against
+            predicted_saving_s: 0.0,
+            realized_saving_s: 0.0,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -429,6 +493,46 @@ mod tests {
             eng.observe(&counts);
             assert!(eng.maybe_replace(&topo, &counts).is_none());
         }
+        assert_eq!(eng.epoch(), 0);
+        assert!(eng.placement().is_identity());
+    }
+
+    #[test]
+    fn evacuate_rescues_hot_experts_and_keeps_the_permutation() {
+        let mut topo = presets::table1();
+        let mut eng = engine(PlacementConfig::default());
+        // expert 3 (hosted on device 3) is the hottest column; expert 0 is
+        // stone cold, so it becomes the parking spot on the corpse
+        let counts = Mat::from_fn(4, 4, |_, e| match e {
+            3 => 100.0,
+            0 => 0.0,
+            _ => 10.0,
+        });
+        eng.observe(&counts);
+        topo.mark_dead(3);
+        let m = eng.evacuate(&topo, 3).expect("hot expert must be rescued");
+        assert_eq!(eng.epoch(), 1);
+        assert!(m.moved.contains(&3), "expert 3 must move: {:?}", m.moved);
+        assert!(m.cost_s > 0.0, "weights crossed real links");
+        assert_eq!(m.predicted_saving_s, 0.0);
+        assert_eq!(m.bytes, m.moved.len() as f64 * 16384.0);
+        // still a valid e_per_dev-slot permutation…
+        let pl = eng.placement().clone();
+        Placement::from_device_of(pl.device_map().to_vec(), 4, 1).unwrap();
+        // …with expert 3 off the corpse and the cold expert parked on it
+        assert!(topo.is_alive(pl.device_of(3)));
+        assert_eq!(pl.device_of(0), 3);
+        // idempotent: the corpse now hosts only the coldest expert
+        assert!(eng.evacuate(&topo, 3).is_none());
+        assert_eq!(eng.epoch(), 1);
+    }
+
+    #[test]
+    fn evacuate_is_a_noop_without_observed_load() {
+        let mut topo = presets::table1();
+        let mut eng = engine(PlacementConfig::default());
+        topo.mark_dead(2);
+        assert!(eng.evacuate(&topo, 2).is_none(), "zero loads: nothing to rescue");
         assert_eq!(eng.epoch(), 0);
         assert!(eng.placement().is_identity());
     }

@@ -47,6 +47,9 @@ pub struct ContinuousBatcher {
     inflight: Vec<Sequence>,
     per_dev: Vec<usize>,
     max_inflight_per_dev: usize,
+    /// Devices lost to a node failure: closed to admission forever (see
+    /// [`Self::fail_device`]).
+    dead: Vec<bool>,
 }
 
 impl ContinuousBatcher {
@@ -58,6 +61,7 @@ impl ContinuousBatcher {
             inflight: Vec::new(),
             per_dev: vec![0; p],
             max_inflight_per_dev,
+            dead: vec![false; p],
         }
     }
 
@@ -90,8 +94,51 @@ impl ContinuousBatcher {
             .per_dev
             .iter()
             .enumerate()
+            .filter(|&(d, _)| !self.dead[d])
             .min_by_key(|&(d, &load)| (load, d))?;
         (load < self.max_inflight_per_dev).then_some(dev)
+    }
+
+    /// Device `dev` dies: close it to admission forever and re-home its
+    /// in-flight sequences (in id order) onto the least-loaded surviving
+    /// devices. Emergency re-admission deliberately ignores the
+    /// per-device slot cap — dropping accepted work is worse than
+    /// transiently oversubscribing a survivor's KV budget; admission of
+    /// *new* requests still honours the cap, so the overshoot drains as
+    /// sequences finish. No request is ever lost (the conservation
+    /// invariant the node-loss acceptance test pins). Returns how many
+    /// sequences were re-homed; idempotent on an already-dead device.
+    pub fn fail_device(&mut self, dev: usize) -> usize {
+        assert!(dev < self.per_dev.len(), "device {dev} out of range");
+        if self.dead[dev] {
+            return 0;
+        }
+        self.dead[dev] = true;
+        assert!(self.dead.iter().any(|d| !d), "cannot fail the last device");
+        let mut stranded: Vec<usize> = (0..self.inflight.len())
+            .filter(|&i| self.inflight[i].device == dev)
+            .collect();
+        stranded.sort_by_key(|&i| self.inflight[i].id);
+        let rehomed = stranded.len();
+        for i in stranded {
+            let new_dev = self
+                .per_dev
+                .iter()
+                .enumerate()
+                .filter(|&(d, _)| !self.dead[d])
+                .min_by_key(|&(d, &load)| (load, d))
+                .map(|(d, _)| d)
+                .expect("a live device exists");
+            self.per_dev[dev] -= 1;
+            self.per_dev[new_dev] += 1;
+            self.inflight[i].device = new_dev;
+        }
+        rehomed
+    }
+
+    /// Is `dev` closed to admission after a node failure?
+    pub fn is_dead(&self, dev: usize) -> bool {
+        self.dead[dev]
     }
 
     /// This iteration's token bill per device: prompt length for
@@ -209,6 +256,48 @@ mod tests {
         assert_eq!(done[0].first_token_s, done[0].finish_s);
         assert_eq!(done[0].tpot_s(), 0.0);
         assert!(b.done());
+    }
+
+    #[test]
+    fn fail_device_rehomes_inflight_and_closes_admission() {
+        let mut trace = vec![req(0.0, 4, 5); 6];
+        trace.extend(vec![req(0.5, 4, 5); 2]);
+        let mut b = ContinuousBatcher::new(trace, 3, 4);
+        assert_eq!(b.admit(0.0), 6); // 2 per device, late pair not arrived
+        assert_eq!(b.fail_device(1), 2);
+        assert!(b.is_dead(1));
+        assert_eq!(b.fail_device(1), 0); // idempotent
+        // nobody lost, nobody left on the corpse, 3 on each survivor
+        assert_eq!(b.inflight_len(), 6);
+        let t = b.tokens_per_device();
+        assert_eq!(t[1], 0);
+        assert_eq!(t[0] + t[2], 6 * 4);
+        // the late arrivals only ever land on survivors
+        assert_eq!(b.admit(1.0), 2);
+        assert_eq!(b.tokens_per_device()[1], 0);
+        assert_eq!(b.inflight_len(), 8);
+    }
+
+    #[test]
+    fn fail_device_conserves_every_request_to_retirement() {
+        let trace = vec![req(0.0, 4, 3); 4];
+        let mut b = ContinuousBatcher::new(trace, 2, 4);
+        b.admit(0.0);
+        b.fail_device(0);
+        let mut done = Vec::new();
+        for i in 1..=3 {
+            done.extend(b.advance(i as f64));
+        }
+        assert_eq!(done.len(), 4);
+        assert!(b.done());
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot fail the last device")]
+    fn failing_every_device_panics() {
+        let mut b = ContinuousBatcher::new(vec![req(0.0, 4, 1)], 2, 2);
+        b.fail_device(0);
+        b.fail_device(1);
     }
 
     #[test]

@@ -54,8 +54,9 @@ use crate::coordinator::{
     converged_counts, parse_policy, DispatchPolicy, ModelShape, PolicyInputs, StepProfile,
     TaMoe, Workload, WorkloadCore, PLAN_CACHE_TOL,
 };
-use crate::metrics::{MigrationRecord, RequestRecord, RunLog, StepRecord};
+use crate::metrics::{MigrationRecord, PerturbationRecord, RequestRecord, RunLog, StepRecord};
 use crate::overlap::OverlapMode;
+use crate::perturb::ChaosSpec;
 use crate::placement::{Placement, PlacementConfig};
 use crate::runtime::ModelCfg;
 use crate::topology::Topology;
@@ -92,6 +93,8 @@ pub struct ServeBuilder {
     slo_s: f64,
     max_inflight_per_dev: usize,
     zipf_s: f64,
+    chaos: ChaosSpec,
+    chaos_spec: Option<String>,
     label: Option<String>,
 }
 
@@ -118,6 +121,8 @@ impl Default for ServeBuilder {
             slo_s: 0.2,
             max_inflight_per_dev: 8,
             zipf_s: 1.0,
+            chaos: ChaosSpec::off(),
+            chaos_spec: None,
             label: None,
         }
     }
@@ -274,6 +279,20 @@ impl ServeBuilder {
         self
     }
 
+    /// Inject this scripted fault stream (see [`ChaosSpec`]).
+    pub fn chaos(mut self, spec: ChaosSpec) -> Self {
+        self.chaos = spec;
+        self
+    }
+
+    /// Parse the fault stream from a `--chaos` spec at build time
+    /// (`off`, or `+`-joined `straggler:…`, `link:…`, `nodeloss:…`,
+    /// `drift:…` events).
+    pub fn chaos_named(mut self, spec: impl Into<String>) -> Self {
+        self.chaos_spec = Some(spec.into());
+        self
+    }
+
     pub fn label(mut self, label: impl Into<String>) -> Self {
         self.label = Some(label.into());
         self
@@ -332,6 +351,10 @@ impl ServeBuilder {
         anyhow::ensure!(overlap != OverlapMode::Fixed(0), "overlap chunk count must be >= 1");
         anyhow::ensure!(self.trace.n_requests > 0, "trace must carry at least one request");
         anyhow::ensure!(self.slo_s > 0.0, "SLO must be positive");
+        let chaos = match self.chaos_spec {
+            Some(spec) => spec.parse::<ChaosSpec>().map_err(anyhow::Error::msg)?,
+            None => self.chaos,
+        };
 
         let inputs = policy.runtime_inputs(&topo, &cfg);
         let route = route_matrix(&inputs, policy.as_ref(), &topo, &cfg, self.zipf_s);
@@ -354,7 +377,8 @@ impl ServeBuilder {
             StepProfile::decode(),
             self.plan_cache_tol,
             self.placement,
-        );
+        )
+        .with_chaos(chaos)?;
         let identity = Placement::identity(cfg.p, cfg.e_per_dev);
         let rng = Rng::seed_from_u64(self.trace.seed ^ ROUTE_SEED_SALT);
         Ok(ServeSession {
@@ -450,16 +474,61 @@ impl ServeSession {
         }
         let admitted = self.batcher.admit(self.now_s);
         let inflight = self.batcher.inflight_len();
-        let tokens = self.batcher.tokens_per_device();
-        let counts = self.sample_counts(&tokens);
+        let mut tokens = self.batcher.tokens_per_device();
+        let mut counts = self.sample_counts(&tokens);
+
+        // chaos: the fault stream fires before loads are observed, so the
+        // EWMA, the migration gate, and the pricing all see the perturbed
+        // world. A node death drains its in-flight sequences onto the
+        // survivors and evacuates its experts, charged like an accepted
+        // migration (the death iteration prices the surviving work; the
+        // re-homed sequences bill from their new devices next iteration).
+        let mut migration_s = 0.0;
+        if let Some(report) = self.core.chaos_step(&mut counts) {
+            for ev in &report.events {
+                self.log.push_perturbation(PerturbationRecord {
+                    step: self.log.records.len(),
+                    event: ev.clone(),
+                });
+            }
+            for &dev in &report.dead_devices {
+                self.batcher.fail_device(dev);
+            }
+            if !report.dead_devices.is_empty() {
+                tokens = self.batcher.tokens_per_device();
+            }
+            if let Some(m) = report.migration {
+                migration_s += m.cost_s;
+                let placement =
+                    self.core.placement().expect("evacuation implies placement");
+                let inputs = self
+                    .policy
+                    .runtime_inputs_placed(self.core.topology(), &self.cfg, placement);
+                self.route = route_matrix(
+                    &inputs,
+                    self.policy.as_ref(),
+                    self.core.topology(),
+                    &self.cfg,
+                    self.zipf_s,
+                );
+                self.cache.apply_migration(&m.moved, placement);
+                self.log.push_migration(MigrationRecord {
+                    step: self.log.records.len(),
+                    moved: m.moved.len(),
+                    bytes: m.bytes,
+                    cost_s: m.cost_s,
+                    predicted_saving_s: m.predicted_saving_s,
+                    realized_saving_s: m.realized_saving_s,
+                });
+            }
+        }
 
         // placement: fold loads, maybe migrate — on acceptance re-derive
         // the routing for the new hosting and move cached weights with
         // their experts
-        let mut migration_s = 0.0;
         self.core.observe(&counts);
         if let Some(m) = self.core.maybe_migrate(&counts) {
-            migration_s = m.cost_s;
+            migration_s += m.cost_s;
             let placement = self.core.placement().expect("migration implies placement");
             let inputs =
                 self.policy.runtime_inputs_placed(self.core.topology(), &self.cfg, placement);
@@ -699,6 +768,39 @@ mod tests {
         assert!(quick_builder().requests(0).build().is_err());
         assert!(quick_builder().slo_s(-1.0).build().is_err());
         assert!(quick_builder().policy_named("nope").build().is_err());
+    }
+
+    #[test]
+    fn chaos_off_serve_is_bit_identical() {
+        let mut a = quick_builder().build().unwrap();
+        let mut b = quick_builder().chaos_named("off").build().unwrap();
+        a.run(100_000).unwrap();
+        b.run(100_000).unwrap();
+        assert_eq!(a.log().requests.len(), b.log().requests.len());
+        for (x, y) in a.log().requests.iter().zip(&b.log().requests) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.finish_s, y.finish_s);
+        }
+        assert!(b.log().perturbations.is_empty());
+    }
+
+    #[test]
+    fn node_loss_serve_conserves_requests() {
+        let mut s = quick_builder()
+            .experts_per_dev(2)
+            .placement_every(4)
+            .chaos_named("nodeloss:1@3")
+            .build()
+            .unwrap();
+        s.run(100_000).unwrap();
+        // the corpse is dead, admission routed around it, and every
+        // request still retires — conservation under elastic re-scale
+        assert_eq!(s.log().requests.len(), 24);
+        assert!(!s.topology().is_alive(1));
+        assert_eq!(s.topology().n_alive(), 3);
+        assert!(s.log().perturbations.iter().any(|p| p.event.contains("nodeloss:1")));
+        let json = s.log().summary_json().to_string_compact();
+        assert!(json.contains("perturbations"), "chaos keys missing in {json}");
     }
 
     #[test]

@@ -105,6 +105,11 @@ pub struct Topology {
     pub(crate) slot_beta: Vec<f64>,
     /// Per-slot contention flag (mirrors [`Topology::link_contended`]).
     pub(crate) slot_contended: Vec<bool>,
+    /// Per-device liveness mask (all true at construction). A dead device
+    /// stays in the link graph — its pair entries still price — but the
+    /// perturbation layer routes no tokens to or from it and the serving
+    /// batcher admits nothing onto it.
+    pub(crate) alive: Vec<bool>,
 }
 
 impl Topology {
@@ -160,6 +165,7 @@ impl Topology {
             slot_alpha: Vec::new(),
             slot_beta: Vec::new(),
             slot_contended: Vec::new(),
+            alive: vec![true; p],
         }
         .with_incidence()
     }
@@ -316,6 +322,65 @@ impl Topology {
         (0..self.p).filter(|&j| self.level(i, j) == t).collect()
     }
 
+    // ------------------------------------------------------------------
+    // Runtime mutation (perturbation layer)
+    // ------------------------------------------------------------------
+
+    /// Whether a device is live (true unless [`Topology::mark_dead`] ran).
+    pub fn is_alive(&self, dev: usize) -> bool {
+        self.alive[dev]
+    }
+
+    /// Number of live devices.
+    pub fn n_alive(&self) -> usize {
+        self.alive.iter().filter(|&&a| a).count()
+    }
+
+    /// Drop a device from the cluster (node loss). The link graph and
+    /// per-pair matrices are untouched — a dead device can still be
+    /// priced against — but at least one device must stay alive.
+    pub fn mark_dead(&mut self, dev: usize) {
+        assert!(dev < self.p, "device {dev} out of range");
+        self.alive[dev] = false;
+        assert!(self.n_alive() > 0, "cannot kill the last live device");
+    }
+
+    /// Degrade (or restore) one physical link in place: α and β of
+    /// `links[edge]` are multiplied by `factor`, both directed slots
+    /// follow, and every per-pair entry whose path crosses the edge is
+    /// re-derived from the link graph (α = hop sum, β = slowest hop,
+    /// §3.2 — the same derivation every constructor uses). Anything that
+    /// caches plans priced off this topology is stale afterwards; the
+    /// caller must bump its topology epoch (`PlanCache::set_topo_epoch`).
+    pub fn scale_link(&mut self, edge: usize, factor: f64) {
+        assert!(edge < self.links.len(), "link {edge} out of range");
+        assert!(factor > 0.0, "non-positive link scale {factor}");
+        self.links[edge].alpha *= factor;
+        self.links[edge].beta *= factor;
+        for dir in 0..2 {
+            self.slot_alpha[2 * edge + dir] = self.links[edge].alpha;
+            self.slot_beta[2 * edge + dir] = self.links[edge].beta;
+        }
+        for i in 0..self.p {
+            for j in 0..self.p {
+                if i == j {
+                    continue;
+                }
+                let path = &self.paths[i * self.p + j];
+                if path.iter().any(|dl| dl.edge == edge) {
+                    let a_sum: f64 =
+                        path.iter().map(|dl| self.links[dl.edge].alpha).sum();
+                    let b_max: f64 = path
+                        .iter()
+                        .map(|dl| self.links[dl.edge].beta)
+                        .fold(0.0, f64::max);
+                    self.alpha.set(i, j, a_sum);
+                    self.beta.set(i, j, b_max);
+                }
+            }
+        }
+    }
+
     /// Perturb cross-device per-pair α/β with relative log-normal-ish
     /// noise — the "profiling noise" that Eq. 5 smoothing is designed to
     /// remove. Self pairs (i == j) are local memory copies no profiler
@@ -453,6 +518,50 @@ mod tests {
         assert_eq!(n1.beta_mat(), n2.beta_mat());
         assert_eq!(n1.links(), t.links());
         assert!(n1.beta_mat().linf_dist(t.beta_mat()) > 0.0);
+    }
+
+    #[test]
+    fn scale_link_degrades_crossing_pairs_only() {
+        // [2,2]: degrade the first switch uplink 4×. Pairs crossing it
+        // slow down by exactly the link-graph re-derivation; intra-node
+        // pairs on the other side are untouched.
+        let spec = TreeSpec::parse("[2,2]").unwrap();
+        let mut t = Topology::tree(&spec, &[l(1e-10), l(1e-8)], Link::new(0.0, 1e-11));
+        let clean = t.clone();
+        // find the uplink on device 0's inter-node path (slowest hop)
+        let up_edge = t
+            .path(0, 2)
+            .iter()
+            .map(|dl| dl.edge)
+            .max_by(|&a, &b| t.links()[a].beta.total_cmp(&t.links()[b].beta))
+            .unwrap();
+        t.scale_link(up_edge, 4.0);
+        assert_eq!(t.links()[up_edge].beta, 4.0 * clean.links()[up_edge].beta);
+        for dir in 0..2 {
+            assert_eq!(t.slot_beta[2 * up_edge + dir], t.links()[up_edge].beta);
+        }
+        // crossing pair: β is the degraded uplink, α re-accumulated
+        assert!(t.beta(0, 2) >= clean.beta(0, 2));
+        assert_eq!(t.beta(0, 2), 4.0 * 1e-8);
+        // non-crossing intra-node pair (2, 3): bit-identical
+        assert_eq!(t.beta(2, 3), clean.beta(2, 3));
+        assert_eq!(t.alpha(2, 3), clean.alpha(2, 3));
+        // diagonal (local copies) untouched
+        for i in 0..t.p() {
+            assert_eq!(t.beta(i, i), clean.beta(i, i));
+        }
+    }
+
+    #[test]
+    fn liveness_mask_defaults_true_and_marks_dead() {
+        let mut t = Topology::homogeneous(4, l(1e-9), Link::new(0.0, 1e-11));
+        assert_eq!(t.n_alive(), 4);
+        assert!((0..4).all(|d| t.is_alive(d)));
+        t.mark_dead(2);
+        assert!(!t.is_alive(2));
+        assert_eq!(t.n_alive(), 3);
+        // pricing state is untouched by death
+        assert_eq!(t.beta(2, 0), 1e-9);
     }
 
     #[test]

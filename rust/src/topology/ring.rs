@@ -71,6 +71,7 @@ pub(super) fn build(links_ring: Vec<Link>, local: Link) -> Topology {
         slot_alpha: Vec::new(),
         slot_beta: Vec::new(),
         slot_contended: Vec::new(),
+        alive: vec![true; p],
     }
     .with_incidence()
 }

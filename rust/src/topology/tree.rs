@@ -324,6 +324,7 @@ pub(super) fn build(spec: &TreeSpec, level_links: &[Link], local: Link) -> Topol
         slot_alpha: Vec::new(),
         slot_beta: Vec::new(),
         slot_contended: Vec::new(),
+        alive: vec![true; p],
     }
     .with_incidence()
 }

@@ -1,0 +1,234 @@
+//! Perturbation-engine acceptance tests (the ISSUE-8 criterion): under
+//! each scripted fault class the *adaptive* stack — live placement +
+//! epoch-aware plan cache + chunk-autotuned overlap — must strictly beat
+//! the *static* stack (canonical hosting, cache disabled, serial clock)
+//! on the total simulated clock, with the fault visible in the run log
+//! and the step clock recovering after bounded windows close.
+//!
+//! All train scenarios run on a 2×2 tree whose inter-node uplink is a
+//! bandwidth bottleneck (the same fabric as the overlap acceptance test),
+//! so the adaptive stack has real communication time to hide while the
+//! fault stream stresses it. The serve scenario kills a device mid-trace
+//! and checks request conservation end to end.
+
+use ta_moe::comm::{A2aAlgo, ScheduleKind};
+use ta_moe::coordinator::{Session, SessionBuilder};
+use ta_moe::runtime::{ModelCfg, SimBackend};
+use ta_moe::serve::{ServeBuilder, TraceKind};
+use ta_moe::topology::{Link, Topology, TreeSpec};
+
+/// A [2,2] tree with a deliberately slow uplink: plenty of exposed a2a
+/// for the adaptive stack to hide, and a meaningful link to degrade.
+fn bottleneck22() -> Topology {
+    Topology::tree(
+        &TreeSpec::parse("[2,2]").unwrap(),
+        &[Link::from_gbps_us(45.0, 1.0), Link::from_gbps_us(0.01, 1.0)],
+        ta_moe::topology::presets::local_copy(),
+    )
+}
+
+fn run_chaos(chaos: &str, adaptive: bool, steps: usize) -> Session {
+    let cfg = ModelCfg::preset("tiny4").unwrap(); // P = 4, matches [2,2]
+    let mut b = SessionBuilder::new()
+        .backend(Box::new(SimBackend::new(cfg)))
+        .topology(bottleneck22())
+        .policy_named("fastmoe") // even dispatch keeps the uplink loaded
+        .a2a(A2aAlgo::Scheduled(ScheduleKind::Bvn))
+        .seed(17)
+        .chaos_named(chaos);
+    b = if adaptive {
+        b.placement_every(8).overlap_named("auto")
+    } else {
+        b.overlap_named("serial").plan_cache_tol(0.0)
+    };
+    let mut s = b.build().unwrap();
+    s.run(steps).unwrap();
+    s
+}
+
+fn total_s(s: &Session) -> f64 {
+    s.log().sim_time_axis().last().copied().unwrap()
+}
+
+/// The shared acceptance bar: adaptive strictly faster, fault on the log.
+fn assert_adaptive_wins(spec: &str, steps: usize) -> (Session, Session) {
+    let adaptive = run_chaos(spec, true, steps);
+    let static_ = run_chaos(spec, false, steps);
+    let (ta, ts) = (total_s(&adaptive), total_s(&static_));
+    assert!(
+        ta < ts,
+        "{spec}: adaptive clock {ta} must strictly beat static {ts}"
+    );
+    assert!(
+        !adaptive.log().perturbations.is_empty(),
+        "{spec}: the fault stream must be visible in the run log"
+    );
+    (adaptive, static_)
+}
+
+#[test]
+fn adaptive_beats_static_under_flapping_straggler() {
+    let spec = "straggler:1x3@10-18:flap=4";
+    let (adaptive, _) = assert_adaptive_wins(spec, 40);
+    let log = adaptive.log();
+    assert_eq!(log.first_perturbation_step(), Some(10));
+    // the fault bites the clock: same counts stream, strictly more
+    // compute on the slowed device ⇒ a strictly slower run than the
+    // clean twin of the same seed
+    let clean = run_chaos("off", true, 40);
+    assert!(
+        total_s(&adaptive) > total_s(&clean),
+        "a 3x straggler must cost simulated time"
+    );
+    assert!(clean.log().perturbations.is_empty());
+    // bounded window ⇒ finite recovery, surfaced in the summary
+    let rec = log.recovery_steps().expect("flapping straggler must recover");
+    assert!(rec <= 30, "recovery {rec}");
+    let json = log.summary_json().to_string_compact();
+    assert!(json.contains(&format!("\"recovery_steps\":{rec}")), "{json}");
+}
+
+#[test]
+fn adaptive_beats_static_under_link_degradation() {
+    // edge 4 is the [2,2] tree's uplink (4 leaf links first)
+    let spec = "link:4x4@12-24";
+    let (adaptive, _) = assert_adaptive_wins(spec, 40);
+    let log = adaptive.log();
+    // degrade + restore both fire
+    assert_eq!(log.perturbations.len(), 2);
+    assert_eq!(log.perturbations[0].step, 12);
+    assert_eq!(log.perturbations[1].step, 24);
+    // the degraded fabric prices a slower exchange while the window holds
+    let step_s: Vec<f64> = log.records.iter().map(|r| r.sim_total_s()).collect();
+    assert!(step_s[12] > step_s[11] * 1.5, "degraded uplink must bite");
+    // restore ⇒ finite recovery, and not before the window closes (the
+    // degraded steps sit far outside the 5% recovery band)
+    let rec = log.recovery_steps().expect("restored link must recover");
+    assert!(rec >= 12 && rec <= 30, "recovery {rec}");
+    // the plan cache noticed both fabric changes: schedules synthesised
+    // for the old topology are unusable, so the run re-synthesises
+    assert!(
+        log.plan_misses >= 3,
+        "topology epoch bumps must force re-synthesis, got {} misses",
+        log.plan_misses
+    );
+}
+
+#[test]
+fn adaptive_beats_static_under_node_loss() {
+    let spec = "nodeloss:2@20";
+    let (adaptive, _) = assert_adaptive_wins(spec, 40);
+    let log = adaptive.log();
+    assert_eq!(log.first_perturbation_step(), Some(20));
+    // the world shrank and stayed shrunk
+    assert!(!adaptive.topology().is_alive(2));
+    assert_eq!(adaptive.topology().n_alive(), 3);
+    // the corpse sends nothing once dead: its dispatch row is zeroed
+    let counts = adaptive.last_counts().unwrap();
+    assert_eq!(counts.row_sum(2), 0.0);
+    // every live row still dispatches a full batch (elastic re-scale
+    // conserves the survivors' token budget)
+    for i in [0usize, 1, 3] {
+        assert!(counts.row_sum(i) > 0.0, "live row {i} must keep dispatching");
+    }
+    // with the sender gone the fabric is less loaded: the clock recovers
+    let rec = log.recovery_steps().expect("post-loss clock must settle");
+    assert!(rec <= 10, "recovery {rec}");
+}
+
+#[test]
+fn adaptive_beats_static_under_gate_drift() {
+    let spec = "drift:1@10-22";
+    let (adaptive, _) = assert_adaptive_wins(spec, 40);
+    let log = adaptive.log();
+    assert_eq!(log.first_perturbation_step(), Some(10));
+    // bounded regime shift ⇒ finite recovery
+    let rec = log.recovery_steps().expect("drift window must recover");
+    assert!(rec <= 30, "recovery {rec}");
+}
+
+#[test]
+fn clean_chaos_spec_is_bit_identical_to_no_chaos() {
+    // `--chaos off` must leave the whole priced run untouched — the CSV
+    // row stream and the summary JSON, byte for byte
+    let run = |chaos: Option<&str>| {
+        let cfg = ModelCfg::preset("tiny4").unwrap();
+        let mut b = SessionBuilder::new()
+            .backend(Box::new(SimBackend::new(cfg)))
+            .topology(bottleneck22())
+            .policy_named("ta-moe")
+            .seed(9)
+            .placement_every(8)
+            .overlap_named("auto");
+        if let Some(spec) = chaos {
+            b = b.chaos_named(spec);
+        }
+        let mut s = b.build().unwrap();
+        s.run(30).unwrap();
+        let dir = std::env::temp_dir();
+        let tag = chaos.map_or("none", |_| "off");
+        let path = dir.join(format!("ta_moe_chaos_bitident_{tag}.csv"));
+        s.log().write_csv(&path).unwrap();
+        let csv = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        (csv, s.log().summary_json().to_string_compact())
+    };
+    let (csv_none, json_none) = run(None);
+    let (csv_off, json_off) = run(Some("off"));
+    assert_eq!(csv_none, csv_off, "--chaos off must not perturb the CSV");
+    assert_eq!(json_none, json_off, "--chaos off must not perturb the summary");
+    assert!(!json_off.contains("perturbations"));
+}
+
+// ---------------------------------------------------------------------------
+// serve: node loss with elastic re-scale
+// ---------------------------------------------------------------------------
+
+#[test]
+fn serve_node_loss_conserves_requests_and_beats_static_admission() {
+    let run = |chaos: &str| {
+        let mut s = ServeBuilder::new()
+            .preset("tiny4")
+            .cluster("table1")
+            .experts_per_dev(2)
+            .policy_named("ta-moe")
+            .trace_kind(TraceKind::Poisson)
+            .requests(32)
+            .seed(11)
+            .placement_every(4)
+            .chaos_named(chaos)
+            .build()
+            .unwrap();
+        s.run(100_000).unwrap();
+        s
+    };
+    let clean = run("off");
+    let lossy = run("nodeloss:3@4");
+
+    // conservation: every request admitted, served, and retired exactly
+    // once despite the mid-trace death — nothing dropped, nothing doubled
+    assert_eq!(clean.log().requests.len(), 32);
+    assert_eq!(lossy.log().requests.len(), 32);
+    let mut ids: Vec<usize> = lossy.log().requests.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), 32, "each request retires exactly once");
+
+    // the dead device is out of the batch from the death iteration on
+    assert!(!lossy.topology().is_alive(3));
+    assert!(lossy
+        .log()
+        .perturbations
+        .iter()
+        .any(|p| p.event.contains("nodeloss:3")));
+
+    // three devices do four devices' work: the lossy run cannot be faster
+    assert!(lossy.now_s() >= clean.now_s());
+
+    // SLO accounting stays coherent under the fault
+    assert!(lossy.goodput() >= 0.0);
+    assert!(
+        lossy.log().ttft_percentile(99.0).unwrap()
+            >= lossy.log().ttft_percentile(50.0).unwrap()
+    );
+}
