@@ -1,0 +1,114 @@
+//! Trace-layer overhead budget (EXPERIMENTS.md §Trace overhead): the
+//! `--trace off` path must cost *nothing* — no tracer, no events, a
+//! byte-identical summary — and each trace level's recording overhead on
+//! the host must stay within its budget relative to the untraced
+//! session.
+//!
+//! ```bash
+//! cargo bench --bench trace_overhead
+//! TA_MOE_BENCH_QUICK=1 cargo bench --bench trace_overhead   # CI smoke
+//! ```
+
+use std::collections::BTreeMap;
+use ta_moe::coordinator::SessionBuilder;
+use ta_moe::runtime::{ModelCfg, SimBackend};
+use ta_moe::trace::{chrome_trace, TraceLevel};
+use ta_moe::util::bench::{record_jsonl, time_it, Table};
+use ta_moe::util::json::Json;
+
+const STEPS: usize = 30;
+
+fn run_session(trace: Option<TraceLevel>) -> ta_moe::coordinator::Session {
+    let cfg = ModelCfg::preset("tiny4").expect("builtin preset");
+    let mut b = SessionBuilder::new()
+        .backend(Box::new(SimBackend::new(cfg)))
+        .cluster("table1")
+        .a2a_named("sched:rot")
+        .overlap_named("auto")
+        .seed(5);
+    if let Some(level) = trace {
+        b = b.trace_level(level);
+    }
+    let mut s = b.build().unwrap();
+    s.run(STEPS).unwrap();
+    s
+}
+
+fn main() {
+    let quick = std::env::var("TA_MOE_BENCH_QUICK").map(|v| v != "0").unwrap_or(false);
+    let (warmup, samples) = if quick { (1, 3) } else { (3, 15) };
+
+    // --- the zero-cost contract, asserted before any timing ---
+    let off = run_session(None);
+    assert!(off.tracer().is_none(), "trace off must not even allocate a tracer");
+    let off_summary = off.log().summary_json().to_string_compact();
+    for level in [TraceLevel::Step, TraceLevel::Phase, TraceLevel::Chunk] {
+        let on = run_session(Some(level));
+        let tr = on.tracer().expect("tracer attached");
+        assert!(!tr.events().is_empty(), "{level}: a traced run must record events");
+        assert_eq!(
+            on.log().summary_json().to_string_compact(),
+            off_summary,
+            "{level}: tracing must not perturb the priced run"
+        );
+    }
+
+    let mut t = Table::new(&["trace mode", "mean/run", "overhead", "samples"]);
+    let mut payload = BTreeMap::new();
+    let mut bench = |f: &mut dyn FnMut()| time_it(f, warmup, samples);
+
+    let base = bench(&mut || {
+        std::hint::black_box(run_session(None));
+    });
+    t.row(&["off".into(), format!("{:.0}us", base.mean_us()), "1.00x".into(), base.iters.to_string()]);
+    payload.insert("off_us".to_string(), Json::Num(base.mean_us()));
+
+    let mut worst = 1.0f64;
+    for level in [TraceLevel::Step, TraceLevel::Phase, TraceLevel::Chunk] {
+        let s = bench(&mut || {
+            std::hint::black_box(run_session(Some(level)));
+        });
+        let ratio = s.mean_us() / base.mean_us();
+        worst = worst.max(ratio);
+        t.row(&[
+            level.to_string(),
+            format!("{:.0}us", s.mean_us()),
+            format!("{ratio:.2}x"),
+            s.iters.to_string(),
+        ]);
+        payload.insert(format!("{level}_us"), Json::Num(s.mean_us()));
+        payload.insert(format!("{level}_ratio"), Json::Num(ratio));
+    }
+    // export cost rides on top of the chunk-level run
+    let traced = run_session(Some(TraceLevel::Chunk));
+    let s = bench(&mut || {
+        std::hint::black_box(chrome_trace(traced.tracer().unwrap()).to_string_compact());
+    });
+    t.row(&[
+        "chunk export".into(),
+        format!("{:.0}us", s.mean_us()),
+        format!("{:.2}x", s.mean_us() / base.mean_us()),
+        s.iters.to_string(),
+    ]);
+    payload.insert("export_us".to_string(), Json::Num(s.mean_us()));
+
+    // the budget: full-detail recording ≤ 2x the untraced session on this
+    // tiny host-bound scenario (real runs are cheaper still: pricing per
+    // step grows with P while recording stays proportional to events).
+    // Quick mode still checks a slack bound so CI catches gross
+    // regressions without flaking on noisy shared runners.
+    let budget = if quick { 6.0 } else { 2.0 };
+    assert!(
+        worst <= budget,
+        "trace-on overhead {worst:.2}x exceeds the {budget:.1}x budget"
+    );
+
+    t.print();
+    println!(
+        "\n--trace off is asserted byte-identical and tracer-free; recording\n\
+         at every level must stay within {budget:.1}x of the untraced session.\n\
+         Budgets + history: EXPERIMENTS.md §Trace overhead{}",
+        if quick { "  [quick mode]" } else { "" }
+    );
+    record_jsonl("trace_overhead", &Json::Obj(payload));
+}

@@ -15,7 +15,12 @@ stack (rng, traces, cache, batcher); this package covers the rest:
   amortised migration accept/reject gate
   (``rust/src/placement/engine.rs``);
 * :mod:`mirrors.overlap_autotune` — the chunk-count sweep and its
-  near-tie selection rule (``rust/src/overlap/autotune.rs``).
+  near-tie selection rule (``rust/src/overlap/autotune.rs``);
+* :mod:`mirrors.perturb_recovery` — straggler windowing and the
+  recovery-step detector (``rust/src/perturb/mod.rs``);
+* :mod:`mirrors.trace_utilization` — the per-resource utilization
+  report fold: busy fractions, straggler skew, hottest-k
+  (``rust/src/trace/report.rs``).
 
 ``python/pallas_lint/mirror_registry.json`` pins each mirror symbol to
 the rust function it mirrors by token fingerprint: editing the priced
@@ -32,4 +37,6 @@ __all__ = [
     "bvn_refine",
     "placement_gate",
     "overlap_autotune",
+    "perturb_recovery",
+    "trace_utilization",
 ]

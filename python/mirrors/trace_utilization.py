@@ -1,0 +1,121 @@
+#!/usr/bin/env python3
+"""Mirror of the utilization report fold (rust/src/trace/report.rs).
+
+Ports ``utilization``: fold retained trace spans into per-resource busy
+totals and the report headlines, with the exact rust semantics:
+
+* only positive-duration spans (``ph == "X"``) count, and the aggregate
+  ``step`` track is excluded;
+* rows come out sorted by track name (BTreeMap order);
+* ``busy_frac`` is ``busy_s / total_s`` with a zero-clock guard;
+* ``straggler_skew`` is max/mean busy over ``dev:`` tracks, ``1.0`` for
+  a device-free run or an all-idle mean;
+* ``hottest`` is the top-k tracks by busy time, busiest first, ties
+  resolved by ascending track name.
+
+Events are ``(track, ph, dur_s)`` triples with ``ph`` in ``{"X", "i"}``
+(the Chrome phase letters the exporter emits). Run
+``python3 -m mirrors.trace_utilization`` for the self-check.
+"""
+
+from __future__ import annotations
+
+import sys
+from typing import Dict, List, Sequence, Tuple
+
+Event = Tuple[str, str, float]  # (track, ph, dur_s)
+
+
+def utilization(events: Sequence[Event], total_s: float, top_k: int) -> Dict[str, object]:
+    """Fold spans into the report dict (rows, straggler_skew, hottest,
+    total_s) — decision-for-decision the rust ``utilization``."""
+    busy: Dict[str, List[float]] = {}
+    for track, ph, dur_s in events:
+        if ph != "X" or dur_s <= 0.0 or track == "step":
+            continue
+        slot = busy.setdefault(track, [0.0, 0])
+        slot[0] += dur_s
+        slot[1] += 1
+    rows = [
+        {
+            "track": track,
+            "busy_s": busy_s,
+            "busy_frac": busy_s / total_s if total_s > 0.0 else 0.0,
+            "spans": spans,
+        }
+        for track, (busy_s, spans) in sorted(busy.items())
+    ]
+
+    dev_busy = [r["busy_s"] for r in rows if str(r["track"]).startswith("dev:")]
+    if not dev_busy:
+        straggler_skew = 1.0
+    else:
+        mean = sum(dev_busy) / len(dev_busy)
+        # rust folds max from 0.0, not -inf
+        peak = 0.0
+        for b in dev_busy:
+            peak = max(peak, b)
+        straggler_skew = peak / mean if mean > 0.0 else 1.0
+
+    by_heat = sorted(((r["busy_s"], r["track"]) for r in rows), key=lambda h: (-h[0], h[1]))
+    hottest = [track for _, track in by_heat[:top_k]]
+
+    return {
+        "rows": rows,
+        "straggler_skew": straggler_skew,
+        "hottest": hottest,
+        "total_s": total_s,
+    }
+
+
+# ----------------------------------------------------------- self-check
+
+
+def _spans() -> List[Event]:
+    """The rust unit-test fixture: two dev:0 spans, one dev:1, one link,
+    a step span, an instant, and a zero-duration span."""
+    return [
+        ("step", "X", 10.0),
+        ("dev:0", "X", 4.0),
+        ("dev:0", "X", 2.0),
+        ("dev:1", "X", 2.0),
+        ("link:3", "X", 5.0),
+        ("control", "i", 0.0),
+        ("chan:allreduce", "X", 0.0),
+    ]
+
+
+def main() -> int:
+    # -- the fold excludes step, instants, and zero-duration spans -----
+    rep = utilization(_spans(), 10.0, 2)
+    tracks = [r["track"] for r in rep["rows"]]
+    assert tracks == ["dev:0", "dev:1", "link:3"], tracks
+    assert rep["rows"][0]["busy_s"] == 6.0
+    assert rep["rows"][0]["spans"] == 2
+    assert rep["rows"][0]["busy_frac"] == 0.6
+    assert abs(rep["straggler_skew"] - 1.5) < 1e-15  # dev busy {6, 2}
+    assert rep["hottest"] == ["dev:0", "link:3"]
+    assert rep["total_s"] == 10.0
+
+    # -- empty / zero-clock runs stay finite ---------------------------
+    rep = utilization([], 0.0, 3)
+    assert rep["rows"] == []
+    assert rep["straggler_skew"] == 1.0
+    assert rep["hottest"] == []
+    rep = utilization(_spans(), 0.0, 1)
+    assert all(r["busy_frac"] == 0.0 for r in rep["rows"])
+
+    # -- heat ties resolve by ascending track name ---------------------
+    rep = utilization([("link:9", "X", 1.0), ("link:1", "X", 1.0)], 1.0, 2)
+    assert rep["hottest"] == ["link:1", "link:9"]
+
+    # -- top_k truncates, never pads -----------------------------------
+    rep = utilization(_spans(), 10.0, 99)
+    assert rep["hottest"] == ["dev:0", "link:3", "dev:1"], rep["hottest"]
+
+    print("mirrors.trace_utilization: all self-checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

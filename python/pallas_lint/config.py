@@ -11,7 +11,16 @@ from __future__ import annotations
 # must be bit-reproducible across runs and machines. Wall clocks and
 # ambient RNG are forbidden here (determinism rule); unordered
 # collections are forbidden everywhere.
-PRICED_DIRS = {"comm", "coordinator", "placement", "overlap", "serve", "dispatch", "perturb"}
+PRICED_DIRS = {
+    "comm",
+    "coordinator",
+    "placement",
+    "overlap",
+    "serve",
+    "dispatch",
+    "perturb",
+    "trace",
+}
 
 # Unordered std collections: iteration order varies per *instance*
 # (RandomState), so any fold/emission over them is nondeterministic.
@@ -69,7 +78,16 @@ REQUIRED_SUBSYSTEMS = {
     "serve-cache",
     "serve-batcher",
     "perturb-recovery",
+    "trace-utilization",
 }
+
+# MetricsRegistry key grammar (trace/registry.rs): counter keys end in
+# `_total`; gauge keys carry a canonical unit suffix. Checked at every
+# call site of these registry methods so a drifting key is caught where
+# it is written, not when a dashboard misreads it.
+REGISTRY_COUNTER_METHODS = {"inc", "counter"}
+REGISTRY_GAUGE_METHODS = {"gauge_add", "gauge"}
+COUNTER_SUFFIX = "_total"
 
 # Inline allow directive, written in a comment on the finding's line or
 # the line directly above it:

@@ -9,6 +9,10 @@ Two checks enforce it:
   spellings (``_ms``, ``_secs``, ``_byte``, ``_gb``, …). One spelling
   per unit keeps CSV columns, JSON keys, and code greppable as one
   vocabulary.
+* **registry keys** — every ``MetricsRegistry`` call site must use the
+  key grammar: counters (``.inc``/``.counter``) end in ``_total``,
+  gauges (``.gauge_add``/``.gauge``) end in a canonical unit suffix.
+  One vocabulary across traces, summaries, and dashboards.
 * **metrics schema** — ``metrics/mod.rs`` must declare the CSV schema
   as machine-checkable consts (``CSV_HEADER`` + ``CSV_SCHEMA``
   column→field pairs). The header, the schema, the ``StepRecord``
@@ -130,9 +134,67 @@ def check(sf: SourceFile) -> List[Finding]:
                 )
             )
 
+    # -- registry key grammar ------------------------------------------
+    out.extend(_check_registry_keys(sf))
+
     # -- metrics CSV/JSON schema ---------------------------------------
     if sf.relpath.replace("\\", "/").endswith("metrics/mod.rs"):
         out.extend(_check_metrics_schema(sf))
+    return out
+
+
+def _check_registry_keys(sf: SourceFile) -> List[Finding]:
+    """Enforce the MetricsRegistry key grammar at every call site: a
+    string literal passed to ``.inc(``/``.counter(`` must end in
+    ``_total``; one passed to ``.gauge_add(``/``.gauge(`` must end in a
+    canonical unit suffix. Both must be snake_case."""
+    out: List[Finding] = []
+    toks = sf.toks
+    methods = config.REGISTRY_COUNTER_METHODS | config.REGISTRY_GAUGE_METHODS
+    for k in range(1, len(toks) - 2):
+        if (
+            toks[k].kind != "ident"
+            or toks[k].text not in methods
+            or toks[k - 1].text != "."
+            or toks[k + 1].text != "("
+            or toks[k + 2].kind != "str"
+        ):
+            continue
+        method = toks[k].text
+        key, line = toks[k + 2].text, toks[k + 2].line
+        if sf.allowed(line, "units"):
+            continue
+        if not SNAKE_RE.match(key):
+            out.append(
+                Finding(
+                    sf.relpath,
+                    line,
+                    "units",
+                    f"registry key `{key}` is not snake_case",
+                )
+            )
+        elif method in config.REGISTRY_COUNTER_METHODS:
+            if not key.endswith(config.COUNTER_SUFFIX):
+                out.append(
+                    Finding(
+                        sf.relpath,
+                        line,
+                        "units",
+                        f"registry counter key `{key}` must end in "
+                        f"`{config.COUNTER_SUFFIX}` (`.{method}` call)",
+                    )
+                )
+        elif not key.endswith(config.CANONICAL_SUFFIXES):
+            out.append(
+                Finding(
+                    sf.relpath,
+                    line,
+                    "units",
+                    f"registry gauge key `{key}` must end in a canonical "
+                    f"unit suffix ({', '.join(config.CANONICAL_SUFFIXES)}) "
+                    f"(`.{method}` call)",
+                )
+            )
     return out
 
 

@@ -125,6 +125,34 @@ class UnitsTest(unittest.TestCase):
         self.assertIn("latency_ms", msgs[0])
         self.assertIn("poll_secs", msgs[1])
 
+    def test_registry_key_grammar(self):
+        src = (
+            "fn f(tr: &mut Tracer) {\n"
+            '    tr.registry_mut().inc("plan_hits_total", 1);\n'
+            '    tr.registry_mut().inc("plan_hits", 1);\n'
+            '    tr.registry_mut().gauge_add("fetch_s", 0.5);\n'
+            '    tr.registry_mut().gauge_add("fetch_time", 0.5);\n'
+            '    tr.registry_mut().gauge_add("Bad-Key_s", 0.5);\n'
+            "    let _ = reg.counter(\"plan_hits_total\");\n"
+            "}\n"
+        )
+        found = rules_units.check(sf(src, "rust/src/trace/fixture.rs"))
+        msgs = sorted(x.msg for x in found)
+        self.assertEqual(len(found), 3, msgs)
+        self.assertIn("plan_hits", msgs[0])
+        self.assertIn("_total", msgs[0])
+        self.assertIn("fetch_time", msgs[1])
+        self.assertIn("canonical", msgs[1])
+        self.assertIn("Bad-Key_s", msgs[2])
+        self.assertIn("not snake_case", msgs[2])
+        # the allow directive works here like everywhere else
+        allowed = (
+            "// pallas-lint: allow(units) -- external dashboard owns this name\n"
+            'fn g(tr: &mut Tracer) { tr.registry_mut().inc("legacy_count", 1); }\n'
+        )
+        f = sf(allowed, "rust/src/trace/fixture.rs")
+        self.assertEqual(rules_units.check(f), [])
+
     def test_metrics_file_requires_schema_consts(self):
         f = sf("pub struct StepRecord { pub a: f64 }\n", "rust/src/metrics/mod.rs")
         found = rules_units.check(f)

@@ -1,0 +1,229 @@
+#!/usr/bin/env python3
+"""Validate a ta-moe Chrome trace export (stdlib-only, CI-runnable).
+
+``ta-moe train --trace run.json`` (and serve) emit Chrome-trace-event
+JSON (the ``{"traceEvents": [...]}`` object form Perfetto loads). This
+validator checks the contract the exporter promises:
+
+* **schema** — every event has ``ph`` in ``{M, X, i}``, ``pid``/``tid``,
+  and a ``ts``; ``X`` spans carry a ``dur``; ``i`` instants carry a
+  scope ``s``; ``M`` events are ``thread_name`` metadata naming each
+  track exactly once.
+* **non-negativity** — no negative timestamp or duration anywhere (the
+  simulated clock never runs backwards).
+* **non-overlap** — per track, complete spans never overlap: each track
+  models one resource (a device, a directed link, a channel), which
+  cannot do two things at one simulated instant. Touching endpoints are
+  legal.
+* **reconciliation** — for every track in
+  ``otherData.timeline_busy_s`` (the overlap engine's independent
+  ``Timeline::busy()`` accounting), the span durations on that track
+  sum to the same total within ``1e-9`` seconds. The two numbers come
+  from different accumulation paths in the crate, so this is a real
+  cross-check, not a tautology; tracks without a busy entry (``step``,
+  ``serial``, ``link:*``, ``migrate``, ``fetch``) are exempt.
+
+Usage::
+
+    python3 python/trace_validator.py run.json [more.json ...]
+    python3 python/trace_validator.py --selftest
+
+Exit code 0 when every file passes, 1 otherwise.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, List, Tuple
+
+PHASES = {"M", "X", "i"}
+RECONCILE_EPS_S = 1e-9
+OVERLAP_EPS_US = 1e-3  # 1e-9 s on the microsecond timestamps
+
+
+def validate(trace: object, name: str = "<trace>") -> List[str]:
+    """Return a list of violations (empty = valid)."""
+    errs: List[str] = []
+    if not isinstance(trace, dict) or not isinstance(trace.get("traceEvents"), list):
+        return [f"{name}: top level must be an object with a traceEvents array"]
+    events = trace["traceEvents"]
+
+    track_of: Dict[object, str] = {}
+    spans: Dict[object, List[Tuple[float, float]]] = {}
+    for i, ev in enumerate(events):
+        where = f"{name}: event {i}"
+        if not isinstance(ev, dict):
+            errs.append(f"{where}: not an object")
+            continue
+        ph = ev.get("ph")
+        if ph not in PHASES:
+            errs.append(f"{where}: ph {ph!r} not in {sorted(PHASES)}")
+            continue
+        if "pid" not in ev or "tid" not in ev:
+            errs.append(f"{where}: missing pid/tid")
+            continue
+        tid = ev["tid"]
+        if ph == "M":
+            if ev.get("name") != "thread_name":
+                errs.append(f"{where}: metadata event is not thread_name")
+                continue
+            track = (ev.get("args") or {}).get("name")
+            if not isinstance(track, str):
+                errs.append(f"{where}: thread_name args.name missing")
+            elif tid in track_of:
+                errs.append(f"{where}: duplicate thread_name for tid {tid}")
+            else:
+                track_of[tid] = track
+            continue
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)) or ts < 0:
+            errs.append(f"{where}: ts {ts!r} must be a non-negative number")
+            continue
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                errs.append(f"{where}: dur {dur!r} must be a non-negative number")
+                continue
+            spans.setdefault(tid, []).append((float(ts), float(ts) + float(dur)))
+        else:  # "i"
+            if ev.get("s") not in ("t", "p", "g"):
+                errs.append(f"{where}: instant missing scope s")
+
+    for tid, tid_spans in spans.items():
+        if tid not in track_of:
+            errs.append(f"{name}: tid {tid} has spans but no thread_name metadata")
+
+    # -- non-overlap per track -----------------------------------------
+    for tid, tid_spans in sorted(spans.items(), key=lambda kv: str(kv[0])):
+        track = track_of.get(tid, f"tid {tid}")
+        ordered = sorted(tid_spans)
+        for (a0, a1), (b0, b1) in zip(ordered, ordered[1:]):
+            if b0 < a1 - OVERLAP_EPS_US:
+                errs.append(
+                    f"{name}: track {track!r}: span [{b0}, {b1}]us overlaps "
+                    f"[{a0}, {a1}]us"
+                )
+                break  # one report per track keeps the output readable
+
+    # -- reconciliation against Timeline::busy() -----------------------
+    busy = (trace.get("otherData") or {}).get("timeline_busy_s") or {}
+    if not isinstance(busy, dict):
+        errs.append(f"{name}: otherData.timeline_busy_s must be an object")
+        busy = {}
+    tid_of_track = {t: tid for tid, t in track_of.items()}
+    for track, busy_s in sorted(busy.items()):
+        if not isinstance(busy_s, (int, float)) or busy_s < 0:
+            errs.append(f"{name}: timeline_busy_s[{track!r}] = {busy_s!r} invalid")
+            continue
+        tid = tid_of_track.get(track)
+        span_sum_s = sum(b - a for a, b in spans.get(tid, [])) / 1e6
+        if abs(span_sum_s - busy_s) > RECONCILE_EPS_S:
+            errs.append(
+                f"{name}: track {track!r}: span sum {span_sum_s!r}s does not "
+                f"reconcile with timeline busy {busy_s!r}s (eps {RECONCILE_EPS_S})"
+            )
+    return errs
+
+
+def validate_file(path: str) -> List[str]:
+    try:
+        with open(path) as fh:
+            trace = json.load(fh)
+    except (OSError, json.JSONDecodeError) as exc:
+        return [f"{path}: unreadable trace: {exc}"]
+    return validate(trace, path)
+
+
+# ----------------------------------------------------------- self-test
+
+
+def _meta(tid: int, track: str) -> dict:
+    return {"ph": "M", "name": "thread_name", "pid": 1, "tid": tid, "args": {"name": track}}
+
+
+def _span(tid: int, ts: float, dur: float) -> dict:
+    return {"ph": "X", "name": "x", "cat": "c", "pid": 1, "tid": tid, "ts": ts, "dur": dur}
+
+
+def _instant(tid: int, ts: float) -> dict:
+    return {"ph": "i", "name": "m", "cat": "c", "pid": 1, "tid": tid, "ts": ts, "s": "t"}
+
+
+def selftest() -> int:
+    good = {
+        "traceEvents": [
+            _meta(1, "step"),
+            _meta(2, "dev:0"),
+            _span(1, 0.0, 10.0),
+            _span(2, 0.0, 4.0),
+            _span(2, 4.0, 2.0),  # touching endpoints are legal
+            _instant(1, 3.0),
+        ],
+        "displayTimeUnit": "ms",
+        "otherData": {"timeline_busy_s": {"dev:0": 6e-6}},
+    }
+    assert validate(good) == [], validate(good)
+
+    # tracks without a busy entry are exempt from reconciliation
+    exempt = json.loads(json.dumps(good))
+    exempt["otherData"]["timeline_busy_s"] = {}
+    assert validate(exempt) == []
+
+    # a busy total off by more than 1e-9 s must fail
+    bad = json.loads(json.dumps(good))
+    bad["otherData"]["timeline_busy_s"]["dev:0"] = 6e-6 + 2e-9
+    assert any("reconcile" in e for e in validate(bad)), validate(bad)
+
+    # overlapping spans on one track must fail
+    bad = json.loads(json.dumps(good))
+    bad["traceEvents"].append(_span(2, 3.0, 2.0))
+    assert any("overlaps" in e for e in validate(bad)), validate(bad)
+
+    # negative duration / timestamp must fail
+    bad = json.loads(json.dumps(good))
+    bad["traceEvents"].append(_span(1, 11.0, -1.0))
+    assert any("dur" in e for e in validate(bad))
+    bad = json.loads(json.dumps(good))
+    bad["traceEvents"].append(_instant(1, -0.5))
+    assert any("ts" in e for e in validate(bad))
+
+    # unknown phase letters, missing metadata, and bad top levels fail
+    bad = json.loads(json.dumps(good))
+    bad["traceEvents"].append({"ph": "B", "pid": 1, "tid": 1, "ts": 0.0})
+    assert any("ph" in e for e in validate(bad))
+    bad = json.loads(json.dumps(good))
+    bad["traceEvents"].remove(_meta(2, "dev:0"))
+    assert any("no thread_name" in e for e in validate(bad))
+    assert validate([]) != []
+    assert validate({"traceEvents": 3}) != []
+
+    # duplicate thread_name for one tid fails
+    bad = json.loads(json.dumps(good))
+    bad["traceEvents"].insert(1, _meta(1, "other"))
+    assert any("duplicate" in e for e in validate(bad))
+
+    print("trace_validator: all self-checks passed")
+    return 0
+
+
+def main(argv: List[str]) -> int:
+    if not argv or argv == ["--selftest"]:
+        if argv:
+            return selftest()
+        print(__doc__)
+        return 2
+    rc = 0
+    for path in argv:
+        errs = validate_file(path)
+        for e in errs:
+            print(e, file=sys.stderr)
+        if errs:
+            rc = 1
+        else:
+            print(f"{path}: valid chrome trace")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -35,6 +35,9 @@ mod schedules;
 
 pub use allreduce::ring_allreduce_time;
 pub use alltoall::{hierarchical_a2a_time, HierBreakdown};
+// census primitives, shared with the tracer's per-link round attribution
+// (coordinator::cost) so traced link times match priced round times
+pub(crate) use engine::{census_add, census_sub, contended_time};
 pub use engine::{CostEngine, ExchangeModel};
 pub use plan::{bvn_schedule, price_rounds, A2aAlgo, A2aBreakdown, CommPlan, ScheduleKind};
 pub use profile::{profile_exchange, ExchangeProfile};

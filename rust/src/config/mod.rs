@@ -11,6 +11,7 @@ use crate::overlap::OverlapMode;
 use crate::placement::PlacementConfig;
 use crate::runtime::BackendKind;
 use crate::topology::{presets, Topology};
+use crate::trace::TraceLevel;
 use crate::util::toml::TomlDoc;
 use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
@@ -55,6 +56,36 @@ pub struct ExperimentConfig {
     pub synthetic_data: bool,
     /// Serving-mode knobs (`ta-moe serve`; ignored by training).
     pub serve: ServeConfig,
+    /// Tracing knobs (`--trace` / `--trace-level`; see [`crate::trace`]).
+    pub trace: TraceSection,
+}
+
+/// The `[trace]` section: where the Chrome trace goes and how much it
+/// records. `path = "off"` (the default) attaches no tracer at all — the
+/// run stays byte-identical to one on a build without the trace layer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceSection {
+    /// Output path for the Chrome-trace JSON, or "off".
+    pub path: String,
+    /// Detail: "step" | "phase" | "chunk" (each includes the previous).
+    pub level: String,
+}
+
+impl Default for TraceSection {
+    fn default() -> Self {
+        TraceSection { path: "off".into(), level: "chunk".into() }
+    }
+}
+
+impl TraceSection {
+    /// Resolve the section: `None` when tracing is off, else the level to
+    /// attach (path validity is the writer's problem, not the parser's).
+    pub fn parsed_level(&self) -> Result<Option<TraceLevel>> {
+        if self.path.trim().is_empty() || self.path.trim() == "off" {
+            return Ok(None);
+        }
+        self.level.parse::<TraceLevel>().map(Some).map_err(anyhow::Error::msg)
+    }
 }
 
 /// The `[serve]` section: arrival trace + expert cache + SLO knobs for
@@ -135,6 +166,7 @@ impl Default for ExperimentConfig {
             out_dir: "target/runs".into(),
             synthetic_data: true,
             serve: ServeConfig::default(),
+            trace: TraceSection::default(),
         }
     }
 }
@@ -191,6 +223,10 @@ impl ExperimentConfig {
                 experts_per_dev: doc
                     .usize_or("serve.experts_per_dev", d.serve.experts_per_dev),
                 zipf: doc.f64_or("serve.zipf", d.serve.zipf),
+            },
+            trace: TraceSection {
+                path: doc.str_or("trace.path", &d.trace.path).to_string(),
+                level: doc.str_or("trace.level", &d.trace.level).to_string(),
             },
         })
     }
@@ -421,6 +457,24 @@ lr = 0.01
         assert_eq!(spec.to_string(), "straggler:0x2@10-20+nodeloss:3@40");
         let c = ExperimentConfig { chaos: "meteor:9@1".into(), ..Default::default() };
         assert!(c.parsed_chaos().is_err());
+    }
+
+    #[test]
+    fn trace_defaults_to_off_and_parses() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.trace, TraceSection::default());
+        assert!(c.trace.parsed_level().unwrap().is_none());
+        let c = ExperimentConfig::from_toml(
+            "[trace]\npath = \"target/run.trace.json\"\nlevel = \"phase\"\n",
+        )
+        .unwrap();
+        assert_eq!(c.trace.path, "target/run.trace.json");
+        assert_eq!(c.trace.parsed_level().unwrap(), Some(TraceLevel::Phase));
+        // path without a level falls back to the default (chunk)
+        let c = ExperimentConfig::from_toml("[trace]\npath = \"t.json\"\n").unwrap();
+        assert_eq!(c.trace.parsed_level().unwrap(), Some(TraceLevel::Chunk));
+        let bad = TraceSection { path: "t.json".into(), level: "verbose".into() };
+        assert!(bad.parsed_level().is_err());
     }
 
     #[test]

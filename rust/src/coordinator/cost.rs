@@ -24,14 +24,19 @@
 //! [`crate::overlap`] timeline, with the chunk-count autotuner's winners
 //! memoised through the (epoch-aware) [`PlanCache`].
 
-use crate::comm::{price_rounds, ring_allreduce_time, A2aAlgo, A2aBreakdown, CommPlan, Round};
+use crate::comm::{
+    census_add, census_sub, contended_time, price_rounds, ring_allreduce_time, A2aAlgo,
+    A2aBreakdown, CommPlan, Round,
+};
 use crate::overlap::{
-    autotune_k, autotune_k_forward, pipeline_cost, pipeline_cost_forward, OverlapInputs,
+    autotune_k, autotune_k_forward, pipeline_cost, pipeline_cost_forward,
+    pipeline_cost_forward_retained, pipeline_cost_retained, EventClass, OverlapInputs,
     OverlapMode,
 };
 use crate::placement::Placement;
 use crate::runtime::ModelCfg;
 use crate::topology::Topology;
+use crate::trace::{TraceLevel, Tracer};
 use crate::util::Mat;
 
 /// Shape of the model whose step is being priced. Decoupled from the
@@ -480,6 +485,31 @@ impl PlanCache {
         algo.plan(topo, &chunk).breakdown
     }
 
+    /// The cached round schedule that would serve this (topology,
+    /// pattern) — the schedule [`PlanCache::plan`] just hit on (or
+    /// synthesised), exposed side-effect-free so the tracer can attribute
+    /// per-link round times without touching the hit/miss counters.
+    pub(crate) fn cached_rounds(
+        &self,
+        topo: &Topology,
+        bytes: &Mat,
+        algo: A2aAlgo,
+    ) -> Option<&[Round]> {
+        if !matches!(algo, A2aAlgo::Scheduled(_)) || self.tol <= 0.0 {
+            return None;
+        }
+        let fp = self.fingerprint(bytes);
+        let tkey = Self::topo_key(topo);
+        self.entries
+            .iter()
+            .find(|e| {
+                e.algo == algo
+                    && e.topo_key == tkey
+                    && self.pattern_hit(&e.bytes, e.fingerprint, bytes, fp)
+            })
+            .map(|e| e.rounds.as_slice())
+    }
+
     /// The memoised autotuned chunk count for this (topology, plan,
     /// pattern), if one is cached within the drift tolerance. A disabled
     /// cache never memoises (the autotuner sweeps every step — the
@@ -702,7 +732,7 @@ pub fn step_cost_profiled(
 ) -> StepCost {
     step_cost_inner(
         shape, topo, counts, e_per_dev, flops_per_dev, a2a, mode, profile, cache, placement,
-        None,
+        None, None,
     )
 }
 
@@ -731,7 +761,38 @@ pub fn step_cost_perturbed(
 ) -> StepCost {
     step_cost_inner(
         shape, topo, counts, e_per_dev, flops_per_dev, a2a, mode, profile, cache, placement,
-        Some(slowdown),
+        Some(slowdown), None,
+    )
+}
+
+/// [`step_cost_perturbed`] with a [`Tracer`] attached: prices
+/// bit-identically to the untraced path (every emission is behind the
+/// tracer, and re-derivations are side-effect-free) while recording, by
+/// [`TraceLevel`]: plan-cache hit/miss instants and registry counters
+/// (`Step`), serial phase spans on the `serial` track (`Phase`), and —
+/// at `Chunk` — per-directed-link a2a round spans (`link:<slot>` tracks,
+/// serially-priced steps of scheduled plans) or the retained pipeline
+/// timeline (`dev:<i>` / `chan:<name>` tracks, overlapped steps) with
+/// its independent `Timeline::busy()` totals fed to
+/// [`Tracer::note_busy`].
+#[allow(clippy::too_many_arguments)]
+pub fn step_cost_traced(
+    shape: &ModelShape,
+    topo: &Topology,
+    counts: &Mat,
+    e_per_dev: usize,
+    flops_per_dev: f64,
+    a2a: A2aAlgo,
+    mode: OverlapMode,
+    profile: StepProfile,
+    cache: Option<&mut PlanCache>,
+    placement: Option<&Placement>,
+    slowdown: &[f64],
+    tracer: &mut Tracer,
+) -> StepCost {
+    step_cost_inner(
+        shape, topo, counts, e_per_dev, flops_per_dev, a2a, mode, profile, cache, placement,
+        Some(slowdown), Some(tracer),
     )
 }
 
@@ -748,7 +809,9 @@ fn step_cost_inner(
     mut cache: Option<&mut PlanCache>,
     placement: Option<&Placement>,
     slowdown: Option<&[f64]>,
+    mut tracer: Option<&mut Tracer>,
 ) -> StepCost {
+    let counters_before = cache.as_deref().map(|c| (c.hits(), c.misses()));
     let (serial, bytes, recv) = priced_step(
         shape,
         topo,
@@ -761,7 +824,24 @@ fn step_cost_inner(
         placement,
         slowdown,
     );
+    if let (Some(tr), Some(c), Some((h0, m0))) =
+        (tracer.as_deref_mut(), cache.as_deref(), counters_before)
+    {
+        trace_plan_events(tr, c.hits() - h0, c.misses() - m0);
+    }
     if mode == OverlapMode::Serial {
+        if let Some(tr) = tracer {
+            trace_serial_step(
+                tr,
+                topo,
+                &bytes,
+                &serial,
+                a2a,
+                profile,
+                shape.n_moe_layers,
+                cache.as_deref(),
+            );
+        }
         return serial;
     }
 
@@ -815,15 +895,192 @@ fn step_cost_inner(
                 if let Some(c) = cache.as_deref_mut() {
                     c.remember_k(topo, &bytes, a2a, k);
                 }
+                if let Some(tr) = tracer.as_deref_mut() {
+                    tr.registry_mut().inc("tuned_k_picks_total", 1);
+                }
                 (k, pipe)
             }
         },
     };
+    if let Some(tr) = tracer {
+        if tr.enabled(TraceLevel::Chunk) {
+            // re-derive the winning chunk configuration (side-effect-free:
+            // `chunk_breakdown` never touches the hit/miss counters) and
+            // re-run the pipeline with event retention — bit-identical to
+            // the schedule just priced, per the retention contract
+            let chunk = match cache.as_deref() {
+                Some(c) => c.chunk_breakdown(topo, &bytes, a2a, k),
+                None => a2a.plan(topo, &bytes.scale(1.0 / k as f64)).breakdown,
+            };
+            let ar_chunk = if profile.allreduce {
+                ring_allreduce_time(topo, shape.dense_param_bytes() / k as f64)
+            } else {
+                0.0
+            };
+            let (re, tl) = if forward_only {
+                pipeline_cost_forward_retained(&inputs, &chunk, k, true)
+            } else {
+                pipeline_cost_retained(&inputs, &chunk, ar_chunk, k, true)
+            };
+            debug_assert_eq!(re.makespan_s, pipe.makespan_s, "retained re-run must agree");
+            let t0 = tr.clock_s();
+            let p = inputs.expert_s_per_dev.len();
+            for e in tl.events() {
+                let track = pipeline_track(p, e.resource);
+                let cat = class_cat(e.class);
+                tr.span(&track, cat, cat, t0 + e.start_s, e.end_s - e.start_s, &[]);
+            }
+            for (r, &b) in tl.busy().iter().enumerate() {
+                tr.note_busy(&pipeline_track(p, r), b);
+            }
+        }
+    }
     StepCost {
         overlapped_s: pipe.makespan_s,
         exposed_a2a_s: pipe.exposed_a2a_s,
         chunks: k,
         ..serial
+    }
+}
+
+/// Track name of a pipeline timeline resource under the chunk DAG's
+/// resource map (P compute streams, 4 directional link channels, the
+/// allreduce channel — forward pipelines simply never use the last).
+fn pipeline_track(p: usize, resource: usize) -> String {
+    match resource.checked_sub(p) {
+        None => format!("dev:{resource}"),
+        Some(0) => "chan:dispatch-intra".to_string(),
+        Some(1) => "chan:dispatch-inter".to_string(),
+        Some(2) => "chan:combine-intra".to_string(),
+        Some(3) => "chan:combine-inter".to_string(),
+        Some(_) => "chan:allreduce".to_string(),
+    }
+}
+
+fn class_cat(class: EventClass) -> &'static str {
+    match class {
+        EventClass::Compute => "compute",
+        EventClass::A2a => "a2a",
+        EventClass::Allreduce => "allreduce",
+    }
+}
+
+/// Registry counters + (at `Phase` and above) instants for the plan
+/// cache's activity on this step. `dh`/`dm` are the hit/miss counter
+/// deltas the step's serial pricing produced (0/0 for uncached plans).
+fn trace_plan_events(tr: &mut Tracer, dh: u64, dm: u64) {
+    if dh > 0 {
+        tr.registry_mut().inc("plan_hits_total", dh);
+    }
+    if dm > 0 {
+        tr.registry_mut().inc("plan_misses_total", dm);
+    }
+    if tr.enabled(TraceLevel::Phase) {
+        let at = tr.clock_s();
+        if dh > 0 {
+            tr.instant("step", "plan:hit", "plan", at, &[]);
+        }
+        if dm > 0 {
+            tr.instant("step", "plan:miss", "plan", at, &[]);
+        }
+    }
+}
+
+/// Phase spans (and, at `Chunk`, per-directed-link round spans) for one
+/// serially-priced step. The serial layout is the clock's own
+/// attribution: compute, then the a2a phase split, then the allreduce,
+/// back to back — their sum is exactly the step's advance, so spans of
+/// consecutive steps never overlap. Link spans attribute ONE
+/// representative exchange's rounds (scaled by the step's exchange
+/// count) inside the a2a window: per round, each directed-link slot on a
+/// live delivery's path is busy until the slowest flow through it
+/// finishes, priced by the same contended-census model as
+/// `CostEngine::round_time`.
+#[allow(clippy::too_many_arguments)]
+fn trace_serial_step(
+    tr: &mut Tracer,
+    topo: &Topology,
+    bytes: &Mat,
+    serial: &StepCost,
+    a2a: A2aAlgo,
+    profile: StepProfile,
+    n_moe_layers: usize,
+    cache: Option<&PlanCache>,
+) {
+    if !tr.enabled(TraceLevel::Phase) {
+        return;
+    }
+    let t0 = tr.clock_s();
+    tr.span("serial", "compute", "compute", t0, serial.compute_s, &[]);
+    let a2a_start = t0 + serial.compute_s;
+    let mut cur = a2a_start;
+    for (name, dur) in [
+        ("a2a:local", serial.a2a.local_s),
+        ("a2a:intra", serial.a2a.intra_s),
+        ("a2a:inter", serial.a2a.inter_s),
+    ] {
+        tr.span("serial", name, "a2a", cur, dur, &[]);
+        cur += dur;
+    }
+    if profile.allreduce {
+        tr.span("serial", "allreduce", "allreduce", cur, serial.allreduce_s, &[]);
+    }
+    if !tr.enabled(TraceLevel::Chunk) {
+        return;
+    }
+
+    // only scheduled plans have a round structure to attribute; reuse the
+    // cache's schedule when one serves this pattern (the one just priced),
+    // else synthesise the same schedule the cold path would have
+    let fresh;
+    let rounds: &[Round] = match cache.and_then(|c| c.cached_rounds(topo, bytes, a2a)) {
+        Some(r) => r,
+        None if matches!(a2a, A2aAlgo::Scheduled(_)) => {
+            fresh = a2a.plan(topo, bytes).rounds;
+            match &fresh {
+                Some(r) => r.as_slice(),
+                None => return,
+            }
+        }
+        None => return,
+    };
+
+    let n_ex = profile.exchanges_per_layer * n_moe_layers as f64;
+    let mut census = vec![0u32; topo.n_slots()];
+    let mut slot_busy = vec![0.0f64; topo.n_slots()];
+    let mut live: Vec<(usize, usize)> = Vec::new();
+    let mut cur = a2a_start;
+    for (r, round) in rounds.iter().enumerate() {
+        live.clear();
+        live.extend(round.iter().copied().filter(|&(i, j)| i != j && bytes.get(i, j) > 0.0));
+        if live.is_empty() {
+            continue;
+        }
+        for v in &mut slot_busy {
+            *v = 0.0;
+        }
+        for &(i, j) in &live {
+            census_add(topo, &mut census, i, j);
+        }
+        let mut round_dur = 0.0f64;
+        for &(i, j) in &live {
+            let t = contended_time(topo, &census, i, j, bytes.get(i, j));
+            round_dur = round_dur.max(t);
+            for &s in topo.pair_slots(i, j) {
+                let s = s as usize;
+                slot_busy[s] = slot_busy[s].max(t);
+            }
+        }
+        for &(i, j) in &live {
+            census_sub(topo, &mut census, i, j);
+        }
+        let name = format!("round {r}");
+        for (s, &busy) in slot_busy.iter().enumerate() {
+            if busy > 0.0 {
+                tr.span(&format!("link:{s}"), &name, "a2a", cur, busy * n_ex, &[]);
+            }
+        }
+        cur += round_dur * n_ex;
     }
 }
 

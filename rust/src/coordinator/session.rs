@@ -33,7 +33,7 @@
 use super::cost::{ModelShape, PlanCache, StepProfile, PLAN_CACHE_TOL};
 use super::policy::{DispatchPolicy, PolicyInputs, TaMoe};
 use super::registry::parse_policy;
-use super::workload::{Workload, WorkloadCore};
+use super::workload::{trace_migration, Workload, WorkloadCore};
 use crate::comm::A2aAlgo;
 use crate::config::topology_for;
 use crate::data::{Batcher, SyntheticCorpus};
@@ -43,6 +43,7 @@ use crate::perturb::ChaosSpec;
 use crate::placement::{Placement, PlacementConfig};
 use crate::runtime::{open_backend, Backend, BackendKind, HostTensor};
 use crate::topology::Topology;
+use crate::trace::{TraceLevel, Tracer};
 use crate::util::Mat;
 use anyhow::{Context, Result};
 use std::path::PathBuf;
@@ -114,6 +115,7 @@ pub struct SessionBuilder {
     a2a_spec: Option<String>,
     overlap_spec: Option<String>,
     chaos_spec: Option<String>,
+    trace_level: Option<TraceLevel>,
     data: Option<DataSource>,
     opts: SessionOptions,
 }
@@ -215,6 +217,14 @@ impl SessionBuilder {
     /// `drift:…` events).
     pub fn chaos_named(mut self, spec: impl Into<String>) -> Self {
         self.chaos_spec = Some(spec.into());
+        self
+    }
+
+    /// Attach the deterministic tracer at this level: the run records
+    /// phase/link spans and counters on the simulated clock (see
+    /// [`crate::trace`]). Default: no tracer, zero overhead.
+    pub fn trace_level(mut self, level: TraceLevel) -> Self {
+        self.trace_level = Some(level);
         self
     }
 
@@ -389,7 +399,7 @@ impl SessionBuilder {
         // the shared pricing state: plan cache, placement engine, overlap
         // clock — one training step exchanges the c_ie byte matrix
         // 4 · n_moe times (dispatch + combine, forward + backward)
-        let core = WorkloadCore::new(
+        let mut core = WorkloadCore::new(
             topo,
             shape,
             a2a,
@@ -401,6 +411,9 @@ impl SessionBuilder {
             opts.placement.clone(),
         )
         .with_chaos(opts.chaos.clone())?;
+        if let Some(level) = self.trace_level {
+            core.attach_tracer(level);
+        }
         Ok(Session {
             backend,
             policy,
@@ -471,12 +484,22 @@ impl Session {
         let mut counts = out.counts;
         let mut migration_s = 0.0;
         let mut rehosted = false;
+        // step start on the tracer's simulated clock (migrations advance
+        // it before pricing: the stall precedes this step's exchanges)
+        let step_t0 = self.core.tracer().map(|t| t.clock_s());
         if let Some(report) = self.core.chaos_step(&mut counts) {
             for ev in &report.events {
                 self.log.push_perturbation(PerturbationRecord {
                     step: self.log.records.len(),
                     event: ev.clone(),
                 });
+            }
+            if let Some(tr) = self.core.tracer_mut() {
+                let t = tr.clock_s();
+                for ev in &report.events {
+                    tr.instant("step", ev, "chaos", t, &[]);
+                }
+                tr.registry_mut().inc("perturbations_total", report.events.len() as u64);
             }
             if let Some(m) = &report.migration {
                 migration_s += m.cost_s;
@@ -489,6 +512,9 @@ impl Session {
                     predicted_saving_s: m.predicted_saving_s,
                     realized_saving_s: m.realized_saving_s,
                 });
+                if let Some(tr) = self.core.tracer_mut() {
+                    trace_migration(tr, m.bytes, m.cost_s);
+                }
             }
         }
 
@@ -515,6 +541,9 @@ impl Session {
                 predicted_saving_s: m.predicted_saving_s,
                 realized_saving_s: m.realized_saving_s,
             });
+            if let Some(tr) = self.core.tracer_mut() {
+                trace_migration(tr, m.bytes, m.cost_s);
+            }
         }
         if rehosted {
             let mcfg = self.backend.model_cfg().clone();
@@ -550,6 +579,20 @@ impl Session {
             wall_s,
             ..Default::default()
         };
+        if let (Some(t0), Some(tr)) = (step_t0, self.core.tracer_mut()) {
+            // migrations already advanced the clock past t0; the span
+            // covers the whole step including those stalls
+            let dur = (tr.clock_s() - t0) + cost.step_s();
+            tr.span(
+                "step",
+                &format!("step {}", record.step),
+                "step",
+                t0,
+                dur,
+                &[("loss", record.loss)],
+            );
+            tr.advance(cost.step_s());
+        }
         self.last_counts = Some(counts);
         self.log.plan_hits = self.core.plan_cache().hits();
         self.log.plan_misses = self.core.plan_cache().misses();
@@ -646,6 +689,12 @@ impl Session {
     /// Accepted migrations so far (0 when placement is disabled).
     pub fn placement_epoch(&self) -> u64 {
         self.core.placement_epoch()
+    }
+
+    /// The attached event sink, if the session was built with
+    /// [`SessionBuilder::trace_level`].
+    pub fn tracer(&self) -> Option<&Tracer> {
+        self.core.tracer()
     }
 }
 

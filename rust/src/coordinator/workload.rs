@@ -13,7 +13,8 @@
 //! under the workload's [`StepProfile`] → log.
 
 use super::cost::{
-    step_cost_perturbed, step_cost_profiled, ModelShape, PlanCache, StepCost, StepProfile,
+    step_cost_perturbed, step_cost_profiled, step_cost_traced, ModelShape, PlanCache, StepCost,
+    StepProfile,
 };
 use crate::comm::A2aAlgo;
 use crate::metrics::{RunLog, StepRecord};
@@ -23,6 +24,7 @@ use crate::placement::{
     Migration, OverlapPricing, Placement, PlacementConfig, PlacementEngine,
 };
 use crate::topology::Topology;
+use crate::trace::{TraceLevel, Tracer};
 use crate::util::Mat;
 use anyhow::Result;
 
@@ -50,6 +52,10 @@ pub struct WorkloadCore {
     /// [`Self::chaos_step`], consumed by [`Self::price_with_shape`];
     /// `None` = every device at full speed, the clean fast path).
     slowdown: Option<Vec<f64>>,
+    /// The structured event sink, attached by the sessions' trace
+    /// builders. `None` (the default) keeps every priced path
+    /// allocation-free and byte-identical to a build without tracing.
+    tracer: Option<Tracer>,
 }
 
 /// What the fault stream did to one step, returned by
@@ -131,7 +137,15 @@ impl WorkloadCore {
             chaos: None,
             topo_epoch: 0,
             slowdown: None,
+            tracer: None,
         }
+    }
+
+    /// Attach a structured event sink at the requested level. Pricing
+    /// routes through the traced path from the next step on; traced
+    /// prices are bit-identical to untraced ones.
+    pub fn attach_tracer(&mut self, level: TraceLevel) {
+        self.tracer = Some(Tracer::new(level));
     }
 
     /// Attach a scripted fault stream. An `off` spec attaches nothing at
@@ -205,6 +219,29 @@ impl WorkloadCore {
     /// so the continuous batcher prices each iteration under a shape
     /// cloned from the core's with only the token dimension rewritten.
     pub fn price_with_shape(&mut self, shape: &ModelShape, counts: &Mat) -> StepCost {
+        if let Some(tracer) = self.tracer.as_mut() {
+            // the traced path takes slowdown unconditionally; a unit
+            // vector reproduces the profiled price exactly (pinned by
+            // `unit_slowdown_reproduces_profiled_price_exactly`)
+            let s = self
+                .slowdown
+                .clone()
+                .unwrap_or_else(|| vec![1.0; self.topo.p()]);
+            return step_cost_traced(
+                shape,
+                &self.topo,
+                counts,
+                self.e_per_dev,
+                self.flops_per_dev,
+                self.a2a,
+                self.overlap,
+                self.profile,
+                Some(&mut self.plan_cache),
+                self.placement.as_ref().map(|e| e.placement()),
+                &s,
+                tracer,
+            );
+        }
         match self.slowdown.clone() {
             // active stragglers: price compute per device under the
             // latched slowdown factors
@@ -310,6 +347,31 @@ impl WorkloadCore {
     pub fn chaos(&self) -> Option<&ChaosEngine> {
         self.chaos.as_ref()
     }
+
+    /// The attached event sink, if any.
+    pub fn tracer(&self) -> Option<&Tracer> {
+        self.tracer.as_ref()
+    }
+
+    /// Mutable access to the attached event sink, for the sessions to
+    /// emit step-scope spans, instants and counters.
+    pub fn tracer_mut(&mut self) -> Option<&mut Tracer> {
+        self.tracer.as_mut()
+    }
+}
+
+/// Record one accepted migration on the tracer: a span on the dedicated
+/// `migrate` track (the stall the step clock is charged), the counters,
+/// and the clock advance that pushes this step's exchanges after it.
+/// Shared by the training session and the serving simulator so both
+/// trace migrations identically.
+pub(crate) fn trace_migration(tr: &mut Tracer, bytes: f64, cost_s: f64) {
+    let t = tr.clock_s();
+    tr.span("migrate", "migration", "placement", t, cost_s, &[("bytes", bytes)]);
+    tr.registry_mut().inc("migrations_total", 1);
+    tr.registry_mut().gauge_add("migration_bytes", bytes);
+    tr.registry_mut().gauge_add("migration_s", cost_s);
+    tr.advance(cost_s);
 }
 
 /// One run that prices its steps through a [`WorkloadCore`] — the seam

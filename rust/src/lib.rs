@@ -50,6 +50,13 @@
 //!   priced as real transfers, and SLO accounting (TTFT/TPOT percentiles,
 //!   goodput under a deadline) — all sharing the training pricing stack
 //!   through the [`coordinator::Workload`] seam.
+//! * [`trace`] — the deterministic tracing & profiling layer: a
+//!   [`trace::Tracer`] span/event sink on the simulated clock fed by the
+//!   pricing path, a Chrome-trace-event exporter
+//!   ([`trace::chrome_trace`], Perfetto-loadable), the post-run
+//!   utilization report ([`trace::utilization`]) and the unified
+//!   [`trace::MetricsRegistry`] of named counters/gauges — all behind
+//!   `--trace`, zero-cost when off.
 //! * [`data`] — byte-level tokenizer, bundled tiny corpus and a synthetic
 //!   Zipf corpus generator, shard-aware batching.
 //! * [`config`] — TOML experiment configs and the cluster A/B/C presets
@@ -79,6 +86,7 @@ pub mod placement;
 pub mod runtime;
 pub mod serve;
 pub mod topology;
+pub mod trace;
 pub mod util;
 
 pub use config::ExperimentConfig;
@@ -89,3 +97,4 @@ pub use placement::{Placement, PlacementConfig, PlacementEngine};
 pub use runtime::{Backend, SimBackend};
 pub use serve::{CachePolicy, ServeBuilder, ServeSession, TraceConfig, TraceKind};
 pub use topology::Topology;
+pub use trace::{MetricsRegistry, TraceLevel, Tracer};

@@ -35,10 +35,18 @@ use ta_moe::comm::{profile_exchange, A2aAlgo};
 use ta_moe::config::{topology_for, ExperimentConfig};
 use ta_moe::coordinator::{device_flops, list_policies, SessionBuilder};
 use ta_moe::dispatch::{penalty_weights, target_pattern, DispatchProblem, Norm};
+use ta_moe::metrics::RunLog;
 use ta_moe::serve::{CachePolicy, ServeBuilder, TraceConfig, TraceKind};
 use ta_moe::topology::smooth_levels;
+use ta_moe::trace::{chrome_trace, utilization, utilization_csv};
 use ta_moe::util::bench::Table;
+use ta_moe::util::json::Json;
 use ta_moe::util::Mat;
+use ta_moe::Tracer;
+
+/// Tracks listed under `hottest` in the utilization report (summary JSON
+/// and `ta-moe` stdout alike).
+const TRACE_TOP_K: usize = 8;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -89,12 +97,15 @@ fn print_help() {
                          --backend sim|xla|auto --steps 100 --lr 1e-3 --seed 0\n\
                          --a2a auto|direct|hier|sched:xor|sched:rot|sched:bvn\n\
                          --placement off|on|<every-steps> --overlap off|serial|k=<n>|auto\n\
-                         --chaos off|<events> --config file.toml\n\
+                         --chaos off|<events> --trace off|<path.json>\n\
+                         --trace-level step|phase|chunk --config file.toml\n\
            serve         --artifact tiny4 --cluster table1 --strategy ta-moe\n\
                          --trace poisson|bursty|diurnal --rate 8 --requests 64\n\
                          --cache-cap <n> --cache lru|ewma --slo-s 0.2\n\
                          --experts-per-dev <n> --max-inflight 8 --zipf 1.0\n\
                          --a2a ... --placement ... --overlap ... --chaos ... --seed 0\n\
+                         (--trace also takes a <path.json> to record a\n\
+                         Chrome trace; --trace-level as in train)\n\
            solve         --cluster C --nodes 2 [--tokens 1024] [--k 1]\n\
            profile-topo  --cluster table1 [--nodes 2] [--noise 0.2]\n\
            bench-comm    [--mb 128]\n\
@@ -116,7 +127,11 @@ fn print_help() {
          CACHE:      lru | ewma (gate-load-EWMA-prioritized eviction)\n\
          CHAOS:      off | `+`-joined scripted faults, e.g.\n\
                      straggler:0x2@10-20:flap=4 + link:1x3@30-60 +\n\
-                     nodeloss:3@80 + drift:1@40-50 (see `ta-moe --list-modes`)"
+                     nodeloss:3@80 + drift:1@40-50 (see `ta-moe --list-modes`)\n\
+         TRACING:    --trace <path.json> records a deterministic Chrome\n\
+                     trace (load in Perfetto / chrome://tracing) plus a\n\
+                     per-resource utilization CSV; levels step < phase <\n\
+                     chunk; default off (zero overhead)"
     );
 }
 
@@ -214,6 +229,12 @@ fn cmd_train(flags: &Flags) -> Result<()> {
     if let Some(c) = flags.get("chaos") {
         cfg.chaos = c.clone();
     }
+    if let Some(t) = flags.get("trace") {
+        cfg.trace.path = t.clone();
+    }
+    if let Some(l) = flags.get("trace-level") {
+        cfg.trace.level = l.clone();
+    }
     cfg.steps = flag_parse(flags, "steps", cfg.steps)?;
     cfg.lr = flag_parse(flags, "lr", cfg.lr)?;
     cfg.seed = flag_parse(flags, "seed", cfg.seed)?;
@@ -239,6 +260,10 @@ fn cmd_train(flags: &Flags) -> Result<()> {
     builder = builder.overlap(overlap_mode);
     let chaos_spec = cfg.parsed_chaos()?;
     builder = builder.chaos(chaos_spec.clone());
+    let trace_level = cfg.trace.parsed_level()?;
+    if let Some(level) = trace_level {
+        builder = builder.trace_level(level);
+    }
     let mut session = builder.build()?;
 
     let topo = session.topology();
@@ -261,6 +286,9 @@ fn cmd_train(flags: &Flags) -> Result<()> {
     );
     if !chaos_spec.is_off() {
         println!("chaos: {chaos_spec}");
+    }
+    if let Some(level) = trace_level {
+        println!("trace: level {level} → {}", cfg.trace.path);
     }
 
     for step in 0..cfg.steps {
@@ -348,12 +376,65 @@ fn cmd_train(flags: &Flags) -> Result<()> {
                 .map_or_else(|| "-".into(), |s| s.to_string()),
             recovery
         );
-        // chaos runs also get the JSON summary (recovery_steps & co);
-        // clean runs keep the historic CSV-only output byte for byte
+    }
+    if !chaos_spec.is_off() || session.tracer().is_some() {
+        // chaos and traced runs get the JSON summary (recovery_steps,
+        // utilization & co); clean untraced runs keep the historic
+        // CSV-only output byte for byte
         let json_path = out.with_extension("json");
-        std::fs::write(&json_path, log.summary_json().to_string_compact())?;
+        let summary = summary_with_trace(session.log(), session.tracer());
+        std::fs::write(&json_path, summary.to_string_compact())?;
         println!("summary → {}", json_path.display());
     }
+    if let Some(tr) = session.tracer() {
+        write_trace_outputs(tr, &cfg.trace.path)?;
+    }
+    Ok(())
+}
+
+/// The run-log summary, with the tracer's utilization report and counter
+/// registry folded in when a tracer was attached (untraced summaries are
+/// byte-identical to the historic ones).
+fn summary_with_trace(log: &RunLog, tracer: Option<&Tracer>) -> Json {
+    let mut summary = log.summary_json();
+    if let (Some(tr), Json::Obj(m)) = (tracer, &mut summary) {
+        let report = utilization(tr.events(), tr.clock_s(), TRACE_TOP_K);
+        m.insert("utilization".into(), report.to_json());
+        m.insert("registry".into(), tr.registry().to_json());
+    }
+    summary
+}
+
+/// Write the Chrome-trace JSON (Perfetto-loadable) at `path_spec` and the
+/// per-resource utilization CSV next to it.
+fn write_trace_outputs(tracer: &Tracer, path_spec: &str) -> Result<()> {
+    let path = PathBuf::from(path_spec);
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(&path, chrome_trace(tracer).to_string_compact())?;
+    let report = utilization(tracer.events(), tracer.clock_s(), TRACE_TOP_K);
+    let csv_path = path.with_extension("utilization.csv");
+    std::fs::write(&csv_path, utilization_csv(&report))?;
+    if let Some(hot) = report.hottest.first() {
+        let busy = report
+            .rows
+            .iter()
+            .find(|r| &r.track == hot)
+            .map_or(0.0, |r| r.busy_frac);
+        println!(
+            "trace: {} events on {} tracks; hottest {} at {:.1}% busy; \
+             straggler skew {:.3}",
+            tracer.events().len(),
+            report.rows.len(),
+            hot,
+            busy * 100.0,
+            report.straggler_skew
+        );
+    }
+    println!("trace → {} (+ {})", path.display(), csv_path.display());
     Ok(())
 }
 
@@ -385,7 +466,17 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         cfg.overlap = o.clone();
     }
     if let Some(t) = flags.get("trace") {
-        cfg.serve.trace = t.clone();
+        // `--trace` is overloaded on serve: an arrival-process kind
+        // (poisson|bursty|diurnal) keeps its historic meaning; anything
+        // else is a tracer output path ("off" disables the tracer)
+        if t.parse::<TraceKind>().is_ok() {
+            cfg.serve.trace = t.clone();
+        } else {
+            cfg.trace.path = t.clone();
+        }
+    }
+    if let Some(l) = flags.get("trace-level") {
+        cfg.trace.level = l.clone();
     }
     if let Some(c) = flags.get("cache") {
         cfg.serve.cache = c.clone();
@@ -432,6 +523,10 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         .placement(cfg.parsed_placement()?);
     let chaos_spec = cfg.parsed_chaos()?;
     builder = builder.chaos(chaos_spec.clone());
+    let trace_level = cfg.trace.parsed_level()?;
+    if let Some(level) = trace_level {
+        builder = builder.trace_level(level);
+    }
     if let Some(algo) = cfg.parsed_a2a()? {
         builder = builder.a2a(algo);
     }
@@ -457,6 +552,9 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     );
     if !chaos_spec.is_off() {
         println!("chaos: {chaos_spec}");
+    }
+    if let Some(level) = trace_level {
+        println!("trace: level {level} → {}", cfg.trace.path);
     }
     sess.run(max_iters)?;
 
@@ -508,8 +606,12 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     let csv = cfg.out_dir.join(format!("{stem}.csv"));
     log.write_csv(&csv)?;
     let json_path = cfg.out_dir.join(format!("{stem}.json"));
-    std::fs::write(&json_path, log.summary_json().to_string_compact())?;
+    let summary = summary_with_trace(log, sess.tracer());
+    std::fs::write(&json_path, summary.to_string_compact())?;
     println!("log → {} / {}", csv.display(), json_path.display());
+    if let Some(tr) = sess.tracer() {
+        write_trace_outputs(tr, &cfg.trace.path)?;
+    }
     Ok(())
 }
 
@@ -541,6 +643,9 @@ fn cmd_list_modes() -> Result<()> {
     }
     for policy in CachePolicy::ALL {
         t.row(&["cache".into(), policy.to_string(), cache_help(policy).into()]);
+    }
+    for (spec, help) in TRACE_LEVEL_ROWS {
+        t.row(&["trace-level".into(), (*spec).into(), (*help).into()]);
     }
     for (spec, help) in CHAOS_MODE_ROWS {
         t.row(&["chaos".into(), (*spec).into(), (*help).into()]);
@@ -575,6 +680,15 @@ fn cache_help(policy: CachePolicy) -> &'static str {
         CachePolicy::EwmaPrioritized => "evict the lowest gate-load EWMA expert",
     }
 }
+
+/// The `--list-modes` tracer detail rows. Every spec is a parseable
+/// [`ta_moe::TraceLevel`] in its canonical spelling (a test round-trips
+/// each one); each level includes everything the previous one records.
+const TRACE_LEVEL_ROWS: &[(&str, &str)] = &[
+    ("step", "one span per step plus chaos/migration/fetch marks"),
+    ("phase", "adds compute/a2a/allreduce phase spans and plan hit/miss"),
+    ("chunk", "adds chunk-pipeline device/channel spans and per-link rounds"),
+];
 
 /// The `--list-modes` chaos rows. Every example is a *parseable* spec in
 /// its canonical spelling (a test round-trips each one), joinable with
@@ -709,8 +823,18 @@ fn cmd_bench_comm(flags: &Flags) -> Result<()> {
 
 #[cfg(test)]
 mod tests {
-    use super::CHAOS_MODE_ROWS;
+    use super::{CHAOS_MODE_ROWS, TRACE_LEVEL_ROWS};
     use ta_moe::perturb::ChaosSpec;
+    use ta_moe::TraceLevel;
+
+    #[test]
+    fn listed_trace_levels_parse_and_round_trip() {
+        for (spec, _) in TRACE_LEVEL_ROWS {
+            let parsed: TraceLevel = spec.parse().unwrap();
+            assert_eq!(parsed.to_string(), *spec, "canonical form drifted for {spec}");
+        }
+        assert!("verbose".parse::<TraceLevel>().is_err());
+    }
 
     #[test]
     fn listed_chaos_examples_parse_and_round_trip() {

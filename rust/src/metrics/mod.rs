@@ -299,7 +299,12 @@ impl RunLog {
     }
 
     /// Mean of the last `n` training losses (converged-loss estimate).
+    /// 0 on an empty log, so `summary_json` never emits NaN (and the
+    /// slice below never underflows).
     pub fn tail_loss(&self, n: usize) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
         let k = self.records.len().min(n).max(1);
         let s: f64 = self.records[self.records.len() - k..]
             .iter()
@@ -617,6 +622,21 @@ mod tests {
         }
         assert!((log.tail_loss(2) - 8.5).abs() < 1e-12);
         assert!((log.tail_loss(100) - 4.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_run_summary_emits_finite_numbers() {
+        // zero-step runs (e.g. a serve trace whose first arrival never
+        // fits the horizon) must not panic or divide by zero anywhere
+        let log = RunLog::new("empty", 0);
+        assert_eq!(log.tail_loss(20), 0.0);
+        assert_eq!(log.sim_throughput(), 0.0);
+        assert_eq!(log.overlap_efficiency(), 0.0);
+        assert_eq!(log.cache_hit_rate(), 0.0);
+        assert_eq!(log.goodput(1.0), 0.0);
+        let json = log.summary_json().to_string_compact();
+        assert!(!json.to_ascii_lowercase().contains("nan"), "{json}");
+        assert!(!json.to_ascii_lowercase().contains("inf"), "{json}");
     }
 
     #[test]

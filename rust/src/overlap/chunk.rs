@@ -91,6 +91,20 @@ pub fn pipeline_cost(
     allreduce_chunk_s: f64,
     k: usize,
 ) -> PipelineCost {
+    pipeline_cost_retained(inp, chunk, allreduce_chunk_s, k, false).0
+}
+
+/// [`pipeline_cost`] plus the timeline it scheduled. With `retain` the
+/// timeline keeps every event (the tracer's chunk-level feed); without,
+/// this is exactly `pipeline_cost` with the timeline's busy accounting
+/// still readable. The returned cost is bit-identical either way.
+pub fn pipeline_cost_retained(
+    inp: &OverlapInputs,
+    chunk: &A2aBreakdown,
+    allreduce_chunk_s: f64,
+    k: usize,
+    retain: bool,
+) -> (PipelineCost, Timeline) {
     assert!(k >= 1, "chunk count must be >= 1");
     let p = inp.expert_s_per_dev.len();
     assert!(p >= 1, "pipeline needs at least one device");
@@ -102,7 +116,7 @@ pub fn pipeline_cost(
     let comb_intra = p + 2;
     let comb_inter = p + 3;
     let ar_chan = p + 4;
-    let mut tl = Timeline::new(p + 5);
+    let mut tl = if retain { Timeline::recording(p + 5) } else { Timeline::new(p + 5) };
 
     // exposed local copies ride the intra event (they are serial with the
     // network phase in the breakdown's convention)
@@ -158,7 +172,7 @@ pub fn pipeline_cost(
         tl.schedule(ar_chan, EventClass::Allreduce, allreduce_chunk_s, &join);
     }
 
-    PipelineCost {
+    let cost = PipelineCost {
         makespan_s: tl.makespan(),
         serial_sum_s: tl.serial_sum(),
         bound_s: tl.max_busy(),
@@ -166,7 +180,8 @@ pub fn pipeline_cost(
         exposed_allreduce_s: tl
             .exposed(EventClass::Allreduce, &[EventClass::Compute, EventClass::A2a]),
         chunks: k,
-    }
+    };
+    (cost, tl)
 }
 
 /// Price one **forward-only** pass (an inference decode iteration) as a
@@ -178,6 +193,17 @@ pub fn pipeline_cost(
 /// `chunk` prices ONE exchange of `bytes/k` and `k = 1` is exactly the
 /// serial phase sum.
 pub fn pipeline_cost_forward(inp: &OverlapInputs, chunk: &A2aBreakdown, k: usize) -> PipelineCost {
+    pipeline_cost_forward_retained(inp, chunk, k, false).0
+}
+
+/// [`pipeline_cost_forward`] plus the timeline it scheduled; see
+/// [`pipeline_cost_retained`] for the retention contract.
+pub fn pipeline_cost_forward_retained(
+    inp: &OverlapInputs,
+    chunk: &A2aBreakdown,
+    k: usize,
+    retain: bool,
+) -> (PipelineCost, Timeline) {
     assert!(k >= 1, "chunk count must be >= 1");
     let p = inp.expert_s_per_dev.len();
     assert!(p >= 1, "pipeline needs at least one device");
@@ -186,7 +212,7 @@ pub fn pipeline_cost_forward(inp: &OverlapInputs, chunk: &A2aBreakdown, k: usize
     let disp_inter = p + 1;
     let comb_intra = p + 2;
     let comb_inter = p + 3;
-    let mut tl = Timeline::new(p + 4);
+    let mut tl = if retain { Timeline::recording(p + 4) } else { Timeline::new(p + 4) };
 
     let intra_s = chunk.local_s + chunk.intra_s;
     let inter_s = chunk.inter_s;
@@ -222,14 +248,15 @@ pub fn pipeline_cost_forward(inp: &OverlapInputs, chunk: &A2aBreakdown, k: usize
         }
     }
 
-    PipelineCost {
+    let cost = PipelineCost {
         makespan_s: tl.makespan(),
         serial_sum_s: tl.serial_sum(),
         bound_s: tl.max_busy(),
         exposed_a2a_s: tl.exposed(EventClass::A2a, &[EventClass::Compute]),
         exposed_allreduce_s: 0.0,
         chunks: k,
-    }
+    };
+    (cost, tl)
 }
 
 #[cfg(test)]
@@ -403,6 +430,39 @@ mod tests {
         };
         let c = pipeline_cost_forward(&inp, &A2aBreakdown::default(), 4);
         assert!((c.makespan_s - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn retained_variants_price_identically_and_keep_events() {
+        let inp = inputs(4);
+        let c = chunk(1.0, 4.0, 4);
+        let plain = pipeline_cost(&inp, &c, AR / 4.0, 4);
+        let (rec, tl) = pipeline_cost_retained(&inp, &c, AR / 4.0, 4, true);
+        assert_eq!(plain.makespan_s, rec.makespan_s);
+        assert_eq!(plain.serial_sum_s, rec.serial_sum_s);
+        assert_eq!(plain.exposed_a2a_s, rec.exposed_a2a_s);
+        assert!(!tl.events().is_empty());
+        // retained durations reconcile with the busy accounting exactly
+        for (r, &b) in tl.busy().iter().enumerate() {
+            let sum: f64 = tl
+                .events()
+                .iter()
+                .filter(|e| e.resource == r)
+                .map(|e| e.end_s - e.start_s)
+                .sum();
+            assert!((sum - b).abs() <= 1e-12 * b.max(1.0), "resource {r}: {sum} != {b}");
+        }
+        // without retain, the returned timeline keeps its busy accounting
+        // but no events
+        let (rec2, tl2) = pipeline_cost_retained(&inp, &c, AR / 4.0, 4, false);
+        assert_eq!(rec2.makespan_s, plain.makespan_s);
+        assert!(tl2.events().is_empty());
+        assert_eq!(tl2.busy(), tl.busy());
+
+        let fwd = pipeline_cost_forward(&inp, &c, 4);
+        let (fwd_rec, ftl) = pipeline_cost_forward_retained(&inp, &c, 4, true);
+        assert_eq!(fwd.makespan_s, fwd_rec.makespan_s);
+        assert!(!ftl.events().is_empty());
     }
 
     #[test]

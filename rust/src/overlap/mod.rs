@@ -34,8 +34,11 @@ mod chunk;
 mod timeline;
 
 pub use autotune::{autotune_k, autotune_k_forward};
-pub use chunk::{pipeline_cost, pipeline_cost_forward, OverlapInputs, PipelineCost, CHUNK_SWEEP};
-pub use timeline::{EventClass, EventId, Timeline};
+pub use chunk::{
+    pipeline_cost, pipeline_cost_forward, pipeline_cost_forward_retained, pipeline_cost_retained,
+    OverlapInputs, PipelineCost, CHUNK_SWEEP,
+};
+pub use timeline::{EventClass, EventId, Timeline, TimelineEvent};
 
 /// How a session prices its step clock: serially (the historic model), as
 /// a fixed-`k` chunk pipeline, or autotuned per dispatch pattern.

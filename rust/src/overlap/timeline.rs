@@ -20,6 +20,18 @@
 /// Index of a scheduled event, used to declare dependencies.
 pub type EventId = usize;
 
+/// One retained scheduled event: where it ran, what it was, and when.
+/// Only recorded when the timeline was built with [`Timeline::recording`]
+/// (the tracing path); the default constructor keeps scheduling
+/// allocation-free beyond the per-resource vectors.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TimelineEvent {
+    pub resource: usize,
+    pub class: EventClass,
+    pub start_s: f64,
+    pub end_s: f64,
+}
+
 /// What kind of work an event represents, for exposure accounting.
 /// (Resources say *where* an event runs; the class says *what* it is.)
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -41,6 +53,12 @@ pub struct Timeline {
     /// `(class, start, end)` of every positive-duration event.
     intervals: Vec<(EventClass, f64, f64)>,
     makespan: f64,
+    /// Event-retention mode: when true, every positive-duration event is
+    /// also kept with its resource in [`Timeline::events`] (the tracer's
+    /// feed). Off by default — [`Timeline::new`] stays zero-cost.
+    retain: bool,
+    /// Retained events, in schedule order (empty unless `retain`).
+    events: Vec<TimelineEvent>,
 }
 
 impl Timeline {
@@ -51,7 +69,16 @@ impl Timeline {
             end_of: Vec::new(),
             intervals: Vec::new(),
             makespan: 0.0,
+            retain: false,
+            events: Vec::new(),
         }
+    }
+
+    /// A timeline that retains per-resource events for tracing. The
+    /// schedule it computes is bit-identical to [`Timeline::new`]'s —
+    /// retention only copies what `schedule` already decided.
+    pub fn recording(n_resources: usize) -> Timeline {
+        Timeline { retain: true, ..Timeline::new(n_resources) }
     }
 
     /// Schedule one event on `resource` with the given dependencies.
@@ -74,10 +101,19 @@ impl Timeline {
         self.busy[resource] += duration;
         if duration > 0.0 {
             self.intervals.push((class, start, end));
+            if self.retain {
+                self.events.push(TimelineEvent { resource, class, start_s: start, end_s: end });
+            }
         }
         self.makespan = self.makespan.max(end);
         self.end_of.push(end);
         self.end_of.len() - 1
+    }
+
+    /// Retained events in schedule order (empty unless built with
+    /// [`Timeline::recording`]).
+    pub fn events(&self) -> &[TimelineEvent] {
+        &self.events
     }
 
     /// Completion time of the whole schedule.
@@ -231,6 +267,45 @@ mod tests {
         assert_eq!(t.makespan(), 2.0);
         // the barrier adds no interval
         assert_eq!(t.exposed(EventClass::Compute, &[]), 2.0);
+    }
+
+    #[test]
+    fn recording_retains_events_without_changing_the_schedule() {
+        let build = |mut t: Timeline| {
+            let a = t.schedule(0, EventClass::Compute, 1.0, &[]);
+            let barrier = t.schedule(0, EventClass::Compute, 0.0, &[a]);
+            t.schedule(1, EventClass::A2a, 2.0, &[barrier]);
+            t
+        };
+        let plain = build(Timeline::new(2));
+        let rec = build(Timeline::recording(2));
+        // same schedule, bit for bit
+        assert_eq!(plain.makespan(), rec.makespan());
+        assert_eq!(plain.busy(), rec.busy());
+        // plain retains nothing; recording keeps positive-duration events
+        assert!(plain.events().is_empty());
+        assert_eq!(
+            rec.events(),
+            &[
+                TimelineEvent {
+                    resource: 0,
+                    class: EventClass::Compute,
+                    start_s: 0.0,
+                    end_s: 1.0
+                },
+                TimelineEvent { resource: 1, class: EventClass::A2a, start_s: 1.0, end_s: 3.0 },
+            ]
+        );
+        // retained durations reconcile with the busy accounting exactly
+        for (r, &b) in rec.busy().iter().enumerate() {
+            let sum: f64 = rec
+                .events()
+                .iter()
+                .filter(|e| e.resource == r)
+                .map(|e| e.end_s - e.start_s)
+                .sum();
+            assert_eq!(sum, b, "resource {r}");
+        }
     }
 
     #[test]

@@ -50,6 +50,7 @@ pub use cache::{CacheAccess, CachePolicy, ExpertCache};
 pub use trace::{Request, TraceConfig, TraceKind};
 
 use crate::comm::{A2aAlgo, CostEngine};
+use crate::coordinator::workload::trace_migration;
 use crate::coordinator::{
     converged_counts, parse_policy, DispatchPolicy, ModelShape, PolicyInputs, StepProfile,
     TaMoe, Workload, WorkloadCore, PLAN_CACHE_TOL,
@@ -60,6 +61,7 @@ use crate::perturb::ChaosSpec;
 use crate::placement::{Placement, PlacementConfig};
 use crate::runtime::ModelCfg;
 use crate::topology::Topology;
+use crate::trace::{TraceLevel, Tracer};
 use crate::util::{rng::Rng, Mat};
 use anyhow::Result;
 
@@ -95,6 +97,7 @@ pub struct ServeBuilder {
     zipf_s: f64,
     chaos: ChaosSpec,
     chaos_spec: Option<String>,
+    trace_level: Option<TraceLevel>,
     label: Option<String>,
 }
 
@@ -123,6 +126,7 @@ impl Default for ServeBuilder {
             zipf_s: 1.0,
             chaos: ChaosSpec::off(),
             chaos_spec: None,
+            trace_level: None,
             label: None,
         }
     }
@@ -293,6 +297,14 @@ impl ServeBuilder {
         self
     }
 
+    /// Attach the deterministic tracer at this level (see
+    /// [`crate::trace`]; not to be confused with [`ServeBuilder::trace`],
+    /// which configures the *arrival* trace). Default: no tracer.
+    pub fn trace_level(mut self, level: TraceLevel) -> Self {
+        self.trace_level = Some(level);
+        self
+    }
+
     pub fn label(mut self, label: impl Into<String>) -> Self {
         self.label = Some(label.into());
         self
@@ -367,7 +379,7 @@ impl ServeBuilder {
             format!("serve-{}/{}", self.trace.kind, policy.name())
         });
         let shape = ModelShape::from_cfg(&cfg);
-        let core = WorkloadCore::new(
+        let mut core = WorkloadCore::new(
             topo,
             shape,
             a2a,
@@ -379,6 +391,9 @@ impl ServeBuilder {
             self.placement,
         )
         .with_chaos(chaos)?;
+        if let Some(level) = self.trace_level {
+            core.attach_tracer(level);
+        }
         let identity = Placement::identity(cfg.p, cfg.e_per_dev);
         let rng = Rng::seed_from_u64(self.trace.seed ^ ROUTE_SEED_SALT);
         Ok(ServeSession {
@@ -472,6 +487,17 @@ impl ServeSession {
                 self.now_s = self.now_s.max(t);
             }
         }
+        // tracer: follow the request clock across idle gaps, then mark
+        // the iteration start (migration/fetch stalls advance from here)
+        let step_t0 = if let Some(tr) = self.core.tracer_mut() {
+            let gap = self.now_s - tr.clock_s();
+            if gap > 0.0 {
+                tr.advance(gap);
+            }
+            Some(tr.clock_s())
+        } else {
+            None
+        };
         let admitted = self.batcher.admit(self.now_s);
         let inflight = self.batcher.inflight_len();
         let mut tokens = self.batcher.tokens_per_device();
@@ -490,6 +516,13 @@ impl ServeSession {
                     step: self.log.records.len(),
                     event: ev.clone(),
                 });
+            }
+            if let Some(tr) = self.core.tracer_mut() {
+                let t = tr.clock_s();
+                for ev in &report.events {
+                    tr.instant("step", ev, "chaos", t, &[]);
+                }
+                tr.registry_mut().inc("perturbations_total", report.events.len() as u64);
             }
             for &dev in &report.dead_devices {
                 self.batcher.fail_device(dev);
@@ -520,6 +553,9 @@ impl ServeSession {
                     predicted_saving_s: m.predicted_saving_s,
                     realized_saving_s: m.realized_saving_s,
                 });
+                if let Some(tr) = self.core.tracer_mut() {
+                    trace_migration(tr, m.bytes, m.cost_s);
+                }
             }
         }
 
@@ -543,6 +579,9 @@ impl ServeSession {
                 predicted_saving_s: m.predicted_saving_s,
                 realized_saving_s: m.realized_saving_s,
             });
+            if let Some(tr) = self.core.tracer_mut() {
+                trace_migration(tr, m.bytes, m.cost_s);
+            }
         }
 
         // expert-weight cache: misses stream weights home → host over the
@@ -557,6 +596,23 @@ impl ServeSession {
         } else {
             0.0
         };
+        if let Some(tr) = self.core.tracer_mut() {
+            tr.registry_mut().inc("cache_hits_total", access.hits as u64);
+            tr.registry_mut().inc("cache_misses_total", access.misses as u64);
+            if fetch_s > 0.0 {
+                let t = tr.clock_s();
+                tr.span(
+                    "fetch",
+                    "expert fetch",
+                    "cache",
+                    t,
+                    fetch_s,
+                    &[("misses", access.misses as f64)],
+                );
+                tr.registry_mut().gauge_add("fetch_s", fetch_s);
+                tr.advance(fetch_s);
+            }
+        }
 
         // price the iteration under the decode profile, with the token
         // dimension set to the live batch's largest per-device bill
@@ -593,6 +649,19 @@ impl ServeSession {
             cache_misses: access.misses,
             ..Default::default()
         };
+        if let (Some(t0), Some(tr)) = (step_t0, self.core.tracer_mut()) {
+            // migration/fetch stalls already advanced the clock past t0
+            let dur = (tr.clock_s() - t0) + cost.step_s();
+            tr.span(
+                "step",
+                &format!("step {}", record.step),
+                "step",
+                t0,
+                dur,
+                &[("inflight", inflight as f64)],
+            );
+            tr.advance(cost.step_s());
+        }
         self.log.plan_hits = self.core.plan_cache().hits();
         self.log.plan_misses = self.core.plan_cache().misses();
         self.log.push(record.clone());
@@ -673,6 +742,12 @@ impl ServeSession {
     /// The live routing matrix (tests; the mirror checks its rows).
     pub fn route(&self) -> &Mat {
         &self.route
+    }
+
+    /// The attached event sink, if the session was built with
+    /// [`ServeBuilder::trace_level`].
+    pub fn tracer(&self) -> Option<&Tracer> {
+        self.core.tracer()
     }
 
     pub fn done(&self) -> bool {

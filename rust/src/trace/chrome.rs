@@ -1,0 +1,153 @@
+//! Chrome-trace-event JSON exporter.
+//!
+//! [`chrome_trace`] serialises a [`Tracer`]'s events in the Chrome
+//! trace-event format (the `{"traceEvents": [...]}` object form), which
+//! Perfetto and `chrome://tracing` load directly. Tracks become
+//! threads: each track gets a `tid` in first-use order plus a
+//! `thread_name` metadata event, spans become `"X"` complete events and
+//! markers `"i"` instants, with timestamps in microseconds of simulated
+//! time. `otherData` carries the registry and the independent
+//! `Timeline::busy()` totals the validator reconciles span sums
+//! against. Output is deterministic: `util::json::Json` objects are
+//! sorted maps and event order is emission order.
+
+use super::{TracePh, Tracer};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+const PID: f64 = 1.0;
+
+/// Serialise the tracer's full state as a Chrome trace JSON value.
+pub fn chrome_trace(tracer: &Tracer) -> Json {
+    let mut tid_of: BTreeMap<&str, usize> = BTreeMap::new();
+    let mut track_order: Vec<&str> = Vec::new();
+    for e in tracer.events() {
+        if !tid_of.contains_key(e.track.as_str()) {
+            tid_of.insert(&e.track, track_order.len() + 1);
+            track_order.push(&e.track);
+        }
+    }
+
+    let mut trace_events: Vec<Json> = Vec::with_capacity(tracer.events().len() + track_order.len());
+    for (i, track) in track_order.iter().enumerate() {
+        let mut args = BTreeMap::new();
+        args.insert("name".to_string(), Json::Str(track.to_string()));
+        let mut ev = BTreeMap::new();
+        ev.insert("ph".to_string(), Json::Str("M".to_string()));
+        ev.insert("name".to_string(), Json::Str("thread_name".to_string()));
+        ev.insert("pid".to_string(), Json::Num(PID));
+        ev.insert("tid".to_string(), Json::Num((i + 1) as f64));
+        ev.insert("args".to_string(), Json::Obj(args));
+        trace_events.push(Json::Obj(ev));
+    }
+
+    for e in tracer.events() {
+        let tid = tid_of[e.track.as_str()];
+        let mut ev = BTreeMap::new();
+        ev.insert("name".to_string(), Json::Str(e.name.clone()));
+        ev.insert("cat".to_string(), Json::Str(e.cat.clone()));
+        ev.insert("pid".to_string(), Json::Num(PID));
+        ev.insert("tid".to_string(), Json::Num(tid as f64));
+        ev.insert("ts".to_string(), Json::Num(e.start_s * 1e6));
+        match e.ph {
+            TracePh::Span => {
+                ev.insert("ph".to_string(), Json::Str("X".to_string()));
+                ev.insert("dur".to_string(), Json::Num(e.dur_s * 1e6));
+            }
+            TracePh::Mark => {
+                ev.insert("ph".to_string(), Json::Str("i".to_string()));
+                // thread-scoped instant (renders as a tick on the track)
+                ev.insert("s".to_string(), Json::Str("t".to_string()));
+            }
+        }
+        if !e.args.is_empty() {
+            let mut args = BTreeMap::new();
+            for (k, v) in &e.args {
+                args.insert(k.clone(), Json::Num(*v));
+            }
+            ev.insert("args".to_string(), Json::Obj(args));
+        }
+        trace_events.push(Json::Obj(ev));
+    }
+
+    // otherData: the registry plus the independent busy accounting
+    let mut other = match tracer.registry().to_json() {
+        Json::Obj(m) => m,
+        _ => BTreeMap::new(),
+    };
+    let mut busy = BTreeMap::new();
+    for (track, b) in tracer.timeline_busy() {
+        busy.insert(track.clone(), Json::Num(*b));
+    }
+    other.insert("timeline_busy_s".to_string(), Json::Obj(busy));
+
+    let mut top = BTreeMap::new();
+    top.insert("traceEvents".to_string(), Json::Arr(trace_events));
+    top.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
+    top.insert("otherData".to_string(), Json::Obj(other));
+    Json::Obj(top)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::TraceLevel;
+
+    #[test]
+    fn exports_metadata_spans_and_instants() {
+        let mut t = Tracer::new(TraceLevel::Chunk);
+        t.span("step", "step 0", "step", 0.0, 1.5, &[("loss", 2.0)]);
+        t.span("dev:0", "expert", "compute", 0.25, 0.5, &[]);
+        t.instant("step", "migration", "placement", 1.0, &[]);
+        t.note_busy("dev:0", 0.5);
+        t.registry_mut().inc("migrations_total", 1);
+
+        let j = chrome_trace(&t);
+        let evs = j.req("traceEvents").unwrap().as_arr().unwrap();
+        // 2 tracks -> 2 metadata events, then the 3 recorded events
+        assert_eq!(evs.len(), 5);
+        assert_eq!(evs[0].req("ph").unwrap().as_str(), Some("M"));
+        assert_eq!(evs[0].req("args").unwrap().req("name").unwrap().as_str(), Some("step"));
+        assert_eq!(evs[1].req("args").unwrap().req("name").unwrap().as_str(), Some("dev:0"));
+        // the step span: tid 1 (first use), ts 0, dur 1.5e6 us
+        assert_eq!(evs[2].req("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(evs[2].req("tid").unwrap().as_f64(), Some(1.0));
+        assert_eq!(evs[2].req("dur").unwrap().as_f64(), Some(1.5e6));
+        assert_eq!(evs[2].req("args").unwrap().req("loss").unwrap().as_f64(), Some(2.0));
+        // the instant rides the step track with a scope
+        assert_eq!(evs[4].req("ph").unwrap().as_str(), Some("i"));
+        assert_eq!(evs[4].req("s").unwrap().as_str(), Some("t"));
+        assert_eq!(evs[4].req("ts").unwrap().as_f64(), Some(1e6));
+        // otherData: registry + busy accounting
+        let other = j.req("otherData").unwrap();
+        assert_eq!(
+            other.req("counters").unwrap().req("migrations_total").unwrap().as_f64(),
+            Some(1.0)
+        );
+        assert_eq!(
+            other.req("timeline_busy_s").unwrap().req("dev:0").unwrap().as_f64(),
+            Some(0.5)
+        );
+    }
+
+    #[test]
+    fn serialisation_is_deterministic() {
+        let build = || {
+            let mut t = Tracer::new(TraceLevel::Phase);
+            t.span("serial", "a2a:inter", "a2a", 0.125, 0.75, &[]);
+            t.instant("step", "plan:miss", "plan", 0.0, &[]);
+            t.note_busy("serial", 0.75);
+            chrome_trace(&t).to_string_compact()
+        };
+        assert_eq!(build(), build());
+    }
+
+    #[test]
+    fn empty_tracer_exports_a_loadable_skeleton() {
+        let t = Tracer::new(TraceLevel::Step);
+        let j = chrome_trace(&t);
+        assert_eq!(j.req("traceEvents").unwrap().as_arr().unwrap().len(), 0);
+        let back = Json::parse(&j.to_string_compact()).unwrap();
+        assert_eq!(back, j);
+    }
+}

@@ -1,0 +1,269 @@
+//! Deterministic tracing & profiling on the simulated clock.
+//!
+//! Every number the simulator prices already lives on one simulated
+//! clock, but until now only *aggregates* survived a run (CSV columns,
+//! summary JSON) — the overlap [`crate::overlap::Timeline`] discarded
+//! its events after computing busy totals, so "which link was the
+//! bottleneck in step 412?" was unanswerable. This module retains the
+//! structure:
+//!
+//! * [`Tracer`] — a span/event sink on the simulated clock. Sessions
+//!   advance its clock by each step's priced makespan; the pricing path
+//!   ([`crate::coordinator`]), placement engine, expert cache, and chaos
+//!   engine emit spans (phases, per-link a2a rounds, pipeline events)
+//!   and instants (migrations, fetches, plan hits/misses, faults)
+//!   against it. No wall clock is ever read — the pallas-lint
+//!   determinism bans apply to this directory.
+//! * [`TraceLevel`] — how much detail to record: `step` (step spans +
+//!   lifecycle instants), `phase` (adds serial phase spans), `chunk`
+//!   (adds per-directed-link rounds and retained pipeline events).
+//! * [`MetricsRegistry`] — named counters/gauges unifying the ad-hoc
+//!   tallies, with lint-enforced key grammar.
+//! * [`chrome_trace`] — Chrome-trace-event JSON (Perfetto-loadable).
+//! * [`utilization`] — the post-run per-resource report (busy fraction,
+//!   straggler skew, hottest resources), mirrored bit-exactly in
+//!   `python/mirrors/trace_utilization.py`.
+//!
+//! The whole subsystem is opt-in: a session without a tracer attached
+//! allocates nothing and prices byte-identically to one that never
+//! heard of this module.
+
+mod chrome;
+mod registry;
+mod report;
+
+pub use chrome::chrome_trace;
+pub use registry::MetricsRegistry;
+pub use report::{utilization, utilization_csv, UtilizationReport, UtilizationRow};
+
+use std::collections::BTreeMap;
+
+/// How much detail the tracer records. Ordered: each level includes
+/// everything below it (`Step < Phase < Chunk`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum TraceLevel {
+    /// One span per training/serve step plus lifecycle instants
+    /// (migrations, fetches, faults, plan hits/misses) and the registry.
+    Step,
+    /// Adds serial phase spans: compute, a2a local/intra/inter,
+    /// allreduce, laid back to back inside each step.
+    Phase,
+    /// Adds per-directed-link a2a round spans (serial steps) and the
+    /// retained pipeline timeline (overlapped steps).
+    Chunk,
+}
+
+impl std::fmt::Display for TraceLevel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TraceLevel::Step => write!(f, "step"),
+            TraceLevel::Phase => write!(f, "phase"),
+            TraceLevel::Chunk => write!(f, "chunk"),
+        }
+    }
+}
+
+impl std::str::FromStr for TraceLevel {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<TraceLevel, String> {
+        match s.trim() {
+            "step" => Ok(TraceLevel::Step),
+            "phase" => Ok(TraceLevel::Phase),
+            "chunk" => Ok(TraceLevel::Chunk),
+            other => Err(format!("unknown trace level {other:?} (known: step, phase, chunk)")),
+        }
+    }
+}
+
+/// Whether an event occupies time (a span) or marks a point (instant).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TracePh {
+    /// Chrome `"X"` — a complete span with a duration.
+    Span,
+    /// Chrome `"i"` — an instantaneous marker.
+    Mark,
+}
+
+/// One recorded event. `track` names the resource row it renders on
+/// (`"step"`, `"serial"`, `"dev:<i>"`, `"link:<slot>"`, `"chan:<name>"`,
+/// `"control"`); times are simulated seconds from the run's origin.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    pub track: String,
+    pub name: String,
+    pub cat: String,
+    pub ph: TracePh,
+    pub start_s: f64,
+    pub dur_s: f64,
+    pub args: Vec<(String, f64)>,
+}
+
+/// The span/event sink. Owned by a `WorkloadCore` when tracing is on;
+/// the session advances [`Tracer::advance`] by each step's priced total
+/// so emitters only compute offsets within the current step.
+#[derive(Clone, Debug)]
+pub struct Tracer {
+    level: TraceLevel,
+    /// Simulated time at the start of the step being traced.
+    clock_s: f64,
+    events: Vec<TraceEvent>,
+    registry: MetricsRegistry,
+    /// Independent busy accounting per track, fed from
+    /// `Timeline::busy()` (field accumulation in `schedule`), NOT from
+    /// the retained event list — so the validator's span-sum
+    /// reconciliation checks a real invariant, not a tautology.
+    timeline_busy: BTreeMap<String, f64>,
+}
+
+impl Tracer {
+    pub fn new(level: TraceLevel) -> Tracer {
+        Tracer {
+            level,
+            clock_s: 0.0,
+            events: Vec::new(),
+            registry: MetricsRegistry::new(),
+            timeline_busy: BTreeMap::new(),
+        }
+    }
+
+    /// The configured detail level.
+    pub fn level(&self) -> TraceLevel {
+        self.level
+    }
+
+    /// True when events of `level` should be recorded (each level
+    /// includes everything below it).
+    pub fn enabled(&self, level: TraceLevel) -> bool {
+        self.level >= level
+    }
+
+    /// Simulated time at the start of the current step.
+    pub fn clock_s(&self) -> f64 {
+        self.clock_s
+    }
+
+    /// Advance the step origin by one step's priced total.
+    pub fn advance(&mut self, dt_s: f64) {
+        debug_assert!(dt_s >= 0.0, "clock must not run backwards ({dt_s})");
+        self.clock_s += dt_s;
+    }
+
+    /// Record a complete span at an absolute simulated time.
+    pub fn span(
+        &mut self,
+        track: &str,
+        name: &str,
+        cat: &str,
+        start_s: f64,
+        dur_s: f64,
+        args: &[(&str, f64)],
+    ) {
+        debug_assert!(dur_s >= 0.0, "negative span duration {dur_s}");
+        self.events.push(TraceEvent {
+            track: track.to_string(),
+            name: name.to_string(),
+            cat: cat.to_string(),
+            ph: TracePh::Span,
+            start_s,
+            dur_s,
+            args: args.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+        });
+    }
+
+    /// Record an instantaneous marker at an absolute simulated time.
+    pub fn instant(&mut self, track: &str, name: &str, cat: &str, at_s: f64, args: &[(&str, f64)]) {
+        self.events.push(TraceEvent {
+            track: track.to_string(),
+            name: name.to_string(),
+            cat: cat.to_string(),
+            ph: TracePh::Mark,
+            start_s: at_s,
+            dur_s: 0.0,
+            args: args.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+        });
+    }
+
+    /// Everything recorded so far, in emission order.
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    /// The unified counters/gauges registry.
+    pub fn registry(&self) -> &MetricsRegistry {
+        &self.registry
+    }
+
+    pub fn registry_mut(&mut self) -> &mut MetricsRegistry {
+        &mut self.registry
+    }
+
+    /// Accumulate a track's busy time from `Timeline::busy()` — the
+    /// independent accounting the validator reconciles span sums
+    /// against.
+    pub fn note_busy(&mut self, track: &str, busy_s: f64) {
+        if let Some(b) = self.timeline_busy.get_mut(track) {
+            *b += busy_s;
+        } else {
+            self.timeline_busy.insert(track.to_string(), busy_s);
+        }
+    }
+
+    /// Per-track busy totals accumulated via [`Tracer::note_busy`].
+    pub fn timeline_busy(&self) -> &BTreeMap<String, f64> {
+        &self.timeline_busy
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_parse_display_and_order() {
+        for (s, l) in [("step", TraceLevel::Step), ("phase", TraceLevel::Phase), ("chunk", TraceLevel::Chunk)] {
+            assert_eq!(s.parse::<TraceLevel>().unwrap(), l);
+            assert_eq!(l.to_string(), s);
+        }
+        assert!(TraceLevel::Step < TraceLevel::Phase);
+        assert!(TraceLevel::Phase < TraceLevel::Chunk);
+        assert!("off".parse::<TraceLevel>().is_err());
+        let t = Tracer::new(TraceLevel::Phase);
+        assert!(t.enabled(TraceLevel::Step));
+        assert!(t.enabled(TraceLevel::Phase));
+        assert!(!t.enabled(TraceLevel::Chunk));
+    }
+
+    #[test]
+    fn spans_instants_and_clock_accumulate() {
+        let mut t = Tracer::new(TraceLevel::Chunk);
+        assert_eq!(t.clock_s(), 0.0);
+        t.span("step", "step 0", "step", 0.0, 1.5, &[("loss", 2.0)]);
+        t.advance(1.5);
+        t.instant("control", "migration", "placement", t.clock_s(), &[]);
+        assert_eq!(t.clock_s(), 1.5);
+        assert_eq!(t.events().len(), 2);
+        assert_eq!(t.events()[0].ph, TracePh::Span);
+        assert_eq!(t.events()[0].args, vec![("loss".to_string(), 2.0)]);
+        assert_eq!(t.events()[1].ph, TracePh::Mark);
+        assert_eq!(t.events()[1].start_s, 1.5);
+    }
+
+    #[test]
+    fn note_busy_accumulates_per_track() {
+        let mut t = Tracer::new(TraceLevel::Chunk);
+        t.note_busy("dev:0", 1.0);
+        t.note_busy("dev:0", 0.5);
+        t.note_busy("chan:allreduce", 2.0);
+        assert_eq!(t.timeline_busy().get("dev:0"), Some(&1.5));
+        assert_eq!(t.timeline_busy().get("chan:allreduce"), Some(&2.0));
+        assert_eq!(t.timeline_busy().len(), 2);
+    }
+
+    #[test]
+    fn registry_reachable_through_the_tracer() {
+        let mut t = Tracer::new(TraceLevel::Step);
+        t.registry_mut().inc("migrations_total", 1);
+        assert_eq!(t.registry().counter("migrations_total"), 1);
+    }
+}

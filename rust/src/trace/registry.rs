@@ -1,0 +1,121 @@
+//! The unified counters/gauges registry.
+//!
+//! Before this module every subsystem kept its own ad-hoc tallies (plan
+//! hits/misses on the cache, migrations on the placement engine, fetches
+//! on the expert cache, perturbations on the chaos engine) and every
+//! consumer had to know where each lived. A [`MetricsRegistry`] names
+//! them all in one sorted map with lint-enforced key grammar: counter
+//! keys end in `_total`, gauge keys end in a canonical unit suffix
+//! (`_s`, `_bytes`, …) — `pallas-lint`'s units rule checks every literal
+//! key at `inc`/`gauge_add` call sites, so a misnamed metric fails CI
+//! before it ever reaches a dashboard.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Named monotone counters (`u64`) and additive gauges (`f64`), sorted
+/// by key for deterministic export. Cheap to clone and compare — tests
+/// diff whole registries.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Add `by` to a counter, creating it at zero. Counter keys must end
+    /// in `_total` (lint-enforced at literal call sites).
+    pub fn inc(&mut self, key: &str, by: u64) {
+        if let Some(v) = self.counters.get_mut(key) {
+            *v += by;
+        } else {
+            self.counters.insert(key.to_string(), by);
+        }
+    }
+
+    /// Current counter value — zero when never incremented.
+    pub fn counter(&self, key: &str) -> u64 {
+        self.counters.get(key).copied().unwrap_or(0)
+    }
+
+    /// Add `v` to an additive gauge, creating it at zero. Gauge keys must
+    /// end in a canonical unit suffix (lint-enforced at literal sites).
+    pub fn gauge_add(&mut self, key: &str, v: f64) {
+        if let Some(g) = self.gauges.get_mut(key) {
+            *g += v;
+        } else {
+            self.gauges.insert(key.to_string(), v);
+        }
+    }
+
+    /// Current gauge value — zero when never touched.
+    pub fn gauge(&self, key: &str) -> f64 {
+        self.gauges.get(key).copied().unwrap_or(0.0)
+    }
+
+    /// True when no counter or gauge was ever touched.
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty()
+    }
+
+    /// `{"counters": {...}, "gauges": {...}}`, keys sorted — the shape
+    /// merged into summary JSON and the chrome trace's `otherData`.
+    pub fn to_json(&self) -> Json {
+        let mut counters = BTreeMap::new();
+        for (k, v) in &self.counters {
+            counters.insert(k.clone(), Json::Num(*v as f64));
+        }
+        let mut gauges = BTreeMap::new();
+        for (k, v) in &self.gauges {
+            gauges.insert(k.clone(), Json::Num(*v));
+        }
+        let mut obj = BTreeMap::new();
+        obj.insert("counters".to_string(), Json::Obj(counters));
+        obj.insert("gauges".to_string(), Json::Obj(gauges));
+        Json::Obj(obj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_default_to_zero() {
+        let mut r = MetricsRegistry::new();
+        assert!(r.is_empty());
+        assert_eq!(r.counter("plan_hits_total"), 0);
+        r.inc("plan_hits_total", 1);
+        r.inc("plan_hits_total", 2);
+        assert_eq!(r.counter("plan_hits_total"), 3);
+        assert!(!r.is_empty());
+    }
+
+    #[test]
+    fn gauges_accumulate_additively() {
+        let mut r = MetricsRegistry::new();
+        r.gauge_add("migration_s", 0.5);
+        r.gauge_add("migration_s", 0.25);
+        assert_eq!(r.gauge("migration_s"), 0.75);
+        assert_eq!(r.gauge("fetch_s"), 0.0);
+    }
+
+    #[test]
+    fn json_export_is_sorted_and_round_trips() {
+        let mut r = MetricsRegistry::new();
+        r.inc("plan_misses_total", 4);
+        r.inc("cache_hits_total", 7);
+        r.gauge_add("migration_bytes", 1024.0);
+        let j = r.to_json();
+        let s = j.to_string_compact();
+        // BTreeMap ordering: cache_hits before plan_misses
+        assert!(s.find("cache_hits_total").unwrap() < s.find("plan_misses_total").unwrap());
+        let back = Json::parse(&s).unwrap();
+        assert_eq!(back.req("counters").unwrap().get("cache_hits_total").unwrap().as_f64(), Some(7.0));
+        assert_eq!(back.req("gauges").unwrap().get("migration_bytes").unwrap().as_f64(), Some(1024.0));
+    }
+}

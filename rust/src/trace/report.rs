@@ -1,0 +1,183 @@
+//! Post-run utilization report derived from retained trace spans.
+//!
+//! [`utilization`] folds a run's spans into per-resource busy totals
+//! and the headline numbers every profiler report leads with: busy
+//! fraction per link/device, straggler skew (max/mean device busy), and
+//! the top-k hottest resources. The math is mirrored bit-exactly in
+//! `python/mirrors/trace_utilization.py` (pallas-lint mirror registry,
+//! subsystem `trace-utilization`).
+
+use super::{TraceEvent, TracePh};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// One resource row of the report.
+#[derive(Clone, Debug, PartialEq)]
+pub struct UtilizationRow {
+    /// The track the spans ran on (`"dev:<i>"`, `"link:<slot>"`, …).
+    pub track: String,
+    /// Sum of span durations on the track.
+    pub busy_s: f64,
+    /// `busy_s / total_s`, zero when the run had no clock.
+    pub busy_frac: f64,
+    /// Number of positive-duration spans.
+    pub spans: usize,
+}
+
+/// The folded report: rows sorted by track name, plus the headlines.
+#[derive(Clone, Debug, PartialEq)]
+pub struct UtilizationReport {
+    pub rows: Vec<UtilizationRow>,
+    /// Max/mean busy over `dev:` tracks; 1.0 for a skew-free (or
+    /// device-free) run.
+    pub straggler_skew: f64,
+    /// Top-k tracks by busy time, busiest first (ties by name).
+    pub hottest: Vec<String>,
+    /// The run's simulated clock the fractions are against.
+    pub total_s: f64,
+}
+
+/// Fold retained spans into the utilization report. Only positive
+/// -duration [`TracePh::Span`] events count, and the aggregate `step`
+/// track is excluded — it would otherwise dominate every headline while
+/// saying nothing about *where* time went.
+pub fn utilization(events: &[TraceEvent], total_s: f64, top_k: usize) -> UtilizationReport {
+    let mut busy: BTreeMap<&str, (f64, usize)> = BTreeMap::new();
+    for e in events {
+        if e.ph != TracePh::Span || e.dur_s <= 0.0 || e.track == "step" {
+            continue;
+        }
+        let slot = busy.entry(&e.track).or_insert((0.0, 0));
+        slot.0 += e.dur_s;
+        slot.1 += 1;
+    }
+    let rows: Vec<UtilizationRow> = busy
+        .iter()
+        .map(|(track, (busy_s, spans))| UtilizationRow {
+            track: track.to_string(),
+            busy_s: *busy_s,
+            busy_frac: if total_s > 0.0 { busy_s / total_s } else { 0.0 },
+            spans: *spans,
+        })
+        .collect();
+
+    let dev_busy: Vec<f64> =
+        rows.iter().filter(|r| r.track.starts_with("dev:")).map(|r| r.busy_s).collect();
+    let straggler_skew = if dev_busy.is_empty() {
+        1.0
+    } else {
+        let mean = dev_busy.iter().sum::<f64>() / dev_busy.len() as f64;
+        let max = dev_busy.iter().copied().fold(0.0, f64::max);
+        if mean > 0.0 {
+            max / mean
+        } else {
+            1.0
+        }
+    };
+
+    let mut by_heat: Vec<(f64, &str)> = rows.iter().map(|r| (r.busy_s, r.track.as_str())).collect();
+    // busiest first; ties resolve by track name so the report is total
+    by_heat.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(b.1)));
+    let hottest = by_heat.iter().take(top_k).map(|(_, t)| t.to_string()).collect();
+
+    UtilizationReport { rows, straggler_skew, hottest, total_s }
+}
+
+/// The report as a `utilization.csv` body (header + one row per track).
+pub fn utilization_csv(report: &UtilizationReport) -> String {
+    let mut out = String::from("resource,busy_s,busy_frac,spans\n");
+    for r in &report.rows {
+        out.push_str(&format!("{},{},{},{}\n", r.track, r.busy_s, r.busy_frac, r.spans));
+    }
+    out
+}
+
+impl UtilizationReport {
+    /// The report as the `utilization` subobject of summary JSON.
+    pub fn to_json(&self) -> Json {
+        let mut resources = BTreeMap::new();
+        for r in &self.rows {
+            let mut row = BTreeMap::new();
+            row.insert("busy_s".to_string(), Json::Num(r.busy_s));
+            row.insert("busy_frac".to_string(), Json::Num(r.busy_frac));
+            row.insert("spans".to_string(), Json::Num(r.spans as f64));
+            resources.insert(r.track.clone(), Json::Obj(row));
+        }
+        let mut obj = BTreeMap::new();
+        obj.insert("resources".to_string(), Json::Obj(resources));
+        obj.insert("straggler_skew".to_string(), Json::Num(self.straggler_skew));
+        obj.insert(
+            "hottest".to_string(),
+            Json::Arr(self.hottest.iter().map(|t| Json::Str(t.clone())).collect()),
+        );
+        obj.insert("total_s".to_string(), Json::Num(self.total_s));
+        Json::Obj(obj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{TraceLevel, Tracer};
+
+    fn spans() -> Vec<TraceEvent> {
+        let mut t = Tracer::new(TraceLevel::Chunk);
+        t.span("step", "step 0", "step", 0.0, 10.0, &[]);
+        t.span("dev:0", "expert", "compute", 0.0, 4.0, &[]);
+        t.span("dev:0", "expert", "compute", 5.0, 2.0, &[]);
+        t.span("dev:1", "expert", "compute", 0.0, 2.0, &[]);
+        t.span("link:3", "round", "a2a", 1.0, 5.0, &[]);
+        t.instant("control", "migration", "placement", 2.0, &[]);
+        t.span("chan:allreduce", "bucket", "allreduce", 6.0, 0.0, &[]);
+        t.events().to_vec()
+    }
+
+    #[test]
+    fn folds_busy_excluding_step_instants_and_zero_spans() {
+        let rep = utilization(&spans(), 10.0, 2);
+        let tracks: Vec<&str> = rep.rows.iter().map(|r| r.track.as_str()).collect();
+        // sorted; no "step", no instant track, no zero-duration span
+        assert_eq!(tracks, vec!["dev:0", "dev:1", "link:3"]);
+        assert_eq!(rep.rows[0].busy_s, 6.0);
+        assert_eq!(rep.rows[0].spans, 2);
+        assert_eq!(rep.rows[0].busy_frac, 0.6);
+        // skew: dev busy {6, 2}, mean 4, max 6
+        assert!((rep.straggler_skew - 1.5).abs() < 1e-15);
+        assert_eq!(rep.hottest, vec!["dev:0", "link:3"]);
+        assert_eq!(rep.total_s, 10.0);
+    }
+
+    #[test]
+    fn empty_run_yields_empty_report_without_nan() {
+        let rep = utilization(&[], 0.0, 3);
+        assert!(rep.rows.is_empty());
+        assert_eq!(rep.straggler_skew, 1.0);
+        assert!(rep.hottest.is_empty());
+        // zero clock: fractions are 0, never NaN
+        let one = utilization(&spans(), 0.0, 1);
+        assert!(one.rows.iter().all(|r| r.busy_frac == 0.0));
+    }
+
+    #[test]
+    fn csv_and_json_carry_the_rows() {
+        let rep = utilization(&spans(), 10.0, 2);
+        let csv = utilization_csv(&rep);
+        let mut lines = csv.lines();
+        assert_eq!(lines.next(), Some("resource,busy_s,busy_frac,spans"));
+        assert_eq!(lines.next(), Some("dev:0,6,0.6,2"));
+        let j = rep.to_json();
+        let r0 = j.req("resources").unwrap().req("dev:0").unwrap();
+        assert_eq!(r0.req("busy_s").unwrap().as_f64(), Some(6.0));
+        assert_eq!(j.req("straggler_skew").unwrap().as_f64(), Some(1.5));
+        assert_eq!(j.req("hottest").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn ties_in_heat_resolve_by_track_name() {
+        let mut t = Tracer::new(TraceLevel::Chunk);
+        t.span("link:9", "round", "a2a", 0.0, 1.0, &[]);
+        t.span("link:1", "round", "a2a", 0.0, 1.0, &[]);
+        let rep = utilization(t.events(), 1.0, 2);
+        assert_eq!(rep.hottest, vec!["link:1", "link:9"]);
+    }
+}

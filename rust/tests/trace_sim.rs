@@ -1,0 +1,375 @@
+//! Acceptance tests for the deterministic tracing & profiling layer:
+//! byte-identical pricing with and without a tracer attached, byte
+//! -identical Chrome exports across reruns of the same seed, the serial
+//! phase-span skeleton on the Table-1 tree, per-track span/busy
+//! reconciliation on overlapped steps (the validator's invariant,
+//! asserted in-repo too), and the serve-side trace seam.
+
+use ta_moe::coordinator::{DispatchPolicy, PolicyInputs, Session, SessionBuilder};
+use ta_moe::dispatch::even_caps;
+use ta_moe::overlap::OverlapMode;
+use ta_moe::runtime::{GateInputs, ModelCfg, SimBackend};
+use ta_moe::serve::{CachePolicy, ServeBuilder, ServeSession, TraceConfig, TraceKind};
+use ta_moe::topology::{presets, Link, Topology, TreeSpec};
+use ta_moe::trace::{chrome_trace, utilization, utilization_csv, TraceEvent, TraceLevel, TracePh};
+
+/// The tiny4 [2,2]-tree scenario from ISSUE-9's acceptance bar.
+fn table1_session(trace: Option<TraceLevel>, overlap: &str, seed: i32) -> Session {
+    let cfg = ModelCfg::preset("tiny4").expect("builtin preset");
+    let mut b = SessionBuilder::new()
+        .backend(Box::new(SimBackend::new(cfg)))
+        .topology(presets::table1())
+        .a2a_named("sched:rot")
+        .overlap_named(overlap)
+        .seed(seed);
+    if let Some(level) = trace {
+        b = b.trace_level(level);
+    }
+    b.build().unwrap()
+}
+
+/// A 2×2 tree with a bottlenecked uplink so `--overlap auto` really
+/// chunks (same shape as the overlap acceptance tests).
+fn bottleneck22() -> Topology {
+    Topology::tree(
+        &TreeSpec::parse("[2,2]").unwrap(),
+        &[Link::from_gbps_us(45.0, 1.0), Link::from_gbps_us(0.01, 1.0)],
+        presets::local_copy(),
+    )
+}
+
+/// Spans (track, start, end) grouped per track, in emission order.
+fn spans_by_track(events: &[TraceEvent]) -> Vec<(String, Vec<(f64, f64)>)> {
+    let mut out: Vec<(String, Vec<(f64, f64)>)> = Vec::new();
+    for e in events {
+        if e.ph != TracePh::Span {
+            continue;
+        }
+        let span = (e.start_s, e.start_s + e.dur_s);
+        match out.iter_mut().find(|(t, _)| *t == e.track) {
+            Some((_, v)) => v.push(span),
+            None => out.push((e.track.clone(), vec![span])),
+        }
+    }
+    out
+}
+
+#[test]
+fn tracing_never_perturbs_the_priced_run() {
+    // the zero-cost contract: a session with a tracer attached prices
+    // byte-identically to one that never heard of the trace module —
+    // same losses, same clock, same summary JSON, same CSV bytes
+    let run = |trace: Option<TraceLevel>| {
+        let mut s = table1_session(trace, "auto", 7);
+        s.run(25).unwrap();
+        s
+    };
+    let off = run(None);
+    let on = run(Some(TraceLevel::Chunk));
+    assert!(off.tracer().is_none(), "no --trace, no tracer");
+    assert!(on.tracer().is_some());
+
+    for (a, b) in off.log().records.iter().zip(&on.log().records) {
+        assert_eq!(a.loss, b.loss, "step {}", a.step);
+        assert_eq!(a.sim_total_s(), b.sim_total_s(), "step {}", a.step);
+        assert_eq!(a.chunks, b.chunks, "step {}", a.step);
+    }
+    assert_eq!(
+        off.log().summary_json().to_string_compact(),
+        on.log().summary_json().to_string_compact()
+    );
+    let csv = |s: &Session, tag: &str| {
+        let path = std::env::temp_dir().join(format!("ta_moe_trace_identity_{tag}.csv"));
+        s.log().write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        text
+    };
+    assert_eq!(csv(&off, "off"), csv(&on, "on"));
+}
+
+#[test]
+fn identical_seeds_export_byte_identical_chrome_traces() {
+    let export = |seed: i32| {
+        let mut s = table1_session(Some(TraceLevel::Chunk), "auto", seed);
+        s.run(12).unwrap();
+        chrome_trace(s.tracer().unwrap()).to_string_compact()
+    };
+    let a = export(3);
+    assert_eq!(a, export(3), "same config+seed must re-export byte-identically");
+    assert_ne!(a, export(4), "the trace must reflect the run, not a constant");
+}
+
+#[test]
+fn serial_phase_spans_tile_each_step_exactly() {
+    // the golden skeleton: on a serial clock the phase spans (compute,
+    // a2a:local/intra/inter, allreduce) laid back to back ARE the step's
+    // attribution — per step they sum to the step span's duration, and
+    // the last one ends where the next step begins
+    let mut s = table1_session(Some(TraceLevel::Phase), "serial", 11);
+    s.run(8).unwrap();
+    let tr = s.tracer().unwrap();
+    let events = tr.events();
+
+    let steps: Vec<&TraceEvent> =
+        events.iter().filter(|e| e.track == "step" && e.ph == TracePh::Span).collect();
+    assert_eq!(steps.len(), 8);
+    for (k, e) in steps.iter().enumerate() {
+        assert_eq!(e.name, format!("step {k}"));
+        assert_eq!(e.cat, "step");
+        let rec = &s.log().records[k];
+        assert_eq!(e.args, vec![("loss".to_string(), rec.loss)]);
+        assert!((e.dur_s - rec.sim_total_s()).abs() <= 1e-12 * rec.sim_total_s());
+        // phase spans inside [start, start+dur] tile it exactly
+        let inside: Vec<&TraceEvent> = events
+            .iter()
+            .filter(|p| {
+                p.track == "serial"
+                    && p.start_s >= e.start_s - 1e-12
+                    && p.start_s + p.dur_s <= e.start_s + e.dur_s + 1e-12
+            })
+            .collect();
+        assert_eq!(inside.len(), 5, "compute + 3 a2a phases + allreduce");
+        assert_eq!(inside[0].name, "compute");
+        assert_eq!(inside[4].name, "allreduce");
+        let tiled: f64 = inside.iter().map(|p| p.dur_s).sum();
+        assert!((tiled - e.dur_s).abs() <= 1e-9, "step {k}: {tiled} vs {}", e.dur_s);
+        let mut cur = e.start_s;
+        for p in &inside {
+            assert!((p.start_s - cur).abs() <= 1e-9, "phase {} must abut", p.name);
+            cur += p.dur_s;
+        }
+    }
+    // the tracer's clock ends on the simulated time axis
+    let end = s.log().sim_time_axis().last().copied().unwrap();
+    assert!((tr.clock_s() - end).abs() <= 1e-9 * end.max(1.0));
+
+    // every scheduled step either hit or missed the plan cache, and the
+    // Phase level records the instants for it
+    let reg = tr.registry();
+    assert_eq!(reg.counter("plan_hits_total") + reg.counter("plan_misses_total"), 8);
+    assert!(events.iter().any(|e| e.name == "plan:miss" && e.ph == TracePh::Mark));
+
+    // Phase level stops short of link rounds; Chunk adds them
+    assert!(events.iter().all(|e| !e.track.starts_with("link:")));
+    let mut c = table1_session(Some(TraceLevel::Chunk), "serial", 11);
+    c.run(2).unwrap();
+    let link_spans = c
+        .tracer()
+        .unwrap()
+        .events()
+        .iter()
+        .filter(|e| e.track.starts_with("link:") && e.cat == "a2a")
+        .count();
+    assert!(link_spans > 0, "sched:rot serial steps must attribute per-link rounds");
+}
+
+#[test]
+fn span_sums_reconcile_with_timeline_busy_and_never_overlap() {
+    // overlapped steps: the retained pipeline spans per dev:/chan: track
+    // must sum to the independently accumulated `Timeline::busy()` totals
+    // (within 1e-9 — the trace_validator.py invariant), and no track may
+    // ever have two spans occupying the same simulated instant
+    let cfg = ModelCfg::preset("tiny4").unwrap();
+    let mut s = SessionBuilder::new()
+        .backend(Box::new(SimBackend::new(cfg)))
+        .topology(bottleneck22())
+        .policy_named("fastmoe")
+        .overlap_named("auto")
+        .seed(33)
+        .trace_level(TraceLevel::Chunk)
+        .build()
+        .unwrap();
+    s.run(20).unwrap();
+    assert!(s.log().records.iter().any(|r| r.chunks > 1), "auto must chunk here");
+
+    let tr = s.tracer().unwrap();
+    let per_track = spans_by_track(tr.events());
+    assert!(!tr.timeline_busy().is_empty());
+    for (track, busy) in tr.timeline_busy() {
+        let spans = per_track.iter().find(|(t, _)| t == track);
+        let sum: f64 = match spans {
+            Some((_, v)) => v.iter().map(|(a, b)| b - a).sum(),
+            None => 0.0,
+        };
+        assert!(
+            (sum - busy).abs() <= 1e-9,
+            "{track}: span sum {sum} vs timeline busy {busy}"
+        );
+    }
+    // devices both compute, so the report sees them; utilization folds
+    // the same spans the reconciliation just checked
+    let rep = utilization(tr.events(), tr.clock_s(), 4);
+    assert!(rep.rows.iter().any(|r| r.track.starts_with("dev:")));
+    assert!(rep.rows.iter().all(|r| r.busy_frac >= 0.0 && r.busy_frac <= 1.0 + 1e-12));
+    assert!(rep.straggler_skew >= 1.0);
+    assert_eq!(rep.hottest.len(), 4.min(rep.rows.len()));
+    let csv = utilization_csv(&rep);
+    assert_eq!(csv.lines().count(), rep.rows.len() + 1);
+
+    for (track, mut spans) in per_track {
+        spans.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)));
+        for w in spans.windows(2) {
+            assert!(
+                w[1].0 >= w[0].1 - 1e-9,
+                "{track}: span [{}, {}] overlaps [{}, {}]",
+                w[1].0,
+                w[1].1,
+                w[0].0,
+                w[0].1
+            );
+        }
+    }
+}
+
+#[test]
+fn serve_traces_cache_and_steps_on_the_arrival_clock() {
+    let build = |trace: bool| {
+        let mut b = ServeBuilder::new()
+            .preset("tiny4")
+            .experts_per_dev(4)
+            .cluster("table1")
+            .policy_named("ta-moe")
+            .trace(TraceConfig {
+                kind: TraceKind::Bursty,
+                rate_rps: 50.0,
+                n_requests: 32,
+                seed: 9,
+                prompt_mean: 32,
+                output_mean: 16,
+            })
+            .cache_cap(2)
+            .cache_policy(CachePolicy::Lru)
+            .slo_s(0.2)
+            .overlap(OverlapMode::Serial);
+        if trace {
+            b = b.trace_level(TraceLevel::Chunk);
+        }
+        let mut s: ServeSession = b.build().unwrap();
+        s.run(100_000).unwrap();
+        s
+    };
+    let s = build(true);
+    let tr = s.tracer().unwrap();
+
+    // the registry's cache tallies are the log's, counted independently
+    let reg = tr.registry();
+    assert!(reg.counter("cache_misses_total") > 0);
+    assert_eq!(reg.counter("cache_hits_total"), s.log().cache_hits);
+    assert_eq!(reg.counter("cache_misses_total"), s.log().cache_misses);
+    // misses cost time on a dedicated fetch track
+    let fetch: f64 = tr
+        .events()
+        .iter()
+        .filter(|e| e.track == "fetch" && e.ph == TracePh::Span)
+        .map(|e| e.dur_s)
+        .sum();
+    let logged: f64 = s.log().records.iter().map(|r| r.sim_fetch_s).sum();
+    assert!(fetch > 0.0);
+    assert!((fetch - logged).abs() <= 1e-9);
+
+    // one step span per priced step, riding the arrival clock: spans on
+    // the step track are ordered and gap only while the queue was idle
+    let steps: Vec<(f64, f64)> = spans_by_track(tr.events())
+        .into_iter()
+        .find(|(t, _)| t == "step")
+        .map(|(_, v)| v)
+        .unwrap();
+    assert_eq!(steps.len(), s.log().records.len());
+    for w in steps.windows(2) {
+        assert!(w[1].0 >= w[0].1 - 1e-9, "serve step spans must not overlap");
+    }
+    assert!(tr.clock_s() <= s.now_s() + 1e-9);
+
+    // the export round-trips through the JSON parser
+    let j = chrome_trace(tr);
+    let text = j.to_string_compact();
+    let back = ta_moe::util::json::Json::parse(&text).unwrap();
+    assert_eq!(back, j);
+
+    // tracing must not perturb serving either
+    let off = build(false);
+    assert!(off.tracer().is_none());
+    assert_eq!(
+        off.log().summary_json().to_string_compact(),
+        s.log().summary_json().to_string_compact()
+    );
+}
+
+/// The session_sim skew scenario, restated: node-0 devices crowd the
+/// experts canonically hosted on node 1 hard enough that the placement
+/// engine is guaranteed to migrate on the [2,2] tree.
+#[derive(Debug)]
+struct CrossNodeSkew;
+
+impl DispatchPolicy for CrossNodeSkew {
+    fn name(&self) -> String {
+        "cross-node-skew".into()
+    }
+
+    fn runtime_inputs(&self, topo: &Topology, cfg: &ModelCfg) -> PolicyInputs {
+        let penalty = ta_moe::util::Mat::from_fn(cfg.p, cfg.n_experts, |i, e| {
+            if topo.node_of(i) == 0 && topo.node_of(e / cfg.e_per_dev) == 0 {
+                9.0
+            } else {
+                1.0
+            }
+        });
+        PolicyInputs {
+            gate: GateInputs {
+                penalty,
+                caps: even_caps(cfg.p, cfg.n_experts, cfg.capacity),
+                local_mask: topo.local_mask(cfg.n_experts, cfg.e_per_dev),
+                hir_remote_frac: 1.0,
+            },
+            target: None,
+        }
+    }
+
+    fn converged_counts(&self, topo: &Topology, cfg: &ModelCfg) -> ta_moe::util::Mat {
+        let inputs = self.runtime_inputs(topo, cfg);
+        let sent = (cfg.k * cfg.tokens_per_dev) as f64;
+        ta_moe::util::Mat::from_fn(cfg.p, cfg.n_experts, |i, e| {
+            let w = 1.0 / inputs.gate.penalty.get(i, e);
+            let row: f64 =
+                (0..cfg.n_experts).map(|x| 1.0 / inputs.gate.penalty.get(i, x)).sum();
+            sent * w / row
+        })
+    }
+}
+
+#[test]
+fn migrations_land_on_their_own_track_with_registry_totals() {
+    let cfg = ModelCfg::preset("tiny4").unwrap();
+    let mut s = SessionBuilder::new()
+        .backend(Box::new(SimBackend::new(cfg)))
+        .topology(presets::table1())
+        .policy(Box::new(CrossNodeSkew))
+        .seed(21)
+        .placement_every(8)
+        .trace_level(TraceLevel::Step)
+        .build()
+        .unwrap();
+    s.run(80).unwrap();
+    let tr = s.tracer().unwrap();
+
+    let migrations = &s.log().migrations;
+    assert!(!migrations.is_empty(), "the placement engine must act on cross-node skew");
+    let spans: Vec<&TraceEvent> = tr
+        .events()
+        .iter()
+        .filter(|e| e.track == "migrate" && e.ph == TracePh::Span)
+        .collect();
+    assert_eq!(spans.len(), migrations.len());
+    for (sp, m) in spans.iter().zip(migrations) {
+        assert_eq!(sp.cat, "placement");
+        assert_eq!(sp.dur_s, m.cost_s);
+        assert_eq!(sp.args, vec![("bytes".to_string(), m.bytes)]);
+    }
+    let reg = tr.registry();
+    assert_eq!(reg.counter("migrations_total"), migrations.len() as u64);
+    let bytes: f64 = migrations.iter().map(|m| m.bytes).sum();
+    assert!((reg.gauge("migration_bytes") - bytes).abs() <= 1e-9 * bytes.max(1.0));
+    // Step level keeps the lifecycle without the per-phase detail
+    assert!(tr.events().iter().all(|e| e.track != "serial" && !e.track.starts_with("dev:")));
+}
