@@ -1,0 +1,163 @@
+#!/usr/bin/env python3
+"""Fold bench output into the perf-trajectory baseline (BENCH_10.json).
+
+Every bench is a ``harness = false`` main that appends one line to
+``target/bench-results.jsonl`` (``util::bench::record_jsonl``)::
+
+    {"bench": "<name>", "data": {<row>: <number> | {<field>: <number>}}}
+
+This script folds those lines into a schema-stable report so CI can
+archive one artifact per run and a future session can diff two of them
+line by line:
+
+* one entry per bench, keyed by bench name, sorted;
+* each entry carries its headline rows with keys sorted and scalar rows
+  normalised to ``{"value": x}`` so every row is an object;
+* re-runs of the same bench in one jsonl (appends accumulate) keep the
+  *last* record — the file is an append log, the report is a snapshot;
+* top-level counts (``bench_count``, ``row_count``) give a one-glance
+  coverage headline, and ``schema`` pins the layout for future diffs.
+
+Usage::
+
+    python3 python/bench_report.py                # target/bench-results.jsonl -> BENCH_10.json
+    python3 python/bench_report.py --input X --output Y
+    python3 python/bench_report.py --selftest
+
+The script never runs benches; an empty or missing input yields a valid
+empty report (CI uploads it either way, so the artifact always exists).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Tuple
+
+SCHEMA = "ta-moe-bench-report/v1"
+
+DEFAULT_INPUT = "target/bench-results.jsonl"
+DEFAULT_OUTPUT = "BENCH_10.json"
+
+
+def parse_lines(lines: List[str]) -> List[Tuple[str, Dict[str, object]]]:
+    """Parse jsonl lines into (bench, data) pairs, skipping blanks.
+
+    A malformed line is an error, not a skip: the jsonl is machine
+    -written, so damage means a broken bench and should fail CI loudly.
+    """
+    out: List[Tuple[str, Dict[str, object]]] = []
+    for i, line in enumerate(lines, 1):
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            rec = json.loads(line)
+        except json.JSONDecodeError as e:
+            raise ValueError(f"line {i}: not JSON ({e})") from e
+        if not isinstance(rec, dict) or "bench" not in rec or "data" not in rec:
+            raise ValueError(f"line {i}: expected {{'bench': ..., 'data': ...}}")
+        if not isinstance(rec["data"], dict):
+            raise ValueError(f"line {i}: data must be an object")
+        out.append((str(rec["bench"]), rec["data"]))
+    return out
+
+
+def normalise_row(value: object) -> Dict[str, object]:
+    """Every row becomes an object: scalars wrap as {'value': x}."""
+    if isinstance(value, dict):
+        return {str(k): value[k] for k in sorted(value)}
+    return {"value": value}
+
+
+def fold(records: List[Tuple[str, Dict[str, object]]]) -> Dict[str, object]:
+    """Fold parsed records into the schema-stable report dict."""
+    latest: Dict[str, Dict[str, object]] = {}
+    for bench, data in records:
+        latest[bench] = data  # append log: last record wins
+    benches: Dict[str, object] = {}
+    row_count = 0
+    for bench in sorted(latest):
+        rows = {str(k): normalise_row(latest[bench][k]) for k in sorted(latest[bench])}
+        row_count += len(rows)
+        benches[bench] = {"rows": rows}
+    return {
+        "schema": SCHEMA,
+        "bench_count": len(benches),
+        "row_count": row_count,
+        "benches": benches,
+    }
+
+
+def render(report: Dict[str, object]) -> str:
+    """Canonical bytes: sorted keys, 2-space indent, trailing newline —
+    so identical results produce identical artifacts."""
+    return json.dumps(report, indent=2, sort_keys=True) + "\n"
+
+
+# ----------------------------------------------------------- self-check
+
+
+def selftest() -> int:
+    lines = [
+        '{"bench":"solver_hotpath","data":{"step_cost direct":{"mean_s":1e-4,"p50_s":9e-5}}}',
+        '{"bench":"chaos_sweep","data":{"fastmoe/link":{"adaptive_s":1.5,"static_s":2.0}}}',
+        "",
+        '{"bench":"solver_hotpath","data":{"step_cost direct":{"mean_s":2e-4,"p50_s":1.8e-4}}}',
+        '{"bench":"overlap_sweep","data":{"speedup":1.42}}',
+    ]
+    rep = fold(parse_lines(lines))
+    assert rep["schema"] == SCHEMA
+    assert rep["bench_count"] == 3
+    assert rep["row_count"] == 3
+    benches = rep["benches"]
+    assert list(benches) == ["chaos_sweep", "overlap_sweep", "solver_hotpath"]
+    # last record of a re-run bench wins
+    hot = benches["solver_hotpath"]["rows"]["step_cost direct"]
+    assert hot["mean_s"] == 2e-4, hot
+    # scalar rows normalise to {'value': x}
+    assert benches["overlap_sweep"]["rows"]["speedup"] == {"value": 1.42}
+    # rendering is canonical: render(fold(x)) is a fixpoint under re-parse
+    assert render(json.loads(render(rep))) == render(rep)
+    # empty input is a valid empty report
+    empty = fold(parse_lines([]))
+    assert empty["bench_count"] == 0 and empty["benches"] == {}
+    # malformed lines fail loudly
+    for bad in ["not json", '{"bench":"x"}', '{"bench":"x","data":3}']:
+        try:
+            parse_lines([bad])
+        except ValueError:
+            pass
+        else:
+            raise AssertionError(f"{bad!r} must be rejected")
+    print("bench_report: all self-checks passed")
+    return 0
+
+
+def main(argv: List[str]) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--input", default=DEFAULT_INPUT, help="bench-results jsonl path")
+    ap.add_argument("--output", default=DEFAULT_OUTPUT, help="report json path")
+    ap.add_argument("--selftest", action="store_true", help="run self-checks and exit")
+    args = ap.parse_args(argv)
+    if args.selftest:
+        return selftest()
+    try:
+        with open(args.input, encoding="utf-8") as f:
+            lines = f.readlines()
+    except FileNotFoundError:
+        lines = []
+        print(f"bench_report: {args.input} missing, writing empty report", file=sys.stderr)
+    report = fold(parse_lines(lines))
+    with open(args.output, "w", encoding="utf-8") as f:
+        f.write(render(report))
+    print(
+        f"bench_report: {report['bench_count']} benches, "
+        f"{report['row_count']} rows -> {args.output}"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

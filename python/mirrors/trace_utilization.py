@@ -9,7 +9,9 @@ totals and the report headlines, with the exact rust semantics:
 * rows come out sorted by track name (BTreeMap order);
 * ``busy_frac`` is ``busy_s / total_s`` with a zero-clock guard;
 * ``straggler_skew`` is max/mean busy over ``dev:`` tracks, ``1.0`` for
-  a device-free run or an all-idle mean;
+  a device-free run or an all-idle mean; devices listed in
+  ``dead_devs`` (killed by the fault stream) keep their rows but are
+  excluded from the skew so corpses don't read as stragglers;
 * ``hottest`` is the top-k tracks by busy time, busiest first, ties
   resolved by ascending track name.
 
@@ -26,7 +28,19 @@ from typing import Dict, List, Sequence, Tuple
 Event = Tuple[str, str, float]  # (track, ph, dur_s)
 
 
-def utilization(events: Sequence[Event], total_s: float, top_k: int) -> Dict[str, object]:
+def _track_is_dead(track: str, dead_devs: Sequence[int]) -> bool:
+    """Whether a ``dev:<i>`` track belongs to a whole-window-dead device."""
+    if not track.startswith("dev:"):
+        return False
+    try:
+        return int(track[len("dev:") :]) in dead_devs
+    except ValueError:
+        return False
+
+
+def utilization(
+    events: Sequence[Event], total_s: float, top_k: int, dead_devs: Sequence[int] = ()
+) -> Dict[str, object]:
     """Fold spans into the report dict (rows, straggler_skew, hottest,
     total_s) — decision-for-decision the rust ``utilization``."""
     busy: Dict[str, List[float]] = {}
@@ -46,7 +60,11 @@ def utilization(events: Sequence[Event], total_s: float, top_k: int) -> Dict[str
         for track, (busy_s, spans) in sorted(busy.items())
     ]
 
-    dev_busy = [r["busy_s"] for r in rows if str(r["track"]).startswith("dev:")]
+    dev_busy = [
+        r["busy_s"]
+        for r in rows
+        if str(r["track"]).startswith("dev:") and not _track_is_dead(str(r["track"]), dead_devs)
+    ]
     if not dev_busy:
         straggler_skew = 1.0
     else:
@@ -112,6 +130,20 @@ def main() -> int:
     # -- top_k truncates, never pads -----------------------------------
     rep = utilization(_spans(), 10.0, 99)
     assert rep["hottest"] == ["dev:0", "link:3", "dev:1"], rep["hottest"]
+
+    # -- dead devices keep their rows but leave the skew ---------------
+    corpse: List[Event] = [
+        ("dev:0", "X", 6.0),
+        ("dev:1", "X", 2.0),
+        ("dev:2", "X", 1.0),
+    ]
+    naive = utilization(corpse, 10.0, 4)
+    fixed = utilization(corpse, 10.0, 4, dead_devs=[2])
+    assert abs(naive["straggler_skew"] - 2.0) < 1e-15  # 6 / ((6+2+1)/3)
+    assert abs(fixed["straggler_skew"] - 1.5) < 1e-15  # 6 / ((6+2)/2)
+    assert any(r["track"] == "dev:2" for r in fixed["rows"])
+    all_dead = utilization(corpse, 10.0, 4, dead_devs=[0, 1, 2])
+    assert all_dead["straggler_skew"] == 1.0
 
     print("mirrors.trace_utilization: all self-checks passed")
     return 0

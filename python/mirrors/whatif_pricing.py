@@ -1,0 +1,109 @@
+#!/usr/bin/env python3
+"""Mirror of the what-if decision math (rust/src/analyze/mod.rs).
+
+Ports the two pure folds the bottleneck report is built from:
+
+* ``blame_fractions`` — normalise raw ``(track, blame_s)`` critical-path
+  rows against the step clock (``blame_s / step_s``, 0 on a zero clock)
+  and sort most-blamed first with ties broken by track name, so the
+  report is total. The fractions of a full blame partition sum to 1.
+* ``rank_counterfactuals`` — turn ``(spec, baseline_s, projected_s)``
+  re-pricing triples into ranked rows: ``speedup = baseline / projected``
+  (0 when the projection collapses to zero — "free" ranks worthless, not
+  infinite), sorted by speedup descending, ties by spec.
+
+The perturbation and re-pricing themselves live in the rust cost model
+(``step_cost_blamed`` and the ``WhatIf`` projection seams); this mirror
+pins the *decision* layer that orders the report. Rows come in and out as
+plain dicts so the self-check reads like the rust unit tests. Run
+``python3 -m mirrors.whatif_pricing`` for the self-check.
+"""
+
+from __future__ import annotations
+
+import sys
+from typing import Dict, List, Sequence, Tuple
+
+BlameRow = Dict[str, object]  # track, blame_s, blame_frac
+CounterfactualRow = Dict[str, object]  # spec, baseline_s, projected_s, speedup
+
+
+def blame_fractions(rows: Sequence[Tuple[str, float]], step_s: float) -> List[BlameRow]:
+    """Normalise and sort blame rows — decision-for-decision the rust
+    ``blame_fractions`` (busy_frac is folded in later, outside this fn)."""
+    out: List[BlameRow] = [
+        {
+            "track": track,
+            "blame_s": blame_s,
+            "blame_frac": blame_s / step_s if step_s > 0.0 else 0.0,
+        }
+        for track, blame_s in rows
+    ]
+    out.sort(key=lambda r: (-float(r["blame_s"]), r["track"]))
+    return out
+
+
+def rank_counterfactuals(
+    rows: Sequence[Tuple[str, float, float]]
+) -> List[CounterfactualRow]:
+    """Rank re-pricing triples by projected speedup — decision-for
+    -decision the rust ``rank_counterfactuals``."""
+    out: List[CounterfactualRow] = [
+        {
+            "spec": spec,
+            "baseline_s": baseline_s,
+            "projected_s": projected_s,
+            "speedup": baseline_s / projected_s if projected_s > 0.0 else 0.0,
+        }
+        for spec, baseline_s, projected_s in rows
+    ]
+    out.sort(key=lambda r: (-float(r["speedup"]), r["spec"]))
+    return out
+
+
+# ----------------------------------------------------------- self-check
+
+
+def main() -> int:
+    # -- blame normalises against the clock and sorts, ties by track ---
+    blame = blame_fractions(
+        [("dev:0", 1.0), ("link:3", 6.0), ("chan:allreduce", 1.0)], 8.0
+    )
+    assert [r["track"] for r in blame] == ["link:3", "chan:allreduce", "dev:0"]
+    assert blame[0]["blame_frac"] == 0.75
+    assert abs(sum(float(r["blame_frac"]) for r in blame) - 1.0) < 1e-12
+
+    # -- zero clock: fractions 0, never a division error ---------------
+    assert all(
+        r["blame_frac"] == 0.0 for r in blame_fractions([("dev:0", 1.0)], 0.0)
+    )
+
+    # -- ranking: best speedup first, ties alphabetical, zero-projection
+    #    rows rank last at 0 rather than infinity -----------------------
+    ranked = rank_counterfactuals(
+        [
+            ("alpha0", 10.0, 5.0),
+            ("link:1x2", 10.0, 4.0),
+            ("dev:0x2", 10.0, 5.0),
+            ("perfect-fabric", 10.0, 0.0),
+        ]
+    )
+    assert [r["spec"] for r in ranked] == [
+        "link:1x2",
+        "alpha0",
+        "dev:0x2",
+        "perfect-fabric",
+    ]
+    assert ranked[0]["speedup"] == 2.5
+    assert ranked[3]["speedup"] == 0.0
+
+    # -- empty sweeps stay empty ---------------------------------------
+    assert blame_fractions([], 1.0) == []
+    assert rank_counterfactuals([]) == []
+
+    print("mirrors.whatif_pricing: all self-checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -20,6 +20,7 @@ PRICED_DIRS = {
     "dispatch",
     "perturb",
     "trace",
+    "analyze",
 }
 
 # Unordered std collections: iteration order varies per *instance*
@@ -79,6 +80,7 @@ REQUIRED_SUBSYSTEMS = {
     "serve-batcher",
     "perturb-recovery",
     "trace-utilization",
+    "whatif-pricing",
 }
 
 # MetricsRegistry key grammar (trace/registry.rs): counter keys end in

@@ -1,0 +1,589 @@
+//! Bottleneck attribution & what-if engine (DESIGN.md §analyze).
+//!
+//! PR 9's trace layer records *where time went*; this module interprets
+//! it. Two instruments, surfaced together behind `--analyze`:
+//!
+//! * **Critical-path blame** — [`crate::coordinator::cost::step_cost_blamed`]
+//!   re-prices one representative step with attribution enabled and
+//!   returns per-resource seconds on the step's critical path. Unlike the
+//!   busy fractions of [`crate::trace::utilization`] (which can sum to
+//!   anything, because resources run in parallel), blame partitions the
+//!   step clock: the fractions sum to 1. A resource with high *busy* but
+//!   low *blame* is well overlapped; high blame is the thing to fix.
+//! * **Counterfactual re-pricing** — a [`WhatIf`] spec family that clones
+//!   the priced state, applies one perturbation through the existing
+//!   seams ([`Topology::scale_link`], the per-device compute-slowdown
+//!   vector, [`Topology::with_links_scaled`]), and re-prices the same
+//!   step. The projection is *exactly* the clock a real run under the
+//!   equivalent [`crate::perturb::ChaosSpec`] would charge (pinned by
+//!   `tests/prop_analyze.rs`), so "2× this uplink buys 1.8×" is a
+//!   statement about the simulator, not a heuristic.
+//!
+//! The decision math that ranks counterfactuals ([`rank_counterfactuals`])
+//! and normalises blame ([`blame_fractions`]) is mirrored bit-exactly in
+//! `python/mirrors/whatif_pricing.py` (pallas-lint mirror registry,
+//! subsystem `whatif-pricing`).
+//!
+//! Everything here is read-only over the [`WorkloadCore`]: projections
+//! price against a *clone* of the topology with the plan cache detached
+//! (both the baseline and every counterfactual are priced cache-cold, so
+//! the comparison is internally consistent), and a run without
+//! `--analyze` never reaches this module.
+
+use crate::coordinator::cost::{step_cost_perturbed, step_cost_profiled, StepCost};
+use crate::coordinator::{step_cost_blamed, WorkloadCore};
+use crate::metrics::RunLog;
+use crate::topology::Topology;
+use crate::util::bench::{fmt_time, Table};
+use crate::util::json::Json;
+use crate::util::Mat;
+use std::collections::BTreeMap;
+use std::fmt;
+use std::str::FromStr;
+
+/// One counterfactual perturbation of the priced state.
+///
+/// Spec grammar (round-trips through `FromStr`/`Display`):
+///
+/// | spelling          | meaning                                          |
+/// |-------------------|--------------------------------------------------|
+/// | `link:<edge>x<f>` | link `<edge>` made `<f>`× faster (α and β ÷ f)   |
+/// | `dev:<i>x<f>`     | device `<i>` made `<f>`× faster                  |
+/// | `alpha0`          | zero link latency, bandwidth unchanged           |
+/// | `perfect-fabric`  | zero-cost links (compute-bound limit)            |
+/// | `infinite-cache`  | every expert-weight fetch a hit (serving only)   |
+///
+/// Factors are *speedup* factors (`link:3x2` = twice as fast), the inverse
+/// of the chaos grammar's slowdown multiplier: `link:3x2` here projects
+/// the same clock a run under chaos `link:3x0.5@0` charges.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WhatIf {
+    /// `link:<edge>x<f>` — scale link `edge` to `f`× its speed.
+    LinkScale { edge: usize, factor: f64 },
+    /// `dev:<i>x<f>` — scale device `i`'s compute to `f`× its speed.
+    DevScale { dev: usize, factor: f64 },
+    /// `alpha0` — zero every link's latency term.
+    Alpha0,
+    /// `perfect-fabric` — zero every link's latency *and* byte cost.
+    PerfectFabric,
+    /// `infinite-cache` — expert-weight fetch time vanishes (serving).
+    InfiniteCache,
+}
+
+impl WhatIf {
+    /// Bounds-check the spec against a concrete fabric.
+    pub fn validate(&self, p: usize, n_links: usize) -> Result<(), String> {
+        match *self {
+            WhatIf::LinkScale { edge, factor } => {
+                if edge >= n_links {
+                    return Err(format!("whatif link edge {edge} out of range (fabric has {n_links} links)"));
+                }
+                positive_factor(factor)
+            }
+            WhatIf::DevScale { dev, factor } => {
+                if dev >= p {
+                    return Err(format!("whatif dev {dev} out of range (fabric has {p} devices)"));
+                }
+                positive_factor(factor)
+            }
+            WhatIf::Alpha0 | WhatIf::PerfectFabric | WhatIf::InfiniteCache => Ok(()),
+        }
+    }
+}
+
+fn positive_factor(factor: f64) -> Result<(), String> {
+    if factor > 0.0 && factor.is_finite() {
+        Ok(())
+    } else {
+        Err(format!("whatif factor {factor} must be a positive finite speedup"))
+    }
+}
+
+impl fmt::Display for WhatIf {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WhatIf::LinkScale { edge, factor } => write!(f, "link:{edge}x{factor}"),
+            WhatIf::DevScale { dev, factor } => write!(f, "dev:{dev}x{factor}"),
+            WhatIf::Alpha0 => write!(f, "alpha0"),
+            WhatIf::PerfectFabric => write!(f, "perfect-fabric"),
+            WhatIf::InfiniteCache => write!(f, "infinite-cache"),
+        }
+    }
+}
+
+impl FromStr for WhatIf {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<WhatIf, String> {
+        let s = s.trim();
+        match s {
+            "alpha0" => return Ok(WhatIf::Alpha0),
+            "perfect-fabric" => return Ok(WhatIf::PerfectFabric),
+            "infinite-cache" => return Ok(WhatIf::InfiniteCache),
+            _ => {}
+        }
+        let parse_scaled = |body: &str, what: &str| -> Result<(usize, f64), String> {
+            let (idx, factor) = body
+                .split_once('x')
+                .ok_or_else(|| format!("whatif {what} spec `{s}` missing `x<factor>`"))?;
+            let idx: usize = idx
+                .parse()
+                .map_err(|_| format!("whatif {what} spec `{s}`: bad index `{idx}`"))?;
+            let factor: f64 = factor
+                .parse()
+                .map_err(|_| format!("whatif {what} spec `{s}`: bad factor `{factor}`"))?;
+            Ok((idx, factor))
+        };
+        if let Some(body) = s.strip_prefix("link:") {
+            let (edge, factor) = parse_scaled(body, "link")?;
+            positive_factor(factor)?;
+            return Ok(WhatIf::LinkScale { edge, factor });
+        }
+        if let Some(body) = s.strip_prefix("dev:") {
+            let (dev, factor) = parse_scaled(body, "dev")?;
+            positive_factor(factor)?;
+            return Ok(WhatIf::DevScale { dev, factor });
+        }
+        Err(format!(
+            "unknown whatif spec `{s}` (expected link:<edge>x<f>, dev:<i>x<f>, \
+             alpha0, perfect-fabric, or infinite-cache)"
+        ))
+    }
+}
+
+/// Parse a `+`-joined what-if list (`link:1x2+alpha0`); empty input and
+/// blank segments are rejected so typos don't silently shrink the sweep.
+pub fn parse_whatifs(s: &str) -> Result<Vec<WhatIf>, String> {
+    let mut out = Vec::new();
+    for part in s.split('+') {
+        if part.trim().is_empty() {
+            return Err(format!("empty segment in whatif list `{s}`"));
+        }
+        out.push(part.parse::<WhatIf>()?);
+    }
+    Ok(out)
+}
+
+/// One resource row of the blame table.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BlameRow {
+    /// The track blamed (`dev:<i>`, `link:<slot>`, `chan:<class>`).
+    pub track: String,
+    /// Critical-path seconds attributed to the track.
+    pub blame_s: f64,
+    /// `blame_s / step_s`; the rows' fractions sum to 1.
+    pub blame_frac: f64,
+    /// The track's busy fraction over the whole traced run, when a tracer
+    /// was attached (`None` otherwise). Busy ≠ blame: a track can be busy
+    /// the whole step yet never gate it.
+    pub busy_frac: Option<f64>,
+}
+
+/// One counterfactual row of the what-if table.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CounterfactualRow {
+    /// Canonical spec spelling ([`WhatIf`] `Display`).
+    pub spec: String,
+    /// The step clock as priced today.
+    pub baseline_s: f64,
+    /// The step clock under the counterfactual.
+    pub projected_s: f64,
+    /// `baseline_s / projected_s` (0 when the projection collapses to 0).
+    pub speedup: f64,
+}
+
+/// The full analysis of one run: blame partition + ranked counterfactuals.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BottleneckReport {
+    /// The run kind the analysis rode on (`"train"` / `"serve"`).
+    pub mode: String,
+    /// The representative step clock the fractions are against.
+    pub step_s: f64,
+    /// Per-resource critical-path blame, most-blamed first.
+    pub blame: Vec<BlameRow>,
+    /// Counterfactual projections, best speedup first.
+    pub counterfactuals: Vec<CounterfactualRow>,
+}
+
+/// Normalise raw `(track, blame_s)` rows against the step clock and sort
+/// most-blamed first (ties by track name, so the report is total).
+/// Mirrored bit-exactly in `python/mirrors/whatif_pricing.py`.
+pub fn blame_fractions(rows: &[(String, f64)], step_s: f64) -> Vec<BlameRow> {
+    let mut out: Vec<BlameRow> = rows
+        .iter()
+        .map(|(track, blame_s)| BlameRow {
+            track: track.clone(),
+            blame_s: *blame_s,
+            blame_frac: if step_s > 0.0 { blame_s / step_s } else { 0.0 },
+            busy_frac: None,
+        })
+        .collect();
+    out.sort_by(|a, b| b.blame_s.total_cmp(&a.blame_s).then(a.track.cmp(&b.track)));
+    out
+}
+
+/// Turn `(spec, baseline_s, projected_s)` triples into ranked rows: the
+/// speedup is `baseline / projected` (0 when the projection collapses to
+/// zero — "free" is reported as rank-worthless rather than infinite), and
+/// rows sort by speedup descending with ties broken by spec so the
+/// ranking is total. Mirrored bit-exactly in
+/// `python/mirrors/whatif_pricing.py`.
+pub fn rank_counterfactuals(rows: &[(String, f64, f64)]) -> Vec<CounterfactualRow> {
+    let mut out: Vec<CounterfactualRow> = rows
+        .iter()
+        .map(|(spec, baseline_s, projected_s)| CounterfactualRow {
+            spec: spec.clone(),
+            baseline_s: *baseline_s,
+            projected_s: *projected_s,
+            speedup: if *projected_s > 0.0 { baseline_s / projected_s } else { 0.0 },
+        })
+        .collect();
+    out.sort_by(|a, b| b.speedup.total_cmp(&a.speedup).then(a.spec.cmp(&b.spec)));
+    out
+}
+
+/// The default what-if sweep when the user asks for `auto`: double the
+/// top-blamed link, double the top-blamed device, and the two structural
+/// limits (`alpha0`, `perfect-fabric`); serving runs add
+/// `infinite-cache`. Bounded at 5 re-pricings so the analysis pass stays
+/// inside the EXPERIMENTS.md ≤ 10% overhead budget.
+pub fn default_whatifs(core: &WorkloadCore, blame: &[BlameRow]) -> Vec<WhatIf> {
+    let topo = core.topology();
+    // top-blamed link slot → its undirected edge; no link on the critical
+    // path → the slowest (highest-β) edge, the natural suspect
+    let edge = blame
+        .iter()
+        .find_map(|r| r.track.strip_prefix("link:"))
+        .and_then(|slot| slot.parse::<usize>().ok())
+        .map(|slot| slot / 2)
+        .unwrap_or_else(|| slowest_edge(topo));
+    let dev = blame
+        .iter()
+        .find_map(|r| r.track.strip_prefix("dev:"))
+        .and_then(|d| d.parse::<usize>().ok())
+        .unwrap_or(0);
+    let mut out = vec![
+        WhatIf::LinkScale { edge, factor: 2.0 },
+        WhatIf::DevScale { dev, factor: 2.0 },
+        WhatIf::Alpha0,
+        WhatIf::PerfectFabric,
+    ];
+    if core.profile().is_forward_only() {
+        out.push(WhatIf::InfiniteCache);
+    }
+    out
+}
+
+/// The highest-β (slowest-bandwidth) edge; 0 on a linkless fabric.
+fn slowest_edge(topo: &Topology) -> usize {
+    let mut best = 0usize;
+    let mut best_beta = f64::NEG_INFINITY;
+    for (e, l) in topo.links().iter().enumerate() {
+        if l.beta > best_beta {
+            best_beta = l.beta;
+            best = e;
+        }
+    }
+    best
+}
+
+/// Price one step of `core`'s workload on a (possibly perturbed) fabric,
+/// cache-cold: the same path as [`step_cost_blamed`]'s baseline, so
+/// baseline and projection differ *only* by the counterfactual.
+fn price(
+    core: &WorkloadCore,
+    topo: &Topology,
+    counts: &Mat,
+    slowdown: Option<&[f64]>,
+) -> StepCost {
+    match slowdown {
+        Some(s) => step_cost_perturbed(
+            core.shape(),
+            topo,
+            counts,
+            core.e_per_dev(),
+            core.flops_per_dev(),
+            core.a2a_algo(),
+            core.overlap_mode(),
+            core.profile(),
+            None,
+            core.placement(),
+            s,
+        ),
+        None => step_cost_profiled(
+            core.shape(),
+            topo,
+            counts,
+            core.e_per_dev(),
+            core.flops_per_dev(),
+            core.a2a_algo(),
+            core.overlap_mode(),
+            core.profile(),
+            None,
+            core.placement(),
+        ),
+    }
+}
+
+/// Project the step clock under one counterfactual.
+fn project(core: &WorkloadCore, counts: &Mat, baseline: &StepCost, log: &RunLog, w: &WhatIf) -> f64 {
+    match *w {
+        WhatIf::LinkScale { edge, factor } => {
+            // the chaos grammar's factor is a slowdown multiplier; a
+            // speedup of f is the equivalent chaos `link:<edge>x<1/f>`
+            let mut topo = core.topology().clone();
+            topo.scale_link(edge, 1.0 / factor);
+            price(core, &topo, counts, core.slowdown()).step_s()
+        }
+        WhatIf::DevScale { dev, factor } => {
+            let mut s = core
+                .slowdown()
+                .map(|s| s.to_vec())
+                .unwrap_or_else(|| vec![1.0; core.topology().p()]);
+            if let Some(slot) = s.get_mut(dev) {
+                *slot /= factor;
+            }
+            price(core, core.topology(), counts, Some(&s)).step_s()
+        }
+        WhatIf::Alpha0 => {
+            let topo = core.topology().with_links_scaled(0.0, 1.0);
+            price(core, &topo, counts, core.slowdown()).step_s()
+        }
+        WhatIf::PerfectFabric => {
+            let topo = core.topology().with_links_scaled(0.0, 0.0);
+            price(core, &topo, counts, core.slowdown()).step_s()
+        }
+        WhatIf::InfiniteCache => {
+            // fetch time is charged outside the priced step, so project
+            // from the run log: the fetch share of the simulated clock
+            let fetch: f64 = log.records.iter().map(|r| r.sim_fetch_s).sum();
+            let total: f64 = log.records.iter().map(|r| r.sim_total_s()).sum();
+            let frac = if total > 0.0 { fetch / total } else { 0.0 };
+            baseline.step_s() * (1.0 - frac)
+        }
+    }
+}
+
+/// Run the full analysis over one workload: blame the baseline step, then
+/// re-price it under every requested counterfactual. `counts` is the
+/// representative step's dispatch matrix (the last priced step of the
+/// run), `log` the accumulated run log (consulted only by
+/// `infinite-cache`), `whatifs` the sweep to price (`None` =
+/// [`default_whatifs`] derived from the blame table), `mode_label`
+/// `"train"` or `"serve"`.
+pub fn analyze_workload(
+    core: &WorkloadCore,
+    counts: &Mat,
+    log: &RunLog,
+    whatifs: Option<&[WhatIf]>,
+    mode_label: &str,
+) -> Result<BottleneckReport, String> {
+    let topo = core.topology();
+    let (baseline, raw_blame) = step_cost_blamed(
+        core.shape(),
+        topo,
+        counts,
+        core.e_per_dev(),
+        core.flops_per_dev(),
+        core.a2a_algo(),
+        core.overlap_mode(),
+        core.profile(),
+        None,
+        core.placement(),
+        core.slowdown(),
+    );
+    let mut blame = blame_fractions(&raw_blame, baseline.step_s());
+    // fold the traced busy fractions in beside blame when a tracer rode
+    // the run — busy vs blame side by side is the report's whole point
+    if let Some(tr) = core.tracer() {
+        let clock = tr.clock_s();
+        if clock > 0.0 {
+            let busy: &BTreeMap<String, f64> = tr.timeline_busy();
+            for row in &mut blame {
+                row.busy_frac = busy.get(&row.track).map(|b| b / clock);
+            }
+        }
+    }
+    let whatifs: Vec<WhatIf> = match whatifs {
+        Some(ws) => ws.to_vec(),
+        None => default_whatifs(core, &blame),
+    };
+    for w in &whatifs {
+        w.validate(topo.p(), topo.links().len())?;
+    }
+    let triples: Vec<(String, f64, f64)> = whatifs
+        .iter()
+        .map(|w| (w.to_string(), baseline.step_s(), project(core, counts, &baseline, log, w)))
+        .collect();
+    Ok(BottleneckReport {
+        mode: mode_label.to_string(),
+        step_s: baseline.step_s(),
+        blame,
+        counterfactuals: rank_counterfactuals(&triples),
+    })
+}
+
+impl BottleneckReport {
+    /// The report as the `<path>.bottleneck.json` document (and the
+    /// `analyze` subobject of summary JSON).
+    pub fn to_json(&self) -> Json {
+        let blame: Vec<Json> = self
+            .blame
+            .iter()
+            .map(|r| {
+                let mut row = BTreeMap::new();
+                row.insert("track".to_string(), Json::Str(r.track.clone()));
+                row.insert("blame_s".to_string(), Json::Num(r.blame_s));
+                row.insert("blame_frac".to_string(), Json::Num(r.blame_frac));
+                if let Some(b) = r.busy_frac {
+                    row.insert("busy_frac".to_string(), Json::Num(b));
+                }
+                Json::Obj(row)
+            })
+            .collect();
+        let cf: Vec<Json> = self
+            .counterfactuals
+            .iter()
+            .map(|r| {
+                let mut row = BTreeMap::new();
+                row.insert("spec".to_string(), Json::Str(r.spec.clone()));
+                row.insert("baseline_s".to_string(), Json::Num(r.baseline_s));
+                row.insert("projected_s".to_string(), Json::Num(r.projected_s));
+                row.insert("speedup".to_string(), Json::Num(r.speedup));
+                Json::Obj(row)
+            })
+            .collect();
+        let mut obj = BTreeMap::new();
+        obj.insert("mode".to_string(), Json::Str(self.mode.clone()));
+        obj.insert("step_s".to_string(), Json::Num(self.step_s));
+        obj.insert("blame".to_string(), Json::Arr(blame));
+        obj.insert("counterfactuals".to_string(), Json::Arr(cf));
+        Json::Obj(obj)
+    }
+
+    /// Print the ranked human-readable tables to stdout.
+    pub fn print_tables(&self) {
+        println!("bottleneck blame ({} step, {}):", self.mode, fmt_time(self.step_s));
+        let mut t = Table::new(&["resource", "blame", "blame_frac", "busy_frac"]);
+        for r in &self.blame {
+            t.row(&[
+                r.track.clone(),
+                fmt_time(r.blame_s),
+                format!("{:.4}", r.blame_frac),
+                match r.busy_frac {
+                    Some(b) => format!("{b:.4}"),
+                    None => "-".to_string(),
+                },
+            ]);
+        }
+        t.print();
+        println!("what-if projections:");
+        let mut t = Table::new(&["what-if", "baseline", "projected", "speedup"]);
+        for r in &self.counterfactuals {
+            t.row(&[
+                r.spec.clone(),
+                fmt_time(r.baseline_s),
+                fmt_time(r.projected_s),
+                format!("{:.3}x", r.speedup),
+            ]);
+        }
+        t.print();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn whatif_specs_round_trip() {
+        for s in ["link:3x2", "dev:1x4", "link:0x1.5", "alpha0", "perfect-fabric", "infinite-cache"]
+        {
+            let w: WhatIf = s.parse().unwrap();
+            assert_eq!(w.to_string(), s, "round trip of `{s}`");
+        }
+    }
+
+    #[test]
+    fn whatif_rejects_malformed_specs() {
+        for s in ["link:3", "dev:x2", "link:ax2", "dev:1x0", "link:1x-2", "turbo", "", "link:1xinf"]
+        {
+            assert!(s.parse::<WhatIf>().is_err(), "`{s}` should not parse");
+        }
+    }
+
+    #[test]
+    fn whatif_list_parses_and_rejects_blanks() {
+        let ws = parse_whatifs("link:1x2+alpha0+dev:0x2").unwrap();
+        assert_eq!(ws.len(), 3);
+        assert_eq!(ws[0], WhatIf::LinkScale { edge: 1, factor: 2.0 });
+        assert!(parse_whatifs("link:1x2++alpha0").is_err());
+        assert!(parse_whatifs("").is_err());
+    }
+
+    #[test]
+    fn whatif_validate_bounds_checks() {
+        assert!(WhatIf::LinkScale { edge: 2, factor: 2.0 }.validate(4, 3).is_ok());
+        assert!(WhatIf::LinkScale { edge: 3, factor: 2.0 }.validate(4, 3).is_err());
+        assert!(WhatIf::DevScale { dev: 4, factor: 2.0 }.validate(4, 3).is_err());
+        assert!(WhatIf::Alpha0.validate(0, 0).is_ok());
+    }
+
+    #[test]
+    fn rank_orders_by_speedup_then_spec() {
+        let rows = vec![
+            ("alpha0".to_string(), 10.0, 5.0),
+            ("link:1x2".to_string(), 10.0, 4.0),
+            ("dev:0x2".to_string(), 10.0, 5.0),
+            ("perfect-fabric".to_string(), 10.0, 0.0),
+        ];
+        let ranked = rank_counterfactuals(&rows);
+        let specs: Vec<&str> = ranked.iter().map(|r| r.spec.as_str()).collect();
+        // 2.5x first; the two 2.0x ties resolve alphabetically; the
+        // zero-projection row ranks last with speedup 0, not inf
+        assert_eq!(specs, vec!["link:1x2", "alpha0", "dev:0x2", "perfect-fabric"]);
+        assert_eq!(ranked[0].speedup, 2.5);
+        assert_eq!(ranked[3].speedup, 0.0);
+    }
+
+    #[test]
+    fn blame_fractions_normalise_and_sort() {
+        let rows = vec![
+            ("dev:0".to_string(), 1.0),
+            ("link:3".to_string(), 6.0),
+            ("chan:allreduce".to_string(), 1.0),
+        ];
+        let blame = blame_fractions(&rows, 8.0);
+        assert_eq!(blame[0].track, "link:3");
+        assert_eq!(blame[0].blame_frac, 0.75);
+        // ties by track name
+        assert_eq!(blame[1].track, "chan:allreduce");
+        assert_eq!(blame[2].track, "dev:0");
+        let sum: f64 = blame.iter().map(|r| r.blame_frac).sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+        // zero clock: fractions 0, never NaN
+        assert!(blame_fractions(&rows, 0.0).iter().all(|r| r.blame_frac == 0.0));
+    }
+
+    #[test]
+    fn report_json_carries_rows_and_skips_absent_busy() {
+        let rep = BottleneckReport {
+            mode: "train".to_string(),
+            step_s: 2.0,
+            blame: vec![BlameRow {
+                track: "dev:0".to_string(),
+                blame_s: 2.0,
+                blame_frac: 1.0,
+                busy_frac: None,
+            }],
+            counterfactuals: rank_counterfactuals(&[("alpha0".to_string(), 2.0, 1.0)]),
+        };
+        let j = rep.to_json();
+        assert_eq!(j.req("mode").unwrap().as_str(), Some("train"));
+        let b0 = &j.req("blame").unwrap().as_arr().unwrap()[0];
+        assert_eq!(b0.req("blame_frac").unwrap().as_f64(), Some(1.0));
+        assert!(b0.get("busy_frac").is_none());
+        let c0 = &j.req("counterfactuals").unwrap().as_arr().unwrap()[0];
+        assert_eq!(c0.req("speedup").unwrap().as_f64(), Some(2.0));
+    }
+}

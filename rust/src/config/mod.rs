@@ -58,6 +58,47 @@ pub struct ExperimentConfig {
     pub serve: ServeConfig,
     /// Tracing knobs (`--trace` / `--trace-level`; see [`crate::trace`]).
     pub trace: TraceSection,
+    /// Bottleneck-analysis knobs (`--analyze`; see [`crate::analyze`]).
+    pub analyze: AnalyzeSection,
+}
+
+/// The `[analyze]` section: where the bottleneck report goes and which
+/// counterfactuals to price. `path = "off"` (the default) runs no
+/// analysis at all — the run stays byte-identical to one on a build
+/// without the analyze layer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AnalyzeSection {
+    /// Output stem for `<path>.bottleneck.json`, or "off".
+    pub path: String,
+    /// What-if sweep: "auto" (the default sweep derived from the blame
+    /// table) or a `+`-joined [`crate::analyze::WhatIf`] list
+    /// (`link:<edge>x<f> | dev:<i>x<f> | alpha0 | perfect-fabric |
+    /// infinite-cache`).
+    pub whatifs: String,
+}
+
+impl Default for AnalyzeSection {
+    fn default() -> Self {
+        AnalyzeSection { path: "off".into(), whatifs: "auto".into() }
+    }
+}
+
+impl AnalyzeSection {
+    /// Whether the section turns analysis on at all.
+    pub fn enabled(&self) -> bool {
+        !self.path.trim().is_empty() && self.path.trim() != "off"
+    }
+
+    /// Resolve the what-if sweep: `None` means "auto" (derive the sweep
+    /// from the blame table at analysis time).
+    pub fn parsed_whatifs(&self) -> Result<Option<Vec<crate::analyze::WhatIf>>> {
+        match self.whatifs.trim() {
+            "" | "auto" => Ok(None),
+            spec => crate::analyze::parse_whatifs(spec)
+                .map(Some)
+                .map_err(anyhow::Error::msg),
+        }
+    }
 }
 
 /// The `[trace]` section: where the Chrome trace goes and how much it
@@ -167,6 +208,7 @@ impl Default for ExperimentConfig {
             synthetic_data: true,
             serve: ServeConfig::default(),
             trace: TraceSection::default(),
+            analyze: AnalyzeSection::default(),
         }
     }
 }
@@ -227,6 +269,10 @@ impl ExperimentConfig {
             trace: TraceSection {
                 path: doc.str_or("trace.path", &d.trace.path).to_string(),
                 level: doc.str_or("trace.level", &d.trace.level).to_string(),
+            },
+            analyze: AnalyzeSection {
+                path: doc.str_or("analyze.path", &d.analyze.path).to_string(),
+                whatifs: doc.str_or("analyze.whatifs", &d.analyze.whatifs).to_string(),
             },
         })
     }
@@ -475,6 +521,24 @@ lr = 0.01
         assert_eq!(c.trace.parsed_level().unwrap(), Some(TraceLevel::Chunk));
         let bad = TraceSection { path: "t.json".into(), level: "verbose".into() };
         assert!(bad.parsed_level().is_err());
+    }
+
+    #[test]
+    fn analyze_defaults_to_off_and_parses() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.analyze, AnalyzeSection::default());
+        assert!(!c.analyze.enabled());
+        assert!(c.analyze.parsed_whatifs().unwrap().is_none());
+        let c = ExperimentConfig::from_toml(
+            "[analyze]\npath = \"target/run\"\nwhatifs = \"link:1x2+alpha0\"\n",
+        )
+        .unwrap();
+        assert!(c.analyze.enabled());
+        let ws = c.analyze.parsed_whatifs().unwrap().unwrap();
+        assert_eq!(ws.len(), 2);
+        assert_eq!(ws[0].to_string(), "link:1x2");
+        let bad = AnalyzeSection { path: "t".into(), whatifs: "turbo".into() };
+        assert!(bad.parsed_whatifs().is_err());
     }
 
     #[test]

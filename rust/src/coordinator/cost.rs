@@ -732,7 +732,7 @@ pub fn step_cost_profiled(
 ) -> StepCost {
     step_cost_inner(
         shape, topo, counts, e_per_dev, flops_per_dev, a2a, mode, profile, cache, placement,
-        None, None,
+        None, None, None,
     )
 }
 
@@ -761,7 +761,7 @@ pub fn step_cost_perturbed(
 ) -> StepCost {
     step_cost_inner(
         shape, topo, counts, e_per_dev, flops_per_dev, a2a, mode, profile, cache, placement,
-        Some(slowdown), None,
+        Some(slowdown), None, None,
     )
 }
 
@@ -792,8 +792,46 @@ pub fn step_cost_traced(
 ) -> StepCost {
     step_cost_inner(
         shape, topo, counts, e_per_dev, flops_per_dev, a2a, mode, profile, cache, placement,
-        Some(slowdown), Some(tracer),
+        Some(slowdown), Some(tracer), None,
     )
+}
+
+/// [`step_cost_profiled`] (optionally under straggler slowdowns) that
+/// additionally returns per-resource critical-path *blame* rows
+/// `(track, seconds)` — the analyze subsystem's attribution primitive
+/// (`crate::analyze`). Unlike busy time, blame partitions the step
+/// clock: the returned seconds sum to [`StepCost::step_s`] (to fp
+/// addition error), so `blame / step_s` fractions answer "which
+/// resource gates this step". Serially-priced steps attribute the
+/// slowest device's compute (`dev:<i>`), per-round bottleneck directed
+/// links of scheduled plans (`link:<slot>`, with the round-free
+/// residual — local copies, or the whole phase split for
+/// direct/hierarchical plans — on `chan:a2a-*` rows), and the
+/// allreduce; overlapped steps back-walk the retained pipeline
+/// timeline ([`crate::overlap::Timeline::critical_blame`]) onto the
+/// same `dev:<i>` / `chan:<name>` tracks the tracer uses. The
+/// [`StepCost`] itself is priced through the identical code path as
+/// the blame-free entry points, bit for bit.
+#[allow(clippy::too_many_arguments)]
+pub fn step_cost_blamed(
+    shape: &ModelShape,
+    topo: &Topology,
+    counts: &Mat,
+    e_per_dev: usize,
+    flops_per_dev: f64,
+    a2a: A2aAlgo,
+    mode: OverlapMode,
+    profile: StepProfile,
+    cache: Option<&mut PlanCache>,
+    placement: Option<&Placement>,
+    slowdown: Option<&[f64]>,
+) -> (StepCost, Vec<(String, f64)>) {
+    let mut rows: Vec<(String, f64)> = Vec::new();
+    let cost = step_cost_inner(
+        shape, topo, counts, e_per_dev, flops_per_dev, a2a, mode, profile, cache, placement,
+        slowdown, None, Some(&mut rows),
+    );
+    (cost, rows)
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -810,6 +848,7 @@ fn step_cost_inner(
     placement: Option<&Placement>,
     slowdown: Option<&[f64]>,
     mut tracer: Option<&mut Tracer>,
+    blame: Option<&mut Vec<(String, f64)>>,
 ) -> StepCost {
     let counters_before = cache.as_deref().map(|c| (c.hits(), c.misses()));
     let (serial, bytes, recv) = priced_step(
@@ -840,6 +879,22 @@ fn step_cost_inner(
                 profile,
                 shape.n_moe_layers,
                 cache.as_deref(),
+            );
+        }
+        if let Some(out) = blame {
+            serial_blame_rows(
+                out,
+                topo,
+                &bytes,
+                &serial,
+                a2a,
+                profile,
+                shape.n_moe_layers,
+                cache.as_deref(),
+                shape,
+                flops_per_dev,
+                &recv,
+                slowdown,
             );
         }
         return serial;
@@ -932,6 +987,35 @@ fn step_cost_inner(
             }
             for (r, &b) in tl.busy().iter().enumerate() {
                 tr.note_busy(&pipeline_track(p, r), b);
+            }
+        }
+    }
+    if let Some(out) = blame {
+        // re-derive the winning chunk configuration and re-run the
+        // pipeline with event retention — side-effect-free and
+        // bit-identical to the schedule just priced, exactly like the
+        // tracer's Chunk-level re-run above — then back-walk the
+        // retained DAG for per-resource critical-path blame
+        let chunk = match cache.as_deref() {
+            Some(c) => c.chunk_breakdown(topo, &bytes, a2a, k),
+            None => a2a.plan(topo, &bytes.scale(1.0 / k as f64)).breakdown,
+        };
+        let ar_chunk = if profile.allreduce {
+            ring_allreduce_time(topo, shape.dense_param_bytes() / k as f64)
+        } else {
+            0.0
+        };
+        let (re, tl) = if forward_only {
+            pipeline_cost_forward_retained(&inputs, &chunk, k, true)
+        } else {
+            pipeline_cost_retained(&inputs, &chunk, ar_chunk, k, true)
+        };
+        debug_assert_eq!(re.makespan_s, pipe.makespan_s, "retained re-run must agree");
+        let p = inputs.expert_s_per_dev.len();
+        let per_resource = tl.critical_blame();
+        for (r, &b) in per_resource.iter().enumerate() {
+            if b > 0.0 {
+                out.push((pipeline_track(p, r), b));
             }
         }
     }
@@ -1081,6 +1165,147 @@ fn trace_serial_step(
             }
         }
         cur += round_dur * n_ex;
+    }
+}
+
+/// Critical-path blame rows for one serially-priced step. A serial step
+/// *is* its own critical path — compute, a2a, allreduce back to back —
+/// so the phase times are the blame, refined to the gating resource:
+/// the compute bound is charged to the slowest device, each scheduled
+/// a2a round to the directed-link slot whose contended flow set the
+/// round's duration (the same census model [`trace_serial_step`]
+/// renders as spans), the round-free residual (local copies; the whole
+/// phase split for plans without a round structure) to `chan:a2a-*`
+/// rows, and the allreduce to its channel. Rows sum to
+/// [`StepCost::serial_total`] by construction.
+#[allow(clippy::too_many_arguments)]
+fn serial_blame_rows(
+    out: &mut Vec<(String, f64)>,
+    topo: &Topology,
+    bytes: &Mat,
+    serial: &StepCost,
+    a2a: A2aAlgo,
+    profile: StepProfile,
+    n_moe_layers: usize,
+    cache: Option<&PlanCache>,
+    shape: &ModelShape,
+    flops_per_dev: f64,
+    recv: &[f64],
+    slowdown: Option<&[f64]>,
+) {
+    // compute: the serial bound waits on the slowest device
+    if serial.compute_s > 0.0 {
+        let dense = shape.dense_flops_per_token() * shape.tokens_per_dev as f64;
+        let mut dev = 0usize;
+        let mut worst = f64::NEG_INFINITY;
+        for (i, &r) in recv.iter().enumerate() {
+            let fwd = dense + shape.expert_flops_per_token() * r * n_moe_layers as f64;
+            let t = profile.compute_mult * fwd / flops_per_dev
+                * slowdown.map_or(1.0, |s| s[i]);
+            if t > worst {
+                worst = t;
+                dev = i;
+            }
+        }
+        out.push((format!("dev:{dev}"), serial.compute_s));
+    }
+
+    // a2a: per-round gating slots where a round structure exists, the
+    // breakdown's phase split otherwise
+    let n_ex = profile.exchanges_per_layer * n_moe_layers as f64;
+    let fresh;
+    let rounds: Option<&[Round]> = match cache.and_then(|c| c.cached_rounds(topo, bytes, a2a))
+    {
+        Some(r) => Some(r),
+        None if matches!(a2a, A2aAlgo::Scheduled(_)) => {
+            fresh = a2a.plan(topo, bytes).rounds;
+            fresh.as_deref()
+        }
+        None => None,
+    };
+    match rounds {
+        Some(rounds) => {
+            let mut census = vec![0u32; topo.n_slots()];
+            let mut slot_busy = vec![0.0f64; topo.n_slots()];
+            let mut slot_blame = vec![0.0f64; topo.n_slots()];
+            let mut live: Vec<(usize, usize)> = Vec::new();
+            let mut linked = 0.0f64;
+            for round in rounds {
+                live.clear();
+                live.extend(
+                    round.iter().copied().filter(|&(i, j)| i != j && bytes.get(i, j) > 0.0),
+                );
+                if live.is_empty() {
+                    continue;
+                }
+                for v in &mut slot_busy {
+                    *v = 0.0;
+                }
+                for &(i, j) in &live {
+                    census_add(topo, &mut census, i, j);
+                }
+                let mut round_dur = 0.0f64;
+                for &(i, j) in &live {
+                    let t = contended_time(topo, &census, i, j, bytes.get(i, j));
+                    round_dur = round_dur.max(t);
+                    for &s in topo.pair_slots(i, j) {
+                        let s = s as usize;
+                        slot_busy[s] = slot_busy[s].max(t);
+                    }
+                }
+                for &(i, j) in &live {
+                    census_sub(topo, &mut census, i, j);
+                }
+                if round_dur > 0.0 {
+                    // the gating slot: lowest-indexed slot whose busiest
+                    // flow set the round duration
+                    let mut gate = 0usize;
+                    let mut best = f64::NEG_INFINITY;
+                    for (s, &b) in slot_busy.iter().enumerate() {
+                        if b > best {
+                            best = b;
+                            gate = s;
+                        }
+                    }
+                    slot_blame[gate] += round_dur * n_ex;
+                    linked += round_dur * n_ex;
+                }
+            }
+            let link_start = out.len();
+            for (s, &b) in slot_blame.iter().enumerate() {
+                if b > 0.0 {
+                    out.push((format!("link:{s}"), b));
+                }
+            }
+            // the round-free remainder of the a2a phase is the local
+            // copies; clamp fp overshoot into the largest link row so
+            // blame stays non-negative and still sums to the phase
+            let residual = serial.a2a_s - linked;
+            if residual > 0.0 {
+                out.push(("chan:a2a-local".to_string(), residual));
+            } else if residual < 0.0 {
+                if let Some(row) =
+                    out[link_start..].iter_mut().max_by(|a, b| a.1.total_cmp(&b.1))
+                {
+                    row.1 += residual;
+                }
+            }
+        }
+        None => {
+            for (name, dur) in [
+                ("chan:a2a-local", serial.a2a.local_s),
+                ("chan:a2a-intra", serial.a2a.intra_s),
+                ("chan:a2a-inter", serial.a2a.inter_s),
+            ] {
+                if dur > 0.0 {
+                    out.push((name.to_string(), dur));
+                }
+            }
+        }
+    }
+
+    if profile.allreduce && serial.allreduce_s > 0.0 {
+        out.push(("chan:allreduce".to_string(), serial.allreduce_s));
     }
 }
 

@@ -23,9 +23,9 @@ pub mod session;
 pub mod workload;
 
 pub use cost::{
-    device_flops, step_cost, step_cost_cached, step_cost_overlapped, step_cost_perturbed,
-    step_cost_placed, step_cost_profiled, step_cost_traced, throughput, ModelShape, PlanCache,
-    StepCost, StepProfile, PLAN_CACHE_TOL,
+    device_flops, step_cost, step_cost_blamed, step_cost_cached, step_cost_overlapped,
+    step_cost_perturbed, step_cost_placed, step_cost_profiled, step_cost_traced, throughput,
+    ModelShape, PlanCache, StepCost, StepProfile, PLAN_CACHE_TOL,
 };
 pub use policy::{
     converged_counts, DeepSpeedEven, DispatchPolicy, FastMoeEven, FasterMoeHir,

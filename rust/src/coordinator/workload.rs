@@ -348,6 +348,12 @@ impl WorkloadCore {
         self.chaos.as_ref()
     }
 
+    /// The per-device compute slowdown latched for the next priced step
+    /// (`None` = every device at full speed).
+    pub fn slowdown(&self) -> Option<&[f64]> {
+        self.slowdown.as_deref()
+    }
+
     /// The attached event sink, if any.
     pub fn tracer(&self) -> Option<&Tracer> {
         self.tracer.as_ref()

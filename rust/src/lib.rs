@@ -57,6 +57,12 @@
 //!   utilization report ([`trace::utilization`]) and the unified
 //!   [`trace::MetricsRegistry`] of named counters/gauges — all behind
 //!   `--trace`, zero-cost when off.
+//! * [`analyze`] — the bottleneck attribution & what-if engine:
+//!   critical-path blame over the overlap [`overlap::Timeline`] (per
+//!   -resource seconds that sum to the step clock, unlike busy
+//!   fractions) and the [`analyze::WhatIf`] counterfactual re-pricer
+//!   (`link:<edge>x<f>`, `dev:<i>x<f>`, `alpha0`, `perfect-fabric`,
+//!   `infinite-cache`) — all behind `--analyze`, zero-cost when off.
 //! * [`data`] — byte-level tokenizer, bundled tiny corpus and a synthetic
 //!   Zipf corpus generator, shard-aware batching.
 //! * [`config`] — TOML experiment configs and the cluster A/B/C presets
@@ -74,6 +80,7 @@
 // safe rust, and the crate keeps it that way mechanically.
 #![forbid(unsafe_code)]
 
+pub mod analyze;
 pub mod comm;
 pub mod config;
 pub mod coordinator;
@@ -89,6 +96,7 @@ pub mod topology;
 pub mod trace;
 pub mod util;
 
+pub use analyze::{analyze_workload, BottleneckReport, WhatIf};
 pub use config::ExperimentConfig;
 pub use coordinator::{DispatchPolicy, Session, SessionBuilder, Workload};
 pub use overlap::OverlapMode;

@@ -31,9 +31,10 @@ use anyhow::{Context, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
+use ta_moe::analyze::analyze_workload;
 use ta_moe::comm::{profile_exchange, A2aAlgo};
-use ta_moe::config::{topology_for, ExperimentConfig};
-use ta_moe::coordinator::{device_flops, list_policies, SessionBuilder};
+use ta_moe::config::{topology_for, AnalyzeSection, ExperimentConfig};
+use ta_moe::coordinator::{device_flops, list_policies, SessionBuilder, Workload, WorkloadCore};
 use ta_moe::dispatch::{penalty_weights, target_pattern, DispatchProblem, Norm};
 use ta_moe::metrics::RunLog;
 use ta_moe::serve::{CachePolicy, ServeBuilder, TraceConfig, TraceKind};
@@ -42,7 +43,7 @@ use ta_moe::trace::{chrome_trace, utilization, utilization_csv};
 use ta_moe::util::bench::Table;
 use ta_moe::util::json::Json;
 use ta_moe::util::Mat;
-use ta_moe::Tracer;
+use ta_moe::{BottleneckReport, Tracer};
 
 /// Tracks listed under `hottest` in the utilization report (summary JSON
 /// and `ta-moe` stdout alike).
@@ -99,11 +100,13 @@ fn print_help() {
                          --placement off|on|<every-steps> --overlap off|serial|k=<n>|auto\n\
                          --chaos off|<events> --trace off|<path.json>\n\
                          --trace-level step|phase|chunk --config file.toml\n\
+                         --analyze off|<path> --whatifs auto|<specs>\n\
            serve         --artifact tiny4 --cluster table1 --strategy ta-moe\n\
                          --trace poisson|bursty|diurnal --rate 8 --requests 64\n\
                          --cache-cap <n> --cache lru|ewma --slo-s 0.2\n\
                          --experts-per-dev <n> --max-inflight 8 --zipf 1.0\n\
                          --a2a ... --placement ... --overlap ... --chaos ... --seed 0\n\
+                         --analyze off|<path> --whatifs auto|<specs>\n\
                          (--trace also takes a <path.json> to record a\n\
                          Chrome trace; --trace-level as in train)\n\
            solve         --cluster C --nodes 2 [--tokens 1024] [--k 1]\n\
@@ -131,7 +134,12 @@ fn print_help() {
          TRACING:    --trace <path.json> records a deterministic Chrome\n\
                      trace (load in Perfetto / chrome://tracing) plus a\n\
                      per-resource utilization CSV; levels step < phase <\n\
-                     chunk; default off (zero overhead)"
+                     chunk; default off (zero overhead)\n\
+         ANALYZE:    --analyze <path> writes <path>.bottleneck.json —\n\
+                     per-resource critical-path blame plus what-if\n\
+                     projections; --whatifs auto | `+`-joined specs\n\
+                     (link:<edge>x<f> | dev:<i>x<f> | alpha0 |\n\
+                     perfect-fabric | infinite-cache); default off"
     );
 }
 
@@ -234,6 +242,12 @@ fn cmd_train(flags: &Flags) -> Result<()> {
     }
     if let Some(l) = flags.get("trace-level") {
         cfg.trace.level = l.clone();
+    }
+    if let Some(a) = flags.get("analyze") {
+        cfg.analyze.path = a.clone();
+    }
+    if let Some(w) = flags.get("whatifs") {
+        cfg.analyze.whatifs = w.clone();
     }
     cfg.steps = flag_parse(flags, "steps", cfg.steps)?;
     cfg.lr = flag_parse(flags, "lr", cfg.lr)?;
@@ -377,19 +391,58 @@ fn cmd_train(flags: &Flags) -> Result<()> {
             recovery
         );
     }
-    if !chaos_spec.is_off() || session.tracer().is_some() {
-        // chaos and traced runs get the JSON summary (recovery_steps,
-        // utilization & co); clean untraced runs keep the historic
-        // CSV-only output byte for byte
+    let analyze_report = if cfg.analyze.enabled() {
+        Some(run_analysis(
+            session.core(),
+            session.last_counts(),
+            session.log(),
+            &cfg.analyze,
+            "train",
+        )?)
+    } else {
+        None
+    };
+    if !chaos_spec.is_off() || session.tracer().is_some() || analyze_report.is_some() {
+        // chaos, traced, and analyzed runs get the JSON summary
+        // (recovery_steps, utilization, blame & co); clean bare runs keep
+        // the historic CSV-only output byte for byte
         let json_path = out.with_extension("json");
-        let summary = summary_with_trace(session.log(), session.tracer());
+        let mut summary = summary_with_trace(session.log(), session.tracer());
+        if let (Some(rep), Json::Obj(m)) = (&analyze_report, &mut summary) {
+            m.insert("analyze".into(), rep.to_json());
+        }
         std::fs::write(&json_path, summary.to_string_compact())?;
         println!("summary → {}", json_path.display());
     }
     if let Some(tr) = session.tracer() {
-        write_trace_outputs(tr, &cfg.trace.path)?;
+        write_trace_outputs(tr, &cfg.trace.path, &session.log().dead_devices())?;
     }
     Ok(())
+}
+
+/// Run the bottleneck analysis over a finished workload and write
+/// `<path>.bottleneck.json` beside printing the ranked tables.
+fn run_analysis(
+    core: &WorkloadCore,
+    counts: Option<&Mat>,
+    log: &RunLog,
+    section: &AnalyzeSection,
+    mode: &str,
+) -> Result<BottleneckReport> {
+    let counts = counts.context("--analyze needs at least one priced step")?;
+    let whatifs = section.parsed_whatifs()?;
+    let report = analyze_workload(core, counts, log, whatifs.as_deref(), mode)
+        .map_err(anyhow::Error::msg)?;
+    report.print_tables();
+    let path = PathBuf::from(format!("{}.bottleneck.json", section.path));
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(&path, report.to_json().to_string_compact())?;
+    println!("analyze → {}", path.display());
+    Ok(report)
 }
 
 /// The run-log summary, with the tracer's utilization report and counter
@@ -398,7 +451,7 @@ fn cmd_train(flags: &Flags) -> Result<()> {
 fn summary_with_trace(log: &RunLog, tracer: Option<&Tracer>) -> Json {
     let mut summary = log.summary_json();
     if let (Some(tr), Json::Obj(m)) = (tracer, &mut summary) {
-        let report = utilization(tr.events(), tr.clock_s(), TRACE_TOP_K);
+        let report = utilization(tr.events(), tr.clock_s(), TRACE_TOP_K, &log.dead_devices());
         m.insert("utilization".into(), report.to_json());
         m.insert("registry".into(), tr.registry().to_json());
     }
@@ -406,8 +459,9 @@ fn summary_with_trace(log: &RunLog, tracer: Option<&Tracer>) -> Json {
 }
 
 /// Write the Chrome-trace JSON (Perfetto-loadable) at `path_spec` and the
-/// per-resource utilization CSV next to it.
-fn write_trace_outputs(tracer: &Tracer, path_spec: &str) -> Result<()> {
+/// per-resource utilization CSV next to it. `dead_devs` as in
+/// [`utilization`].
+fn write_trace_outputs(tracer: &Tracer, path_spec: &str, dead_devs: &[usize]) -> Result<()> {
     let path = PathBuf::from(path_spec);
     if let Some(dir) = path.parent() {
         if !dir.as_os_str().is_empty() {
@@ -415,7 +469,7 @@ fn write_trace_outputs(tracer: &Tracer, path_spec: &str) -> Result<()> {
         }
     }
     std::fs::write(&path, chrome_trace(tracer).to_string_compact())?;
-    let report = utilization(tracer.events(), tracer.clock_s(), TRACE_TOP_K);
+    let report = utilization(tracer.events(), tracer.clock_s(), TRACE_TOP_K, dead_devs);
     let csv_path = path.with_extension("utilization.csv");
     std::fs::write(&csv_path, utilization_csv(&report))?;
     if let Some(hot) = report.hottest.first() {
@@ -483,6 +537,12 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     }
     if let Some(c) = flags.get("chaos") {
         cfg.chaos = c.clone();
+    }
+    if let Some(a) = flags.get("analyze") {
+        cfg.analyze.path = a.clone();
+    }
+    if let Some(w) = flags.get("whatifs") {
+        cfg.analyze.whatifs = w.clone();
     }
     cfg.seed = flag_parse(flags, "seed", cfg.seed)?;
     cfg.serve.rate_rps = flag_parse(flags, "rate", cfg.serve.rate_rps)?;
@@ -605,12 +665,20 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     );
     let csv = cfg.out_dir.join(format!("{stem}.csv"));
     log.write_csv(&csv)?;
+    let analyze_report = if cfg.analyze.enabled() {
+        Some(run_analysis(sess.core(), sess.last_counts(), log, &cfg.analyze, "serve")?)
+    } else {
+        None
+    };
     let json_path = cfg.out_dir.join(format!("{stem}.json"));
-    let summary = summary_with_trace(log, sess.tracer());
+    let mut summary = summary_with_trace(log, sess.tracer());
+    if let (Some(rep), Json::Obj(m)) = (&analyze_report, &mut summary) {
+        m.insert("analyze".into(), rep.to_json());
+    }
     std::fs::write(&json_path, summary.to_string_compact())?;
     println!("log → {} / {}", csv.display(), json_path.display());
     if let Some(tr) = sess.tracer() {
-        write_trace_outputs(tr, &cfg.trace.path)?;
+        write_trace_outputs(tr, &cfg.trace.path, &log.dead_devices())?;
     }
     Ok(())
 }
@@ -649,6 +717,9 @@ fn cmd_list_modes() -> Result<()> {
     }
     for (spec, help) in CHAOS_MODE_ROWS {
         t.row(&["chaos".into(), (*spec).into(), (*help).into()]);
+    }
+    for (spec, help) in WHATIF_MODE_ROWS {
+        t.row(&["whatif".into(), (*spec).into(), (*help).into()]);
     }
     t.print();
     println!("\ndispatch policies: see `ta-moe --list-strategies`");
@@ -706,6 +777,17 @@ const CHAOS_MODE_ROWS: &[(&str, &str)] = &[
         "device 3 dies at step 80: experts evacuated, in-flight work re-homed",
     ),
     ("drift:1@40-50", "gate regime shift: expert columns rotate by 1 over [40,50)"),
+];
+
+/// The `--list-modes` what-if rows (the `--whatifs` sweep of `--analyze`).
+/// Every example is a *parseable* [`ta_moe::WhatIf`] in its canonical
+/// spelling (a test round-trips each one), joinable with `+`.
+const WHATIF_MODE_ROWS: &[(&str, &str)] = &[
+    ("link:1x2", "project the step clock with link 1 twice as fast"),
+    ("dev:0x2", "project with device 0 computing twice as fast"),
+    ("alpha0", "project with zero link latency (bandwidth unchanged)"),
+    ("perfect-fabric", "project with free links (the compute-bound limit)"),
+    ("infinite-cache", "project with every expert-weight fetch a hit (serve)"),
 ];
 
 // ---------------------------------------------------------------------------
@@ -823,9 +905,9 @@ fn cmd_bench_comm(flags: &Flags) -> Result<()> {
 
 #[cfg(test)]
 mod tests {
-    use super::{CHAOS_MODE_ROWS, TRACE_LEVEL_ROWS};
+    use super::{CHAOS_MODE_ROWS, TRACE_LEVEL_ROWS, WHATIF_MODE_ROWS};
     use ta_moe::perturb::ChaosSpec;
-    use ta_moe::TraceLevel;
+    use ta_moe::{TraceLevel, WhatIf};
 
     #[test]
     fn listed_trace_levels_parse_and_round_trip() {
@@ -846,6 +928,21 @@ mod tests {
         let joined = "straggler:0x2@10-20:flap=4+link:1x3@30-60+nodeloss:3@80+drift:1@40-50";
         let parsed: ChaosSpec = joined.parse().unwrap();
         assert_eq!(parsed.to_string(), joined);
+    }
+
+    #[test]
+    fn listed_whatif_examples_parse_and_round_trip() {
+        for (spec, _) in WHATIF_MODE_ROWS {
+            let parsed: WhatIf = spec.parse().unwrap();
+            assert_eq!(parsed.to_string(), *spec, "canonical form drifted for {spec}");
+        }
+        // the composed spelling from the help text
+        let joined = "link:1x2+dev:0x2+alpha0+perfect-fabric+infinite-cache";
+        let ws = ta_moe::analyze::parse_whatifs(joined).unwrap();
+        assert_eq!(
+            ws.iter().map(|w| w.to_string()).collect::<Vec<_>>().join("+"),
+            joined
+        );
     }
 }
 

@@ -328,6 +328,22 @@ impl RunLog {
         self.perturbations.first().map(|p| p.step)
     }
 
+    /// Devices the fault stream killed (`nodeloss:<dev>` perturbation
+    /// records), in firing order, deduplicated — the exclusion list
+    /// [`crate::trace::utilization`] takes so corpses don't poison the
+    /// straggler skew.
+    pub fn dead_devices(&self) -> Vec<usize> {
+        let mut out = Vec::new();
+        for p in &self.perturbations {
+            if let Some(dev) = p.event.strip_prefix("nodeloss:").and_then(|d| d.parse().ok()) {
+                if !out.contains(&dev) {
+                    out.push(dev);
+                }
+            }
+        }
+        out
+    }
+
     /// Steps from the first fault's onset until the per-step clock
     /// (including migration/fetch spikes) first returns within
     /// [`crate::perturb::RECOVERY_TOL`] of the mean of the

@@ -143,6 +143,69 @@ impl Timeline {
         self.busy.iter().sum()
     }
 
+    /// Per-resource critical-path blame: walk the retained event DAG
+    /// backwards from the makespan, charging each critical segment to
+    /// the resource that ran it. Unlike busy time, blame *partitions*
+    /// the makespan — the returned per-resource seconds sum to
+    /// [`Timeline::makespan`] (to fp addition error), so blame
+    /// fractions answer "which resource gates the step" directly.
+    ///
+    /// Dependency edges are not retained, but `schedule` copies the
+    /// binding constraint's completion time bit-exactly into the next
+    /// event's start, so an event's predecessor on the critical path is
+    /// recoverable as any retained event with `end_s == start_s`
+    /// (resource-occupancy and dependency constraints both leave this
+    /// signature; zero-duration barriers forward it unchanged). Ties
+    /// are broken deterministically (earliest start, then lowest
+    /// resource). If a start is unexplained by any retained event —
+    /// possible only when the binding chain was entirely zero-duration
+    /// back to the origin — the residual prefix is charged to the
+    /// current resource so blame still covers the whole makespan.
+    ///
+    /// Requires retention ([`Timeline::recording`]); an empty event
+    /// list yields all-zero blame.
+    pub fn critical_blame(&self) -> Vec<f64> {
+        let mut blame = vec![0.0; self.free_at.len()];
+        // terminal event: latest end; ties → earliest start, lowest resource
+        let last = self
+            .events
+            .iter()
+            .max_by(|a, b| {
+                a.end_s
+                    .total_cmp(&b.end_s)
+                    .then(b.start_s.total_cmp(&a.start_s))
+                    .then(b.resource.cmp(&a.resource))
+            })
+            .copied();
+        let mut cur = match last {
+            Some(e) => e,
+            None => return blame,
+        };
+        loop {
+            blame[cur.resource] += cur.end_s - cur.start_s;
+            let t = cur.start_s;
+            if t <= 0.0 {
+                break;
+            }
+            let prev = self
+                .events
+                .iter()
+                .filter(|e| e.end_s == t)
+                .min_by(|a, b| {
+                    a.start_s.total_cmp(&b.start_s).then(a.resource.cmp(&b.resource))
+                })
+                .copied();
+            match prev {
+                Some(e) => cur = e,
+                None => {
+                    blame[cur.resource] += t;
+                    break;
+                }
+            }
+        }
+        blame
+    }
+
     /// Measure of the times where an event of `class` is running and no
     /// event of any class in `hidden_by` is — the exposed portion of that
     /// class of work.
@@ -306,6 +369,45 @@ mod tests {
                 .sum();
             assert_eq!(sum, b, "resource {r}");
         }
+    }
+
+    #[test]
+    fn critical_blame_partitions_the_makespan() {
+        // diamond: compute 1s on dev 0, then parallel a2a 2s (res 1) and
+        // compute 0.5s (res 0), then a joining compute 1s on res 2. The
+        // critical path is res0(1) → res1(2) → res2(1); res 0's short
+        // second event never gates anything.
+        let mut t = Timeline::recording(3);
+        let a = t.schedule(0, EventClass::Compute, 1.0, &[]);
+        let b = t.schedule(1, EventClass::A2a, 2.0, &[a]);
+        let c = t.schedule(0, EventClass::Compute, 0.5, &[a]);
+        t.schedule(2, EventClass::Compute, 1.0, &[b, c]);
+        let blame = t.critical_blame();
+        assert_eq!(blame, vec![1.0, 2.0, 1.0]);
+        let total: f64 = blame.iter().sum();
+        assert!((total - t.makespan()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn critical_blame_spans_zero_duration_barriers() {
+        // a → barrier(0s) → b: the barrier is not retained, but the
+        // back-walk recovers a through the bit-exact end==start match.
+        let mut t = Timeline::recording(2);
+        let a = t.schedule(0, EventClass::Compute, 1.5, &[]);
+        let barrier = t.schedule(0, EventClass::Compute, 0.0, &[a]);
+        t.schedule(1, EventClass::A2a, 2.5, &[barrier]);
+        let blame = t.critical_blame();
+        assert_eq!(blame, vec![1.5, 2.5]);
+        assert_eq!(blame.iter().sum::<f64>(), t.makespan());
+    }
+
+    #[test]
+    fn critical_blame_without_retention_is_zero() {
+        let mut t = Timeline::new(2);
+        t.schedule(0, EventClass::Compute, 1.0, &[]);
+        assert_eq!(t.critical_blame(), vec![0.0, 0.0]);
+        let empty = Timeline::recording(2);
+        assert_eq!(empty.critical_blame(), vec![0.0, 0.0]);
     }
 
     #[test]

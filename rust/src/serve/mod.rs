@@ -409,6 +409,7 @@ impl ServeBuilder {
             now_s: 0.0,
             slo_s: self.slo_s,
             zipf_s: self.zipf_s,
+            last_counts: None,
         })
     }
 }
@@ -472,6 +473,9 @@ pub struct ServeSession {
     now_s: f64,
     slo_s: f64,
     zipf_s: f64,
+    /// The dispatch counts of the last priced iteration — the
+    /// representative step `--analyze` re-prices counterfactually.
+    last_counts: Option<Mat>,
 }
 
 impl ServeSession {
@@ -620,6 +624,7 @@ impl ServeSession {
         shape.tokens_per_dev = tokens.iter().copied().max().unwrap_or(0).max(1);
         let hits_before = self.core.plan_cache().hits();
         let cost = self.core.price_with_shape(&shape, &counts);
+        self.last_counts = Some(counts);
 
         self.now_s += cost.step_s() + fetch_s + migration_s;
         let finished = self.batcher.advance(self.now_s);
@@ -748,6 +753,12 @@ impl ServeSession {
     /// [`ServeBuilder::trace_level`].
     pub fn tracer(&self) -> Option<&Tracer> {
         self.core.tracer()
+    }
+
+    /// The dispatch counts of the last priced iteration (`None` before
+    /// the first step) — the representative step `--analyze` re-prices.
+    pub fn last_counts(&self) -> Option<&Mat> {
+        self.last_counts.as_ref()
     }
 
     pub fn done(&self) -> bool {

@@ -381,6 +381,47 @@ impl Topology {
         }
     }
 
+    /// Counterfactual seam ([`crate::analyze`]): a clone with *every*
+    /// physical link's α multiplied by `alpha_f` and β by `beta_f`
+    /// (zero allowed — `alpha0` keeps bandwidth but kills latency,
+    /// `perfect-fabric` zeroes both), per-pair matrices re-derived from
+    /// the link graph exactly as the constructors do (α = hop sum,
+    /// β = slowest hop, §3.2). Local copies (the diagonal) are
+    /// untouched: a perfect fabric still pays the memory copy. Any
+    /// profiling noise baked into the per-pair matrices is discarded —
+    /// counterfactuals price the true fabric.
+    pub fn with_links_scaled(&self, alpha_f: f64, beta_f: f64) -> Topology {
+        assert!(alpha_f >= 0.0, "negative link alpha scale {alpha_f}");
+        assert!(beta_f >= 0.0, "negative link beta scale {beta_f}");
+        let mut t = self.clone();
+        for l in &mut t.links {
+            l.alpha *= alpha_f;
+            l.beta *= beta_f;
+        }
+        for (e, l) in t.links.iter().enumerate() {
+            for dir in 0..2 {
+                t.slot_alpha[2 * e + dir] = l.alpha;
+                t.slot_beta[2 * e + dir] = l.beta;
+            }
+        }
+        for i in 0..t.p {
+            for j in 0..t.p {
+                if i == j {
+                    continue;
+                }
+                let path = &t.paths[i * t.p + j];
+                let a_sum: f64 = path.iter().map(|dl| t.links[dl.edge].alpha).sum();
+                let b_max: f64 = path
+                    .iter()
+                    .map(|dl| t.links[dl.edge].beta)
+                    .fold(0.0, f64::max);
+                t.alpha.set(i, j, a_sum);
+                t.beta.set(i, j, b_max);
+            }
+        }
+        t
+    }
+
     /// Perturb cross-device per-pair α/β with relative log-normal-ish
     /// noise — the "profiling noise" that Eq. 5 smoothing is designed to
     /// remove. Self pairs (i == j) are local memory copies no profiler
@@ -507,6 +548,38 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn links_scaled_rederives_pairs_and_allows_zero() {
+        let spec = TreeSpec::parse("[2,2]").unwrap();
+        let t = Topology::tree(&spec, &[l(1e-10), l(1e-8)], Link::new(2e-7, 1e-11));
+        // alpha0: latency gone, bandwidth kept, diagonal untouched
+        let a0 = t.with_links_scaled(0.0, 1.0);
+        for i in 0..t.p() {
+            for j in 0..t.p() {
+                if i == j {
+                    assert_eq!(a0.alpha(i, i), t.alpha(i, i));
+                    assert_eq!(a0.beta(i, i), t.beta(i, i));
+                } else {
+                    assert_eq!(a0.alpha(i, j), 0.0, "alpha {i}->{j}");
+                    assert_eq!(a0.beta(i, j), t.beta(i, j), "beta {i}->{j}");
+                }
+            }
+        }
+        // perfect fabric: both zero on every cross-device pair and slot
+        let pf = t.with_links_scaled(0.0, 0.0);
+        assert!(pf.links().iter().all(|l| l.alpha == 0.0 && l.beta == 0.0));
+        assert_eq!(pf.beta(0, 2), 0.0);
+        assert!(pf.beta(0, 0) > 0.0);
+        // a uniform scale matches per-edge scale_link over all edges
+        let mut per_edge = t.clone();
+        for e in 0..t.links().len() {
+            per_edge.scale_link(e, 2.0);
+        }
+        let uniform = t.with_links_scaled(2.0, 2.0);
+        assert_eq!(uniform.alpha_mat(), per_edge.alpha_mat());
+        assert_eq!(uniform.beta_mat(), per_edge.beta_mat());
     }
 
     #[test]

@@ -41,7 +41,20 @@ pub struct UtilizationReport {
 /// -duration [`TracePh::Span`] events count, and the aggregate `step`
 /// track is excluded — it would otherwise dominate every headline while
 /// saying nothing about *where* time went.
-pub fn utilization(events: &[TraceEvent], total_s: f64, top_k: usize) -> UtilizationReport {
+///
+/// `dead_devs` lists devices the fault stream killed (`nodeloss:<dev>`
+/// [`crate::metrics::PerturbationRecord`]s —
+/// [`crate::metrics::RunLog::dead_devices`] derives the list). A corpse
+/// contributes 0 busy seconds for the rest of the window, which would
+/// deflate the device mean and inflate `straggler_skew` into reading
+/// healthy devices as stragglers; dead devices keep their report rows
+/// but are excluded from the skew's mean and max.
+pub fn utilization(
+    events: &[TraceEvent],
+    total_s: f64,
+    top_k: usize,
+    dead_devs: &[usize],
+) -> UtilizationReport {
     let mut busy: BTreeMap<&str, (f64, usize)> = BTreeMap::new();
     for e in events {
         if e.ph != TracePh::Span || e.dur_s <= 0.0 || e.track == "step" {
@@ -61,8 +74,11 @@ pub fn utilization(events: &[TraceEvent], total_s: f64, top_k: usize) -> Utiliza
         })
         .collect();
 
-    let dev_busy: Vec<f64> =
-        rows.iter().filter(|r| r.track.starts_with("dev:")).map(|r| r.busy_s).collect();
+    let dev_busy: Vec<f64> = rows
+        .iter()
+        .filter(|r| r.track.starts_with("dev:") && !track_is_dead(&r.track, dead_devs))
+        .map(|r| r.busy_s)
+        .collect();
     let straggler_skew = if dev_busy.is_empty() {
         1.0
     } else {
@@ -81,6 +97,14 @@ pub fn utilization(events: &[TraceEvent], total_s: f64, top_k: usize) -> Utiliza
     let hottest = by_heat.iter().take(top_k).map(|(_, t)| t.to_string()).collect();
 
     UtilizationReport { rows, straggler_skew, hottest, total_s }
+}
+
+/// Whether a `dev:<i>` track belongs to a whole-window-dead device.
+fn track_is_dead(track: &str, dead_devs: &[usize]) -> bool {
+    track
+        .strip_prefix("dev:")
+        .and_then(|d| d.parse::<usize>().ok())
+        .is_some_and(|d| dead_devs.contains(&d))
 }
 
 /// The report as a `utilization.csv` body (header + one row per track).
@@ -134,7 +158,7 @@ mod tests {
 
     #[test]
     fn folds_busy_excluding_step_instants_and_zero_spans() {
-        let rep = utilization(&spans(), 10.0, 2);
+        let rep = utilization(&spans(), 10.0, 2, &[]);
         let tracks: Vec<&str> = rep.rows.iter().map(|r| r.track.as_str()).collect();
         // sorted; no "step", no instant track, no zero-duration span
         assert_eq!(tracks, vec!["dev:0", "dev:1", "link:3"]);
@@ -149,18 +173,18 @@ mod tests {
 
     #[test]
     fn empty_run_yields_empty_report_without_nan() {
-        let rep = utilization(&[], 0.0, 3);
+        let rep = utilization(&[], 0.0, 3, &[]);
         assert!(rep.rows.is_empty());
         assert_eq!(rep.straggler_skew, 1.0);
         assert!(rep.hottest.is_empty());
         // zero clock: fractions are 0, never NaN
-        let one = utilization(&spans(), 0.0, 1);
+        let one = utilization(&spans(), 0.0, 1, &[]);
         assert!(one.rows.iter().all(|r| r.busy_frac == 0.0));
     }
 
     #[test]
     fn csv_and_json_carry_the_rows() {
-        let rep = utilization(&spans(), 10.0, 2);
+        let rep = utilization(&spans(), 10.0, 2, &[]);
         let csv = utilization_csv(&rep);
         let mut lines = csv.lines();
         assert_eq!(lines.next(), Some("resource,busy_s,busy_frac,spans"));
@@ -177,7 +201,28 @@ mod tests {
         let mut t = Tracer::new(TraceLevel::Chunk);
         t.span("link:9", "round", "a2a", 0.0, 1.0, &[]);
         t.span("link:1", "round", "a2a", 0.0, 1.0, &[]);
-        let rep = utilization(t.events(), 1.0, 2);
+        let rep = utilization(t.events(), 1.0, 2, &[]);
         assert_eq!(rep.hottest, vec!["link:1", "link:9"]);
+    }
+
+    #[test]
+    fn dead_devices_do_not_inflate_straggler_skew() {
+        // dev:2 died just after the window opened: 1 busy second against
+        // the survivors' 6 and 2. With the corpse in the mean the skew
+        // reads 6/((6+2+1)/3) = 2.0 — a lie about the living. Excluded,
+        // it is the honest 6/((6+2)/2) = 1.5.
+        let mut t = Tracer::new(TraceLevel::Chunk);
+        t.span("dev:0", "expert", "compute", 0.0, 6.0, &[]);
+        t.span("dev:1", "expert", "compute", 0.0, 2.0, &[]);
+        t.span("dev:2", "expert", "compute", 0.0, 1.0, &[]);
+        let naive = utilization(t.events(), 10.0, 4, &[]);
+        let fixed = utilization(t.events(), 10.0, 4, &[2]);
+        assert!((naive.straggler_skew - 2.0).abs() < 1e-15);
+        assert!((fixed.straggler_skew - 1.5).abs() < 1e-15);
+        // the dead device keeps its report row — only the skew ignores it
+        assert!(fixed.rows.iter().any(|r| r.track == "dev:2"));
+        // all devices dead: mean of an empty set degrades to skew 1
+        let all_dead = utilization(t.events(), 10.0, 4, &[0, 1, 2]);
+        assert_eq!(all_dead.straggler_skew, 1.0);
     }
 }

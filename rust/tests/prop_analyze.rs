@@ -1,0 +1,339 @@
+//! Property and acceptance tests for the bottleneck-attribution &
+//! what-if engine (ISSUE 10): blame partitions the step clock (rows
+//! non-negative, fractions summing to 1) across topology × algo ×
+//! overlap mode; the blamed pricing is bit-identical to the blame-free
+//! entry point (`--analyze` can never change what a run charges); traced
+//! busy fractions stay ≤ 1 per track; on the bottlenecked [2,2] tree the
+//! top-blamed resource is the slow uplink; and a `link:<e>x<f>` what-if
+//! projection equals the clock of a *real* run under the equivalent
+//! chaos spec to 1e-9 relative — the projection is a statement about the
+//! simulator, not a heuristic.
+
+use ta_moe::analyze::{analyze_workload, blame_fractions, WhatIf};
+use ta_moe::comm::{A2aAlgo, ScheduleKind};
+use ta_moe::coordinator::{
+    step_cost_blamed, step_cost_profiled, ModelShape, Session, SessionBuilder, StepProfile,
+    Workload,
+};
+use ta_moe::overlap::OverlapMode;
+use ta_moe::runtime::{ModelCfg, SimBackend};
+use ta_moe::topology::{presets, Link, Topology, TreeSpec};
+use ta_moe::trace::TraceLevel;
+use ta_moe::util::prop::check;
+use ta_moe::util::rng::Rng;
+use ta_moe::util::Mat;
+
+fn random_tree(rng: &mut Rng) -> Topology {
+    let spec = TreeSpec::symmetric(&[rng.range(2, 5), rng.range(2, 5)]);
+    let dev = Link::from_gbps_us(rng.range_f64(20.0, 300.0), rng.range_f64(1.0, 5.0));
+    let up = Link::from_gbps_us(rng.range_f64(4.0, 25.0), rng.range_f64(5.0, 30.0));
+    Topology::tree(&spec, &[dev, up], presets::local_copy())
+}
+
+fn shape() -> ModelShape {
+    ModelShape {
+        layers: 4,
+        d: 64,
+        f: 128,
+        vocab: 1000,
+        seq: 64,
+        tokens_per_dev: 64,
+        k: 1,
+        n_moe_layers: 2,
+        elem_bytes: 4,
+    }
+}
+
+fn algos_for(p: usize) -> Vec<A2aAlgo> {
+    A2aAlgo::ALL
+        .into_iter()
+        .filter(|a| a.validate_for(p).is_ok())
+        .collect()
+}
+
+const FLOPS: f64 = 45e12;
+
+const MODES: [OverlapMode; 4] = [
+    OverlapMode::Serial,
+    OverlapMode::Fixed(2),
+    OverlapMode::Fixed(8),
+    OverlapMode::Auto,
+];
+
+#[test]
+fn prop_blame_partitions_the_step_clock() {
+    // for every (topology × algo × overlap mode), with and without a
+    // straggler: blame rows are non-negative and sum to the step clock,
+    // so the normalised fractions sum to exactly 1
+    check(
+        10,
+        0x0A7A1,
+        |rng| {
+            let topo = random_tree(rng);
+            let p = topo.p();
+            let counts = Mat::from_fn(p, p, |_, _| rng.range_f64(0.0, 256.0));
+            (topo, counts)
+        },
+        |(topo, counts)| {
+            let sh = shape();
+            let slow: Vec<f64> =
+                (0..topo.p()).map(|i| if i == 1 { 2.0 } else { 1.0 }).collect();
+            for algo in algos_for(topo.p()) {
+                for mode in MODES {
+                    for slowdown in [None, Some(slow.as_slice())] {
+                        let (cost, rows) = step_cost_blamed(
+                            &sh,
+                            topo,
+                            counts,
+                            1,
+                            FLOPS,
+                            algo,
+                            mode,
+                            StepProfile::train(),
+                            None,
+                            None,
+                            slowdown,
+                        );
+                        if rows.is_empty() {
+                            return Err(format!("{algo} {mode}: no blame rows"));
+                        }
+                        if let Some((t, b)) = rows.iter().find(|(_, b)| *b < 0.0) {
+                            return Err(format!("{algo} {mode}: negative blame {t}={b}"));
+                        }
+                        let sum: f64 = rows.iter().map(|(_, b)| b).sum();
+                        if (sum - cost.step_s()).abs() > 1e-9 * cost.step_s() {
+                            return Err(format!(
+                                "{algo} {mode}: blame sum {sum} != step clock {}",
+                                cost.step_s()
+                            ));
+                        }
+                        let blame = blame_fractions(&rows, cost.step_s());
+                        let frac_sum: f64 = blame.iter().map(|r| r.blame_frac).sum();
+                        if (frac_sum - 1.0).abs() > 1e-9 {
+                            return Err(format!(
+                                "{algo} {mode}: blame fractions sum to {frac_sum}"
+                            ));
+                        }
+                        if blame.iter().any(|r| r.blame_frac < 0.0) {
+                            return Err(format!("{algo} {mode}: negative blame fraction"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_blamed_pricing_is_bit_identical_to_profiled() {
+    // attribution must be a pure observer: the StepCost that comes back
+    // with blame attached is, field for field, the one the blame-free
+    // entry point prices — `--analyze` can never change a run's clock
+    check(
+        10,
+        0x0A7A2,
+        |rng| {
+            let topo = random_tree(rng);
+            let p = topo.p();
+            let counts = Mat::from_fn(p, p, |_, _| rng.range_f64(0.0, 256.0));
+            (topo, counts)
+        },
+        |(topo, counts)| {
+            let sh = shape();
+            for algo in algos_for(topo.p()) {
+                for mode in MODES {
+                    let plain = step_cost_profiled(
+                        &sh,
+                        topo,
+                        counts,
+                        1,
+                        FLOPS,
+                        algo,
+                        mode,
+                        StepProfile::train(),
+                        None,
+                        None,
+                    );
+                    let (blamed, _) = step_cost_blamed(
+                        &sh,
+                        topo,
+                        counts,
+                        1,
+                        FLOPS,
+                        algo,
+                        mode,
+                        StepProfile::train(),
+                        None,
+                        None,
+                        None,
+                    );
+                    let same = plain.compute_s == blamed.compute_s
+                        && plain.a2a_s == blamed.a2a_s
+                        && plain.allreduce_s == blamed.allreduce_s
+                        && plain.overlapped_s == blamed.overlapped_s
+                        && plain.exposed_a2a_s == blamed.exposed_a2a_s
+                        && plain.chunks == blamed.chunks;
+                    if !same {
+                        return Err(format!(
+                            "{algo} {mode}: blamed cost {blamed:?} != profiled {plain:?}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// acceptance scenarios on the bottlenecked [2,2] tree
+// ---------------------------------------------------------------------------
+
+/// A [2,2] tree with a deliberately slow uplink (the shared acceptance
+/// fabric): 4 leaf links first, so the uplink is edge 4.
+fn bottleneck22() -> Topology {
+    Topology::tree(
+        &TreeSpec::parse("[2,2]").unwrap(),
+        &[Link::from_gbps_us(45.0, 1.0), Link::from_gbps_us(0.01, 1.0)],
+        presets::local_copy(),
+    )
+}
+
+const UPLINK: usize = 4;
+
+/// A deterministic bottleneck22 run. `fastmoe` keeps the dispatch counts
+/// independent of the fabric, so a chaos twin of the same seed prices the
+/// *same* counts on a scaled topology; `plan_cache_tol 0.0` keeps cached
+/// schedules exact-match-only, identical to the analyzer's cache-cold
+/// re-pricing.
+fn run22(overlap: &str, chaos: Option<&str>, trace: Option<TraceLevel>, steps: usize) -> Session {
+    let cfg = ModelCfg::preset("tiny4").unwrap();
+    let mut b = SessionBuilder::new()
+        .backend(Box::new(SimBackend::new(cfg)))
+        .topology(bottleneck22())
+        .policy_named("fastmoe")
+        .a2a(A2aAlgo::Scheduled(ScheduleKind::Bvn))
+        .overlap_named(overlap)
+        .plan_cache_tol(0.0)
+        .seed(17);
+    if let Some(spec) = chaos {
+        b = b.chaos_named(spec);
+    }
+    if let Some(level) = trace {
+        b = b.trace_level(level);
+    }
+    let mut s = b.build().unwrap();
+    s.run(steps).unwrap();
+    s
+}
+
+#[test]
+fn top_blame_on_the_bottlenecked_tree_is_the_uplink() {
+    let s = run22("serial", None, None, 8);
+    let rep =
+        analyze_workload(s.core(), s.last_counts().unwrap(), s.log(), None, "train").unwrap();
+    let top = &rep.blame[0];
+    let slot: usize = top
+        .track
+        .strip_prefix("link:")
+        .unwrap_or_else(|| panic!("top blame must be a link, got {}", top.track))
+        .parse()
+        .unwrap();
+    assert_eq!(slot / 2, UPLINK, "top blame {} is not the uplink", top.track);
+    // the uplink's two directed slots together gate most of the step on
+    // a fabric whose leaf links are 4500x faster
+    let uplink_frac: f64 = rep
+        .blame
+        .iter()
+        .filter(|r| {
+            r.track
+                .strip_prefix("link:")
+                .and_then(|s| s.parse::<usize>().ok())
+                .is_some_and(|s| s / 2 == UPLINK)
+        })
+        .map(|r| r.blame_frac)
+        .sum();
+    assert!(uplink_frac > 0.5, "uplink blame {uplink_frac} should dominate");
+    let frac_sum: f64 = rep.blame.iter().map(|r| r.blame_frac).sum();
+    assert!((frac_sum - 1.0).abs() < 1e-9, "fractions sum to {frac_sum}");
+    // the auto sweep chases the blame: its link counterfactual targets
+    // the blamed uplink and relieving it projects a real speedup; the
+    // ranking itself is non-increasing (train run: no infinite-cache)
+    assert_eq!(rep.counterfactuals.len(), 4);
+    let link_cf = rep
+        .counterfactuals
+        .iter()
+        .find(|c| c.spec == format!("link:{UPLINK}x2"))
+        .expect("auto sweep must target the blamed uplink");
+    assert!(link_cf.speedup > 1.0, "2x uplink speedup {}", link_cf.speedup);
+    for pair in rep.counterfactuals.windows(2) {
+        assert!(pair[0].speedup >= pair[1].speedup, "ranking must be sorted");
+    }
+}
+
+#[test]
+fn whatif_projection_equals_the_equivalent_chaos_run() {
+    // the engine's core invariant: projecting `link:4x4` (uplink 4×
+    // faster) must equal the clock of a real run under chaos
+    // `link:4x0.25@0` (the reciprocal slowdown, applied from step 0) —
+    // on both the serial and the autotuned overlapped clock
+    for overlap in ["serial", "auto"] {
+        let base = run22(overlap, None, None, 12);
+        let whatifs = [WhatIf::LinkScale { edge: UPLINK, factor: 4.0 }];
+        let rep = analyze_workload(
+            base.core(),
+            base.last_counts().unwrap(),
+            base.log(),
+            Some(&whatifs),
+            "train",
+        )
+        .unwrap();
+        assert_eq!(rep.counterfactuals.len(), 1);
+        let cf = &rep.counterfactuals[0];
+        assert_eq!(cf.spec, format!("link:{UPLINK}x4"));
+
+        // the baseline is the real unperturbed step clock
+        let base_step = base.log().records.last().unwrap().sim_total_s();
+        assert!(
+            (cf.baseline_s - base_step).abs() <= 1e-9 * base_step,
+            "{overlap}: baseline {} != run clock {base_step}",
+            cf.baseline_s
+        );
+
+        let real = run22(overlap, Some("link:4x0.25@0"), None, 12);
+        let real_step = real.log().records.last().unwrap().sim_total_s();
+        assert!(
+            (cf.projected_s - real_step).abs() <= 1e-9 * real_step,
+            "{overlap}: projected {} != chaos-run clock {real_step}",
+            cf.projected_s
+        );
+        assert!(
+            cf.speedup > 1.0,
+            "{overlap}: a 4x-faster uplink must project a speedup, got {}",
+            cf.speedup
+        );
+    }
+}
+
+#[test]
+fn traced_busy_fractions_never_exceed_one() {
+    let s = run22("auto", None, Some(TraceLevel::Chunk), 10);
+    let tr = s.tracer().unwrap();
+    let clock = tr.clock_s();
+    assert!(clock > 0.0);
+    assert!(!tr.timeline_busy().is_empty());
+    for (track, busy) in tr.timeline_busy() {
+        let frac = busy / clock;
+        assert!(frac <= 1.0 + 1e-9, "{track}: busy_frac {frac} above 1");
+        assert!(frac >= 0.0, "{track}: negative busy_frac {frac}");
+    }
+    // and the analyzer folds those fractions in beside the blame rows
+    let rep =
+        analyze_workload(s.core(), s.last_counts().unwrap(), s.log(), None, "train").unwrap();
+    for r in &rep.blame {
+        if let Some(b) = r.busy_frac {
+            assert!(b <= 1.0 + 1e-9, "{}: folded busy_frac {b} above 1", r.track);
+        }
+    }
+}

@@ -199,7 +199,7 @@ fn span_sums_reconcile_with_timeline_busy_and_never_overlap() {
     }
     // devices both compute, so the report sees them; utilization folds
     // the same spans the reconciliation just checked
-    let rep = utilization(tr.events(), tr.clock_s(), 4);
+    let rep = utilization(tr.events(), tr.clock_s(), 4, &[]);
     assert!(rep.rows.iter().any(|r| r.track.starts_with("dev:")));
     assert!(rep.rows.iter().all(|r| r.busy_frac >= 0.0 && r.busy_frac <= 1.0 + 1e-12));
     assert!(rep.straggler_skew >= 1.0);
@@ -294,6 +294,38 @@ fn serve_traces_cache_and_steps_on_the_arrival_clock() {
         off.log().summary_json().to_string_compact(),
         s.log().summary_json().to_string_compact()
     );
+}
+
+#[test]
+fn nodeloss_corpses_do_not_inflate_traced_straggler_skew() {
+    // regression: a device dead from step 10 of 40 contributes ~1/4 of a
+    // living device's busy seconds, deflating the dev mean and inflating
+    // max/mean — the report must read the *living* fleet's skew
+    let cfg = ModelCfg::preset("tiny4").unwrap();
+    let mut s = SessionBuilder::new()
+        .backend(Box::new(SimBackend::new(cfg)))
+        .topology(presets::table1())
+        .policy_named("fastmoe")
+        .seed(17)
+        .chaos_named("nodeloss:3@10")
+        .trace_level(TraceLevel::Chunk)
+        .build()
+        .unwrap();
+    s.run(40).unwrap();
+    assert_eq!(s.log().dead_devices(), vec![3]);
+    let tr = s.tracer().unwrap();
+    let naive = utilization(tr.events(), tr.clock_s(), 4, &[]);
+    let fixed = utilization(tr.events(), tr.clock_s(), 4, &s.log().dead_devices());
+    assert!(
+        naive.straggler_skew > fixed.straggler_skew,
+        "corpse must have inflated the naive skew ({} vs {})",
+        naive.straggler_skew,
+        fixed.straggler_skew
+    );
+    // the dead device still gets its report row — only the skew mean
+    // excludes it — and the living fleet reads near-even
+    assert!(fixed.rows.iter().any(|r| r.track == "dev:3"));
+    assert!(fixed.straggler_skew < 1.2, "living skew {}", fixed.straggler_skew);
 }
 
 /// The session_sim skew scenario, restated: node-0 devices crowd the
